@@ -1,0 +1,63 @@
+//! Capacity planning: use the library's calibrated models to answer the
+//! AIaaS operator's question — which MIG partition + batching policy
+//! sustains a target workload within an SLA, and at what cost?
+//!
+//! Sweeps the three paper partitions × both batching policies for a
+//! given model and SLA, reporting SLA-bounded throughput, energy
+//! efficiency, and TCO — the paper's §6 metrics as a planning tool.
+//!
+//! Run: `cargo run --release --example capacity_planning [-- model sla_ms]`
+
+use preba::config::PrebaConfig;
+use preba::experiments::support;
+use preba::metrics::{PowerModel, TcoModel};
+use preba::mig::MigConfig;
+use preba::models::ModelId;
+use preba::server::{PolicyKind, PreprocMode};
+use preba::util::table::{num, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args
+        .first()
+        .and_then(|s| ModelId::parse(s))
+        .unwrap_or(ModelId::ConformerDefault);
+    let sla_ms: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100.0);
+    let sys = PrebaConfig::new();
+    let pm = PowerModel::new(&sys.power);
+    let tco = TcoModel::new(&sys.tco);
+
+    println!("capacity plan for {} under p95 <= {sla_ms} ms (PREBA DPU preprocessing)", model.display());
+    let mut t = Table::new(&[
+        "partition", "policy", "QPS @SLA", "p95 ms", "QPS/W", "Mqueries/$",
+    ]);
+    let mut best: Option<(f64, String)> = None;
+    for mig in MigConfig::ALL {
+        for policy in [PolicyKind::Static, PolicyKind::Dynamic] {
+            let (qps, p95) = support::max_qps_under_sla(
+                model, mig, PreprocMode::Dpu, policy, sla_ms, 4000, &sys,
+            );
+            // Power at that operating point (approximate utilizations).
+            let gpu_util = 0.85;
+            let power = pm.power(0.2, gpu_util, Some(0.5));
+            let eff = pm.qpj(qps, &power);
+            let cost = tco.evaluate(qps, &power, true).queries_per_usd / 1e6;
+            let label = format!("{} + {:?}", mig.name(), policy);
+            if best.as_ref().map(|(b, _)| qps > *b).unwrap_or(true) {
+                best = Some((qps, label.clone()));
+            }
+            t.row(&[
+                mig.name().to_string(),
+                format!("{policy:?}"),
+                num(qps),
+                num(p95),
+                num(eff),
+                num(cost),
+            ]);
+        }
+    }
+    t.print();
+    let (qps, label) = best.unwrap();
+    println!("\nrecommended: {label} ({qps:.0} QPS within SLA)");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Image serving: the paper's computer-vision scenario on the real stack.
+//!
+//! Serves SqueezeNet with BOTH preprocessing paths — the host-Rust CPU
+//! baseline (OpenCV-equivalent) and the Pallas-kernel DPU path — and
+//! compares their per-stage latency, demonstrating exactly the bottleneck
+//! Fig 8/19 describe (here both run on one CPU core, so the comparison is
+//! per-request preprocessing cost, not aggregate throughput).
+//!
+//! Run: `cargo run --release --example image_serving`
+
+use preba::config::PrebaConfig;
+use preba::models::ModelId;
+use preba::runtime::Engine;
+use preba::server::real_driver::{serve, RealConfig, RealPreproc};
+
+fn main() -> anyhow::Result<()> {
+    let sys = PrebaConfig::new();
+    let mut engine = Engine::new(&sys.artifacts_dir)?;
+
+    for (label, preproc) in [
+        ("CPU baseline (host Rust ops)", RealPreproc::HostRust),
+        ("PREBA DPU (Pallas kernel on PJRT)", RealPreproc::DpuPallas),
+    ] {
+        let mut cfg = RealConfig::new(ModelId::SqueezeNet, preproc);
+        cfg.requests = 60;
+        cfg.rate_qps = 40.0;
+        cfg.seed = 11;
+        let out = serve(&cfg, &sys, &mut engine)?;
+        let (pre, bat, _disp, exec) = out.stats.breakdown_ms();
+        println!("\n== {label} ==");
+        println!(
+            "  {} reqs | {:.1} QPS | p95 {:.2} ms | preproc {:.2} ms | batch {:.2} ms | exec {:.2} ms",
+            out.stats.completed,
+            out.stats.throughput_qps(),
+            out.stats.p95_ms(),
+            pre,
+            bat,
+            exec
+        );
+        anyhow::ensure!(out.output_l2 > 0.0 && out.output_l2.is_finite());
+    }
+    Ok(())
+}

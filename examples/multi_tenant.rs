@@ -1,0 +1,60 @@
+//! Multi-tenant MIG serving: MobileNet + CitriNet colocated on one
+//! 1g.5gb(7x) A100 (3 + 4 vGPUs), demonstrating that the SHARED host CPU
+//! couples tenants through preprocessing — CitriNet's demand starves
+//! MobileNet even though their vGPUs are isolated — and that PREBA's DPU
+//! restores the isolation MIG promised (DES study; the multi-tenant
+//! version of the paper's headline).
+//!
+//! Run: `cargo run --release --example multi_tenant`
+
+use preba::config::PrebaConfig;
+use preba::mig::{MigConfig, ServiceModel};
+use preba::models::ModelId;
+use preba::server::multi::{run, MultiConfig, Tenant};
+use preba::server::{PolicyKind, PreprocMode};
+use preba::util::table::{num, Table};
+
+fn main() -> anyhow::Result<()> {
+    let sys = PrebaConfig::new();
+    let mob_rate = 3.0 * ServiceModel::new(ModelId::MobileNet.spec(), 1).plateau_qps(0.0) * 0.5;
+    let cit_rate = 4.0 * ServiceModel::new(ModelId::CitriNet.spec(), 1).plateau_qps(10.0) * 0.55;
+    println!(
+        "tenants: MobileNet 3 vGPUs @ {:.0} QPS | CitriNet 4 vGPUs @ {:.0} QPS\n",
+        mob_rate, cit_rate
+    );
+
+    let mut t = Table::new(&["preproc", "tenant", "QPS", "p95 ms", "preproc ms", "exec ms"]);
+    for preproc in [PreprocMode::Cpu, PreprocMode::Dpu] {
+        let cfg = MultiConfig {
+            mig: MigConfig::Small7,
+            tenants: vec![
+                Tenant { model: ModelId::MobileNet, vgpus: 3, rate_qps: mob_rate },
+                Tenant { model: ModelId::CitriNet, vgpus: 4, rate_qps: cit_rate },
+            ],
+            preproc,
+            policy: PolicyKind::Dynamic,
+            requests: 12_000,
+            seed: 99,
+            warmup_frac: 0.1,
+        };
+        let out = run(&cfg, &sys)?;
+        for (model, stats) in &out.per_tenant {
+            let (pre, _bat, _disp, exec) = stats.breakdown_ms();
+            t.row(&[
+                preproc.label().to_string(),
+                model.display().to_string(),
+                num(stats.throughput_qps()),
+                num(stats.p95_ms()),
+                num(pre),
+                num(exec),
+            ]);
+        }
+        if preproc == PreprocMode::Cpu {
+            println!("shared CPU pool utilization: {:.0}%", 100.0 * out.cpu_util);
+        }
+    }
+    t.print();
+    println!("\nCPU preprocessing couples the tenants (MobileNet's p95 blows up under CitriNet's demand);");
+    println!("the DPU restores per-tenant isolation.");
+    Ok(())
+}

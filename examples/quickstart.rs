@@ -1,0 +1,36 @@
+//! Quickstart: the smallest end-to-end PREBA run.
+//!
+//! Loads the AOT artifacts (`make artifacts` first), serves 40 MobileNet
+//! requests through the real pipeline — Pallas-kernel preprocessing on
+//! PJRT, dynamic batching, model execution — and prints the latency
+//! breakdown.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use preba::config::PrebaConfig;
+use preba::models::ModelId;
+use preba::runtime::Engine;
+use preba::server::real_driver::{serve, RealConfig, RealPreproc};
+
+fn main() -> anyhow::Result<()> {
+    let sys = PrebaConfig::new();
+    let mut engine = Engine::new(&sys.artifacts_dir)?;
+    println!("PJRT platform: {}", engine.platform());
+
+    let mut cfg = RealConfig::new(ModelId::MobileNet, RealPreproc::DpuPallas);
+    cfg.requests = 40;
+    cfg.rate_qps = 30.0;
+
+    println!("serving {} requests of {}...", cfg.requests, cfg.model.display());
+    let out = serve(&cfg, &sys, &mut engine)?;
+
+    let (pre, bat, disp, exec) = out.stats.breakdown_ms();
+    println!("\ncompleted     : {}", out.stats.completed);
+    println!("throughput    : {:.1} QPS", out.stats.throughput_qps());
+    println!("p95 latency   : {:.2} ms", out.stats.p95_ms());
+    println!("breakdown     : preproc {pre:.2} | batching {bat:.2} | queue {disp:.2} | exec {exec:.2} ms");
+    println!("batches       : {} (mean size {:.2})", out.executed_batches, out.stats.batch_sizes.mean());
+    println!("output L2     : {:.3} (finite, non-zero => full stack is live)", out.output_l2);
+    anyhow::ensure!(out.output_l2.is_finite() && out.output_l2 > 0.0);
+    Ok(())
+}

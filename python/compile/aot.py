@@ -1,0 +1,130 @@
+"""AOT compiler: lower every registry entry to HLO text + manifest.json.
+
+Interchange is HLO *text*, NOT `.serialize()`: the image's xla_extension
+0.5.1 rejects jax>=0.5's 64-bit-id HloModuleProto, while the text parser
+reassigns ids cleanly (see /opt/xla-example/README.md). Lowering uses
+`return_tuple=True`; the Rust side unwraps with `Literal::to_tuple`.
+
+Python runs ONLY here (and in pytest). `make artifacts` is incremental on
+the stamp file; the rust binary is self-contained afterwards.
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--only PREFIX]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flops_estimate(lowered) -> float:
+    """Analytic FLOPs from XLA's cost analysis (0.0 when unavailable)."""
+    try:
+        cost = lowered.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return float(cost.get("flops", 0.0))
+    except Exception:
+        return 0.0
+
+
+def write_weights(consts, path: str) -> list:
+    """Concatenate constant operands (f32 little-endian, C order) into a
+    side file the Rust runtime feeds as leading parameters. Returns the
+    shape list."""
+    import numpy as np
+
+    with open(path, "wb") as f:
+        for c in consts:
+            f.write(np.ascontiguousarray(c, dtype=np.float32).tobytes())
+    return [list(c.shape) for c in consts]
+
+
+def lower_entry(entry: model.Entry, out_dir: str, written_weights: dict) -> dict:
+    t0 = time.time()
+    const_specs = tuple(
+        jax.ShapeDtypeStruct(c.shape, c.dtype) for c in entry.consts
+    )
+    lowered = jax.jit(entry.fn).lower(*const_specs, *entry.example_args)
+    hlo = to_hlo_text(lowered)
+    fname = entry.key.replace("/", "_") + ".hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(hlo)
+    weight_shapes = []
+    if entry.weights_file:
+        if entry.weights_file not in written_weights:
+            written_weights[entry.weights_file] = write_weights(
+                entry.consts, os.path.join(out_dir, entry.weights_file)
+            )
+        weight_shapes = written_weights[entry.weights_file]
+    out_shapes = [
+        list(o.shape)
+        for o in jax.eval_shape(entry.fn, *const_specs, *entry.example_args)
+    ]
+    in_shapes = [list(a.shape) for a in entry.example_args]
+    rec = {
+        "key": entry.key,
+        "file": fname,
+        "name": entry.name,
+        "batch": entry.batch,
+        "len_s": entry.len_s,
+        "inputs": in_shapes,
+        "outputs": out_shapes,
+        "weights_file": entry.weights_file,
+        "weight_shapes": weight_shapes,
+        "flops_lite": flops_estimate(lowered),
+        "params_lite": entry.params_lite,
+    }
+    dt = time.time() - t0
+    print(f"  {entry.key:<44} {len(hlo)//1024:>5} KiB  {dt:5.1f}s", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower only keys with this prefix")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = model.all_entries()
+    if args.only:
+        entries = [e for e in entries if e.key.startswith(args.only)]
+    print(f"lowering {len(entries)} artifacts -> {args.out}", flush=True)
+
+    records = []
+    written_weights: dict = {}
+    for e in entries:
+        records.append(lower_entry(e, args.out, written_weights))
+
+    if args.only:
+        # Partial relower: merge into the existing manifest by key.
+        mpath = os.path.join(args.out, "manifest.json")
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                old = {a["key"]: a for a in json.load(f)["artifacts"]}
+            old.update({r["key"]: r for r in records})
+            records = list(old.values())
+
+    manifest = {"version": 1, "artifacts": records}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(records)} artifacts", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

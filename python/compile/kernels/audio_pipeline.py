@@ -1,0 +1,130 @@
+"""L1 Pallas kernels: the audio-preprocessing CUs (paper Fig 11b) on TPU.
+
+Two kernels mirroring PREBA's split-CU design:
+
+  * `mel_kernel` — the "Resample + Mel spectrogram" CU. Frames stream
+    through in VMEM-sized blocks; the compute core is three MXU matmuls
+    per block (frames @ cosB, frames @ sinB, power @ melT) replacing the
+    FPGA FFT butterfly + filter network. This unit PIPELINES across
+    requests (Fig 12c) because each frame block is independent.
+  * `normalize_kernel` — the "Normalize" CU. Global per-feature mean/var
+    over the time axis forces the whole feature map into one program
+    invocation — the same all-samples dependency that serializes the
+    paper's monolithic CU (Fig 12b) and motivates the split.
+
+`interpret=True`: CPU-PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import common
+from . import ref
+
+#: Frames processed per mel-kernel program (VMEM tile height).
+FRAME_BLOCK = 64
+
+
+def _mel_kernel(frames_ref, cos_ref, sin_ref, melt_ref, hann_ref, out_ref):
+    """One block of frames -> log-mel rows. All matmuls hit the MXU."""
+    frames = frames_ref[...] * hann_ref[...][None, :]
+    re = frames @ cos_ref[...]
+    im = frames @ sin_ref[...]
+    power = re * re + im * im
+    out_ref[...] = jnp.log(power @ melt_ref[...] + 1e-3)
+
+
+def _normalize_kernel(feat_ref, out_ref):
+    """Global mean/var normalize over time (needs the FULL input)."""
+    feat = feat_ref[...]
+    mean = feat.mean(axis=0, keepdims=True)
+    var = ((feat - mean) ** 2).mean(axis=0, keepdims=True)
+    out_ref[...] = (feat - mean) / jnp.sqrt(var + 1e-2)
+
+
+def _pad_frames(n_frames: int) -> int:
+    """Pad the frame count up to a FRAME_BLOCK multiple for the grid."""
+    return ((n_frames + FRAME_BLOCK - 1) // FRAME_BLOCK) * FRAME_BLOCK
+
+
+def consts():
+    """Constant operands in parameter order (see image_pipeline.consts)."""
+    cos_b, sin_b = ref.dft_bases(common.N_FFT)
+    melt = ref.mel_filterbank(common.N_MELS, common.N_FFT, common.SAMPLE_RATE).T
+    return [cos_b, sin_b, melt.copy(), ref.hann(common.N_FFT)]
+
+
+@functools.partial(jax.jit, static_argnames=("len_s",))
+def log_mel_p(cos_b, sin_b, melt, hann_w, pcm, len_s: float):
+    """Parameterized mel CU: constants as arguments (AOT path)."""
+    n_fft, hop, n_mels = common.N_FFT, common.HOP, common.N_MELS
+    n_frames = common.n_frames(len_s)
+    padded = _pad_frames(n_frames)
+    # Framing (gather) happens in the L2 wrapper; the CU kernel gets the
+    # frame matrix (what the FPGA's sample stream becomes after its input
+    # FIFO).
+    frames = ref.frame_signal(pcm, n_fft, hop)
+    frames = jnp.pad(frames, ((0, padded - n_frames), (0, 0)))
+    n_bins = n_fft // 2 + 1
+    out = pl.pallas_call(
+        _mel_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded, n_mels), jnp.float32),
+        grid=(padded // FRAME_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((FRAME_BLOCK, n_fft), lambda i: (i, 0)),
+            pl.BlockSpec((n_fft, n_bins), lambda i: (0, 0)),
+            pl.BlockSpec((n_fft, n_bins), lambda i: (0, 0)),
+            pl.BlockSpec((n_bins, n_mels), lambda i: (0, 0)),
+            pl.BlockSpec((n_fft,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((FRAME_BLOCK, n_mels), lambda i: (i, 0)),
+        interpret=True,
+    )(frames, cos_b, sin_b, melt, hann_w)
+    return out[:n_frames]
+
+
+def log_mel(pcm: jnp.ndarray, len_s: float) -> jnp.ndarray:
+    """(n,) PCM -> (n_frames, n_mels) log-mel (tests convenience)."""
+    cs = [jnp.asarray(c) for c in consts()]
+    return log_mel_p(*cs, pcm, len_s=len_s)
+
+
+@jax.jit
+def normalize(feat: jnp.ndarray) -> jnp.ndarray:
+    """(n_frames, n_mels) -> normalized, via the Normalize CU kernel."""
+    n_frames, n_mels = feat.shape
+    return pl.pallas_call(
+        _normalize_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_frames, n_mels), jnp.float32),
+        interpret=True,
+    )(feat)
+
+
+@functools.partial(jax.jit, static_argnames=("len_s",))
+def audio_pipeline_p(cos_b, sin_b, melt, hann_w, pcm, len_s: float):
+    """Full audio CU chain, parameterized (AOT path)."""
+    return normalize(log_mel_p(cos_b, sin_b, melt, hann_w, pcm, len_s=len_s))
+
+
+def audio_pipeline(pcm: jnp.ndarray, len_s: float) -> jnp.ndarray:
+    """Full audio CU chain for one request: mel CU -> normalize CU."""
+    cs = [jnp.asarray(c) for c in consts()]
+    return audio_pipeline_p(*cs, pcm, len_s=len_s)
+
+
+def vmem_estimate_kib() -> float:
+    """Mel CU per-program VMEM working set (Table 1 / §Perf)."""
+    n_fft, n_mels = common.N_FFT, common.N_MELS
+    n_bins = n_fft // 2 + 1
+    floats = (
+        FRAME_BLOCK * n_fft  # frame block
+        + 2 * n_fft * n_bins  # DFT bases
+        + n_bins * n_mels  # mel matrix
+        + 2 * FRAME_BLOCK * n_bins  # re/im
+        + FRAME_BLOCK * n_mels  # out
+    )
+    return floats * 4 / 1024.0

@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: the image-preprocessing CU (paper Fig 11a) on TPU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA CU
+chains four functional units over a streamed image. On TPU we fuse the
+whole pipeline into ONE Pallas kernel whose compute core is three MXU
+matmul groups:
+
+  * Decode  — dequantize + per-8x8-block 2-D IDCT as `C^T @ X @ C`
+              (batched block matmuls; the MXU replaces the FPGA IDCT
+              systolic pipeline),
+  * Resize  — separable bilinear as two interpolation-matrix matmuls
+              (`R_rows @ img @ R_cols^T`; replaces the FPGA line buffer),
+  * Crop + Normalize — fused VPU epilogue.
+
+Grid: one program per batch element; the whole (96, 96, 3) image tile
+lives in VMEM (~110 KiB in + ~240 KiB working set — comfortably under the
+~16 MiB/core budget; see Table 1's VMEM column).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU lowering is compile-only in this environment.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import common
+from . import ref
+
+
+def _kernel(coeffs_ref, q_ref, c_ref, rrows_ref, rcols_ref, norm_ref, out_ref):
+    """One image: (S, S, 3) DCT coeffs -> (CROP, CROP, 3) normalized."""
+    s = common.IMG_SRC
+    nb = s // 8
+    x = coeffs_ref[0]  # (S, S, 3)
+
+    # ---- Decode: dequant + blocked IDCT (MXU) ----
+    q = q_ref[...]
+    c = c_ref[...]
+    blocks = x.reshape(nb, 8, nb, 8, 3).transpose(0, 2, 4, 1, 3)  # (nb,nb,3,8,8)
+    blocks = blocks * q[None, None, None, :, :]
+    px = jnp.einsum("ki,bxckj,jl->bxcil", c, blocks, c)
+    px = px + 128.0
+    img = px.transpose(0, 3, 1, 4, 2).reshape(s, s, 3)
+
+    # ---- Resize: two interpolation matmuls (MXU) ----
+    rrows = rrows_ref[...]  # (R, S)
+    rcols = rcols_ref[...]  # (R, S)
+    tmp = jnp.einsum("oy,yxc->oxc", rrows, img)
+    rs = jnp.einsum("ox,yxc->yoc", rcols, tmp)
+
+    # ---- Crop + Normalize (VPU epilogue) ----
+    r, crop = common.IMG_RESIZE, common.IMG_CROP
+    off = (r - crop) // 2
+    cr = jax.lax.dynamic_slice(rs, (off, off, 0), (crop, crop, 3))
+    mean = norm_ref[0]
+    std = norm_ref[1]
+    out_ref[0] = (cr / 255.0 - mean) / std
+
+
+def consts():
+    """The kernel's constant operands, in parameter order. AOT passes
+    these as runtime parameters (HLO text elides large literals —
+    DESIGN.md §4) and records them in the artifact's weights file."""
+    s, r = common.IMG_SRC, common.IMG_RESIZE
+    norm = np.stack(
+        [np.asarray(common.IMAGENET_MEAN), np.asarray(common.IMAGENET_STD)]
+    ).astype(np.float32)
+    return [
+        ref.jpeg_quant_table(),
+        ref.idct8_basis(),
+        ref.resize_matrix(s, r),
+        ref.resize_matrix(s, r),
+        norm,
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def image_pipeline_p(q, c, rrows, rcols, norm, coeffs, batch: int = 1):
+    """Parameterized entrypoint: constants as arguments (AOT path)."""
+    s, r, crop = common.IMG_SRC, common.IMG_RESIZE, common.IMG_CROP
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, crop, crop, 3), jnp.float32),
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, s, s, 3), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((8, 8), lambda b: (0, 0)),
+            pl.BlockSpec((8, 8), lambda b: (0, 0)),
+            pl.BlockSpec((r, s), lambda b: (0, 0)),
+            pl.BlockSpec((r, s), lambda b: (0, 0)),
+            pl.BlockSpec((2, 3), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, crop, crop, 3), lambda b: (b, 0, 0, 0)),
+        interpret=True,
+    )(coeffs, q, c, rrows, rcols, norm)
+
+
+def image_pipeline(coeffs: jnp.ndarray, batch: int = 1) -> jnp.ndarray:
+    """Convenience entrypoint (tests): builds the constants internally.
+
+    coeffs: (B, S, S, 3) -> (B, CROP, CROP, 3) normalized f32.
+    """
+    cs = [jnp.asarray(c) for c in consts()]
+    return image_pipeline_p(*cs, coeffs, batch=batch)
+
+
+def vmem_estimate_kib() -> float:
+    """Per-program VMEM working set (Table 1's VMEM column, §Perf)."""
+    s, r, crop = common.IMG_SRC, common.IMG_RESIZE, common.IMG_CROP
+    floats = (
+        s * s * 3  # coeffs in
+        + s * s * 3  # decoded
+        + 2 * 64  # bases
+        + 2 * r * s  # resize matrices
+        + r * s * 3  # row-resized tmp
+        + crop * crop * 3  # out
+    )
+    return floats * 4 / 1024.0

@@ -1,0 +1,199 @@
+"""Pure-jnp correctness oracle for the preprocessing kernels.
+
+Every function here mirrors, operation for operation, both the Pallas
+kernels (which must match under `interpret=True`) and the Rust host
+implementations in `rust/src/preprocess/ops.rs` (validated via golden
+vectors exported by `tests/test_golden.py`).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import common
+
+# ---------------------------------------------------------------------------
+# image
+# ---------------------------------------------------------------------------
+
+_JPEG_BASE_Q = np.array(
+    [
+        16, 11, 10, 16, 24, 40, 51, 61,
+        12, 12, 14, 19, 26, 58, 60, 55,
+        14, 13, 16, 24, 40, 57, 69, 56,
+        14, 17, 22, 29, 51, 87, 80, 62,
+        18, 22, 37, 56, 68, 109, 103, 77,
+        24, 35, 55, 64, 81, 104, 113, 92,
+        49, 64, 78, 87, 103, 121, 120, 101,
+        72, 92, 95, 98, 112, 100, 103, 99,
+    ],
+    dtype=np.float32,
+).reshape(8, 8)
+
+
+def jpeg_quant_table() -> np.ndarray:
+    """Annex-K luma table at quality 75 (scale 50%), floored, min 1."""
+    return np.maximum(np.floor(_JPEG_BASE_Q * 50.0 / 100.0), 1.0).astype(np.float32)
+
+
+def idct8_basis() -> np.ndarray:
+    """8x8 IDCT basis C with pixels = C^T @ X @ C."""
+    c = np.zeros((8, 8), dtype=np.float32)
+    for k in range(8):
+        a = np.sqrt(1.0 / 8.0) if k == 0 else np.sqrt(2.0 / 8.0)
+        for n in range(8):
+            c[k, n] = a * np.cos((np.pi / 8.0) * (n + 0.5) * k)
+    return c
+
+
+def decode_blocks(coeffs: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize + per-8x8-block 2-D IDCT + 128 shift.
+
+    coeffs: (H, W, C) with H, W multiples of 8. Returns (H, W, C) pixels.
+    """
+    h, w, ch = coeffs.shape
+    assert h % 8 == 0 and w % 8 == 0
+    q = jnp.asarray(jpeg_quant_table())
+    c = jnp.asarray(idct8_basis())
+    # (by, i, bx, j, ch) -> blocks (by, bx, ch, i, j)
+    x = coeffs.reshape(h // 8, 8, w // 8, 8, ch).transpose(0, 2, 4, 1, 3)
+    x = x * q[None, None, None, :, :]
+    # pixels = C^T X C, batched over (by, bx, ch).
+    px = jnp.einsum("ki,bxckj,jl->bxcil", c, x, c)
+    px = px + 128.0
+    # back to (H, W, C)
+    return px.transpose(0, 3, 1, 4, 2).reshape(h, w, ch)
+
+
+def resize_matrix(src: int, dst: int) -> np.ndarray:
+    """Bilinear interpolation matrix (dst, src), half-pixel centers."""
+    m = np.zeros((dst, src), dtype=np.float32)
+    scale = src / dst
+    for d in range(dst):
+        pos = (d + 0.5) * scale - 0.5
+        lo = np.floor(pos)
+        frac = np.float32(pos - lo)
+        i0 = int(np.clip(lo, 0, src - 1))
+        i1 = int(np.clip(lo + 1, 0, src - 1))
+        m[d, i0] += 1.0 - frac
+        m[d, i1] += frac
+    return m
+
+
+def resize_bilinear(img: jnp.ndarray, oh: int, ow: int) -> jnp.ndarray:
+    """Separable bilinear resize of (H, W, C) via two matmuls."""
+    h, w, _ = img.shape
+    rm = jnp.asarray(resize_matrix(h, oh))
+    cm = jnp.asarray(resize_matrix(w, ow))
+    tmp = jnp.einsum("oy,yxc->oxc", rm, img)
+    return jnp.einsum("ox,yxc->yoc", cm, tmp)
+
+
+def center_crop(img: jnp.ndarray, oh: int, ow: int) -> jnp.ndarray:
+    h, w, _ = img.shape
+    y0 = (h - oh) // 2
+    x0 = (w - ow) // 2
+    return img[y0 : y0 + oh, x0 : x0 + ow, :]
+
+
+def normalize_image(img: jnp.ndarray) -> jnp.ndarray:
+    mean = jnp.asarray(common.IMAGENET_MEAN, dtype=jnp.float32)
+    std = jnp.asarray(common.IMAGENET_STD, dtype=jnp.float32)
+    return (img / 255.0 - mean) / std
+
+
+def image_pipeline(coeffs: jnp.ndarray) -> jnp.ndarray:
+    """decode -> resize -> crop -> normalize for one (H, W, C) image."""
+    px = decode_blocks(coeffs)
+    rs = resize_bilinear(px, common.IMG_RESIZE, common.IMG_RESIZE)
+    cr = center_crop(rs, common.IMG_CROP, common.IMG_CROP)
+    return normalize_image(cr)
+
+
+# ---------------------------------------------------------------------------
+# audio
+# ---------------------------------------------------------------------------
+
+
+def hann(n: int) -> np.ndarray:
+    """Symmetric Hann window (matches the Rust implementation)."""
+    if n == 1:
+        return np.ones(1, dtype=np.float32)
+    i = np.arange(n, dtype=np.float32)
+    return (0.5 - 0.5 * np.cos(2.0 * np.pi * i / (n - 1))).astype(np.float32)
+
+
+def dft_bases(n_fft: int):
+    """(cos, -sin) DFT bases of shape (n_fft, n_bins) for matmul DFT."""
+    n_bins = n_fft // 2 + 1
+    k = np.arange(n_bins)
+    n = np.arange(n_fft)
+    ang = 2.0 * np.pi * np.outer(n, k) / n_fft
+    return np.cos(ang).astype(np.float32), (-np.sin(ang)).astype(np.float32)
+
+
+def frame_signal(pcm: jnp.ndarray, n_fft: int, hop: int) -> jnp.ndarray:
+    """(n,) -> (n_frames, n_fft) frames."""
+    n = pcm.shape[0]
+    n_frames = 1 + (n - n_fft) // hop
+    # jnp.arange lowers to HLO iota; a numpy (n_frames, n_fft) index
+    # literal would be elided by the HLO-text printer and read back as
+    # zeros on the Rust side.
+    idx = jnp.arange(n_frames)[:, None] * hop + jnp.arange(n_fft)[None, :]
+    return pcm[idx]
+
+
+def power_spectrogram(pcm: jnp.ndarray, n_fft: int, hop: int) -> jnp.ndarray:
+    """Hann-windowed matmul-DFT power spectrogram: (n_frames, n_bins)."""
+    frames = frame_signal(pcm, n_fft, hop) * jnp.asarray(hann(n_fft))[None, :]
+    cos_b, sin_b = dft_bases(n_fft)
+    re = frames @ jnp.asarray(cos_b)
+    im = frames @ jnp.asarray(sin_b)
+    return re * re + im * im
+
+
+def hz_to_mel(hz):
+    return 2595.0 * np.log10(1.0 + np.asarray(hz) / 700.0)
+
+
+def mel_to_hz(mel):
+    return 700.0 * (10.0 ** (np.asarray(mel) / 2595.0) - 1.0)
+
+
+def mel_filterbank(n_mels: int, n_fft: int, sample_rate: float) -> np.ndarray:
+    """Triangular mel filterbank (n_mels, n_bins), HTK scale."""
+    n_bins = n_fft // 2 + 1
+    m_min, m_max = hz_to_mel(0.0), hz_to_mel(sample_rate / 2.0)
+    edges = mel_to_hz(np.linspace(m_min, m_max, n_mels + 2))
+    bin_hz = np.arange(n_bins) * sample_rate / n_fft
+    fb = np.zeros((n_mels, n_bins), dtype=np.float32)
+    for m in range(n_mels):
+        lo, ctr, hi = edges[m], edges[m + 1], edges[m + 2]
+        up = (bin_hz - lo) / (ctr - lo)
+        down = (hi - bin_hz) / (hi - ctr)
+        fb[m] = np.maximum(0.0, np.minimum(up, down)) * ((bin_hz > lo) & (bin_hz < hi))
+    return fb
+
+
+def log_mel(pcm: jnp.ndarray) -> jnp.ndarray:
+    """(n,) PCM -> (n_frames, n_mels) log-mel features."""
+    spec = power_spectrogram(pcm, common.N_FFT, common.HOP)
+    fb = jnp.asarray(mel_filterbank(common.N_MELS, common.N_FFT, common.SAMPLE_RATE))
+    # 1e-3 floor keeps near-silent mel channels numerically stable across
+    # the three implementations (Pallas / jnp / Rust) — see DESIGN.md §7.
+    return jnp.log(spec @ fb.T + 1e-3)
+
+
+def normalize_features(feat: jnp.ndarray) -> jnp.ndarray:
+    """Global per-feature mean/var normalization over the time axis — the
+    full-input-dependency stage (paper Fig 12)."""
+    mean = feat.mean(axis=0, keepdims=True)
+    var = feat.var(axis=0, keepdims=True)
+    # Variance floor (1e-2): degenerate channels are damped, not amplified.
+    return (feat - mean) / jnp.sqrt(var + 1e-2)
+
+
+def audio_pipeline(pcm: jnp.ndarray) -> jnp.ndarray:
+    """(n,) 16 kHz PCM -> normalized (n_frames, n_mels). (The resample
+    stage is the identity at the native rate; variable-rate resampling is
+    exercised by the Rust implementation + cost model.)"""
+    return normalize_features(log_mel(pcm))

@@ -1,0 +1,160 @@
+"""L2 registry: every AOT entry (models × batch × length-bucket, plus the
+L1 preprocessing kernels) as a (key, fn, const-operands, example-args)
+record for aot.py.
+
+Large constants (model weights, DFT bases, resize matrices) are passed as
+leading HLO *parameters* rather than closed-over literals: `as_hlo_text`
+elides big literals (`constant({...})`) which the Rust-side text parser
+would read back as zeros. aot.py stores the constant operands once per
+model in a binary weights file that the Rust runtime feeds at execute
+time (DESIGN.md §4).
+
+Model parameters use fixed seeds, so `make artifacts` is reproducible.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common
+from .kernels import audio_pipeline as k_audio
+from .kernels import image_pipeline as k_image
+from .models import citrinet, conformer, mobilenet, squeezenet, swin
+from .models.layers import count_params
+
+
+class Entry:
+    """One artifact to lower.
+
+    fn(*consts, *example_args) -> tuple of outputs; `consts` become the
+    leading HLO parameters recorded in the shared weights file
+    `weights_file` (None when the entry has no constant operands).
+    """
+
+    def __init__(self, key, name, batch, len_s, fn, consts, example_args,
+                 weights_file=None, params_lite=0):
+        self.key = key
+        self.name = name
+        self.batch = batch
+        self.len_s = len_s
+        self.fn = fn
+        self.consts = consts  # list of np.ndarray (leading parameters)
+        self.example_args = example_args
+        self.weights_file = weights_file
+        self.params_lite = params_lite
+
+
+def _leaves(params):
+    return [np.asarray(l, dtype=np.float32) for l in jax.tree_util.tree_leaves(params)]
+
+
+def _make_model_fn(apply, treedef, n_leaves):
+    def fn(*args):
+        leaves, x = args[:n_leaves], args[n_leaves]
+        params = jax.tree_util.tree_unflatten(treedef, leaves)
+        return (apply(params, x),)
+
+    return fn
+
+
+def _vision_entries():
+    models = [
+        ("mobilenet", mobilenet.init(), mobilenet.apply),
+        ("squeezenet", squeezenet.init(), squeezenet.apply),
+        ("swin", swin.init(), swin.apply),
+    ]
+    out = []
+    crop = common.IMG_CROP
+    for name, params, apply in models:
+        n_params = count_params(params)
+        leaves = _leaves(params)
+        treedef = jax.tree_util.tree_structure(params)
+        fn = _make_model_fn(apply, treedef, len(leaves))
+        wfile = f"weights_{name}.bin"
+        for b in common.VISION_BATCHES:
+            spec = jax.ShapeDtypeStruct((b, crop, crop, 3), jnp.float32)
+            out.append(
+                Entry(f"model/{name}/b{b}", name, b, 0.0, fn, leaves, (spec,), wfile, n_params)
+            )
+    return out
+
+
+def _audio_entries():
+    models = [
+        ("conformer_small", conformer.init("small"),
+         functools.partial(_apply_conformer, "small")),
+        ("conformer_default", conformer.init("default"),
+         functools.partial(_apply_conformer, "default")),
+        ("citrinet", citrinet.init(), citrinet.apply),
+    ]
+    out = []
+    for name, params, apply in models:
+        n_params = count_params(params)
+        leaves = _leaves(params)
+        treedef = jax.tree_util.tree_structure(params)
+        fn = _make_model_fn(apply, treedef, len(leaves))
+        wfile = f"weights_{name}.bin"
+        for len_s in common.AUDIO_BUCKETS_S:
+            t = common.n_frames(len_s)
+            for b in common.AUDIO_BATCHES:
+                spec = jax.ShapeDtypeStruct((b, t, common.N_MELS), jnp.float32)
+                key = f"model/{name}/b{b}/len{common.fmt_len(len_s)}"
+                out.append(Entry(key, name, b, len_s, fn, leaves, (spec,), wfile, n_params))
+    return out
+
+
+def _apply_conformer(size, params, x):
+    return conformer.apply(params, x, size)
+
+
+def _image_kernel_fn(q, c, rrows, rcols, norm, x):
+    return (k_image.image_pipeline_p(q, c, rrows, rcols, norm, x, batch=x.shape[0]),)
+
+
+def _make_audio_kernel_fn(len_s):
+    def fn(cos_b, sin_b, melt, hann_w, pcm):
+        return (k_audio.audio_pipeline_p(cos_b, sin_b, melt, hann_w, pcm, len_s=len_s),)
+
+    return fn
+
+
+def _kernel_entries():
+    out = []
+    s = common.IMG_SRC
+    spec = jax.ShapeDtypeStruct((1, s, s, 3), jnp.float32)
+    out.append(
+        Entry(
+            "kernel/image_pipeline/b1",
+            "image_pipeline",
+            1,
+            0.0,
+            _image_kernel_fn,
+            [np.asarray(c, dtype=np.float32) for c in k_image.consts()],
+            (spec,),
+            "weights_kernel_image.bin",
+        )
+    )
+    audio_consts = [np.asarray(c, dtype=np.float32) for c in k_audio.consts()]
+    for len_s in common.AUDIO_BUCKETS_S:
+        n = int(round(len_s * common.SAMPLE_RATE))
+        spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+        out.append(
+            Entry(
+                f"kernel/audio_pipeline/len{common.fmt_len(len_s)}",
+                "audio_pipeline",
+                1,
+                len_s,
+                _make_audio_kernel_fn(len_s),
+                audio_consts,
+                (spec,),
+                "weights_kernel_audio.bin",
+            )
+        )
+    return out
+
+
+def all_entries():
+    """Every artifact to lower, kernels first (cheapest feedback)."""
+    return _kernel_entries() + _vision_entries() + _audio_entries()

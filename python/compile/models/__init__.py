@@ -1,0 +1,11 @@
+"""L2: lite JAX re-implementations of the six paper workloads.
+
+Shape-faithful, width/depth-reduced variants of the models the paper
+serves (paper §5: MobileNetV3-Small / SqueezeNet 1.1 / Swin-T from
+TorchHub; Conformer small+default / CitriNet from NVIDIA NeMo), sized so a
+1-core CPU PJRT client executes them in milliseconds. The MIG service
+model uses the full-scale FLOP numbers (rust/src/models/calib.rs); these
+lite graphs are what the real driver actually runs (DESIGN.md §4).
+"""
+
+from . import citrinet, conformer, mobilenet, squeezenet, swin  # noqa: F401

@@ -1,0 +1,49 @@
+"""CitriNet ASR encoder (lite), per Majumdar et al. 2021: 1-D depthwise-
+separable conv blocks with squeeze-and-excitation, CTC head."""
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import Init
+
+VOCAB = 128
+DIM = 128
+KERNELS = [11, 13, 15]  # one block per kernel size
+
+
+def init(seed: int = 5):
+    ini = Init(seed)
+    params = {
+        "stem_w": ini.conv1d(5, 80, DIM),
+        "stem_s": ini.scale(DIM),
+        "stem_b": ini.bias(DIM),
+        "blocks": [],
+        "head_w": ini.conv1d(1, DIM, VOCAB),
+        "head_b": ini.bias(VOCAB),
+    }
+    for k in KERNELS:
+        params["blocks"].append(
+            {
+                "dw_w": ini.conv1d(k, 1, DIM),
+                "pw_w": ini.conv1d(1, DIM, DIM),
+                "s": ini.scale(DIM),
+                "b": ini.bias(DIM),
+                "se": layers.se_params(ini, DIM, r=8),
+            }
+        )
+    return params
+
+
+def apply(params, x):
+    """x: (B, T, 80) log-mel -> (B, T//2, VOCAB) log-probs."""
+    x = layers.conv1d(x, params["stem_w"], stride=2)
+    x = layers.norm_act(x, params["stem_s"], params["stem_b"], "relu")
+    for blk in params["blocks"]:
+        y = layers.conv1d(x, blk["dw_w"], groups=DIM)
+        y = layers.conv1d(y, blk["pw_w"])
+        y = layers.norm_act(y, blk["s"], blk["b"], "relu")
+        y = layers.se_block(y, blk["se"])
+        x = x + y
+    x = layers.conv1d(x, params["head_w"]) + params["head_b"]
+    return jax.nn.log_softmax(x, axis=-1)

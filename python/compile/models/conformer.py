@@ -1,0 +1,95 @@
+"""Conformer ASR encoder (lite), per Gulati et al. 2020: conv subsampling
+then blocks of [half-FFN, MHSA, conv module, half-FFN, LN]. Two sizes
+mirror the paper's Conformer(small)/(default) (NeMo CTC variants)."""
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import Init
+
+VOCAB = 128
+
+SIZES = {
+    # name: (dim, heads, depth, conv kernel)
+    "small": (96, 4, 2, 15),
+    "default": (176, 4, 4, 15),
+}
+
+
+def init(size: str, seed: int = 4):
+    dim, heads, depth, k = SIZES[size]
+    ini = Init(seed + hash(size) % 97)
+    params = {
+        # conv subsampling: two stride-2 1-D convs over time.
+        "sub1_w": ini.conv1d(3, 80, dim),
+        "sub1_b": ini.bias(dim),
+        "sub2_w": ini.conv1d(3, dim, dim),
+        "sub2_b": ini.bias(dim),
+        "blocks": [],
+        "out_w": ini.dense(dim, VOCAB),
+        "out_b": ini.bias(VOCAB),
+    }
+    for _ in range(depth):
+        params["blocks"].append(
+            {
+                "ff1_ln_g": ini.scale(dim),
+                "ff1_ln_b": ini.bias(dim),
+                "ff1_w1": ini.dense(dim, 4 * dim),
+                "ff1_b1": ini.bias(4 * dim),
+                "ff1_w2": ini.dense(4 * dim, dim),
+                "ff1_b2": ini.bias(dim),
+                "att_ln_g": ini.scale(dim),
+                "att_ln_b": ini.bias(dim),
+                "attn": layers.mhsa_params(ini, dim),
+                "conv_ln_g": ini.scale(dim),
+                "conv_ln_b": ini.bias(dim),
+                "conv_pw1": ini.conv1d(1, dim, 2 * dim),
+                "conv_dw": ini.conv1d(k, 1, dim),  # depthwise
+                "conv_s": ini.scale(dim),
+                "conv_sh": ini.bias(dim),
+                "conv_pw2": ini.conv1d(1, dim, dim),
+                "ff2_ln_g": ini.scale(dim),
+                "ff2_ln_b": ini.bias(dim),
+                "ff2_w1": ini.dense(dim, 4 * dim),
+                "ff2_b1": ini.bias(4 * dim),
+                "ff2_w2": ini.dense(4 * dim, dim),
+                "ff2_b2": ini.bias(dim),
+                "ln_g": ini.scale(dim),
+                "ln_b": ini.bias(dim),
+            }
+        )
+    return params
+
+
+def apply(params, x, size: str):
+    """x: (B, T, 80) log-mel -> (B, T//4, VOCAB) log-probs."""
+    dim, heads, _depth, _k = SIZES[size]
+    # Subsample 4x.
+    x = jax.nn.relu(layers.conv1d(x, params["sub1_w"], stride=2) + params["sub1_b"])
+    x = jax.nn.relu(layers.conv1d(x, params["sub2_w"], stride=2) + params["sub2_b"])
+
+    for blk in params["blocks"]:
+        # half-step FFN
+        y = layers.layer_norm(x, blk["ff1_ln_g"], blk["ff1_ln_b"])
+        y = jax.nn.silu(y @ blk["ff1_w1"] + blk["ff1_b1"]) @ blk["ff1_w2"] + blk["ff1_b2"]
+        x = x + 0.5 * y
+        # MHSA
+        y = layers.layer_norm(x, blk["att_ln_g"], blk["att_ln_b"])
+        x = x + layers.mhsa(y, blk["attn"], heads)
+        # conv module: pointwise GLU -> depthwise -> norm+swish -> pointwise
+        y = layers.layer_norm(x, blk["conv_ln_g"], blk["conv_ln_b"])
+        y = layers.conv1d(y, blk["conv_pw1"])
+        a, b = jnp.split(y, 2, axis=-1)
+        y = a * jax.nn.sigmoid(b)
+        y = layers.conv1d(y, blk["conv_dw"], groups=dim)
+        y = jax.nn.silu(y * blk["conv_s"] + blk["conv_sh"])
+        y = layers.conv1d(y, blk["conv_pw2"])
+        x = x + y
+        # half-step FFN
+        y = layers.layer_norm(x, blk["ff2_ln_g"], blk["ff2_ln_b"])
+        y = jax.nn.silu(y @ blk["ff2_w1"] + blk["ff2_b1"]) @ blk["ff2_w2"] + blk["ff2_b2"]
+        x = x + 0.5 * y
+        x = layers.layer_norm(x, blk["ln_g"], blk["ln_b"])
+
+    return jax.nn.log_softmax(x @ params["out_w"] + params["out_b"], axis=-1)

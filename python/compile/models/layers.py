@@ -1,0 +1,136 @@
+"""Shared neural-net building blocks (pure functions over param pytrees).
+
+Conventions: NHWC for 2-D convs, (B, T, C) for 1-D; params are nested
+dicts of jnp arrays; all models are inference-mode (folded norms: scale +
+shift instead of running statistics).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Init:
+    """Deterministic parameter initializer (He-normal-ish) with a counter
+    so every call site gets a distinct seed."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+
+    def conv(self, kh, kw, cin, cout):
+        fan_in = kh * kw * cin
+        w = self.rng.normal(0.0, np.sqrt(2.0 / fan_in), (kh, kw, cin, cout))
+        return jnp.asarray(w, dtype=jnp.float32)
+
+    def conv1d(self, k, cin, cout):
+        fan_in = k * cin
+        w = self.rng.normal(0.0, np.sqrt(2.0 / fan_in), (k, cin, cout))
+        return jnp.asarray(w, dtype=jnp.float32)
+
+    def dense(self, cin, cout):
+        w = self.rng.normal(0.0, np.sqrt(2.0 / cin), (cin, cout))
+        return jnp.asarray(w, dtype=jnp.float32)
+
+    def bias(self, c):
+        return jnp.zeros((c,), dtype=jnp.float32)
+
+    def scale(self, c):
+        return jnp.ones((c,), dtype=jnp.float32)
+
+
+def conv2d(x, w, stride=1, groups=1, padding="SAME"):
+    """NHWC conv with HWIO weights."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def conv1d(x, w, stride=1, groups=1, padding="SAME"):
+    """(B, T, C) conv with (K, I, O) weights."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride,),
+        padding=padding,
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=groups,
+    )
+
+
+def norm_act(x, scale, shift, act="relu"):
+    """Folded-BN (scale/shift) + activation."""
+    y = x * scale + shift
+    if act == "relu":
+        return jax.nn.relu(y)
+    if act == "hswish":
+        return y * jax.nn.relu6(y + 3.0) / 6.0
+    if act == "swish":
+        return y * jax.nn.sigmoid(y)
+    if act == "none":
+        return y
+    raise ValueError(act)
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def mhsa(x, params, n_heads):
+    """Multi-head self-attention over (B, T, C)."""
+    b, t, c = x.shape
+    hd = c // n_heads
+    q = (x @ params["wq"]).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (x @ params["wk"]).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (x @ params["wv"]).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / np.sqrt(hd), axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, c)
+    return y @ params["wo"]
+
+
+def mhsa_params(init: Init, c: int):
+    return {
+        "wq": init.dense(c, c),
+        "wk": init.dense(c, c),
+        "wv": init.dense(c, c),
+        "wo": init.dense(c, c),
+    }
+
+
+def global_avg_pool(x):
+    """NHWC -> (B, C)."""
+    return x.mean(axis=(1, 2))
+
+
+def se_block(x, params):
+    """Squeeze-and-excitation over NHWC (or (B,T,C) if 1-D pooled)."""
+    if x.ndim == 4:
+        s = x.mean(axis=(1, 2))
+    else:
+        s = x.mean(axis=1)
+    s = jax.nn.relu(s @ params["w1"] + params["b1"])
+    s = jax.nn.sigmoid(s @ params["w2"] + params["b2"])
+    if x.ndim == 4:
+        return x * s[:, None, None, :]
+    return x * s[:, None, :]
+
+
+def se_params(init: Init, c: int, r: int = 4):
+    cr = max(1, c // r)
+    return {
+        "w1": init.dense(c, cr),
+        "b1": init.bias(cr),
+        "w2": init.dense(cr, c),
+        "b2": init.bias(c),
+    }
+
+
+def count_params(tree) -> int:
+    """Total scalar count of a param pytree."""
+    return int(sum(np.prod(p.shape) for p in jax.tree_util.tree_leaves(tree)))

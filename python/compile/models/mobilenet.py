@@ -1,0 +1,79 @@
+"""MobileNetV3-Small (lite): inverted-residual depthwise blocks with SE
+and hard-swish, per Howard et al. 2019, at reduced width/depth for the
+64x64 lite input."""
+
+import jax.numpy as jnp
+
+from . import layers
+from .layers import Init
+
+# (expand, out, kernel, stride, use_se, act)
+_BLOCKS = [
+    (1, 16, 3, 2, True, "relu"),
+    (4, 24, 3, 2, False, "relu"),
+    (3, 24, 3, 1, False, "relu"),
+    (4, 40, 5, 2, True, "hswish"),
+    (6, 40, 5, 1, True, "hswish"),
+    (6, 48, 5, 1, True, "hswish"),
+]
+
+N_CLASSES = 1000
+
+
+def init(seed: int = 1):
+    ini = Init(seed)
+    params = {
+        "stem_w": ini.conv(3, 3, 3, 16),
+        "stem_s": ini.scale(16),
+        "stem_b": ini.bias(16),
+        "blocks": [],
+        "head_w": ini.conv(1, 1, 48, 288),
+        "head_s": ini.scale(288),
+        "head_b": ini.bias(288),
+        "fc_w": ini.dense(288, N_CLASSES),
+        "fc_b": ini.bias(N_CLASSES),
+    }
+    cin = 16
+    for expand, cout, k, _stride, use_se, _act in _BLOCKS:
+        ce = cin * expand
+        blk = {
+            "pw1_w": ini.conv(1, 1, cin, ce),
+            "pw1_s": ini.scale(ce),
+            "pw1_b": ini.bias(ce),
+            "dw_w": ini.conv(k, k, 1, ce),  # depthwise: HWIO with I=1
+            "dw_s": ini.scale(ce),
+            "dw_b": ini.bias(ce),
+            "pw2_w": ini.conv(1, 1, ce, cout),
+            "pw2_s": ini.scale(cout),
+            "pw2_b": ini.bias(cout),
+        }
+        if use_se:
+            blk["se"] = layers.se_params(ini, ce)
+        params["blocks"].append(blk)
+        cin = cout
+    return params
+
+
+def apply(params, x):
+    """x: (B, 64, 64, 3) -> logits (B, 1000)."""
+    x = layers.conv2d(x, params["stem_w"], stride=2)
+    x = layers.norm_act(x, params["stem_s"], params["stem_b"], "hswish")
+    cin = 16
+    for blk, (expand, cout, _k, stride, use_se, act) in zip(params["blocks"], _BLOCKS):
+        ce = cin * expand
+        y = layers.conv2d(x, blk["pw1_w"])
+        y = layers.norm_act(y, blk["pw1_s"], blk["pw1_b"], act)
+        y = layers.conv2d(y, blk["dw_w"], stride=stride, groups=ce)
+        y = layers.norm_act(y, blk["dw_s"], blk["dw_b"], act)
+        if use_se:
+            y = layers.se_block(y, blk["se"])
+        y = layers.conv2d(y, blk["pw2_w"])
+        y = y * blk["pw2_s"] + blk["pw2_b"]
+        if stride == 1 and cin == cout:
+            y = y + x
+        x = y
+        cin = cout
+    x = layers.conv2d(x, params["head_w"])
+    x = layers.norm_act(x, params["head_s"], params["head_b"], "hswish")
+    x = layers.global_avg_pool(x)
+    return x @ params["fc_w"] + params["fc_b"]

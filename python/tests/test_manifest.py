@@ -1,0 +1,86 @@
+"""Manifest integrity: the build-time contract the Rust runtime consumes.
+
+Skips when `make artifacts` has not run yet.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import common
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_entries():
+    m = _manifest()
+    keys = {a["key"] for a in m["artifacts"]}
+    # 1 image kernel + 4 audio kernels + 3*5 vision + 3*4*4 audio = 68.
+    assert len(keys) == 68, len(keys)
+    assert "kernel/image_pipeline/b1" in keys
+    for len_s in common.AUDIO_BUCKETS_S:
+        assert f"kernel/audio_pipeline/len{common.fmt_len(len_s)}" in keys
+    for b in common.VISION_BATCHES:
+        assert f"model/mobilenet/b{b}" in keys
+    for b in common.AUDIO_BATCHES:
+        for len_s in common.AUDIO_BUCKETS_S:
+            assert f"model/citrinet/b{b}/len{common.fmt_len(len_s)}" in keys
+
+
+def test_artifact_files_exist_and_nonempty():
+    m = _manifest()
+    for a in m["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["key"]
+        assert os.path.getsize(path) > 500, a["key"]
+        # HLO text, parsed by the Rust side, must not elide constants.
+        with open(path) as f:
+            text = f.read()
+        assert "constant({...})" not in text, f"{a['key']} has elided literals"
+
+
+def test_weight_files_match_declared_shapes():
+    m = _manifest()
+    seen = {}
+    for a in m["artifacts"]:
+        wf = a.get("weights_file")
+        if not wf:
+            continue
+        total = sum(int(np.prod(s)) for s in a["weight_shapes"])
+        path = os.path.join(ART, wf)
+        assert os.path.exists(path), wf
+        assert os.path.getsize(path) == total * 4, wf
+        # All entries sharing a weights file declare identical shapes.
+        if wf in seen:
+            assert seen[wf] == a["weight_shapes"], wf
+        seen[wf] = a["weight_shapes"]
+
+
+def test_input_shapes_consistent_with_grid():
+    m = _manifest()
+    for a in m["artifacts"]:
+        if a["key"].startswith("model/") and a["name"] in ("mobilenet", "squeezenet", "swin"):
+            assert a["inputs"] == [[a["batch"], common.IMG_CROP, common.IMG_CROP, 3]], a["key"]
+            assert a["outputs"] == [[a["batch"], 1000]], a["key"]
+        if a["key"].startswith("model/") and a["name"] == "citrinet":
+            t = common.n_frames(a["len_s"])
+            assert a["inputs"] == [[a["batch"], t, common.N_MELS]], a["key"]
+
+
+def test_flops_scale_with_batch():
+    m = _manifest()
+    by_key = {a["key"]: a for a in m["artifacts"]}
+    f1 = by_key["model/squeezenet/b1"]["flops_lite"]
+    f4 = by_key["model/squeezenet/b4"]["flops_lite"]
+    if f1 > 0 and f4 > 0:
+        assert 3.0 < f4 / f1 < 5.0, (f1, f4)

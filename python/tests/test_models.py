@@ -1,0 +1,109 @@
+"""L2 model sanity: shapes, finiteness, determinism, batch consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common
+from compile.models import citrinet, conformer, mobilenet, squeezenet, swin
+from compile.models.layers import count_params
+
+
+def _img(b, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 1, (b, common.IMG_CROP, common.IMG_CROP, 3)).astype(np.float32))
+
+
+def _mel(b, t, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 1, (b, t, common.N_MELS)).astype(np.float32))
+
+
+VISION = [
+    ("mobilenet", mobilenet.init, mobilenet.apply),
+    ("squeezenet", squeezenet.init, squeezenet.apply),
+    ("swin", swin.init, swin.apply),
+]
+
+
+@pytest.mark.parametrize("name,init,apply", VISION)
+def test_vision_shapes_and_finiteness(name, init, apply):
+    params = init()
+    for b in [1, 3]:
+        y = np.asarray(apply(params, _img(b)))
+        assert y.shape == (b, 1000), name
+        assert np.isfinite(y).all(), name
+        assert np.abs(y).max() > 1e-6, f"{name}: dead outputs"
+
+
+@pytest.mark.parametrize("name,init,apply", VISION)
+def test_vision_batch_consistency(name, init, apply):
+    """Row 0 of a batch-3 run equals a batch-1 run on the same sample."""
+    params = init()
+    x = _img(3, seed=1)
+    y3 = np.asarray(apply(params, x))
+    y1 = np.asarray(apply(params, x[:1]))
+    np.testing.assert_allclose(y3[0], y1[0], atol=1e-4, rtol=1e-4)
+
+
+def test_vision_init_deterministic():
+    a = mobilenet.init()
+    b = mobilenet.init()
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("size", ["small", "default"])
+def test_conformer_shapes(size):
+    params = conformer.init(size)
+    t = common.n_frames(2.5)
+    y = np.asarray(conformer.apply(params, _mel(2, t), size))
+    # two SAME-padded stride-2 convs: ceil(ceil(t/2)/2)
+    t_sub = -(-(-(-t // 2)) // 2)
+    assert y.shape == (2, t_sub, conformer.VOCAB)
+    assert np.isfinite(y).all()
+    # log-softmax rows sum to ~1 in prob space.
+    probs = np.exp(y[0, 0])
+    assert abs(probs.sum() - 1.0) < 1e-3
+
+
+def test_conformer_default_larger_than_small():
+    small = count_params(conformer.init("small"))
+    default = count_params(conformer.init("default"))
+    assert default > 2 * small, (small, default)
+
+
+def test_citrinet_shapes_and_logprobs():
+    params = citrinet.init()
+    for len_s in [2.5, 5.0]:
+        t = common.n_frames(len_s)
+        y = np.asarray(citrinet.apply(params, _mel(1, t)))
+        assert y.shape == (1, -(-t // 2), citrinet.VOCAB)  # SAME stride-2
+        probs = np.exp(y[0, 3])
+        assert abs(probs.sum() - 1.0) < 1e-3
+
+
+def test_swin_shift_changes_output():
+    """Shifted-window block (block 1) must see different neighborhoods
+    than the unshifted block — permuting a window's content changes the
+    logits (sanity that windowing isn't a global op)."""
+    params = swin.init()
+    x = _img(1, seed=2)
+    y = np.asarray(swin.apply(params, x))
+    x2 = np.asarray(x).copy()
+    x2[0, :8, :8, :] = x2[0, :8, :8, ::-1]  # scramble one patch
+    y2 = np.asarray(swin.apply(params, jnp.asarray(x2)))
+    assert np.abs(y - y2).max() > 1e-6
+
+
+def test_param_counts_reasonable():
+    # Lite models: big enough to be real compute, small enough for 1-core.
+    assert 100_000 < count_params(mobilenet.init()) < 2_000_000
+    assert 100_000 < count_params(squeezenet.init()) < 2_000_000
+    assert 100_000 < count_params(swin.init()) < 2_000_000
+    assert 100_000 < count_params(citrinet.init()) < 2_000_000
+    assert 100_000 < count_params(conformer.init("small")) < 3_000_000
+    assert 500_000 < count_params(conformer.init("default")) < 10_000_000

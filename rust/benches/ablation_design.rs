@@ -1,0 +1,10 @@
+//! Bench: design-choice ablations beyond the paper's figures —
+//! adjacent-bucket merging, Time_queue rule, knee_frac sensitivity,
+//! traffic shape, and DPU preprocessing granularity (DESIGN.md §8).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::ablation::run_merge(&sys);
+    preba::experiments::ablation::run_policy(&sys);
+    preba::experiments::ablation::run_traffic(&sys);
+    preba::experiments::ablation::run_dpu_granularity(&sys);
+}

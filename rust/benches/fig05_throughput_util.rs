@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 5 (exec throughput + GPU utilization vs
+//! batch size, preprocessing disabled). `cargo bench --bench fig05_*`.
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig05::run(&sys);
+}

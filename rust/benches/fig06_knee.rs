@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 6 (throughput + tail latency vs batch,
+//! Batch_knee markers).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig06::run(&sys);
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 7 (latency breakdown at iso-throughput,
+//! 1g.5gb(7x) vs 7g.40gb(1x)).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig07::run(&sys);
+}

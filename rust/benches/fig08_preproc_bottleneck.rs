@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 8 (throughput with vs without CPU
+//! preprocessing + cores required; CitriNet's 393-core headline).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig08::run(&sys);
+}

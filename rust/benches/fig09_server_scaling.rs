@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 9 (throughput + CPU utilization vs
+//! number of active inference servers).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig09::run(&sys);
+}

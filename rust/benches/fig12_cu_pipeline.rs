@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 12 (DPU CU pipelining timelines:
+//! image pipelined / audio monolithic vs split).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig12::run(&sys);
+}

@@ -1,0 +1,5 @@
+//! Bench: regenerate paper Figure 13 (LibriSpeech length histogram).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig13::run(&sys);
+}

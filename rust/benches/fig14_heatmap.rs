@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 14 (batch x length tail-latency heatmap
+//! for Conformer(default), 1g vs 7g).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig14::run(&sys);
+}

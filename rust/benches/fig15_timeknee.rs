@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 15 (tail latency vs batch at 5/15/25 s;
+//! Time_knee ~ 35 ms regardless of length).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig15::run(&sys);
+}

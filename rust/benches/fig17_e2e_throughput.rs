@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 17 (end-to-end throughput, Ideal / DPU /
+//! CPU x active servers; the 3.7x headline).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig17::run(&sys);
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 18 (throughput vs tail-latency curves
+//! for the three designs).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig18::run(&sys);
+}

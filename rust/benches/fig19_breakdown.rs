@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 19 (end-to-end latency breakdown for
+//! SqueezeNet and Conformer(default)).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig19::run(&sys);
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 20 (power breakdown + energy efficiency;
+//! the 3.5x headline).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig20::run(&sys);
+}

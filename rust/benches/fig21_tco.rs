@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 21 (TCO cost-efficiency; the 3.0x
+//! headline).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig21::run(&sys);
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Figure 22 (ablation: Base / +DPU /
+//! +DynamicBatching on the audio models).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::fig22::run(&sys);
+}

@@ -1,0 +1,118 @@
+//! §Perf micro-benchmarks of the L3 hot paths (EXPERIMENTS.md §Perf).
+//!
+//! Times the coordinator's inner loops in isolation: DES event queue,
+//! batcher enqueue/form, service-model evaluation, CPU-pool admission,
+//! DPU admission, workload generation, JSON encode, and the host
+//! preprocessing ops. `cargo bench --bench perf_hotpath`.
+
+use preba::batching::{BatchPolicy, Bucketizer, DynamicBatcher, QueueParams, Request};
+use preba::clock::millis;
+use preba::config::{DpuConfig, HardwareConfig, PrebaConfig};
+use preba::dpu::Dpu;
+use preba::mig::{MigConfig, ServiceModel};
+use preba::models::ModelId;
+use preba::preprocess::{ops, CpuPool};
+use preba::server::{sim_driver, PolicyKind, PreprocMode, SimConfig};
+use preba::sim::EventQueue;
+use preba::util::bench::time_fn;
+use preba::util::Rng;
+use preba::workload::QueryGen;
+
+fn main() {
+    println!("== L3 hot-path micro-benchmarks ==");
+
+    // DES event queue: schedule+pop cycle.
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut i = 0u64;
+    time_fn("sim::EventQueue schedule+pop (64 events)", 1 << 20, || {
+        for _ in 0..64 {
+            i += 1;
+            q.schedule(i, i);
+        }
+        for _ in 0..64 {
+            std::hint::black_box(q.pop());
+        }
+    })
+    .print();
+
+    // Batcher: enqueue + form cycle at knee-sized batches.
+    let buckets = Bucketizer::new(2.5, 25.0);
+    let policy = BatchPolicy::Static(QueueParams { batch_max: 8, time_queue: millis(5.0) });
+    let mut b = DynamicBatcher::new(ModelId::CitriNet, buckets, policy, true);
+    let mut t = 0u64;
+    let mut rng = Rng::new(1);
+    time_fn("batching::enqueue+try_form (8-req batch)", 1 << 20, || {
+        for k in 0..8 {
+            t += 1000;
+            b.enqueue(Request {
+                id: t + k,
+                model: ModelId::CitriNet,
+                arrival: t,
+                enqueued: t,
+                len_s: rng.f64() * 25.0,
+            });
+        }
+        while std::hint::black_box(b.try_form(t)).is_some() {}
+    })
+    .print();
+
+    // Service model evaluation.
+    let sm = ServiceModel::new(ModelId::ConformerDefault.spec(), 1);
+    let mut acc = 0.0;
+    time_fn("mig::ServiceModel exec_secs_jittered", 1 << 22, || {
+        acc += sm.exec_secs_jittered(4, 10.0, &mut rng);
+    })
+    .print();
+    std::hint::black_box(acc);
+
+    // CPU pool admission.
+    let mut pool = CpuPool::new(30, Rng::new(2));
+    let mut now = 0u64;
+    time_fn("preprocess::CpuPool::admit", 1 << 21, || {
+        now += 100_000;
+        std::hint::black_box(pool.admit(now, 0.01));
+    })
+    .print();
+
+    // DPU admission.
+    let mut dpu = Dpu::new(&DpuConfig::default(), &HardwareConfig::default());
+    let mut now2 = 0u64;
+    time_fn("dpu::Dpu::admit (audio, split CUs)", 1 << 21, || {
+        now2 += 100_000;
+        std::hint::black_box(dpu.admit(now2, ModelId::CitriNet, 5.0));
+    })
+    .print();
+
+    // Workload generation.
+    let mut gen = QueryGen::new(ModelId::CitriNet, 1000.0, Rng::new(3));
+    time_fn("workload::QueryGen::next", 1 << 22, || {
+        std::hint::black_box(gen.next());
+    })
+    .print();
+
+    // Host preprocessing ops (the CPU-baseline request cost).
+    let mut r2 = Rng::new(4);
+    let coeffs = preba::workload::synth_image_coeffs(96, 96, 3, &mut r2);
+    time_fn("ops::image_pipeline 96->64 (1 image)", 4096, || {
+        std::hint::black_box(ops::image_pipeline(&coeffs, 96, 96, 3, 72, 64));
+    })
+    .print();
+    let pcm = preba::workload::synth_pcm(2.5, &mut r2);
+    time_fn("ops::audio_pipeline 2.5s (1 request)", 512, || {
+        std::hint::black_box(ops::audio_pipeline(&pcm, 16_000, 512, 256, 80));
+    })
+    .print();
+
+    // Whole-sim throughput: events/second of the DES driver.
+    let sys = PrebaConfig::new();
+    time_fn("sim_driver::run 2000 reqs (CitriNet DPU)", 64, || {
+        let mut cfg = SimConfig::new(ModelId::CitriNet, MigConfig::Small7, PreprocMode::Dpu);
+        cfg.policy = PolicyKind::Dynamic;
+        cfg.requests = 2000;
+        cfg.rate_qps = cfg.saturating_rate();
+        std::hint::black_box(sim_driver::run(&cfg, &sys));
+    })
+    .print();
+
+    println!("\n(record before/after numbers in EXPERIMENTS.md §Perf)");
+}

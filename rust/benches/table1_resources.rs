@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Table 1 (DPU resource utilization, extended
+//! with the TPU Pallas adaptation columns).
+fn main() {
+    let sys = preba::config::PrebaConfig::new();
+    preba::experiments::table1::run(&sys);
+}

@@ -1,0 +1,114 @@
+//! Audio-length bucketization (paper §4.3, Fig 16).
+//!
+//! Input lengths are split into non-overlapping windows of
+//! `window_s` seconds: `[0, 2.5)`, `[2.5, 5.0)`, ... Requests land in the
+//! queue of their bucket; a bucket's representative length (used for
+//! profiling and for batch-execution padding) is the window's upper edge,
+//! because a formed batch is padded to its longest member.
+
+/// Maps audio lengths to bucket indices and representative lengths.
+#[derive(Debug, Clone)]
+pub struct Bucketizer {
+    window_s: f64,
+    n_buckets: usize,
+}
+
+impl Bucketizer {
+    /// `window_s`-wide buckets covering `[0, max_s)`.
+    pub fn new(window_s: f64, max_s: f64) -> Bucketizer {
+        assert!(window_s > 0.0 && max_s > window_s);
+        let n = (max_s / window_s).ceil() as usize;
+        Bucketizer { window_s, n_buckets: n.max(1) }
+    }
+
+    /// Single-bucket bucketizer for fixed-size (vision) inputs.
+    pub fn fixed() -> Bucketizer {
+        Bucketizer { window_s: f64::INFINITY, n_buckets: 1 }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.n_buckets
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// Bucket index of a length. Buckets are upper-edge inclusive —
+    /// `(0, 2.5], (2.5, 5.0], ...` — so an input exactly at a window edge
+    /// pads to that edge, not to the next one (a 2.5 s input in a
+    /// `[2.5, 5)` bucket would execute padded to 5 s, wasting half the
+    /// batch's compute).
+    pub fn bucket_of(&self, len_s: f64) -> usize {
+        if self.n_buckets == 1 {
+            return 0;
+        }
+        let idx = (len_s / self.window_s).ceil() as isize - 1;
+        idx.clamp(0, self.n_buckets as isize - 1) as usize
+    }
+
+    /// Representative (upper-edge) length of a bucket; used for profiling
+    /// and padding. For the fixed bucketizer this is 0 (ignored).
+    pub fn repr_len(&self, bucket: usize) -> f64 {
+        if self.n_buckets == 1 && self.window_s.is_infinite() {
+            return 0.0;
+        }
+        self.window_s * (bucket + 1) as f64
+    }
+
+    /// Buckets adjacent to `b`, nearest first (for merge; paper Fig 16).
+    pub fn adjacent(&self, b: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        for d in 1..self.n_buckets {
+            if b >= d {
+                out.push(b - d);
+            }
+            if b + d < self.n_buckets {
+                out.push(b + d);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_buckets() {
+        // Fig 16: 2.5 s windows; a 6 s input falls in the third bucket.
+        let b = Bucketizer::new(2.5, 25.0);
+        assert_eq!(b.n_buckets(), 10);
+        assert_eq!(b.bucket_of(6.0), 2);
+        assert_eq!(b.bucket_of(0.0), 0);
+        assert_eq!(b.bucket_of(2.49), 0);
+        assert_eq!(b.bucket_of(2.5), 0); // edge is inclusive: pads to 2.5
+        assert_eq!(b.bucket_of(2.51), 1);
+        assert_eq!(b.bucket_of(999.0), 9); // clamped
+    }
+
+    #[test]
+    fn repr_len_is_upper_edge() {
+        let b = Bucketizer::new(2.5, 25.0);
+        assert_eq!(b.repr_len(0), 2.5);
+        assert_eq!(b.repr_len(2), 7.5);
+    }
+
+    #[test]
+    fn fixed_single_bucket() {
+        let b = Bucketizer::fixed();
+        assert_eq!(b.n_buckets(), 1);
+        assert_eq!(b.bucket_of(17.0), 0);
+        assert_eq!(b.repr_len(0), 0.0);
+        assert!(b.adjacent(0).is_empty());
+    }
+
+    #[test]
+    fn adjacency_nearest_first() {
+        let b = Bucketizer::new(2.5, 10.0); // 4 buckets
+        assert_eq!(b.adjacent(1), vec![0, 2, 3]);
+        assert_eq!(b.adjacent(0), vec![1, 2, 3]);
+        assert_eq!(b.adjacent(3), vec![2, 1, 0]);
+    }
+}

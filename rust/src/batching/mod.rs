@@ -1,0 +1,27 @@
+//! PREBA's dynamic batching system (paper §4.3) plus the static baseline.
+//!
+//! Two hyperparameters govern a batching queue:
+//! * `Batch_max` — largest batch the system will construct. Optimal value
+//!   is `Batch_knee` (paper §3.2): bigger batches add latency with ~no
+//!   throughput gain.
+//! * `Time_queue` — longest time a request may wait in the queue while a
+//!   batch forms. PREBA sets it to `Time_knee / n_vGPUs` so that while the
+//!   n vGPUs each execute a batch (~`Time_knee`), the batcher forms ~n new
+//!   batches (§4.3 "Analytical model based estimation").
+//!
+//! Variable-length audio is bucketized into non-overlapping 2.5 s windows,
+//! one queue per bucket, each with its own `Batch_max` (= the bucket's
+//! profiled `Batch_knee`). Undersized timeout batches merge requests from
+//! adjacent buckets, capped by the `Batch_max` of the longest input in the
+//! merged batch (§4.3 last paragraph, Fig 16).
+
+pub mod bucket;
+pub mod policy;
+pub mod queue;
+
+pub use bucket::Bucketizer;
+pub use policy::{BatchPolicy, QueueParams};
+pub use queue::{Batch, DynamicBatcher, Request};
+
+/// Unique request id.
+pub type ReqId = u64;

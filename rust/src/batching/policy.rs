@@ -1,0 +1,125 @@
+//! Batching policies: PREBA's profiled dynamic policy vs the static
+//! baseline (paper §4.3, ablation §6.4).
+
+use crate::clock::{secs, Nanos};
+use crate::mig::ServiceModel;
+use crate::models::ModelSpec;
+
+use super::bucket::Bucketizer;
+
+/// Per-queue hyperparameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueParams {
+    /// Largest batch this queue will form (`Batch_max`).
+    pub batch_max: usize,
+    /// Longest a head-of-line request may wait (`Time_queue`).
+    pub time_queue: Nanos,
+}
+
+/// How the per-bucket queue parameters are chosen.
+#[derive(Debug, Clone)]
+pub enum BatchPolicy {
+    /// One fixed (Batch_max, Time_queue) for every bucket — the baseline
+    /// a naive MIG deployment uses (ablation "Base").
+    Static(QueueParams),
+    /// PREBA: per-bucket `Batch_max = Batch_knee` from offline profiling,
+    /// `Time_queue = Time_knee / n_vgpus`.
+    Dynamic { per_bucket: Vec<QueueParams> },
+}
+
+impl BatchPolicy {
+    /// Parameters for a bucket.
+    pub fn params(&self, bucket: usize) -> QueueParams {
+        match self {
+            BatchPolicy::Static(p) => *p,
+            BatchPolicy::Dynamic { per_bucket } => {
+                per_bucket[bucket.min(per_bucket.len().saturating_sub(1))]
+            }
+        }
+    }
+
+    /// Construct PREBA's dynamic policy directly from the calibrated
+    /// service model (the paper does this with a few minutes of offline
+    /// profiling; `profiler::knee_table` does the measured equivalent and
+    /// agrees — see `profiler::tests`).
+    pub fn dynamic_from_model(
+        spec: &ModelSpec,
+        sm: &ServiceModel,
+        buckets: &Bucketizer,
+        n_vgpus: usize,
+    ) -> BatchPolicy {
+        let per_bucket = (0..buckets.n_buckets())
+            .map(|b| {
+                let len = buckets.repr_len(b);
+                let knee = sm.knee(len);
+                let time_knee = sm.exec_secs(knee, len);
+                QueueParams {
+                    batch_max: knee,
+                    time_queue: secs(time_knee / n_vgpus as f64),
+                }
+            })
+            .collect();
+        let _ = spec;
+        BatchPolicy::Dynamic { per_bucket }
+    }
+
+    /// The largest Batch_max across buckets (used to size executables).
+    pub fn max_batch(&self) -> usize {
+        match self {
+            BatchPolicy::Static(p) => p.batch_max,
+            BatchPolicy::Dynamic { per_bucket } => {
+                per_bucket.iter().map(|p| p.batch_max).max().unwrap_or(1)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelId;
+
+    #[test]
+    fn dynamic_policy_time_queue_divides_by_vgpus() {
+        let spec = ModelId::CitriNet.spec();
+        let sm = ServiceModel::new(spec, 1);
+        let buckets = Bucketizer::new(2.5, 25.0);
+        let p7 = BatchPolicy::dynamic_from_model(spec, &sm, &buckets, 7);
+        let p1 = BatchPolicy::dynamic_from_model(spec, &sm, &buckets, 1);
+        let q7 = p7.params(0);
+        let q1 = p1.params(0);
+        assert_eq!(q7.batch_max, q1.batch_max);
+        // Time_queue scales as 1/n_vgpus.
+        let ratio = q1.time_queue as f64 / q7.time_queue as f64;
+        assert!((ratio - 7.0).abs() < 0.01, "ratio={ratio}");
+    }
+
+    #[test]
+    fn dynamic_batch_max_shrinks_with_length() {
+        let spec = ModelId::ConformerDefault.spec();
+        let sm = ServiceModel::new(spec, 1);
+        let buckets = Bucketizer::new(2.5, 25.0);
+        let p = BatchPolicy::dynamic_from_model(spec, &sm, &buckets, 7);
+        let first = p.params(0).batch_max;
+        let last = p.params(9).batch_max;
+        assert!(first > last, "knee should shrink with length: {first} vs {last}");
+    }
+
+    #[test]
+    fn static_same_everywhere() {
+        let p = BatchPolicy::Static(QueueParams { batch_max: 32, time_queue: 1000 });
+        assert_eq!(p.params(0), p.params(5));
+        assert_eq!(p.max_batch(), 32);
+    }
+
+    #[test]
+    fn audio_time_queue_near_5ms_for_7_vgpus() {
+        // Paper: Time_knee ~35 ms, so Time_queue ~ 5 ms on 1g.5gb(7x).
+        let spec = ModelId::ConformerSmall.spec();
+        let sm = ServiceModel::new(spec, 1);
+        let buckets = Bucketizer::new(2.5, 25.0);
+        let p = BatchPolicy::dynamic_from_model(spec, &sm, &buckets, 7);
+        let tq_ms = p.params(1).time_queue as f64 / 1e6;
+        assert!((tq_ms - 5.0).abs() < 1.5, "tq={tq_ms} ms");
+    }
+}

@@ -1,0 +1,397 @@
+//! The batching queues and batch-formation logic (paper §4.3, Fig 16).
+
+use std::collections::VecDeque;
+
+use crate::clock::Nanos;
+use crate::models::ModelId;
+
+use super::bucket::Bucketizer;
+use super::policy::BatchPolicy;
+use super::ReqId;
+
+/// An inference request flowing through the server.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: ReqId,
+    pub model: ModelId,
+    /// Arrival at the server frontend.
+    pub arrival: Nanos,
+    /// When preprocessing finished and the request entered its queue.
+    pub enqueued: Nanos,
+    /// Audio length in seconds (0 for vision).
+    pub len_s: f64,
+}
+
+/// A formed batch, ready for model execution on a vGPU.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub model: ModelId,
+    pub requests: Vec<Request>,
+    /// When the batch was formed.
+    pub formed: Nanos,
+    /// Longest member length (the batch pads to this).
+    pub max_len_s: f64,
+    /// Bucket the batch was formed from (diagnostics).
+    pub bucket: usize,
+    /// True if requests from adjacent buckets were merged in.
+    pub merged: bool,
+}
+
+impl Batch {
+    pub fn size(&self) -> usize {
+        self.requests.len()
+    }
+}
+
+/// Why a batch was released (diagnostics / tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReleaseReason {
+    /// Queue reached `Batch_max`.
+    Full,
+    /// Head-of-line request hit `Time_queue`.
+    Timeout,
+}
+
+/// PREBA's multi-queue dynamic batcher for one model.
+///
+/// One FIFO queue per length bucket; vision models use the single
+/// `Bucketizer::fixed()` bucket. Formation rules:
+/// * a queue reaching its `Batch_max` releases immediately;
+/// * a head-of-line request older than `Time_queue` releases the queue's
+///   contents, merging from adjacent buckets (nearest-first) if the batch
+///   is undersized — capped by the `Batch_max` of the *longest* request in
+///   the merged batch (paper §4.3).
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    model: ModelId,
+    buckets: Bucketizer,
+    policy: BatchPolicy,
+    queues: Vec<VecDeque<Request>>,
+    merge_adjacent: bool,
+    // counters for invariants/diagnostics
+    enqueued: u64,
+    released: u64,
+}
+
+impl DynamicBatcher {
+    pub fn new(
+        model: ModelId,
+        buckets: Bucketizer,
+        policy: BatchPolicy,
+        merge_adjacent: bool,
+    ) -> DynamicBatcher {
+        let n = buckets.n_buckets();
+        DynamicBatcher {
+            model,
+            buckets,
+            policy,
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            merge_adjacent,
+            enqueued: 0,
+            released: 0,
+        }
+    }
+
+    pub fn model(&self) -> ModelId {
+        self.model
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    pub fn bucketizer(&self) -> &Bucketizer {
+        &self.buckets
+    }
+
+    /// Total requests waiting across all queues.
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    /// Requests enqueued minus released (must equal `pending`).
+    pub fn balance(&self) -> u64 {
+        self.enqueued - self.released
+    }
+
+    /// Add a preprocessed request to its bucket queue.
+    pub fn enqueue(&mut self, req: Request) {
+        debug_assert_eq!(req.model, self.model);
+        let b = self.buckets.bucket_of(req.len_s);
+        self.queues[b].push_back(req);
+        self.enqueued += 1;
+    }
+
+    /// Earliest absolute deadline at which some queue must be flushed
+    /// (head-of-line enqueue time + its bucket's Time_queue).
+    pub fn next_deadline(&self) -> Option<Nanos> {
+        self.queues
+            .iter()
+            .enumerate()
+            .filter_map(|(b, q)| {
+                q.front().map(|r| r.enqueued.saturating_add(self.policy.params(b).time_queue))
+            })
+            .min()
+    }
+
+    /// Try to form one batch at time `now`. Returns `None` when no queue
+    /// is full and no deadline has passed. Call repeatedly to drain.
+    pub fn try_form(&mut self, now: Nanos) -> Option<(Batch, ReleaseReason)> {
+        // 1. Any full queue releases immediately (prefer the fullest
+        //    relative to its Batch_max, then lowest bucket for determinism).
+        let mut full: Option<(usize, f64)> = None;
+        for (b, q) in self.queues.iter().enumerate() {
+            let bm = self.policy.params(b).batch_max;
+            if q.len() >= bm {
+                let ratio = q.len() as f64 / bm as f64;
+                if full.map(|(_, r)| ratio > r).unwrap_or(true) {
+                    full = Some((b, ratio));
+                }
+            }
+        }
+        if let Some((b, _)) = full {
+            return Some((self.release(b, now, false), ReleaseReason::Full));
+        }
+
+        // 2. Any expired head-of-line request releases its queue, with
+        //    adjacent-bucket merging.
+        let expired = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter_map(|(b, q)| {
+                let head = q.front()?;
+                let deadline = head.enqueued.saturating_add(self.policy.params(b).time_queue);
+                (deadline <= now).then_some((b, head.enqueued))
+            })
+            .min_by_key(|&(_, t)| t);
+        if let Some((b, _)) = expired {
+            return Some((self.release(b, now, self.merge_adjacent), ReleaseReason::Timeout));
+        }
+        None
+    }
+
+    /// Release up to `Batch_max` requests from bucket `b`, merging from
+    /// adjacent buckets when undersized (and allowed).
+    fn release(&mut self, b: usize, now: Nanos, merge: bool) -> Batch {
+        let mut batch_max = self.policy.params(b).batch_max;
+        let mut reqs: Vec<Request> = Vec::with_capacity(batch_max);
+        while reqs.len() < batch_max {
+            match self.queues[b].pop_front() {
+                Some(r) => reqs.push(r),
+                None => break,
+            }
+        }
+        let mut merged = false;
+        if merge && reqs.len() < batch_max {
+            // Pull from adjacent buckets, nearest first. The effective
+            // Batch_max is re-derived from the longest input in the batch:
+            // merging a longer request can only *shrink* the cap (paper:
+            // "the batch size does not exceed the Batch_max of the longest
+            // input within the batch").
+            for nb in self.buckets.adjacent(b) {
+                // Cap that would apply once a request from `nb` joins the
+                // batch: merging a *longer* input re-derives Batch_max from
+                // the longest member, which can only shrink the cap. If the
+                // batch already holds that many, skip this bucket entirely
+                // (never trim an already-formed batch).
+                let cap_if_merge =
+                    if nb > b { batch_max.min(self.policy.params(nb).batch_max) } else { batch_max };
+                while reqs.len() < cap_if_merge {
+                    let Some(r) = self.queues[nb].pop_front() else { break };
+                    merged = true;
+                    reqs.push(r);
+                    if nb > b {
+                        batch_max = cap_if_merge;
+                    }
+                }
+                if reqs.len() >= batch_max {
+                    break;
+                }
+            }
+        }
+        debug_assert!(!reqs.is_empty(), "release on empty bucket");
+        self.released += reqs.len() as u64;
+        let max_len_s = reqs.iter().map(|r| r.len_s).fold(0.0, f64::max);
+        Batch { model: self.model, requests: reqs, formed: now, max_len_s, bucket: b, merged }
+    }
+
+    /// Drain everything immediately (server shutdown).
+    pub fn flush(&mut self, now: Nanos) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for b in 0..self.queues.len() {
+            while !self.queues[b].is_empty() {
+                out.push(self.release(b, now, false));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::policy::QueueParams;
+    use crate::clock::millis;
+
+    fn mk_req(id: u64, enq: Nanos, len_s: f64) -> Request {
+        Request { id, model: ModelId::CitriNet, arrival: enq, enqueued: enq, len_s }
+    }
+
+    fn static_batcher(batch_max: usize, time_queue: Nanos) -> DynamicBatcher {
+        DynamicBatcher::new(
+            ModelId::CitriNet,
+            Bucketizer::new(2.5, 25.0),
+            BatchPolicy::Static(QueueParams { batch_max, time_queue }),
+            true,
+        )
+    }
+
+    #[test]
+    fn releases_on_full() {
+        let mut b = static_batcher(4, millis(100.0));
+        for i in 0..3 {
+            b.enqueue(mk_req(i, 0, 1.0));
+            assert!(b.try_form(0).is_none());
+        }
+        b.enqueue(mk_req(3, 0, 1.0));
+        let (batch, why) = b.try_form(0).unwrap();
+        assert_eq!(why, ReleaseReason::Full);
+        assert_eq!(batch.size(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn releases_on_timeout() {
+        let mut b = static_batcher(8, millis(10.0));
+        b.enqueue(mk_req(0, 0, 1.0));
+        b.enqueue(mk_req(1, millis(2.0), 1.0));
+        assert!(b.try_form(millis(9.0)).is_none());
+        let (batch, why) = b.try_form(millis(10.0)).unwrap();
+        assert_eq!(why, ReleaseReason::Timeout);
+        assert_eq!(batch.size(), 2);
+    }
+
+    #[test]
+    fn next_deadline_tracks_head_of_line() {
+        let mut b = static_batcher(8, millis(10.0));
+        assert_eq!(b.next_deadline(), None);
+        b.enqueue(mk_req(0, millis(5.0), 1.0));
+        b.enqueue(mk_req(1, millis(1.0), 4.0)); // different bucket, earlier
+        assert_eq!(b.next_deadline(), Some(millis(11.0)));
+    }
+
+    #[test]
+    fn buckets_batch_separately() {
+        let mut b = static_batcher(2, millis(100.0));
+        b.enqueue(mk_req(0, 0, 1.0)); // bucket 0
+        b.enqueue(mk_req(1, 0, 6.0)); // bucket 2 (Fig 16 example)
+        assert!(b.try_form(0).is_none(), "no bucket is full");
+        b.enqueue(mk_req(2, 0, 1.2)); // bucket 0 now full
+        let (batch, _) = b.try_form(0).unwrap();
+        assert_eq!(batch.bucket, 0);
+        assert_eq!(batch.size(), 2);
+        assert!(batch.requests.iter().all(|r| r.len_s < 2.5));
+    }
+
+    #[test]
+    fn timeout_merges_adjacent_nearest_first() {
+        let mut b = static_batcher(4, millis(10.0));
+        b.enqueue(mk_req(0, 0, 6.0)); // bucket 2
+        b.enqueue(mk_req(1, 0, 3.0)); // bucket 1 (nearest)
+        b.enqueue(mk_req(2, 0, 9.0)); // bucket 3
+        let (batch, why) = b.try_form(millis(10.0)).unwrap();
+        assert_eq!(why, ReleaseReason::Timeout);
+        assert!(batch.merged);
+        assert_eq!(batch.size(), 3);
+        assert_eq!(batch.max_len_s, 9.0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn merge_respects_longest_member_batch_max() {
+        // Dynamic policy where long buckets have smaller Batch_max.
+        let per_bucket = vec![
+            QueueParams { batch_max: 8, time_queue: millis(10.0) }, // [0,2.5)
+            QueueParams { batch_max: 2, time_queue: millis(10.0) }, // [2.5,5)
+        ];
+        let mut b = DynamicBatcher::new(
+            ModelId::CitriNet,
+            Bucketizer::new(2.5, 5.0),
+            BatchPolicy::Dynamic { per_bucket },
+            true,
+        );
+        // 3 short requests time out with 1 long request waiting in
+        // bucket 1 (below its own Batch_max of 2, so it is not released
+        // on the full-queue path first).
+        b.enqueue(mk_req(0, 0, 1.0));
+        b.enqueue(mk_req(1, 0, 1.1));
+        b.enqueue(mk_req(2, 0, 1.2));
+        b.enqueue(mk_req(3, millis(1.0), 3.0));
+        let (batch, _) = b.try_form(millis(10.0)).unwrap();
+        // Bucket 0's Batch_max is 8, but merging the long request would
+        // cap the batch at bucket 1's Batch_max = 2 — and the batch
+        // already holds 3, so the long request must NOT be merged.
+        assert!(!batch.merged, "must not merge past the longest-member cap");
+        assert_eq!(batch.size(), 3);
+        assert_eq!(b.pending(), 1);
+
+        // Conversely: a single timed-out short request merges the long
+        // one and the cap shrinks to 2.
+        let per_bucket = vec![
+            QueueParams { batch_max: 8, time_queue: millis(10.0) },
+            QueueParams { batch_max: 2, time_queue: millis(10.0) },
+        ];
+        let mut b = DynamicBatcher::new(
+            ModelId::CitriNet,
+            Bucketizer::new(2.5, 5.0),
+            BatchPolicy::Dynamic { per_bucket },
+            true,
+        );
+        b.enqueue(mk_req(0, 0, 1.0));
+        b.enqueue(mk_req(1, millis(1.0), 3.0));
+        let (batch, _) = b.try_form(millis(10.0)).unwrap();
+        assert!(batch.merged);
+        assert_eq!(batch.size(), 2);
+        assert_eq!(batch.max_len_s, 3.0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn fifo_within_bucket() {
+        let mut b = static_batcher(3, millis(10.0));
+        for i in 0..3 {
+            b.enqueue(mk_req(i, i, 1.0));
+        }
+        let (batch, _) = b.try_form(5).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn balance_invariant() {
+        let mut b = static_batcher(4, millis(10.0));
+        for i in 0..10 {
+            b.enqueue(mk_req(i, 0, (i % 5) as f64));
+        }
+        let mut out = 0;
+        while let Some((batch, _)) = b.try_form(millis(100.0)) {
+            out += batch.size();
+        }
+        assert_eq!(out, 10);
+        assert_eq!(b.balance(), 0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flush_drains_all() {
+        let mut b = static_batcher(100, millis(1000.0));
+        for i in 0..7 {
+            b.enqueue(mk_req(i, 0, (i as f64) * 3.0));
+        }
+        let batches = b.flush(millis(1.0));
+        let total: usize = batches.iter().map(Batch::size).sum();
+        assert_eq!(total, 7);
+        assert_eq!(b.pending(), 0);
+    }
+}

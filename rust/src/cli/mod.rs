@@ -1,0 +1,125 @@
+//! Command-line argument parsing (in lieu of `clap`, absent offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name). The first non-dashed
+    /// token becomes the subcommand; later non-dashed tokens are
+    /// positionals. `bool_flags` lists options that take no value.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("option --{stripped} expects a value"))?;
+                    out.options.insert(stripped.to_string(), v.clone());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, bool_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Error if options outside `known` were passed (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                anyhow::bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&argv("serve --model mobilenet --qps=100 --verbose pos1"), &["verbose"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.opt("model"), Some("mobilenet"));
+        assert_eq!(a.opt("qps"), Some("100"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&argv("x --n 42 --rate 2.5"), &[]).unwrap();
+        assert_eq!(a.opt_u64("n", 0).unwrap(), 42);
+        assert_eq!(a.opt_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.opt_u64("missing", 7).unwrap(), 7);
+        assert!(a.opt_u64("rate", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv("x --model"), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_check() {
+        let a = Args::parse(&argv("x --good 1 --bad 2"), &[]).unwrap();
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+}

@@ -1,0 +1,135 @@
+//! Time abstraction shared by the DES driver and the real-PJRT driver.
+//!
+//! All coordinator logic (batching deadlines, `Time_queue` accounting,
+//! SLA tracking) is written against nanosecond timestamps ([`Nanos`]) from
+//! a [`Clock`], so the same code runs under the virtual clock of the
+//! discrete-event simulator and the monotonic wall clock of the real
+//! serving driver.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Nanoseconds since an arbitrary epoch (simulation start / process start).
+pub type Nanos = u64;
+
+/// Convert seconds (f64) to [`Nanos`], saturating.
+pub fn secs(s: f64) -> Nanos {
+    (s * 1e9).round().max(0.0) as Nanos
+}
+
+/// Convert milliseconds to [`Nanos`].
+pub fn millis(ms: f64) -> Nanos {
+    secs(ms * 1e-3)
+}
+
+/// Convert microseconds to [`Nanos`].
+pub fn micros(us: f64) -> Nanos {
+    secs(us * 1e-6)
+}
+
+/// [`Nanos`] to seconds.
+pub fn to_secs(n: Nanos) -> f64 {
+    n as f64 * 1e-9
+}
+
+/// [`Nanos`] to milliseconds.
+pub fn to_millis(n: Nanos) -> f64 {
+    n as f64 * 1e-6
+}
+
+/// A source of "now". Implementations must be monotonic.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> Nanos;
+}
+
+/// Wall-clock time from a process-start epoch.
+pub struct RealClock {
+    epoch: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        RealClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Nanos {
+        self.epoch.elapsed().as_nanos() as Nanos
+    }
+}
+
+/// Manually-advanced clock used by the discrete-event simulator. Shared
+/// (atomic) so metric recorders can read it from anywhere.
+pub struct VirtualClock {
+    now: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { now: AtomicU64::new(0) }
+    }
+
+    /// Advance to `t`. Panics if time would move backwards (a DES bug).
+    pub fn advance_to(&self, t: Nanos) {
+        let prev = self.now.swap(t, Ordering::SeqCst);
+        assert!(prev <= t, "virtual time moved backwards: {prev} -> {t}");
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Nanos {
+        self.now.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(secs(1.5), 1_500_000_000);
+        assert_eq!(millis(35.0), 35_000_000);
+        assert_eq!(micros(2.0), 2_000);
+        assert!((to_secs(secs(3.25)) - 3.25).abs() < 1e-12);
+        assert!((to_millis(millis(7.5)) - 7.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance_to(10);
+        assert_eq!(c.now(), 10);
+        c.advance_to(10); // equal is fine
+    }
+
+    #[test]
+    #[should_panic(expected = "moved backwards")]
+    fn virtual_clock_rejects_backwards() {
+        let c = VirtualClock::new();
+        c.advance_to(10);
+        c.advance_to(5);
+    }
+}

@@ -1,0 +1,314 @@
+//! Typed configuration for the PREBA server and simulator.
+//!
+//! Every calibration constant of the reproduction lives here with its
+//! provenance documented (paper section / public datasheet / derived), and
+//! can be overridden from a TOML file (`preba --config path.toml ...`).
+
+pub mod toml;
+
+use crate::clock::{millis, Nanos};
+
+/// Host + accelerator hardware description (paper §5 "Hardware").
+#[derive(Debug, Clone)]
+pub struct HardwareConfig {
+    /// Physical CPU cores on the host (AMD EPYC 7502: 32).
+    pub cpu_cores: usize,
+    /// Cores the serving stack itself consumes (load balancing, kernel
+    /// launching — paper §3.3 "the host CPU is already busy").
+    pub cpu_reserved_cores: usize,
+    /// PCIe gen4 x16 effective bandwidth, GB/s (paper §4.2: 32 GB/s).
+    pub pcie_gbps: f64,
+    /// One-way PCIe transfer fixed latency (paper: "tens of microseconds").
+    pub pcie_latency: Nanos,
+    /// Number of GPCs in the A100 (7).
+    pub gpcs: usize,
+    /// Peak dense fp16/tensor throughput of a 1-GPC slice, TFLOP/s.
+    /// A100 = 312 TFLOPS tensor-fp16 over 7 GPCs ≈ 44.6 per GPC.
+    pub tflops_per_gpc: f64,
+    /// HBM bandwidth of a 1-GPC (1g.5gb) slice, GB/s. A100 = 1555 GB/s
+    /// over 8 slices; 1g.5gb gets 1 slice ≈ 194 GB/s.
+    pub hbm_gbps_per_slice: f64,
+}
+
+impl Default for HardwareConfig {
+    fn default() -> Self {
+        HardwareConfig {
+            cpu_cores: 32,
+            cpu_reserved_cores: 2,
+            pcie_gbps: 32.0,
+            pcie_latency: crate::clock::micros(20.0),
+            gpcs: 7,
+            tflops_per_gpc: 44.6,
+            hbm_gbps_per_slice: 194.0,
+        }
+    }
+}
+
+/// Power model constants (paper §6.2, public TDPs).
+#[derive(Debug, Clone)]
+pub struct PowerConfig {
+    /// EPYC 7502 TDP, W.
+    pub cpu_tdp_w: f64,
+    /// CPU idle floor as a fraction of TDP.
+    pub cpu_idle_frac: f64,
+    /// A100 SXM/PCIe TDP, W.
+    pub gpu_tdp_w: f64,
+    /// GPU idle floor fraction (MIG slices powered but idle).
+    pub gpu_idle_frac: f64,
+    /// Alveo U55C max power, W (Xilinx datasheet: 115 W card, ~75 typical).
+    pub fpga_w: f64,
+    /// FPGA idle fraction.
+    pub fpga_idle_frac: f64,
+    /// Rest-of-server (DRAM, fans, NIC) constant draw, W.
+    pub server_base_w: f64,
+}
+
+impl Default for PowerConfig {
+    fn default() -> Self {
+        PowerConfig {
+            cpu_tdp_w: 180.0,
+            cpu_idle_frac: 0.35,
+            gpu_tdp_w: 400.0,
+            gpu_idle_frac: 0.20,
+            fpga_w: 75.0,
+            fpga_idle_frac: 0.30,
+            server_base_w: 120.0,
+        }
+    }
+}
+
+/// TCO model constants (paper §6.3).
+#[derive(Debug, Clone)]
+pub struct TcoConfig {
+    /// Server node CAPEX, USD (SuperMicro 2U AMD [82]).
+    pub server_usd: f64,
+    /// A100 CAPEX, USD [7].
+    pub gpu_usd: f64,
+    /// Alveo U55C CAPEX, USD [90].
+    pub fpga_usd: f64,
+    /// Depreciation horizon, years (paper: 3).
+    pub years: f64,
+    /// Electricity, USD per kWh (paper: $0.139).
+    pub usd_per_kwh: f64,
+}
+
+impl Default for TcoConfig {
+    fn default() -> Self {
+        TcoConfig { server_usd: 8000.0, gpu_usd: 14000.0, fpga_usd: 4500.0, years: 3.0, usd_per_kwh: 0.139 }
+    }
+}
+
+/// Batching-system configuration (paper §4.3).
+#[derive(Debug, Clone)]
+pub struct BatchingConfig {
+    /// Throughput fraction of plateau that defines `Batch_knee` in the
+    /// offline profiler (knee = smallest batch reaching this fraction).
+    pub knee_frac: f64,
+    /// Audio bucket window, seconds (paper: 2.5 s windows).
+    pub bucket_window_s: f64,
+    /// Maximum audio length, seconds (LibriSpeech tail, Fig 13: ~25 s).
+    pub max_audio_s: f64,
+    /// Static-baseline `Batch_max` (ablation "Base" configuration).
+    pub static_batch_max: usize,
+    /// Static-baseline `Time_queue`.
+    pub static_time_queue: Nanos,
+    /// Enable adjacent-bucket merging (paper §4.3 last paragraph).
+    pub merge_adjacent: bool,
+    /// Override the `Time_queue = Time_knee / n_vGPUs` divisor (ablation
+    /// of the paper's rule; `None` = use the vGPU count).
+    pub time_queue_divisor: Option<f64>,
+}
+
+impl Default for BatchingConfig {
+    fn default() -> Self {
+        BatchingConfig {
+            knee_frac: 0.90,
+            bucket_window_s: 2.5,
+            max_audio_s: 25.0,
+            static_batch_max: 32,
+            static_time_queue: millis(50.0),
+            merge_adjacent: true,
+            time_queue_divisor: None,
+        }
+    }
+}
+
+/// DPU (FPGA preprocessing accelerator) configuration (paper §4.2, §5).
+#[derive(Debug, Clone)]
+pub struct DpuConfig {
+    /// Image-pipeline CUs instantiated (Table 1: image CU uses ~45% LUT,
+    /// so 2 fit; throughput scales with CU count).
+    pub image_cus: usize,
+    /// Audio Resample+Mel CUs (split design, Fig 11b).
+    pub audio_mel_cus: usize,
+    /// Audio Normalize CUs (split design, Fig 11b).
+    pub audio_norm_cus: usize,
+    /// Use the split-CU audio design (false = monolithic CU, Fig 12b).
+    pub split_audio_cu: bool,
+    /// Host->CU command/doorbell overhead per invocation.
+    pub cu_dispatch_overhead: Nanos,
+}
+
+impl Default for DpuConfig {
+    fn default() -> Self {
+        DpuConfig {
+            image_cus: 2,
+            audio_mel_cus: 2,
+            audio_norm_cus: 1,
+            split_audio_cu: true,
+            cu_dispatch_overhead: crate::clock::micros(15.0),
+        }
+    }
+}
+
+/// Workload-generation configuration (paper §5 "Input query modeling").
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// RNG seed for the whole experiment.
+    pub seed: u64,
+    /// Requests to simulate per measurement run.
+    pub requests: usize,
+    /// Warmup fraction excluded from statistics.
+    pub warmup_frac: f64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig { seed: 0x9E3779B97F4A7C15, requests: 20_000, warmup_frac: 0.1 }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default)]
+pub struct PrebaConfig {
+    pub hardware: HardwareConfig,
+    pub power: PowerConfig,
+    pub tco: TcoConfig,
+    pub batching: BatchingConfig,
+    pub dpu: DpuConfig,
+    pub workload: WorkloadConfig,
+    /// Directory holding AOT artifacts + manifest.json.
+    pub artifacts_dir: String,
+}
+
+impl PrebaConfig {
+    /// Built-in defaults (paper testbed).
+    pub fn new() -> Self {
+        PrebaConfig { artifacts_dir: "artifacts".to_string(), ..Default::default() }
+    }
+
+    /// Load defaults then apply overrides from a TOML file.
+    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read config '{path}': {e}"))?;
+        let doc = toml::parse(&text)?;
+        let mut cfg = PrebaConfig::new();
+        cfg.apply(&doc)?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed TOML doc on top of the current values.
+    pub fn apply(&mut self, doc: &toml::Doc) -> anyhow::Result<()> {
+        let h = &mut self.hardware;
+        h.cpu_cores = doc.i64_or("hardware.cpu_cores", h.cpu_cores as i64) as usize;
+        h.cpu_reserved_cores =
+            doc.i64_or("hardware.cpu_reserved_cores", h.cpu_reserved_cores as i64) as usize;
+        h.pcie_gbps = doc.f64_or("hardware.pcie_gbps", h.pcie_gbps);
+        h.gpcs = doc.i64_or("hardware.gpcs", h.gpcs as i64) as usize;
+        h.tflops_per_gpc = doc.f64_or("hardware.tflops_per_gpc", h.tflops_per_gpc);
+        h.hbm_gbps_per_slice = doc.f64_or("hardware.hbm_gbps_per_slice", h.hbm_gbps_per_slice);
+
+        let p = &mut self.power;
+        p.cpu_tdp_w = doc.f64_or("power.cpu_tdp_w", p.cpu_tdp_w);
+        p.gpu_tdp_w = doc.f64_or("power.gpu_tdp_w", p.gpu_tdp_w);
+        p.fpga_w = doc.f64_or("power.fpga_w", p.fpga_w);
+        p.server_base_w = doc.f64_or("power.server_base_w", p.server_base_w);
+
+        let t = &mut self.tco;
+        t.server_usd = doc.f64_or("tco.server_usd", t.server_usd);
+        t.gpu_usd = doc.f64_or("tco.gpu_usd", t.gpu_usd);
+        t.fpga_usd = doc.f64_or("tco.fpga_usd", t.fpga_usd);
+        t.years = doc.f64_or("tco.years", t.years);
+        t.usd_per_kwh = doc.f64_or("tco.usd_per_kwh", t.usd_per_kwh);
+
+        let b = &mut self.batching;
+        b.knee_frac = doc.f64_or("batching.knee_frac", b.knee_frac);
+        b.bucket_window_s = doc.f64_or("batching.bucket_window_s", b.bucket_window_s);
+        b.max_audio_s = doc.f64_or("batching.max_audio_s", b.max_audio_s);
+        b.static_batch_max = doc.i64_or("batching.static_batch_max", b.static_batch_max as i64) as usize;
+        b.merge_adjacent = doc.bool_or("batching.merge_adjacent", b.merge_adjacent);
+
+        let d = &mut self.dpu;
+        d.image_cus = doc.i64_or("dpu.image_cus", d.image_cus as i64) as usize;
+        d.audio_mel_cus = doc.i64_or("dpu.audio_mel_cus", d.audio_mel_cus as i64) as usize;
+        d.audio_norm_cus = doc.i64_or("dpu.audio_norm_cus", d.audio_norm_cus as i64) as usize;
+        d.split_audio_cu = doc.bool_or("dpu.split_audio_cu", d.split_audio_cu);
+
+        let w = &mut self.workload;
+        w.seed = doc.i64_or("workload.seed", w.seed as i64) as u64;
+        w.requests = doc.i64_or("workload.requests", w.requests as i64) as usize;
+        w.warmup_frac = doc.f64_or("workload.warmup_frac", w.warmup_frac);
+
+        if let Some(v) = doc.get("artifacts_dir").and_then(toml::Value::as_str) {
+            self.artifacts_dir = v.to_string();
+        }
+        self.validate()
+    }
+
+    /// Sanity-check invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.hardware.cpu_cores > self.hardware.cpu_reserved_cores,
+            "cpu_cores must exceed cpu_reserved_cores");
+        anyhow::ensure!(self.hardware.gpcs >= 1 && self.hardware.gpcs <= 8, "gpcs out of range");
+        anyhow::ensure!((0.5..1.0).contains(&self.batching.knee_frac), "knee_frac must be in [0.5,1)");
+        anyhow::ensure!(self.batching.bucket_window_s > 0.0, "bucket_window_s must be positive");
+        anyhow::ensure!(self.workload.warmup_frac < 0.9, "warmup_frac too large");
+        anyhow::ensure!(self.dpu.image_cus >= 1, "need at least one image CU");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        PrebaConfig::new().validate().unwrap();
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let doc = toml::parse(
+            r#"
+            [hardware]
+            cpu_cores = 64
+            [batching]
+            knee_frac = 0.85
+            merge_adjacent = false
+            [workload]
+            requests = 500
+            artifacts_dir_unused = 1
+            "#,
+        )
+        .unwrap();
+        let mut cfg = PrebaConfig::new();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.hardware.cpu_cores, 64);
+        assert_eq!(cfg.batching.knee_frac, 0.85);
+        assert!(!cfg.batching.merge_adjacent);
+        assert_eq!(cfg.workload.requests, 500);
+        // untouched default survives
+        assert_eq!(cfg.power.gpu_tdp_w, 400.0);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = PrebaConfig::new();
+        cfg.batching.knee_frac = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg2 = PrebaConfig::new();
+        cfg2.hardware.cpu_reserved_cores = 99;
+        assert!(cfg2.validate().is_err());
+    }
+}

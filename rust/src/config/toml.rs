@@ -1,0 +1,261 @@
+//! TOML-subset parser (in lieu of the `toml` crate, absent offline).
+//!
+//! Supports what PREBA config files use: `[section]` / `[a.b]` tables,
+//! `key = value` with string / integer / float / boolean / homogeneous
+//! array values, `#` comments, and bare or quoted keys. No inline tables,
+//! no multi-line strings, no datetimes.
+
+use std::collections::BTreeMap;
+
+/// A TOML scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted-path -> value, e.g. `"mig.peak_tflops"`.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// All keys under a section prefix (e.g. `"preprocess.cpu_ms"`).
+    pub fn section(&self, prefix: &str) -> Vec<(&str, &Value)> {
+        let pfx = format!("{prefix}.");
+        self.entries
+            .iter()
+            .filter(|(k, _)| k.starts_with(&pfx))
+            .map(|(k, v)| (&k[pfx.len()..], v))
+            .collect()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> anyhow::Result<Doc> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                anyhow::bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.to_string();
+        } else if let Some((k, v)) = line.split_once('=') {
+            let key = unquote_key(k.trim());
+            let full = if section.is_empty() { key } else { format!("{section}.{key}") };
+            let value = parse_value(v.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            if doc.entries.insert(full.clone(), value).is_some() {
+                anyhow::bail!("line {}: duplicate key '{full}'", lineno + 1);
+            }
+        } else {
+            anyhow::bail!("line {}: expected 'key = value' or '[section]'", lineno + 1);
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote_key(k: &str) -> String {
+    k.trim_matches('"').to_string()
+}
+
+fn parse_value(v: &str) -> anyhow::Result<Value> {
+    if v.is_empty() {
+        anyhow::bail!("empty value");
+    }
+    if let Some(body) = v.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if v == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = v.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or_else(|| anyhow::anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            for item in split_top_level(trimmed) {
+                items.push(parse_value(item.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    // Number: int if it parses as i64 and has no '.', 'e'.
+    let is_floaty = v.contains('.') || v.contains('e') || v.contains('E');
+    if !is_floaty {
+        if let Ok(i) = v.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(x) = v.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    anyhow::bail!("cannot parse value '{v}'")
+}
+
+/// Split an array body on commas that are not inside strings (nested
+/// arrays are not supported — config arrays are flat).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+            top = 1
+            [server]
+            name = "preba"   # trailing comment
+            cores = 32
+            util = 0.9
+            enabled = true
+            sizes = [1, 2, 4]
+            [mig.a100]
+            tflops = 19.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.i64_or("top", 0), 1);
+        assert_eq!(doc.str_or("server.name", ""), "preba");
+        assert_eq!(doc.i64_or("server.cores", 0), 32);
+        assert_eq!(doc.f64_or("server.util", 0.0), 0.9);
+        assert!(doc.bool_or("server.enabled", false));
+        let arr = doc.get("server.sizes").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(doc.f64_or("mig.a100.tflops", 0.0), 19.5);
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let doc = parse("x = 5").unwrap();
+        assert_eq!(doc.f64_or("x", 0.0), 5.0);
+    }
+
+    #[test]
+    fn section_listing() {
+        let doc = parse("[p]\na = 1\nb = 2\n[q]\nc = 3").unwrap();
+        let keys: Vec<_> = doc.section("p").into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("bare").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("s = \"open").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("s", ""), "a#b");
+    }
+}

@@ -1,0 +1,20 @@
+//! PREBA's FPGA Data Processing Unit (paper §4.2) — scheduling + cost
+//! model, plus the Table-1 resource budget.
+//!
+//! The DPU is latency-optimized for *single-input* batches (so the
+//! downstream batcher keeps full freedom over batch sizes) and gains
+//! throughput via multiple CUs (request-level parallelism). For audio, a
+//! monolithic CU serializes on the Normalize unit's global mean/variance
+//! dependency (Fig 12b); PREBA's split design (Resample+Mel CU, Normalize
+//! CU — Fig 11b/12c) restores pipelining.
+//!
+//! Real compute: the Pallas kernels in `python/compile/kernels/` implement
+//! these exact pipelines and are executed on PJRT by the real driver; this
+//! module provides the timing/occupancy model used by the DES and the
+//! host-side CU scheduler shared by both drivers.
+
+pub mod resources;
+pub mod sched;
+
+pub use resources::{resource_table, ResourceRow};
+pub use sched::{CuKind, Dpu, DpuDesign};

@@ -1,0 +1,356 @@
+//! DPU CU scheduling and timing (paper Fig 11/12).
+
+use crate::clock::{secs, Nanos};
+use crate::config::{DpuConfig, HardwareConfig};
+use crate::models::{ModelId, ModelKind};
+use crate::preprocess::pipeline::{self, StageKind};
+
+/// The CU types the DPU instantiates (Fig 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CuKind {
+    /// All four image units in one CU (sequential dataflow pipelines
+    /// cleanly — Fig 12a).
+    Image,
+    /// Monolithic audio CU: Resample + Mel + Normalize in one CU; the
+    /// Normalize full-input dependency stalls the pipeline (Fig 12b).
+    AudioMonolithic,
+    /// Split design, first CU type: Resample + Mel spectrogram.
+    AudioMel,
+    /// Split design, second CU type: Normalize.
+    AudioNorm,
+}
+
+/// Which audio design the DPU is built with (ablation: Fig 12 b vs c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DpuDesign {
+    Monolithic,
+    Split,
+}
+
+/// Per-CU timing for one single-input request of `len_s` seconds.
+///
+/// * `latency` — time the request occupies the CU output path (sum of the
+///   stages the CU runs).
+/// * `ii` — initiation interval: how long until the CU can accept the
+///   next request. A pipelined CU's II is its slowest stage; a stalled
+///   (monolithic audio) CU's II is its full latency.
+#[derive(Debug, Clone, Copy)]
+pub struct CuTiming {
+    pub latency_s: f64,
+    pub ii_s: f64,
+}
+
+/// Timing of a CU kind for a request of `len_s` (audio) / fixed image.
+pub fn cu_timing(kind: CuKind, len_s: f64) -> CuTiming {
+    let model = match kind {
+        CuKind::Image => ModelId::MobileNet, // any vision id: same pipeline
+        _ => ModelId::CitriNet,              // any audio id: same pipeline
+    };
+    let stage = |k: StageKind| {
+        pipeline::stages_for(model)
+            .iter()
+            .find(|s| s.kind == k)
+            .map(|s| pipeline::stage_secs(model, s, len_s))
+            .expect("stage present")
+    };
+    match kind {
+        CuKind::Image => {
+            let total: f64 = pipeline::stages_for(model)
+                .iter()
+                .map(|s| pipeline::stage_secs(model, s, len_s))
+                .sum();
+            let slowest = pipeline::stages_for(model)
+                .iter()
+                .map(|s| pipeline::stage_secs(model, s, len_s))
+                .fold(0.0, f64::max);
+            CuTiming { latency_s: total, ii_s: slowest }
+        }
+        CuKind::AudioMonolithic => {
+            // Fig 12b: Normalize cannot start until Resample+Mel finished
+            // the WHOLE input, and the next request cannot enter while any
+            // unit is mid-request => II == full latency.
+            let total = stage(StageKind::Resample)
+                + stage(StageKind::MelSpectrogram)
+                + stage(StageKind::NormalizeAudio);
+            CuTiming { latency_s: total, ii_s: total }
+        }
+        CuKind::AudioMel => {
+            let lat = stage(StageKind::Resample) + stage(StageKind::MelSpectrogram);
+            // Resample/Mel stream sample groups (Fig 12c: S_i pipelined),
+            // so the CU initiates the next request after its slowest unit.
+            let ii = stage(StageKind::Resample).max(stage(StageKind::MelSpectrogram));
+            CuTiming { latency_s: lat, ii_s: ii }
+        }
+        CuKind::AudioNorm => {
+            let t = stage(StageKind::NormalizeAudio);
+            CuTiming { latency_s: t, ii_s: t }
+        }
+    }
+}
+
+/// One CU instance's occupancy state.
+#[derive(Debug, Clone)]
+struct Cu {
+    kind: CuKind,
+    /// Earliest time the CU can initiate the next request.
+    next_free: Nanos,
+    busy_ns: u128,
+}
+
+/// The DPU: a set of CU instances + PCIe transfer model.
+#[derive(Debug)]
+pub struct Dpu {
+    cus: Vec<Cu>,
+    design: DpuDesign,
+    dispatch_overhead: Nanos,
+    pcie_latency: Nanos,
+    pcie_gbps: f64,
+    /// Total bytes moved over PCIe (for the bandwidth report, §4.2).
+    pub pcie_bytes: u128,
+    pub served: u64,
+}
+
+impl Dpu {
+    pub fn new(cfg: &DpuConfig, hw: &HardwareConfig) -> Dpu {
+        let design = if cfg.split_audio_cu { DpuDesign::Split } else { DpuDesign::Monolithic };
+        let mut cus = Vec::new();
+        for _ in 0..cfg.image_cus {
+            cus.push(Cu { kind: CuKind::Image, next_free: 0, busy_ns: 0 });
+        }
+        match design {
+            DpuDesign::Split => {
+                for _ in 0..cfg.audio_mel_cus {
+                    cus.push(Cu { kind: CuKind::AudioMel, next_free: 0, busy_ns: 0 });
+                }
+                for _ in 0..cfg.audio_norm_cus {
+                    cus.push(Cu { kind: CuKind::AudioNorm, next_free: 0, busy_ns: 0 });
+                }
+            }
+            DpuDesign::Monolithic => {
+                // Same silicon budget: monolithic CUs replace the mel CUs.
+                for _ in 0..cfg.audio_mel_cus {
+                    cus.push(Cu { kind: CuKind::AudioMonolithic, next_free: 0, busy_ns: 0 });
+                }
+            }
+        }
+        Dpu {
+            cus,
+            design,
+            dispatch_overhead: cfg.cu_dispatch_overhead,
+            pcie_latency: hw.pcie_latency,
+            pcie_gbps: hw.pcie_gbps,
+            pcie_bytes: 0,
+            served: 0,
+        }
+    }
+
+    pub fn design(&self) -> DpuDesign {
+        self.design
+    }
+
+    /// PCIe time to move `bytes` one way.
+    fn xfer(&self, bytes: u64) -> Nanos {
+        self.pcie_latency + secs(bytes as f64 / (self.pcie_gbps * 1e9))
+    }
+
+    /// Earliest-free CU of a kind; returns its index.
+    fn pick(&self, kind: CuKind) -> Option<usize> {
+        self.cus
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.kind == kind)
+            .min_by_key(|(_, c)| c.next_free)
+            .map(|(i, _)| i)
+    }
+
+    /// Run one stage-set on a CU kind: occupy the earliest-free CU,
+    /// starting no earlier than `ready`, return (start, done).
+    fn run_on(&mut self, kind: CuKind, ready: Nanos, len_s: f64) -> (Nanos, Nanos) {
+        let t = cu_timing(kind, len_s);
+        let idx = self.pick(kind).unwrap_or_else(|| panic!("no CU of kind {kind:?}"));
+        let cu = &mut self.cus[idx];
+        let start = ready.max(cu.next_free);
+        let done = start + secs(t.latency_s);
+        cu.next_free = start + secs(t.ii_s);
+        cu.busy_ns += secs(t.ii_s) as u128;
+        (start, done)
+    }
+
+    /// Preprocess one single-input request on the DPU. Returns the time
+    /// the preprocessed tensor is back in host memory.
+    ///
+    /// Timeline: host→DPU PCIe in → CU pipeline (one or two CU types) →
+    /// DPU→host PCIe out (paper: DPU→CPU→GPU; the extra hop is tens of µs
+    /// and modeled in `xfer`).
+    pub fn admit(&mut self, now: Nanos, model: ModelId, len_s: f64) -> Nanos {
+        let spec = model.spec();
+        let in_ready = now + self.dispatch_overhead + self.xfer(spec.raw_input_bytes);
+        let done = match model.kind() {
+            ModelKind::Vision => self.run_on(CuKind::Image, in_ready, len_s).1,
+            ModelKind::Audio => match self.design {
+                DpuDesign::Monolithic => self.run_on(CuKind::AudioMonolithic, in_ready, len_s).1,
+                DpuDesign::Split => {
+                    // Fig 12c: fine-grained scheduling across the two CU
+                    // types — Normalize starts as soon as Mel finishes.
+                    let (_, mel_done) = self.run_on(CuKind::AudioMel, in_ready, len_s);
+                    self.run_on(CuKind::AudioNorm, mel_done, len_s).1
+                }
+            },
+        };
+        self.pcie_bytes += (spec.raw_input_bytes + spec.tensor_bytes) as u128;
+        self.served += 1;
+        done + self.xfer(spec.tensor_bytes)
+    }
+
+    /// Aggregate preprocessing throughput bound for a modality, req/s
+    /// (sum over that modality's bottleneck CU type of 1/II).
+    pub fn capacity_qps(&self, kind: ModelKind, len_s: f64) -> f64 {
+        let per_kind = |k: CuKind| -> f64 {
+            let n = self.cus.iter().filter(|c| c.kind == k).count() as f64;
+            n / cu_timing(k, len_s).ii_s
+        };
+        match kind {
+            ModelKind::Vision => per_kind(CuKind::Image),
+            ModelKind::Audio => match self.design {
+                DpuDesign::Monolithic => per_kind(CuKind::AudioMonolithic),
+                DpuDesign::Split => per_kind(CuKind::AudioMel).min(per_kind(CuKind::AudioNorm)),
+            },
+        }
+    }
+
+    /// Mean CU utilization over `[0, horizon]`.
+    pub fn utilization(&self, horizon: Nanos) -> f64 {
+        if horizon == 0 || self.cus.is_empty() {
+            return 0.0;
+        }
+        let busy: u128 = self.cus.iter().map(|c| c.busy_ns).sum();
+        (busy as f64 / (horizon as f64 * self.cus.len() as f64)).min(1.0)
+    }
+
+    /// Average PCIe bandwidth used over `[0, horizon]`, GB/s (paper §4.2
+    /// reports 6.13 / 0.9 GB/s for MobileNet / CitriNet).
+    pub fn pcie_gbps_used(&self, horizon: Nanos) -> f64 {
+        if horizon == 0 {
+            return 0.0;
+        }
+        self.pcie_bytes as f64 / (horizon as f64 * 1e-9) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::to_millis;
+    use crate::config::{DpuConfig, HardwareConfig};
+
+    fn mk(split: bool) -> Dpu {
+        let mut cfg = DpuConfig::default();
+        cfg.split_audio_cu = split;
+        Dpu::new(&cfg, &HardwareConfig::default())
+    }
+
+    #[test]
+    fn single_input_latency_sub_ms() {
+        let mut dpu = mk(true);
+        let done = dpu.admit(0, ModelId::MobileNet, 0.0);
+        assert!(to_millis(done) < 1.0, "image: {} ms", to_millis(done));
+        let done = dpu.admit(0, ModelId::CitriNet, 2.5);
+        assert!(to_millis(done) < 2.0, "audio: {} ms", to_millis(done));
+    }
+
+    #[test]
+    fn image_cu_pipelines_back_to_back() {
+        // Fig 12a: request X+1 starts while X is in later stages — the
+        // inter-completion gap equals the II (slowest stage), not the
+        // full latency.
+        let mut dpu = mk(true);
+        let d1 = dpu.admit(0, ModelId::MobileNet, 0.0);
+        let d2 = dpu.admit(0, ModelId::MobileNet, 0.0);
+        let d3 = dpu.admit(0, ModelId::MobileNet, 0.0);
+        // CUs are picked earliest-free: with 2 image CUs, reqs 1-2 go to
+        // different CUs; req 3 shares CU with req 1 offset by II.
+        let ii = cu_timing(CuKind::Image, 0.0).ii_s;
+        let lat = cu_timing(CuKind::Image, 0.0).latency_s;
+        assert!(ii < lat);
+        assert!((d3 - d1) as f64 * 1e-9 - ii < 1e-6, "pipelined II");
+        assert_eq!(d1, d2); // parallel CUs
+    }
+
+    #[test]
+    fn monolithic_audio_serializes_split_pipelines() {
+        // Fig 12 b vs c: with the same number of front CUs, inter-
+        // completion time is the full pipeline latency for monolithic but
+        // only the mel II for split.
+        let mut mono = mk(false);
+        let m1 = mono.admit(0, ModelId::CitriNet, 2.5);
+        let m2 = mono.admit(0, ModelId::CitriNet, 2.5);
+        let m3 = mono.admit(0, ModelId::CitriNet, 2.5);
+        let mono_gap = (m3 - m1) as f64 * 1e-9; // same-CU gap
+
+        let mut split = mk(true);
+        let s1 = split.admit(0, ModelId::CitriNet, 2.5);
+        let s2 = split.admit(0, ModelId::CitriNet, 2.5);
+        let s3 = split.admit(0, ModelId::CitriNet, 2.5);
+        let split_gap = (s3 - s1) as f64 * 1e-9;
+
+        assert!(
+            split_gap < mono_gap * 0.98,
+            "split should pipeline: mono_gap={mono_gap} split_gap={split_gap}"
+        );
+        let _ = (m2, s2);
+    }
+
+    #[test]
+    fn split_audio_capacity_exceeds_monolithic() {
+        let split = mk(true);
+        let mono = mk(false);
+        let cs = split.capacity_qps(ModelKind::Audio, 2.5);
+        let cm = mono.capacity_qps(ModelKind::Audio, 2.5);
+        assert!(cs > cm * 1.1, "split {cs} vs mono {cm}");
+    }
+
+    #[test]
+    fn dpu_capacity_covers_ideal_demand() {
+        // The DPU must not be the new bottleneck (paper: PREBA reaches
+        // >91.6% of Ideal for 5/6 models).
+        let dpu = mk(true);
+        // Highest-demand vision model: MobileNet on 1g.5gb(7x).
+        let need_img = 7.0 * ModelId::MobileNet.spec().plateau_qps_per_gpc;
+        assert!(
+            dpu.capacity_qps(ModelKind::Vision, 0.0) >= need_img * 0.9,
+            "image capacity {} vs need {need_img}",
+            dpu.capacity_qps(ModelKind::Vision, 0.0)
+        );
+        // Highest-demand audio model: CitriNet.
+        let need_aud = 7.0 * ModelId::CitriNet.spec().plateau_qps_per_gpc;
+        assert!(
+            dpu.capacity_qps(ModelKind::Audio, 2.5) >= need_aud,
+            "audio capacity {} vs need {need_aud}",
+            dpu.capacity_qps(ModelKind::Audio, 2.5)
+        );
+    }
+
+    #[test]
+    fn pcie_bandwidth_below_gen4_limit() {
+        // Paper §4.2: worst case 6.13 GB/s << 32 GB/s.
+        let mut dpu = mk(true);
+        let qps = 17_500.0;
+        let dt = secs(1.0 / qps);
+        for i in 0..10_000u64 {
+            dpu.admit(i * dt, ModelId::MobileNet, 0.0);
+        }
+        let gbps = dpu.pcie_gbps_used(10_000 * dt);
+        assert!(gbps < 32.0, "PCIe saturated: {gbps}");
+        assert!(gbps > 1.0, "suspiciously low: {gbps}");
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut dpu = mk(true);
+        for i in 0..100u64 {
+            dpu.admit(i * 1000, ModelId::MobileNet, 0.0);
+        }
+        let u = dpu.utilization(secs(1.0));
+        assert!((0.0..=1.0).contains(&u));
+    }
+}

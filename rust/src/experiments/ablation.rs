@@ -1,0 +1,341 @@
+//! Design-choice ablations beyond the paper's Fig 22 (DESIGN.md §7/§8):
+//!
+//! * `merge`  — adjacent-bucket merging on/off (paper §4.3 last paragraph).
+//! * `policy` — the `Time_queue = Time_knee / n_vGPUs` rule vs
+//!   alternatives (full `Time_knee`, near-zero wait) and `knee_frac`
+//!   sensitivity.
+//! * `traffic` — PREBA vs the static baseline under non-stationary
+//!   traffic (diurnal / bursty), where batching hyperparameters matter
+//!   most (§3.2: "input traffic patterns are constantly changing").
+//! * `dpu_granularity` — the paper's §4.2 motivation for SINGLE-INPUT
+//!   DPU batches: a k-batched preprocessing accelerator adds group-fill
+//!   wait and quantizes the downstream batcher's choices.
+
+use crate::config::PrebaConfig;
+use crate::mig::{MigConfig, ServiceModel};
+use crate::models::ModelId;
+use crate::server::{sim_driver, PolicyKind, PreprocMode, SimConfig};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+use crate::workload::RateProfile;
+
+use super::support;
+
+/// Adjacent-bucket merging on/off.
+pub fn run_merge(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Ablation: adjacent-bucket merging (paper §4.3)");
+    let requests = super::default_requests();
+    let mut rows = Vec::new();
+    let mut t = Table::new(&["model", "load", "merge", "QPS", "p95 ms", "mean batch"]);
+    for model in ModelId::AUDIO {
+        // Low load is where merging matters: buckets rarely fill alone.
+        for load_frac in [0.15, 0.5] {
+            let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu).saturating_rate() / 1.25;
+            for merge in [false, true] {
+                let mut sys2 = sys.clone();
+                sys2.batching.merge_adjacent = merge;
+                let out = support::run(
+                    model,
+                    MigConfig::Small7,
+                    PreprocMode::Dpu,
+                    PolicyKind::Dynamic,
+                    7,
+                    cap * load_frac,
+                    requests,
+                    &sys2,
+                );
+                t.row(&[
+                    model.display().to_string(),
+                    format!("{:.0}%", load_frac * 100.0),
+                    merge.to_string(),
+                    num(out.qps()),
+                    num(out.p95_ms()),
+                    num(out.stats.batch_sizes.mean()),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("model", Json::str(model.name())),
+                    ("load", Json::num(load_frac)),
+                    ("merge", Json::Bool(merge)),
+                    ("qps", Json::num(out.qps())),
+                    ("p95_ms", Json::num(out.p95_ms())),
+                    ("mean_batch", Json::num(out.stats.batch_sizes.mean())),
+                ]));
+            }
+        }
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("rows", Json::Arr(rows));
+    rep.finish("abl_merge")
+}
+
+/// Time_queue rule + knee_frac sensitivity.
+pub fn run_policy(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Ablation: Time_queue rule and knee_frac sensitivity");
+    let requests = super::default_requests();
+    let model = ModelId::ConformerDefault;
+    let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu).saturating_rate() / 1.25;
+
+    rep.section("Time_queue rule at 60% load (paper rule: Time_knee / n_vGPUs)");
+    let mut t = Table::new(&["rule", "QPS", "p95 ms", "mean batch", "gpu util %"]);
+    let mut rows = Vec::new();
+    for (label, scale) in [("Time_knee/n (PREBA)", 1.0 / 7.0), ("Time_knee", 1.0), ("~zero wait", 0.01 / 7.0)] {
+        // Scale every bucket's Time_queue off the paper rule.
+        let mut sys2 = sys.clone();
+        let _ = &mut sys2;
+        let out = run_with_time_queue_scale(model, cap * 0.6, scale * 7.0, requests, sys);
+        t.row(&[
+            label.to_string(),
+            num(out.qps()),
+            num(out.p95_ms()),
+            num(out.stats.batch_sizes.mean()),
+            num(out.gpu_util * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("rule", Json::str(label)),
+            ("qps", Json::num(out.qps())),
+            ("p95_ms", Json::num(out.p95_ms())),
+            ("mean_batch", Json::num(out.stats.batch_sizes.mean())),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("time_queue_rules", Json::Arr(rows));
+
+    rep.section("knee_frac sensitivity (Batch_max selection)");
+    let mut t = Table::new(&["knee_frac", "MobileNet knee(1g)", "Swin knee(1g)", "Citri knee@5s"]);
+    let mut rows = Vec::new();
+    for frac in [0.80, 0.90, 0.95] {
+        let mut rng = crate::util::Rng::new(77);
+        let grid = crate::profiler::sweep_batches_dense(256);
+        let mut knee = |m: ModelId, len: f64| {
+            let curve = crate::profiler::profile_curve(m.spec(), 1, len, &grid, 60, &mut rng);
+            crate::profiler::find_knee(&curve, frac).batch
+        };
+        let (a, b, c) = (
+            knee(ModelId::MobileNet, 0.0),
+            knee(ModelId::SwinTransformer, 0.0),
+            knee(ModelId::CitriNet, 5.0),
+        );
+        t.row(&[format!("{frac}"), a.to_string(), b.to_string(), c.to_string()]);
+        rows.push(Json::obj(vec![
+            ("frac", Json::num(frac)),
+            ("mobilenet", Json::num(a as f64)),
+            ("swin", Json::num(b as f64)),
+            ("citrinet_5s", Json::num(c as f64)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("knee_frac", Json::Arr(rows));
+    rep.finish("abl_policy")
+}
+
+/// Helper: run with every bucket's Time_queue scaled (rule ablation).
+fn run_with_time_queue_scale(
+    model: ModelId,
+    rate: f64,
+    n_divisor_override: f64,
+    requests: usize,
+    sys: &PrebaConfig,
+) -> sim_driver::SimOutcome {
+    // The paper rule divides Time_knee by n_vgpus; we emulate other rules
+    // by pretending a different divisor via active_servers in the policy
+    // build. Simplest faithful route: run the standard dynamic policy but
+    // scale static_time_queue via a custom config is not applicable; so
+    // we rebuild via PolicyKind::Dynamic with a modified vGPU count in the
+    // Time_queue derivation only. We approximate by scaling
+    // `bucket_window_s`-independent knob: run with the standard policy
+    // when divisor==7 and with a custom config otherwise.
+    let mut cfg = SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu);
+    cfg.policy = PolicyKind::Dynamic;
+    cfg.requests = requests;
+    cfg.rate_qps = rate;
+    // Encode the rule by overriding the divisor through the seed-free
+    // path: we exploit that Time_queue scales 1/n — setting
+    // `time_queue_divisor` on the config.
+    let mut sys2 = sys.clone();
+    sys2.batching.time_queue_divisor = Some(n_divisor_override);
+    sim_driver::run(&cfg, &sys2)
+}
+
+/// PREBA vs static baseline under non-stationary traffic.
+pub fn run_traffic(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Ablation: traffic shape (constant / diurnal / bursty)");
+    let requests = super::default_requests();
+    let model = ModelId::CitriNet;
+    let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu).saturating_rate() / 1.25;
+    let mean = cap * 0.5;
+    let profiles: [(&str, RateProfile); 3] = [
+        ("constant", RateProfile::Constant { qps: mean }),
+        ("diurnal", RateProfile::Diurnal { base_qps: mean, amplitude: 0.7, period_s: 30.0 }),
+        (
+            "bursty",
+            RateProfile::Bursty {
+                quiet_qps: mean * 0.25,
+                burst_qps: mean * 2.5,
+                mean_quiet_s: 4.0,
+                mean_burst_s: 1.5,
+            },
+        ),
+    ];
+    let mut t = Table::new(&["traffic", "policy", "QPS", "p95 ms", "p99 ms"]);
+    let mut rows = Vec::new();
+    for (name, profile) in profiles {
+        for policy in [PolicyKind::Static, PolicyKind::Dynamic] {
+            let mut cfg = SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu);
+            cfg.policy = policy;
+            cfg.requests = requests;
+            cfg.rate_qps = mean;
+            cfg.profile = Some(profile.clone());
+            let out = sim_driver::run(&cfg, sys);
+            t.row(&[
+                name.to_string(),
+                format!("{policy:?}"),
+                num(out.qps()),
+                num(out.p95_ms()),
+                num(out.stats.e2e_ms.p99()),
+            ]);
+            rows.push(Json::obj(vec![
+                ("traffic", Json::str(name)),
+                ("policy", Json::str(if policy == PolicyKind::Static { "static" } else { "dynamic" })),
+                ("qps", Json::num(out.qps())),
+                ("p95_ms", Json::num(out.p95_ms())),
+            ]));
+        }
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("rows", Json::Arr(rows));
+    rep.finish("abl_traffic")
+}
+
+/// Single-input vs k-batched DPU preprocessing (paper §4.2 motivation).
+pub fn run_dpu_granularity(_sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Ablation: DPU preprocessing granularity (single-input vs k-batched)");
+    rep.section("added preprocessing-stage latency at a 1g.5gb(7x) moderate load");
+    let mut t = Table::new(&["model", "k", "group-fill p95 ms", "flexibility (batch sizes reachable)"]);
+    let mut rows = Vec::new();
+    for model in [ModelId::MobileNet, ModelId::CitriNet] {
+        let sm = ServiceModel::new(model.spec(), 1);
+        let len = if model.kind() == crate::models::ModelKind::Audio { 2.5 } else { 0.0 };
+        let lambda = 0.6 * 7.0 * sm.plateau_qps(len); // offered load
+        let knee = sm.knee(len);
+        for k in [1usize, 4, 16] {
+            // A k-batched DPU releases preprocessed inputs in groups of k:
+            // the first request of a group waits for k-1 more arrivals.
+            // P95 of Erlang(k-1, lambda) ≈ quantile of the gamma.
+            let p95_fill_ms = if k == 1 {
+                0.0
+            } else {
+                // crude gamma quantile: mean + 1.65 * std
+                let mean = (k - 1) as f64 / lambda;
+                let std = ((k - 1) as f64).sqrt() / lambda;
+                (mean + 1.65 * std) * 1e3
+            };
+            // Downstream batcher can only form batches in multiples of k.
+            let reachable = (1..=knee).filter(|b| b % k == 0 || k == 1).count();
+            t.row(&[
+                model.display().to_string(),
+                k.to_string(),
+                num(p95_fill_ms),
+                format!("{reachable}/{knee}"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("model", Json::str(model.name())),
+                ("k", Json::num(k as f64)),
+                ("fill_p95_ms", Json::num(p95_fill_ms)),
+                ("reachable", Json::num(reachable as f64)),
+                ("knee", Json::num(knee as f64)),
+            ]));
+        }
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.row("single-input (k=1) adds zero fill latency and reaches every batch size — the paper's design point.");
+    rep.data("rows", Json::Arr(rows));
+    rep.finish("abl_dpu")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merging_helps_tail_latency_at_low_load() {
+        std::env::set_var("PREBA_FAST", "1");
+        let doc = run_merge(&PrebaConfig::new());
+        let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
+        // At 15% load, for each audio model: merge=true p95 <= merge=false.
+        let mut wins = 0;
+        let mut total = 0;
+        for model in ModelId::AUDIO {
+            let get = |merge: bool| -> f64 {
+                rows.iter()
+                    .find(|r| {
+                        r.get("model").unwrap().as_str() == Some(model.name())
+                            && r.get("load").unwrap().as_f64() == Some(0.15)
+                            && r.get("merge").unwrap().as_bool() == Some(merge)
+                    })
+                    .unwrap()
+                    .get("p95_ms")
+                    .unwrap()
+                    .as_f64()
+                    .unwrap()
+            };
+            total += 1;
+            if get(true) <= get(false) * 1.05 {
+                wins += 1;
+            }
+        }
+        assert!(wins >= total - 1, "merging regressed tails: {wins}/{total}");
+    }
+
+    #[test]
+    fn bursty_traffic_widens_dynamic_advantage() {
+        std::env::set_var("PREBA_FAST", "1");
+        let doc = run_traffic(&PrebaConfig::new());
+        let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
+        let p95 = |traffic: &str, policy: &str| -> f64 {
+            rows.iter()
+                .find(|r| {
+                    r.get("traffic").unwrap().as_str() == Some(traffic)
+                        && r.get("policy").unwrap().as_str() == Some(policy)
+                })
+                .unwrap()
+                .get("p95_ms")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // Dynamic beats static under every traffic shape.
+        for t in ["constant", "diurnal", "bursty"] {
+            assert!(p95(t, "dynamic") < p95(t, "static"), "{t}");
+        }
+    }
+
+    #[test]
+    fn dpu_k1_is_strictly_most_flexible() {
+        let doc = run_dpu_granularity(&PrebaConfig::new());
+        let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
+        for r in rows {
+            let k = r.get("k").unwrap().as_usize().unwrap();
+            let fill = r.get("fill_p95_ms").unwrap().as_f64().unwrap();
+            if k == 1 {
+                assert_eq!(fill, 0.0);
+                assert_eq!(
+                    r.get("reachable").unwrap().as_usize(),
+                    r.get("knee").unwrap().as_usize()
+                );
+            } else {
+                assert!(fill > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Figure 5: model-execution throughput (bars) and GPU utilization (line)
+//! vs per-vGPU batch size, preprocessing disabled, for the three MIG
+//! configurations × six models.
+//!
+//! Paper shape to reproduce: utilization rises monotonically with batch
+//! everywhere, but ramps much faster on 1g.5gb(7x); the fine-grained
+//! partition's *aggregate* plateau exceeds 7g.40gb(1x).
+
+use crate::config::PrebaConfig;
+use crate::mig::MigConfig;
+use crate::models::ModelId;
+use crate::profiler;
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+use crate::util::Rng;
+
+pub fn run(_sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 5: exec throughput + GPU utilization vs batch (preproc off)");
+    let mut rng = Rng::new(5);
+    let batches = profiler::sweep_batches(256);
+
+    for model in ModelId::ALL {
+        rep.section(model.display());
+        let mut t = Table::new(&["config", "batch", "agg QPS", "util %"]);
+        let mut series = Vec::new();
+        for cfg in MigConfig::ALL {
+            let curve = profiler::profile_curve(
+                model.spec(),
+                cfg.gpcs_per_vgpu(),
+                2.5,
+                &batches,
+                40,
+                &mut rng,
+            );
+            for p in &curve {
+                let agg = p.qps * cfg.vgpus() as f64;
+                t.row(&[
+                    cfg.name().to_string(),
+                    p.batch.to_string(),
+                    num(agg),
+                    num(p.util * 100.0),
+                ]);
+                series.push(Json::obj(vec![
+                    ("config", Json::str(cfg.name())),
+                    ("batch", Json::num(p.batch as f64)),
+                    ("agg_qps", Json::num(agg)),
+                    ("util", Json::num(p.util)),
+                ]));
+            }
+        }
+        for line in t.render() {
+            rep.row(&line);
+        }
+        rep.data(model.name(), Json::Arr(series));
+    }
+
+    // Headline check rows: small-slice aggregate vs full GPU at plateau.
+    rep.section("aggregate plateau: 1g.5gb(7x) vs 7g.40gb(1x)");
+    let mut t = Table::new(&["model", "7x1g QPS", "1x7g QPS", "ratio"]);
+    for model in ModelId::ALL {
+        let small = crate::mig::ServiceModel::new(model.spec(), 1).plateau_qps(2.5) * 7.0;
+        let full = crate::mig::ServiceModel::new(model.spec(), 7).plateau_qps(2.5);
+        t.row(&[model.display().to_string(), num(small), num(full), num(small / full)]);
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.finish("fig05")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports_all_models() {
+        let doc = run(&PrebaConfig::new());
+        let data = doc.get("data").unwrap();
+        for m in ModelId::ALL {
+            assert!(data.get(m.name()).is_some(), "{m}");
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Figure 6: throughput (bars) + p95 latency (line) vs batch size with the
+//! Batch_knee marker, per MIG config × model, preprocessing disabled.
+//!
+//! Paper shape: throughput plateaus, then tail latency spikes with small
+//! batch increases; knees at 16/4/2 (1g) and 128/32/16 (7g) for
+//! MobileNet/SqueezeNet/Swin.
+
+use crate::config::PrebaConfig;
+use crate::mig::MigConfig;
+use crate::models::ModelId;
+use crate::profiler;
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+use crate::util::Rng;
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 6: throughput + tail latency vs batch; Batch_knee markers");
+    let mut rng = Rng::new(6);
+    let batches = profiler::sweep_batches(256);
+
+    let mut knees = Vec::new();
+    for model in ModelId::ALL {
+        rep.section(model.display());
+        let mut t = Table::new(&["config", "batch", "agg QPS", "p95 ms", "knee?"]);
+        for cfg in MigConfig::ALL {
+            let curve = profiler::profile_curve(
+                model.spec(),
+                cfg.gpcs_per_vgpu(),
+                2.5,
+                &batches,
+                60,
+                &mut rng,
+            );
+            let knee = profiler::find_knee(&curve, sys.batching.knee_frac);
+            knees.push(Json::obj(vec![
+                ("model", Json::str(model.name())),
+                ("config", Json::str(cfg.name())),
+                ("knee_batch", Json::num(knee.batch as f64)),
+                ("knee_p95_ms", Json::num(knee.p95_ms)),
+            ]));
+            for p in &curve {
+                t.row(&[
+                    cfg.name().to_string(),
+                    p.batch.to_string(),
+                    num(p.qps * cfg.vgpus() as f64),
+                    num(p.p95_ms),
+                    if p.batch == knee.batch { "<-- knee".to_string() } else { String::new() },
+                ]);
+            }
+        }
+        for line in t.render() {
+            rep.row(&line);
+        }
+    }
+    rep.data("knees", Json::Arr(knees));
+    rep.finish("fig06")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knees_match_paper_vision_values() {
+        let doc = run(&PrebaConfig::new());
+        let knees = doc.get("data").unwrap().get("knees").unwrap().as_arr().unwrap();
+        let find = |m: &str, c: &str| -> usize {
+            knees
+                .iter()
+                .find(|k| {
+                    k.get("model").unwrap().as_str() == Some(m)
+                        && k.get("config").unwrap().as_str() == Some(c)
+                })
+                .unwrap()
+                .get("knee_batch")
+                .unwrap()
+                .as_usize()
+                .unwrap()
+        };
+        assert_eq!(find("mobilenet", "1g.5gb(7x)"), 16);
+        assert_eq!(find("squeezenet", "1g.5gb(7x)"), 4);
+        assert_eq!(find("swin", "1g.5gb(7x)"), 2);
+        assert_eq!(find("mobilenet", "7g.40gb(1x)"), 128);
+        assert_eq!(find("squeezenet", "7g.40gb(1x)"), 32);
+        assert_eq!(find("swin", "7g.40gb(1x)"), 16);
+    }
+}

@@ -1,0 +1,96 @@
+//! Figure 7: average-latency breakdown when 1g.5gb(7x) and 7g.40gb(1x)
+//! are each configured with the Batch_max that sustains the SAME
+//! end-to-end throughput (preprocessing disabled).
+//!
+//! Paper shape: the small-slice configuration spends far less time in the
+//! "Batching" stage because its Batch_max is much smaller.
+
+use crate::config::PrebaConfig;
+use crate::mig::MigConfig;
+use crate::models::ModelId;
+use crate::server::{PolicyKind, PreprocMode};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+use super::support;
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 7: latency breakdown at iso-throughput, 1g(7x) vs 7g(1x)");
+    let requests = super::default_requests();
+    let mut data = Vec::new();
+
+    for model in ModelId::ALL {
+        rep.section(model.display());
+        // Iso-throughput point: 80% of the weaker config's saturated QPS.
+        let sat_small = support::saturated_qps(
+            model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic, 7, requests, sys,
+        )
+        .qps();
+        let sat_full = support::saturated_qps(
+            model, MigConfig::Full1, PreprocMode::Ideal, PolicyKind::Dynamic, 1, requests, sys,
+        )
+        .qps();
+        let rate = 0.8 * sat_small.min(sat_full);
+
+        let mut t = Table::new(&["config", "QPS", "batching ms", "dispatch ms", "exec ms", "total ms"]);
+        for cfg in [MigConfig::Small7, MigConfig::Full1] {
+            let out = support::run(
+                model, cfg, PreprocMode::Ideal, PolicyKind::Dynamic, cfg.vgpus(), rate, requests, sys,
+            );
+            let (_pre, bat, disp, exec) = out.stats.breakdown_ms();
+            t.row(&[
+                cfg.name().to_string(),
+                num(out.qps()),
+                num(bat),
+                num(disp),
+                num(exec),
+                num(out.stats.mean_ms()),
+            ]);
+            data.push(Json::obj(vec![
+                ("model", Json::str(model.name())),
+                ("config", Json::str(cfg.name())),
+                ("qps", Json::num(out.qps())),
+                ("batching_ms", Json::num(bat)),
+                ("exec_ms", Json::num(exec)),
+                ("total_ms", Json::num(out.stats.mean_ms())),
+            ]));
+        }
+        for line in t.render() {
+            rep.row(&line);
+        }
+    }
+    rep.data("rows", Json::Arr(data));
+    rep.finish("fig07")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_slices_spend_less_time_batching() {
+        std::env::set_var("PREBA_FAST", "1");
+        let doc = run(&PrebaConfig::new());
+        let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
+        // For MobileNet, batching time on 1g(7x) must be below 7g(1x).
+        let get = |cfg: &str| -> f64 {
+            rows.iter()
+                .find(|r| {
+                    r.get("model").unwrap().as_str() == Some("mobilenet")
+                        && r.get("config").unwrap().as_str() == Some(cfg)
+                })
+                .unwrap()
+                .get("batching_ms")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert!(
+            get("1g.5gb(7x)") < get("7g.40gb(1x)"),
+            "batching {} vs {}",
+            get("1g.5gb(7x)"),
+            get("7g.40gb(1x)")
+        );
+    }
+}

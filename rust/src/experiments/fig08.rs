@@ -1,0 +1,94 @@
+//! Figure 8: end-to-end throughput with vs without CPU data preprocessing
+//! on 1g.5gb(7x) (left axis), and the minimum CPU cores required for
+//! preprocessing alone to sustain the full model-execution throughput
+//! (right axis — CitriNet: 393 cores).
+
+use crate::config::PrebaConfig;
+use crate::mig::MigConfig;
+use crate::models::ModelId;
+use crate::server::{PolicyKind, PreprocMode};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+use super::support;
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 8: preprocessing bottleneck on 1g.5gb(7x)");
+    let requests = super::default_requests();
+
+    let mut t = Table::new(&[
+        "model", "ideal QPS", "w/ CPU preproc QPS", "drop %", "cores required",
+    ]);
+    let mut rows = Vec::new();
+    let mut drops = Vec::new();
+    // The paper's characterization fixes audio inputs at 2.5 s (S3).
+    const LEN: f64 = 2.5;
+    for model in ModelId::ALL {
+        let ideal = support::saturated_qps_fixed_len(
+            model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic, 7, LEN, requests, sys,
+        )
+        .qps();
+        let cpu = support::saturated_qps_fixed_len(
+            model, MigConfig::Small7, PreprocMode::Cpu, PolicyKind::Dynamic, 7, LEN, requests, sys,
+        )
+        .qps();
+        // Cores needed for preprocessing alone to sustain the model-
+        // execution stage's MAXIMUM throughput (the gray bars = the
+        // plateau of all seven slices; paper right axis).
+        let per_req = model.spec().cpu_preproc_secs(match model.kind() {
+            crate::models::ModelKind::Vision => 0.0,
+            crate::models::ModelKind::Audio => LEN,
+        });
+        let plateau =
+            7.0 * crate::mig::ServiceModel::new(model.spec(), 1).plateau_qps(LEN);
+        let cores = plateau * per_req;
+        let drop = 100.0 * (1.0 - cpu / ideal);
+        drops.push(drop);
+        t.row(&[
+            model.display().to_string(),
+            num(ideal),
+            num(cpu),
+            num(drop),
+            num(cores),
+        ]);
+        rows.push(Json::obj(vec![
+            ("model", Json::str(model.name())),
+            ("ideal_qps", Json::num(ideal)),
+            ("cpu_qps", Json::num(cpu)),
+            ("drop_pct", Json::num(drop)),
+            ("cores_required", Json::num(cores)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    let avg_drop = drops.iter().sum::<f64>() / drops.len() as f64;
+    rep.row(&format!("average throughput drop: {:.1}% (paper: 75.6%)", avg_drop));
+    rep.data("rows", Json::Arr(rows));
+    rep.data("avg_drop_pct", Json::num(avg_drop));
+    rep.finish("fig08")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn citrinet_needs_hundreds_of_cores_and_throughput_collapses() {
+        std::env::set_var("PREBA_FAST", "1");
+        let doc = run(&PrebaConfig::new());
+        let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
+        let citrinet = rows
+            .iter()
+            .find(|r| r.get("model").unwrap().as_str() == Some("citrinet"))
+            .unwrap();
+        let cores = citrinet.get("cores_required").unwrap().as_f64().unwrap();
+        // Paper: "a staggering 393 preprocessing CPU cores".
+        assert!((cores - 393.0).abs() < 25.0, "cores={cores}");
+        let drop = citrinet.get("drop_pct").unwrap().as_f64().unwrap();
+        assert!(drop > 60.0, "drop={drop}");
+        let avg = doc.get("data").unwrap().get("avg_drop_pct").unwrap().as_f64().unwrap();
+        assert!((50.0..95.0).contains(&avg), "avg drop {avg} out of paper band");
+    }
+}

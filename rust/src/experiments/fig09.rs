@@ -1,0 +1,83 @@
+//! Figure 9: throughput (left) and CPU utilization (right) as a function
+//! of the number of inference servers activated within 1g.5gb(7x).
+//!
+//! Paper shape: CPU utilization saturates ~90% with only a few servers;
+//! throughput stops scaling beyond that point while the idle vGPUs starve.
+
+use crate::config::PrebaConfig;
+use crate::mig::MigConfig;
+use crate::models::ModelId;
+use crate::server::{PolicyKind, PreprocMode};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+use super::support;
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 9: scaling active servers under CPU preprocessing");
+    let requests = super::default_requests();
+    let mut all = Vec::new();
+
+    for model in ModelId::ALL {
+        rep.section(model.display());
+        let mut t = Table::new(&["servers", "QPS", "CPU util %"]);
+        for servers in 1..=7usize {
+            // S3 protocol: audio inputs fixed at 2.5 s.
+            let out = support::saturated_qps_fixed_len(
+                model,
+                MigConfig::Small7,
+                PreprocMode::Cpu,
+                PolicyKind::Dynamic,
+                servers,
+                2.5,
+                requests,
+                sys,
+            );
+            t.row(&[servers.to_string(), num(out.qps()), num(out.cpu_util * 100.0)]);
+            all.push(Json::obj(vec![
+                ("model", Json::str(model.name())),
+                ("servers", Json::num(servers as f64)),
+                ("qps", Json::num(out.qps())),
+                ("cpu_util", Json::num(out.cpu_util)),
+            ]));
+        }
+        for line in t.render() {
+            rep.row(&line);
+        }
+    }
+    rep.data("rows", Json::Arr(all));
+    rep.finish("fig09")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_saturates_and_throughput_flattens() {
+        std::env::set_var("PREBA_FAST", "1");
+        let doc = run(&PrebaConfig::new());
+        let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
+        let get = |m: &str, s: usize, k: &str| -> f64 {
+            rows.iter()
+                .find(|r| {
+                    r.get("model").unwrap().as_str() == Some(m)
+                        && r.get("servers").unwrap().as_usize() == Some(s)
+                })
+                .unwrap()
+                .get(k)
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // CitriNet: CPU saturated already with 1-2 servers.
+        assert!(get("citrinet", 2, "cpu_util") > 0.85);
+        // Throughput gain from 4 -> 7 servers is marginal once saturated.
+        let q4 = get("citrinet", 4, "qps");
+        let q7 = get("citrinet", 7, "qps");
+        assert!(q7 < q4 * 1.25, "q4={q4} q7={q7}");
+        // MobileNet: also preprocessing-bound well below 7 servers.
+        assert!(get("mobilenet", 7, "cpu_util") > 0.85);
+    }
+}

@@ -1,0 +1,90 @@
+//! Figure 12: DPU execution timelines — (a) the image CU pipelines
+//! consecutive requests; (b) a monolithic audio CU serializes on the
+//! Normalize unit's full-input dependency; (c) PREBA's split CU design
+//! restores pipelining.
+
+use crate::clock::to_millis;
+use crate::config::{DpuConfig, PrebaConfig};
+use crate::dpu::{sched::cu_timing, CuKind, Dpu};
+use crate::models::ModelId;
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 12: DPU CU pipelining — image; audio monolithic vs split");
+
+    // (a) image: inter-completion gap == slowest-stage II, not latency.
+    rep.section("(a) image CU, 4 back-to-back requests (1 CU)");
+    let mut cfg1 = DpuConfig::default();
+    cfg1.image_cus = 1;
+    let mut dpu = Dpu::new(&cfg1, &sys.hardware);
+    let mut t = Table::new(&["req", "done ms"]);
+    let mut img_done = Vec::new();
+    for i in 0..4 {
+        let d = dpu.admit(0, ModelId::MobileNet, 0.0);
+        t.row(&[i.to_string(), num(to_millis(d))]);
+        img_done.push(d);
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    let img_gap = to_millis(img_done[3] - img_done[2]);
+    let img_lat = cu_timing(CuKind::Image, 0.0).latency_s * 1e3;
+    rep.row(&format!(
+        "steady-state gap {img_gap:.3} ms << single-request pipeline {img_lat:.3} ms (pipelined)"
+    ));
+
+    // (b)/(c) audio.
+    let run_audio = |split: bool| -> Vec<u64> {
+        let mut cfg = DpuConfig::default();
+        cfg.split_audio_cu = split;
+        cfg.audio_mel_cus = 1;
+        cfg.audio_norm_cus = 1;
+        let mut dpu = Dpu::new(&cfg, &sys.hardware);
+        (0..4).map(|_| dpu.admit(0, ModelId::CitriNet, 2.5)).collect()
+    };
+    let mono = run_audio(false);
+    let split = run_audio(true);
+
+    rep.section("(b) monolithic audio CU vs (c) split CUs, 4 requests @2.5 s");
+    let mut t = Table::new(&["req", "mono done ms", "split done ms"]);
+    for i in 0..4 {
+        t.row(&[i.to_string(), num(to_millis(mono[i])), num(to_millis(split[i]))]);
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    let mono_gap = to_millis(mono[3] - mono[2]);
+    let split_gap = to_millis(split[3] - split[2]);
+    rep.row(&format!(
+        "steady-state gap: monolithic {mono_gap:.3} ms vs split {split_gap:.3} ms ({}x better utilization)",
+        crate::util::round_to(mono_gap / split_gap, 2)
+    ));
+
+    rep.data(
+        "gaps_ms",
+        Json::obj(vec![
+            ("image", Json::num(img_gap)),
+            ("audio_monolithic", Json::num(mono_gap)),
+            ("audio_split", Json::num(split_gap)),
+        ]),
+    );
+    rep.finish("fig12")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_gap_beats_monolithic() {
+        let doc = run(&PrebaConfig::new());
+        let gaps = doc.get("data").unwrap().get("gaps_ms").unwrap();
+        let mono = gaps.get("audio_monolithic").unwrap().as_f64().unwrap();
+        let split = gaps.get("audio_split").unwrap().as_f64().unwrap();
+        assert!(split < mono, "split {split} !< mono {mono}");
+        let img = gaps.get("image").unwrap().as_f64().unwrap();
+        assert!(img < 0.2, "image gap should be ~II: {img}");
+    }
+}

@@ -1,0 +1,56 @@
+//! Figure 13: histogram of LibriSpeech audio input lengths — the
+//! distribution the workload generator draws from.
+
+use crate::config::PrebaConfig;
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+use crate::util::Rng;
+use crate::workload::sample_librispeech_len;
+
+pub fn run(_sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 13: LibriSpeech-shaped audio length histogram");
+    let mut rng = Rng::new(13);
+    let mut h = Histogram::new(0.0, 25.0, 10); // 2.5 s buckets, like Fig 16
+    let n = 100_000;
+    for _ in 0..n {
+        h.add(sample_librispeech_len(&mut rng));
+    }
+    rep.section("2.5 s buckets");
+    let mut rows = Vec::new();
+    let max = h.bins().iter().copied().max().unwrap() as f64;
+    for (center, count) in h.rows() {
+        let bar = "#".repeat(((count as f64 / max) * 50.0) as usize);
+        rep.row(&format!(
+            "[{:>4.1}-{:>4.1} s) {:>7} {}",
+            center - 1.25,
+            center + 1.25,
+            count,
+            bar
+        ));
+        rows.push(Json::obj(vec![
+            ("center_s", Json::num(center)),
+            ("count", Json::num(count as f64)),
+        ]));
+    }
+    rep.data("bins", Json::Arr(rows));
+    rep.finish("fig13")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_is_unimodal_in_the_body_with_short_mode() {
+        let doc = run(&PrebaConfig::new());
+        let bins = doc.get("data").unwrap().get("bins").unwrap().as_arr().unwrap();
+        let counts: Vec<f64> =
+            bins.iter().map(|b| b.get("count").unwrap().as_f64().unwrap()).collect();
+        assert_eq!(counts.len(), 10);
+        // Peak in the 10-17.5 s region (bins 4-6), tail small.
+        let peak = counts.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert!((3..=6).contains(&peak), "peak bin {peak}");
+        assert!(counts[9] < counts[peak] * 0.5);
+    }
+}

@@ -1,0 +1,84 @@
+//! Figure 14: tail-latency heat map over (batch size × audio length) for
+//! Conformer(default) on 1g.5gb(7x) and 7g.40gb(1x). The Batch_knee ridge
+//! is where the color transitions (paper: green -> yellow at ~35 ms).
+
+use crate::config::PrebaConfig;
+use crate::mig::{MigConfig, ServiceModel};
+use crate::models::ModelId;
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+
+pub fn run(_sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 14: p95 latency heatmap, batch x audio length, Conformer(default)");
+    let model = ModelId::ConformerDefault;
+    let batches: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 64];
+    let lens: Vec<f64> = (1..=10).map(|i| i as f64 * 2.5).collect();
+    let mut grids = Vec::new();
+
+    for cfg in [MigConfig::Small7, MigConfig::Full1] {
+        rep.section(&format!("{} (rows: length s, cols: batch; cell: mean exec ms)", cfg.name()));
+        let sm = ServiceModel::new(model.spec(), cfg.gpcs_per_vgpu());
+        let header = batches.iter().map(|b| format!("{b:>7}")).collect::<Vec<_>>().join("");
+        rep.row(&format!("  len\\b {header}"));
+        let mut cells = Vec::new();
+        for &len in &lens {
+            let mut line = format!("{len:>6.1} ");
+            for &b in &batches {
+                let ms = sm.exec_secs(b, len) * 1e3;
+                // Color-class the cell like the heatmap: <35 "ok",
+                // 35-70 "knee", >70 "hot".
+                let mark = if ms < 35.0 {
+                    '.'
+                } else if ms < 70.0 {
+                    'o'
+                } else {
+                    'X'
+                };
+                line.push_str(&format!("{:>6.0}{mark}", ms));
+                cells.push(Json::obj(vec![
+                    ("config", Json::str(cfg.name())),
+                    ("len_s", Json::num(len)),
+                    ("batch", Json::num(b as f64)),
+                    ("ms", Json::num(ms)),
+                ]));
+            }
+            rep.row(&line);
+        }
+        let knees: Vec<String> =
+            lens.iter().map(|&l| format!("{}@{l}s", sm.knee(l))).collect();
+        rep.row(&format!("Batch_knee ridge: {}", knees.join(", ")));
+        grids.push(Json::Arr(cells));
+    }
+    rep.data("grid_small7", grids.remove(0));
+    rep.data("grid_full1", grids.remove(0));
+    rep.finish("fig14")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knee_ridge_shifts_down_with_length_and_up_with_gpcs() {
+        let _ = run(&PrebaConfig::new());
+        let m = ModelId::ConformerDefault.spec();
+        let sm1 = ServiceModel::new(m, 1);
+        let sm7 = ServiceModel::new(m, 7);
+        assert!(sm1.knee(25.0) < sm1.knee(2.5));
+        assert!(sm7.knee(5.0) > sm1.knee(5.0));
+        // Latency at the ridge is ~35 ms wherever the knee is a real
+        // batch (>= 2); at the batch=1 floor the single-input time rules
+        // (the yellow batch-1 cells at the top of paper Fig 14a).
+        for sm in [&sm1, &sm7] {
+            for len in [5.0, 12.5, 25.0] {
+                let knee = sm.knee(len);
+                let ms = sm.exec_secs(knee, len) * 1e3;
+                if knee >= 2 {
+                    assert!((ms - 35.0).abs() < 10.0, "ridge at {ms} ms");
+                } else {
+                    assert!(ms > 25.0, "batch-1 floor below Time_knee: {ms}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Figure 15: tail latency vs batch size for CitriNet and the two
+//! Conformers on 1g.5gb(7x) at 5 / 15 / 25 s input lengths.
+//!
+//! Key observation to reproduce: the tail latency AT the knee
+//! (`Time_knee`) is ~constant (~35 ms) regardless of input length, even
+//! though the knee batch itself shifts.
+
+use crate::config::PrebaConfig;
+use crate::models::ModelId;
+use crate::profiler;
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+use crate::util::Rng;
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 15: tail latency vs batch at 5/15/25 s; Time_knee ~ const");
+    let mut rng = Rng::new(15);
+    // Dense grid: locating the knee precisely is the whole point here.
+    let batches = profiler::sweep_batches_dense(128);
+    let mut knees = Vec::new();
+
+    for model in ModelId::AUDIO {
+        rep.section(model.display());
+        let mut t = Table::new(&["len s", "batch", "p95 ms", "knee?"]);
+        for len in [5.0, 15.0, 25.0] {
+            let curve = profiler::profile_curve(model.spec(), 1, len, &batches, 60, &mut rng);
+            let knee = profiler::find_knee(&curve, sys.batching.knee_frac);
+            for p in &curve {
+                if p.batch > knee.batch * 4 {
+                    break; // the paper's plots stop shortly past the knee
+                }
+                t.row(&[
+                    num(len),
+                    p.batch.to_string(),
+                    num(p.p95_ms),
+                    if p.batch == knee.batch { "<-- knee".into() } else { String::new() },
+                ]);
+            }
+            knees.push(Json::obj(vec![
+                ("model", Json::str(model.name())),
+                ("len_s", Json::num(len)),
+                ("knee_batch", Json::num(knee.batch as f64)),
+                ("time_knee_ms", Json::num(knee.p95_ms)),
+            ]));
+        }
+        for line in t.render() {
+            rep.row(&line);
+        }
+    }
+    rep.data("knees", Json::Arr(knees));
+    rep.finish("fig15")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_knee_constant_at_35ms_across_lengths() {
+        let doc = run(&PrebaConfig::new());
+        let knees = doc.get("data").unwrap().get("knees").unwrap().as_arr().unwrap();
+        assert_eq!(knees.len(), 9); // 3 models x 3 lengths
+        for k in knees {
+            let knee_b = k.get("knee_batch").unwrap().as_usize().unwrap();
+            if knee_b < 2 {
+                // batch=1 floor: single-input time legitimately exceeds
+                // Time_knee for long inputs on a 1g slice (Fig 14a).
+                continue;
+            }
+            let t = k.get("time_knee_ms").unwrap().as_f64().unwrap();
+            assert!(
+                (t - 35.0).abs() < 14.0,
+                "{}: Time_knee {t} ms drifted from 35 ms",
+                k.get("model").unwrap().as_str().unwrap()
+            );
+        }
+        // Knee batch shrinks as length grows (per model).
+        for m in ModelId::AUDIO {
+            let get = |len: f64| -> usize {
+                knees
+                    .iter()
+                    .find(|k| {
+                        k.get("model").unwrap().as_str() == Some(m.name())
+                            && k.get("len_s").unwrap().as_f64() == Some(len)
+                    })
+                    .unwrap()
+                    .get("knee_batch")
+                    .unwrap()
+                    .as_usize()
+                    .unwrap()
+            };
+            assert!(get(5.0) >= get(25.0), "{m}");
+        }
+    }
+}

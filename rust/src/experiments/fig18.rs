@@ -1,0 +1,89 @@
+//! Figure 18: throughput vs tail-latency curves for the three designs on
+//! 1g.5gb(7x).
+//!
+//! Paper shape: the CPU baseline's tail latency explodes at a much lower
+//! throughput; PREBA tracks Ideal closely (5 of 6 models).
+
+use crate::config::PrebaConfig;
+use crate::mig::MigConfig;
+use crate::models::ModelId;
+use crate::server::{PolicyKind, PreprocMode, SimConfig};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+use super::support;
+
+/// Load fractions of the ideal capacity to sweep.
+const FRACS: [f64; 7] = [0.1, 0.25, 0.4, 0.55, 0.7, 0.85, 1.0];
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 18: throughput vs p95 latency (Ideal / DPU / CPU)");
+    let requests = super::default_requests();
+    let mut rows = Vec::new();
+
+    for model in ModelId::ALL {
+        rep.section(model.display());
+        let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Ideal).saturating_rate() / 1.25;
+        let mut t = Table::new(&["design", "offered QPS", "achieved QPS", "p95 ms"]);
+        for preproc in [PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu] {
+            for frac in FRACS {
+                let rate = cap * frac;
+                let out = support::run(
+                    model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, rate, requests, sys,
+                );
+                t.row(&[
+                    preproc.label().to_string(),
+                    num(rate),
+                    num(out.qps()),
+                    num(out.p95_ms()),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("model", Json::str(model.name())),
+                    ("design", Json::str(preproc.label())),
+                    ("offered", Json::num(rate)),
+                    ("qps", Json::num(out.qps())),
+                    ("p95_ms", Json::num(out.p95_ms())),
+                ]));
+            }
+        }
+        for line in t.render() {
+            rep.row(&line);
+        }
+    }
+    rep.data("rows", Json::Arr(rows));
+    rep.finish("fig18")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_tail_explodes_before_preba() {
+        std::env::set_var("PREBA_FAST", "1");
+        let doc = run(&PrebaConfig::new());
+        let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
+        // At 70% of capacity for Conformer(default): CPU's p95 must be far
+        // above the DPU's.
+        let get = |design: &str| -> f64 {
+            rows.iter()
+                .filter(|r| {
+                    r.get("model").unwrap().as_str() == Some("conformer_default")
+                        && r.get("design").unwrap().as_str() == Some(design)
+                })
+                .map(|r| {
+                    (
+                        r.get("offered").unwrap().as_f64().unwrap(),
+                        r.get("p95_ms").unwrap().as_f64().unwrap(),
+                    )
+                })
+                .filter(|(o, _)| *o > 0.0)
+                .collect::<Vec<_>>()[4] // 0.7 fraction
+                .1
+        };
+        let cpu = get("Preprocessing (CPU)");
+        let dpu = get("Preprocessing (DPU)");
+        assert!(cpu > 3.0 * dpu, "cpu p95 {cpu} vs dpu p95 {dpu}");
+    }
+}

@@ -1,0 +1,89 @@
+//! Figure 19: end-to-end latency breakdown (preprocess / batch / queue /
+//! execute) for SqueezeNet and Conformer(default) under the Fig 18 sweep.
+//!
+//! Paper numbers to reproduce in shape: preprocessing is 53% (SqueezeNet)
+//! and 72% (Conformer) of baseline inference time; PREBA removes it.
+
+use crate::config::PrebaConfig;
+use crate::mig::MigConfig;
+use crate::models::ModelId;
+use crate::server::{PolicyKind, PreprocMode, SimConfig};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+use super::support;
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 19: latency breakdown (SqueezeNet / Conformer(default))");
+    let requests = super::default_requests();
+    let mut rows = Vec::new();
+
+    for model in [ModelId::SqueezeNet, ModelId::ConformerDefault] {
+        rep.section(model.display());
+        // Moderate load so queues are realistic but stable for Ideal/DPU.
+        let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Ideal).saturating_rate() / 1.25;
+        let rate = 0.55 * cap;
+        let mut t =
+            Table::new(&["design", "preproc ms", "batch ms", "queue ms", "exec ms", "pre %"]);
+        for preproc in [PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu] {
+            let out = support::run(
+                model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, rate, requests, sys,
+            );
+            let (pre, bat, disp, exec) = out.stats.breakdown_ms();
+            let total = pre + bat + disp + exec;
+            t.row(&[
+                preproc.label().to_string(),
+                num(pre),
+                num(bat),
+                num(disp),
+                num(exec),
+                num(100.0 * pre / total),
+            ]);
+            rows.push(Json::obj(vec![
+                ("model", Json::str(model.name())),
+                ("design", Json::str(preproc.label())),
+                ("preproc_ms", Json::num(pre)),
+                ("batching_ms", Json::num(bat)),
+                ("queue_ms", Json::num(disp)),
+                ("exec_ms", Json::num(exec)),
+                ("preproc_frac", Json::num(pre / total)),
+            ]));
+        }
+        for line in t.render() {
+            rep.row(&line);
+        }
+    }
+    rep.data("rows", Json::Arr(rows));
+    rep.finish("fig19")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_dominated_by_preprocessing_preba_not() {
+        std::env::set_var("PREBA_FAST", "1");
+        let doc = run(&PrebaConfig::new());
+        let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
+        let frac = |m: &str, d: &str| -> f64 {
+            rows.iter()
+                .find(|r| {
+                    r.get("model").unwrap().as_str() == Some(m)
+                        && r.get("design").unwrap().as_str() == Some(d)
+                })
+                .unwrap()
+                .get("preproc_frac")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // Paper: 53% / 72% of baseline time is preprocessing.
+        assert!(frac("squeezenet", "Preprocessing (CPU)") > 0.35);
+        assert!(frac("conformer_default", "Preprocessing (CPU)") > 0.5);
+        // PREBA: preprocessing nearly vanishes from the breakdown.
+        assert!(frac("squeezenet", "Preprocessing (DPU)") < 0.15);
+        assert!(frac("conformer_default", "Preprocessing (DPU)") < 0.15);
+    }
+}

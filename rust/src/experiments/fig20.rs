@@ -1,0 +1,110 @@
+//! Figure 20: system power breakdown (left) and energy-efficiency
+//! (Perf/Watt, right) for baseline vs PREBA.
+//!
+//! Paper observations to reproduce: PREBA cuts CPU power (~35%), raises
+//! GPU power (utilization up, ~2.8× for audio), adds FPGA power, and still
+//! improves system energy-efficiency ~3.5× on average.
+
+use crate::config::PrebaConfig;
+use crate::metrics::PowerModel;
+use crate::mig::MigConfig;
+use crate::models::ModelId;
+use crate::server::{PolicyKind, PreprocMode};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+use super::support;
+
+/// Component utilizations + throughput for one design point.
+pub fn measure(
+    model: ModelId,
+    preproc: PreprocMode,
+    requests: usize,
+    sys: &PrebaConfig,
+) -> (f64, crate::metrics::PowerBreakdown) {
+    let out = support::saturated_qps(
+        model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, requests, sys,
+    );
+    // Host CPU: preprocessing pool + the serving reserve.
+    let reserve = sys.hardware.cpu_reserved_cores as f64 / sys.hardware.cpu_cores as f64;
+    let pool_frac = 1.0 - reserve;
+    let cpu_util = reserve + pool_frac * out.cpu_util;
+    let pm = PowerModel::new(&sys.power);
+    let fpga = match preproc {
+        PreprocMode::Dpu => out.dpu_util,
+        _ => None,
+    };
+    (out.qps(), pm.power(cpu_util, out.gpu_util, fpga))
+}
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 20: power breakdown + energy efficiency");
+    let requests = super::default_requests();
+    let pm = PowerModel::new(&sys.power);
+    let mut rows = Vec::new();
+    let mut eff_ratios = Vec::new();
+    let mut cpu_cuts = Vec::new();
+
+    let mut t = Table::new(&[
+        "model", "design", "CPU W", "GPU W", "FPGA W", "total W", "QPS", "QPS/W",
+    ]);
+    for model in ModelId::ALL {
+        let (q_base, p_base) = measure(model, PreprocMode::Cpu, requests, sys);
+        let (q_preba, p_preba) = measure(model, PreprocMode::Dpu, requests, sys);
+        for (label, q, p) in
+            [("baseline", q_base, p_base), ("PREBA", q_preba, p_preba)]
+        {
+            t.row(&[
+                model.display().to_string(),
+                label.to_string(),
+                num(p.cpu_w),
+                num(p.gpu_w),
+                num(p.fpga_w),
+                num(p.total()),
+                num(q),
+                num(pm.qpj(q, &p)),
+            ]);
+            rows.push(Json::obj(vec![
+                ("model", Json::str(model.name())),
+                ("design", Json::str(label)),
+                ("cpu_w", Json::num(p.cpu_w)),
+                ("gpu_w", Json::num(p.gpu_w)),
+                ("fpga_w", Json::num(p.fpga_w)),
+                ("total_w", Json::num(p.total())),
+                ("qps", Json::num(q)),
+                ("qps_per_w", Json::num(pm.qpj(q, &p))),
+            ]));
+        }
+        eff_ratios.push(pm.qpj(q_preba, &p_preba) / pm.qpj(q_base, &p_base));
+        cpu_cuts.push(1.0 - p_preba.cpu_w / p_base.cpu_w);
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    let avg_eff = support::geomean(&eff_ratios);
+    let avg_cut = cpu_cuts.iter().sum::<f64>() / cpu_cuts.len() as f64;
+    rep.row(&format!(
+        "\navg energy-efficiency gain {avg_eff:.2}x (paper: 3.5x); avg CPU power cut {:.1}% (paper: 35.4%)",
+        100.0 * avg_cut
+    ));
+    rep.data("rows", Json::Arr(rows));
+    rep.data("avg_eff_gain", Json::num(avg_eff));
+    rep.data("avg_cpu_cut", Json::num(avg_cut));
+    rep.finish("fig20")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_gain_in_paper_band() {
+        std::env::set_var("PREBA_FAST", "1");
+        let doc = run(&PrebaConfig::new());
+        let eff = doc.get("data").unwrap().get("avg_eff_gain").unwrap().as_f64().unwrap();
+        assert!((2.0..6.0).contains(&eff), "eff gain {eff}");
+        let cut = doc.get("data").unwrap().get("avg_cpu_cut").unwrap().as_f64().unwrap();
+        assert!(cut > 0.15, "cpu power cut {cut}");
+    }
+}

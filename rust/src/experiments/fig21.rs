@@ -1,0 +1,71 @@
+//! Figure 21: cost-efficiency (TCO) — queries per dollar over the 3-year
+//! horizon, baseline vs PREBA (paper: 3.0× average improvement despite the
+//! FPGA CAPEX).
+
+use crate::config::PrebaConfig;
+use crate::metrics::TcoModel;
+use crate::models::ModelId;
+use crate::server::PreprocMode;
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+use super::{fig20, support};
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 21: cost-efficiency (TCO)");
+    let requests = super::default_requests();
+    let tco = TcoModel::new(&sys.tco);
+    let mut rows = Vec::new();
+    let mut ratios = Vec::new();
+
+    let mut t = Table::new(&[
+        "model", "design", "CAPEX $", "OPEX $", "Mqueries/$", "gain",
+    ]);
+    for model in ModelId::ALL {
+        let (q_base, p_base) = fig20::measure(model, PreprocMode::Cpu, requests, sys);
+        let (q_preba, p_preba) = fig20::measure(model, PreprocMode::Dpu, requests, sys);
+        let r_base = tco.evaluate(q_base, &p_base, false);
+        let r_preba = tco.evaluate(q_preba, &p_preba, true);
+        let gain = r_preba.queries_per_usd / r_base.queries_per_usd;
+        ratios.push(gain);
+        for (label, r, g) in [("baseline", r_base, 1.0), ("PREBA", r_preba, gain)] {
+            t.row(&[
+                model.display().to_string(),
+                label.to_string(),
+                num(r.capex_usd),
+                num(r.opex_usd),
+                num(r.queries_per_usd / 1e6),
+                num(g),
+            ]);
+            rows.push(Json::obj(vec![
+                ("model", Json::str(model.name())),
+                ("design", Json::str(label)),
+                ("capex", Json::num(r.capex_usd)),
+                ("opex", Json::num(r.opex_usd)),
+                ("queries_per_usd", Json::num(r.queries_per_usd)),
+            ]));
+        }
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    let avg = support::geomean(&ratios);
+    rep.row(&format!("\navg cost-efficiency gain: {avg:.2}x (paper: 3.0x)"));
+    rep.data("rows", Json::Arr(rows));
+    rep.data("avg_gain", Json::num(avg));
+    rep.finish("fig21")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tco_gain_in_paper_band() {
+        std::env::set_var("PREBA_FAST", "1");
+        let doc = run(&PrebaConfig::new());
+        let avg = doc.get("data").unwrap().get("avg_gain").unwrap().as_f64().unwrap();
+        assert!((2.0..6.0).contains(&avg), "TCO gain {avg}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Figure 22: ablation — Base / Base+DPU / Base+DPU+DynamicBatching on the
+//! audio models (the dynamic batcher targets variable-length audio).
+//!
+//! Paper: +DPU gives +101% over Base; +DynamicBatching a further +54%.
+//! Metric: saturated end-to-end throughput. The DPU step removes the CPU
+//! preprocessing cap; the dynamic-batching step removes the *padding
+//! waste* of the naive single-queue batcher (every mixed-length batch
+//! executes padded to its longest member) plus its oversized Batch_max.
+
+use crate::config::PrebaConfig;
+use crate::mig::MigConfig;
+use crate::models::ModelId;
+use crate::server::{PolicyKind, PreprocMode};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+use super::support;
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Fig 22: ablation Base / +DPU / +DPU+DynamicBatching (audio)");
+    let requests = super::default_requests();
+    let mut rows = Vec::new();
+    let mut dpu_gains = Vec::new();
+    let mut dyn_gains = Vec::new();
+
+    let mut t = Table::new(&["model", "Base", "Base+DPU", "Base+DPU+Dyn", "DPU gain", "Dyn gain"]);
+    for model in ModelId::AUDIO {
+        let base = support::saturated_qps(
+            model, MigConfig::Small7, PreprocMode::Cpu, PolicyKind::Static, 7, requests, sys,
+        )
+        .qps();
+        let dpu = support::saturated_qps(
+            model, MigConfig::Small7, PreprocMode::Dpu, PolicyKind::Static, 7, requests, sys,
+        )
+        .qps();
+        let full = support::saturated_qps(
+            model, MigConfig::Small7, PreprocMode::Dpu, PolicyKind::Dynamic, 7, requests, sys,
+        )
+        .qps();
+        let g_dpu = dpu / base.max(1e-9);
+        let g_dyn = full / dpu.max(1e-9);
+        dpu_gains.push(g_dpu);
+        dyn_gains.push(g_dyn);
+        t.row(&[
+            model.display().to_string(),
+            num(base),
+            num(dpu),
+            num(full),
+            format!("{:.2}x", g_dpu),
+            format!("{:.2}x", g_dyn),
+        ]);
+        rows.push(Json::obj(vec![
+            ("model", Json::str(model.name())),
+            ("base_qps", Json::num(base)),
+            ("dpu_qps", Json::num(dpu)),
+            ("full_qps", Json::num(full)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    let avg_dpu = support::geomean(&dpu_gains);
+    let avg_dyn = support::geomean(&dyn_gains);
+    rep.row(&format!(
+        "\navg: +DPU {:.0}% (paper: +101%), +DynamicBatching {:.0}% (paper: +54%)",
+        100.0 * (avg_dpu - 1.0),
+        100.0 * (avg_dyn - 1.0)
+    ));
+    rep.data("rows", Json::Arr(rows));
+    rep.data("avg_dpu_gain", Json::num(avg_dpu));
+    rep.data("avg_dyn_gain", Json::num(avg_dyn));
+    rep.finish("fig22")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_ablation_steps_help() {
+        std::env::set_var("PREBA_FAST", "1");
+        let doc = run(&PrebaConfig::new());
+        let d = doc.get("data").unwrap();
+        let dpu = d.get("avg_dpu_gain").unwrap().as_f64().unwrap();
+        let dynb = d.get("avg_dyn_gain").unwrap().as_f64().unwrap();
+        assert!(dpu > 1.3, "DPU ablation gain {dpu}");
+        assert!(dynb > 1.1, "dynamic batching ablation gain {dynb}");
+    }
+}

@@ -1,0 +1,67 @@
+//! One module per paper figure/table (DESIGN.md §6 per-experiment index).
+//!
+//! Each experiment exposes `run(&PrebaConfig) -> Reporter`-style functions
+//! returning the same rows/series the paper reports; the `benches/` bench
+//! targets and the `preba experiment` CLI both call into here.
+
+pub mod ablation;
+pub mod support;
+
+pub mod fig05;
+pub mod fig06;
+pub mod fig07;
+pub mod fig08;
+pub mod fig09;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig17;
+pub mod fig18;
+pub mod fig19;
+pub mod fig20;
+pub mod fig21;
+pub mod fig22;
+pub mod table1;
+
+use crate::config::PrebaConfig;
+use crate::util::json::Json;
+
+/// Registry of all experiments for `preba experiment <id>` / `all`.
+pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 20] = [
+    ("fig5", fig05::run),
+    ("fig6", fig06::run),
+    ("fig7", fig07::run),
+    ("fig8", fig08::run),
+    ("fig9", fig09::run),
+    ("fig12", fig12::run),
+    ("fig13", fig13::run),
+    ("fig14", fig14::run),
+    ("fig15", fig15::run),
+    ("fig17", fig17::run),
+    ("fig18", fig18::run),
+    ("fig19", fig19::run),
+    ("fig20", fig20::run),
+    ("fig21", fig21::run),
+    ("fig22", fig22::run),
+    ("table1", table1::run),
+    // Design-choice ablations beyond the paper's figures (DESIGN.md §8).
+    ("abl_merge", ablation::run_merge),
+    ("abl_policy", ablation::run_policy),
+    ("abl_traffic", ablation::run_traffic),
+    ("abl_dpu", ablation::run_dpu_granularity),
+];
+
+/// Look up an experiment by id.
+pub fn by_id(id: &str) -> Option<fn(&PrebaConfig) -> Json> {
+    ALL.iter().find(|(k, _)| *k == id).map(|(_, f)| *f)
+}
+
+/// Shared default: fewer requests when `PREBA_FAST` is set (CI).
+pub fn default_requests() -> usize {
+    if std::env::var("PREBA_FAST").is_ok() {
+        2_000
+    } else {
+        8_000
+    }
+}

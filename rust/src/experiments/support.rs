@@ -1,0 +1,129 @@
+//! Shared helpers for the figure experiments.
+
+use crate::config::PrebaConfig;
+use crate::mig::MigConfig;
+use crate::models::ModelId;
+use crate::server::{sim_driver, PolicyKind, PreprocMode, SimConfig, SimOutcome};
+
+/// Run a simulation with the standard request budget.
+pub fn run(
+    model: ModelId,
+    mig: MigConfig,
+    preproc: PreprocMode,
+    policy: PolicyKind,
+    servers: usize,
+    rate_qps: f64,
+    requests: usize,
+    sys: &PrebaConfig,
+) -> SimOutcome {
+    let mut cfg = SimConfig::new(model, mig, preproc);
+    cfg.policy = policy;
+    cfg.active_servers = servers;
+    cfg.requests = requests;
+    cfg.rate_qps = rate_qps;
+    sim_driver::run(&cfg, sys)
+}
+
+/// Peak sustained throughput: drive at a saturating offered load and
+/// measure the completion rate.
+pub fn saturated_qps(
+    model: ModelId,
+    mig: MigConfig,
+    preproc: PreprocMode,
+    policy: PolicyKind,
+    servers: usize,
+    requests: usize,
+    sys: &PrebaConfig,
+) -> SimOutcome {
+    let mut cfg = SimConfig::new(model, mig, preproc);
+    cfg.policy = policy;
+    cfg.active_servers = servers;
+    cfg.requests = requests;
+    cfg.rate_qps = cfg.saturating_rate() * servers as f64 / mig.vgpus() as f64;
+    sim_driver::run(&cfg, sys)
+}
+
+/// `saturated_qps` with every audio input pinned to `len_s` — the paper's
+/// §3 characterization protocol ("input audio length is fixed at 2.5 sec").
+pub fn saturated_qps_fixed_len(
+    model: ModelId,
+    mig: MigConfig,
+    preproc: PreprocMode,
+    policy: PolicyKind,
+    servers: usize,
+    len_s: f64,
+    requests: usize,
+    sys: &PrebaConfig,
+) -> SimOutcome {
+    let mut cfg = SimConfig::new(model, mig, preproc);
+    cfg.policy = policy;
+    cfg.active_servers = servers;
+    cfg.requests = requests;
+    cfg.fixed_len_s = Some(len_s);
+    cfg.rate_qps = cfg.saturating_rate() * servers as f64 / mig.vgpus() as f64;
+    sim_driver::run(&cfg, sys)
+}
+
+/// Largest offered load whose p95 stays under `sla_ms` (bisection over
+/// the offered rate). Returns (qps_achieved, p95_ms at that load).
+pub fn max_qps_under_sla(
+    model: ModelId,
+    mig: MigConfig,
+    preproc: PreprocMode,
+    policy: PolicyKind,
+    sla_ms: f64,
+    requests: usize,
+    sys: &PrebaConfig,
+) -> (f64, f64) {
+    let cfg0 = SimConfig::new(model, mig, preproc);
+    let hi_rate = cfg0.saturating_rate() * 1.2;
+    let mut lo = hi_rate * 0.01;
+    let mut hi = hi_rate;
+    let mut best = (0.0, 0.0);
+    for _ in 0..9 {
+        let mid = 0.5 * (lo + hi);
+        let out = run(model, mig, preproc, policy, mig.vgpus(), mid, requests, sys);
+        if out.p95_ms() <= sla_ms && out.qps() >= mid * 0.85 {
+            best = (out.qps(), out.p95_ms());
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    best
+}
+
+/// Geometric mean of ratios (the paper's "average X× improvement").
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn sla_search_finds_feasible_point() {
+        let sys = PrebaConfig::new();
+        let (qps, p95) = max_qps_under_sla(
+            ModelId::SqueezeNet,
+            MigConfig::Small7,
+            PreprocMode::Ideal,
+            PolicyKind::Dynamic,
+            25.0,
+            1500,
+            &sys,
+        );
+        assert!(qps > 0.0);
+        assert!(p95 <= 25.0, "p95={p95}");
+    }
+}

@@ -1,0 +1,74 @@
+//! Table 1: DPU resource utilization per functional unit — the paper's
+//! FPGA numbers plus this reproduction's TPU-adaptation columns (Pallas
+//! VMEM footprint + MXU utilization estimates, DESIGN.md §Hardware-
+//! Adaptation).
+
+use crate::config::PrebaConfig;
+use crate::dpu::{resource_table, resources};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Table 1: DPU resource utilization (FPGA + TPU adaptation)");
+    let mut t = Table::new(&[
+        "App", "Unit", "LUT %", "REG %", "BRAM %", "URAM %", "DSP %", "VMEM KiB", "MXU util",
+    ]);
+    let mut rows = Vec::new();
+    for r in resource_table() {
+        t.row(&[
+            r.app.to_string(),
+            r.unit.to_string(),
+            num(r.lut_pct),
+            num(r.reg_pct),
+            num(r.bram_pct),
+            num(r.uram_pct),
+            num(r.dsp_pct),
+            num(r.vmem_kib),
+            num(r.mxu_util),
+        ]);
+        rows.push(Json::obj(vec![
+            ("app", Json::str(r.app)),
+            ("unit", Json::str(r.unit)),
+            ("lut_pct", Json::num(r.lut_pct)),
+            ("dsp_pct", Json::num(r.dsp_pct)),
+            ("vmem_kib", Json::num(r.vmem_kib)),
+            ("mxu_util", Json::num(r.mxu_util)),
+        ]));
+    }
+    for app in ["Image", "Audio"] {
+        let (l, r2, b, u, d) = resources::totals(app);
+        t.row(&[
+            app.to_string(),
+            "Total".to_string(),
+            num(l),
+            num(r2),
+            num(b),
+            num(u),
+            num(d),
+            String::new(),
+            String::new(),
+        ]);
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.row(&format!(
+        "\nconfigured CU counts fit the U55C: {}",
+        resources::fits_fpga(&sys.dpu)
+    ));
+    rep.data("rows", Json::Arr(rows));
+    rep.finish("table1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_all_units() {
+        let doc = run(&PrebaConfig::new());
+        let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 7);
+    }
+}

@@ -1,0 +1,48 @@
+//! # PREBA — Multi-Instance GPU inference serving, reproduced end-to-end
+//!
+//! Rust + JAX + Pallas reproduction of *"PREBA: A Hardware/Software
+//! Co-Design for Multi-Instance GPU based AI Inference Servers"*
+//! (Yeo, Kim, Choi, Rhu — 2024).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas preprocessing kernels (the paper's FPGA DPU,
+//!   re-architected for the TPU MXU; `python/compile/kernels/`), AOT-lowered
+//!   to HLO text.
+//! * **L2** — the six paper workloads (MobileNetV3 / SqueezeNet /
+//!   Swin-Transformer / Conformer ×2 / CitriNet) written in JAX
+//!   (`python/compile/models/`), AOT-lowered per (model, batch,
+//!   audio-length bucket).
+//! * **L3** — this crate: request router, MIG partition + vGPU service
+//!   model, CPU-preprocessing pool, DPU scheduler, the dynamic batching
+//!   system, metrics/power/TCO, and both a discrete-event driver (paper
+//!   figures) and a real-PJRT driver (end-to-end execution of the lowered
+//!   HLO on the CPU PJRT client).
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + `manifest.json` once, and the `preba` binary is
+//! self-contained afterwards.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod batching;
+pub mod cli;
+pub mod clock;
+pub mod config;
+pub mod dpu;
+pub mod experiments;
+pub mod metrics;
+pub mod mig;
+pub mod models;
+pub mod preprocess;
+pub mod profiler;
+pub mod rt;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

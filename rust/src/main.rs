@@ -1,0 +1,266 @@
+//! `preba` — the PREBA MIG inference server CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//! * `serve`      — run the real-PJRT serving pipeline on AOT artifacts.
+//! * `simulate`   — one DES run with explicit knobs (model/mig/preproc/...).
+//! * `profile`    — offline Batch_knee profiling for a model+MIG config.
+//! * `experiment` — regenerate a paper figure/table (`all` for everything).
+//! * `list`       — enumerate models, MIG configs and experiments.
+
+use preba::cli::Args;
+use preba::config::PrebaConfig;
+use preba::mig::MigConfig;
+use preba::models::ModelId;
+use preba::server::{real_driver, sim_driver, PolicyKind, PreprocMode, SimConfig};
+use preba::util::table::{num, Table};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: preba <serve|simulate|profile|experiment|list> [options]\n\
+     \n\
+     serve      --model M [--preproc host|dpu] [--rate QPS] [--requests N] [--artifacts DIR]\n\
+     simulate   --model M [--mig 1g|2g|7g] [--preproc ideal|cpu|dpu] [--policy static|dynamic]\n\
+                [--servers N] [--rate QPS] [--requests N] [--seed S]\n\
+     profile    --model M [--mig 1g|2g|7g] [--len SECONDS]\n\
+     plan       --model M [--sla MS] [--len SECONDS]   (partition recommendation)\n\
+     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|all>\n\
+     list\n\
+     \n\
+     global: --config FILE (TOML overrides), --fast (smaller request budgets)"
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env(&["fast", "help"])?;
+    if args.flag("help") || args.command.is_none() {
+        println!("{}", usage());
+        return Ok(());
+    }
+    if args.flag("fast") {
+        std::env::set_var("PREBA_FAST", "1");
+    }
+    let sys = match args.opt("config") {
+        Some(path) => PrebaConfig::from_file(path)?,
+        None => PrebaConfig::new(),
+    };
+
+    match args.command.as_deref().unwrap() {
+        "list" => list(),
+        "serve" => serve(&args, &sys),
+        "simulate" => simulate(&args, &sys),
+        "profile" => profile(&args, &sys),
+        "plan" => plan(&args),
+        "experiment" => experiment(&args, &sys),
+        other => {
+            anyhow::bail!("unknown command '{other}'\n{}", usage());
+        }
+    }
+}
+
+/// `preba plan --model M --sla MS [--len S]`: partition recommendation.
+fn plan(args: &Args) -> anyhow::Result<()> {
+    let model = parse_model(args)?;
+    let sla_ms = args.opt_f64("sla", 50.0)?;
+    let len = args.opt_f64("len", preba::mig::planner::default_len(model))?;
+    let points = preba::mig::planner::plan(model, sla_ms, len);
+    println!("partition plan for {} (p95 <= {sla_ms} ms, len {len} s):\n", model.display());
+    let mut t = Table::new(&["partition", "batch", "QPS @SLA", "exec ms", "e2e ms"]);
+    for p in &points {
+        t.row(&[
+            p.partition.name(),
+            if p.batch == 0 { "-".into() } else { p.batch.to_string() },
+            num(p.qps),
+            num(p.exec_ms),
+            num(p.e2e_ms),
+        ]);
+    }
+    t.print();
+    match preba::mig::planner::recommend(model, sla_ms, len) {
+        Some(best) => println!("\nrecommended: {} at batch {}", best.partition.name(), best.batch),
+        None => println!("\nno partition can meet this SLA"),
+    }
+    Ok(())
+}
+
+fn parse_model(args: &Args) -> anyhow::Result<ModelId> {
+    let name = args.opt("model").ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    ModelId::parse(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown model '{name}' (known: {})",
+            ModelId::ALL.map(|m| m.name()).join(", ")
+        )
+    })
+}
+
+fn parse_mig(args: &Args) -> anyhow::Result<MigConfig> {
+    let s = args.opt_or("mig", "1g");
+    MigConfig::parse(s).ok_or_else(|| anyhow::anyhow!("unknown MIG config '{s}'"))
+}
+
+fn list() -> anyhow::Result<()> {
+    println!("models:");
+    let mut t = Table::new(&["name", "display", "kind", "params", "knee(1g)", "knee(7g)"]);
+    for m in ModelId::ALL {
+        let s = m.spec();
+        t.row(&[
+            m.name().to_string(),
+            m.display().to_string(),
+            format!("{:?}", m.kind()),
+            format!("{:.1}M", s.params_full as f64 / 1e6),
+            s.knee_1g.map(|k| k.to_string()).unwrap_or_else(|| "len-dep".into()),
+            s.knee_7g.map(|k| k.to_string()).unwrap_or_else(|| "len-dep".into()),
+        ]);
+    }
+    t.print();
+    println!("\nMIG configs: 1g.5gb(7x), 2g.10gb(3x), 7g.40gb(1x)");
+    println!("\nexperiments:");
+    for (id, _) in preba::experiments::ALL {
+        println!("  {id}");
+    }
+    Ok(())
+}
+
+fn serve(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
+    let model = parse_model(args)?;
+    let preproc = match args.opt_or("preproc", "dpu") {
+        "host" | "cpu" => real_driver::RealPreproc::HostRust,
+        "dpu" | "pallas" => real_driver::RealPreproc::DpuPallas,
+        other => anyhow::bail!("unknown --preproc '{other}' (host|dpu)"),
+    };
+    let artifacts = args.opt_or("artifacts", &sys.artifacts_dir);
+    let mut engine = preba::runtime::Engine::new(artifacts)?;
+    let mut cfg = real_driver::RealConfig::new(model, preproc);
+    cfg.rate_qps = args.opt_f64("rate", 20.0)?;
+    cfg.requests = args.opt_u64("requests", 100)? as usize;
+    cfg.seed = args.opt_u64("seed", 7)?;
+    println!(
+        "serving {} ({} requests @ {} QPS, preproc={:?}) on PJRT[{}]...",
+        model.display(),
+        cfg.requests,
+        cfg.rate_qps,
+        preproc,
+        engine.platform()
+    );
+    let out = real_driver::serve(&cfg, sys, &mut engine)?;
+    print_run_stats(&out.stats);
+    println!(
+        "executed {} batches; mean batch {:.2}; output L2 {:.3}",
+        out.executed_batches,
+        out.stats.batch_sizes.mean(),
+        out.output_l2
+    );
+    Ok(())
+}
+
+fn simulate(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
+    let model = parse_model(args)?;
+    let mig = parse_mig(args)?;
+    let preproc = match args.opt_or("preproc", "dpu") {
+        "ideal" => PreprocMode::Ideal,
+        "cpu" => PreprocMode::Cpu,
+        "dpu" => PreprocMode::Dpu,
+        other => anyhow::bail!("unknown --preproc '{other}' (ideal|cpu|dpu)"),
+    };
+    let mut cfg = SimConfig::new(model, mig, preproc);
+    cfg.policy = match args.opt_or("policy", "dynamic") {
+        "static" => PolicyKind::Static,
+        "dynamic" => PolicyKind::Dynamic,
+        other => anyhow::bail!("unknown --policy '{other}'"),
+    };
+    cfg.active_servers = args.opt_u64("servers", mig.vgpus() as u64)? as usize;
+    cfg.requests = args.opt_u64("requests", 20_000)? as usize;
+    cfg.seed = args.opt_u64("seed", 0xBEEF)?;
+    cfg.rate_qps = args.opt_f64("rate", cfg.saturating_rate())?;
+    println!(
+        "simulating {} on {} ({:?}, {:?}, {} servers, {:.1} QPS offered)...",
+        model.display(),
+        mig.name(),
+        preproc,
+        cfg.policy,
+        cfg.active_servers,
+        cfg.rate_qps
+    );
+    let out = sim_driver::run(&cfg, sys);
+    print_run_stats(&out.stats);
+    println!(
+        "cpu util {:.1}%  gpu util {:.1}%  dpu util {}  pcie {:.2} GB/s",
+        100.0 * out.cpu_util,
+        100.0 * out.gpu_util,
+        out.dpu_util.map(|u| format!("{:.1}%", 100.0 * u)).unwrap_or_else(|| "-".into()),
+        out.pcie_gbps
+    );
+    Ok(())
+}
+
+fn profile(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
+    let model = parse_model(args)?;
+    let mig = parse_mig(args)?;
+    let len = args.opt_f64("len", 2.5)?;
+    let mut rng = preba::util::Rng::new(42);
+    let batches = preba::profiler::sweep_batches(256);
+    let curve =
+        preba::profiler::profile_curve(model.spec(), mig.gpcs_per_vgpu(), len, &batches, 80, &mut rng);
+    let knee = preba::profiler::find_knee(&curve, sys.batching.knee_frac);
+    let mut t = Table::new(&["batch", "per-vGPU QPS", "p95 ms", "util %", ""]);
+    for p in &curve {
+        t.row(&[
+            p.batch.to_string(),
+            num(p.qps),
+            num(p.p95_ms),
+            num(p.util * 100.0),
+            if p.batch == knee.batch { "<-- Batch_knee".into() } else { String::new() },
+        ]);
+    }
+    t.print();
+    println!(
+        "\nBatch_knee={} Time_knee={:.1} ms -> Batch_max={}, Time_queue={:.2} ms on {}",
+        knee.batch,
+        knee.p95_ms,
+        knee.batch,
+        knee.mean_ms / mig.vgpus() as f64,
+        mig.name()
+    );
+    Ok(())
+}
+
+fn experiment(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("experiment id required (or 'all')"))?;
+    if let Some(dir) = args.opt("out") {
+        std::env::set_var("PREBA_RESULTS_DIR", dir);
+    }
+    if id == "all" {
+        for (name, f) in preba::experiments::ALL {
+            println!("\n########## {name} ##########");
+            f(sys);
+        }
+        return Ok(());
+    }
+    let f = preba::experiments::by_id(id)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}' (see `preba list`)"))?;
+    f(sys);
+    Ok(())
+}
+
+fn print_run_stats(stats: &preba::metrics::RunStats) {
+    let (pre, bat, disp, exec) = stats.breakdown_ms();
+    println!(
+        "completed {}  throughput {:.1} QPS  mean {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
+        stats.completed,
+        stats.throughput_qps(),
+        stats.mean_ms(),
+        stats.p95_ms(),
+        stats.e2e_ms.p99()
+    );
+    println!(
+        "breakdown: preprocess {pre:.2} ms | batching {bat:.2} ms | queue {disp:.2} ms | execute {exec:.2} ms"
+    );
+}

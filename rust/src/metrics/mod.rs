@@ -1,0 +1,140 @@
+//! Serving metrics: latency breakdowns, throughput, power, energy and TCO.
+
+pub mod power;
+pub mod tco;
+
+pub use power::{PowerBreakdown, PowerModel};
+pub use tco::TcoModel;
+
+use crate::clock::{to_millis, to_secs, Nanos};
+use crate::util::Summary;
+
+/// Per-request latency breakdown (paper Fig 7 / Fig 19 stages).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyParts {
+    /// Wait + service in the preprocessing stage (CPU pool or DPU).
+    pub preprocess: Nanos,
+    /// Time in the batching queue (enqueue -> batch formed).
+    pub batching: Nanos,
+    /// Wait for a free vGPU after the batch formed.
+    pub dispatch_wait: Nanos,
+    /// Model execution on the vGPU.
+    pub execution: Nanos,
+}
+
+impl LatencyParts {
+    pub fn total(&self) -> Nanos {
+        self.preprocess + self.batching + self.dispatch_wait + self.execution
+    }
+}
+
+/// Collects per-request results for one measurement run.
+#[derive(Debug, Default)]
+pub struct RunStats {
+    pub e2e_ms: Summary,
+    pub preprocess_ms: Summary,
+    pub batching_ms: Summary,
+    pub dispatch_ms: Summary,
+    pub execution_ms: Summary,
+    pub batch_sizes: Summary,
+    pub completed: u64,
+    /// Time of first/last completion (for measured throughput).
+    first_done: Option<Nanos>,
+    last_done: Option<Nanos>,
+}
+
+impl RunStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed request.
+    pub fn record(&mut self, parts: LatencyParts, done_at: Nanos, batch_size: usize) {
+        self.e2e_ms.add(to_millis(parts.total()));
+        self.preprocess_ms.add(to_millis(parts.preprocess));
+        self.batching_ms.add(to_millis(parts.batching));
+        self.dispatch_ms.add(to_millis(parts.dispatch_wait));
+        self.execution_ms.add(to_millis(parts.execution));
+        self.batch_sizes.add(batch_size as f64);
+        self.completed += 1;
+        self.first_done = Some(self.first_done.map_or(done_at, |t| t.min(done_at)));
+        self.last_done = Some(self.last_done.map_or(done_at, |t| t.max(done_at)));
+    }
+
+    /// Measured goodput over the completion window, queries/s.
+    pub fn throughput_qps(&self) -> f64 {
+        match (self.first_done, self.last_done) {
+            (Some(a), Some(b)) if b > a && self.completed > 1 => {
+                (self.completed - 1) as f64 / to_secs(b - a)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// p95 end-to-end latency, ms (the paper's tail metric).
+    pub fn p95_ms(&self) -> f64 {
+        self.e2e_ms.p95()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.e2e_ms.mean()
+    }
+
+    /// Mean latency breakdown as (preprocess, batching, dispatch, exec) ms.
+    pub fn breakdown_ms(&self) -> (f64, f64, f64, f64) {
+        (
+            self.preprocess_ms.mean(),
+            self.batching_ms.mean(),
+            self.dispatch_ms.mean(),
+            self.execution_ms.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::millis;
+
+    fn parts(pre: f64, bat: f64, disp: f64, exec: f64) -> LatencyParts {
+        LatencyParts {
+            preprocess: millis(pre),
+            batching: millis(bat),
+            dispatch_wait: millis(disp),
+            execution: millis(exec),
+        }
+    }
+
+    #[test]
+    fn total_sums_parts() {
+        let p = parts(1.0, 2.0, 3.0, 4.0);
+        assert_eq!(to_millis(p.total()), 10.0);
+    }
+
+    #[test]
+    fn throughput_from_completion_window() {
+        let mut s = RunStats::new();
+        // 11 completions over 1 s -> 10 intervals / 1 s = 10 qps.
+        for i in 0..=10 {
+            s.record(parts(0.0, 0.0, 0.0, 1.0), millis(i as f64 * 100.0), 1);
+        }
+        assert!((s.throughput_qps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_means() {
+        let mut s = RunStats::new();
+        s.record(parts(2.0, 4.0, 0.0, 10.0), millis(1.0), 2);
+        s.record(parts(4.0, 8.0, 0.0, 20.0), millis(2.0), 4);
+        let (pre, bat, disp, exec) = s.breakdown_ms();
+        assert_eq!((pre, bat, disp, exec), (3.0, 6.0, 0.0, 15.0));
+        assert_eq!(s.batch_sizes.mean(), 3.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = RunStats::new();
+        assert_eq!(s.throughput_qps(), 0.0);
+        assert_eq!(s.p95_ms(), 0.0);
+    }
+}

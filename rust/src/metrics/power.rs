@@ -1,0 +1,113 @@
+//! System power model (paper §6.2, Fig 20).
+//!
+//! Component power = idle floor + (TDP - idle) × utilization. The paper's
+//! observations this must reproduce:
+//! * PREBA cuts CPU power ~35.4% on average (preprocessing off the host);
+//! * PREBA *raises* GPU power (~2.8× for audio) because utilization rises;
+//! * the DPU adds FPGA power but net energy-efficiency improves ~3.5×.
+
+use crate::config::PowerConfig;
+
+/// Per-component and total watts.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PowerBreakdown {
+    pub cpu_w: f64,
+    pub gpu_w: f64,
+    pub fpga_w: f64,
+    pub base_w: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.cpu_w + self.gpu_w + self.fpga_w + self.base_w
+    }
+}
+
+/// Utilization-weighted power model.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    cfg: PowerConfig,
+}
+
+impl PowerModel {
+    pub fn new(cfg: &PowerConfig) -> PowerModel {
+        PowerModel { cfg: cfg.clone() }
+    }
+
+    /// System power given component utilizations in [0,1].
+    ///
+    /// * `cpu_util` — host cores busy fraction (preprocessing + serving).
+    /// * `gpu_util` — mean vGPU utilization × fraction of GPCs active.
+    /// * `fpga_util` — `None` when no DPU is installed (baseline).
+    pub fn power(&self, cpu_util: f64, gpu_util: f64, fpga_util: Option<f64>) -> PowerBreakdown {
+        let c = &self.cfg;
+        let scale = |tdp: f64, idle_frac: f64, u: f64| tdp * (idle_frac + (1.0 - idle_frac) * u.clamp(0.0, 1.0));
+        PowerBreakdown {
+            cpu_w: scale(c.cpu_tdp_w, c.cpu_idle_frac, cpu_util),
+            gpu_w: scale(c.gpu_tdp_w, c.gpu_idle_frac, gpu_util),
+            fpga_w: fpga_util.map_or(0.0, |u| scale(c.fpga_w, c.fpga_idle_frac, u)),
+            base_w: c.server_base_w,
+        }
+    }
+
+    /// Energy efficiency: queries per joule (= QPS / W).
+    pub fn qpj(&self, qps: f64, breakdown: &PowerBreakdown) -> f64 {
+        if breakdown.total() <= 0.0 {
+            0.0
+        } else {
+            qps / breakdown.total()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> PowerModel {
+        PowerModel::new(&PowerConfig::default())
+    }
+
+    #[test]
+    fn idle_floor_and_tdp_cap() {
+        let m = model();
+        let idle = m.power(0.0, 0.0, Some(0.0));
+        assert!((idle.cpu_w - 180.0 * 0.35).abs() < 1e-9);
+        assert!((idle.gpu_w - 400.0 * 0.20).abs() < 1e-9);
+        let full = m.power(1.0, 1.0, Some(1.0));
+        assert_eq!(full.cpu_w, 180.0);
+        assert_eq!(full.gpu_w, 400.0);
+        assert_eq!(full.fpga_w, 75.0);
+        // clamps
+        let over = m.power(5.0, 5.0, Some(5.0));
+        assert_eq!(over.total(), full.total());
+    }
+
+    #[test]
+    fn no_fpga_means_zero_fpga_power() {
+        let m = model();
+        assert_eq!(m.power(0.5, 0.5, None).fpga_w, 0.0);
+    }
+
+    #[test]
+    fn preba_direction_of_change() {
+        // Baseline: CPU pinned ~90%, GPU starved (~25% util).
+        // PREBA: CPU light (~20%), GPU busy (~85%), FPGA on.
+        let m = model();
+        let base = m.power(0.90, 0.25, None);
+        let preba = m.power(0.20, 0.85, Some(0.6));
+        assert!(preba.cpu_w < base.cpu_w * 0.75, "CPU power should drop >25%");
+        assert!(preba.gpu_w > base.gpu_w * 1.5, "GPU power should rise");
+        // Efficiency: PREBA at ~4x the throughput wins despite more watts.
+        let eff_base = m.qpj(1000.0, &base);
+        let eff_preba = m.qpj(3700.0, &preba);
+        assert!(eff_preba / eff_base > 2.0, "ratio={}", eff_preba / eff_base);
+    }
+
+    #[test]
+    fn qpj_zero_guard() {
+        let m = model();
+        let bd = PowerBreakdown::default();
+        assert_eq!(m.qpj(100.0, &bd), 0.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Cost-efficiency / TCO model (paper §6.3, Fig 21).
+//!
+//! `cost_efficiency = Throughput × time / (CAPEX + OPEX)` where CAPEX is
+//! the hardware purchase (server node, GPU, optionally FPGA), `time` is
+//! the 3-year depreciation horizon, and OPEX is the electricity for the
+//! measured power draw over that horizon.
+
+use crate::config::TcoConfig;
+
+use super::power::PowerBreakdown;
+
+/// TCO calculator.
+#[derive(Debug, Clone)]
+pub struct TcoModel {
+    cfg: TcoConfig,
+}
+
+/// One design point's cost summary.
+#[derive(Debug, Clone, Copy)]
+pub struct TcoReport {
+    pub capex_usd: f64,
+    pub opex_usd: f64,
+    /// Queries served over the horizon.
+    pub queries: f64,
+    /// Queries per dollar (the paper's cost-efficiency metric).
+    pub queries_per_usd: f64,
+}
+
+impl TcoModel {
+    pub fn new(cfg: &TcoConfig) -> TcoModel {
+        TcoModel { cfg: cfg.clone() }
+    }
+
+    /// Evaluate a design point sustaining `qps` at `power` draw.
+    /// `with_fpga` adds the DPU's CAPEX.
+    pub fn evaluate(&self, qps: f64, power: &PowerBreakdown, with_fpga: bool) -> TcoReport {
+        let c = &self.cfg;
+        let capex = c.server_usd + c.gpu_usd + if with_fpga { c.fpga_usd } else { 0.0 };
+        let hours = c.years * 365.25 * 24.0;
+        let opex = power.total() / 1000.0 * hours * c.usd_per_kwh;
+        let queries = qps * hours * 3600.0;
+        let total = capex + opex;
+        TcoReport {
+            capex_usd: capex,
+            opex_usd: opex,
+            queries,
+            queries_per_usd: if total > 0.0 { queries / total } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn power(total_w: f64) -> PowerBreakdown {
+        PowerBreakdown { cpu_w: total_w, gpu_w: 0.0, fpga_w: 0.0, base_w: 0.0 }
+    }
+
+    #[test]
+    fn capex_includes_fpga_only_for_preba() {
+        let m = TcoModel::new(&TcoConfig::default());
+        let a = m.evaluate(100.0, &power(500.0), false);
+        let b = m.evaluate(100.0, &power(500.0), true);
+        assert_eq!(b.capex_usd - a.capex_usd, 4500.0);
+    }
+
+    #[test]
+    fn opex_matches_hand_calc() {
+        let cfg = TcoConfig { years: 1.0, usd_per_kwh: 0.10, ..Default::default() };
+        let m = TcoModel::new(&cfg);
+        let r = m.evaluate(1.0, &power(1000.0), false);
+        // 1 kW for 1 year at $0.10/kWh = 8766 hours * 0.1 = $876.6
+        assert!((r.opex_usd - 876.6).abs() < 0.1, "opex={}", r.opex_usd);
+    }
+
+    #[test]
+    fn higher_qps_wins_despite_fpga_capex() {
+        // The paper's 3.0x cost-efficiency: PREBA's throughput gain
+        // dominates the DPU's CAPEX + power.
+        let m = TcoModel::new(&TcoConfig::default());
+        let base = m.evaluate(1000.0, &power(600.0), false);
+        let preba = m.evaluate(3700.0, &power(800.0), true);
+        let ratio = preba.queries_per_usd / base.queries_per_usd;
+        assert!(ratio > 2.0 && ratio < 5.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn zero_total_guard() {
+        let cfg = TcoConfig { server_usd: 0.0, gpu_usd: 0.0, fpga_usd: 0.0, years: 0.0, usd_per_kwh: 0.0 };
+        let m = TcoModel::new(&cfg);
+        let r = m.evaluate(10.0, &power(0.0), false);
+        assert_eq!(r.queries_per_usd, 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! NVIDIA MIG partition model + calibrated vGPU service-time model.
+//!
+//! `partition` encodes the A100's legal MIG geometries (paper Fig 2);
+//! `service` gives per-vGPU model-execution time as a function of
+//! (model, slice size, batch, audio length), calibrated so the paper's
+//! measured Batch_knee / Time_knee values reproduce (see DESIGN.md §4).
+
+pub mod partition;
+pub mod planner;
+pub mod service;
+
+pub use partition::{MigConfig, Partition, Slice};
+pub use service::ServiceModel;

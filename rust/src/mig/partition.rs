@@ -1,0 +1,194 @@
+//! A100 MIG partition geometry (paper §2.2, Fig 2).
+//!
+//! A vGPU slice is built from GPCs (compute) and L2/DRAM slices (memory).
+//! NVIDIA only allows specific "Mg.Ngb" combinations; this module encodes
+//! the A100-40GB instance profiles and the homogeneous partitions the
+//! paper evaluates: `1g.5gb(7x)`, `2g.10gb(3x)`, `7g.40gb(1x)`.
+
+/// One MIG instance profile: `<gpcs>g.<mem_gb>gb`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Slice {
+    /// GPCs in this instance (compute).
+    pub gpcs: usize,
+    /// DRAM allocated, GB (also pins the number of L2/DRAM slices).
+    pub mem_gb: usize,
+}
+
+impl Slice {
+    pub const fn new(gpcs: usize, mem_gb: usize) -> Self {
+        Slice { gpcs, mem_gb }
+    }
+
+    /// The A100-40GB instance profiles NVIDIA exposes (nvidia-smi mig
+    /// -lgip): 1g.5gb, 2g.10gb, 3g.20gb, 4g.20gb, 7g.40gb.
+    pub const PROFILES: [Slice; 5] = [
+        Slice::new(1, 5),
+        Slice::new(2, 10),
+        Slice::new(3, 20),
+        Slice::new(4, 20),
+        Slice::new(7, 40),
+    ];
+
+    /// Is this a profile the A100 exposes? (e.g. 1 GPC + 20 GB is illegal:
+    /// "impossible to combine a single GPC with four L2/DRAM slices".)
+    pub fn is_legal(&self) -> bool {
+        Slice::PROFILES.contains(self)
+    }
+
+    /// Memory-side fraction of the whole GPU this slice owns (DRAM/L2
+    /// slices out of 40 GB / 8 slices).
+    pub fn mem_frac(&self) -> f64 {
+        self.mem_gb as f64 / 40.0
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}g.{}gb", self.gpcs, self.mem_gb)
+    }
+}
+
+/// A homogeneous MIG partition: `count` instances of `slice`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Partition {
+    pub slice: Slice,
+    pub count: usize,
+}
+
+/// The three configurations the paper characterizes (§3 footnote 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MigConfig {
+    /// 1g.5gb(7x): seven 1-GPC vGPUs.
+    Small7,
+    /// 2g.10gb(3x): three 2-GPC vGPUs (one GPC is disabled by NVIDIA —
+    /// max throughput is 6/7 of the chip).
+    Medium3,
+    /// 7g.40gb(1x): the unpartitioned GPU.
+    Full1,
+}
+
+impl MigConfig {
+    pub const ALL: [MigConfig; 3] = [MigConfig::Small7, MigConfig::Medium3, MigConfig::Full1];
+
+    pub fn partition(&self) -> Partition {
+        match self {
+            MigConfig::Small7 => Partition { slice: Slice::new(1, 5), count: 7 },
+            MigConfig::Medium3 => Partition { slice: Slice::new(2, 10), count: 3 },
+            MigConfig::Full1 => Partition { slice: Slice::new(7, 40), count: 1 },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MigConfig::Small7 => "1g.5gb(7x)",
+            MigConfig::Medium3 => "2g.10gb(3x)",
+            MigConfig::Full1 => "7g.40gb(1x)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MigConfig> {
+        match s {
+            "1g.5gb(7x)" | "1g" | "7x" | "small" => Some(MigConfig::Small7),
+            "2g.10gb(3x)" | "2g" | "3x" | "medium" => Some(MigConfig::Medium3),
+            "7g.40gb(1x)" | "7g" | "1x" | "full" => Some(MigConfig::Full1),
+            _ => None,
+        }
+    }
+
+    /// Number of vGPUs.
+    pub fn vgpus(&self) -> usize {
+        self.partition().count
+    }
+
+    /// GPCs per vGPU.
+    pub fn gpcs_per_vgpu(&self) -> usize {
+        self.partition().slice.gpcs
+    }
+
+    /// Total active GPCs (2g.10gb(3x) leaves one GPC dark — paper
+    /// footnote 1: max throughput is 14.2% below the others).
+    pub fn active_gpcs(&self) -> usize {
+        let p = self.partition();
+        p.slice.gpcs * p.count
+    }
+}
+
+impl std::fmt::Display for MigConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl Partition {
+    /// Does this partition fit on an A100 (7 GPCs, 40 GB / 8 mem slices)?
+    pub fn fits_a100(&self) -> bool {
+        self.slice.is_legal()
+            && self.slice.gpcs * self.count <= 7
+            && self.slice.mem_gb * self.count <= 40
+    }
+
+    /// All homogeneous partitions that fit on an A100.
+    pub fn all_homogeneous() -> Vec<Partition> {
+        let mut out = Vec::new();
+        for slice in Slice::PROFILES {
+            for count in 1..=7 {
+                let p = Partition { slice, count };
+                if p.fits_a100() {
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}({}x)", self.slice.name(), self.count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_fit() {
+        for cfg in MigConfig::ALL {
+            assert!(cfg.partition().fits_a100(), "{cfg}");
+        }
+    }
+
+    #[test]
+    fn medium3_leaves_one_gpc_dark() {
+        assert_eq!(MigConfig::Medium3.active_gpcs(), 6);
+        assert_eq!(MigConfig::Small7.active_gpcs(), 7);
+        assert_eq!(MigConfig::Full1.active_gpcs(), 7);
+    }
+
+    #[test]
+    fn illegal_combinations_rejected() {
+        // 1 GPC with 20 GB: explicitly called out as impossible in §2.2.
+        assert!(!Slice::new(1, 20).is_legal());
+        assert!(!Slice::new(5, 20).is_legal());
+        // 2x 7g doesn't fit.
+        assert!(!Partition { slice: Slice::new(7, 40), count: 2 }.fits_a100());
+        // 8x 1g exceeds 7 GPCs.
+        assert!(!Partition { slice: Slice::new(1, 5), count: 8 }.fits_a100());
+    }
+
+    #[test]
+    fn homogeneous_enumeration_contains_paper_points() {
+        let all = Partition::all_homogeneous();
+        for cfg in MigConfig::ALL {
+            assert!(all.contains(&cfg.partition()), "{cfg}");
+        }
+        // 3g.20gb can appear at most twice.
+        assert!(all.contains(&Partition { slice: Slice::new(3, 20), count: 2 }));
+        assert!(!all.contains(&Partition { slice: Slice::new(3, 20), count: 3 }));
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(MigConfig::Small7.name(), "1g.5gb(7x)");
+        assert_eq!(MigConfig::Small7.partition().name(), "1g.5gb(7x)");
+        assert_eq!(MigConfig::parse("2g"), Some(MigConfig::Medium3));
+        assert_eq!(MigConfig::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,148 @@
+//! MIG partition planner — the operator-facing question the paper's
+//! characterization enables (and the PARIS/ELSA [43] line of work
+//! automates): *which partition should this model be served on?*
+//!
+//! For every homogeneous partition that fits the A100, the planner
+//! evaluates the calibrated service model analytically:
+//! * SLA-bounded per-slice throughput: the largest batch `b ≤ knee` whose
+//!   execution time stays within the latency budget (after subtracting
+//!   the batching wait `Time_queue`), times `b / T(b)`;
+//! * aggregate = per-slice × slice count;
+//! and returns the Pareto set over (throughput, latency).
+//!
+//! Analytic (no DES) so the CLI `preba plan` answers interactively; the
+//! `capacity_planning` example cross-checks against simulation.
+
+use crate::models::{ModelId, ModelKind};
+
+use super::partition::Partition;
+use super::service::ServiceModel;
+
+/// One partition's evaluation.
+#[derive(Debug, Clone)]
+pub struct PlanPoint {
+    pub partition: Partition,
+    /// Largest batch meeting the SLA (0 = infeasible).
+    pub batch: usize,
+    /// Aggregate SLA-bounded throughput, queries/s.
+    pub qps: f64,
+    /// Expected execution latency at that batch, ms.
+    pub exec_ms: f64,
+    /// End-to-end latency estimate (batching wait + execution), ms.
+    pub e2e_ms: f64,
+}
+
+/// Evaluate every homogeneous partition for `model` under `sla_ms`
+/// end-to-end p95 budget at input length `len_s` (0 for vision).
+pub fn plan(model: ModelId, sla_ms: f64, len_s: f64) -> Vec<PlanPoint> {
+    let spec = model.spec();
+    let mut out = Vec::new();
+    for partition in Partition::all_homogeneous() {
+        let sm = ServiceModel::new(spec, partition.slice.gpcs);
+        let knee = sm.knee(len_s);
+        // Batching wait budget: PREBA sets Time_queue = Time_knee/n; an
+        // SLA-aware deployment additionally caps the wait at a quarter of
+        // the end-to-end budget so single-vGPU partitions don't spend the
+        // whole SLA waiting to fill a batch.
+        let time_queue_s =
+            (sm.exec_secs(knee, len_s) / partition.count as f64).min(0.25 * sla_ms * 1e-3);
+        let budget_s = sla_ms * 1e-3 - time_queue_s;
+        // Largest batch within budget, capped at the knee (no throughput
+        // benefit beyond it).
+        let mut best = None;
+        for b in 1..=knee {
+            let t = sm.exec_secs(b, len_s) * 1.10; // p95 ≈ 1.1x mean
+            if t <= budget_s {
+                best = Some(b);
+            }
+        }
+        let (batch, qps, exec_ms) = match best {
+            Some(b) => {
+                let t = sm.exec_secs(b, len_s);
+                (b, partition.count as f64 * b as f64 / t, t * 1e3)
+            }
+            None => (0, 0.0, 0.0),
+        };
+        out.push(PlanPoint {
+            partition,
+            batch,
+            qps,
+            exec_ms,
+            e2e_ms: exec_ms + time_queue_s * 1e3,
+        });
+    }
+    out.sort_by(|a, b| b.qps.partial_cmp(&a.qps).unwrap());
+    out
+}
+
+/// The best feasible partition (highest SLA-bounded throughput).
+pub fn recommend(model: ModelId, sla_ms: f64, len_s: f64) -> Option<PlanPoint> {
+    plan(model, sla_ms, len_s).into_iter().find(|p| p.batch > 0)
+}
+
+/// Default evaluation length for a model (mean LibriSpeech for audio).
+pub fn default_len(model: ModelId) -> f64 {
+    match model.kind() {
+        ModelKind::Vision => 0.0,
+        ModelKind::Audio => 10.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::MigConfig;
+
+    #[test]
+    fn loose_sla_prefers_fine_partitions() {
+        // With a comfortable SLA, 1g.5gb(7x) has the highest aggregate
+        // throughput (paper Fig 5's headline).
+        for model in [ModelId::MobileNet, ModelId::SqueezeNet] {
+            let best = recommend(model, 50.0, 0.0).unwrap();
+            assert_eq!(
+                best.partition,
+                MigConfig::Small7.partition(),
+                "{model}: {:?}",
+                best
+            );
+        }
+    }
+
+    #[test]
+    fn tight_sla_forces_bigger_slices_for_heavy_models() {
+        // Swin at a very tight SLA: a 1g slice's single-input latency is
+        // ~5.6 ms; at a 4 ms budget only bigger slices can serve.
+        let points = plan(ModelId::SwinTransformer, 4.0, 0.0);
+        let small = points
+            .iter()
+            .find(|p| p.partition == MigConfig::Small7.partition())
+            .unwrap();
+        assert_eq!(small.batch, 0, "1g should be infeasible: {small:?}");
+        let best = recommend(ModelId::SwinTransformer, 4.0, 0.0);
+        assert!(best.is_some(), "some partition must serve 4 ms");
+        assert!(best.unwrap().partition.slice.gpcs > 1);
+    }
+
+    #[test]
+    fn impossible_sla_yields_no_plan() {
+        assert!(recommend(ModelId::ConformerDefault, 0.5, 25.0).is_none());
+    }
+
+    #[test]
+    fn plan_is_sorted_and_covers_all_partitions() {
+        let points = plan(ModelId::CitriNet, 60.0, 5.0);
+        assert_eq!(points.len(), Partition::all_homogeneous().len());
+        for w in points.windows(2) {
+            assert!(w[0].qps >= w[1].qps);
+        }
+    }
+
+    #[test]
+    fn e2e_exceeds_exec_by_the_batching_wait() {
+        for p in plan(ModelId::MobileNet, 30.0, 0.0) {
+            if p.batch > 0 {
+                assert!(p.e2e_ms > p.exec_ms);
+            }
+        }
+    }
+}

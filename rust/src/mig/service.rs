@@ -1,0 +1,245 @@
+//! Calibrated vGPU service-time model.
+//!
+//! # Model
+//!
+//! Model-execution time of one batch on a vGPU with `g` GPCs is affine in
+//! the batch size `b` once the slice is compute-bound:
+//!
+//! ```text
+//! T(b) = t_ramp + b * t_samp
+//! ```
+//!
+//! * `t_samp` — marginal time per batched sample at saturation. Pinned by
+//!   the calibrated per-GPC plateau throughput:
+//!   `t_samp(g) = 1 / (plateau_qps_per_gpc * g^(1-GAMMA))`. The `GAMMA`
+//!   exponent models the well-documented efficiency loss of large slices
+//!   on small-batch inference (paper Fig 5: the aggregate throughput of
+//!   1g.5gb(7x) exceeds 7g.40gb(1x)); audio `t_samp` additionally scales
+//!   linearly with input length (FLOPs per audio-second).
+//! * `t_ramp` — batch-independent portion (kernel launches, weight
+//!   traffic). Derived from the paper's measured knee:
+//!   with the knee defined as the batch where throughput reaches
+//!   `knee_frac` (=0.9) of plateau, `b/(t_ramp + b*t_samp) = f/t_samp`
+//!   at `b = knee` gives `t_ramp = knee * t_samp * (1-f)/f = knee*t_samp/9`.
+//!
+//! Consequences (all measured by the profiler, not asserted):
+//! * throughput `b/T(b)` saturates at the plateau while latency keeps
+//!   growing linearly — the Fig 6 knee shape;
+//! * for audio, `T(knee) = (10/9)*knee*t_samp ≈ Time_knee` independent of
+//!   input length (Fig 15's ~35 ms observation) because `knee` is derived
+//!   from `Time_knee` below;
+//! * vision knees interpolate between the paper's measured 1g and 7g
+//!   values with a power law in `g` (16→128 is 8× over 7× the GPCs, i.e.
+//!   slightly super-linear).
+//!
+//! Tail dispersion: execution time samples multiply by a lognormal jitter
+//! (σ≈0.05) so p95 sits above the mean as in real measurements.
+
+use crate::models::{ModelKind, ModelSpec};
+use crate::util::Rng;
+
+/// Large-slice efficiency-loss exponent (see module docs).
+pub const GAMMA: f64 = 0.12;
+
+/// Throughput fraction of plateau that defines the knee.
+pub const KNEE_FRAC: f64 = 0.90;
+
+/// Lognormal sigma of execution-time jitter.
+pub const JITTER_SIGMA: f64 = 0.05;
+
+/// Service-time model for one (model, slice-size) pair.
+#[derive(Debug, Clone)]
+pub struct ServiceModel {
+    /// GPCs in the vGPU.
+    pub gpcs: usize,
+    /// Marginal per-sample seconds at a 2.5 s audio length (audio) or
+    /// fixed image size (vision).
+    t_samp_ref: f64,
+    /// Knee at the reference length.
+    knee_ref: usize,
+    /// Model kind (audio scales with length).
+    kind: ModelKind,
+    /// Audio Time_knee (s); drives length-dependent knees.
+    time_knee_s: f64,
+}
+
+/// Reference audio length (s) for `t_samp_ref` (the calibration length).
+pub const REF_AUDIO_S: f64 = 2.5;
+
+impl ServiceModel {
+    /// Build the calibrated model for `spec` on a `g`-GPC slice.
+    pub fn new(spec: &ModelSpec, gpcs: usize) -> ServiceModel {
+        assert!((1..=7).contains(&gpcs), "gpcs out of range");
+        let g = gpcs as f64;
+        let plateau_g = spec.plateau_qps_per_gpc * g.powf(1.0 - GAMMA);
+        let t_samp_ref = 1.0 / plateau_g;
+        let knee_ref = match spec.kind {
+            ModelKind::Vision => {
+                // Interpolate the paper's 1g / 7g knees with a power law.
+                let k1 = spec.knee_1g.expect("vision knee_1g") as f64;
+                let k7 = spec.knee_7g.expect("vision knee_7g") as f64;
+                let alpha = (k7 / k1).ln() / 7f64.ln();
+                (k1 * g.powf(alpha)).round().max(1.0) as usize
+            }
+            ModelKind::Audio => {
+                // Knee derived from the constant Time_knee:
+                // T(knee) = (10/9) * knee * t_samp = time_knee.
+                let b = KNEE_FRAC * spec.time_knee_s / t_samp_ref;
+                b.round().max(1.0) as usize
+            }
+        };
+        ServiceModel { gpcs, t_samp_ref, knee_ref, kind: spec.kind, time_knee_s: spec.time_knee_s }
+    }
+
+    /// Marginal per-sample time for inputs of `len_s` seconds.
+    pub fn t_samp(&self, len_s: f64) -> f64 {
+        match self.kind {
+            ModelKind::Vision => self.t_samp_ref,
+            ModelKind::Audio => self.t_samp_ref * (len_s / REF_AUDIO_S).max(1e-3),
+        }
+    }
+
+    /// Batch-independent ramp time for inputs of `len_s`.
+    pub fn t_ramp(&self, len_s: f64) -> f64 {
+        self.knee(len_s) as f64 * self.t_samp(len_s) * (1.0 - KNEE_FRAC) / KNEE_FRAC
+    }
+
+    /// Mean execution seconds of a batch of `b` inputs of `len_s` seconds.
+    pub fn exec_secs(&self, b: usize, len_s: f64) -> f64 {
+        assert!(b >= 1);
+        self.t_ramp(len_s) + b as f64 * self.t_samp(len_s)
+    }
+
+    /// Execution seconds with lognormal tail jitter.
+    pub fn exec_secs_jittered(&self, b: usize, len_s: f64, rng: &mut Rng) -> f64 {
+        self.exec_secs(b, len_s) * rng.lognormal(0.0, JITTER_SIGMA)
+    }
+
+    /// The analytic Batch_knee for inputs of `len_s` seconds.
+    pub fn knee(&self, len_s: f64) -> usize {
+        match self.kind {
+            ModelKind::Vision => self.knee_ref,
+            ModelKind::Audio => {
+                let b = KNEE_FRAC * self.time_knee_s / self.t_samp(len_s);
+                b.round().max(1.0) as usize
+            }
+        }
+    }
+
+    /// Saturated throughput of this vGPU, queries/s, at `len_s`.
+    pub fn plateau_qps(&self, len_s: f64) -> f64 {
+        1.0 / self.t_samp(len_s)
+    }
+
+    /// Throughput (queries/s) when running back-to-back batches of size `b`.
+    pub fn qps_at(&self, b: usize, len_s: f64) -> f64 {
+        b as f64 / self.exec_secs(b, len_s)
+    }
+
+    /// "GPU utilization" of the slice at batch `b` — the fraction of
+    /// plateau throughput achieved, matching how Fig 5 trends utilization
+    /// with batch size.
+    pub fn utilization(&self, b: usize, len_s: f64) -> f64 {
+        self.qps_at(b, len_s) / self.plateau_qps(len_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelId;
+
+    #[test]
+    fn vision_knees_match_paper_at_1g_and_7g() {
+        let cases = [(ModelId::MobileNet, 16, 128), (ModelId::SqueezeNet, 4, 32), (ModelId::SwinTransformer, 2, 16)];
+        for (m, k1, k7) in cases {
+            assert_eq!(ServiceModel::new(m.spec(), 1).knee(0.0), k1, "{m} 1g");
+            assert_eq!(ServiceModel::new(m.spec(), 7).knee(0.0), k7, "{m} 7g");
+        }
+    }
+
+    #[test]
+    fn knee_monotonic_in_gpcs() {
+        for m in ModelId::ALL {
+            let len = 2.5;
+            let mut prev = 0;
+            for g in 1..=7 {
+                let k = ServiceModel::new(m.spec(), g).knee(len);
+                assert!(k >= prev, "{m} g={g}");
+                prev = k;
+            }
+        }
+    }
+
+    #[test]
+    fn audio_latency_at_knee_is_time_knee_for_all_lengths() {
+        for m in ModelId::AUDIO {
+            for g in [1, 7] {
+                let sm = ServiceModel::new(m.spec(), g);
+                for len in [2.5, 5.0, 15.0, 25.0] {
+                    let knee = sm.knee(len);
+                    let t = sm.exec_secs(knee, len);
+                    if knee >= 2 {
+                        // Within rounding of 35 ms.
+                        assert!(
+                            (t - 0.035).abs() < 0.010,
+                            "{m} g={g} len={len}: T(knee)={t}"
+                        );
+                    } else {
+                        // knee == 1: the physical floor is the single-
+                        // input execution time, which EXCEEDS Time_knee
+                        // for long inputs on small slices (the yellow
+                        // batch-1 cells at the top of paper Fig 14a).
+                        assert!(t >= 0.020, "{m} g={g} len={len}: T(1)={t}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_slices_aggregate_beats_full_gpu() {
+        // Paper Fig 5: 1g.5gb(7x) aggregate plateau > 7g.40gb(1x).
+        for m in ModelId::ALL {
+            let len = 2.5;
+            let agg_small = 7.0 * ServiceModel::new(m.spec(), 1).plateau_qps(len);
+            let full = ServiceModel::new(m.spec(), 7).plateau_qps(len);
+            assert!(agg_small > full, "{m}: {agg_small} <= {full}");
+        }
+    }
+
+    #[test]
+    fn throughput_saturates_latency_grows() {
+        let sm = ServiceModel::new(ModelId::MobileNet.spec(), 1);
+        let knee = sm.knee(0.0);
+        let q_knee = sm.qps_at(knee, 0.0);
+        let q_4x = sm.qps_at(knee * 4, 0.0);
+        // <10% more throughput for 4x the batch...
+        assert!(q_4x / q_knee < 1.10);
+        // ...but ~4x the latency.
+        let t_ratio = sm.exec_secs(knee * 4, 0.0) / sm.exec_secs(knee, 0.0);
+        assert!(t_ratio > 3.0, "t_ratio={t_ratio}");
+    }
+
+    #[test]
+    fn utilization_ramps_faster_on_small_slices() {
+        // Paper Fig 5: fine-grained slices reach high utilization at small
+        // batches.
+        let m = ModelId::SqueezeNet.spec();
+        let u1 = ServiceModel::new(m, 1).utilization(4, 0.0);
+        let u7 = ServiceModel::new(m, 7).utilization(4, 0.0);
+        assert!(u1 > u7, "{u1} <= {u7}");
+        assert!(u1 >= 0.89); // knee batch => ~knee_frac utilization
+    }
+
+    #[test]
+    fn jitter_is_unbiased_and_small() {
+        let sm = ServiceModel::new(ModelId::CitriNet.spec(), 1);
+        let mut rng = Rng::new(1);
+        let base = sm.exec_secs(4, 2.5);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| sm.exec_secs_jittered(4, 2.5, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean / base - 1.0).abs() < 0.01, "mean ratio {}", mean / base);
+    }
+}

@@ -1,0 +1,163 @@
+//! Calibration table: the full-scale numbers that pin the MIG service
+//! model to the paper's measurements.
+//!
+//! Provenance per column:
+//! * `params_full` / `flops_full` — public numbers for the exact model
+//!   variants the paper names (TorchHub / NVIDIA NeMo model cards):
+//!   MobileNetV3-Small (2.5 M params, ~0.11 GFLOPs @224), SqueezeNet 1.1
+//!   (1.24 M, ~0.7 GFLOPs), Swin-T (28 M, ~9 GFLOPs), Conformer-CTC small
+//!   (13 M) / large-ish "default" (121 M), CitriNet-1024 (142 M). Audio
+//!   FLOPs are per second of 16 kHz input.
+//! * `knee_1g` / `knee_7g` — paper §3.2: Batch_knee 16/4/2 (1g.5gb) and
+//!   128/32/16 (7g.40gb) for MobileNet/SqueezeNet/Swin.
+//! * `time_knee_s` — paper Fig 15: ~35 ms for audio models regardless of
+//!   input length; vision values derived (knee·t_samp·10/9).
+//! * `plateau_qps_per_gpc` — calibrated so that (a) per-slice latency at
+//!   the knee lands in the few-to-tens-of-ms band the paper reports and
+//!   (b) Fig 8's preprocessing cores-required reproduce (CitriNet 393).
+//! * `cpu_preproc_s` — calibrated against Fig 8: cores_required =
+//!   ideal_aggregate_qps(1g.5gb(7x)) × cpu_preproc_s. CitriNet:
+//!   7 × 250 QPS × 0.2246 s ≈ 393 cores (the paper's headline number).
+//!   Vision ≈ 12 ms/image is in line with OpenCV JPEG decode+resize at
+//!   224², audio ≈ 225 ms at 2.5 s with Librosa's mel pipeline.
+
+use super::{ModelId, ModelKind, ModelSpec};
+
+/// 1 GFLOP.
+const G: f64 = 1e9;
+/// 1 million.
+const M: u64 = 1_000_000;
+
+static MOBILENET: ModelSpec = ModelSpec {
+    id: ModelId::MobileNet,
+    kind: ModelKind::Vision,
+    params_full: 2_500_000,
+    flops_full: 0.112 * G,
+    plateau_qps_per_gpc: 2500.0,
+    knee_1g: Some(16),
+    knee_7g: Some(128),
+    // (10/9) * knee * t_samp = (10/9) * 16 / 2500
+    time_knee_s: 0.00711,
+    cpu_preproc_s: 0.012,
+    raw_input_bytes: 110 * 1024,      // ~110 KB JPEG
+    tensor_bytes: 224 * 224 * 3 * 4,  // f32 CHW tensor
+};
+
+static SQUEEZENET: ModelSpec = ModelSpec {
+    id: ModelId::SqueezeNet,
+    kind: ModelKind::Vision,
+    params_full: 1_240_000,
+    flops_full: 0.70 * G,
+    plateau_qps_per_gpc: 1200.0,
+    knee_1g: Some(4),
+    knee_7g: Some(32),
+    time_knee_s: 0.0037,
+    cpu_preproc_s: 0.012,
+    raw_input_bytes: 110 * 1024,
+    tensor_bytes: 224 * 224 * 3 * 4,
+};
+
+static SWIN: ModelSpec = ModelSpec {
+    id: ModelId::SwinTransformer,
+    kind: ModelKind::Vision,
+    params_full: 28 * M,
+    flops_full: 9.0 * G,
+    plateau_qps_per_gpc: 220.0,
+    knee_1g: Some(2),
+    knee_7g: Some(16),
+    time_knee_s: 0.0101,
+    // Swin's eval transform (bicubic resize 256 -> center-crop 224 with
+    // antialiasing) is markedly heavier than the small CNNs' bilinear
+    // pipeline; calibrated so Fig 8's average drop lands near the
+    // paper's 75.6%.
+    cpu_preproc_s: 0.060,
+    raw_input_bytes: 110 * 1024,
+    tensor_bytes: 224 * 224 * 3 * 4,
+};
+
+static CONFORMER_SMALL: ModelSpec = ModelSpec {
+    id: ModelId::ConformerSmall,
+    kind: ModelKind::Audio,
+    params_full: 13 * M,
+    flops_full: 2.6 * G, // per second of audio
+    plateau_qps_per_gpc: 180.0,
+    knee_1g: None,
+    knee_7g: None,
+    time_knee_s: 0.035,
+    cpu_preproc_s: 0.200, // at 2.5 s input
+    raw_input_bytes: (2.5 * 16000.0 * 2.0) as u64, // 16 kHz s16 PCM, 2.5 s
+    tensor_bytes: 80 * 251 * 4,                    // 80 mel bins x ~100 fr/s
+};
+
+static CONFORMER_DEFAULT: ModelSpec = ModelSpec {
+    id: ModelId::ConformerDefault,
+    kind: ModelKind::Audio,
+    params_full: 121 * M,
+    flops_full: 21.0 * G,
+    plateau_qps_per_gpc: 60.0,
+    knee_1g: None,
+    knee_7g: None,
+    time_knee_s: 0.035,
+    cpu_preproc_s: 0.200,
+    raw_input_bytes: (2.5 * 16000.0 * 2.0) as u64,
+    tensor_bytes: 80 * 251 * 4,
+};
+
+static CITRINET: ModelSpec = ModelSpec {
+    id: ModelId::CitriNet,
+    kind: ModelKind::Audio,
+    params_full: 142 * M,
+    flops_full: 10.5 * G,
+    plateau_qps_per_gpc: 250.0,
+    knee_1g: None,
+    knee_7g: None,
+    time_knee_s: 0.035,
+    // Pinned to the paper's 393-core number:
+    // 7 slices x 250 QPS x 0.2246 s = 393.0 cores.
+    cpu_preproc_s: 0.2246,
+    raw_input_bytes: (2.5 * 16000.0 * 2.0) as u64,
+    tensor_bytes: 80 * 251 * 4,
+};
+
+/// Static spec for a model id.
+pub fn spec(id: ModelId) -> &'static ModelSpec {
+    match id {
+        ModelId::MobileNet => &MOBILENET,
+        ModelId::SqueezeNet => &SQUEEZENET,
+        ModelId::SwinTransformer => &SWIN,
+        ModelId::ConformerSmall => &CONFORMER_SMALL,
+        ModelId::ConformerDefault => &CONFORMER_DEFAULT,
+        ModelId::CitriNet => &CITRINET,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn citrinet_cores_required_is_393() {
+        let s = spec(ModelId::CitriNet);
+        let ideal_qps = 7.0 * s.plateau_qps_per_gpc;
+        let cores = ideal_qps * s.cpu_preproc_s;
+        assert!((cores - 393.0).abs() < 1.0, "cores={cores}");
+    }
+
+    #[test]
+    fn knee_ratio_7g_over_1g_is_8x() {
+        for m in ModelId::VISION {
+            let s = spec(m);
+            assert_eq!(s.knee_7g.unwrap() / s.knee_1g.unwrap(), 8, "{m}");
+        }
+    }
+
+    #[test]
+    fn vision_time_knee_consistent() {
+        // time_knee = (10/9) * knee / plateau (see mig::ServiceModel docs)
+        for m in ModelId::VISION {
+            let s = spec(m);
+            let expect = (10.0 / 9.0) * s.knee_1g.unwrap() as f64 / s.plateau_qps_per_gpc;
+            assert!((s.time_knee_s - expect).abs() / expect < 0.01, "{m}: {expect}");
+        }
+    }
+}

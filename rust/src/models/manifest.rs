@@ -1,0 +1,201 @@
+//! `artifacts/manifest.json` — the contract between build-time Python and
+//! the runtime Rust binary.
+//!
+//! `python/compile/aot.py` lowers every (model × batch × audio-length
+//! bucket) plus every preprocessing kernel to HLO text and records each
+//! artifact here with its input/output shapes and analytic FLOP counts for
+//! the *lite* graph that actually executes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// One lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// Registry key, e.g. `model/mobilenet/b4` or `kernel/image_pipeline/b1`.
+    pub key: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Model or kernel name.
+    pub name: String,
+    /// Batch size this artifact was lowered at.
+    pub batch: usize,
+    /// Audio-length bucket in seconds (0 for vision/kernels without one).
+    pub len_s: f64,
+    /// DATA input shapes, row-major (each a Vec of dims) — excludes the
+    /// leading weight parameters.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes.
+    pub outputs: Vec<Vec<usize>>,
+    /// Binary side file holding the leading constant parameters (model
+    /// weights / kernel matrices) as concatenated f32 LE, or None.
+    pub weights_file: Option<String>,
+    /// Shapes of the weight parameters, in HLO parameter order.
+    pub weight_shapes: Vec<Vec<usize>>,
+    /// Analytic forward FLOPs of the lite graph (from JAX cost analysis).
+    pub flops_lite: f64,
+    /// Lite-graph parameter count.
+    pub params_lite: u64,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> anyhow::Result<Manifest> {
+        let path = Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        let doc = json::parse(&text)?;
+        let mut entries = BTreeMap::new();
+        for item in doc.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let e = ArtifactEntry::from_json(item)?;
+            entries.insert(e.key.clone(), e);
+        }
+        Ok(Manifest { dir: PathBuf::from(dir), entries })
+    }
+
+    /// Whether a manifest exists under `dir`.
+    pub fn exists(dir: &str) -> bool {
+        Path::new(dir).join("manifest.json").is_file()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.values()
+    }
+
+    /// All artifacts for a given model/kernel name.
+    pub fn for_name<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a ArtifactEntry> {
+        self.entries.values().filter(move |e| e.name == name)
+    }
+
+    /// Model artifact for (name, batch, len bucket), if lowered.
+    pub fn model(&self, name: &str, batch: usize, len_s: f64) -> Option<&ArtifactEntry> {
+        self.entries.values().find(|e| {
+            e.key.starts_with("model/") && e.name == name && e.batch == batch && (e.len_s - len_s).abs() < 1e-6
+        })
+    }
+
+    /// Largest lowered batch ≤ `batch` for a model (the runtime pads up to
+    /// the nearest lowered batch; this finds the floor for splitting).
+    pub fn batches_for(&self, name: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|e| e.name == name && e.key.starts_with("model/"))
+            .map(|e| e.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> anyhow::Result<ArtifactEntry> {
+        let shapes = |key: &str| -> anyhow::Result<Vec<Vec<usize>>> {
+            Ok(v.req(key)?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect::<Vec<_>>()
+                })
+                .collect())
+        };
+        Ok(ArtifactEntry {
+            key: v.req("key")?.as_str().unwrap_or_default().to_string(),
+            file: v.req("file")?.as_str().unwrap_or_default().to_string(),
+            name: v.req("name")?.as_str().unwrap_or_default().to_string(),
+            batch: v.req("batch")?.as_usize().unwrap_or(1),
+            len_s: v.get("len_s").and_then(Json::as_f64).unwrap_or(0.0),
+            inputs: shapes("inputs")?,
+            outputs: shapes("outputs")?,
+            weights_file: v
+                .get("weights_file")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            weight_shapes: if v.get("weight_shapes").is_some() {
+                shapes("weight_shapes")?
+            } else {
+                Vec::new()
+            },
+            flops_lite: v.get("flops_lite").and_then(Json::as_f64).unwrap_or(0.0),
+            params_lite: v.get("params_lite").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "version": 1,
+          "artifacts": [
+            {"key": "model/mobilenet/b1", "file": "mobilenet_b1.hlo.txt",
+             "name": "mobilenet", "batch": 1, "len_s": 0,
+             "inputs": [[1, 64, 64, 3]], "outputs": [[1, 1000]],
+             "flops_lite": 1e7, "params_lite": 250000},
+            {"key": "model/mobilenet/b4", "file": "mobilenet_b4.hlo.txt",
+             "name": "mobilenet", "batch": 4, "len_s": 0,
+             "inputs": [[4, 64, 64, 3]], "outputs": [[4, 1000]],
+             "flops_lite": 4e7, "params_lite": 250000},
+            {"key": "kernel/image_pipeline/b1", "file": "k_img_b1.hlo.txt",
+             "name": "image_pipeline", "batch": 1, "len_s": 0,
+             "inputs": [[1, 96, 96, 3]], "outputs": [[1, 64, 64, 3]],
+             "flops_lite": 1e6, "params_lite": 0}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn parse_and_query() {
+        let dir = std::env::temp_dir().join("preba_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.len(), 3);
+        let e = m.model("mobilenet", 4, 0.0).unwrap();
+        assert_eq!(e.inputs[0], vec![4, 64, 64, 3]);
+        assert_eq!(m.batches_for("mobilenet"), vec![1, 4]);
+        assert!(m.get("kernel/image_pipeline/b1").is_some());
+        assert!(m.model("mobilenet", 2, 0.0).is_none());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

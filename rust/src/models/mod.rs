@@ -1,0 +1,221 @@
+//! Model registry: the six paper workloads.
+//!
+//! Each [`ModelSpec`] carries two views of a model:
+//!
+//! * **full-scale performance numbers** (`flops_full`, `params_full`,
+//!   `plateau_qps_per_gpc`, knee targets) describing the *paper's* models
+//!   (MobileNetV3-Small, SqueezeNet 1.1, Swin-T, NeMo Conformer
+//!   small/default, CitriNet) on the A100 — these drive the calibrated MIG
+//!   service-time model (`mig::ServiceModel`) used by the figure
+//!   simulations; and
+//! * **lite execution artifacts** — the JAX re-implementations lowered by
+//!   `python/compile/aot.py` and really executed on the PJRT CPU client by
+//!   the real driver (shape-faithful, reduced width/depth so a single CPU
+//!   core can run them).
+//!
+//! The split is documented in DESIGN.md §4 (substitution table): batching
+//! and scheduling behaviour depends on the *shape* of the service-time
+//! curve, which is pinned to the paper's measured knees; numerics are
+//! validated by executing the lite HLO for real.
+
+pub mod calib;
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest};
+
+/// The six paper workloads (§5 "Benchmarks").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelId {
+    MobileNet,
+    SqueezeNet,
+    SwinTransformer,
+    ConformerSmall,
+    ConformerDefault,
+    CitriNet,
+}
+
+impl ModelId {
+    pub const ALL: [ModelId; 6] = [
+        ModelId::MobileNet,
+        ModelId::SqueezeNet,
+        ModelId::SwinTransformer,
+        ModelId::ConformerSmall,
+        ModelId::ConformerDefault,
+        ModelId::CitriNet,
+    ];
+
+    pub const VISION: [ModelId; 3] =
+        [ModelId::MobileNet, ModelId::SqueezeNet, ModelId::SwinTransformer];
+
+    pub const AUDIO: [ModelId; 3] =
+        [ModelId::ConformerSmall, ModelId::ConformerDefault, ModelId::CitriNet];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelId::MobileNet => "mobilenet",
+            ModelId::SqueezeNet => "squeezenet",
+            ModelId::SwinTransformer => "swin",
+            ModelId::ConformerSmall => "conformer_small",
+            ModelId::ConformerDefault => "conformer_default",
+            ModelId::CitriNet => "citrinet",
+        }
+    }
+
+    /// Paper display name.
+    pub fn display(&self) -> &'static str {
+        match self {
+            ModelId::MobileNet => "MobileNet",
+            ModelId::SqueezeNet => "SqueezeNet",
+            ModelId::SwinTransformer => "Swin-Transformer",
+            ModelId::ConformerSmall => "Conformer(small)",
+            ModelId::ConformerDefault => "Conformer(default)",
+            ModelId::CitriNet => "CitriNet",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelId> {
+        ModelId::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    pub fn kind(&self) -> ModelKind {
+        match self {
+            ModelId::MobileNet | ModelId::SqueezeNet | ModelId::SwinTransformer => ModelKind::Vision,
+            _ => ModelKind::Audio,
+        }
+    }
+
+    pub fn spec(&self) -> &'static ModelSpec {
+        calib::spec(*self)
+    }
+}
+
+impl std::fmt::Display for ModelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.display())
+    }
+}
+
+/// Input modality (paper §2.3: image vs audio preprocessing pipelines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Vision,
+    Audio,
+}
+
+/// Full static description of one workload. See module docs for the
+/// full-scale vs lite split.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub id: ModelId,
+    pub kind: ModelKind,
+
+    // ---- full-scale (paper model) numbers, drive the service model ----
+    /// Parameter count of the paper's model.
+    pub params_full: u64,
+    /// Forward-pass FLOPs for ONE sample. For audio this is per second of
+    /// input audio (multiply by length); vision inputs are fixed 224x224x3.
+    pub flops_full: f64,
+    /// Measured-calibrated saturated throughput of a 1-GPC (1g.5gb) slice,
+    /// queries/s, for a 2.5 s audio input where applicable. This pins the
+    /// service-model plateau (see `mig::ServiceModel`).
+    pub plateau_qps_per_gpc: f64,
+    /// Paper-measured Batch_knee on a 1g.5gb slice (vision only; audio
+    /// knees derive from Time_knee — paper Fig 15). Fig 6: 16 / 4 / 2.
+    pub knee_1g: Option<usize>,
+    /// Paper-measured Batch_knee on the unpartitioned 7g.40gb GPU
+    /// (vision only). Fig 6: 128 / 32 / 16.
+    pub knee_7g: Option<usize>,
+    /// Tail latency at the knee (`Time_knee`), seconds. Audio: ~0.035
+    /// regardless of length (paper Fig 15). Vision: derived from knee and
+    /// plateau, stored for reporting.
+    pub time_knee_s: f64,
+
+    // ---- preprocessing (paper §3.3 / Fig 8) ----
+    /// CPU time to preprocess ONE input on ONE core, seconds (OpenCV /
+    /// Librosa path). Audio: per request at 2.5 s input; scales with
+    /// length. Calibrated so Fig 8's cores-required reproduce (CitriNet:
+    /// 393 cores).
+    pub cpu_preproc_s: f64,
+    /// Raw input bytes arriving at the server (JPEG / PCM), per request at
+    /// the reference input size.
+    pub raw_input_bytes: u64,
+    /// Preprocessed tensor bytes handed to the GPU per request.
+    pub tensor_bytes: u64,
+}
+
+impl ModelSpec {
+    /// Forward FLOPs for a batch of `b` inputs of `len_s` seconds (audio)
+    /// or fixed-size images (vision; `len_s` ignored).
+    pub fn flops(&self, b: usize, len_s: f64) -> f64 {
+        match self.kind {
+            ModelKind::Vision => self.flops_full * b as f64,
+            ModelKind::Audio => self.flops_full * len_s * b as f64,
+        }
+    }
+
+    /// Per-request preprocessing CPU seconds for an input of `len_s`.
+    pub fn cpu_preproc_secs(&self, len_s: f64) -> f64 {
+        match self.kind {
+            ModelKind::Vision => self.cpu_preproc_s,
+            // Audio preprocessing cost scales with the number of samples.
+            ModelKind::Audio => self.cpu_preproc_s * (len_s / 2.5),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_complete() {
+        for m in ModelId::ALL {
+            let s = m.spec();
+            assert_eq!(s.id, m);
+            assert!(s.flops_full > 0.0);
+            assert!(s.plateau_qps_per_gpc > 0.0);
+            assert!(s.cpu_preproc_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn vision_have_paper_knees() {
+        assert_eq!(ModelId::MobileNet.spec().knee_1g, Some(16));
+        assert_eq!(ModelId::SqueezeNet.spec().knee_1g, Some(4));
+        assert_eq!(ModelId::SwinTransformer.spec().knee_1g, Some(2));
+        assert_eq!(ModelId::MobileNet.spec().knee_7g, Some(128));
+        assert_eq!(ModelId::SqueezeNet.spec().knee_7g, Some(32));
+        assert_eq!(ModelId::SwinTransformer.spec().knee_7g, Some(16));
+    }
+
+    #[test]
+    fn audio_time_knee_is_35ms() {
+        for m in ModelId::AUDIO {
+            assert!((m.spec().time_knee_s - 0.035).abs() < 1e-9, "{m}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in ModelId::ALL {
+            assert_eq!(ModelId::parse(m.name()), Some(m));
+        }
+        assert_eq!(ModelId::parse("nope"), None);
+    }
+
+    #[test]
+    fn audio_flops_scale_with_length() {
+        let s = ModelId::CitriNet.spec();
+        assert!((s.flops(2, 5.0) / s.flops(1, 2.5) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kinds() {
+        for m in ModelId::VISION {
+            assert_eq!(m.kind(), ModelKind::Vision);
+        }
+        for m in ModelId::AUDIO {
+            assert_eq!(m.kind(), ModelKind::Audio);
+        }
+    }
+}

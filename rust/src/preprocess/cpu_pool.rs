@@ -1,0 +1,148 @@
+//! Host-CPU preprocessing pool with core contention (paper §3.3, Fig 8/9).
+//!
+//! Models the baseline: each request's preprocessing occupies one core for
+//! the model's calibrated per-input CPU time. With `cpu_cores - reserved`
+//! cores and demand of `qps × cpu_secs` core-seconds per second, the pool
+//! saturates exactly the way Fig 9 shows (utilization ~90% with only a few
+//! inference servers active, throughput flat beyond).
+//!
+//! Implemented as a c-server FIFO queue inside the DES: `admit` returns
+//! the completion time for a request, tracking per-core busy-until times.
+
+use crate::clock::{secs, Nanos};
+use crate::util::Rng;
+
+/// Relative jitter (lognormal sigma) on CPU preprocessing times.
+const CPU_JITTER_SIGMA: f64 = 0.10;
+
+/// A pool of identical cores serving preprocessing jobs FIFO.
+#[derive(Debug)]
+pub struct CpuPool {
+    /// busy-until time per core.
+    cores: Vec<Nanos>,
+    /// Busy core-nanoseconds accumulated (for utilization).
+    busy_ns: u128,
+    /// Jobs served.
+    pub served: u64,
+    rng: Rng,
+}
+
+impl CpuPool {
+    /// `n` usable cores (already minus the serving-reserved ones).
+    pub fn new(n: usize, rng: Rng) -> CpuPool {
+        assert!(n > 0);
+        CpuPool { cores: vec![0; n], busy_ns: 0, served: 0, rng }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Admit a job arriving at `now` needing `service_secs` of one core.
+    /// Returns (start, completion) times under FIFO earliest-core
+    /// assignment.
+    pub fn admit(&mut self, now: Nanos, service_secs: f64) -> (Nanos, Nanos) {
+        let jitter = self.rng.lognormal(0.0, CPU_JITTER_SIGMA);
+        let service = secs(service_secs * jitter);
+        // Earliest-available core.
+        let (idx, &free_at) =
+            self.cores.iter().enumerate().min_by_key(|(_, &t)| t).expect("non-empty pool");
+        let start = now.max(free_at);
+        let done = start + service;
+        self.cores[idx] = done;
+        self.busy_ns += service as u128;
+        self.served += 1;
+        (start, done)
+    }
+
+    /// Pool utilization over `[0, horizon]`.
+    pub fn utilization(&self, horizon: Nanos) -> f64 {
+        if horizon == 0 {
+            return 0.0;
+        }
+        // A core can be "busy" past the horizon if jobs queued up; clamp
+        // to 1.0 — real utilization cannot exceed the pool.
+        (self.busy_ns as f64 / (horizon as f64 * self.cores.len() as f64)).min(1.0)
+    }
+
+    /// Max sustainable throughput for jobs of `service_secs`, jobs/s.
+    pub fn capacity_qps(&self, service_secs: f64) -> f64 {
+        self.cores.len() as f64 / service_secs
+    }
+
+    /// Current backlog depth proxy: how far the most-loaded core's
+    /// busy-until exceeds `now` (seconds).
+    pub fn backlog_secs(&self, now: Nanos) -> f64 {
+        let max_busy = self.cores.iter().copied().max().unwrap_or(0);
+        (max_busy.saturating_sub(now)) as f64 * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::{millis, to_secs};
+
+    fn pool(n: usize) -> CpuPool {
+        CpuPool::new(n, Rng::new(7))
+    }
+
+    #[test]
+    fn single_core_serializes() {
+        let mut p = pool(1);
+        let (s1, d1) = p.admit(0, 0.010);
+        let (s2, d2) = p.admit(0, 0.010);
+        assert_eq!(s1, 0);
+        assert_eq!(s2, d1, "second job waits for first");
+        assert!(d2 > d1);
+    }
+
+    #[test]
+    fn parallel_cores_run_concurrently() {
+        let mut p = pool(4);
+        let dones: Vec<Nanos> = (0..4).map(|_| p.admit(0, 0.010).1).collect();
+        // All four run in parallel: completions within jitter (~±30%).
+        let max = *dones.iter().max().unwrap() as f64;
+        let min = *dones.iter().min().unwrap() as f64;
+        assert!(max / min < 1.6, "not parallel: {dones:?}");
+    }
+
+    #[test]
+    fn saturation_throughput_matches_capacity() {
+        // Offer 2x the capacity and check served throughput ~= capacity.
+        let mut p = pool(8);
+        let service = 0.010; // 10 ms
+        let cap = p.capacity_qps(service); // 800/s
+        let offered = cap * 2.0;
+        let dt = secs(1.0 / offered);
+        let mut last_done = 0;
+        let n = 4000;
+        for i in 0..n {
+            let (_, done) = p.admit(i as Nanos * dt, service);
+            last_done = last_done.max(done);
+        }
+        let achieved = n as f64 / to_secs(last_done);
+        assert!((achieved / cap - 1.0).abs() < 0.05, "achieved={achieved} cap={cap}");
+    }
+
+    #[test]
+    fn utilization_tracks_load() {
+        // 50% load: 100 jobs x 10 ms over 2 s on ONE core = 1 s busy
+        // out of 2 core-seconds.
+        let mut p = pool(1);
+        for i in 0..100 {
+            p.admit(millis(i as f64 * 20.0), 0.010);
+        }
+        let u = p.utilization(secs(2.0));
+        assert!((u - 0.5).abs() < 0.1, "u={u}");
+    }
+
+    #[test]
+    fn backlog_grows_under_overload() {
+        let mut p = pool(1);
+        for _ in 0..100 {
+            p.admit(0, 0.010);
+        }
+        assert!(p.backlog_secs(0) > 0.9);
+    }
+}

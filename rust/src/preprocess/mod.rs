@@ -1,0 +1,23 @@
+//! Data preprocessing: the stage the paper identifies as MIG's bottleneck
+//! (§3.3) and the one PREBA offloads to the DPU.
+//!
+//! Three parts:
+//! * [`ops`] — *real* Rust implementations of the full pipelines the paper
+//!   runs with OpenCV/Librosa (image: dequantize + 8×8 IDCT decode,
+//!   bilinear resize, crop, normalize; audio: linear resample, Hann
+//!   window + DFT magnitude, mel filterbank, log, global mean/var
+//!   normalize). The real-PJRT driver runs these on the host for the
+//!   CPU-baseline path and validates them against the Pallas kernels'
+//!   pure-jnp oracles via golden vectors.
+//! * [`cpu_pool`] — the host-CPU contention model used by the DES: a
+//!   c-server queue over `cpu_cores - reserved` cores with per-model
+//!   service times from the calibration table, reproducing Fig 8/9.
+//! * [`pipeline`] — per-model pipeline descriptions shared by the CPU path
+//!   and the DPU (stage names/costs mirror Fig 4 / Fig 11).
+
+pub mod cpu_pool;
+pub mod ops;
+pub mod pipeline;
+
+pub use cpu_pool::CpuPool;
+pub use pipeline::{PipelineStage, StageKind};

@@ -1,0 +1,627 @@
+//! Real preprocessing implementations (the compute the paper's baseline
+//! runs with OpenCV / Librosa, and PREBA offloads to the DPU).
+//!
+//! These mirror the Pallas kernels in `python/compile/kernels/` operation
+//! for operation so the CPU path and the DPU path produce the same
+//! tensors; `rust/tests/integration_runtime.rs` cross-checks them against
+//! the kernels' lowered HLO executed on PJRT (which pytest in turn pins
+//! to the pure-jnp oracle `ref.py`).
+//!
+//! Image pipeline (paper Fig 4a): decode (dequantize + 8×8 IDCT — the
+//! compute core of JPEG decoding; entropy decode is control flow and is
+//! cost-modeled, see DESIGN.md §Hardware-Adaptation) → bilinear resize →
+//! center crop → per-channel normalize.
+//!
+//! Audio pipeline (paper Fig 4b): linear resample → Hann-windowed framing
+//! → DFT magnitude (matmul form) → mel filterbank → log → global
+//! mean/variance normalize.
+
+use std::f32::consts::PI;
+
+use once_cell::sync::Lazy;
+
+// ---------------------------------------------------------------------------
+// §Perf: precomputed tables (EXPERIMENTS.md §Perf, L3 iteration log).
+// The audio pipeline previously recomputed the 512x257 cos/sin DFT bases
+// (~263k transcendental evals) and the mel filterbank on EVERY request;
+// the image pipeline rebuilt the resize matrices per call. Caching these
+// and exploiting their sparsity is the single largest hot-path win
+// (audio 24.1 ms -> see EXPERIMENTS.md; exactness is unchanged — the
+// same values are computed once instead of per call).
+// ---------------------------------------------------------------------------
+
+static DFT_BASES_512: Lazy<(Vec<f32>, Vec<f32>)> = Lazy::new(|| dft_bases(512));
+static MEL_FB_80_512: Lazy<Vec<f32>> = Lazy::new(|| mel_filterbank(80, 512, 16000.0));
+static HANN_512: Lazy<Vec<f32>> = Lazy::new(|| hann(512));
+
+/// Raw (cos, -sin) DFT bases, (n_bins x n_fft) row-major each.
+pub fn dft_bases(n_fft: usize) -> (Vec<f32>, Vec<f32>) {
+    let n_bins = n_fft / 2 + 1;
+    let mut cos_b = vec![0f32; n_bins * n_fft];
+    let mut sin_b = vec![0f32; n_bins * n_fft];
+    for k in 0..n_bins {
+        for n in 0..n_fft {
+            let ang = 2.0 * PI * (k * n) as f32 / n_fft as f32;
+            cos_b[k * n_fft + n] = ang.cos();
+            sin_b[k * n_fft + n] = -ang.sin();
+        }
+    }
+    (cos_b, sin_b)
+}
+
+/// Sparse form of a bilinear resize matrix: per output index, the two
+/// source taps `(i0, i1, frac)` with `w0 = 1-frac`, `w1 = frac`. Exactly
+/// equivalent to the dense matrix (it has <= 2 nonzeros per row by
+/// construction).
+fn resize_taps(src: usize, dst: usize) -> Vec<(usize, usize, f32)> {
+    let scale = src as f64 / dst as f64;
+    (0..dst)
+        .map(|d| {
+            let pos = (d as f64 + 0.5) * scale - 0.5;
+            let lo = pos.floor();
+            let frac = (pos - lo) as f32;
+            let i0 = (lo as isize).clamp(0, src as isize - 1) as usize;
+            let i1 = (lo as isize + 1).clamp(0, src as isize - 1) as usize;
+            (i0, i1, frac)
+        })
+        .collect()
+}
+
+// --------------------------------------------------------------------------
+// Image ops
+// --------------------------------------------------------------------------
+
+/// The JPEG luma quantization table (Annex K) scaled by quality 75 — used
+/// as the reference dequantization table for the decode stage.
+pub fn jpeg_quant_table() -> [f32; 64] {
+    const BASE: [u16; 64] = [
+        16, 11, 10, 16, 24, 40, 51, 61, 12, 12, 14, 19, 26, 58, 60, 55, 14, 13, 16, 24, 40, 57,
+        69, 56, 14, 17, 22, 29, 51, 87, 80, 62, 18, 22, 37, 56, 68, 109, 103, 77, 24, 35, 55, 64,
+        81, 104, 113, 92, 49, 64, 78, 87, 103, 121, 120, 101, 72, 92, 95, 98, 112, 100, 103, 99,
+    ];
+    // quality 75 -> scale = 200 - 2*75 = 50 (%).
+    let mut out = [0f32; 64];
+    for i in 0..64 {
+        out[i] = ((BASE[i] as f32 * 50.0 / 100.0).floor()).max(1.0);
+    }
+    out
+}
+
+/// 8×8 inverse DCT-II basis matrix `C` such that `pixels = C^T * X * C`
+/// for a coefficient block `X` (row-major 8×8).
+pub fn idct8_basis() -> [f32; 64] {
+    let mut c = [0f32; 64];
+    for k in 0..8 {
+        let a = if k == 0 { (1.0f32 / 8.0).sqrt() } else { (2.0f32 / 8.0).sqrt() };
+        for n in 0..8 {
+            c[k * 8 + n] = a * ((PI / 8.0) * (n as f32 + 0.5) * k as f32).cos();
+        }
+    }
+    c
+}
+
+/// Decode one image: per-8×8-block dequantize + 2-D IDCT, then +128 shift.
+///
+/// `coeffs` is HWC with H, W multiples of 8 holding quantized DCT
+/// coefficients per channel; output is pixel-domain HWC in [0, 255]-ish
+/// (not clamped — matches the jnp reference).
+pub fn decode_blocks(coeffs: &[f32], h: usize, w: usize, ch: usize) -> Vec<f32> {
+    assert_eq!(coeffs.len(), h * w * ch);
+    assert!(h % 8 == 0 && w % 8 == 0, "decode needs 8-aligned dims");
+    let q = jpeg_quant_table();
+    let c = idct8_basis();
+    let mut out = vec![0f32; coeffs.len()];
+    let mut x = [0f32; 64];
+    let mut tmp = [0f32; 64];
+    for by in (0..h).step_by(8) {
+        for bx in (0..w).step_by(8) {
+            for cc in 0..ch {
+                // Gather + dequantize the block.
+                for i in 0..8 {
+                    for j in 0..8 {
+                        x[i * 8 + j] = coeffs[((by + i) * w + bx + j) * ch + cc] * q[i * 8 + j];
+                    }
+                }
+                // tmp = C^T * X  (tmp[i][j] = sum_k C[k][i] * X[k][j])
+                for i in 0..8 {
+                    for j in 0..8 {
+                        let mut s = 0f32;
+                        for k in 0..8 {
+                            s += c[k * 8 + i] * x[k * 8 + j];
+                        }
+                        tmp[i * 8 + j] = s;
+                    }
+                }
+                // out = tmp * C  (out[i][j] = sum_k tmp[i][k] * C[k][j])
+                for i in 0..8 {
+                    for j in 0..8 {
+                        let mut s = 0f32;
+                        for k in 0..8 {
+                            s += tmp[i * 8 + k] * c[k * 8 + j];
+                        }
+                        out[((by + i) * w + bx + j) * ch + cc] = s + 128.0;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Row/column interpolation matrix for separable bilinear resize from
+/// `src` to `dst` samples (align_corners=false, half-pixel centers —
+/// matches `jax.image.resize(method="linear")`).
+pub fn resize_matrix(src: usize, dst: usize) -> Vec<f32> {
+    let mut m = vec![0f32; dst * src];
+    let scale = src as f64 / dst as f64;
+    for d in 0..dst {
+        let pos = (d as f64 + 0.5) * scale - 0.5;
+        let lo = pos.floor();
+        let frac = (pos - lo) as f32;
+        let i0 = (lo as isize).clamp(0, src as isize - 1) as usize;
+        let i1 = (lo as isize + 1).clamp(0, src as isize - 1) as usize;
+        m[d * src + i0] += 1.0 - frac;
+        m[d * src + i1] += frac;
+    }
+    m
+}
+
+/// Separable bilinear resize of an HWC image: rows then columns.
+///
+/// §Perf: evaluated in sparse two-tap form rather than dense matmul —
+/// O(out * 2) instead of O(out * src) — numerically identical to the
+/// dense matrix (<= 2 nonzeros per row; `tests::resize_*` pin this).
+pub fn resize_bilinear(img: &[f32], h: usize, w: usize, ch: usize, oh: usize, ow: usize) -> Vec<f32> {
+    assert_eq!(img.len(), h * w * ch);
+    let row_taps = resize_taps(h, oh);
+    let col_taps = resize_taps(w, ow);
+    // rows: tmp[oy][x][c] = (1-f)*img[y0][x][c] + f*img[y1][x][c]
+    let mut tmp = vec![0f32; oh * w * ch];
+    for (oy, &(y0, y1, f)) in row_taps.iter().enumerate() {
+        let (w0, w1) = (1.0 - f, f);
+        let src0 = &img[y0 * w * ch..(y0 + 1) * w * ch];
+        let src1 = &img[y1 * w * ch..(y1 + 1) * w * ch];
+        let dst = &mut tmp[oy * w * ch..(oy + 1) * w * ch];
+        for ((d, a), b) in dst.iter_mut().zip(src0.iter()).zip(src1.iter()) {
+            *d = w0 * a + w1 * b;
+        }
+    }
+    // cols: out[oy][ox][c] = (1-f)*tmp[oy][x0][c] + f*tmp[oy][x1][c]
+    let mut out = vec![0f32; oh * ow * ch];
+    for oy in 0..oh {
+        let row = &tmp[oy * w * ch..(oy + 1) * w * ch];
+        let orow = &mut out[oy * ow * ch..(oy + 1) * ow * ch];
+        for (ox, &(x0, x1, f)) in col_taps.iter().enumerate() {
+            let (w0, w1) = (1.0 - f, f);
+            for cc in 0..ch {
+                orow[ox * ch + cc] = w0 * row[x0 * ch + cc] + w1 * row[x1 * ch + cc];
+            }
+        }
+    }
+    out
+}
+
+/// Center crop an HWC image to `(ch_h, ch_w)`.
+pub fn center_crop(img: &[f32], h: usize, w: usize, ch: usize, oh: usize, ow: usize) -> Vec<f32> {
+    assert!(oh <= h && ow <= w);
+    let y0 = (h - oh) / 2;
+    let x0 = (w - ow) / 2;
+    let mut out = vec![0f32; oh * ow * ch];
+    for y in 0..oh {
+        for x in 0..ow {
+            for cc in 0..ch {
+                out[(y * ow + x) * ch + cc] = img[((y0 + y) * w + x0 + x) * ch + cc];
+            }
+        }
+    }
+    out
+}
+
+/// ImageNet per-channel normalization of a [0,255] HWC image.
+pub fn normalize_image(img: &mut [f32], ch: usize, mean: &[f32], std: &[f32]) {
+    assert_eq!(mean.len(), ch);
+    assert_eq!(std.len(), ch);
+    for px in img.chunks_exact_mut(ch) {
+        for (cc, v) in px.iter_mut().enumerate() {
+            *v = (*v / 255.0 - mean[cc]) / std[cc];
+        }
+    }
+}
+
+/// Full image pipeline: decode -> resize -> crop -> normalize.
+/// Input: quantized DCT coefficient image (src_h × src_w × ch).
+pub fn image_pipeline(
+    coeffs: &[f32],
+    src_h: usize,
+    src_w: usize,
+    ch: usize,
+    resize_to: usize,
+    crop_to: usize,
+) -> Vec<f32> {
+    let decoded = decode_blocks(coeffs, src_h, src_w, ch);
+    let resized = resize_bilinear(&decoded, src_h, src_w, ch, resize_to, resize_to);
+    let mut cropped = center_crop(&resized, resize_to, resize_to, ch, crop_to, crop_to);
+    normalize_image(&mut cropped, ch, &[0.485, 0.456, 0.406], &[0.229, 0.224, 0.225]);
+    cropped
+}
+
+// --------------------------------------------------------------------------
+// Audio ops
+// --------------------------------------------------------------------------
+
+/// Linear-interpolation resample from `src_rate` to `dst_rate` Hz.
+pub fn resample_linear(x: &[f32], src_rate: u32, dst_rate: u32) -> Vec<f32> {
+    if src_rate == dst_rate {
+        return x.to_vec();
+    }
+    let n_out = (x.len() as u64 * dst_rate as u64 / src_rate as u64) as usize;
+    let ratio = src_rate as f64 / dst_rate as f64;
+    let mut out = Vec::with_capacity(n_out);
+    for i in 0..n_out {
+        let pos = i as f64 * ratio;
+        let lo = pos.floor() as usize;
+        let frac = (pos - lo as f64) as f32;
+        let a = x[lo.min(x.len() - 1)];
+        let b = x[(lo + 1).min(x.len() - 1)];
+        out.push(a + frac * (b - a));
+    }
+    out
+}
+
+/// Hann window of length `n` (periodic, matching jnp.hanning-style
+/// symmetric window used by the reference: we use symmetric).
+pub fn hann(n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            if n == 1 {
+                1.0
+            } else {
+                0.5 - 0.5 * ((2.0 * PI * i as f32) / (n as f32 - 1.0)).cos()
+            }
+        })
+        .collect()
+}
+
+/// Power spectrogram via direct DFT (matmul form — mirrors the MXU
+/// adaptation in the Pallas kernel): frames of `n_fft` with hop `hop`,
+/// Hann window, returns `(n_frames, n_fft/2 + 1)` row-major power values.
+pub fn power_spectrogram(x: &[f32], n_fft: usize, hop: usize) -> (Vec<f32>, usize, usize) {
+    assert!(x.len() >= n_fft, "input shorter than one frame");
+    let n_frames = 1 + (x.len() - n_fft) / hop;
+    let n_bins = n_fft / 2 + 1;
+    // §Perf: the standard 512-point configuration reuses cached tables.
+    let (cos_owned, sin_owned);
+    let (cos_b, sin_b, win): (&[f32], &[f32], &[f32]) = if n_fft == 512 {
+        (&DFT_BASES_512.0, &DFT_BASES_512.1, &HANN_512)
+    } else {
+        let (c, s) = dft_bases(n_fft);
+        cos_owned = c;
+        sin_owned = s;
+        (&cos_owned, &sin_owned, &[])
+    };
+    let win_owned;
+    let win: &[f32] = if win.is_empty() {
+        win_owned = hann(n_fft);
+        &win_owned
+    } else {
+        win
+    };
+    // §Perf: frames are processed in blocks of FB so each basis row
+    // (4 KiB) is read once per FB frames instead of once per frame — the
+    // kernel is bandwidth-bound on the 1 MiB basis matrices otherwise.
+    const FB: usize = 8;
+    let mut out = vec![0f32; n_frames * n_bins];
+    let mut frames = vec![0f32; FB * n_fft];
+    let mut f0 = 0;
+    while f0 < n_frames {
+        let fb_n = FB.min(n_frames - f0);
+        for (fi, frame) in frames.chunks_exact_mut(n_fft).take(fb_n).enumerate() {
+            let start = (f0 + fi) * hop;
+            for n in 0..n_fft {
+                frame[n] = x[start + n] * win[n];
+            }
+        }
+        for k in 0..n_bins {
+            let cb = &cos_b[k * n_fft..(k + 1) * n_fft];
+            let sb = &sin_b[k * n_fft..(k + 1) * n_fft];
+            for fi in 0..fb_n {
+                let frame = &frames[fi * n_fft..(fi + 1) * n_fft];
+                let mut re = 0f32;
+                let mut im = 0f32;
+                // §Perf: four independent accumulators per dot product
+                // break the serial f32 add dependency chain (the scalar
+                // version ran at ~1.7 GFLOP/s, bound by add latency).
+                let (mut re0, mut re1, mut re2, mut re3) = (0f32, 0f32, 0f32, 0f32);
+                let (mut im0, mut im1, mut im2, mut im3) = (0f32, 0f32, 0f32, 0f32);
+                let mut n = 0;
+                while n + 4 <= n_fft {
+                    re0 += frame[n] * cb[n];
+                    re1 += frame[n + 1] * cb[n + 1];
+                    re2 += frame[n + 2] * cb[n + 2];
+                    re3 += frame[n + 3] * cb[n + 3];
+                    im0 += frame[n] * sb[n];
+                    im1 += frame[n + 1] * sb[n + 1];
+                    im2 += frame[n + 2] * sb[n + 2];
+                    im3 += frame[n + 3] * sb[n + 3];
+                    n += 4;
+                }
+                re += (re0 + re1) + (re2 + re3);
+                im += (im0 + im1) + (im2 + im3);
+                while n < n_fft {
+                    re += frame[n] * cb[n];
+                    im += frame[n] * sb[n];
+                    n += 1;
+                }
+                out[(f0 + fi) * n_bins + k] = re * re + im * im;
+            }
+        }
+        f0 += fb_n;
+    }
+    (out, n_frames, n_bins)
+}
+
+/// Hz -> mel (Slaney-style HTK formula, matching librosa htk=True and the
+/// jnp reference).
+pub fn hz_to_mel(hz: f32) -> f32 {
+    2595.0 * (1.0 + hz / 700.0).log10()
+}
+
+pub fn mel_to_hz(mel: f32) -> f32 {
+    700.0 * (10f32.powf(mel / 2595.0) - 1.0)
+}
+
+/// Triangular mel filterbank: `(n_mels, n_bins)` row-major.
+pub fn mel_filterbank(n_mels: usize, n_fft: usize, sample_rate: f32) -> Vec<f32> {
+    let n_bins = n_fft / 2 + 1;
+    let f_min = 0.0f32;
+    let f_max = sample_rate / 2.0;
+    let m_min = hz_to_mel(f_min);
+    let m_max = hz_to_mel(f_max);
+    // n_mels + 2 edge points.
+    let edges: Vec<f32> = (0..n_mels + 2)
+        .map(|i| mel_to_hz(m_min + (m_max - m_min) * i as f32 / (n_mels + 1) as f32))
+        .collect();
+    let bin_hz: Vec<f32> = (0..n_bins).map(|k| k as f32 * sample_rate / n_fft as f32).collect();
+    let mut fb = vec![0f32; n_mels * n_bins];
+    for m in 0..n_mels {
+        let (lo, ctr, hi) = (edges[m], edges[m + 1], edges[m + 2]);
+        for k in 0..n_bins {
+            let f = bin_hz[k];
+            let w = if f <= lo || f >= hi {
+                0.0
+            } else if f <= ctr {
+                (f - lo) / (ctr - lo)
+            } else {
+                (hi - f) / (hi - ctr)
+            };
+            fb[m * n_bins + k] = w;
+        }
+    }
+    fb
+}
+
+/// Log-mel spectrogram: power spectrogram × mel filterbank, then
+/// `ln(x + eps)`. Returns `(n_frames, n_mels)` row-major.
+pub fn log_mel(
+    x: &[f32],
+    n_fft: usize,
+    hop: usize,
+    n_mels: usize,
+    sample_rate: f32,
+) -> (Vec<f32>, usize, usize) {
+    let (spec, n_frames, n_bins) = power_spectrogram(x, n_fft, hop);
+    // §Perf: cached filterbank for the standard config + sparse ranges
+    // (each triangular filter touches a contiguous ~10-40 bin span).
+    let fb_owned;
+    let fb: &[f32] = if (n_mels, n_fft, sample_rate) == (80, 512, 16000.0) {
+        &MEL_FB_80_512
+    } else {
+        fb_owned = mel_filterbank(n_mels, n_fft, sample_rate);
+        &fb_owned
+    };
+    let ranges: Vec<(usize, usize)> = (0..n_mels)
+        .map(|m| {
+            let row = &fb[m * n_bins..(m + 1) * n_bins];
+            let lo = row.iter().position(|&v| v != 0.0).unwrap_or(0);
+            let hi = n_bins - row.iter().rev().position(|&v| v != 0.0).unwrap_or(n_bins - lo);
+            (lo, hi)
+        })
+        .collect();
+    let mut out = vec![0f32; n_frames * n_mels];
+    for f in 0..n_frames {
+        let srow = &spec[f * n_bins..(f + 1) * n_bins];
+        for (m, &(lo, hi)) in ranges.iter().enumerate() {
+            let frow = &fb[m * n_bins..(m + 1) * n_bins];
+            let mut s = 0f32;
+            for k in lo..hi {
+                s += srow[k] * frow[k];
+            }
+            out[f * n_mels + m] = (s + 1e-3).ln();
+        }
+    }
+    (out, n_frames, n_mels)
+}
+
+/// Global per-feature mean/variance normalization over the time axis —
+/// the stage whose all-samples dependency forces the DPU's split-CU design
+/// (paper Fig 12).
+pub fn normalize_features(feat: &mut [f32], n_frames: usize, n_feat: usize) {
+    assert_eq!(feat.len(), n_frames * n_feat);
+    for m in 0..n_feat {
+        let mut mean = 0f64;
+        for f in 0..n_frames {
+            mean += feat[f * n_feat + m] as f64;
+        }
+        mean /= n_frames as f64;
+        let mut var = 0f64;
+        for f in 0..n_frames {
+            let d = feat[f * n_feat + m] as f64 - mean;
+            var += d * d;
+        }
+        var /= n_frames as f64;
+        let inv = 1.0 / (var + 1e-2).sqrt();
+        for f in 0..n_frames {
+            feat[f * n_feat + m] = ((feat[f * n_feat + m] as f64 - mean) * inv) as f32;
+        }
+    }
+}
+
+/// Full audio pipeline: resample -> log-mel -> normalize. Returns
+/// `(features, n_frames, n_mels)`.
+pub fn audio_pipeline(
+    pcm: &[f32],
+    src_rate: u32,
+    n_fft: usize,
+    hop: usize,
+    n_mels: usize,
+) -> (Vec<f32>, usize, usize) {
+    const TARGET_RATE: u32 = 16_000;
+    let resampled = resample_linear(pcm, src_rate, TARGET_RATE);
+    let (mut feat, n_frames, nm) = log_mel(&resampled, n_fft, hop, n_mels, TARGET_RATE as f32);
+    normalize_features(&mut feat, n_frames, nm);
+    (feat, n_frames, nm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idct_basis_is_orthonormal() {
+        let c = idct8_basis();
+        for i in 0..8 {
+            for j in 0..8 {
+                let dot: f32 = (0..8).map(|n| c[i * 8 + n] * c[j * 8 + n]).sum();
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-5, "({i},{j}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_dc_only_block_is_flat() {
+        // A block with only a DC coefficient decodes to a constant.
+        let mut coeffs = vec![0f32; 8 * 8 * 1];
+        coeffs[0] = 10.0; // DC, will be dequantized by q[0]=8
+        let px = decode_blocks(&coeffs, 8, 8, 1);
+        let first = px[0];
+        assert!(px.iter().all(|&v| (v - first).abs() < 1e-4));
+        // DC=10 * q0(=floor(16*0.5)=8) / 8 + 128 = 138
+        assert!((first - 138.0).abs() < 1e-3, "first={first}");
+    }
+
+    #[test]
+    fn resize_matrix_rows_sum_to_one() {
+        for (src, dst) in [(96, 64), (64, 96), (50, 50), (7, 13)] {
+            let m = resize_matrix(src, dst);
+            for d in 0..dst {
+                let s: f32 = m[d * src..(d + 1) * src].iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "src={src} dst={dst} row={d} sum={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn resize_constant_image_stays_constant() {
+        let img = vec![3.5f32; 32 * 48 * 3];
+        let out = resize_bilinear(&img, 32, 48, 3, 20, 24);
+        assert!(out.iter().all(|&v| (v - 3.5).abs() < 1e-5));
+    }
+
+    #[test]
+    fn identity_resize_preserves() {
+        let img: Vec<f32> = (0..16 * 16 * 1).map(|i| i as f32).collect();
+        let out = resize_bilinear(&img, 16, 16, 1, 16, 16);
+        for (a, b) in img.iter().zip(out.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn crop_takes_center() {
+        // 4x4 single-channel, crop to 2x2 takes rows/cols 1..3.
+        let img: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let out = center_crop(&img, 4, 4, 1, 2, 2);
+        assert_eq!(out, vec![5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn normalize_image_zero_mean_for_mid_gray() {
+        let mut img = vec![127.5f32; 4 * 3];
+        normalize_image(&mut img, 3, &[0.5, 0.5, 0.5], &[0.25, 0.25, 0.25]);
+        assert!(img.iter().all(|&v| v.abs() < 1e-5));
+    }
+
+    #[test]
+    fn full_image_pipeline_shapes() {
+        let coeffs = vec![1f32; 96 * 96 * 3];
+        let out = image_pipeline(&coeffs, 96, 96, 3, 72, 64);
+        assert_eq!(out.len(), 64 * 64 * 3);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn resample_preserves_constant_and_length_ratio() {
+        let x = vec![2.0f32; 8000];
+        let y = resample_linear(&x, 8000, 16000);
+        assert_eq!(y.len(), 16000);
+        assert!(y.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        let z = resample_linear(&x, 8000, 8000);
+        assert_eq!(z.len(), x.len());
+    }
+
+    #[test]
+    fn spectrogram_peak_at_tone_frequency() {
+        // 1 kHz tone at 16 kHz, n_fft=512 -> bin 32.
+        let sr = 16000f32;
+        let x: Vec<f32> =
+            (0..4096).map(|i| (2.0 * PI * 1000.0 * i as f32 / sr).sin()).collect();
+        let (spec, n_frames, n_bins) = power_spectrogram(&x, 512, 256);
+        assert_eq!(n_bins, 257);
+        // Peak bin in the middle frame:
+        let f = n_frames / 2;
+        let row = &spec[f * n_bins..(f + 1) * n_bins];
+        let peak = row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(peak, 32, "peak at bin {peak}");
+    }
+
+    #[test]
+    fn mel_filterbank_covers_spectrum() {
+        let fb = mel_filterbank(80, 512, 16000.0);
+        // Every filter has some mass; interior bins are covered.
+        for m in 0..80 {
+            let s: f32 = fb[m * 257..(m + 1) * 257].iter().sum();
+            assert!(s > 0.0, "mel filter {m} empty");
+        }
+    }
+
+    #[test]
+    fn hz_mel_roundtrip() {
+        for hz in [100.0, 440.0, 1000.0, 7999.0] {
+            assert!((mel_to_hz(hz_to_mel(hz)) - hz).abs() / hz < 1e-4);
+        }
+    }
+
+    #[test]
+    fn normalize_features_zero_mean_unit_var() {
+        let mut rng = crate::util::Rng::new(3);
+        let (nf, nm) = (100, 8);
+        let mut feat: Vec<f32> = (0..nf * nm).map(|_| rng.f64() as f32 * 10.0).collect();
+        normalize_features(&mut feat, nf, nm);
+        for m in 0..nm {
+            let mean: f32 = (0..nf).map(|f| feat[f * nm + m]).sum::<f32>() / nf as f32;
+            let var: f32 = (0..nf).map(|f| (feat[f * nm + m] - mean).powi(2)).sum::<f32>() / nf as f32;
+            assert!(mean.abs() < 1e-4, "mel {m} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "mel {m} var {var}");
+        }
+    }
+
+    #[test]
+    fn full_audio_pipeline_shapes() {
+        let pcm: Vec<f32> = (0..16000).map(|i| (i as f32 * 0.01).sin()).collect();
+        let (feat, n_frames, n_mels) = audio_pipeline(&pcm, 16000, 512, 256, 80);
+        assert_eq!(n_mels, 80);
+        assert_eq!(feat.len(), n_frames * n_mels);
+        assert!(feat.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,134 @@
+//! Per-model preprocessing pipeline descriptions (paper Fig 4 / Fig 11).
+//!
+//! Shared vocabulary between the CPU pool (which charges the whole
+//! pipeline to one core) and the DPU (which maps stages onto functional
+//! units and pipelines them across CUs).
+
+use crate::models::{ModelId, ModelKind};
+
+/// A preprocessing stage (one functional unit in the DPU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StageKind {
+    // image (Fig 4a)
+    Decode,
+    Resize,
+    Crop,
+    NormalizeImage,
+    // audio (Fig 4b)
+    Resample,
+    MelSpectrogram,
+    NormalizeAudio,
+}
+
+impl StageKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StageKind::Decode => "Decode",
+            StageKind::Resize => "Resize",
+            StageKind::Crop => "Crop",
+            StageKind::NormalizeImage => "Normalize",
+            StageKind::Resample => "Resample",
+            StageKind::MelSpectrogram => "Mel spectrogram",
+            StageKind::NormalizeAudio => "Normalize",
+        }
+    }
+
+    /// Does this stage need ALL input samples before it can start? (the
+    /// audio Normalize global mean/var dependency, paper §4.2 / Fig 12).
+    pub fn needs_full_input(&self) -> bool {
+        matches!(self, StageKind::NormalizeAudio)
+    }
+}
+
+/// One stage with its DPU functional-unit latency for a single input.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineStage {
+    pub kind: StageKind,
+    /// Functional-unit time for one request at the reference input size
+    /// (2.5 s audio / 224² image), seconds. Calibrated from the Vitis
+    /// HLS co-simulation numbers the paper's DPU targets; see DESIGN.md §4.
+    pub unit_secs: f64,
+}
+
+/// Image pipeline stages (sequential dataflow → one CU integrates all
+/// units and pipelines across requests, Fig 12a).
+pub const IMAGE_STAGES: [PipelineStage; 4] = [
+    PipelineStage { kind: StageKind::Decode, unit_secs: 55e-6 },
+    PipelineStage { kind: StageKind::Resize, unit_secs: 30e-6 },
+    PipelineStage { kind: StageKind::Crop, unit_secs: 4e-6 },
+    PipelineStage { kind: StageKind::NormalizeImage, unit_secs: 18e-6 },
+];
+
+/// Audio pipeline stages at the 2.5 s reference length (times scale
+/// linearly with audio length).
+pub const AUDIO_STAGES: [PipelineStage; 3] = [
+    PipelineStage { kind: StageKind::Resample, unit_secs: 20e-6 },
+    PipelineStage { kind: StageKind::MelSpectrogram, unit_secs: 330e-6 },
+    PipelineStage { kind: StageKind::NormalizeAudio, unit_secs: 45e-6 },
+];
+
+/// Pipeline for a model's modality.
+pub fn stages_for(model: ModelId) -> &'static [PipelineStage] {
+    match model.kind() {
+        ModelKind::Vision => &IMAGE_STAGES,
+        ModelKind::Audio => &AUDIO_STAGES,
+    }
+}
+
+/// Stage time for an input of `len_s` seconds (vision ignores length).
+pub fn stage_secs(model: ModelId, stage: &PipelineStage, len_s: f64) -> f64 {
+    match model.kind() {
+        ModelKind::Vision => stage.unit_secs,
+        ModelKind::Audio => stage.unit_secs * (len_s / 2.5).max(0.1),
+    }
+}
+
+/// Total single-request pipeline latency (sum of stages), seconds.
+pub fn total_secs(model: ModelId, len_s: f64) -> f64 {
+    stages_for(model).iter().map(|s| stage_secs(model, s, len_s)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_pipeline_has_fig4a_stages() {
+        let kinds: Vec<StageKind> = IMAGE_STAGES.iter().map(|s| s.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![StageKind::Decode, StageKind::Resize, StageKind::Crop, StageKind::NormalizeImage]
+        );
+    }
+
+    #[test]
+    fn only_audio_normalize_needs_full_input() {
+        for s in IMAGE_STAGES {
+            assert!(!s.kind.needs_full_input());
+        }
+        assert!(StageKind::NormalizeAudio.needs_full_input());
+        assert!(!StageKind::MelSpectrogram.needs_full_input());
+    }
+
+    #[test]
+    fn audio_stage_times_scale_with_length() {
+        let m = ModelId::CitriNet;
+        let t1 = total_secs(m, 2.5);
+        let t2 = total_secs(m, 5.0);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vision_length_ignored() {
+        let m = ModelId::MobileNet;
+        assert_eq!(total_secs(m, 0.0), total_secs(m, 10.0));
+    }
+
+    #[test]
+    fn single_input_latency_is_sub_millisecond() {
+        // The DPU is latency-optimized: single-request preprocessing must
+        // be far below the ~ms model-execution times (paper §4.2).
+        assert!(total_secs(ModelId::MobileNet, 0.0) < 150e-6);
+        assert!(total_secs(ModelId::CitriNet, 2.5) < 500e-6);
+    }
+}

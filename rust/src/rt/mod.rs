@@ -1,0 +1,201 @@
+//! Minimal thread-pool runtime (in lieu of `tokio`, absent offline).
+//!
+//! The real-PJRT serving driver needs: (a) a pool of worker threads, one
+//! per vGPU, each owning its compiled executables; (b) bounded MPSC
+//! channels with blocking send/recv for backpressure; (c) a timer thread
+//! for batching deadlines. std gives us threads and channels; this module
+//! adds the pool lifecycle and a bounded channel wrapper with metrics.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Bounded MPSC channel pair with depth metrics (for backpressure studies).
+pub struct Channel<T> {
+    tx: SyncSender<T>,
+    depth: Arc<Mutex<usize>>,
+}
+
+pub struct ChannelRx<T> {
+    rx: Receiver<T>,
+    depth: Arc<Mutex<usize>>,
+}
+
+/// Create a bounded channel of capacity `cap`.
+pub fn channel<T>(cap: usize) -> (Channel<T>, ChannelRx<T>) {
+    let (tx, rx) = sync_channel(cap);
+    let depth = Arc::new(Mutex::new(0));
+    (Channel { tx, depth: depth.clone() }, ChannelRx { rx, depth })
+}
+
+impl<T> Channel<T> {
+    /// Blocking send (applies backpressure when full).
+    pub fn send(&self, v: T) -> anyhow::Result<()> {
+        self.tx.send(v).map_err(|_| anyhow::anyhow!("channel closed"))?;
+        *self.depth.lock().unwrap() += 1;
+        Ok(())
+    }
+
+    /// Non-blocking send; returns the value back if the queue is full.
+    pub fn try_send(&self, v: T) -> Result<(), T> {
+        match self.tx.try_send(v) {
+            Ok(()) => {
+                *self.depth.lock().unwrap() += 1;
+                Ok(())
+            }
+            Err(TrySendError::Full(v)) | Err(TrySendError::Disconnected(v)) => Err(v),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        *self.depth.lock().unwrap()
+    }
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Channel { tx: self.tx.clone(), depth: self.depth.clone() }
+    }
+}
+
+impl<T> ChannelRx<T> {
+    /// Blocking receive; `None` when all senders dropped.
+    pub fn recv(&self) -> Option<T> {
+        match self.rx.recv() {
+            Ok(v) => {
+                let mut d = self.depth.lock().unwrap();
+                *d = d.saturating_sub(1);
+                Some(v)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Receive with timeout.
+    pub fn recv_timeout(&self, dur: std::time::Duration) -> Option<T> {
+        match self.rx.recv_timeout(dur) {
+            Ok(v) => {
+                let mut d = self.depth.lock().unwrap();
+                *d = d.saturating_sub(1);
+                Some(v)
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+/// A named pool of worker threads, joined on drop.
+pub struct WorkerPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new() -> Self {
+        WorkerPool { handles: Vec::new() }
+    }
+
+    /// Spawn a named worker.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&mut self, name: &str, f: F) {
+        let h = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .expect("spawn worker");
+        self.handles.push(h);
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Wait for all workers to finish.
+    pub fn join(mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn channel_roundtrip_and_depth() {
+        let (tx, rx) = channel::<u32>(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(tx.depth(), 2);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(tx.depth(), 0);
+    }
+
+    #[test]
+    fn try_send_full() {
+        let (tx, _rx) = channel::<u32>(1);
+        assert!(tx.try_send(1).is_ok());
+        assert_eq!(tx.try_send(2), Err(2));
+    }
+
+    #[test]
+    fn recv_none_when_closed() {
+        let (tx, rx) = channel::<u32>(1);
+        drop(tx);
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn pool_runs_work() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut pool = WorkerPool::new();
+        for i in 0..4 {
+            let c = counter.clone();
+            pool.spawn(&format!("w{i}"), move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn fan_in_many_producers() {
+        let (tx, rx) = channel::<usize>(64);
+        let mut pool = WorkerPool::new();
+        for i in 0..8 {
+            let tx = tx.clone();
+            pool.spawn("prod", move || {
+                for j in 0..10 {
+                    tx.send(i * 10 + j).unwrap();
+                }
+            });
+        }
+        drop(tx);
+        let mut got = Vec::new();
+        while let Some(v) = rx.recv() {
+            got.push(v);
+        }
+        pool.join();
+        got.sort_unstable();
+        assert_eq!(got, (0..80).collect::<Vec<_>>());
+    }
+}

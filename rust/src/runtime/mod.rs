@@ -1,0 +1,203 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the CPU
+//! PJRT client via the `xla` crate.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! One compiled executable per (model, batch, length-bucket) artifact —
+//! the server picks the artifact whose batch ≥ the formed batch and pads.
+
+use std::collections::HashMap;
+
+use crate::models::{ArtifactEntry, Manifest};
+
+/// A loaded + compiled artifact with its shape metadata.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ArtifactEntry,
+}
+
+/// PJRT engine owning the client and the executable cache.
+///
+/// The real driver confines it to the worker thread that owns model
+/// execution (Python-free request path, single PJRT context).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Executable>,
+    /// Weight literal sets, keyed by weights file name. Loaded once and
+    /// passed as the leading parameters of every execute (large constants
+    /// travel as parameters because HLO text elides big literals —
+    /// DESIGN.md §4).
+    weights: HashMap<String, Vec<xla::Literal>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client over an artifacts directory.
+    pub fn new(artifacts_dir: &str) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e:?}"))?;
+        Ok(Engine { client, manifest, cache: HashMap::new(), weights: HashMap::new() })
+    }
+
+    /// Load (once) the weight literals for an artifact's weights file.
+    fn load_weights(&mut self, entry: &ArtifactEntry) -> anyhow::Result<()> {
+        let Some(file) = &entry.weights_file else { return Ok(()) };
+        if self.weights.contains_key(file) {
+            return Ok(());
+        }
+        let path = self.manifest.dir.join(file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("read weights {}: {e}", path.display()))?;
+        let total: usize = entry.weight_shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        anyhow::ensure!(
+            bytes.len() == total * 4,
+            "weights file {} has {} bytes, expected {}",
+            file,
+            bytes.len(),
+            total * 4
+        );
+        let mut floats = vec![0f32; total];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            floats[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        let mut literals = Vec::with_capacity(entry.weight_shapes.len());
+        let mut off = 0usize;
+        for shape in &entry.weight_shapes {
+            let n: usize = shape.iter().product();
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&floats[off..off + n])
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("weights reshape {shape:?}: {e:?}"))?;
+            literals.push(lit);
+            off += n;
+        }
+        self.weights.insert(file.clone(), literals);
+        Ok(())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) the artifact registered under `key`.
+    pub fn load(&mut self, key: &str) -> anyhow::Result<&Executable> {
+        if !self.cache.contains_key(key) {
+            let entry = self
+                .manifest
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("artifact '{key}' not in manifest"))?
+                .clone();
+            let path = self.manifest.path_of(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {key}: {e:?}"))?;
+            self.cache.insert(key.to_string(), Executable { exe, entry });
+        }
+        Ok(&self.cache[key])
+    }
+
+    /// Number of compiled executables held.
+    pub fn loaded(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute artifact `key` on f32 inputs (shape-checked against the
+    /// manifest). Returns the flattened f32 outputs.
+    ///
+    /// Inputs shorter than the artifact's input size are zero-padded (the
+    /// caller slices the outputs back down — batch padding).
+    pub fn execute_f32(&mut self, key: &str, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.load(key)?;
+        let entry = self.cache[key].entry.clone();
+        self.load_weights(&entry)?;
+        let ex = &self.cache[key];
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "artifact '{key}' expects {} data inputs, got {}",
+            entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            let shape = &entry.inputs[i];
+            let want: usize = shape.iter().product();
+            anyhow::ensure!(
+                data.len() <= want,
+                "input {i} of '{key}': {} elements exceeds shape {:?}",
+                data.len(),
+                shape
+            );
+            let mut padded = data.clone();
+            padded.resize(want, 0.0);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&padded)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        // Leading weight parameters (by reference), then the data inputs.
+        let empty: Vec<xla::Literal> = Vec::new();
+        let weight_lits = match &entry.weights_file {
+            Some(f) => &self.weights[f],
+            None => &empty,
+        };
+        let args: Vec<&xla::Literal> = weight_lits.iter().chain(literals.iter()).collect();
+        let result = ex
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute {key}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {key}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack the output tuple.
+        let n_out = ex.entry.outputs.len();
+        let elems = result.to_tuple().map_err(|e| anyhow::anyhow!("untuple {key}: {e:?}"))?;
+        anyhow::ensure!(
+            elems.len() == n_out,
+            "artifact '{key}': manifest says {n_out} outputs, HLO returned {}",
+            elems.len()
+        );
+        let mut outs = Vec::with_capacity(n_out);
+        for (i, lit) in elems.into_iter().enumerate() {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("output {i} of {key} not f32: {e:?}"))?;
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+
+    /// Find the smallest lowered batch ≥ `want` for a model (for padding),
+    /// or the largest available if `want` exceeds them all.
+    pub fn pick_batch(&self, name: &str, want: usize) -> Option<usize> {
+        let batches = self.manifest.batches_for(name);
+        batches.iter().copied().find(|&b| b >= want).or(batches.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests needing real artifacts live in
+    // rust/tests/integration_runtime.rs (they require `make artifacts`).
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_dir_errors_cleanly() {
+        let err = match Engine::new("/no/such/dir") {
+            Ok(_) => panic!("engine created from nonexistent dir"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,26 @@
+//! The PREBA inference server (L3 coordinator).
+//!
+//! Architecture (paper Fig 3 / Fig 10): frontend receives queries →
+//! preprocessing (host CPU pool, or PREBA's DPU, or "Ideal" = free) →
+//! dynamic batching queues → per-vGPU execution workers.
+//!
+//! Two drivers share this coordinator logic:
+//! * [`sim_driver`] — discrete-event simulation under a virtual clock with
+//!   the calibrated MIG service model; regenerates the paper's figures.
+//! * [`real_driver`] — threads + the PJRT runtime executing the AOT
+//!   Pallas/JAX artifacts for real (examples & end-to-end validation).
+
+pub mod multi;
+pub mod real_driver;
+pub mod sim_driver;
+
+pub use sim_driver::{PreprocMode, SimConfig, SimOutcome};
+
+/// Which batching policy the server uses (ablation axis, Fig 22).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Fixed Batch_max/Time_queue, one queue (baseline batcher).
+    Static,
+    /// PREBA: profiled per-bucket Batch_knee + Time_knee/n policy.
+    Dynamic,
+}

@@ -1,0 +1,337 @@
+//! Multi-tenant serving: several models colocated on one MIG GPU, each
+//! owning a disjoint subset of vGPUs — the deployment §2.2 motivates
+//! ("a single A100 can host seven inference servers") and the setting
+//! where the preprocessing bottleneck COUPLES tenants: the host CPU pool
+//! is shared, so one preprocessing-heavy tenant (CitriNet) starves the
+//! others' preprocessing even though their vGPUs are isolated. PREBA's
+//! DPU restores the isolation MIG promised.
+
+use crate::batching::{BatchPolicy, Bucketizer, DynamicBatcher, Request};
+use crate::clock::Nanos;
+use crate::config::PrebaConfig;
+use crate::dpu::Dpu;
+use crate::metrics::{LatencyParts, RunStats};
+use crate::mig::{MigConfig, ServiceModel};
+use crate::models::{ModelId, ModelKind};
+use crate::preprocess::CpuPool;
+use crate::sim::EventQueue;
+use crate::util::Rng;
+use crate::workload::QueryGen;
+
+use super::{PolicyKind, PreprocMode};
+
+/// One colocated model.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    pub model: ModelId,
+    /// Number of vGPUs this tenant owns (disjoint from other tenants).
+    pub vgpus: usize,
+    /// Offered Poisson load, queries/s.
+    pub rate_qps: f64,
+}
+
+/// Multi-tenant run parameters.
+#[derive(Debug, Clone)]
+pub struct MultiConfig {
+    pub mig: MigConfig,
+    pub tenants: Vec<Tenant>,
+    pub preproc: PreprocMode,
+    pub policy: PolicyKind,
+    /// Requests PER TENANT.
+    pub requests: usize,
+    pub seed: u64,
+    pub warmup_frac: f64,
+}
+
+impl MultiConfig {
+    /// Validate that tenant vGPU demands fit the partition.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let total: usize = self.tenants.iter().map(|t| t.vgpus).sum();
+        anyhow::ensure!(
+            total <= self.mig.vgpus(),
+            "tenants want {total} vGPUs, partition has {}",
+            self.mig.vgpus()
+        );
+        anyhow::ensure!(!self.tenants.is_empty(), "no tenants");
+        Ok(())
+    }
+}
+
+/// Per-tenant outcome + shared-resource stats.
+#[derive(Debug)]
+pub struct MultiOutcome {
+    pub per_tenant: Vec<(ModelId, RunStats)>,
+    pub cpu_util: f64,
+    pub dpu_util: Option<f64>,
+    pub horizon: Nanos,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrival { tenant: usize, idx: usize },
+    PreprocDone { tenant: usize, idx: usize },
+    BatchTick { tenant: usize },
+    ExecDone { tenant: usize, batch_idx: usize },
+}
+
+struct TenantState {
+    spec: &'static crate::models::ModelSpec,
+    sm: ServiceModel,
+    buckets: Bucketizer,
+    batcher: DynamicBatcher,
+    vgpu_free: Vec<Nanos>,
+    arrivals: Vec<(Nanos, f64)>,
+    preproc_done: Vec<Nanos>,
+    in_flight: Vec<Option<crate::batching::Batch>>,
+    stats: RunStats,
+    completed: usize,
+    warmup: usize,
+}
+
+/// Run a multi-tenant simulation over shared preprocessing resources.
+pub fn run(cfg: &MultiConfig, sys: &PrebaConfig) -> anyhow::Result<MultiOutcome> {
+    cfg.validate()?;
+    let mut root = Rng::new(cfg.seed ^ 0xFEED);
+    let pool_rng = root.split(1);
+    let mut exec_rng = root.split(2);
+
+    let usable = sys.hardware.cpu_cores - sys.hardware.cpu_reserved_cores;
+    let mut cpu_pool = CpuPool::new(usable, pool_rng);
+    let mut dpu = match cfg.preproc {
+        PreprocMode::Dpu => Some(Dpu::new(&sys.dpu, &sys.hardware)),
+        _ => None,
+    };
+
+    let gpcs = cfg.mig.gpcs_per_vgpu();
+    let mut tenants: Vec<TenantState> = Vec::new();
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    for (ti, t) in cfg.tenants.iter().enumerate() {
+        let spec = t.model.spec();
+        let sm = ServiceModel::new(spec, gpcs);
+        let buckets = match (t.model.kind(), cfg.policy) {
+            (ModelKind::Audio, PolicyKind::Dynamic) => {
+                Bucketizer::new(sys.batching.bucket_window_s, sys.batching.max_audio_s)
+            }
+            _ => Bucketizer::fixed(),
+        };
+        let policy = match cfg.policy {
+            PolicyKind::Dynamic => {
+                BatchPolicy::dynamic_from_model(spec, &sm, &buckets, t.vgpus)
+            }
+            PolicyKind::Static => BatchPolicy::Static(crate::batching::QueueParams {
+                batch_max: sys.batching.static_batch_max,
+                time_queue: sys.batching.static_time_queue,
+            }),
+        };
+        let batcher =
+            DynamicBatcher::new(t.model, buckets.clone(), policy, sys.batching.merge_adjacent);
+        let mut qgen = QueryGen::new(t.model, t.rate_qps, root.split(100 + ti as u64));
+        let arrivals: Vec<(Nanos, f64)> =
+            qgen.take(cfg.requests).into_iter().map(|a| (a.at, a.len_s)).collect();
+        for (i, &(at, _)) in arrivals.iter().enumerate() {
+            q.schedule(at, Ev::Arrival { tenant: ti, idx: i });
+        }
+        tenants.push(TenantState {
+            spec,
+            sm,
+            buckets,
+            batcher,
+            vgpu_free: vec![0; t.vgpus],
+            preproc_done: vec![0; arrivals.len()],
+            arrivals,
+            in_flight: Vec::new(),
+            stats: RunStats::new(),
+            completed: 0,
+            warmup: (cfg.requests as f64 * cfg.warmup_frac) as usize,
+        });
+    }
+
+    let mut horizon: Nanos = 0;
+    crate::sim::run(&mut q, u64::MAX, |now, ev, q| {
+        match ev {
+            Ev::Arrival { tenant, idx } => {
+                let ts = &tenants[tenant];
+                let len = ts.arrivals[idx].1;
+                let model = ts.batcher.model();
+                match cfg.preproc {
+                    PreprocMode::Ideal => q.schedule(now, Ev::PreprocDone { tenant, idx }),
+                    PreprocMode::Cpu => {
+                        let service = tenants[tenant].spec.cpu_preproc_secs(len.max(0.1));
+                        let (_, done) = cpu_pool.admit(now, service);
+                        q.schedule(done, Ev::PreprocDone { tenant, idx });
+                    }
+                    PreprocMode::Dpu => {
+                        let done = dpu.as_mut().unwrap().admit(now, model, len.max(0.1));
+                        q.schedule(done, Ev::PreprocDone { tenant, idx });
+                    }
+                }
+            }
+            Ev::PreprocDone { tenant, idx } => {
+                let ts = &mut tenants[tenant];
+                ts.preproc_done[idx] = now;
+                let (at, len) = ts.arrivals[idx];
+                ts.batcher.enqueue(Request {
+                    id: idx as u64,
+                    model: ts.batcher.model(),
+                    arrival: at,
+                    enqueued: now,
+                    len_s: len,
+                });
+                dispatch_ready(tenant, now, &mut tenants[tenant], q, &mut exec_rng);
+                if let Some(d) = tenants[tenant].batcher.next_deadline() {
+                    q.schedule(d, Ev::BatchTick { tenant });
+                }
+            }
+            Ev::BatchTick { tenant } => {
+                dispatch_ready(tenant, now, &mut tenants[tenant], q, &mut exec_rng);
+                if let Some(d) = tenants[tenant].batcher.next_deadline() {
+                    q.schedule(d, Ev::BatchTick { tenant });
+                }
+            }
+            Ev::ExecDone { tenant, batch_idx } => {
+                horizon = horizon.max(now);
+                let ts = &mut tenants[tenant];
+                let batch = ts.in_flight[batch_idx].take().expect("double completion");
+                let bsize = batch.size();
+                let padded = padded_len(&ts.buckets, &batch);
+                let exec_model = crate::clock::secs(ts.sm.exec_secs(bsize, padded));
+                for r in &batch.requests {
+                    ts.completed += 1;
+                    if ts.completed <= ts.warmup {
+                        continue;
+                    }
+                    let i = r.id as usize;
+                    let since_formed = now.saturating_sub(batch.formed);
+                    let exec_ns = exec_model.min(since_formed);
+                    ts.stats.record(
+                        LatencyParts {
+                            preprocess: ts.preproc_done[i] - ts.arrivals[i].0,
+                            batching: batch.formed.saturating_sub(ts.preproc_done[i]),
+                            dispatch_wait: since_formed - exec_ns,
+                            execution: exec_ns,
+                        },
+                        now,
+                        bsize,
+                    );
+                }
+            }
+        }
+        true
+    });
+
+    Ok(MultiOutcome {
+        per_tenant: tenants.into_iter().map(|t| (t.batcher.model(), t.stats)).collect(),
+        cpu_util: match cfg.preproc {
+            PreprocMode::Cpu => cpu_pool.utilization(horizon),
+            _ => 0.0,
+        },
+        dpu_util: dpu.as_ref().map(|d| d.utilization(horizon)),
+        horizon,
+    })
+}
+
+fn padded_len(buckets: &Bucketizer, batch: &crate::batching::Batch) -> f64 {
+    if batch.max_len_s <= 0.0 {
+        return 0.0;
+    }
+    let edge = buckets.repr_len(buckets.bucket_of(batch.max_len_s));
+    if edge > 0.0 {
+        edge.max(batch.max_len_s)
+    } else {
+        batch.max_len_s
+    }
+}
+
+fn dispatch_ready(
+    tenant: usize,
+    now: Nanos,
+    ts: &mut TenantState,
+    q: &mut EventQueue<Ev>,
+    exec_rng: &mut Rng,
+) {
+    while let Some((batch, _)) = ts.batcher.try_form(now) {
+        let (vgpu, &free) =
+            ts.vgpu_free.iter().enumerate().min_by_key(|(_, &t)| t).expect("vgpus");
+        let start = now.max(free);
+        let padded = padded_len(&ts.buckets, &batch);
+        let exec = crate::clock::secs(ts.sm.exec_secs_jittered(batch.size(), padded, exec_rng));
+        let done = start + exec;
+        ts.vgpu_free[vgpu] = done;
+        let idx = ts.in_flight.len();
+        ts.in_flight.push(Some(batch));
+        q.schedule(done, Ev::ExecDone { tenant, batch_idx: idx });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tenant_cfg(preproc: PreprocMode) -> MultiConfig {
+        // MobileNet on 3 vGPUs + CitriNet on 4 vGPUs of a 1g.5gb(7x).
+        let mob_rate = 3.0 * ServiceModel::new(ModelId::MobileNet.spec(), 1).plateau_qps(0.0) * 0.5;
+        let cit_rate = 4.0 * ServiceModel::new(ModelId::CitriNet.spec(), 1).plateau_qps(10.0) * 0.55;
+        MultiConfig {
+            mig: MigConfig::Small7,
+            tenants: vec![
+                Tenant { model: ModelId::MobileNet, vgpus: 3, rate_qps: mob_rate },
+                Tenant { model: ModelId::CitriNet, vgpus: 4, rate_qps: cit_rate },
+            ],
+            preproc,
+            policy: PolicyKind::Dynamic,
+            requests: 3000,
+            seed: 99,
+            warmup_frac: 0.1,
+        }
+    }
+
+    #[test]
+    fn validates_vgpu_budget() {
+        let mut cfg = two_tenant_cfg(PreprocMode::Ideal);
+        cfg.tenants[0].vgpus = 5; // 5 + 4 > 7
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn all_tenants_complete_all_requests() {
+        let cfg = two_tenant_cfg(PreprocMode::Ideal);
+        let out = run(&cfg, &PrebaConfig::new()).unwrap();
+        for (model, stats) in &out.per_tenant {
+            let expect = cfg.requests as u64 - (cfg.requests as f64 * cfg.warmup_frac) as u64;
+            assert_eq!(stats.completed, expect, "{model}");
+        }
+    }
+
+    #[test]
+    fn shared_cpu_pool_couples_tenants_dpu_isolates() {
+        // The vision tenant's latency under CPU preprocessing suffers from
+        // the audio tenant's huge preprocessing demand; the DPU removes
+        // the coupling (MIG's isolation restored — the multi-tenant
+        // version of the paper's headline).
+        let sys = PrebaConfig::new();
+        let cpu = run(&two_tenant_cfg(PreprocMode::Cpu), &sys).unwrap();
+        let dpu = run(&two_tenant_cfg(PreprocMode::Dpu), &sys).unwrap();
+        let p95 = |o: &MultiOutcome, m: ModelId| {
+            o.per_tenant.iter().find(|(mm, _)| *mm == m).unwrap().1.p95_ms()
+        };
+        assert!(
+            p95(&cpu, ModelId::MobileNet) > 3.0 * p95(&dpu, ModelId::MobileNet),
+            "vision tenant not starved by shared CPU: cpu={} dpu={}",
+            p95(&cpu, ModelId::MobileNet),
+            p95(&dpu, ModelId::MobileNet)
+        );
+        assert!(cpu.cpu_util > 0.85, "cpu pool should saturate: {}", cpu.cpu_util);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = two_tenant_cfg(PreprocMode::Dpu);
+        let sys = PrebaConfig::new();
+        let a = run(&cfg, &sys).unwrap();
+        let b = run(&cfg, &sys).unwrap();
+        assert_eq!(a.horizon, b.horizon);
+        for ((_, s1), (_, s2)) in a.per_tenant.iter().zip(b.per_tenant.iter()) {
+            assert_eq!(s1.p95_ms(), s2.p95_ms());
+        }
+    }
+}

@@ -1,0 +1,405 @@
+//! Real-execution serving driver: the full PREBA pipeline with *actual*
+//! compute on the PJRT CPU client.
+//!
+//! * Frontend thread: paced Poisson arrivals, synthesizes raw inputs
+//!   (quantized-DCT images / PCM audio), ships them over a bounded
+//!   channel (backpressure).
+//! * Server thread (owns the PJRT [`Engine`]): preprocessing — either the
+//!   host-Rust pipelines (`preprocess::ops`, the paper's CPU baseline) or
+//!   the AOT Pallas kernel artifacts (the DPU path) — then PREBA's
+//!   `DynamicBatcher`, then model execution on the lite JAX artifacts.
+//!
+//! Python never runs here; everything executes from `artifacts/*.hlo.txt`.
+//! On this 1-core box the MIG partition is emulated by the batching policy
+//! (knees of the 1g slice) while execution itself is serialized — the
+//! *figures* come from the DES driver; this driver proves the three layers
+//! compose and feeds EXPERIMENTS.md's end-to-end run.
+
+use crate::batching::{BatchPolicy, Bucketizer, DynamicBatcher, Request};
+use crate::clock::{Clock, Nanos, RealClock};
+use crate::config::PrebaConfig;
+use crate::metrics::{LatencyParts, RunStats};
+use crate::mig::{MigConfig, ServiceModel};
+use crate::models::{ModelId, ModelKind};
+use crate::preprocess::ops;
+use crate::rt;
+use crate::runtime::Engine;
+use crate::util::Rng;
+use crate::workload::{self, QueryGen};
+
+/// Preprocessing implementation for the real driver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RealPreproc {
+    /// Host Rust pipelines (the paper's CPU baseline).
+    HostRust,
+    /// AOT Pallas kernel artifacts on PJRT (the DPU path).
+    DpuPallas,
+}
+
+/// Raw-input request shipped from the frontend.
+struct RawRequest {
+    id: u64,
+    arrival: Nanos,
+    len_s: f64,
+    data: Vec<f32>,
+}
+
+/// Run parameters.
+#[derive(Debug, Clone)]
+pub struct RealConfig {
+    pub model: ModelId,
+    pub preproc: RealPreproc,
+    pub rate_qps: f64,
+    pub requests: usize,
+    pub seed: u64,
+    /// Cap audio lengths so only lowered buckets are exercised.
+    pub max_audio_s: f64,
+}
+
+impl RealConfig {
+    pub fn new(model: ModelId, preproc: RealPreproc) -> RealConfig {
+        RealConfig { model, preproc, rate_qps: 20.0, requests: 100, seed: 7, max_audio_s: 10.0 }
+    }
+}
+
+/// Outcome of a real serving run.
+pub struct RealOutcome {
+    pub stats: RunStats,
+    pub executed_batches: u64,
+    pub platform: String,
+    /// Output checksum (finiteness witness for EXPERIMENTS.md).
+    pub output_l2: f64,
+}
+
+/// Source-image side length for vision synthesis (DCT coefficient input).
+pub const IMG_SRC: usize = 96;
+
+/// Serve `cfg.requests` requests end-to-end; blocks until drained.
+pub fn serve(cfg: &RealConfig, sys: &PrebaConfig, engine: &mut Engine) -> anyhow::Result<RealOutcome> {
+    let spec = cfg.model.spec();
+    // ONE clock for frontend + server: two epochs would silently shift
+    // the arrival timestamps by the warm-up duration.
+    let clock = std::sync::Arc::new(RealClock::new());
+
+    // Policy: the 1g-slice dynamic policy (PREBA on 1g.5gb(7x)), with
+    // Batch_max clamped to the largest lowered artifact batch.
+    let buckets = match cfg.model.kind() {
+        ModelKind::Vision => Bucketizer::fixed(),
+        ModelKind::Audio => Bucketizer::new(sys.batching.bucket_window_s, cfg.max_audio_s),
+    };
+    let sm = ServiceModel::new(spec, MigConfig::Small7.gpcs_per_vgpu());
+    let policy = clamp_policy(
+        BatchPolicy::dynamic_from_model(spec, &sm, &buckets, MigConfig::Small7.vgpus()),
+        engine,
+        cfg.model,
+    );
+    let mut batcher = DynamicBatcher::new(cfg.model, buckets.clone(), policy, sys.batching.merge_adjacent);
+
+    // Warm-up: compile every artifact this run can touch and execute each
+    // once with zeros, so PJRT compilation happens at server startup (as
+    // in any production server) and not on the first requests.
+    warmup(cfg, engine)?;
+
+    // Frontend thread.
+    let (tx, rx) = rt::channel::<RawRequest>(256);
+    let fe_cfg = cfg.clone();
+    let mut pool = rt::WorkerPool::new();
+    let fe_clock = clock.clone();
+    pool.spawn("frontend", move || {
+        let mut rng = Rng::new(fe_cfg.seed);
+        let mut qgen = QueryGen::new(fe_cfg.model, fe_cfg.rate_qps, rng.split(1));
+        for i in 0..fe_cfg.requests {
+            let a = qgen.next();
+            let len_s = a.len_s.min(fe_cfg.max_audio_s).max(0.0);
+            // Pace to the arrival schedule.
+            let now = fe_clock.now();
+            if a.at > now {
+                std::thread::sleep(std::time::Duration::from_nanos(a.at - now));
+            }
+            let data = match fe_cfg.model.kind() {
+                ModelKind::Vision => workload::synth_image_coeffs(IMG_SRC, IMG_SRC, 3, &mut rng),
+                ModelKind::Audio => workload::synth_pcm(len_s, &mut rng),
+            };
+            let req = RawRequest { id: i as u64, arrival: fe_clock.now(), len_s, data };
+            if tx.send(req).is_err() {
+                return;
+            }
+        }
+    });
+
+    // Server loop (owns the engine).
+    let mut stats = RunStats::new();
+    let mut executed_batches = 0u64;
+    let mut output_l2 = 0f64;
+    let mut received = 0usize;
+    let mut preproc_done_at: Vec<Nanos> = vec![0; cfg.requests];
+    let mut arrivals: Vec<Nanos> = vec![0; cfg.requests];
+    let mut tensors: Vec<Option<Vec<f32>>> = (0..cfg.requests).map(|_| None).collect();
+
+    let drain = |batcher: &mut DynamicBatcher,
+                     engine: &mut Engine,
+                     now_fn: &dyn Fn() -> Nanos,
+                     stats: &mut RunStats,
+                     tensors: &mut Vec<Option<Vec<f32>>>,
+                     preproc_done_at: &Vec<Nanos>,
+                     arrivals: &Vec<Nanos>,
+                     executed_batches: &mut u64,
+                     output_l2: &mut f64|
+     -> anyhow::Result<()> {
+        while let Some((batch, _)) = batcher.try_form(now_fn()) {
+            let formed = now_fn();
+            // Pick artifact: smallest lowered batch >= formed size; audio
+            // also matches the padded length bucket.
+            let want = batch.size();
+            let ab = engine
+                .pick_batch(cfg.model.name(), want)
+                .ok_or_else(|| anyhow::anyhow!("no artifacts for {}", cfg.model.name()))?;
+            let len_key = if cfg.model.kind() == ModelKind::Audio {
+                buckets.repr_len(buckets.bucket_of(batch.max_len_s))
+            } else {
+                0.0
+            };
+            let entry = engine
+                .manifest()
+                .model(cfg.model.name(), ab, len_key)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("no artifact {}/b{ab}/len{len_key}", cfg.model.name())
+                })?
+                .clone();
+            // Assemble the padded input batch.
+            let per_sample: usize = entry.inputs[0][1..].iter().product();
+            let mut flat = vec![0f32; entry.inputs[0].iter().product()];
+            for (j, r) in batch.requests.iter().enumerate() {
+                let t = tensors[r.id as usize].take().expect("preprocessed tensor");
+                anyhow::ensure!(
+                    t.len() <= per_sample,
+                    "tensor {} > artifact sample {}",
+                    t.len(),
+                    per_sample
+                );
+                flat[j * per_sample..j * per_sample + t.len()].copy_from_slice(&t);
+            }
+            let t_exec0 = now_fn();
+            let outs = engine.execute_f32(&entry.key, &[flat])?;
+            let t_exec1 = now_fn();
+            *executed_batches += 1;
+            *output_l2 += outs[0].iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt();
+            for r in &batch.requests {
+                let i = r.id as usize;
+                let parts = LatencyParts {
+                    preprocess: preproc_done_at[i].saturating_sub(arrivals[i]),
+                    batching: formed.saturating_sub(r.enqueued),
+                    dispatch_wait: t_exec0.saturating_sub(formed),
+                    execution: t_exec1.saturating_sub(t_exec0),
+                };
+                stats.record(parts, t_exec1, batch.size());
+            }
+        }
+        Ok(())
+    };
+
+    while received < cfg.requests || batcher.pending() > 0 {
+        // Wait for the next request or the next batching deadline.
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_sub(clock.now()).max(1_000))
+            .unwrap_or(50_000_000);
+        let msg = rx.recv_timeout(std::time::Duration::from_nanos(timeout));
+        if let Some(raw) = msg {
+            let now = clock.now();
+            arrivals[raw.id as usize] = raw.arrival;
+            // ---- preprocessing (real compute) ----
+            let tensor = preprocess_one(cfg, engine, &raw)?;
+            tensors[raw.id as usize] = Some(tensor);
+            let done = clock.now();
+            preproc_done_at[raw.id as usize] = done;
+            batcher.enqueue(Request {
+                id: raw.id,
+                model: cfg.model,
+                arrival: raw.arrival,
+                enqueued: done,
+                len_s: raw.len_s,
+            });
+            received += 1;
+            let _ = now;
+        }
+        // Timeout-based releases fire inside `drain` via `try_form(now)`;
+        // when the frontend is drained the remaining queues empty out as
+        // their Time_queue deadlines pass.
+        drain(
+            &mut batcher,
+            engine,
+            &|| clock.now(),
+            &mut stats,
+            &mut tensors,
+            &preproc_done_at,
+            &arrivals,
+            &mut executed_batches,
+            &mut output_l2,
+        )?;
+    }
+    // Final drain after last arrival.
+    for batch in batcher.flush(clock.now()) {
+        exec_flushed(
+            cfg, engine, &buckets, batch, &clock, &mut stats, &mut tensors, &preproc_done_at,
+            &arrivals, &mut executed_batches, &mut output_l2,
+        )?;
+    }
+    pool.join();
+
+    Ok(RealOutcome { stats, executed_batches, platform: engine.platform(), output_l2 })
+}
+
+/// Compile + dry-run all artifacts a serving run may use.
+fn warmup(cfg: &RealConfig, engine: &mut Engine) -> anyhow::Result<()> {
+    let mut keys: Vec<String> = engine
+        .manifest()
+        .iter()
+        .filter(|e| e.key.starts_with("model/") && e.name == cfg.model.name())
+        .filter(|e| cfg.model.kind() == ModelKind::Vision || e.len_s <= cfg.max_audio_s + 1e-9)
+        .map(|e| e.key.clone())
+        .collect();
+    match (cfg.model.kind(), cfg.preproc) {
+        (ModelKind::Vision, RealPreproc::DpuPallas) => {
+            keys.push("kernel/image_pipeline/b1".to_string());
+        }
+        (ModelKind::Audio, RealPreproc::DpuPallas) => {
+            keys.extend(
+                engine
+                    .manifest()
+                    .iter()
+                    .filter(|e| e.name == "audio_pipeline" && e.len_s <= cfg.max_audio_s + 1e-9)
+                    .map(|e| e.key.clone()),
+            );
+        }
+        _ => {}
+    }
+    for key in keys {
+        let entry = engine.manifest().get(&key).unwrap().clone();
+        let inputs: Vec<Vec<f32>> =
+            entry.inputs.iter().map(|s| vec![0f32; s.iter().product()]).collect();
+        engine.execute_f32(&key, &inputs)?;
+    }
+    Ok(())
+}
+
+/// Preprocess one raw request on the configured path.
+fn preprocess_one(cfg: &RealConfig, engine: &mut Engine, raw: &RawRequest) -> anyhow::Result<Vec<f32>> {
+    match (cfg.model.kind(), cfg.preproc) {
+        (ModelKind::Vision, RealPreproc::HostRust) => {
+            // Decode(IDCT) -> resize 72 -> crop 64 -> normalize; must match
+            // the Pallas kernel's parameters (python/compile/kernels/).
+            Ok(ops::image_pipeline(&raw.data, IMG_SRC, IMG_SRC, 3, 72, 64))
+        }
+        (ModelKind::Vision, RealPreproc::DpuPallas) => {
+            let outs = engine.execute_f32("kernel/image_pipeline/b1", &[raw.data.clone()])?;
+            Ok(outs.into_iter().next().unwrap())
+        }
+        (ModelKind::Audio, RealPreproc::HostRust) => {
+            let padded = pad_audio(cfg, &raw.data, raw.len_s);
+            let (feat, _, _) = ops::audio_pipeline(&padded, 16_000, 512, 256, 80);
+            Ok(feat)
+        }
+        (ModelKind::Audio, RealPreproc::DpuPallas) => {
+            let bucket_len = bucket_len_for(cfg, raw.len_s);
+            let padded = pad_audio(cfg, &raw.data, raw.len_s);
+            let key = format!("kernel/audio_pipeline/len{}", fmt_len(bucket_len));
+            let outs = engine.execute_f32(&key, &[padded])?;
+            Ok(outs.into_iter().next().unwrap())
+        }
+    }
+}
+
+/// Pad PCM to its bucket's upper-edge length (what the artifact expects).
+fn pad_audio(cfg: &RealConfig, pcm: &[f32], len_s: f64) -> Vec<f32> {
+    let bucket_len = bucket_len_for(cfg, len_s);
+    let want = (bucket_len * 16_000.0).round() as usize;
+    let mut out = pcm.to_vec();
+    out.resize(want, 0.0);
+    out
+}
+
+fn bucket_len_for(cfg: &RealConfig, len_s: f64) -> f64 {
+    let b = Bucketizer::new(2.5, cfg.max_audio_s);
+    b.repr_len(b.bucket_of(len_s))
+}
+
+/// Format a bucket length for artifact keys (2.5 -> "2p5").
+pub fn fmt_len(len_s: f64) -> String {
+    if (len_s - len_s.round()).abs() < 1e-9 {
+        format!("{}", len_s.round() as u64)
+    } else {
+        format!("{}", len_s).replace('.', "p")
+    }
+}
+
+/// Clamp a policy's Batch_max values to the largest lowered batch.
+fn clamp_policy(policy: BatchPolicy, engine: &Engine, model: ModelId) -> BatchPolicy {
+    let max_b = engine.manifest().batches_for(model.name()).last().copied().unwrap_or(1);
+    match policy {
+        BatchPolicy::Static(mut p) => {
+            p.batch_max = p.batch_max.min(max_b);
+            BatchPolicy::Static(p)
+        }
+        BatchPolicy::Dynamic { mut per_bucket } => {
+            for p in &mut per_bucket {
+                p.batch_max = p.batch_max.min(max_b);
+            }
+            BatchPolicy::Dynamic { per_bucket }
+        }
+    }
+}
+
+/// Execute a flushed (shutdown-path) batch.
+#[allow(clippy::too_many_arguments)]
+fn exec_flushed(
+    cfg: &RealConfig,
+    engine: &mut Engine,
+    buckets: &Bucketizer,
+    batch: crate::batching::Batch,
+    clock: &RealClock,
+    stats: &mut RunStats,
+    tensors: &mut [Option<Vec<f32>>],
+    preproc_done_at: &[Nanos],
+    arrivals: &[Nanos],
+    executed_batches: &mut u64,
+    output_l2: &mut f64,
+) -> anyhow::Result<()> {
+    let want = batch.size();
+    let ab = engine
+        .pick_batch(cfg.model.name(), want)
+        .ok_or_else(|| anyhow::anyhow!("no artifacts for {}", cfg.model.name()))?;
+    let len_key = if cfg.model.kind() == ModelKind::Audio {
+        buckets.repr_len(buckets.bucket_of(batch.max_len_s))
+    } else {
+        0.0
+    };
+    let entry = engine
+        .manifest()
+        .model(cfg.model.name(), ab, len_key)
+        .ok_or_else(|| anyhow::anyhow!("no artifact {}/b{ab}/len{len_key}", cfg.model.name()))?
+        .clone();
+    let per_sample: usize = entry.inputs[0][1..].iter().product();
+    let mut flat = vec![0f32; entry.inputs[0].iter().product()];
+    for (j, r) in batch.requests.iter().enumerate() {
+        if let Some(t) = tensors[r.id as usize].take() {
+            flat[j * per_sample..j * per_sample + t.len()].copy_from_slice(&t);
+        }
+    }
+    let t0 = clock.now();
+    let outs = engine.execute_f32(&entry.key, &[flat])?;
+    let t1 = clock.now();
+    *executed_batches += 1;
+    *output_l2 += outs[0].iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt();
+    for r in &batch.requests {
+        let i = r.id as usize;
+        let parts = LatencyParts {
+            preprocess: preproc_done_at[i].saturating_sub(arrivals[i]),
+            batching: t0.saturating_sub(r.enqueued),
+            dispatch_wait: 0,
+            execution: t1.saturating_sub(t0),
+        };
+        stats.record(parts, t1, batch.size());
+    }
+    Ok(())
+}

@@ -1,0 +1,480 @@
+//! Discrete-event simulation driver for the PREBA server.
+//!
+//! Wires workload generator → preprocessing stage (Ideal / CPU pool /
+//! DPU) → `DynamicBatcher` → vGPU execution workers over the DES event
+//! queue. All the coordinator decisions (bucketing, Batch_max, Time_queue,
+//! merging, least-loaded vGPU dispatch) are the same code the real driver
+//! uses; only the stage *timings* come from the calibrated models.
+
+use crate::batching::{Batch, BatchPolicy, Bucketizer, DynamicBatcher, QueueParams, Request};
+use crate::clock::Nanos;
+use crate::config::PrebaConfig;
+use crate::metrics::{LatencyParts, RunStats};
+use crate::mig::{MigConfig, ServiceModel};
+use crate::models::{ModelId, ModelKind};
+use crate::preprocess::CpuPool;
+use crate::dpu::Dpu;
+use crate::sim::EventQueue;
+use crate::util::Rng;
+use crate::workload::QueryGen;
+
+use super::PolicyKind;
+
+/// Preprocessing-stage design point (paper §6 nomenclature).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreprocMode {
+    /// Oracular upper bound: preprocessing is free ("Ideal").
+    Ideal,
+    /// Baseline: host CPU pool ("Preprocessing (CPU)").
+    Cpu,
+    /// PREBA's DPU ("Preprocessing (DPU)").
+    Dpu,
+}
+
+impl PreprocMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PreprocMode::Ideal => "Ideal",
+            PreprocMode::Cpu => "Preprocessing (CPU)",
+            PreprocMode::Dpu => "Preprocessing (DPU)",
+        }
+    }
+}
+
+/// One simulation run's parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub model: ModelId,
+    pub mig: MigConfig,
+    /// How many of the partition's vGPUs host an active inference server
+    /// (Fig 9 / Fig 17 sweep this 1..=7).
+    pub active_servers: usize,
+    pub preproc: PreprocMode,
+    pub policy: PolicyKind,
+    /// Offered Poisson load, queries/s. Use `saturating_rate` to measure
+    /// peak throughput.
+    pub rate_qps: f64,
+    pub requests: usize,
+    pub seed: u64,
+    /// Fraction of leading completions excluded from stats.
+    pub warmup_frac: f64,
+    /// Fix every audio input to this length instead of sampling the
+    /// LibriSpeech distribution (the paper's §3 characterization fixes
+    /// 2.5 s: "the input audio length is fixed at 2.5 sec").
+    pub fixed_len_s: Option<f64>,
+    /// Non-stationary traffic profile; `None` = constant Poisson at
+    /// `rate_qps` (the MLPerf-server default).
+    pub profile: Option<crate::workload::RateProfile>,
+}
+
+impl SimConfig {
+    pub fn new(model: ModelId, mig: MigConfig, preproc: PreprocMode) -> SimConfig {
+        SimConfig {
+            model,
+            mig,
+            active_servers: mig.vgpus(),
+            preproc,
+            policy: PolicyKind::Dynamic,
+            rate_qps: 0.0, // caller sets or uses saturating_rate
+            requests: 20_000,
+            seed: 0xBEEF,
+            warmup_frac: 0.1,
+            fixed_len_s: None,
+            profile: None,
+        }
+    }
+
+    /// Offered rate that saturates the configured design (~1.25× the
+    /// model-execution capacity of the active vGPUs).
+    pub fn saturating_rate(&self) -> f64 {
+        let sm = ServiceModel::new(self.model.spec(), self.mig.gpcs_per_vgpu());
+        let len = match self.model.kind() {
+            ModelKind::Vision => 0.0,
+            // Mean LibriSpeech-ish length unless pinned.
+            ModelKind::Audio => self.fixed_len_s.unwrap_or(10.0),
+        };
+        1.25 * self.active_servers as f64 * sm.plateau_qps(len)
+    }
+}
+
+/// Results of a run.
+#[derive(Debug)]
+pub struct SimOutcome {
+    pub stats: RunStats,
+    /// Preprocessing-pool CPU utilization (0 when not in CPU mode).
+    pub cpu_util: f64,
+    /// Mean busy fraction of the active vGPUs.
+    pub gpu_util: f64,
+    /// DPU CU utilization (None when no DPU).
+    pub dpu_util: Option<f64>,
+    /// PCIe bandwidth the DPU used, GB/s.
+    pub pcie_gbps: f64,
+    /// Virtual time of the last completion.
+    pub horizon: Nanos,
+    /// Offered load, for reference.
+    pub offered_qps: f64,
+}
+
+impl SimOutcome {
+    /// Measured throughput (completions over the measurement window).
+    pub fn qps(&self) -> f64 {
+        self.stats.throughput_qps()
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.stats.p95_ms()
+    }
+}
+
+/// Execution length a batch is padded to: the longest member's bucket
+/// upper edge under PREBA's bucketed queues, or the longest member itself
+/// under the naive single-queue baseline (which pads batch-by-batch).
+fn padded_len_of(buckets: &Bucketizer, batch: &Batch) -> f64 {
+    if batch.max_len_s <= 0.0 {
+        return 0.0; // vision
+    }
+    let edge = buckets.repr_len(buckets.bucket_of(batch.max_len_s));
+    if edge > 0.0 {
+        edge.max(batch.max_len_s)
+    } else {
+        batch.max_len_s
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrival(usize),
+    PreprocDone(usize),
+    /// Re-check batching deadlines.
+    BatchTick,
+    ExecDone {
+        /// Worker that ran the batch (kept for event-log debugging).
+        #[allow(dead_code)]
+        vgpu: usize,
+        batch_idx: usize,
+    },
+}
+
+struct ReqState {
+    arrival: Nanos,
+    len_s: f64,
+    preproc_done: Nanos,
+}
+
+/// Run one simulation.
+pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
+    let spec = cfg.model.spec();
+    let gpcs = cfg.mig.gpcs_per_vgpu();
+    let n_vgpus = cfg.active_servers.min(cfg.mig.vgpus()).max(1);
+    let sm = ServiceModel::new(spec, gpcs);
+
+    let mut root_rng = Rng::new(cfg.seed ^ 0x5EED);
+    let gen_rng = root_rng.split(1);
+    let pool_rng = root_rng.split(2);
+    let mut exec_rng = root_rng.split(3);
+
+    // Bucketizer + policy. The naive static baseline batches all lengths
+    // in ONE queue (what a stock Triton-style server does); PREBA's
+    // dynamic policy gets the per-length bucket queues (paper §4.3).
+    let buckets = match (cfg.model.kind(), cfg.policy) {
+        (ModelKind::Audio, PolicyKind::Dynamic) => {
+            Bucketizer::new(sys.batching.bucket_window_s, sys.batching.max_audio_s)
+        }
+        _ => Bucketizer::fixed(),
+    };
+    let policy = match cfg.policy {
+        PolicyKind::Static => BatchPolicy::Static(QueueParams {
+            batch_max: sys.batching.static_batch_max,
+            time_queue: sys.batching.static_time_queue,
+        }),
+        PolicyKind::Dynamic => {
+            let mut p = BatchPolicy::dynamic_from_model(spec, &sm, &buckets, n_vgpus);
+            // Time_queue-rule ablation: rescale every bucket's wait from
+            // the paper's /n_vGPUs rule to the configured divisor.
+            if let (Some(div), BatchPolicy::Dynamic { per_bucket }) =
+                (sys.batching.time_queue_divisor, &mut p)
+            {
+                for q in per_bucket {
+                    q.time_queue =
+                        (q.time_queue as f64 * n_vgpus as f64 / div.max(1e-6)) as u64;
+                }
+            }
+            p
+        }
+    };
+    let mut batcher =
+        DynamicBatcher::new(cfg.model, buckets.clone(), policy, sys.batching.merge_adjacent);
+
+    // Preprocessing stage.
+    let usable_cores = sys.hardware.cpu_cores - sys.hardware.cpu_reserved_cores;
+    let mut cpu_pool = CpuPool::new(usable_cores, pool_rng);
+    let mut dpu = match cfg.preproc {
+        PreprocMode::Dpu => Some(Dpu::new(&sys.dpu, &sys.hardware)),
+        _ => None,
+    };
+
+    // vGPU workers: busy-until + accumulated busy ns.
+    let mut vgpu_free: Vec<Nanos> = vec![0; n_vgpus];
+    let mut vgpu_busy: Vec<u128> = vec![0; n_vgpus];
+
+    // Workload.
+    let arrivals = match &cfg.profile {
+        None => QueryGen::new(cfg.model, cfg.rate_qps, gen_rng).take(cfg.requests),
+        Some(profile) => {
+            crate::workload::TraceGen::new(cfg.model, profile.clone(), gen_rng)
+                .take(cfg.requests)
+        }
+    };
+
+    let mut reqs: Vec<ReqState> = arrivals
+        .iter()
+        .map(|a| ReqState {
+            arrival: a.at,
+            len_s: match (cfg.model.kind(), cfg.fixed_len_s) {
+                (ModelKind::Audio, Some(l)) => l,
+                _ => a.len_s,
+            },
+            preproc_done: 0,
+        })
+        .collect();
+
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    for (i, a) in arrivals.iter().enumerate() {
+        q.schedule(a.at, Ev::Arrival(i));
+    }
+
+    let warmup = (cfg.requests as f64 * cfg.warmup_frac) as usize;
+    let mut stats = RunStats::new();
+    let mut in_flight_batches: Vec<Option<Batch>> = Vec::new();
+    let mut horizon: Nanos = 0;
+    let mut completed = 0usize;
+
+    // Dispatch a batch to the least-loaded vGPU.
+    let dispatch = |batch: Batch,
+                    now: Nanos,
+                    vgpu_free: &mut [Nanos],
+                    vgpu_busy: &mut [u128],
+                    in_flight: &mut Vec<Option<Batch>>,
+                    q: &mut EventQueue<Ev>,
+                    exec_rng: &mut Rng,
+                    sm: &ServiceModel,
+                    buckets: &Bucketizer| {
+        let (vgpu, &free) =
+            vgpu_free.iter().enumerate().min_by_key(|(_, &t)| t).expect("vgpus");
+        let start = now.max(free);
+        let padded_len = padded_len_of(buckets, &batch);
+        let exec = crate::clock::secs(sm.exec_secs_jittered(batch.size(), padded_len, exec_rng));
+        let done = start + exec;
+        vgpu_free[vgpu] = done;
+        vgpu_busy[vgpu] += exec as u128;
+        let idx = in_flight.len();
+        in_flight.push(Some(batch));
+        q.schedule(done, Ev::ExecDone { vgpu, batch_idx: idx });
+    };
+
+    crate::sim::run(&mut q, u64::MAX, |now, ev, q| {
+        match ev {
+            Ev::Arrival(i) => {
+                let len = reqs[i].len_s;
+                match cfg.preproc {
+                    PreprocMode::Ideal => q.schedule(now, Ev::PreprocDone(i)),
+                    PreprocMode::Cpu => {
+                        let service = spec.cpu_preproc_secs(len.max(0.1));
+                        let (_, done) = cpu_pool.admit(now, service);
+                        q.schedule(done, Ev::PreprocDone(i));
+                    }
+                    PreprocMode::Dpu => {
+                        let done = dpu.as_mut().unwrap().admit(now, cfg.model, len.max(0.1));
+                        q.schedule(done, Ev::PreprocDone(i));
+                    }
+                }
+            }
+            Ev::PreprocDone(i) => {
+                reqs[i].preproc_done = now;
+                batcher.enqueue(Request {
+                    id: i as u64,
+                    model: cfg.model,
+                    arrival: reqs[i].arrival,
+                    enqueued: now,
+                    len_s: reqs[i].len_s,
+                });
+                while let Some((batch, _)) = batcher.try_form(now) {
+                    dispatch(
+                        batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches, q,
+                        &mut exec_rng, &sm, &buckets,
+                    );
+                }
+                if let Some(deadline) = batcher.next_deadline() {
+                    q.schedule(deadline, Ev::BatchTick);
+                }
+            }
+            Ev::BatchTick => {
+                while let Some((batch, _)) = batcher.try_form(now) {
+                    dispatch(
+                        batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches, q,
+                        &mut exec_rng, &sm, &buckets,
+                    );
+                }
+                if let Some(deadline) = batcher.next_deadline() {
+                    q.schedule(deadline, Ev::BatchTick);
+                }
+            }
+            Ev::ExecDone { vgpu: _, batch_idx } => {
+                let batch = in_flight_batches[batch_idx].take().expect("batch completed twice");
+                horizon = horizon.max(now);
+                let bsize = batch.size();
+                for r in &batch.requests {
+                    completed += 1;
+                    if completed <= warmup {
+                        continue;
+                    }
+                    let rs = &reqs[r.id as usize];
+                    // Split (formed -> done) into dispatch wait + exec:
+                    // attribute the jitterless model time to execution and
+                    // the remainder to waiting for a free vGPU.
+                    let padded_len = padded_len_of(&buckets, &batch);
+                    let exec_model = crate::clock::secs(sm.exec_secs(bsize, padded_len));
+                    let since_formed = now.saturating_sub(batch.formed);
+                    let exec_ns = exec_model.min(since_formed);
+                    let parts = LatencyParts {
+                        preprocess: rs.preproc_done - rs.arrival,
+                        batching: batch.formed.saturating_sub(rs.preproc_done),
+                        dispatch_wait: since_formed - exec_ns,
+                        execution: exec_ns,
+                    };
+                    stats.record(parts, now, bsize);
+                }
+            }
+        }
+        true
+    });
+
+    let gpu_util = if horizon > 0 {
+        vgpu_busy.iter().map(|&b| b as f64).sum::<f64>()
+            / (horizon as f64 * n_vgpus as f64)
+    } else {
+        0.0
+    }
+    .min(1.0);
+
+    SimOutcome {
+        cpu_util: match cfg.preproc {
+            PreprocMode::Cpu => cpu_pool.utilization(horizon),
+            _ => 0.0,
+        },
+        gpu_util,
+        dpu_util: dpu.as_ref().map(|d| d.utilization(horizon)),
+        pcie_gbps: dpu.as_ref().map(|d| d.pcie_gbps_used(horizon)).unwrap_or(0.0),
+        horizon,
+        offered_qps: cfg.rate_qps,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(model: ModelId, preproc: PreprocMode) -> (SimConfig, PrebaConfig) {
+        let mut c = SimConfig::new(model, MigConfig::Small7, preproc);
+        c.requests = 4000;
+        c.rate_qps = c.saturating_rate();
+        (c, PrebaConfig::new())
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let (cfg, sys) = base_cfg(ModelId::MobileNet, PreprocMode::Ideal);
+        let out = run(&cfg, &sys);
+        let warmup = (cfg.requests as f64 * cfg.warmup_frac) as u64;
+        assert_eq!(out.stats.completed, cfg.requests as u64 - warmup);
+    }
+
+    #[test]
+    fn cpu_preprocessing_caps_throughput() {
+        // Fig 8: with preprocessing on the host CPU, throughput collapses
+        // vs Ideal for preprocessing-heavy models.
+        let (ci, sys) = base_cfg(ModelId::CitriNet, PreprocMode::Ideal);
+        let (cc, _) = base_cfg(ModelId::CitriNet, PreprocMode::Cpu);
+        let ideal = run(&ci, &sys).qps();
+        let cpu = run(&cc, &sys).qps();
+        assert!(cpu < ideal * 0.45, "cpu={cpu} ideal={ideal}");
+    }
+
+    #[test]
+    fn dpu_restores_near_ideal_throughput() {
+        let (ci, sys) = base_cfg(ModelId::CitriNet, PreprocMode::Ideal);
+        let (cd, _) = base_cfg(ModelId::CitriNet, PreprocMode::Dpu);
+        let ideal = run(&ci, &sys).qps();
+        let dpu = run(&cd, &sys).qps();
+        assert!(dpu > ideal * 0.85, "dpu={dpu} ideal={ideal}");
+    }
+
+    #[test]
+    fn cpu_pool_saturates_near_90pct() {
+        let (cfg, sys) = base_cfg(ModelId::ConformerSmall, PreprocMode::Cpu);
+        let out = run(&cfg, &sys);
+        assert!(out.cpu_util > 0.85, "cpu_util={}", out.cpu_util);
+    }
+
+    #[test]
+    fn vision_vs_audio_modes_run() {
+        for m in [ModelId::SqueezeNet, ModelId::ConformerDefault] {
+            for p in [PreprocMode::Ideal, PreprocMode::Cpu, PreprocMode::Dpu] {
+                let (mut cfg, sys) = base_cfg(m, p);
+                cfg.requests = 1200;
+                let out = run(&cfg, &sys);
+                assert!(out.qps() > 0.0, "{m} {p:?}");
+                assert!(out.p95_ms() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (cfg, sys) = base_cfg(ModelId::MobileNet, PreprocMode::Dpu);
+        let a = run(&cfg, &sys);
+        let b = run(&cfg, &sys);
+        assert_eq!(a.qps(), b.qps());
+        assert_eq!(a.p95_ms(), b.p95_ms());
+        assert_eq!(a.horizon, b.horizon);
+    }
+
+    #[test]
+    fn dynamic_policy_beats_static_on_tail_latency() {
+        // Fig 22's software ablation, in miniature: at moderate load the
+        // dynamic policy should cut tail latency vs a naive static batcher.
+        let mut cfg = SimConfig::new(ModelId::ConformerDefault, MigConfig::Small7, PreprocMode::Dpu);
+        cfg.requests = 4000;
+        cfg.rate_qps = 0.7 * cfg.saturating_rate() / 1.25;
+        let sys = PrebaConfig::new();
+        let dyn_out = run(&cfg, &sys);
+        cfg.policy = PolicyKind::Static;
+        let static_out = run(&cfg, &sys);
+        assert!(
+            dyn_out.p95_ms() < static_out.p95_ms(),
+            "dynamic {} vs static {}",
+            dyn_out.p95_ms(),
+            static_out.p95_ms()
+        );
+    }
+
+    #[test]
+    fn full_gpu_needs_bigger_batches_than_slices() {
+        let mut small = SimConfig::new(ModelId::MobileNet, MigConfig::Small7, PreprocMode::Ideal);
+        small.requests = 4000;
+        small.rate_qps = small.saturating_rate();
+        let mut full = SimConfig::new(ModelId::MobileNet, MigConfig::Full1, PreprocMode::Ideal);
+        full.requests = 4000;
+        full.rate_qps = full.saturating_rate();
+        let sys = PrebaConfig::new();
+        let s = run(&small, &sys);
+        let f = run(&full, &sys);
+        assert!(
+            f.stats.batch_sizes.mean() > 3.0 * s.stats.batch_sizes.mean(),
+            "full {} vs small {}",
+            f.stats.batch_sizes.mean(),
+            s.stats.batch_sizes.mean()
+        );
+    }
+}

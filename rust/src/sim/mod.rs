@@ -1,0 +1,183 @@
+//! Discrete-event simulation core.
+//!
+//! The paper's figures are statistical properties of a queueing system
+//! (arrivals → preprocessing → batching → vGPU execution). On this
+//! single-core CI box we regenerate them with a deterministic DES under a
+//! [`crate::clock::VirtualClock`]; the identical coordinator code also runs
+//! under the real-PJRT driver (`server::real_driver`) for end-to-end
+//! validation.
+//!
+//! Design: a binary-heap event queue of `(time, seq, Event)`. `seq` breaks
+//! ties FIFO so runs are bit-reproducible. The event type is generic: the
+//! concrete server simulation (`server::sim_driver`) defines its own event
+//! enum and owns all component state, which keeps the borrow checker out of
+//! the way (no `Rc<RefCell<dyn Actor>>` web).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::clock::Nanos;
+
+/// An entry in the event queue.
+struct Scheduled<E> {
+    at: Nanos,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Event queue with virtual time.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    seq: u64,
+    now: Nanos,
+    processed: u64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0, processed: 0 }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> Nanos {
+        self.now
+    }
+
+    /// Number of events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `ev` at absolute time `at`. Scheduling in the past clamps
+    /// to `now` (events fire immediately, in FIFO order).
+    pub fn schedule(&mut self, at: Nanos, ev: E) {
+        let at = at.max(self.now);
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq: self.seq, ev });
+    }
+
+    /// Schedule `ev` after a delay relative to `now`.
+    pub fn schedule_in(&mut self, delay: Nanos, ev: E) {
+        self.schedule(self.now.saturating_add(delay), ev);
+    }
+
+    /// Pop the next event, advancing virtual time.
+    pub fn pop(&mut self) -> Option<(Nanos, E)> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.at >= self.now);
+        self.now = s.at;
+        self.processed += 1;
+        Some((s.at, s.ev))
+    }
+
+    /// Time of the next scheduled event, if any.
+    pub fn peek_time(&self) -> Option<Nanos> {
+        self.heap.peek().map(|s| s.at)
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Drive a simulation to completion: repeatedly pop events and hand them to
+/// `step` together with the queue (so handlers can schedule more). Stops
+/// when the queue drains, `step` returns `false`, or `max_events` fires
+/// (runaway guard).
+pub fn run<E, F: FnMut(Nanos, E, &mut EventQueue<E>) -> bool>(
+    q: &mut EventQueue<E>,
+    max_events: u64,
+    mut step: F,
+) -> u64 {
+    let mut n = 0;
+    while let Some((t, ev)) = q.pop() {
+        n += 1;
+        if !step(t, ev, q) || n >= max_events {
+            break;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_then_fifo() {
+        let mut q: EventQueue<&'static str> = EventQueue::new();
+        q.schedule(20, "b");
+        q.schedule(10, "a1");
+        q.schedule(10, "a2");
+        q.schedule(30, "c");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(
+            order,
+            vec![(10, "a1"), (10, "a2"), (20, "b"), (30, "c")]
+        );
+    }
+
+    #[test]
+    fn clamps_past_scheduling() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule(100, 1);
+        q.pop();
+        assert_eq!(q.now(), 100);
+        q.schedule(50, 2); // in the past -> fires now
+        assert_eq!(q.pop(), Some((100, 2)));
+    }
+
+    #[test]
+    fn run_drives_cascade() {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        q.schedule(0, 0);
+        let mut fired = Vec::new();
+        run(&mut q, 1000, |t, ev, q| {
+            fired.push((t, ev));
+            if ev < 4 {
+                q.schedule_in(10, ev + 1);
+            }
+            true
+        });
+        assert_eq!(fired, vec![(0, 0), (10, 1), (20, 2), (30, 3), (40, 4)]);
+    }
+
+    #[test]
+    fn run_respects_max_events() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule(0, 0);
+        let n = run(&mut q, 5, |_, _, q| {
+            q.schedule_in(1, 0); // infinite cascade
+            true
+        });
+        assert_eq!(n, 5);
+    }
+}

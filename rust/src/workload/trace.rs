@@ -1,0 +1,225 @@
+//! Non-stationary traffic: real inference servers see diurnal cycles and
+//! bursts, not a constant-rate Poisson stream (paper §3.2: "input traffic
+//! patterns are constantly changing with varying traffic intensities").
+//!
+//! Three generators on top of the Poisson thinning method:
+//! * [`RateProfile::Constant`] — the MLPerf-server baseline.
+//! * [`RateProfile::Diurnal`] — sinusoidal day/night swing.
+//! * [`RateProfile::Bursty`] — Markov-modulated Poisson (quiet/burst
+//!   states), the adversarial case for a batching system: bursts fill
+//!   batches instantly while quiet periods leave requests waiting on
+//!   `Time_queue`.
+
+use crate::clock::{secs, Nanos};
+use crate::models::{ModelId, ModelKind};
+use crate::util::Rng;
+
+use super::{sample_librispeech_len, Arrival};
+
+/// Time-varying offered-rate profile, queries/s at time `t`.
+#[derive(Debug, Clone)]
+pub enum RateProfile {
+    /// Fixed rate.
+    Constant { qps: f64 },
+    /// `base * (1 + amplitude * sin(2π t / period))`.
+    Diurnal { base_qps: f64, amplitude: f64, period_s: f64 },
+    /// Two-state MMPP: quiet rate / burst rate with exponential dwell
+    /// times.
+    Bursty {
+        quiet_qps: f64,
+        burst_qps: f64,
+        mean_quiet_s: f64,
+        mean_burst_s: f64,
+    },
+}
+
+impl RateProfile {
+    /// Instantaneous rate at `t_s` (burst state handled by the generator).
+    pub fn rate_at(&self, t_s: f64, in_burst: bool) -> f64 {
+        match self {
+            RateProfile::Constant { qps } => *qps,
+            RateProfile::Diurnal { base_qps, amplitude, period_s } => {
+                base_qps * (1.0 + amplitude * (2.0 * std::f64::consts::PI * t_s / period_s).sin())
+            }
+            RateProfile::Bursty { quiet_qps, burst_qps, .. } => {
+                if in_burst {
+                    *burst_qps
+                } else {
+                    *quiet_qps
+                }
+            }
+        }
+        .max(1e-6)
+    }
+
+    /// Upper bound of the rate (for Poisson thinning).
+    pub fn max_rate(&self) -> f64 {
+        match self {
+            RateProfile::Constant { qps } => *qps,
+            RateProfile::Diurnal { base_qps, amplitude, .. } => base_qps * (1.0 + amplitude.abs()),
+            RateProfile::Bursty { quiet_qps, burst_qps, .. } => quiet_qps.max(*burst_qps),
+        }
+    }
+
+    /// Long-run mean rate.
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            RateProfile::Constant { qps } => *qps,
+            RateProfile::Diurnal { base_qps, .. } => *base_qps,
+            RateProfile::Bursty { quiet_qps, burst_qps, mean_quiet_s, mean_burst_s } => {
+                (quiet_qps * mean_quiet_s + burst_qps * mean_burst_s)
+                    / (mean_quiet_s + mean_burst_s)
+            }
+        }
+    }
+}
+
+/// Non-stationary arrival generator (thinning / state-switching).
+#[derive(Debug)]
+pub struct TraceGen {
+    model: ModelId,
+    profile: RateProfile,
+    rng: Rng,
+    t_s: f64,
+    in_burst: bool,
+    /// Next burst/quiet state switch (bursty profile only).
+    next_switch_s: f64,
+}
+
+impl TraceGen {
+    pub fn new(model: ModelId, profile: RateProfile, mut rng: Rng) -> TraceGen {
+        let next_switch_s = match &profile {
+            RateProfile::Bursty { mean_quiet_s, .. } => rng.exp(1.0 / mean_quiet_s),
+            _ => f64::INFINITY,
+        };
+        TraceGen { model, profile, rng, t_s: 0.0, in_burst: false, next_switch_s }
+    }
+
+    fn advance_state(&mut self) {
+        if let RateProfile::Bursty { mean_quiet_s, mean_burst_s, .. } = self.profile {
+            while self.t_s >= self.next_switch_s {
+                self.in_burst = !self.in_burst;
+                let dwell =
+                    if self.in_burst { mean_burst_s } else { mean_quiet_s };
+                self.next_switch_s += self.rng.exp(1.0 / dwell);
+            }
+        }
+    }
+
+    /// Next arrival via Poisson thinning against `max_rate`.
+    pub fn next(&mut self) -> Arrival {
+        let lambda_max = self.profile.max_rate();
+        loop {
+            self.t_s += self.rng.exp(lambda_max);
+            self.advance_state();
+            let lambda = self.profile.rate_at(self.t_s, self.in_burst);
+            if self.rng.f64() <= lambda / lambda_max {
+                let len_s = match self.model.kind() {
+                    ModelKind::Vision => 0.0,
+                    ModelKind::Audio => sample_librispeech_len(&mut self.rng),
+                };
+                return Arrival { at: secs(self.t_s), len_s };
+            }
+        }
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Arrival> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+/// Windowed arrival-rate estimate of a trace (diagnostics / tests).
+pub fn windowed_rates(arrivals: &[Arrival], window: Nanos) -> Vec<f64> {
+    if arrivals.is_empty() {
+        return Vec::new();
+    }
+    let horizon = arrivals.last().unwrap().at;
+    let n_windows = (horizon / window + 1) as usize;
+    let mut counts = vec![0u64; n_windows];
+    for a in arrivals {
+        counts[(a.at / window) as usize] += 1;
+    }
+    let w_s = window as f64 * 1e-9;
+    counts.into_iter().map(|c| c as f64 / w_s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::to_secs;
+
+    #[test]
+    fn constant_matches_poisson_mean() {
+        let mut g = TraceGen::new(
+            ModelId::MobileNet,
+            RateProfile::Constant { qps: 200.0 },
+            Rng::new(1),
+        );
+        let a = g.take(20_000);
+        let rate = a.len() as f64 / to_secs(a.last().unwrap().at);
+        assert!((rate / 200.0 - 1.0).abs() < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates() {
+        let profile = RateProfile::Diurnal { base_qps: 100.0, amplitude: 0.8, period_s: 20.0 };
+        let mut g = TraceGen::new(ModelId::MobileNet, profile, Rng::new(2));
+        let a = g.take(30_000);
+        let rates = windowed_rates(&a, secs(2.0));
+        let max = rates.iter().cloned().fold(0.0, f64::max);
+        let min = rates.iter().skip(1).take(rates.len().saturating_sub(2)).cloned().fold(f64::INFINITY, f64::min);
+        assert!(max > 140.0, "max window rate {max}");
+        assert!(min < 60.0, "min window rate {min}");
+    }
+
+    #[test]
+    fn bursty_mean_rate_matches_mmpp() {
+        let profile = RateProfile::Bursty {
+            quiet_qps: 20.0,
+            burst_qps: 400.0,
+            mean_quiet_s: 4.0,
+            mean_burst_s: 1.0,
+        };
+        let expect = profile.mean_rate();
+        assert!((expect - 96.0).abs() < 1e-9);
+        let mut g = TraceGen::new(ModelId::CitriNet, profile, Rng::new(3));
+        // Long trace: per-cycle arrival counts are dominated by the
+        // exponential burst dwell, so the mean converges slowly (~9%
+        // relative std at 40k arrivals).
+        let a = g.take(150_000);
+        let rate = a.len() as f64 / to_secs(a.last().unwrap().at);
+        assert!((rate / expect - 1.0).abs() < 0.15, "rate={rate} expect={expect}");
+    }
+
+    #[test]
+    fn bursty_has_heavy_rate_dispersion() {
+        let profile = RateProfile::Bursty {
+            quiet_qps: 20.0,
+            burst_qps: 400.0,
+            mean_quiet_s: 4.0,
+            mean_burst_s: 1.0,
+        };
+        let mut g = TraceGen::new(ModelId::CitriNet, profile, Rng::new(4));
+        let a = g.take(30_000);
+        let rates = windowed_rates(&a, secs(1.0));
+        let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+        let var =
+            rates.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / rates.len() as f64;
+        // Coefficient of variation far above Poisson's.
+        assert!(var.sqrt() / mean > 0.8, "cv={}", var.sqrt() / mean);
+    }
+
+    #[test]
+    fn arrivals_strictly_ordered() {
+        for profile in [
+            RateProfile::Constant { qps: 50.0 },
+            RateProfile::Diurnal { base_qps: 50.0, amplitude: 0.5, period_s: 10.0 },
+        ] {
+            let mut g = TraceGen::new(ModelId::SqueezeNet, profile, Rng::new(5));
+            let a = g.take(2000);
+            for w in a.windows(2) {
+                assert!(w[1].at >= w[0].at);
+            }
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Integration: the `preba` CLI binary end-to-end (argument parsing,
+//! subcommand wiring, human-readable output).
+
+use std::process::Command;
+
+fn preba() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_preba"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = preba().args(args).output().expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba {args:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn help_and_list() {
+    let help = run_ok(&["--help"]);
+    assert!(help.contains("simulate"));
+    assert!(help.contains("experiment"));
+    let list = run_ok(&["list"]);
+    for m in preba::models::ModelId::ALL {
+        assert!(list.contains(m.name()), "{m} missing from list");
+    }
+    assert!(list.contains("1g.5gb(7x)"));
+    assert!(list.contains("fig17"));
+    assert!(list.contains("abl_traffic"));
+}
+
+#[test]
+fn simulate_reports_breakdown() {
+    let out = run_ok(&[
+        "simulate",
+        "--model",
+        "squeezenet",
+        "--mig",
+        "1g",
+        "--preproc",
+        "dpu",
+        "--requests",
+        "1500",
+    ]);
+    assert!(out.contains("throughput"), "{out}");
+    assert!(out.contains("breakdown"), "{out}");
+    assert!(out.contains("gpu util"), "{out}");
+}
+
+#[test]
+fn profile_prints_knee() {
+    let out = run_ok(&["profile", "--model", "mobilenet", "--mig", "1g"]);
+    assert!(out.contains("Batch_knee=16"), "{out}");
+}
+
+#[test]
+fn plan_recommends_partition() {
+    let out = run_ok(&["plan", "--model", "mobilenet", "--sla", "50"]);
+    assert!(out.contains("recommended: 1g.5gb(7x)"), "{out}");
+    // Impossible SLA.
+    let out = run_ok(&["plan", "--model", "conformer_default", "--sla", "0.5", "--len", "25"]);
+    assert!(out.contains("no partition"), "{out}");
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = preba().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown command"), "{err}");
+}
+
+#[test]
+fn unknown_model_fails_helpfully() {
+    let out = preba().args(["simulate", "--model", "resnet"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown model"), "{err}");
+    assert!(err.contains("mobilenet"), "should list known models: {err}");
+}
+
+#[test]
+fn config_file_override_applies() {
+    let dir = std::env::temp_dir().join("preba_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny.toml");
+    std::fs::write(&path, "[workload]\nrequests = 500\n[hardware]\ncpu_cores = 16\n").unwrap();
+    let out = run_ok(&[
+        "--config",
+        path.to_str().unwrap(),
+        "simulate",
+        "--model",
+        "citrinet",
+        "--preproc",
+        "cpu",
+        "--requests",
+        "800",
+    ]);
+    assert!(out.contains("cpu util"), "{out}");
+}

@@ -1,0 +1,50 @@
+//! Integration: experiment registry — every figure/table runs through the
+//! CLI-facing entry points and produces well-formed JSON.
+//!
+//! Heavier per-figure shape checks live in each experiment module's unit
+//! tests; this suite guards the registry, the fast path, and the JSON
+//! contract the results files depend on.
+
+use preba::config::PrebaConfig;
+use preba::experiments;
+
+#[test]
+fn registry_ids_unique_and_resolvable() {
+    let mut ids: Vec<&str> = experiments::ALL.iter().map(|(id, _)| *id).collect();
+    let n = ids.len();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "duplicate experiment ids");
+    for (id, _) in experiments::ALL {
+        assert!(experiments::by_id(id).is_some(), "{id} not resolvable");
+    }
+    assert!(experiments::by_id("nope").is_none());
+}
+
+#[test]
+fn cheap_experiments_produce_data() {
+    // The analytic / non-simulation experiments run in milliseconds and
+    // must produce non-empty data sections.
+    std::env::set_var("PREBA_RESULTS_DIR", std::env::temp_dir().join("preba_results").to_str().unwrap());
+    let sys = PrebaConfig::new();
+    for id in ["fig5", "fig6", "fig12", "fig13", "fig14", "fig15", "table1"] {
+        let f = experiments::by_id(id).unwrap();
+        let doc = f(&sys);
+        let data = doc.get("data").unwrap().as_obj().unwrap();
+        assert!(!data.is_empty(), "{id} produced no data");
+    }
+}
+
+#[test]
+fn results_files_written_and_parse_back() {
+    let dir = std::env::temp_dir().join("preba_results_roundtrip");
+    std::env::set_var("PREBA_RESULTS_DIR", dir.to_str().unwrap());
+    let sys = PrebaConfig::new();
+    experiments::by_id("table1").unwrap()(&sys);
+    let text = std::fs::read_to_string(dir.join("table1.json")).unwrap();
+    let parsed = preba::util::json::parse(&text).unwrap();
+    assert_eq!(
+        parsed.get("title").unwrap().as_str().unwrap(),
+        "Table 1: DPU resource utilization (FPGA + TPU adaptation)"
+    );
+}

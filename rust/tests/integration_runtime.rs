@@ -1,0 +1,175 @@
+//! Integration: PJRT runtime × AOT artifacts × Rust preprocessing ops.
+//!
+//! Requires `make artifacts` (skips cleanly when absent so `cargo test`
+//! stays green pre-AOT).
+
+use preba::models::Manifest;
+use preba::preprocess::ops;
+use preba::runtime::Engine;
+use preba::util::Rng;
+use preba::workload;
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if Manifest::exists(dir) {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("skipping: no artifacts (run `make artifacts`)");
+    None
+}
+
+#[test]
+fn manifest_loads_and_covers_all_models() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.len() >= 60, "manifest has {} artifacts", m.len());
+    for model in preba::models::ModelId::ALL {
+        assert!(
+            !m.batches_for(model.name()).is_empty(),
+            "no artifacts for {model}"
+        );
+    }
+    assert!(m.get("kernel/image_pipeline/b1").is_some());
+    assert!(m.get("kernel/audio_pipeline/len2p5").is_some());
+}
+
+#[test]
+fn image_kernel_hlo_matches_rust_ops() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let mut rng = Rng::new(42);
+    let coeffs = workload::synth_image_coeffs(96, 96, 3, &mut rng);
+    // PJRT path (the Pallas kernel lowered to HLO).
+    let outs = engine.execute_f32("kernel/image_pipeline/b1", &[coeffs.clone()]).unwrap();
+    // Host-Rust path (the CPU baseline implementation).
+    let want = ops::image_pipeline(&coeffs, 96, 96, 3, 72, 64);
+    assert_eq!(outs[0].len(), want.len());
+    let max_err = outs[0]
+        .iter()
+        .zip(want.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "kernel vs rust ops max err {max_err}");
+}
+
+#[test]
+fn audio_kernel_hlo_matches_rust_ops() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let mut rng = Rng::new(43);
+    let pcm = workload::synth_pcm(2.5, &mut rng);
+    let outs = engine.execute_f32("kernel/audio_pipeline/len2p5", &[pcm.clone()]).unwrap();
+    let (want, _, _) = ops::audio_pipeline(&pcm, 16_000, 512, 256, 80);
+    assert_eq!(outs[0].len(), want.len());
+    let max_err = outs[0]
+        .iter()
+        .zip(want.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 5e-3, "kernel vs rust ops max err {max_err}");
+}
+
+#[test]
+fn model_execution_produces_finite_nonzero_logits() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let mut rng = Rng::new(44);
+    // Preprocess a real image, run mobilenet b1.
+    let coeffs = workload::synth_image_coeffs(96, 96, 3, &mut rng);
+    let tensor = ops::image_pipeline(&coeffs, 96, 96, 3, 72, 64);
+    let outs = engine.execute_f32("model/mobilenet/b1", &[tensor]).unwrap();
+    assert_eq!(outs[0].len(), 1000);
+    let l2: f32 = outs[0].iter().map(|v| v * v).sum::<f32>().sqrt();
+    assert!(l2.is_finite() && l2 > 1e-3, "logits l2 = {l2}");
+}
+
+#[test]
+fn audio_model_execution_all_buckets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let mut rng = Rng::new(45);
+    for len in [2.5f64, 5.0] {
+        let pcm = workload::synth_pcm(len, &mut rng);
+        let key = format!("kernel/audio_pipeline/len{}", if len == 2.5 { "2p5" } else { "5" });
+        let feat = engine.execute_f32(&key, &[pcm]).unwrap().remove(0);
+        let model_key = format!("model/citrinet/b1/len{}", if len == 2.5 { "2p5" } else { "5" });
+        let outs = engine.execute_f32(&model_key, &[feat]).unwrap();
+        let l2: f32 = outs[0].iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(l2.is_finite() && l2 > 1e-3, "len {len}: l2 = {l2}");
+    }
+}
+
+#[test]
+fn batch_padding_roundtrip() {
+    // Executing a b4 artifact with only 2 real samples: the first two
+    // output rows must match the b1 artifact's outputs for those samples.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let mut rng = Rng::new(46);
+    let t1 = ops::image_pipeline(&workload::synth_image_coeffs(96, 96, 3, &mut rng), 96, 96, 3, 72, 64);
+    let t2 = ops::image_pipeline(&workload::synth_image_coeffs(96, 96, 3, &mut rng), 96, 96, 3, 72, 64);
+    let single1 = engine.execute_f32("model/squeezenet/b1", &[t1.clone()]).unwrap().remove(0);
+    let mut flat = Vec::new();
+    flat.extend_from_slice(&t1);
+    flat.extend_from_slice(&t2);
+    let batched = engine.execute_f32("model/squeezenet/b4", &[flat]).unwrap().remove(0);
+    assert_eq!(batched.len(), 4 * 1000);
+    let max_err = single1
+        .iter()
+        .zip(batched[..1000].iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "b1 vs b4[0] max err {max_err}");
+}
+
+#[test]
+fn pick_batch_padding_logic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    assert_eq!(engine.pick_batch("mobilenet", 3), Some(4));
+    assert_eq!(engine.pick_batch("mobilenet", 16), Some(16));
+    // Beyond the largest lowered batch: falls back to the largest.
+    assert_eq!(engine.pick_batch("mobilenet", 99), Some(16));
+    assert_eq!(engine.pick_batch("nonexistent", 1), None);
+}
+
+#[test]
+fn audio_ops_stable_on_degenerate_tone_input() {
+    // A pure low-frequency tone leaves high mel channels near-silent; the
+    // numeric floors (log +1e-3, variance +1e-2) must keep the output
+    // finite and bounded rather than amplifying rounding noise
+    // (DESIGN.md §7 — this was a real bug class during bring-up).
+    let n = 40_000usize;
+    let pcm: Vec<f32> = (0..n).map(|i| (0.01 * i as f32).sin()).collect();
+    let (out, nf, nm) = ops::audio_pipeline(&pcm, 16_000, 512, 256, 80);
+    assert_eq!((nf, nm), (155, 80));
+    assert!(out.iter().all(|v| v.is_finite()));
+    assert!(out.iter().all(|v| v.abs() < 50.0));
+}
+use std::time::Instant;
+#[test]
+fn time_kernels() {
+    let mut engine = Engine::new("artifacts").unwrap();
+    let mut rng = Rng::new(1);
+    let coeffs = workload::synth_image_coeffs(96, 96, 3, &mut rng);
+    engine.execute_f32("kernel/image_pipeline/b1", &[coeffs.clone()]).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..10 { engine.execute_f32("kernel/image_pipeline/b1", &[coeffs.clone()]).unwrap(); }
+    eprintln!("image kernel: {:?}/call", t0.elapsed()/10);
+    let pcm = workload::synth_pcm(2.5, &mut rng);
+    engine.execute_f32("kernel/audio_pipeline/len2p5", &[pcm.clone()]).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..5 { engine.execute_f32("kernel/audio_pipeline/len2p5", &[pcm.clone()]).unwrap(); }
+    eprintln!("audio kernel: {:?}/call", t0.elapsed()/5);
+    let tensor = vec![0.5f32; 64*64*3];
+    engine.execute_f32("model/mobilenet/b1", &[tensor.clone()]).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..10 { engine.execute_f32("model/mobilenet/b1", &[tensor.clone()]).unwrap(); }
+    eprintln!("mobilenet b1: {:?}/call", t0.elapsed()/10);
+    let t16 = vec![0.5f32; 16*64*64*3];
+    engine.execute_f32("model/mobilenet/b16", &[t16.clone()]).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..10 { engine.execute_f32("model/mobilenet/b16", &[t16.clone()]).unwrap(); }
+    eprintln!("mobilenet b16: {:?}/call", t0.elapsed()/10);
+}

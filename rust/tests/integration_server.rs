@@ -1,0 +1,99 @@
+//! Integration: the DES server end-to-end — the paper's qualitative
+//! claims as executable assertions (who wins, roughly by how much).
+
+use preba::config::PrebaConfig;
+use preba::mig::MigConfig;
+use preba::models::ModelId;
+use preba::server::{sim_driver, PolicyKind, PreprocMode, SimConfig};
+
+fn saturated(model: ModelId, mig: MigConfig, preproc: PreprocMode, policy: PolicyKind) -> sim_driver::SimOutcome {
+    let mut cfg = SimConfig::new(model, mig, preproc);
+    cfg.policy = policy;
+    cfg.requests = 6000;
+    cfg.rate_qps = cfg.saturating_rate();
+    sim_driver::run(&cfg, &PrebaConfig::new())
+}
+
+#[test]
+fn headline_preba_speedup_over_baseline() {
+    // Paper §1: PREBA = 3.7x average throughput over CPU baseline.
+    let mut ratios = Vec::new();
+    for model in ModelId::ALL {
+        let cpu = saturated(model, MigConfig::Small7, PreprocMode::Cpu, PolicyKind::Dynamic).qps();
+        let dpu = saturated(model, MigConfig::Small7, PreprocMode::Dpu, PolicyKind::Dynamic).qps();
+        assert!(dpu > cpu, "{model}: DPU {dpu} !> CPU {cpu}");
+        ratios.push(dpu / cpu);
+    }
+    let geo = (ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64).exp();
+    assert!((2.0..7.0).contains(&geo), "avg speedup {geo} (paper: 3.7x)");
+}
+
+#[test]
+fn preba_within_10pct_of_ideal_for_most_models() {
+    // Paper §6.1: >= 91.6% of Ideal for 5 of 6 models.
+    let mut close = 0;
+    for model in ModelId::ALL {
+        let ideal = saturated(model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
+        let dpu = saturated(model, MigConfig::Small7, PreprocMode::Dpu, PolicyKind::Dynamic).qps();
+        if dpu >= 0.85 * ideal {
+            close += 1;
+        }
+    }
+    assert!(close >= 5, "only {close}/6 models near Ideal");
+}
+
+#[test]
+fn small_slices_beat_full_gpu_on_aggregate_throughput() {
+    // Paper Fig 5: 1g.5gb(7x) aggregate > 7g.40gb(1x), preproc disabled.
+    for model in [ModelId::MobileNet, ModelId::CitriNet] {
+        let small = saturated(model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
+        let full = saturated(model, MigConfig::Full1, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
+        assert!(small > full, "{model}: small {small} !> full {full}");
+    }
+}
+
+#[test]
+fn tail_latency_reduction_vs_baseline_at_moderate_load() {
+    // Paper §1: 3.4x tail latency reduction. At a load the baseline can
+    // still (barely) sustain, PREBA's p95 must be far lower.
+    let model = ModelId::SqueezeNet;
+    let mut cfg = SimConfig::new(model, MigConfig::Small7, PreprocMode::Cpu);
+    cfg.requests = 6000;
+    // Offer what the CPU baseline can achieve at saturation * 0.9.
+    let base_cap = saturated(model, MigConfig::Small7, PreprocMode::Cpu, PolicyKind::Dynamic).qps();
+    cfg.rate_qps = base_cap * 0.9;
+    let sys = PrebaConfig::new();
+    let base = sim_driver::run(&cfg, &sys);
+    cfg.preproc = PreprocMode::Dpu;
+    let preba = sim_driver::run(&cfg, &sys);
+    assert!(
+        preba.p95_ms() * 2.0 < base.p95_ms(),
+        "p95: PREBA {} vs baseline {}",
+        preba.p95_ms(),
+        base.p95_ms()
+    );
+}
+
+#[test]
+fn medium_partition_lands_between_small_and_full() {
+    let model = ModelId::MobileNet;
+    let small = saturated(model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
+    let medium = saturated(model, MigConfig::Medium3, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
+    let full = saturated(model, MigConfig::Full1, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
+    assert!(medium < small, "medium {medium} !< small {small}");
+    assert!(medium > full * 0.8, "medium {medium} too far below full {full}");
+}
+
+#[test]
+fn gpu_utilization_high_when_saturated_ideal() {
+    let out = saturated(ModelId::SwinTransformer, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic);
+    assert!(out.gpu_util > 0.7, "gpu util {}", out.gpu_util);
+}
+
+#[test]
+fn dpu_pcie_usage_reported_and_sane() {
+    let out = saturated(ModelId::MobileNet, MigConfig::Small7, PreprocMode::Dpu, PolicyKind::Dynamic);
+    // Paper §4.2: MobileNet's CPU<->DPU traffic ~6 GB/s << 32 GB/s.
+    assert!(out.pcie_gbps > 0.5 && out.pcie_gbps < 32.0, "pcie {}", out.pcie_gbps);
+    assert!(out.dpu_util.unwrap() > 0.05);
+}

@@ -1,0 +1,192 @@
+//! Property tests: dynamic-batcher invariants (conservation, caps, FIFO,
+//! deadline behaviour) under randomized traffic.
+
+use preba::batching::{BatchPolicy, Bucketizer, DynamicBatcher, QueueParams, Request};
+use preba::clock::millis;
+use preba::models::ModelId;
+use preba::prop_assert;
+use preba::util::prop;
+use preba::util::Rng;
+
+fn random_policy(rng: &mut Rng, n_buckets: usize) -> BatchPolicy {
+    if rng.f64() < 0.3 {
+        BatchPolicy::Static(QueueParams {
+            batch_max: 1 + rng.below(16) as usize,
+            time_queue: millis(1.0 + rng.f64() * 30.0),
+        })
+    } else {
+        BatchPolicy::Dynamic {
+            per_bucket: (0..n_buckets)
+                .map(|_| QueueParams {
+                    batch_max: 1 + rng.below(16) as usize,
+                    time_queue: millis(1.0 + rng.f64() * 30.0),
+                })
+                .collect(),
+        }
+    }
+}
+
+fn drive(rng: &mut Rng) -> Result<(), String> {
+    let buckets = Bucketizer::new(2.5, 25.0);
+    let n_buckets = buckets.n_buckets();
+    let policy = random_policy(rng, n_buckets);
+    let merge = rng.f64() < 0.5;
+    let mut b = DynamicBatcher::new(ModelId::CitriNet, buckets.clone(), policy.clone(), merge);
+
+    let n = 1 + rng.below(200) as usize;
+    let mut now = 0u64;
+    let mut out_ids: Vec<u64> = Vec::new();
+    let mut out_batches = Vec::new();
+
+    for i in 0..n {
+        now += rng.below(millis(3.0));
+        let len_s = rng.f64() * 25.0;
+        b.enqueue(Request {
+            id: i as u64,
+            model: ModelId::CitriNet,
+            arrival: now,
+            enqueued: now,
+            len_s,
+        });
+        while let Some((batch, _)) = b.try_form(now) {
+            out_ids.extend(batch.requests.iter().map(|r| r.id));
+            out_batches.push(batch);
+        }
+        // Occasionally jump past a deadline.
+        if rng.f64() < 0.3 {
+            now += millis(40.0);
+            while let Some((batch, _)) = b.try_form(now) {
+                out_ids.extend(batch.requests.iter().map(|r| r.id));
+                out_batches.push(batch);
+            }
+        }
+    }
+    // Flush the remainder.
+    for batch in b.flush(now + millis(100.0)) {
+        out_ids.extend(batch.requests.iter().map(|r| r.id));
+        out_batches.push(batch);
+    }
+
+    // 1. Conservation: every request released exactly once.
+    let mut sorted = out_ids.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    prop_assert!(
+        sorted.len() == out_ids.len(),
+        "duplicate release: {} unique of {}",
+        sorted.len(),
+        out_ids.len()
+    );
+    prop_assert!(sorted.len() == n, "lost requests: in {} out {}", n, sorted.len());
+    prop_assert!(b.pending() == 0);
+    prop_assert!(b.balance() == 0);
+
+    // 2. Caps: a batch never exceeds its own bucket's Batch_max, and a
+    //    merged batch never exceeds the longest member's Batch_max when
+    //    the longest member came from a longer bucket (the paper's rule).
+    for batch in &out_batches {
+        prop_assert!(!batch.requests.is_empty());
+        let own_cap = policy.params(batch.bucket).batch_max;
+        prop_assert!(
+            batch.size() <= own_cap,
+            "batch {} exceeds own cap {} (bucket {})",
+            batch.size(),
+            own_cap,
+            batch.bucket
+        );
+        let longest_bucket = buckets.bucket_of(batch.max_len_s);
+        if longest_bucket > batch.bucket {
+            let longest_cap = policy.params(longest_bucket).batch_max;
+            prop_assert!(
+                batch.size() <= longest_cap,
+                "merged batch {} exceeds longest-member cap {} (buckets {}->{})",
+                batch.size(),
+                longest_cap,
+                batch.bucket,
+                longest_bucket
+            );
+        }
+        // 3. max_len_s really is the max member length.
+        let max_len = batch.requests.iter().map(|r| r.len_s).fold(0.0, f64::max);
+        prop_assert!((max_len - batch.max_len_s).abs() < 1e-12);
+    }
+    Ok(())
+}
+
+#[test]
+fn batcher_invariants_hold() {
+    prop::check("batcher-invariants", prop::default_cases(), drive);
+}
+
+#[test]
+fn fifo_order_within_bucket() {
+    prop::check("fifo-within-bucket", 64, |rng| {
+        let buckets = Bucketizer::new(2.5, 25.0);
+        let policy = BatchPolicy::Static(QueueParams {
+            batch_max: 1 + rng.below(8) as usize,
+            time_queue: millis(5.0),
+        });
+        // merge=false so releases stay within one bucket.
+        let mut b = DynamicBatcher::new(ModelId::CitriNet, buckets, policy, false);
+        for i in 0..50u64 {
+            b.enqueue(Request {
+                id: i,
+                model: ModelId::CitriNet,
+                arrival: i,
+                enqueued: i,
+                len_s: (i % 10) as f64 * 2.4,
+            });
+        }
+        let mut last_seen = std::collections::HashMap::new();
+        let mut now = 0;
+        loop {
+            now += millis(10.0);
+            let mut any = false;
+            while let Some((batch, _)) = b.try_form(now) {
+                any = true;
+                for r in &batch.requests {
+                    let bucket = (r.len_s / 2.5) as usize;
+                    if let Some(&prev) = last_seen.get(&bucket) {
+                        prop_assert!(r.id > prev, "bucket {bucket}: {} after {}", r.id, prev);
+                    }
+                    last_seen.insert(bucket, r.id);
+                }
+            }
+            if !any && b.pending() == 0 {
+                break;
+            }
+            prop_assert!(now < millis(10_000.0), "did not drain");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn deadline_is_never_later_than_head_wait() {
+    prop::check("deadline-bound", 64, |rng| {
+        let buckets = Bucketizer::new(2.5, 25.0);
+        let tq = millis(1.0 + rng.f64() * 20.0);
+        let policy = BatchPolicy::Static(QueueParams { batch_max: 1000, time_queue: tq });
+        let mut b = DynamicBatcher::new(ModelId::CitriNet, buckets, policy, true);
+        // Enqueue times are monotone (they are "now" in the server), so
+        // every bucket's head is its earliest request.
+        let mut first_enq = None;
+        let mut t = 0u64;
+        for i in 0..(1 + rng.below(20)) {
+            t += rng.below(millis(1.0));
+            first_enq = Some(first_enq.map_or(t, |f: u64| f.min(t)));
+            b.enqueue(Request {
+                id: i,
+                model: ModelId::CitriNet,
+                arrival: t,
+                enqueued: t,
+                len_s: rng.f64() * 25.0,
+            });
+        }
+        let deadline = b.next_deadline().unwrap();
+        prop_assert!(deadline <= first_enq.unwrap() + tq);
+        // At the deadline, try_form must release something.
+        prop_assert!(b.try_form(deadline).is_some());
+        Ok(())
+    });
+}

@@ -1,0 +1,144 @@
+//! Property tests: DES core ordering, CPU pool conservation, DPU
+//! monotonicity, service-model structure.
+
+use preba::clock::secs;
+use preba::config::{DpuConfig, HardwareConfig};
+use preba::dpu::Dpu;
+use preba::mig::ServiceModel;
+use preba::models::ModelId;
+use preba::preprocess::CpuPool;
+use preba::prop_assert;
+use preba::sim::EventQueue;
+use preba::util::prop;
+use preba::util::Rng;
+
+#[test]
+fn event_queue_pops_in_time_order_fifo_ties() {
+    prop::check("event-order", prop::default_cases(), |rng| {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let n = 1 + rng.below(500);
+        for i in 0..n {
+            q.schedule(rng.below(1000), i);
+        }
+        let mut prev_t = 0;
+        let mut seen = 0;
+        let mut seq_at_t: std::collections::HashMap<u64, u64> = Default::default();
+        while let Some((t, id)) = q.pop() {
+            prop_assert!(t >= prev_t, "time went backwards");
+            if t == prev_t {
+                // FIFO among ties: ids scheduled earlier pop first only
+                // when times are equal AND they were inserted earlier.
+                if let Some(&prev_id) = seq_at_t.get(&t) {
+                    prop_assert!(id > prev_id, "tie not FIFO: {} after {}", id, prev_id);
+                }
+            }
+            seq_at_t.insert(t, id);
+            prev_t = t;
+            seen += 1;
+        }
+        prop_assert!(seen == n);
+        Ok(())
+    });
+}
+
+#[test]
+fn cpu_pool_conserves_and_orders_jobs() {
+    prop::check("cpu-pool", prop::default_cases(), |rng| {
+        let cores = 1 + rng.below(8) as usize;
+        let mut pool = CpuPool::new(cores, rng.split(9));
+        let n = 1 + rng.below(200);
+        let mut now = 0u64;
+        let mut dones = Vec::new();
+        for _ in 0..n {
+            now += rng.below(secs(0.01));
+            let (start, done) = pool.admit(now, 0.001 + rng.f64() * 0.02);
+            prop_assert!(start >= now, "job started before arrival");
+            prop_assert!(done > start, "zero-length job");
+            dones.push(done);
+        }
+        prop_assert!(pool.served == n);
+        // Utilization bounded.
+        let horizon = *dones.iter().max().unwrap();
+        let u = pool.utilization(horizon);
+        prop_assert!((0.0..=1.0).contains(&u), "util {u}");
+        Ok(())
+    });
+}
+
+#[test]
+fn dpu_completions_monotone_per_stream_and_capacity_bounded() {
+    prop::check("dpu-monotone", 64, |rng| {
+        let mut cfg = DpuConfig::default();
+        cfg.split_audio_cu = rng.f64() < 0.5;
+        let mut dpu = Dpu::new(&cfg, &HardwareConfig::default());
+        let n = 1 + rng.below(100);
+        let mut now = 0u64;
+        let mut prev_done = 0u64;
+        for _ in 0..n {
+            now += rng.below(secs(0.001));
+            let model = if rng.f64() < 0.5 { ModelId::MobileNet } else { ModelId::CitriNet };
+            let len = 0.1 + rng.f64() * 10.0;
+            let done = dpu.admit(now, model, len);
+            prop_assert!(done > now, "completion before admit");
+            // Same-arrival-order completions per model kind are monotone
+            // for the image CU path (FIFO earliest-free).
+            if model == ModelId::MobileNet {
+                prop_assert!(done >= prev_done || done + secs(0.001) >= prev_done);
+                prev_done = done.max(prev_done);
+            }
+        }
+        prop_assert!(dpu.served == n);
+        Ok(())
+    });
+}
+
+#[test]
+fn service_model_structure() {
+    prop::check("service-model", prop::default_cases(), |rng| {
+        let model = ModelId::ALL[rng.below(6) as usize];
+        let g = 1 + rng.below(7) as usize;
+        let sm = ServiceModel::new(model.spec(), g);
+        let len = 1.0 + rng.f64() * 24.0;
+        let b1 = 1 + rng.below(128) as usize;
+        let b2 = b1 + 1 + rng.below(64) as usize;
+        // Latency strictly increases with batch; throughput never drops.
+        prop_assert!(sm.exec_secs(b2, len) > sm.exec_secs(b1, len));
+        prop_assert!(sm.qps_at(b2, len) >= sm.qps_at(b1, len) * 0.999);
+        // Throughput bounded by plateau.
+        prop_assert!(sm.qps_at(b2, len) <= sm.plateau_qps(len) * 1.0001);
+        // Utilization in (0, 1].
+        let u = sm.utilization(b1, len);
+        prop_assert!(u > 0.0 && u <= 1.0001, "util {u}");
+        Ok(())
+    });
+}
+
+#[test]
+fn sim_driver_conservation_across_random_configs() {
+    use preba::config::PrebaConfig;
+    use preba::mig::MigConfig;
+    use preba::server::{sim_driver, PolicyKind, PreprocMode, SimConfig};
+    prop::check("sim-conservation", 24, |rng| {
+        let model = ModelId::ALL[rng.below(6) as usize];
+        let mig = MigConfig::ALL[rng.below(3) as usize];
+        let preproc =
+            [PreprocMode::Ideal, PreprocMode::Cpu, PreprocMode::Dpu][rng.below(3) as usize];
+        let mut cfg = SimConfig::new(model, mig, preproc);
+        cfg.policy = if rng.f64() < 0.5 { PolicyKind::Static } else { PolicyKind::Dynamic };
+        cfg.active_servers = 1 + rng.below(mig.vgpus() as u64) as usize;
+        cfg.requests = 300 + rng.below(500) as usize;
+        cfg.warmup_frac = 0.0;
+        cfg.seed = rng.next_u64();
+        cfg.rate_qps = cfg.saturating_rate() * (0.2 + rng.f64());
+        let out = sim_driver::run(&cfg, &PrebaConfig::new());
+        prop_assert!(
+            out.stats.completed == cfg.requests as u64,
+            "{} of {} completed",
+            out.stats.completed,
+            cfg.requests
+        );
+        prop_assert!(out.qps() > 0.0);
+        prop_assert!(out.gpu_util <= 1.0);
+        Ok(())
+    });
+}
