@@ -103,16 +103,27 @@ fn main() {
     })
     .print();
 
-    // Whole-sim throughput: events/second of the DES driver.
+    // Whole-sim throughput: events/second of the DES driver (the headline
+    // §Perf metric — exercises the 4-ary event heap, the in-flight slab,
+    // BatchTick dedupe and the pooled batch vectors together).
     let sys = PrebaConfig::new();
-    time_fn("sim_driver::run 2000 reqs (CitriNet DPU)", 64, || {
+    let mk_cfg = || {
         let mut cfg = SimConfig::new(ModelId::CitriNet, MigConfig::Small7, PreprocMode::Dpu);
         cfg.policy = PolicyKind::Dynamic;
         cfg.requests = 2000;
         cfg.rate_qps = cfg.saturating_rate();
-        std::hint::black_box(sim_driver::run(&cfg, &sys));
-    })
-    .print();
+        cfg
+    };
+    let events_per_run = sim_driver::run(&mk_cfg(), &sys).events;
+    let stats = time_fn("sim_driver::run 2000 reqs (CitriNet DPU)", 64, || {
+        std::hint::black_box(sim_driver::run(&mk_cfg(), &sys));
+    });
+    stats.print();
+    println!(
+        "  -> {} DES events/run, {:.2} M events/s (mean)",
+        events_per_run,
+        events_per_run as f64 / stats.mean_ns * 1e3
+    );
 
     println!("\n(record before/after numbers in EXPERIMENTS.md §Perf)");
 }

@@ -1,0 +1,62 @@
+//! §Perf sweep-engine benchmark: wall-clock of a figure-scale experiment
+//! sweep at 1 worker vs all cores, plus a determinism cross-check.
+//!
+//! `cargo bench --bench perf_sweep`. Uses `PREBA_FAST` request budgets so
+//! a run stays in smoke-test territory; the speedup column is the number
+//! that must scale with cores (ISSUE: >= 2x on a 4-core runner).
+
+use std::time::Instant;
+
+use preba::config::PrebaConfig;
+use preba::experiments;
+use preba::util::bench;
+
+/// The sim-heavy subset used for timing (the full `experiment all` adds
+/// only analytic figures beyond these).
+const SUITE: [&str; 5] = ["fig9", "fig17", "fig18", "fig22", "abl_traffic"];
+
+fn run_suite(sys: &PrebaConfig) -> String {
+    // Capture report output so timing measures compute, not terminal IO;
+    // the returned text doubles as the determinism fingerprint.
+    let mut all = String::new();
+    for id in SUITE {
+        let f = experiments::by_id(id).expect("suite id");
+        bench::capture_begin();
+        f(sys);
+        all.push_str(&bench::capture_end());
+    }
+    all
+}
+
+fn main() {
+    std::env::set_var("PREBA_FAST", "1");
+    let tmp = std::env::temp_dir().join("preba_perf_sweep");
+    std::env::set_var("PREBA_RESULTS_DIR", tmp.to_str().unwrap());
+    let sys = PrebaConfig::new();
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("== sweep-engine wall-clock ({} cores available) ==", cores);
+
+    std::env::set_var("PREBA_JOBS", "1");
+    let t0 = Instant::now();
+    let serial_text = run_suite(&sys);
+    let serial = t0.elapsed();
+    println!("jobs=1      : {:>8.2} s", serial.as_secs_f64());
+
+    std::env::set_var("PREBA_JOBS", cores.to_string());
+    let t0 = Instant::now();
+    let parallel_text = run_suite(&sys);
+    let parallel = t0.elapsed();
+    println!("jobs={:<6} : {:>8.2} s", cores, parallel.as_secs_f64());
+
+    println!(
+        "speedup     : {:>8.2}x",
+        serial.as_secs_f64() / parallel.as_secs_f64().max(1e-9)
+    );
+    assert_eq!(
+        serial_text, parallel_text,
+        "sweep output must be bitwise identical across job counts"
+    );
+    println!("determinism : report blocks identical at jobs=1 and jobs={cores}");
+    println!("\n(record before/after numbers in EXPERIMENTS.md §Perf)");
+}

@@ -68,10 +68,17 @@ pub struct DynamicBatcher {
     policy: BatchPolicy,
     queues: Vec<VecDeque<Request>>,
     merge_adjacent: bool,
+    /// Recycled request vectors (capacity retained) so steady-state batch
+    /// formation allocates nothing; bounded by `MAX_SPARE_VECS`.
+    spare: Vec<Vec<Request>>,
     // counters for invariants/diagnostics
     enqueued: u64,
     released: u64,
 }
+
+/// Upper bound on pooled request vectors — more than the deepest in-flight
+/// population any config reaches (7 vGPUs × a few queued batches each).
+const MAX_SPARE_VECS: usize = 64;
 
 impl DynamicBatcher {
     pub fn new(
@@ -87,6 +94,7 @@ impl DynamicBatcher {
             policy,
             queues: (0..n).map(|_| VecDeque::new()).collect(),
             merge_adjacent,
+            spare: Vec::new(),
             enqueued: 0,
             released: 0,
         }
@@ -175,7 +183,9 @@ impl DynamicBatcher {
     /// adjacent buckets when undersized (and allowed).
     fn release(&mut self, b: usize, now: Nanos, merge: bool) -> Batch {
         let mut batch_max = self.policy.params(b).batch_max;
-        let mut reqs: Vec<Request> = Vec::with_capacity(batch_max);
+        let mut reqs: Vec<Request> = self.spare.pop().unwrap_or_default();
+        debug_assert!(reqs.is_empty());
+        reqs.reserve(batch_max);
         while reqs.len() < batch_max {
             match self.queues[b].pop_front() {
                 Some(r) => reqs.push(r),
@@ -214,6 +224,17 @@ impl DynamicBatcher {
         self.released += reqs.len() as u64;
         let max_len_s = reqs.iter().map(|r| r.len_s).fold(0.0, f64::max);
         Batch { model: self.model, requests: reqs, formed: now, max_len_s, bucket: b, merged }
+    }
+
+    /// Return a completed batch's request vector to the spare pool so the
+    /// next `release` reuses its allocation. Callers that drop batches
+    /// without recycling stay correct — they just allocate.
+    pub fn recycle(&mut self, batch: Batch) {
+        if self.spare.len() < MAX_SPARE_VECS {
+            let mut v = batch.requests;
+            v.clear();
+            self.spare.push(v);
+        }
     }
 
     /// Drain everything immediately (server shutdown).
@@ -381,6 +402,27 @@ mod tests {
         assert_eq!(out, 10);
         assert_eq!(b.balance(), 0);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn recycle_reuses_request_vec_allocation() {
+        let mut b = static_batcher(4, millis(100.0));
+        for i in 0..4 {
+            b.enqueue(mk_req(i, 0, 1.0));
+        }
+        let (batch, _) = b.try_form(0).unwrap();
+        let cap = batch.requests.capacity();
+        let ptr = batch.requests.as_ptr();
+        b.recycle(batch);
+        for i in 4..8 {
+            b.enqueue(mk_req(i, 0, 1.0));
+        }
+        let (batch2, _) = b.try_form(0).unwrap();
+        assert_eq!(batch2.size(), 4);
+        assert_eq!(batch2.requests.as_ptr(), ptr, "allocation not reused");
+        assert!(batch2.requests.capacity() >= cap);
+        let ids: Vec<u64> = batch2.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![4, 5, 6, 7]);
     }
 
     #[test]

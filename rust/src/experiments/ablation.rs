@@ -28,23 +28,36 @@ pub fn run_merge(sys: &PrebaConfig) -> Json {
     let requests = super::default_requests();
     let mut rows = Vec::new();
     let mut t = Table::new(&["model", "load", "merge", "QPS", "p95 ms", "mean batch"]);
+    // Sweep grid: model × load × merge flag, one simulation per cell.
+    // Low load is where merging matters: buckets rarely fill alone.
+    let mut grid = Vec::new();
     for model in ModelId::AUDIO {
-        // Low load is where merging matters: buckets rarely fill alone.
         for load_frac in [0.15, 0.5] {
-            let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu).saturating_rate() / 1.25;
             for merge in [false, true] {
-                let mut sys2 = sys.clone();
-                sys2.batching.merge_adjacent = merge;
-                let out = support::run(
-                    model,
-                    MigConfig::Small7,
-                    PreprocMode::Dpu,
-                    PolicyKind::Dynamic,
-                    7,
-                    cap * load_frac,
-                    requests,
-                    &sys2,
-                );
+                grid.push((model, load_frac, merge));
+            }
+        }
+    }
+    let outs = super::sweep(&grid, |&(model, load_frac, merge)| {
+        let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu).saturating_rate() / 1.25;
+        let mut sys2 = sys.clone();
+        sys2.batching.merge_adjacent = merge;
+        support::run(
+            model,
+            MigConfig::Small7,
+            PreprocMode::Dpu,
+            PolicyKind::Dynamic,
+            7,
+            cap * load_frac,
+            requests,
+            &sys2,
+        )
+    });
+    let mut cells = grid.iter().zip(outs.iter());
+    for model in ModelId::AUDIO {
+        for load_frac in [0.15, 0.5] {
+            for merge in [false, true] {
+                let (_, out) = cells.next().expect("grid exhausted");
                 t.row(&[
                     model.display().to_string(),
                     format!("{:.0}%", load_frac * 100.0),
@@ -81,11 +94,13 @@ pub fn run_policy(sys: &PrebaConfig) -> Json {
     rep.section("Time_queue rule at 60% load (paper rule: Time_knee / n_vGPUs)");
     let mut t = Table::new(&["rule", "QPS", "p95 ms", "mean batch", "gpu util %"]);
     let mut rows = Vec::new();
-    for (label, scale) in [("Time_knee/n (PREBA)", 1.0 / 7.0), ("Time_knee", 1.0), ("~zero wait", 0.01 / 7.0)] {
-        // Scale every bucket's Time_queue off the paper rule.
-        let mut sys2 = sys.clone();
-        let _ = &mut sys2;
-        let out = run_with_time_queue_scale(model, cap * 0.6, scale * 7.0, requests, sys);
+    // One simulation per Time_queue rule, in parallel.
+    let rules: [(&str, f64); 3] =
+        [("Time_knee/n (PREBA)", 1.0 / 7.0), ("Time_knee", 1.0), ("~zero wait", 0.01 / 7.0)];
+    let rule_outs = super::sweep(&rules, |&(_, scale)| {
+        run_with_time_queue_scale(model, cap * 0.6, scale * 7.0, requests, sys)
+    });
+    for (&(label, _), out) in rules.iter().zip(rule_outs.iter()) {
         t.row(&[
             label.to_string(),
             num(out.qps()),
@@ -108,18 +123,23 @@ pub fn run_policy(sys: &PrebaConfig) -> Json {
     rep.section("knee_frac sensitivity (Batch_max selection)");
     let mut t = Table::new(&["knee_frac", "MobileNet knee(1g)", "Swin knee(1g)", "Citri knee@5s"]);
     let mut rows = Vec::new();
-    for frac in [0.80, 0.90, 0.95] {
+    // One profiling job per knee_frac; each re-seeds its own RNG (the
+    // serial code did the same per iteration) so fan-out preserves output.
+    let fracs = [0.80, 0.90, 0.95];
+    let knees = super::sweep(&fracs, |&frac| {
         let mut rng = crate::util::Rng::new(77);
         let grid = crate::profiler::sweep_batches_dense(256);
         let mut knee = |m: ModelId, len: f64| {
             let curve = crate::profiler::profile_curve(m.spec(), 1, len, &grid, 60, &mut rng);
             crate::profiler::find_knee(&curve, frac).batch
         };
-        let (a, b, c) = (
+        (
             knee(ModelId::MobileNet, 0.0),
             knee(ModelId::SwinTransformer, 0.0),
             knee(ModelId::CitriNet, 5.0),
-        );
+        )
+    });
+    for (&frac, &(a, b, c)) in fracs.iter().zip(knees.iter()) {
         t.row(&[format!("{frac}"), a.to_string(), b.to_string(), c.to_string()]);
         rows.push(Json::obj(vec![
             ("frac", Json::num(frac)),
@@ -185,14 +205,25 @@ pub fn run_traffic(sys: &PrebaConfig) -> Json {
     ];
     let mut t = Table::new(&["traffic", "policy", "QPS", "p95 ms", "p99 ms"]);
     let mut rows = Vec::new();
-    for (name, profile) in profiles {
+    // Sweep grid: traffic shape × policy, one simulation per cell.
+    let mut grid = Vec::new();
+    for (name, profile) in &profiles {
         for policy in [PolicyKind::Static, PolicyKind::Dynamic] {
-            let mut cfg = SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu);
-            cfg.policy = policy;
-            cfg.requests = requests;
-            cfg.rate_qps = mean;
-            cfg.profile = Some(profile.clone());
-            let out = sim_driver::run(&cfg, sys);
+            grid.push((*name, profile.clone(), policy));
+        }
+    }
+    let outs = super::sweep(&grid, |(_, profile, policy)| {
+        let mut cfg = SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu);
+        cfg.policy = *policy;
+        cfg.requests = requests;
+        cfg.rate_qps = mean;
+        cfg.profile = Some(profile.clone());
+        sim_driver::run(&cfg, sys)
+    });
+    let mut cells = grid.iter().zip(outs.iter());
+    for &(name, _) in &profiles {
+        for policy in [PolicyKind::Static, PolicyKind::Dynamic] {
+            let (_, out) = cells.next().expect("grid exhausted");
             t.row(&[
                 name.to_string(),
                 format!("{policy:?}"),

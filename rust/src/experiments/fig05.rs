@@ -17,23 +17,30 @@ use crate::util::Rng;
 
 pub fn run(_sys: &PrebaConfig) -> Json {
     let mut rep = Reporter::new("Fig 5: exec throughput + GPU utilization vs batch (preproc off)");
-    let mut rng = Rng::new(5);
     let batches = profiler::sweep_batches(256);
 
+    // Sweep grid: model × MIG config, one profiling job per cell. Each
+    // cell gets its own seeded RNG so results are independent of worker
+    // count and scheduling.
+    let mut grid = Vec::new();
+    for model in ModelId::ALL {
+        for cfg in MigConfig::ALL {
+            grid.push((model, cfg));
+        }
+    }
+    let curves = super::sweep(&grid, |&(model, cfg)| {
+        let mut rng = Rng::new(0x0500 ^ ((model as u64) << 8) ^ cfg.gpcs_per_vgpu() as u64);
+        profiler::profile_curve(model.spec(), cfg.gpcs_per_vgpu(), 2.5, &batches, 40, &mut rng)
+    });
+
+    let mut cells = grid.iter().zip(curves.iter());
     for model in ModelId::ALL {
         rep.section(model.display());
         let mut t = Table::new(&["config", "batch", "agg QPS", "util %"]);
         let mut series = Vec::new();
-        for cfg in MigConfig::ALL {
-            let curve = profiler::profile_curve(
-                model.spec(),
-                cfg.gpcs_per_vgpu(),
-                2.5,
-                &batches,
-                40,
-                &mut rng,
-            );
-            for p in &curve {
+        for _ in MigConfig::ALL {
+            let (&(_, cfg), curve) = cells.next().expect("grid exhausted");
+            for p in curve {
                 let agg = p.qps * cfg.vgpus() as f64;
                 t.row(&[
                     cfg.name().to_string(),

@@ -20,24 +20,40 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let requests = super::default_requests();
     let mut data = Vec::new();
 
+    // Phase 1 (parallel): saturated QPS per model × config to locate the
+    // iso-throughput point.
+    let mut sat_grid = Vec::new();
+    for model in ModelId::ALL {
+        for cfg in [MigConfig::Small7, MigConfig::Full1] {
+            sat_grid.push((model, cfg));
+        }
+    }
+    let sats = super::sweep(&sat_grid, |&(model, cfg)| {
+        support::saturated_qps(
+            model, cfg, PreprocMode::Ideal, PolicyKind::Dynamic, cfg.vgpus(), requests, sys,
+        )
+        .qps()
+    });
+    // Phase 2 (parallel): the measured runs at 80% of the weaker config.
+    let mut run_grid = Vec::new();
+    for (mi, model) in ModelId::ALL.iter().enumerate() {
+        let rate = 0.8 * sats[2 * mi].min(sats[2 * mi + 1]);
+        for cfg in [MigConfig::Small7, MigConfig::Full1] {
+            run_grid.push((*model, cfg, rate));
+        }
+    }
+    let outs = super::sweep(&run_grid, |&(model, cfg, rate)| {
+        support::run(
+            model, cfg, PreprocMode::Ideal, PolicyKind::Dynamic, cfg.vgpus(), rate, requests, sys,
+        )
+    });
+
+    let mut cells = run_grid.iter().zip(outs.iter());
     for model in ModelId::ALL {
         rep.section(model.display());
-        // Iso-throughput point: 80% of the weaker config's saturated QPS.
-        let sat_small = support::saturated_qps(
-            model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic, 7, requests, sys,
-        )
-        .qps();
-        let sat_full = support::saturated_qps(
-            model, MigConfig::Full1, PreprocMode::Ideal, PolicyKind::Dynamic, 1, requests, sys,
-        )
-        .qps();
-        let rate = 0.8 * sat_small.min(sat_full);
-
         let mut t = Table::new(&["config", "QPS", "batching ms", "dispatch ms", "exec ms", "total ms"]);
-        for cfg in [MigConfig::Small7, MigConfig::Full1] {
-            let out = support::run(
-                model, cfg, PreprocMode::Ideal, PolicyKind::Dynamic, cfg.vgpus(), rate, requests, sys,
-            );
+        for _ in 0..2 {
+            let (&(_, cfg, _), out) = cells.next().expect("grid exhausted");
             let (_pre, bat, disp, exec) = out.stats.breakdown_ms();
             t.row(&[
                 cfg.name().to_string(),

@@ -24,15 +24,23 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let mut drops = Vec::new();
     // The paper's characterization fixes audio inputs at 2.5 s (S3).
     const LEN: f64 = 2.5;
+    // One saturated run per model × preprocessing design, in parallel.
+    let mut grid = Vec::new();
     for model in ModelId::ALL {
-        let ideal = support::saturated_qps_fixed_len(
-            model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic, 7, LEN, requests, sys,
+        for preproc in [PreprocMode::Ideal, PreprocMode::Cpu] {
+            grid.push((model, preproc));
+        }
+    }
+    let qps = super::sweep(&grid, |&(model, preproc)| {
+        support::saturated_qps_fixed_len(
+            model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, LEN, requests, sys,
         )
-        .qps();
-        let cpu = support::saturated_qps_fixed_len(
-            model, MigConfig::Small7, PreprocMode::Cpu, PolicyKind::Dynamic, 7, LEN, requests, sys,
-        )
-        .qps();
+        .qps()
+    });
+    for (mi, model) in ModelId::ALL.iter().enumerate() {
+        let model = *model;
+        let ideal = qps[2 * mi];
+        let cpu = qps[2 * mi + 1];
         // Cores needed for preprocessing alone to sustain the model-
         // execution stage's MAXIMUM throughput (the gray bars = the
         // plateau of all seven slices; paper right axis).

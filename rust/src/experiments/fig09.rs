@@ -19,21 +19,33 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let requests = super::default_requests();
     let mut all = Vec::new();
 
+    // Sweep grid: model × active-server count, one simulation per cell.
+    let mut grid = Vec::new();
+    for model in ModelId::ALL {
+        for servers in 1..=7usize {
+            grid.push((model, servers));
+        }
+    }
+    let outs = super::sweep(&grid, |&(model, servers)| {
+        // S3 protocol: audio inputs fixed at 2.5 s.
+        support::saturated_qps_fixed_len(
+            model,
+            MigConfig::Small7,
+            PreprocMode::Cpu,
+            PolicyKind::Dynamic,
+            servers,
+            2.5,
+            requests,
+            sys,
+        )
+    });
+
+    let mut cells = grid.iter().zip(outs.iter());
     for model in ModelId::ALL {
         rep.section(model.display());
         let mut t = Table::new(&["servers", "QPS", "CPU util %"]);
         for servers in 1..=7usize {
-            // S3 protocol: audio inputs fixed at 2.5 s.
-            let out = support::saturated_qps_fixed_len(
-                model,
-                MigConfig::Small7,
-                PreprocMode::Cpu,
-                PolicyKind::Dynamic,
-                servers,
-                2.5,
-                requests,
-                sys,
-            );
+            let (_, out) = cells.next().expect("grid exhausted");
             t.row(&[servers.to_string(), num(out.qps()), num(out.cpu_util * 100.0)]);
             all.push(Json::obj(vec![
                 ("model", Json::str(model.name())),

@@ -13,13 +13,12 @@ pub fn run(_sys: &PrebaConfig) -> Json {
     let model = ModelId::ConformerDefault;
     let batches: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 64];
     let lens: Vec<f64> = (1..=10).map(|i| i as f64 * 2.5).collect();
-    let mut grids = Vec::new();
-
-    for cfg in [MigConfig::Small7, MigConfig::Full1] {
-        rep.section(&format!("{} (rows: length s, cols: batch; cell: mean exec ms)", cfg.name()));
+    // One analytic grid job per MIG config; rows are pre-rendered in the
+    // job and replayed in order so fan-out preserves the report.
+    let cfgs = [MigConfig::Small7, MigConfig::Full1];
+    let mut grids = super::sweep(&cfgs, |&cfg| {
         let sm = ServiceModel::new(model.spec(), cfg.gpcs_per_vgpu());
-        let header = batches.iter().map(|b| format!("{b:>7}")).collect::<Vec<_>>().join("");
-        rep.row(&format!("  len\\b {header}"));
+        let mut lines = Vec::new();
         let mut cells = Vec::new();
         for &len in &lens {
             let mut line = format!("{len:>6.1} ");
@@ -42,15 +41,26 @@ pub fn run(_sys: &PrebaConfig) -> Json {
                     ("ms", Json::num(ms)),
                 ]));
             }
-            rep.row(&line);
+            lines.push(line);
         }
         let knees: Vec<String> =
             lens.iter().map(|&l| format!("{}@{l}s", sm.knee(l))).collect();
-        rep.row(&format!("Batch_knee ridge: {}", knees.join(", ")));
-        grids.push(Json::Arr(cells));
+        lines.push(format!("Batch_knee ridge: {}", knees.join(", ")));
+        (lines, Json::Arr(cells))
+    });
+
+    let header = batches.iter().map(|b| format!("{b:>7}")).collect::<Vec<_>>().join("");
+    for (cfg, (lines, _)) in cfgs.iter().zip(grids.iter()) {
+        rep.section(&format!("{} (rows: length s, cols: batch; cell: mean exec ms)", cfg.name()));
+        rep.row(&format!("  len\\b {header}"));
+        for line in lines {
+            rep.row(line);
+        }
     }
-    rep.data("grid_small7", grids.remove(0));
-    rep.data("grid_full1", grids.remove(0));
+    let (_, grid_full1) = grids.remove(1);
+    let (_, grid_small7) = grids.remove(0);
+    rep.data("grid_small7", grid_small7);
+    rep.data("grid_full1", grid_full1);
     rep.finish("fig14")
 }
 

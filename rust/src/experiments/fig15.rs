@@ -15,18 +15,30 @@ use crate::util::Rng;
 
 pub fn run(sys: &PrebaConfig) -> Json {
     let mut rep = Reporter::new("Fig 15: tail latency vs batch at 5/15/25 s; Time_knee ~ const");
-    let mut rng = Rng::new(15);
     // Dense grid: locating the knee precisely is the whole point here.
     let batches = profiler::sweep_batches_dense(128);
     let mut knees = Vec::new();
 
+    // One profiling job per model × input length, seeded per cell.
+    let mut grid = Vec::new();
+    for model in ModelId::AUDIO {
+        for len in [5.0, 15.0, 25.0] {
+            grid.push((model, len));
+        }
+    }
+    let curves = super::sweep(&grid, |&(model, len)| {
+        let mut rng = Rng::new(0x1500 ^ ((model as u64) << 8) ^ len as u64);
+        profiler::profile_curve(model.spec(), 1, len, &batches, 60, &mut rng)
+    });
+
+    let mut cells = grid.iter().zip(curves.iter());
     for model in ModelId::AUDIO {
         rep.section(model.display());
         let mut t = Table::new(&["len s", "batch", "p95 ms", "knee?"]);
         for len in [5.0, 15.0, 25.0] {
-            let curve = profiler::profile_curve(model.spec(), 1, len, &batches, 60, &mut rng);
-            let knee = profiler::find_knee(&curve, sys.batching.knee_frac);
-            for p in &curve {
+            let (_, curve) = cells.next().expect("grid exhausted");
+            let knee = profiler::find_knee(curve, sys.batching.knee_frac);
+            for p in curve {
                 if p.batch > knee.batch * 4 {
                     break; // the paper's plots stop shortly past the knee
                 }

@@ -21,6 +21,24 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let mut rows = Vec::new();
     let mut speedups = Vec::new();
 
+    // The full sweep grid — model × servers × design, one simulation per
+    // cell — fans out as 126 independent jobs.
+    let mut grid = Vec::new();
+    for model in ModelId::ALL {
+        for servers in 1..=7usize {
+            for preproc in [PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu] {
+                grid.push((model, servers, preproc));
+            }
+        }
+    }
+    let cell_qps = super::sweep(&grid, |&(model, servers, preproc)| {
+        support::saturated_qps(
+            model, MigConfig::Small7, preproc, PolicyKind::Dynamic, servers, requests, sys,
+        )
+        .qps()
+    });
+
+    let mut cells = grid.iter().zip(cell_qps.iter());
     for model in ModelId::ALL {
         rep.section(model.display());
         let mut t = Table::new(&["servers", "Ideal", "PREBA (DPU)", "CPU baseline"]);
@@ -30,10 +48,8 @@ pub fn run(sys: &PrebaConfig) -> Json {
             for (i, preproc) in
                 [PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu].iter().enumerate()
             {
-                qps[i] = support::saturated_qps(
-                    model, MigConfig::Small7, *preproc, PolicyKind::Dynamic, servers, requests, sys,
-                )
-                .qps();
+                let (_, &q) = cells.next().expect("grid exhausted");
+                qps[i] = q;
                 rows.push(Json::obj(vec![
                     ("model", Json::str(model.name())),
                     ("servers", Json::num(servers as f64)),

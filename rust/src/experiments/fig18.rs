@@ -22,16 +22,31 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let requests = super::default_requests();
     let mut rows = Vec::new();
 
+    // Sweep grid: model × design × load fraction (126 independent sims).
+    // The capacity anchor is analytic (cheap), computed while building the
+    // job list.
+    let mut grid = Vec::new();
     for model in ModelId::ALL {
-        rep.section(model.display());
         let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Ideal).saturating_rate() / 1.25;
-        let mut t = Table::new(&["design", "offered QPS", "achieved QPS", "p95 ms"]);
         for preproc in [PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu] {
             for frac in FRACS {
-                let rate = cap * frac;
-                let out = support::run(
-                    model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, rate, requests, sys,
-                );
+                grid.push((model, preproc, cap * frac));
+            }
+        }
+    }
+    let outs = super::sweep(&grid, |&(model, preproc, rate)| {
+        support::run(
+            model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, rate, requests, sys,
+        )
+    });
+
+    let mut cells = grid.iter().zip(outs.iter());
+    for model in ModelId::ALL {
+        rep.section(model.display());
+        let mut t = Table::new(&["design", "offered QPS", "achieved QPS", "p95 ms"]);
+        for preproc in [PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu] {
+            for _ in FRACS {
+                let (&(_, _, rate), out) = cells.next().expect("grid exhausted");
                 t.row(&[
                     preproc.label().to_string(),
                     num(rate),

@@ -19,17 +19,28 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let requests = super::default_requests();
     let mut rows = Vec::new();
 
+    // Sweep grid: model × design at the moderate-load anchor (55% of the
+    // ideal capacity, which is analytic).
+    let mut grid = Vec::new();
+    for model in [ModelId::SqueezeNet, ModelId::ConformerDefault] {
+        let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Ideal).saturating_rate() / 1.25;
+        for preproc in [PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu] {
+            grid.push((model, preproc, 0.55 * cap));
+        }
+    }
+    let outs = super::sweep(&grid, |&(model, preproc, rate)| {
+        support::run(
+            model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, rate, requests, sys,
+        )
+    });
+
+    let mut cells = grid.iter().zip(outs.iter());
     for model in [ModelId::SqueezeNet, ModelId::ConformerDefault] {
         rep.section(model.display());
-        // Moderate load so queues are realistic but stable for Ideal/DPU.
-        let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Ideal).saturating_rate() / 1.25;
-        let rate = 0.55 * cap;
         let mut t =
             Table::new(&["design", "preproc ms", "batch ms", "queue ms", "exec ms", "pre %"]);
-        for preproc in [PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu] {
-            let out = support::run(
-                model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, rate, requests, sys,
-            );
+        for _ in 0..3 {
+            let (&(_, preproc, _), out) = cells.next().expect("grid exhausted");
             let (pre, bat, disp, exec) = out.stats.breakdown_ms();
             let total = pre + bat + disp + exec;
             t.row(&[

@@ -49,9 +49,19 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let mut t = Table::new(&[
         "model", "design", "CPU W", "GPU W", "FPGA W", "total W", "QPS", "QPS/W",
     ]);
+    // One saturated measurement per model × design, fanned out in parallel.
+    let mut grid = Vec::new();
     for model in ModelId::ALL {
-        let (q_base, p_base) = measure(model, PreprocMode::Cpu, requests, sys);
-        let (q_preba, p_preba) = measure(model, PreprocMode::Dpu, requests, sys);
+        for preproc in [PreprocMode::Cpu, PreprocMode::Dpu] {
+            grid.push((model, preproc));
+        }
+    }
+    let measured = super::sweep(&grid, |&(model, preproc)| measure(model, preproc, requests, sys));
+    for (mi, model) in ModelId::ALL.iter().enumerate() {
+        let model = *model;
+        let (q_base, p_base) = &measured[2 * mi];
+        let (q_preba, p_preba) = &measured[2 * mi + 1];
+        let (q_base, q_preba) = (*q_base, *q_preba);
         for (label, q, p) in
             [("baseline", q_base, p_base), ("PREBA", q_preba, p_preba)]
         {
@@ -63,7 +73,7 @@ pub fn run(sys: &PrebaConfig) -> Json {
                 num(p.fpga_w),
                 num(p.total()),
                 num(q),
-                num(pm.qpj(q, &p)),
+                num(pm.qpj(q, p)),
             ]);
             rows.push(Json::obj(vec![
                 ("model", Json::str(model.name())),
@@ -73,10 +83,10 @@ pub fn run(sys: &PrebaConfig) -> Json {
                 ("fpga_w", Json::num(p.fpga_w)),
                 ("total_w", Json::num(p.total())),
                 ("qps", Json::num(q)),
-                ("qps_per_w", Json::num(pm.qpj(q, &p))),
+                ("qps_per_w", Json::num(pm.qpj(q, p))),
             ]));
         }
-        eff_ratios.push(pm.qpj(q_preba, &p_preba) / pm.qpj(q_base, &p_base));
+        eff_ratios.push(pm.qpj(q_preba, p_preba) / pm.qpj(q_base, p_base));
         cpu_cuts.push(1.0 - p_preba.cpu_w / p_base.cpu_w);
     }
     for line in t.render() {

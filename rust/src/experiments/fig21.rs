@@ -22,11 +22,21 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let mut t = Table::new(&[
         "model", "design", "CAPEX $", "OPEX $", "Mqueries/$", "gain",
     ]);
+    // One saturated measurement per model × design, fanned out in parallel.
+    let mut grid = Vec::new();
     for model in ModelId::ALL {
-        let (q_base, p_base) = fig20::measure(model, PreprocMode::Cpu, requests, sys);
-        let (q_preba, p_preba) = fig20::measure(model, PreprocMode::Dpu, requests, sys);
-        let r_base = tco.evaluate(q_base, &p_base, false);
-        let r_preba = tco.evaluate(q_preba, &p_preba, true);
+        for preproc in [PreprocMode::Cpu, PreprocMode::Dpu] {
+            grid.push((model, preproc));
+        }
+    }
+    let measured =
+        super::sweep(&grid, |&(model, preproc)| fig20::measure(model, preproc, requests, sys));
+    for (mi, model) in ModelId::ALL.iter().enumerate() {
+        let model = *model;
+        let (q_base, p_base) = &measured[2 * mi];
+        let (q_preba, p_preba) = &measured[2 * mi + 1];
+        let r_base = tco.evaluate(*q_base, p_base, false);
+        let r_preba = tco.evaluate(*q_preba, p_preba, true);
         let gain = r_preba.queries_per_usd / r_base.queries_per_usd;
         ratios.push(gain);
         for (label, r, g) in [("baseline", r_base, 1.0), ("PREBA", r_preba, gain)] {

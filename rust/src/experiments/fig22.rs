@@ -25,19 +25,25 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let mut dyn_gains = Vec::new();
 
     let mut t = Table::new(&["model", "Base", "Base+DPU", "Base+DPU+Dyn", "DPU gain", "Dyn gain"]);
+    // Ablation grid: model × design step (Base / +DPU / +DPU+Dynamic),
+    // one saturated simulation per cell, in parallel.
+    let steps = [
+        (PreprocMode::Cpu, PolicyKind::Static),
+        (PreprocMode::Dpu, PolicyKind::Static),
+        (PreprocMode::Dpu, PolicyKind::Dynamic),
+    ];
+    let mut grid = Vec::new();
     for model in ModelId::AUDIO {
-        let base = support::saturated_qps(
-            model, MigConfig::Small7, PreprocMode::Cpu, PolicyKind::Static, 7, requests, sys,
-        )
-        .qps();
-        let dpu = support::saturated_qps(
-            model, MigConfig::Small7, PreprocMode::Dpu, PolicyKind::Static, 7, requests, sys,
-        )
-        .qps();
-        let full = support::saturated_qps(
-            model, MigConfig::Small7, PreprocMode::Dpu, PolicyKind::Dynamic, 7, requests, sys,
-        )
-        .qps();
+        for (preproc, policy) in steps {
+            grid.push((model, preproc, policy));
+        }
+    }
+    let qps = super::sweep(&grid, |&(model, preproc, policy)| {
+        support::saturated_qps(model, MigConfig::Small7, preproc, policy, 7, requests, sys).qps()
+    });
+    for (mi, model) in ModelId::AUDIO.iter().enumerate() {
+        let model = *model;
+        let (base, dpu, full) = (qps[3 * mi], qps[3 * mi + 1], qps[3 * mi + 2]);
         let g_dpu = dpu / base.max(1e-9);
         let g_dyn = full / dpu.max(1e-9);
         dpu_gains.push(g_dpu);

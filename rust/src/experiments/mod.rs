@@ -57,11 +57,29 @@ pub fn by_id(id: &str) -> Option<fn(&PrebaConfig) -> Json> {
     ALL.iter().find(|(k, _)| *k == id).map(|(_, f)| *f)
 }
 
+/// `PREBA_FAST` sampled once — `default_requests` sits on every
+/// experiment's call path and an env-var lookup is a syscall on some
+/// platforms. The CLI's `--fast` sets the env var before any experiment
+/// runs, so the cached read observes it.
+static FAST: once_cell::sync::Lazy<bool> =
+    once_cell::sync::Lazy::new(|| std::env::var("PREBA_FAST").is_ok());
+
 /// Shared default: fewer requests when `PREBA_FAST` is set (CI).
 pub fn default_requests() -> usize {
-    if std::env::var("PREBA_FAST").is_ok() {
+    if *FAST {
         2_000
     } else {
         8_000
     }
+}
+
+/// Fan a list of independent sweep cells out over the job pool
+/// ([`crate::util::par`]), returning results in cell order so rendered
+/// tables and JSON are identical to a serial sweep. Each cell must be a
+/// pure function of its parameters (every simulation is seed-determined).
+pub(crate) fn sweep<P: Sync, T: Send>(
+    params: &[P],
+    f: impl Fn(&P) -> T + Sync,
+) -> Vec<T> {
+    crate::util::par::run_jobs(params.len(), |i| f(&params[i]))
 }

@@ -30,9 +30,14 @@ fn usage() -> &'static str {
      profile    --model M [--mig 1g|2g|7g] [--len SECONDS]\n\
      plan       --model M [--sla MS] [--len SECONDS]   (partition recommendation)\n\
      experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|all>\n\
+                [--jobs N] [--out DIR]\n\
      list\n\
      \n\
-     global: --config FILE (TOML overrides), --fast (smaller request budgets)"
+     global: --config FILE (TOML overrides), --fast (smaller request budgets),\n\
+             --jobs N (worker threads for experiment sweeps; default: all\n\
+             cores; also via PREBA_JOBS). Results are bitwise identical at\n\
+             any job count — every simulation is seed-deterministic and the\n\
+             sweep engine merges results in job order."
 }
 
 fn run() -> anyhow::Result<()> {
@@ -43,6 +48,13 @@ fn run() -> anyhow::Result<()> {
     }
     if args.flag("fast") {
         std::env::set_var("PREBA_FAST", "1");
+    }
+    if let Some(jobs) = args.opt("jobs") {
+        jobs.parse::<usize>()
+            .ok()
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| anyhow::anyhow!("--jobs expects a positive integer, got '{jobs}'"))?;
+        std::env::set_var("PREBA_JOBS", jobs);
     }
     let sys = match args.opt("config") {
         Some(path) => PrebaConfig::from_file(path)?,
@@ -238,9 +250,19 @@ fn experiment(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
         std::env::set_var("PREBA_RESULTS_DIR", dir);
     }
     if id == "all" {
-        for (name, f) in preba::experiments::ALL {
-            println!("\n########## {name} ##########");
+        // Run the whole suite through the job pool. Each worker captures
+        // its experiment's report block; blocks are printed in registry
+        // order, so stdout and every results/*.json file are bitwise
+        // identical to a --jobs 1 run.
+        let blocks = preba::util::par::run_jobs(preba::experiments::ALL.len(), |i| {
+            let (name, f) = preba::experiments::ALL[i];
+            preba::util::bench::capture_begin();
             f(sys);
+            (name, preba::util::bench::capture_end())
+        });
+        for (name, text) in blocks {
+            println!("\n########## {name} ##########");
+            print!("{text}");
         }
         return Ok(());
     }

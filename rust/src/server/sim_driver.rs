@@ -101,6 +101,9 @@ impl SimConfig {
 #[derive(Debug)]
 pub struct SimOutcome {
     pub stats: RunStats,
+    /// Total DES events processed (throughput denominator for the §Perf
+    /// events/s metric).
+    pub events: u64,
     /// Preprocessing-pool CPU utilization (0 when not in CPU mode).
     pub cpu_util: f64,
     /// Mean busy fraction of the active vGPUs.
@@ -238,14 +241,22 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
         })
         .collect();
 
-    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut q: EventQueue<Ev> = EventQueue::with_capacity(cfg.requests + 16);
     for (i, a) in arrivals.iter().enumerate() {
         q.schedule(a.at, Ev::Arrival(i));
     }
 
     let warmup = (cfg.requests as f64 * cfg.warmup_frac) as usize;
     let mut stats = RunStats::new();
+    // In-flight batch slab: completed slots go on a free list and are
+    // reused, so memory stays O(outstanding batches) instead of growing
+    // O(total batches) over the run.
     let mut in_flight_batches: Vec<Option<Batch>> = Vec::new();
+    let mut free_slots: Vec<usize> = Vec::new();
+    // Earliest batching deadline with a BatchTick already scheduled; lets
+    // us suppress the redundant tick the old code scheduled on *every*
+    // PreprocDone (ticks at or after this deadline would be no-ops).
+    let mut armed_tick: Option<Nanos> = None;
     let mut horizon: Nanos = 0;
     let mut completed = 0usize;
 
@@ -255,6 +266,7 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                     vgpu_free: &mut [Nanos],
                     vgpu_busy: &mut [u128],
                     in_flight: &mut Vec<Option<Batch>>,
+                    free_slots: &mut Vec<usize>,
                     q: &mut EventQueue<Ev>,
                     exec_rng: &mut Rng,
                     sm: &ServiceModel,
@@ -267,12 +279,21 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
         let done = start + exec;
         vgpu_free[vgpu] = done;
         vgpu_busy[vgpu] += exec as u128;
-        let idx = in_flight.len();
-        in_flight.push(Some(batch));
+        let idx = match free_slots.pop() {
+            Some(slot) => {
+                debug_assert!(in_flight[slot].is_none());
+                in_flight[slot] = Some(batch);
+                slot
+            }
+            None => {
+                in_flight.push(Some(batch));
+                in_flight.len() - 1
+            }
+        };
         q.schedule(done, Ev::ExecDone { vgpu, batch_idx: idx });
     };
 
-    crate::sim::run(&mut q, u64::MAX, |now, ev, q| {
+    let events = crate::sim::run(&mut q, u64::MAX, |now, ev, q| {
         match ev {
             Ev::Arrival(i) => {
                 let len = reqs[i].len_s;
@@ -300,42 +321,56 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 });
                 while let Some((batch, _)) = batcher.try_form(now) {
                     dispatch(
-                        batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches, q,
-                        &mut exec_rng, &sm, &buckets,
+                        batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches,
+                        &mut free_slots, q, &mut exec_rng, &sm, &buckets,
                     );
                 }
+                // Arm a tick only when this enqueue moved the earliest
+                // deadline forward; an already-armed earlier (or equal)
+                // tick covers this deadline.
                 if let Some(deadline) = batcher.next_deadline() {
-                    q.schedule(deadline, Ev::BatchTick);
+                    if armed_tick.map_or(true, |t| deadline < t) {
+                        q.schedule(deadline, Ev::BatchTick);
+                        armed_tick = Some(deadline.max(now));
+                    }
                 }
             }
             Ev::BatchTick => {
+                // The earliest armed tick is the one firing now. Later
+                // stale ticks may still sit in the queue; they drain as
+                // no-ops. Resetting to None can only over-schedule, never
+                // miss a deadline.
+                armed_tick = None;
                 while let Some((batch, _)) = batcher.try_form(now) {
                     dispatch(
-                        batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches, q,
-                        &mut exec_rng, &sm, &buckets,
+                        batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches,
+                        &mut free_slots, q, &mut exec_rng, &sm, &buckets,
                     );
                 }
                 if let Some(deadline) = batcher.next_deadline() {
                     q.schedule(deadline, Ev::BatchTick);
+                    armed_tick = Some(deadline.max(now));
                 }
             }
             Ev::ExecDone { vgpu: _, batch_idx } => {
                 let batch = in_flight_batches[batch_idx].take().expect("batch completed twice");
+                free_slots.push(batch_idx);
                 horizon = horizon.max(now);
                 let bsize = batch.size();
+                // Split (formed -> done) into dispatch wait + exec:
+                // attribute the jitterless model time to execution and the
+                // remainder to waiting for a free vGPU. All of this is
+                // per-batch, not per-request — hoisted out of the loop.
+                let padded_len = padded_len_of(&buckets, &batch);
+                let exec_model = crate::clock::secs(sm.exec_secs(bsize, padded_len));
+                let since_formed = now.saturating_sub(batch.formed);
+                let exec_ns = exec_model.min(since_formed);
                 for r in &batch.requests {
                     completed += 1;
                     if completed <= warmup {
                         continue;
                     }
                     let rs = &reqs[r.id as usize];
-                    // Split (formed -> done) into dispatch wait + exec:
-                    // attribute the jitterless model time to execution and
-                    // the remainder to waiting for a free vGPU.
-                    let padded_len = padded_len_of(&buckets, &batch);
-                    let exec_model = crate::clock::secs(sm.exec_secs(bsize, padded_len));
-                    let since_formed = now.saturating_sub(batch.formed);
-                    let exec_ns = exec_model.min(since_formed);
                     let parts = LatencyParts {
                         preprocess: rs.preproc_done - rs.arrival,
                         batching: batch.formed.saturating_sub(rs.preproc_done),
@@ -344,6 +379,9 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                     };
                     stats.record(parts, now, bsize);
                 }
+                // Return the request vector to the batcher's pool so the
+                // next formation reuses the allocation.
+                batcher.recycle(batch);
             }
         }
         true
@@ -358,6 +396,7 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
     .min(1.0);
 
     SimOutcome {
+        events,
         cpu_util: match cfg.preproc {
             PreprocMode::Cpu => cpu_pool.utilization(horizon),
             _ => 0.0,
@@ -431,6 +470,23 @@ mod tests {
     }
 
     #[test]
+    fn tick_suppression_bounds_event_count() {
+        // Every request contributes one Arrival, one PreprocDone and a
+        // share of an ExecDone (~3N total); with redundant BatchTicks
+        // suppressed the tick population must stay well under one per
+        // request rather than the old one-per-PreprocDone.
+        let (cfg, sys) = base_cfg(ModelId::CitriNet, PreprocMode::Dpu);
+        let out = run(&cfg, &sys);
+        assert!(out.events > 2 * cfg.requests as u64, "events={}", out.events);
+        assert!(
+            out.events < 4 * cfg.requests as u64 + 64,
+            "events={} for {} requests — BatchTick dedupe regressed?",
+            out.events,
+            cfg.requests
+        );
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let (cfg, sys) = base_cfg(ModelId::MobileNet, PreprocMode::Dpu);
         let a = run(&cfg, &sys);
@@ -438,6 +494,7 @@ mod tests {
         assert_eq!(a.qps(), b.qps());
         assert_eq!(a.p95_ms(), b.p95_ms());
         assert_eq!(a.horizon, b.horizon);
+        assert_eq!(a.events, b.events);
     }
 
     #[test]

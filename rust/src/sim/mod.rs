@@ -7,16 +7,20 @@
 //! under the real-PJRT driver (`server::real_driver`) for end-to-end
 //! validation.
 //!
-//! Design: a binary-heap event queue of `(time, seq, Event)`. `seq` breaks
-//! ties FIFO so runs are bit-reproducible. The event type is generic: the
-//! concrete server simulation (`server::sim_driver`) defines its own event
-//! enum and owns all component state, which keeps the borrow checker out of
-//! the way (no `Rc<RefCell<dyn Actor>>` web).
-
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+//! Design: a 4-ary implicit min-heap event queue of `(time, seq, Event)`.
+//! `seq` breaks ties FIFO so runs are bit-reproducible. The 4-ary layout
+//! halves the tree depth of a binary heap and keeps all four children of a
+//! node in one cache line's worth of entries, which measurably cuts the
+//! schedule/pop cost that dominates the whole-sim hot path. The event type
+//! is generic: the concrete server simulation (`server::sim_driver`)
+//! defines its own event enum and owns all component state, which keeps the
+//! borrow checker out of the way (no `Rc<RefCell<dyn Actor>>` web).
 
 use crate::clock::Nanos;
+
+/// Heap branching factor. 4 keeps sift-down comparisons sequential in
+/// memory; measured faster than 2 (deeper tree) and 8 (more compares).
+const ARITY: usize = 4;
 
 /// An entry in the event queue.
 struct Scheduled<E> {
@@ -25,27 +29,17 @@ struct Scheduled<E> {
     ev: E,
 }
 
-impl<E> PartialEq for Scheduled<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl<E> Eq for Scheduled<E> {}
-impl<E> PartialOrd for Scheduled<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Scheduled<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
-        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+impl<E> Scheduled<E> {
+    /// Min-heap key: earliest time first, FIFO (insertion seq) among ties.
+    #[inline]
+    fn key(&self) -> (Nanos, u64) {
+        (self.at, self.seq)
     }
 }
 
-/// Event queue with virtual time.
+/// Event queue with virtual time, backed by a 4-ary implicit heap.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Scheduled<E>>,
+    heap: Vec<Scheduled<E>>,
     seq: u64,
     now: Nanos,
     processed: u64,
@@ -53,7 +47,12 @@ pub struct EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0, processed: 0 }
+        EventQueue { heap: Vec::new(), seq: 0, now: 0, processed: 0 }
+    }
+
+    /// Pre-size the heap for a known event population (e.g. all arrivals).
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue { heap: Vec::with_capacity(cap), seq: 0, now: 0, processed: 0 }
     }
 
     /// Current virtual time (time of the last popped event).
@@ -80,6 +79,7 @@ impl<E> EventQueue<E> {
         let at = at.max(self.now);
         self.seq += 1;
         self.heap.push(Scheduled { at, seq: self.seq, ev });
+        self.sift_up(self.heap.len() - 1);
     }
 
     /// Schedule `ev` after a delay relative to `now`.
@@ -89,7 +89,15 @@ impl<E> EventQueue<E> {
 
     /// Pop the next event, advancing virtual time.
     pub fn pop(&mut self) -> Option<(Nanos, E)> {
-        let s = self.heap.pop()?;
+        if self.heap.is_empty() {
+            return None;
+        }
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        let s = self.heap.pop().expect("non-empty heap");
+        if !self.heap.is_empty() {
+            self.sift_down(0);
+        }
         debug_assert!(s.at >= self.now);
         self.now = s.at;
         self.processed += 1;
@@ -98,7 +106,43 @@ impl<E> EventQueue<E> {
 
     /// Time of the next scheduled event, if any.
     pub fn peek_time(&self) -> Option<Nanos> {
-        self.heap.peek().map(|s| s.at)
+        self.heap.first().map(|s| s.at)
+    }
+
+    #[inline]
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / ARITY;
+            if self.heap[i].key() < self.heap[parent].key() {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    #[inline]
+    fn sift_down(&mut self, mut i: usize) {
+        let len = self.heap.len();
+        loop {
+            let first_child = ARITY * i + 1;
+            if first_child >= len {
+                break;
+            }
+            let mut smallest = i;
+            let end = (first_child + ARITY).min(len);
+            for c in first_child..end {
+                if self.heap[c].key() < self.heap[smallest].key() {
+                    smallest = c;
+                }
+            }
+            if smallest == i {
+                break;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
     }
 }
 
@@ -179,5 +223,38 @@ mod tests {
             true
         });
         assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn sift_paths_cover_deep_heaps() {
+        // Enough entries for several 4-ary levels, descending insert order
+        // (every insert sifts to the root) then ascending pops (every pop
+        // sifts down the full depth).
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let n = 1000u64;
+        for i in (0..n).rev() {
+            q.schedule(i, i);
+        }
+        assert_eq!(q.len(), n as usize);
+        assert_eq!(q.peek_time(), Some(0));
+        for expect in 0..n {
+            assert_eq!(q.pop(), Some((expect, expect)));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_schedule_pop_keeps_order() {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        q.schedule(5, 50);
+        q.schedule(1, 10);
+        assert_eq!(q.pop(), Some((1, 10)));
+        q.schedule(3, 30);
+        q.schedule(2, 20);
+        assert_eq!(q.pop(), Some((2, 20)));
+        assert_eq!(q.pop(), Some((3, 30)));
+        assert_eq!(q.pop(), Some((5, 50)));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.processed(), 4);
     }
 }

@@ -7,6 +7,8 @@
 //!     regenerates one paper figure/table and prints the same rows/series
 //!     the paper reports, plus machine-readable JSON next to it.
 
+use std::cell::RefCell;
+use std::io::Write as _;
 use std::time::Instant;
 
 /// Result of a micro-benchmark.
@@ -64,28 +66,95 @@ pub fn time_fn<F: FnMut()>(name: &str, max_iters: u64, mut f: F) -> BenchStats {
     }
 }
 
+thread_local! {
+    /// When set, `Reporter::finish` appends its rendered block here instead
+    /// of printing — the parallel `experiment all` runner captures each
+    /// experiment's output on its worker thread and prints the blocks in
+    /// job order, so stdout is bitwise identical to a serial run.
+    static CAPTURE: RefCell<Option<String>> = RefCell::new(None);
+}
+
+/// Start capturing `Reporter` output on this thread.
+pub fn capture_begin() {
+    CAPTURE.with(|c| *c.borrow_mut() = Some(String::new()));
+}
+
+/// Stop capturing and return everything reporters emitted since
+/// [`capture_begin`]. Returns an empty string if capture was never started.
+pub fn capture_end() -> String {
+    CAPTURE.with(|c| c.borrow_mut().take().unwrap_or_default())
+}
+
+/// Route a finished report block to the thread's capture buffer, or stdout.
+fn emit_block(text: &str) {
+    let captured = CAPTURE.with(|c| match c.borrow_mut().as_mut() {
+        Some(buf) => {
+            buf.push_str(text);
+            true
+        }
+        None => false,
+    });
+    if !captured {
+        // `print!` (not a raw stdout write) so the test harness can
+        // capture report output; one call keeps the block contiguous.
+        print!("{text}");
+        let _ = std::io::stdout().flush();
+    }
+}
+
+/// True when this thread is capturing reporter output.
+fn capture_active() -> bool {
+    CAPTURE.with(|c| c.borrow().is_some())
+}
+
 /// Pretty table + JSON reporter used by the figure benches.
+///
+/// Without an active capture (plain single-experiment runs, benches),
+/// lines print incrementally as the experiment progresses. Under a
+/// capture (the parallel `experiment all` runner), lines are buffered and
+/// handed to the capture as one contiguous block in [`Reporter::finish`],
+/// so concurrent experiments never interleave their reports.
 pub struct Reporter {
     title: String,
+    /// True when output is being collected for the thread's capture
+    /// buffer instead of printed as it is produced.
+    buffered: bool,
+    lines: Vec<String>,
     sections: Vec<(String, Vec<String>)>,
     json: Vec<(String, crate::util::json::Json)>,
 }
 
 impl Reporter {
     pub fn new(title: &str) -> Self {
-        println!("\n==== {title} ====");
-        Reporter { title: title.to_string(), sections: Vec::new(), json: Vec::new() }
+        let mut r = Reporter {
+            title: title.to_string(),
+            buffered: capture_active(),
+            lines: Vec::new(),
+            sections: Vec::new(),
+            json: Vec::new(),
+        };
+        r.push(format!("\n==== {title} ===="));
+        r
+    }
+
+    /// Buffer or print one output line, per the capture mode.
+    fn push(&mut self, line: String) {
+        if self.buffered {
+            self.lines.push(line);
+        } else {
+            println!("{line}");
+        }
     }
 
     /// Start a named section (e.g. one sub-plot of a figure).
     pub fn section(&mut self, name: &str) {
-        println!("\n-- {name}");
+        self.push(format!("\n-- {name}"));
         self.sections.push((name.to_string(), Vec::new()));
     }
 
     /// Emit one already-formatted row.
     pub fn row(&mut self, line: &str) {
-        println!("{line}");
+        self.push(line.to_string());
         if let Some((_, rows)) = self.sections.last_mut() {
             rows.push(line.to_string());
         }
@@ -97,8 +166,9 @@ impl Reporter {
     }
 
     /// Write `results/<slug>.json` if the `PREBA_RESULTS_DIR` env var (or
-    /// `results/` default) is writable; always returns the JSON document.
-    pub fn finish(self, slug: &str) -> crate::util::json::Json {
+    /// `results/` default) is writable, flush any buffered report block,
+    /// and return the JSON document.
+    pub fn finish(mut self, slug: &str) -> crate::util::json::Json {
         use crate::util::json::Json;
         let doc = Json::obj(vec![
             ("title", Json::str(&self.title)),
@@ -111,8 +181,16 @@ impl Reporter {
         if std::fs::create_dir_all(&dir).is_ok() {
             let path = format!("{dir}/{slug}.json");
             if std::fs::write(&path, doc.to_string_pretty()).is_ok() {
-                println!("\n[written {path}]");
+                self.push(format!("\n[written {path}]"));
             }
+        }
+        if self.buffered {
+            let mut text = String::new();
+            for line in &self.lines {
+                text.push_str(line);
+                text.push('\n');
+            }
+            emit_block(&text);
         }
         doc
     }
@@ -141,5 +219,27 @@ mod tests {
         r.data("k", crate::util::json::Json::num(1.0));
         let doc = r.finish("_test_reporter");
         assert_eq!(doc.get("data").unwrap().get("k").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn capture_collects_report_blocks_in_order() {
+        capture_begin();
+        let mut r = Reporter::new("captured");
+        r.section("sec");
+        r.row("alpha");
+        r.finish("_test_capture_a");
+        let mut r2 = Reporter::new("captured2");
+        r2.row("beta");
+        r2.finish("_test_capture_b");
+        let text = capture_end();
+        assert!(text.contains("==== captured ===="), "{text}");
+        assert!(text.contains("alpha"));
+        assert!(text.contains("beta"));
+        assert!(
+            text.find("alpha").unwrap() < text.find("beta").unwrap(),
+            "blocks out of order"
+        );
+        // Capture is consumed.
+        assert_eq!(capture_end(), "");
     }
 }

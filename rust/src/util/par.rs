@@ -1,0 +1,191 @@
+//! Scoped work-stealing job pool for the experiment sweeps.
+//!
+//! The paper's evaluation is a grid of *independent* simulations (figures ×
+//! models × MIG configs × load points), each deterministic given its seed.
+//! `run_jobs` fans an indexed job list out over worker threads that pull
+//! indices from a shared atomic counter (work stealing at job granularity),
+//! then merges results **in job order** — so every caller's output is
+//! bitwise identical to a serial run regardless of worker count or
+//! scheduling.
+//!
+//! Worker count comes from `--jobs N` / `PREBA_JOBS`, defaulting to the
+//! machine's available parallelism. Jobs run on `std::thread::scope`
+//! threads, so borrowed captures (`&PrebaConfig`, parameter slices) work
+//! without `Arc`.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+thread_local! {
+    /// True while this thread is a pool worker. Nested `run_jobs` calls
+    /// (an experiment's inner sweep running inside the parallel
+    /// `experiment all` runner) then execute inline instead of spawning a
+    /// second full-width pool — otherwise `all` would oversubscribe the
+    /// CPU with ~jobs² simulation threads.
+    static IN_POOL: Cell<bool> = Cell::new(false);
+}
+
+/// Resolve the worker count: `PREBA_JOBS` if set (and >= 1), otherwise the
+/// number of available cores. The CLI's `--jobs N` sets `PREBA_JOBS`.
+pub fn jobs() -> usize {
+    if let Ok(v) = std::env::var("PREBA_JOBS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `n` indexed jobs on the configured number of workers and return
+/// their results in job order. See [`run_jobs_on`].
+pub fn run_jobs<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    run_jobs_on(jobs(), n, f)
+}
+
+/// Run `n` indexed jobs on `workers` threads. Jobs are pulled from a shared
+/// counter so a slow cell never blocks the rest of the grid; results are
+/// merged in index order. With `workers <= 1` (or a single job) everything
+/// runs inline on the caller's thread — the serial and parallel paths
+/// produce identical results because each job is a pure function of its
+/// index.
+///
+/// Panics in a job are propagated to the caller after all workers stop.
+pub fn run_jobs_on<T, F>(workers: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = if IN_POOL.with(Cell::get) { 1 } else { workers.max(1).min(n) };
+    if workers == 1 {
+        return (0..n).map(&f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    IN_POOL.with(|p| p.set(true));
+                    let mut out: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(part) => part,
+                Err(payload) => std::panic::resume_unwind(payload),
+            })
+            .collect()
+    });
+
+    // Merge in job order.
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    for part in parts {
+        for (i, v) in part {
+            debug_assert!(slots[i].is_none(), "job {i} ran twice");
+            slots[i] = Some(v);
+        }
+    }
+    slots.into_iter().map(|o| o.expect("job result missing")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_in_job_order() {
+        for workers in [1, 2, 4, 9] {
+            let out = run_jobs_on(workers, 100, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let counters: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        run_jobs_on(4, 64, |i| counters[i].fetch_add(1, Ordering::SeqCst));
+        for (i, c) in counters.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "job {i}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(run_jobs_on(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(run_jobs_on(4, 1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn matches_serial_with_uneven_costs() {
+        // Jobs with wildly different costs still merge in order.
+        let serial = run_jobs_on(1, 20, |i| {
+            let mut acc = 0u64;
+            for k in 0..(i as u64 % 7) * 10_000 {
+                acc = acc.wrapping_add(k);
+            }
+            (i, acc)
+        });
+        let parallel = run_jobs_on(3, 20, |i| {
+            let mut acc = 0u64;
+            for k in 0..(i as u64 % 7) * 10_000 {
+                acc = acc.wrapping_add(k);
+            }
+            (i, acc)
+        });
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn nested_pools_run_inline_with_correct_results() {
+        // An inner run_jobs on a pool worker must not spawn a second
+        // full-width pool, and must still merge in job order.
+        let out = run_jobs_on(4, 6, |i| {
+            let inner = run_jobs_on(4, 5, move |j| i * 10 + j);
+            assert_eq!(inner, (0..5).map(|j| i * 10 + j).collect::<Vec<_>>());
+            inner.iter().sum::<usize>()
+        });
+        assert_eq!(out, (0..6).map(|i| 5 * (i * 10) + 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "job boom")]
+    fn worker_panics_propagate() {
+        run_jobs_on(2, 8, |i| {
+            if i == 5 {
+                panic!("job boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn jobs_env_override() {
+        std::env::set_var("PREBA_JOBS", "3");
+        assert_eq!(jobs(), 3);
+        std::env::set_var("PREBA_JOBS", "not-a-number");
+        assert!(jobs() >= 1);
+        std::env::remove_var("PREBA_JOBS");
+        assert!(jobs() >= 1);
+    }
+}

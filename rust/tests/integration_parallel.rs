@@ -1,0 +1,63 @@
+//! Integration: the parallel sweep engine — `preba experiment` must
+//! produce bitwise-identical stdout and results JSON at any `--jobs`
+//! count, because every simulation cell is seed-deterministic and the
+//! pool merges results in job order.
+
+use std::process::Command;
+
+fn run_fig9(jobs: &str, out_dir: &std::path::Path) -> Vec<u8> {
+    let _ = std::fs::remove_dir_all(out_dir);
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .env("PREBA_FAST", "1")
+        .args([
+            "experiment",
+            "fig9",
+            "--jobs",
+            jobs,
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba experiment fig9 --jobs {jobs} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out.stdout
+}
+
+#[test]
+fn experiment_fig9_identical_at_jobs_1_and_4() {
+    let base = std::env::temp_dir().join("preba_jobs_determinism");
+    let dir1 = base.join("j1");
+    let dir4 = base.join("j4");
+    let stdout1 = run_fig9("1", &dir1);
+    let stdout4 = run_fig9("4", &dir4);
+
+    // Human-readable report identical.
+    assert_eq!(
+        String::from_utf8_lossy(&stdout1).replace(dir1.to_str().unwrap(), "<out>"),
+        String::from_utf8_lossy(&stdout4).replace(dir4.to_str().unwrap(), "<out>"),
+        "stdout differs between --jobs 1 and --jobs 4"
+    );
+
+    // Results JSON bitwise identical.
+    let json1 = std::fs::read(dir1.join("fig09.json")).expect("fig09.json at jobs=1");
+    let json4 = std::fs::read(dir4.join("fig09.json")).expect("fig09.json at jobs=4");
+    assert!(!json1.is_empty());
+    assert_eq!(json1, json4, "results JSON differs between --jobs 1 and --jobs 4");
+}
+
+#[test]
+fn invalid_jobs_value_is_rejected() {
+    for bad in ["0", "-2", "lots"] {
+        let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+            .args(["experiment", "fig13", "--jobs", bad])
+            .output()
+            .expect("spawn preba");
+        assert!(!out.status.success(), "--jobs {bad} should fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("--jobs"), "{err}");
+    }
+}

@@ -42,6 +42,51 @@ fn event_queue_pops_in_time_order_fifo_ties() {
 }
 
 #[test]
+fn four_ary_heap_matches_binary_heap_reference() {
+    // Pin the 4-ary indexed heap's pop order against a std::BinaryHeap
+    // min-ordered reference over random interleaved schedule/pop traces,
+    // including past-time scheduling (which clamps to `now`).
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    prop::check("heap-vs-reference", prop::default_cases(), |rng| {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut reference: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let ops = 1 + rng.below(600);
+        for _ in 0..ops {
+            if reference.is_empty() || rng.f64() < 0.6 {
+                // Mix future times with occasional in-the-past times.
+                let t = if rng.f64() < 0.15 {
+                    rng.below(q.now() + 1)
+                } else {
+                    q.now() + rng.below(2000)
+                };
+                seq += 1;
+                q.schedule(t, seq);
+                reference.push(Reverse((t.max(q.now()), seq)));
+            } else {
+                let (t, id) = q.pop().expect("queue and reference agree on emptiness");
+                let Reverse((rt, rid)) = reference.pop().unwrap();
+                prop_assert!(
+                    t == rt && id == rid,
+                    "pop mismatch: got ({t}, {id}), reference ({rt}, {rid})"
+                );
+            }
+            prop_assert!(q.len() == reference.len());
+        }
+        while let Some((t, id)) = q.pop() {
+            let Reverse((rt, rid)) = reference.pop().unwrap();
+            prop_assert!(
+                t == rt && id == rid,
+                "drain mismatch: got ({t}, {id}), reference ({rt}, {rid})"
+            );
+        }
+        prop_assert!(reference.is_empty());
+        Ok(())
+    });
+}
+
+#[test]
 fn cpu_pool_conserves_and_orders_jobs() {
     prop::check("cpu-pool", prop::default_cases(), |rng| {
         let cores = 1 + rng.below(8) as usize;
