@@ -28,14 +28,15 @@ fn main() -> anyhow::Result<()> {
         let cfg = MultiConfig {
             mig: MigConfig::Small7,
             tenants: vec![
-                Tenant { model: ModelId::MobileNet, vgpus: 3, rate_qps: mob_rate },
-                Tenant { model: ModelId::CitriNet, vgpus: 4, rate_qps: cit_rate },
+                Tenant::new(ModelId::MobileNet, 3, mob_rate),
+                Tenant::new(ModelId::CitriNet, 4, cit_rate),
             ],
             preproc,
             policy: PolicyKind::Dynamic,
             requests: 12_000,
             seed: 99,
             warmup_frac: 0.1,
+            reconfig: None,
         };
         let out = run(&cfg, &sys)?;
         for (model, stats) in &out.per_tenant {

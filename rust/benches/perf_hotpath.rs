@@ -15,6 +15,7 @@ use preba::preprocess::{ops, CpuPool};
 use preba::server::{sim_driver, PolicyKind, PreprocMode, SimConfig};
 use preba::sim::EventQueue;
 use preba::util::bench::time_fn;
+use preba::util::json::Json;
 use preba::util::Rng;
 use preba::workload::QueryGen;
 
@@ -119,11 +120,28 @@ fn main() {
         std::hint::black_box(sim_driver::run(&mk_cfg(), &sys));
     });
     stats.print();
+    let events_per_sec = events_per_run as f64 / stats.mean_ns * 1e9;
     println!(
         "  -> {} DES events/run, {:.2} M events/s (mean)",
         events_per_run,
-        events_per_run as f64 / stats.mean_ns * 1e3
+        events_per_sec / 1e6
     );
+
+    // Machine-readable output for the CI perf gate: PREBA_BENCH_JSON=<path>
+    // writes the gated headline metric (whole-sim DES events/s) plus its
+    // inputs; CI assembles this into the BENCH_pr<N>.json artifact and
+    // fails the build on a >15% events/s regression vs the committed
+    // baseline (benches/perf_baseline.json).
+    if let Ok(path) = std::env::var("PREBA_BENCH_JSON") {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("perf_hotpath")),
+            ("events_per_run", Json::num(events_per_run as f64)),
+            ("events_per_sec", Json::num(events_per_sec)),
+            ("sim_mean_ns", Json::num(stats.mean_ns)),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty()).expect("write PREBA_BENCH_JSON");
+        println!("[bench json written {path}]");
+    }
 
     println!("\n(record before/after numbers in EXPERIMENTS.md §Perf)");
 }

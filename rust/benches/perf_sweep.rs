@@ -10,6 +10,7 @@ use std::time::Instant;
 use preba::config::PrebaConfig;
 use preba::experiments;
 use preba::util::bench;
+use preba::util::json::Json;
 
 /// The sim-heavy subset used for timing (the full `experiment all` adds
 /// only analytic figures beyond these).
@@ -58,5 +59,24 @@ fn main() {
         "sweep output must be bitwise identical across job counts"
     );
     println!("determinism : report blocks identical at jobs=1 and jobs={cores}");
+
+    // Machine-readable output for the CI bench artifact
+    // (PREBA_BENCH_JSON=<path>); the speedup is reported, events/s (from
+    // perf_hotpath) is the gated metric.
+    if let Ok(path) = std::env::var("PREBA_BENCH_JSON") {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("perf_sweep")),
+            ("cores", Json::num(cores as f64)),
+            ("serial_s", Json::num(serial.as_secs_f64())),
+            ("parallel_s", Json::num(parallel.as_secs_f64())),
+            (
+                "speedup",
+                Json::num(serial.as_secs_f64() / parallel.as_secs_f64().max(1e-9)),
+            ),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty()).expect("write PREBA_BENCH_JSON");
+        println!("[bench json written {path}]");
+    }
+
     println!("\n(record before/after numbers in EXPERIMENTS.md §Perf)");
 }

@@ -206,7 +206,11 @@ impl DynamicBatcher {
                 // batch already holds that many, skip this bucket entirely
                 // (never trim an already-formed batch).
                 let cap_if_merge =
-                    if nb > b { batch_max.min(self.policy.params(nb).batch_max) } else { batch_max };
+                    if nb > b {
+                        batch_max.min(self.policy.params(nb).batch_max)
+                    } else {
+                        batch_max
+                    };
                 while reqs.len() < cap_if_merge {
                     let Some(r) = self.queues[nb].pop_front() else { break };
                     merged = true;
@@ -234,6 +238,24 @@ impl DynamicBatcher {
             let mut v = batch.requests;
             v.clear();
             self.spare.push(v);
+        }
+    }
+
+    /// Swap in a new policy (e.g. after a MIG reconfiguration changed the
+    /// vGPU count, which moves every bucket's `Time_queue = Time_knee/n`)
+    /// and re-enqueue all pending requests under it. Original `enqueued`
+    /// times are preserved so deadlines stay honest, and global FIFO by
+    /// `(enqueued, id)` is restored across buckets. Shared by both DES
+    /// drivers' reconfig paths — keep them from diverging.
+    pub fn rebuild(&mut self, policy: BatchPolicy, now: Nanos) {
+        let mut pending: Vec<Request> = Vec::with_capacity(self.pending());
+        for b in self.flush(now) {
+            pending.extend(b.requests);
+        }
+        pending.sort_by_key(|r| (r.enqueued, r.id));
+        self.policy = policy;
+        for r in pending {
+            self.enqueue(r);
         }
     }
 
@@ -423,6 +445,29 @@ mod tests {
         assert!(batch2.requests.capacity() >= cap);
         let ids: Vec<u64> = batch2.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn rebuild_preserves_requests_and_enqueue_times() {
+        let mut b = static_batcher(8, millis(50.0));
+        for i in 0..5 {
+            b.enqueue(mk_req(i, millis(i as f64), (i % 3) as f64 * 4.0));
+        }
+        b.rebuild(
+            BatchPolicy::Static(QueueParams { batch_max: 3, time_queue: millis(10.0) }),
+            millis(5.0),
+        );
+        assert_eq!(b.pending(), 5);
+        assert_eq!(b.balance(), 5);
+        // The first queue to fill under the new Batch_max releases; its
+        // members keep their original enqueue times (FIFO preserved).
+        b.enqueue(mk_req(5, millis(6.0), 0.0));
+        let (batch, why) = b.try_form(millis(6.0)).unwrap();
+        assert_eq!(why, ReleaseReason::Full);
+        assert_eq!(batch.size(), 3);
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 3, 5], "short-bucket FIFO by enqueue time");
+        assert_eq!(batch.requests[0].enqueued, millis(0.0));
     }
 
     #[test]

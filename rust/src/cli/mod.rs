@@ -62,14 +62,18 @@ impl Args {
     pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
         match self.opt(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
         }
     }
 
     pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.opt(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
         }
     }
 
@@ -94,7 +98,9 @@ mod tests {
 
     #[test]
     fn parses_subcommand_options_flags() {
-        let a = Args::parse(&argv("serve --model mobilenet --qps=100 --verbose pos1"), &["verbose"]).unwrap();
+        let a =
+            Args::parse(&argv("serve --model mobilenet --qps=100 --verbose pos1"), &["verbose"])
+                .unwrap();
         assert_eq!(a.command.as_deref(), Some("serve"));
         assert_eq!(a.opt("model"), Some("mobilenet"));
         assert_eq!(a.opt("qps"), Some("100"));

@@ -94,7 +94,13 @@ pub struct TcoConfig {
 
 impl Default for TcoConfig {
     fn default() -> Self {
-        TcoConfig { server_usd: 8000.0, gpu_usd: 14000.0, fpga_usd: 4500.0, years: 3.0, usd_per_kwh: 0.139 }
+        TcoConfig {
+            server_usd: 8000.0,
+            gpu_usd: 14000.0,
+            fpga_usd: 4500.0,
+            years: 3.0,
+            usd_per_kwh: 0.139,
+        }
     }
 }
 
@@ -235,7 +241,8 @@ impl PrebaConfig {
         b.knee_frac = doc.f64_or("batching.knee_frac", b.knee_frac);
         b.bucket_window_s = doc.f64_or("batching.bucket_window_s", b.bucket_window_s);
         b.max_audio_s = doc.f64_or("batching.max_audio_s", b.max_audio_s);
-        b.static_batch_max = doc.i64_or("batching.static_batch_max", b.static_batch_max as i64) as usize;
+        b.static_batch_max =
+            doc.i64_or("batching.static_batch_max", b.static_batch_max as i64) as usize;
         b.merge_adjacent = doc.bool_or("batching.merge_adjacent", b.merge_adjacent);
 
         let d = &mut self.dpu;
@@ -260,7 +267,10 @@ impl PrebaConfig {
         anyhow::ensure!(self.hardware.cpu_cores > self.hardware.cpu_reserved_cores,
             "cpu_cores must exceed cpu_reserved_cores");
         anyhow::ensure!(self.hardware.gpcs >= 1 && self.hardware.gpcs <= 8, "gpcs out of range");
-        anyhow::ensure!((0.5..1.0).contains(&self.batching.knee_frac), "knee_frac must be in [0.5,1)");
+        anyhow::ensure!(
+            (0.5..1.0).contains(&self.batching.knee_frac),
+            "knee_frac must be in [0.5,1)"
+        );
         anyhow::ensure!(self.batching.bucket_window_s > 0.0, "bucket_window_s must be positive");
         anyhow::ensure!(self.workload.warmup_frac < 0.9, "warmup_frac too large");
         anyhow::ensure!(self.dpu.image_cus >= 1, "need at least one image CU");

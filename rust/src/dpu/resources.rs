@@ -34,13 +34,90 @@ pub struct ResourceRow {
 pub fn resource_table() -> Vec<ResourceRow> {
     use StageKind::*;
     vec![
-        ResourceRow { app: "Image", unit: "Decode", stage: Decode, lut_pct: 19.7, reg_pct: 8.6, bram_pct: 0.7, uram_pct: 22.5, dsp_pct: 6.2, vmem_kib: 288.0, mxu_util: 0.31 },
-        ResourceRow { app: "Image", unit: "Resize", stage: Resize, lut_pct: 7.1, reg_pct: 2.3, bram_pct: 0.0, uram_pct: 0.0, dsp_pct: 8.6, vmem_kib: 412.0, mxu_util: 0.24 },
-        ResourceRow { app: "Image", unit: "Crop", stage: Crop, lut_pct: 0.6, reg_pct: 0.4, bram_pct: 0.0, uram_pct: 0.0, dsp_pct: 0.0, vmem_kib: 48.0, mxu_util: 0.0 },
-        ResourceRow { app: "Image", unit: "Normalize", stage: NormalizeImage, lut_pct: 13.0, reg_pct: 3.3, bram_pct: 11.2, uram_pct: 0.0, dsp_pct: 3.0, vmem_kib: 48.0, mxu_util: 0.0 },
-        ResourceRow { app: "Audio", unit: "Resample", stage: Resample, lut_pct: 0.2, reg_pct: 0.1, bram_pct: 1.0, uram_pct: 0.0, dsp_pct: 0.0, vmem_kib: 96.0, mxu_util: 0.08 },
-        ResourceRow { app: "Audio", unit: "Mel spectrogram", stage: MelSpectrogram, lut_pct: 41.5, reg_pct: 24.6, bram_pct: 18.2, uram_pct: 37.5, dsp_pct: 34.2, vmem_kib: 1620.0, mxu_util: 0.47 },
-        ResourceRow { app: "Audio", unit: "Normalize", stage: NormalizeAudio, lut_pct: 3.1, reg_pct: 1.7, bram_pct: 1.7, uram_pct: 7.5, dsp_pct: 1.3, vmem_kib: 84.0, mxu_util: 0.0 },
+        ResourceRow {
+            app: "Image",
+            unit: "Decode",
+            stage: Decode,
+            lut_pct: 19.7,
+            reg_pct: 8.6,
+            bram_pct: 0.7,
+            uram_pct: 22.5,
+            dsp_pct: 6.2,
+            vmem_kib: 288.0,
+            mxu_util: 0.31,
+        },
+        ResourceRow {
+            app: "Image",
+            unit: "Resize",
+            stage: Resize,
+            lut_pct: 7.1,
+            reg_pct: 2.3,
+            bram_pct: 0.0,
+            uram_pct: 0.0,
+            dsp_pct: 8.6,
+            vmem_kib: 412.0,
+            mxu_util: 0.24,
+        },
+        ResourceRow {
+            app: "Image",
+            unit: "Crop",
+            stage: Crop,
+            lut_pct: 0.6,
+            reg_pct: 0.4,
+            bram_pct: 0.0,
+            uram_pct: 0.0,
+            dsp_pct: 0.0,
+            vmem_kib: 48.0,
+            mxu_util: 0.0,
+        },
+        ResourceRow {
+            app: "Image",
+            unit: "Normalize",
+            stage: NormalizeImage,
+            lut_pct: 13.0,
+            reg_pct: 3.3,
+            bram_pct: 11.2,
+            uram_pct: 0.0,
+            dsp_pct: 3.0,
+            vmem_kib: 48.0,
+            mxu_util: 0.0,
+        },
+        ResourceRow {
+            app: "Audio",
+            unit: "Resample",
+            stage: Resample,
+            lut_pct: 0.2,
+            reg_pct: 0.1,
+            bram_pct: 1.0,
+            uram_pct: 0.0,
+            dsp_pct: 0.0,
+            vmem_kib: 96.0,
+            mxu_util: 0.08,
+        },
+        ResourceRow {
+            app: "Audio",
+            unit: "Mel spectrogram",
+            stage: MelSpectrogram,
+            lut_pct: 41.5,
+            reg_pct: 24.6,
+            bram_pct: 18.2,
+            uram_pct: 37.5,
+            dsp_pct: 34.2,
+            vmem_kib: 1620.0,
+            mxu_util: 0.47,
+        },
+        ResourceRow {
+            app: "Audio",
+            unit: "Normalize",
+            stage: NormalizeAudio,
+            lut_pct: 3.1,
+            reg_pct: 1.7,
+            bram_pct: 1.7,
+            uram_pct: 7.5,
+            dsp_pct: 1.3,
+            vmem_kib: 84.0,
+            mxu_util: 0.0,
+        },
     ]
 }
 

@@ -30,16 +30,10 @@ pub fn run_merge(sys: &PrebaConfig) -> Json {
     let mut t = Table::new(&["model", "load", "merge", "QPS", "p95 ms", "mean batch"]);
     // Sweep grid: model × load × merge flag, one simulation per cell.
     // Low load is where merging matters: buckets rarely fill alone.
-    let mut grid = Vec::new();
-    for model in ModelId::AUDIO {
-        for load_frac in [0.15, 0.5] {
-            for merge in [false, true] {
-                grid.push((model, load_frac, merge));
-            }
-        }
-    }
+    let grid = support::cross3(&ModelId::AUDIO, &[0.15, 0.5], &[false, true]);
     let outs = super::sweep(&grid, |&(model, load_frac, merge)| {
-        let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu).saturating_rate() / 1.25;
+        let cap =
+            SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu).saturating_rate() / 1.25;
         let mut sys2 = sys.clone();
         sys2.batching.merge_adjacent = merge;
         support::run(
@@ -192,7 +186,15 @@ pub fn run_traffic(sys: &PrebaConfig) -> Json {
     let mean = cap * 0.5;
     let profiles: [(&str, RateProfile); 3] = [
         ("constant", RateProfile::Constant { qps: mean }),
-        ("diurnal", RateProfile::Diurnal { base_qps: mean, amplitude: 0.7, period_s: 30.0 }),
+        (
+            "diurnal",
+            RateProfile::Diurnal {
+                base_qps: mean,
+                amplitude: 0.7,
+                period_s: 30.0,
+                phase_frac: 0.0,
+            },
+        ),
         (
             "bursty",
             RateProfile::Bursty {
@@ -206,12 +208,11 @@ pub fn run_traffic(sys: &PrebaConfig) -> Json {
     let mut t = Table::new(&["traffic", "policy", "QPS", "p95 ms", "p99 ms"]);
     let mut rows = Vec::new();
     // Sweep grid: traffic shape × policy, one simulation per cell.
-    let mut grid = Vec::new();
-    for (name, profile) in &profiles {
-        for policy in [PolicyKind::Static, PolicyKind::Dynamic] {
-            grid.push((*name, profile.clone(), policy));
-        }
-    }
+    let grid: Vec<(&str, RateProfile, PolicyKind)> =
+        support::cross2(&profiles, &[PolicyKind::Static, PolicyKind::Dynamic])
+            .into_iter()
+            .map(|((name, profile), policy)| (name, profile, policy))
+            .collect();
     let outs = super::sweep(&grid, |(_, profile, policy)| {
         let mut cfg = SimConfig::new(model, MigConfig::Small7, PreprocMode::Dpu);
         cfg.policy = *policy;
@@ -233,7 +234,10 @@ pub fn run_traffic(sys: &PrebaConfig) -> Json {
             ]);
             rows.push(Json::obj(vec![
                 ("traffic", Json::str(name)),
-                ("policy", Json::str(if policy == PolicyKind::Static { "static" } else { "dynamic" })),
+                (
+                    "policy",
+                    Json::str(if policy == PolicyKind::Static { "static" } else { "dynamic" }),
+                ),
                 ("qps", Json::num(out.qps())),
                 ("p95_ms", Json::num(out.p95_ms())),
             ]));
@@ -248,9 +252,11 @@ pub fn run_traffic(sys: &PrebaConfig) -> Json {
 
 /// Single-input vs k-batched DPU preprocessing (paper §4.2 motivation).
 pub fn run_dpu_granularity(_sys: &PrebaConfig) -> Json {
-    let mut rep = Reporter::new("Ablation: DPU preprocessing granularity (single-input vs k-batched)");
+    let mut rep =
+        Reporter::new("Ablation: DPU preprocessing granularity (single-input vs k-batched)");
     rep.section("added preprocessing-stage latency at a 1g.5gb(7x) moderate load");
-    let mut t = Table::new(&["model", "k", "group-fill p95 ms", "flexibility (batch sizes reachable)"]);
+    let mut t =
+        Table::new(&["model", "k", "group-fill p95 ms", "flexibility (batch sizes reachable)"]);
     let mut rows = Vec::new();
     for model in [ModelId::MobileNet, ModelId::CitriNet] {
         let sm = ServiceModel::new(model.spec(), 1);
@@ -289,7 +295,9 @@ pub fn run_dpu_granularity(_sys: &PrebaConfig) -> Json {
     for line in t.render() {
         rep.row(&line);
     }
-    rep.row("single-input (k=1) adds zero fill latency and reaches every batch size — the paper's design point.");
+    rep.row(
+        "single-input (k=1) adds zero fill latency and reaches every batch size — the paper's design point.",
+    );
     rep.data("rows", Json::Arr(rows));
     rep.finish("abl_dpu")
 }

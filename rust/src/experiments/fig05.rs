@@ -22,12 +22,7 @@ pub fn run(_sys: &PrebaConfig) -> Json {
     // Sweep grid: model × MIG config, one profiling job per cell. Each
     // cell gets its own seeded RNG so results are independent of worker
     // count and scheduling.
-    let mut grid = Vec::new();
-    for model in ModelId::ALL {
-        for cfg in MigConfig::ALL {
-            grid.push((model, cfg));
-        }
-    }
+    let grid = super::support::cross2(&ModelId::ALL, &MigConfig::ALL);
     let curves = super::sweep(&grid, |&(model, cfg)| {
         let mut rng = Rng::new(0x0500 ^ ((model as u64) << 8) ^ cfg.gpcs_per_vgpu() as u64);
         profiler::profile_curve(model.spec(), cfg.gpcs_per_vgpu(), 2.5, &batches, 40, &mut rng)

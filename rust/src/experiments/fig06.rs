@@ -20,12 +20,7 @@ pub fn run(sys: &PrebaConfig) -> Json {
 
     // One profiling job per model × MIG config cell, fanned out over the
     // job pool with per-cell seeds (results identical at any worker count).
-    let mut grid = Vec::new();
-    for model in ModelId::ALL {
-        for cfg in MigConfig::ALL {
-            grid.push((model, cfg));
-        }
-    }
+    let grid = super::support::cross2(&ModelId::ALL, &MigConfig::ALL);
     let curves = super::sweep(&grid, |&(model, cfg)| {
         let mut rng = Rng::new(0x0600 ^ ((model as u64) << 8) ^ cfg.gpcs_per_vgpu() as u64);
         // 80 reps (not the seed's 60): the per-cell RNG streams are new,

@@ -51,7 +51,8 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let mut cells = run_grid.iter().zip(outs.iter());
     for model in ModelId::ALL {
         rep.section(model.display());
-        let mut t = Table::new(&["config", "QPS", "batching ms", "dispatch ms", "exec ms", "total ms"]);
+        let mut t =
+            Table::new(&["config", "QPS", "batching ms", "dispatch ms", "exec ms", "total ms"]);
         for _ in 0..2 {
             let (&(_, cfg, _), out) = cells.next().expect("grid exhausted");
             let (_pre, bat, disp, exec) = out.stats.breakdown_ms();

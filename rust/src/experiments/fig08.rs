@@ -25,12 +25,7 @@ pub fn run(sys: &PrebaConfig) -> Json {
     // The paper's characterization fixes audio inputs at 2.5 s (S3).
     const LEN: f64 = 2.5;
     // One saturated run per model × preprocessing design, in parallel.
-    let mut grid = Vec::new();
-    for model in ModelId::ALL {
-        for preproc in [PreprocMode::Ideal, PreprocMode::Cpu] {
-            grid.push((model, preproc));
-        }
-    }
+    let grid = support::cross2(&ModelId::ALL, &[PreprocMode::Ideal, PreprocMode::Cpu]);
     let qps = super::sweep(&grid, |&(model, preproc)| {
         support::saturated_qps_fixed_len(
             model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, LEN, requests, sys,

@@ -20,12 +20,8 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let mut all = Vec::new();
 
     // Sweep grid: model × active-server count, one simulation per cell.
-    let mut grid = Vec::new();
-    for model in ModelId::ALL {
-        for servers in 1..=7usize {
-            grid.push((model, servers));
-        }
-    }
+    let servers: Vec<usize> = (1..=7).collect();
+    let grid = support::cross2(&ModelId::ALL, &servers);
     let outs = super::sweep(&grid, |&(model, servers)| {
         // S3 protocol: audio inputs fixed at 2.5 s.
         support::saturated_qps_fixed_len(

@@ -49,7 +49,8 @@ mod tests {
             bins.iter().map(|b| b.get("count").unwrap().as_f64().unwrap()).collect();
         assert_eq!(counts.len(), 10);
         // Peak in the 10-17.5 s region (bins 4-6), tail small.
-        let peak = counts.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let peak =
+            counts.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
         assert!((3..=6).contains(&peak), "peak bin {peak}");
         assert!(counts[9] < counts[peak] * 0.5);
     }

@@ -9,7 +9,8 @@ use crate::util::bench::Reporter;
 use crate::util::json::Json;
 
 pub fn run(_sys: &PrebaConfig) -> Json {
-    let mut rep = Reporter::new("Fig 14: p95 latency heatmap, batch x audio length, Conformer(default)");
+    let mut rep =
+        Reporter::new("Fig 14: p95 latency heatmap, batch x audio length, Conformer(default)");
     let model = ModelId::ConformerDefault;
     let batches: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 64];
     let lens: Vec<f64> = (1..=10).map(|i| i as f64 * 2.5).collect();

@@ -20,12 +20,7 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let mut knees = Vec::new();
 
     // One profiling job per model × input length, seeded per cell.
-    let mut grid = Vec::new();
-    for model in ModelId::AUDIO {
-        for len in [5.0, 15.0, 25.0] {
-            grid.push((model, len));
-        }
-    }
+    let grid = super::support::cross2(&ModelId::AUDIO, &[5.0, 15.0, 25.0]);
     let curves = super::sweep(&grid, |&(model, len)| {
         let mut rng = Rng::new(0x1500 ^ ((model as u64) << 8) ^ len as u64);
         profiler::profile_curve(model.spec(), 1, len, &batches, 60, &mut rng)

@@ -23,14 +23,12 @@ pub fn run(sys: &PrebaConfig) -> Json {
 
     // The full sweep grid — model × servers × design, one simulation per
     // cell — fans out as 126 independent jobs.
-    let mut grid = Vec::new();
-    for model in ModelId::ALL {
-        for servers in 1..=7usize {
-            for preproc in [PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu] {
-                grid.push((model, servers, preproc));
-            }
-        }
-    }
+    let servers: Vec<usize> = (1..=7).collect();
+    let grid = support::cross3(
+        &ModelId::ALL,
+        &servers,
+        &[PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu],
+    );
     let cell_qps = super::sweep(&grid, |&(model, servers, preproc)| {
         support::saturated_qps(
             model, MigConfig::Small7, preproc, PolicyKind::Dynamic, servers, requests, sys,

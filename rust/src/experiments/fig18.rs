@@ -23,17 +23,25 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let mut rows = Vec::new();
 
     // Sweep grid: model × design × load fraction (126 independent sims).
-    // The capacity anchor is analytic (cheap), computed while building the
-    // job list.
-    let mut grid = Vec::new();
-    for model in ModelId::ALL {
-        let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Ideal).saturating_rate() / 1.25;
-        for preproc in [PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu] {
-            for frac in FRACS {
-                grid.push((model, preproc, cap * frac));
-            }
-        }
-    }
+    // The capacity anchor is analytic (cheap), computed once per model
+    // while building the job list.
+    let caps: Vec<(ModelId, f64)> = ModelId::ALL
+        .iter()
+        .map(|&model| {
+            let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Ideal)
+                .saturating_rate()
+                / 1.25;
+            (model, cap)
+        })
+        .collect();
+    let grid: Vec<(ModelId, PreprocMode, f64)> = support::cross3(
+        &caps,
+        &[PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu],
+        &FRACS,
+    )
+    .into_iter()
+    .map(|((model, cap), preproc, frac)| (model, preproc, cap * frac))
+    .collect();
     let outs = super::sweep(&grid, |&(model, preproc, rate)| {
         support::run(
             model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, rate, requests, sys,

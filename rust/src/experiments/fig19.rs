@@ -21,13 +21,20 @@ pub fn run(sys: &PrebaConfig) -> Json {
 
     // Sweep grid: model × design at the moderate-load anchor (55% of the
     // ideal capacity, which is analytic).
-    let mut grid = Vec::new();
-    for model in [ModelId::SqueezeNet, ModelId::ConformerDefault] {
-        let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Ideal).saturating_rate() / 1.25;
-        for preproc in [PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu] {
-            grid.push((model, preproc, 0.55 * cap));
-        }
-    }
+    let caps: Vec<(ModelId, f64)> = [ModelId::SqueezeNet, ModelId::ConformerDefault]
+        .iter()
+        .map(|&model| {
+            let cap = SimConfig::new(model, MigConfig::Small7, PreprocMode::Ideal)
+                .saturating_rate()
+                / 1.25;
+            (model, cap)
+        })
+        .collect();
+    let grid: Vec<(ModelId, PreprocMode, f64)> =
+        support::cross2(&caps, &[PreprocMode::Ideal, PreprocMode::Dpu, PreprocMode::Cpu])
+            .into_iter()
+            .map(|((model, cap), preproc)| (model, preproc, 0.55 * cap))
+            .collect();
     let outs = super::sweep(&grid, |&(model, preproc, rate)| {
         support::run(
             model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, rate, requests, sys,

@@ -23,12 +23,7 @@ pub fn run(sys: &PrebaConfig) -> Json {
         "model", "design", "CAPEX $", "OPEX $", "Mqueries/$", "gain",
     ]);
     // One saturated measurement per model × design, fanned out in parallel.
-    let mut grid = Vec::new();
-    for model in ModelId::ALL {
-        for preproc in [PreprocMode::Cpu, PreprocMode::Dpu] {
-            grid.push((model, preproc));
-        }
-    }
+    let grid = super::support::cross2(&ModelId::ALL, &[PreprocMode::Cpu, PreprocMode::Dpu]);
     let measured =
         super::sweep(&grid, |&(model, preproc)| fig20::measure(model, preproc, requests, sys));
     for (mi, model) in ModelId::ALL.iter().enumerate() {

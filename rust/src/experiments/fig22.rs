@@ -32,12 +32,11 @@ pub fn run(sys: &PrebaConfig) -> Json {
         (PreprocMode::Dpu, PolicyKind::Static),
         (PreprocMode::Dpu, PolicyKind::Dynamic),
     ];
-    let mut grid = Vec::new();
-    for model in ModelId::AUDIO {
-        for (preproc, policy) in steps {
-            grid.push((model, preproc, policy));
-        }
-    }
+    let grid: Vec<(ModelId, PreprocMode, PolicyKind)> =
+        support::cross2(&ModelId::AUDIO, &steps)
+            .into_iter()
+            .map(|(model, (preproc, policy))| (model, preproc, policy))
+            .collect();
     let qps = super::sweep(&grid, |&(model, preproc, policy)| {
         support::saturated_qps(model, MigConfig::Small7, preproc, policy, 7, requests, sys).qps()
     });

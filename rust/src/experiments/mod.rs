@@ -5,6 +5,8 @@
 //! targets and the `preba experiment` CLI both call into here.
 
 pub mod ablation;
+pub mod packing;
+pub mod reconfig;
 pub mod support;
 
 pub mod fig05;
@@ -28,7 +30,7 @@ use crate::config::PrebaConfig;
 use crate::util::json::Json;
 
 /// Registry of all experiments for `preba experiment <id>` / `all`.
-pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 20] = [
+pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 22] = [
     ("fig5", fig05::run),
     ("fig6", fig06::run),
     ("fig7", fig07::run),
@@ -50,6 +52,10 @@ pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 20] = [
     ("abl_policy", ablation::run_policy),
     ("abl_traffic", ablation::run_traffic),
     ("abl_dpu", ablation::run_dpu_granularity),
+    // Online MIG reconfiguration + multi-tenant packing (beyond the
+    // paper: reconfigurable machine scheduling / fragmentation).
+    ("reconfig", reconfig::run),
+    ("packing", packing::run),
 ];
 
 /// Look up an experiment by id.

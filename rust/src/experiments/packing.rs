@@ -1,0 +1,231 @@
+//! Multi-tenant packing vs fragmentation.
+//!
+//! Two questions, two sections:
+//!
+//! 1. **Inventory packing** (analytic, `mig::placement`): given a stream
+//!    of slice requests over a small GPU inventory, how much requested
+//!    capacity does naive first-fit admit versus fragmentation-aware
+//!    best-fit-decreasing, and how many GPCs does each strand behind
+//!    awkward remainders? (Ting et al., arXiv:2512.16099 motivates the
+//!    metric.) A worked adversarial example plus a seeded randomized
+//!    study.
+//!
+//! 2. **On-GPU slice assignment** (DES, `server::multi`): three tenants
+//!    with skewed demand on one 1g.5gb(7x). A naive even split starves
+//!    the hot tenant; demand-aware placement (`multi::place_tenants` —
+//!    the same allocator the online reconfig controller uses) keeps every
+//!    tenant inside its SLA.
+//!
+//! Expected qualitative outcome: best-fit admits ≥ first-fit with fewer
+//! stranded GPCs; demand-aware placement cuts the hot tenant's tail and
+//! violation rate versus the even split.
+
+use crate::config::PrebaConfig;
+use crate::mig::placement::{adversarial_demo, pack, PackStrategy, SliceAsk};
+use crate::mig::{MigConfig, ServiceModel, Slice};
+use crate::models::ModelId;
+use crate::server::multi::{self, even_split, place_tenants, MultiConfig, TenantDemand};
+use crate::server::{PolicyKind, PreprocMode};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+use crate::util::Rng;
+
+/// Per-tenant SLA for the DES section, ms.
+const SLA_MS: f64 = 25.0;
+
+/// A random ask list: 5–10 instances drawn from the A100 profiles.
+fn random_asks(seed: u64) -> Vec<SliceAsk> {
+    let mut rng = Rng::new(0xACC ^ seed);
+    let n = 5 + (rng.f64() * 6.0) as usize;
+    (0..n)
+        .map(|i| {
+            let k = ((rng.f64() * Slice::PROFILES.len() as f64) as usize)
+                .min(Slice::PROFILES.len() - 1);
+            SliceAsk { tenant: i, slice: Slice::PROFILES[k] }
+        })
+        .collect()
+}
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Packing: fragmentation-aware placement vs naive baselines");
+
+    // ---- Section 1: inventory packing (analytic). ----
+    rep.section("worked example: 7 asks (small-first arrival order) on 2 GPUs");
+    let mut t = Table::new(&["strategy", "admitted GPCs", "asked", "stranded", "frag %"]);
+    let mut rows = Vec::new();
+    for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
+        let p = pack(&adversarial_demo(), 2, strategy);
+        t.row(&[
+            strategy.label().to_string(),
+            p.admitted_gpcs().to_string(),
+            p.asked_gpcs().to_string(),
+            p.stranded_gpcs().to_string(),
+            num(p.fragmentation() * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("strategy", Json::str(strategy.label())),
+            ("admitted_gpcs", Json::num(p.admitted_gpcs() as f64)),
+            ("asked_gpcs", Json::num(p.asked_gpcs() as f64)),
+            ("stranded_gpcs", Json::num(p.stranded_gpcs() as f64)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("worked", Json::Arr(rows));
+
+    rep.section("randomized study: 40 seeded ask lists on 2 GPUs");
+    let seeds: Vec<u64> = (0..40).collect();
+    let cells = super::sweep(&seeds, |&seed| {
+        let asks = random_asks(seed);
+        let ff = pack(&asks, 2, PackStrategy::FirstFit);
+        let bf = pack(&asks, 2, PackStrategy::BestFit);
+        (ff.admitted_frac(), bf.admitted_frac(), ff.stranded_gpcs(), bf.stranded_gpcs())
+    });
+    let n = cells.len() as f64;
+    let ff_adm = cells.iter().map(|c| c.0).sum::<f64>() / n;
+    let bf_adm = cells.iter().map(|c| c.1).sum::<f64>() / n;
+    let ff_str = cells.iter().map(|c| c.2 as f64).sum::<f64>() / n;
+    let bf_str = cells.iter().map(|c| c.3 as f64).sum::<f64>() / n;
+    let bf_wins = cells.iter().filter(|c| c.1 >= c.0).count();
+    let mut t = Table::new(&["strategy", "mean admitted %", "mean stranded GPCs"]);
+    t.row(&["first-fit".into(), num(ff_adm * 100.0), num(ff_str)]);
+    t.row(&["best-fit decreasing".into(), num(bf_adm * 100.0), num(bf_str)]);
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.row(&format!("best-fit ≥ first-fit on {bf_wins}/{} instances", cells.len()));
+    rep.data(
+        "randomized",
+        Json::obj(vec![
+            ("ff_admitted_frac", Json::num(ff_adm)),
+            ("bf_admitted_frac", Json::num(bf_adm)),
+            ("ff_stranded", Json::num(ff_str)),
+            ("bf_stranded", Json::num(bf_str)),
+            ("bf_wins", Json::num(bf_wins as f64)),
+            ("instances", Json::num(n)),
+        ]),
+    );
+
+    // ---- Section 2: on-GPU assignment (DES). ----
+    rep.section("3 skewed tenants on 1g.5gb(7x): even split vs demand-aware placement");
+    let u = ServiceModel::new(ModelId::MobileNet.spec(), 1).plateau_qps(0.0);
+    // Hot tenant wants ~3.5 slices' worth at the sizing target — the even
+    // split's 3 slices run past sustained capacity, demand-aware's 4 stay
+    // inside it.
+    let demands = vec![
+        TenantDemand { model: ModelId::MobileNet, rate_qps: 3.0 * u, sla_ms: SLA_MS },
+        TenantDemand { model: ModelId::MobileNet, rate_qps: 1.1 * u, sla_ms: SLA_MS },
+        TenantDemand { model: ModelId::MobileNet, rate_qps: 0.5 * u, sla_ms: SLA_MS },
+    ];
+    let requests = super::default_requests();
+    let modes = [false, true]; // demand-aware?
+    let sims = super::sweep(&modes, |&aware| {
+        let tenants = if aware {
+            place_tenants(&demands, MigConfig::Small7, 0.85).expect("placement")
+        } else {
+            even_split(&demands, MigConfig::Small7).expect("even split")
+        };
+        let alloc = tenants
+            .iter()
+            .map(|t| t.vgpus.to_string())
+            .collect::<Vec<_>>()
+            .join("/");
+        let cfg = MultiConfig {
+            mig: MigConfig::Small7,
+            tenants,
+            preproc: PreprocMode::Ideal,
+            policy: PolicyKind::Dynamic,
+            requests,
+            seed: 0xAC4,
+            warmup_frac: 0.1,
+            reconfig: None,
+        };
+        (alloc, multi::run(&cfg, sys).expect("valid config"))
+    });
+    let outs: Vec<(bool, (String, multi::MultiOutcome))> =
+        modes.iter().copied().zip(sims).collect();
+    let mut t = Table::new(&["placement", "alloc", "worst p95 ms", "max viol %"]);
+    let mut rows = Vec::new();
+    for (aware, (alloc, out)) in &outs {
+        let label = if *aware { "demand-aware" } else { "even split" };
+        let viol = out
+            .per_tenant
+            .iter()
+            .map(|(_, s)| s.sla_violation_frac(SLA_MS))
+            .fold(0.0, f64::max);
+        t.row(&[
+            label.to_string(),
+            alloc.to_string(),
+            num(out.worst_p95_ms()),
+            num(viol * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("placement", Json::str(label)),
+            ("alloc", Json::str(alloc)),
+            ("worst_p95_ms", Json::num(out.worst_p95_ms())),
+            ("max_violation_frac", Json::num(viol)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("assignment", Json::Arr(rows));
+    rep.finish("packing")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_fit_dominates_the_study_and_placement_rescues_the_hot_tenant() {
+        std::env::set_var("PREBA_FAST", "1");
+        let doc = run(&PrebaConfig::new());
+        let data = doc.get("data").unwrap();
+
+        // Worked example: exact numbers pinned by mig::placement's tests.
+        let worked = data.get("worked").unwrap().as_arr().unwrap();
+        let admitted = |s: &str| -> f64 {
+            worked
+                .iter()
+                .find(|r| r.get("strategy").unwrap().as_str().unwrap().starts_with(s))
+                .unwrap()
+                .get("admitted_gpcs")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert!(admitted("best-fit") > admitted("first-fit"));
+
+        // Randomized study: best-fit never loses on average.
+        let rnd = data.get("randomized").unwrap();
+        assert!(
+            rnd.get("bf_admitted_frac").unwrap().as_f64()
+                >= rnd.get("ff_admitted_frac").unwrap().as_f64()
+        );
+
+        // DES: demand-aware placement keeps the hot tenant inside the SLA
+        // that the even split blows through (3.4 slices of demand on 3).
+        let rows = data.get("assignment").unwrap().as_arr().unwrap();
+        let get = |placement: &str, key: &str| -> f64 {
+            rows.iter()
+                .find(|r| r.get("placement").unwrap().as_str() == Some(placement))
+                .unwrap()
+                .get(key)
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert!(
+            get("demand-aware", "worst_p95_ms") < 0.5 * get("even split", "worst_p95_ms"),
+            "demand-aware {} vs even {}",
+            get("demand-aware", "worst_p95_ms"),
+            get("even split", "worst_p95_ms")
+        );
+        assert!(
+            get("demand-aware", "max_violation_frac") < get("even split", "max_violation_frac")
+        );
+    }
+}

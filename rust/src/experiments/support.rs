@@ -93,6 +93,33 @@ pub fn max_qps_under_sla(
     best
 }
 
+/// Cross product of two parameter axes, row-major (`a` outer, `b` inner)
+/// — the sweep-grid/job-list shape every figure experiment fans out
+/// through [`super::sweep`]. Replaces the hand-rolled nested-push
+/// boilerplate each `fig*.rs` used to repeat.
+pub fn cross2<A: Clone, B: Clone>(a: &[A], b: &[B]) -> Vec<(A, B)> {
+    let mut out = Vec::with_capacity(a.len() * b.len());
+    for x in a {
+        for y in b {
+            out.push((x.clone(), y.clone()));
+        }
+    }
+    out
+}
+
+/// Three-axis cross product, row-major (`a` outermost).
+pub fn cross3<A: Clone, B: Clone, C: Clone>(a: &[A], b: &[B], c: &[C]) -> Vec<(A, B, C)> {
+    let mut out = Vec::with_capacity(a.len() * b.len() * c.len());
+    for x in a {
+        for y in b {
+            for z in c {
+                out.push((x.clone(), y.clone(), z.clone()));
+            }
+        }
+    }
+    out
+}
+
 /// Geometric mean of ratios (the paper's "average X× improvement").
 pub fn geomean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -109,6 +136,16 @@ mod tests {
     fn geomean_basics() {
         assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
         assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn cross_products_are_row_major() {
+        assert_eq!(cross2(&[1, 2], &["a", "b"]), vec![(1, "a"), (1, "b"), (2, "a"), (2, "b")]);
+        assert_eq!(
+            cross3(&[1, 2], &["a"], &[true, false]),
+            vec![(1, "a", true), (1, "a", false), (2, "a", true), (2, "a", false)]
+        );
+        assert!(cross2::<u8, u8>(&[], &[1]).is_empty());
     }
 
     #[test]

@@ -22,14 +22,22 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: preba <serve|simulate|profile|experiment|list> [options]\n\
+    "usage: preba <serve|simulate|profile|plan|reconfig|experiment|list> [options]\n\
      \n\
      serve      --model M [--preproc host|dpu] [--rate QPS] [--requests N] [--artifacts DIR]\n\
      simulate   --model M [--mig 1g|2g|7g] [--preproc ideal|cpu|dpu] [--policy static|dynamic]\n\
                 [--servers N] [--rate QPS] [--requests N] [--seed S]\n\
+                [--profile constant|diurnal|bursty] [--sla MS] [--reconfig]\n\
+                (--reconfig: online MIG repartitioning — a controller watches\n\
+                windowed arrival rates and repartitions with drain + outage)\n\
      profile    --model M [--mig 1g|2g|7g] [--len SECONDS]\n\
      plan       --model M [--sla MS] [--len SECONDS]   (partition recommendation)\n\
-     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|all>\n\
+     reconfig   [--model M] [--model2 M] [--mig 1g|2g|7g] [--profile diurnal|bursty|constant]\n\
+                [--rate QPS] [--rate2 QPS] [--period S] [--sla MS] [--requests N] [--seed S]\n\
+                [--window S] [--cooldown S] [--repartition S]\n\
+                (two colocated tenants, static fair split vs online slice\n\
+                reallocation; diurnal tenants run in anti-phase)\n\
+     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|all>\n\
                 [--jobs N] [--out DIR]\n\
      list\n\
      \n\
@@ -41,7 +49,7 @@ fn usage() -> &'static str {
 }
 
 fn run() -> anyhow::Result<()> {
-    let args = Args::from_env(&["fast", "help"])?;
+    let args = Args::from_env(&["fast", "help", "reconfig"])?;
     if args.flag("help") || args.command.is_none() {
         println!("{}", usage());
         return Ok(());
@@ -67,6 +75,7 @@ fn run() -> anyhow::Result<()> {
         "simulate" => simulate(&args, &sys),
         "profile" => profile(&args, &sys),
         "plan" => plan(&args),
+        "reconfig" => reconfig_cmd(&args, &sys),
         "experiment" => experiment(&args, &sys),
         other => {
             anyhow::bail!("unknown command '{other}'\n{}", usage());
@@ -188,14 +197,26 @@ fn simulate(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     cfg.requests = args.opt_u64("requests", 20_000)? as usize;
     cfg.seed = args.opt_u64("seed", 0xBEEF)?;
     cfg.rate_qps = args.opt_f64("rate", cfg.saturating_rate())?;
+    cfg.sla_ms = args.opt_f64("sla", cfg.sla_ms)?;
+    if let Some(kind) = args.opt("profile") {
+        cfg.profile = Some(
+            preba::workload::RateProfile::named(kind, cfg.rate_qps).ok_or_else(|| {
+                anyhow::anyhow!("unknown --profile '{kind}' (constant|diurnal|bursty)")
+            })?,
+        );
+    }
+    if args.flag("reconfig") {
+        cfg.reconfig = Some(preba::mig::ReconfigPolicy::default());
+    }
     println!(
-        "simulating {} on {} ({:?}, {:?}, {} servers, {:.1} QPS offered)...",
+        "simulating {} on {} ({:?}, {:?}, {} servers, {:.1} QPS offered{})...",
         model.display(),
         mig.name(),
         preproc,
         cfg.policy,
         cfg.active_servers,
-        cfg.rate_qps
+        cfg.rate_qps,
+        if cfg.reconfig.is_some() { ", online reconfig" } else { "" }
     );
     let out = sim_driver::run(&cfg, sys);
     print_run_stats(&out.stats);
@@ -206,6 +227,136 @@ fn simulate(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
         out.dpu_util.map(|u| format!("{:.1}%", 100.0 * u)).unwrap_or_else(|| "-".into()),
         out.pcie_gbps
     );
+    if cfg.reconfig.is_some() {
+        println!(
+            "reconfigs {}  outage {:.1} ms  final partition {}  SLA viol {:.2}% (sla {} ms)",
+            out.reconfigs,
+            out.reconfig_downtime as f64 * 1e-6,
+            out.final_mig.name(),
+            100.0 * out.stats.sla_violation_frac(cfg.sla_ms),
+            cfg.sla_ms
+        );
+        for ev in &out.reconfig_events {
+            println!(
+                "  t={:.2}s -> {} (predicted gain {:.1} ms)",
+                preba::clock::to_secs(ev.at),
+                ev.plan,
+                ev.predicted_gain_ms
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `preba reconfig`: two colocated tenants on one partition — static fair
+/// split vs online slice reallocation (`mig::reconfig`), side by side.
+fn reconfig_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
+    use preba::server::multi::{self, MultiConfig, TenantDemand};
+    use preba::workload::RateProfile;
+
+    let parse_model_or = |key: &str, default: ModelId| -> anyhow::Result<ModelId> {
+        match args.opt(key) {
+            None => Ok(default),
+            Some(name) => ModelId::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' for --{key}")),
+        }
+    };
+    let model = parse_model_or("model", ModelId::SwinTransformer)?;
+    let model2 = parse_model_or("model2", model)?;
+    let mig = parse_mig(args)?;
+    let sla_ms = args.opt_f64("sla", 25.0)?;
+    let period = args.opt_f64("period", 6.0)?;
+    let kind = args.opt_or("profile", "diurnal");
+    // Default per-tenant mean demand: ~2.6 slices' worth at the sustained
+    // (knee) operating point — peaks overrun a fair split, totals fit.
+    let unit = |m: ModelId| {
+        let len = preba::mig::planner::default_len(m);
+        preba::mig::ServiceModel::new(m.spec(), mig.gpcs_per_vgpu()).plateau_qps(len) * 0.9
+    };
+    let rate = args.opt_f64("rate", 2.6 * unit(model))?;
+    let rate2 = args.opt_f64("rate2", 2.6 * unit(model2))?;
+    let requests = args.opt_u64("requests", 12_000)? as usize;
+    let seed = args.opt_u64("seed", 0x7EC0)?;
+    let policy = preba::mig::ReconfigPolicy {
+        window_s: args.opt_f64("window", 0.5)?,
+        cooldown_s: args.opt_f64("cooldown", 1.0)?,
+        repartition_s: args.opt_f64("repartition", 0.1)?,
+        ..Default::default()
+    };
+
+    let mk_profile = |base: f64, phase_frac: f64| -> anyhow::Result<Option<RateProfile>> {
+        Ok(match kind {
+            "constant" => None,
+            "diurnal" => Some(RateProfile::Diurnal {
+                base_qps: base,
+                amplitude: 0.577,
+                period_s: period,
+                phase_frac,
+            }),
+            "bursty" => RateProfile::named("bursty", base),
+            other => anyhow::bail!("unknown --profile '{other}' (constant|diurnal|bursty)"),
+        })
+    };
+    let demands = vec![
+        TenantDemand { model, rate_qps: rate, sla_ms },
+        TenantDemand { model: model2, rate_qps: rate2, sla_ms },
+    ];
+    let mut tenants = multi::place_tenants(&demands, mig, 0.85)?;
+    tenants[0].profile = mk_profile(rate, 0.0)?;
+    tenants[1].profile = mk_profile(rate2, 0.5)?;
+    let static_alloc: Vec<usize> = tenants.iter().map(|t| t.vgpus).collect();
+    println!(
+        "{} + {} on {} ({kind}, {:.0}/{:.0} QPS mean, sla {sla_ms} ms, static split {:?})\n",
+        model.display(),
+        model2.display(),
+        mig.name(),
+        rate,
+        rate2,
+        static_alloc
+    );
+
+    let mut cfg = MultiConfig {
+        mig,
+        tenants,
+        preproc: preba::server::PreprocMode::Ideal,
+        policy: PolicyKind::Dynamic,
+        requests,
+        seed,
+        warmup_frac: 0.05,
+        reconfig: None,
+    };
+    let static_out = multi::run(&cfg, sys)?;
+    cfg.reconfig = Some(policy);
+    let online_out = multi::run(&cfg, sys)?;
+
+    let mut t = Table::new(&["mode", "tenant", "QPS", "p95 ms", "viol %"]);
+    for (mode, out) in [("static", &static_out), ("online", &online_out)] {
+        for (m, stats) in &out.per_tenant {
+            t.row(&[
+                mode.to_string(),
+                m.display().to_string(),
+                num(stats.throughput_qps()),
+                num(stats.p95_ms()),
+                num(stats.sla_violation_frac(sla_ms) * 100.0),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nonline: {} reallocations, {:.1} ms total transfer outage",
+        online_out.reconfigs,
+        online_out.reconfig_downtime as f64 * 1e-6
+    );
+    for ev in &online_out.reconfig_events {
+        println!(
+            "  t={:.2}s -> {} (rates {:.0}/{:.0} QPS, predicted gain {:.1} ms)",
+            preba::clock::to_secs(ev.at),
+            ev.plan,
+            ev.rates.first().copied().unwrap_or(0.0),
+            ev.rates.get(1).copied().unwrap_or(0.0),
+            ev.predicted_gain_ms
+        );
+    }
     Ok(())
 }
 
@@ -215,8 +366,14 @@ fn profile(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     let len = args.opt_f64("len", 2.5)?;
     let mut rng = preba::util::Rng::new(42);
     let batches = preba::profiler::sweep_batches(256);
-    let curve =
-        preba::profiler::profile_curve(model.spec(), mig.gpcs_per_vgpu(), len, &batches, 80, &mut rng);
+    let curve = preba::profiler::profile_curve(
+        model.spec(),
+        mig.gpcs_per_vgpu(),
+        len,
+        &batches,
+        80,
+        &mut rng,
+    );
     let knee = preba::profiler::find_knee(&curve, sys.batching.knee_frac);
     let mut t = Table::new(&["batch", "per-vGPU QPS", "p95 ms", "util %", ""]);
     for p in &curve {

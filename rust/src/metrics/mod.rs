@@ -76,6 +76,12 @@ impl RunStats {
         self.e2e_ms.p95()
     }
 
+    /// Fraction of completed requests whose end-to-end latency exceeded
+    /// `sla_ms` (the reconfiguration experiments' violation metric).
+    pub fn sla_violation_frac(&self, sla_ms: f64) -> f64 {
+        self.e2e_ms.frac_above(sla_ms)
+    }
+
     pub fn mean_ms(&self) -> f64 {
         self.e2e_ms.mean()
     }
@@ -136,5 +142,15 @@ mod tests {
         let s = RunStats::new();
         assert_eq!(s.throughput_qps(), 0.0);
         assert_eq!(s.p95_ms(), 0.0);
+        assert_eq!(s.sla_violation_frac(10.0), 0.0);
+    }
+
+    #[test]
+    fn sla_violations_counted() {
+        let mut s = RunStats::new();
+        s.record(parts(0.0, 0.0, 0.0, 10.0), millis(1.0), 1);
+        s.record(parts(0.0, 0.0, 0.0, 30.0), millis(2.0), 1);
+        assert_eq!(s.sla_violation_frac(20.0), 0.5);
+        assert_eq!(s.sla_violation_frac(40.0), 0.0);
     }
 }

@@ -41,7 +41,9 @@ impl PowerModel {
     /// * `fpga_util` — `None` when no DPU is installed (baseline).
     pub fn power(&self, cpu_util: f64, gpu_util: f64, fpga_util: Option<f64>) -> PowerBreakdown {
         let c = &self.cfg;
-        let scale = |tdp: f64, idle_frac: f64, u: f64| tdp * (idle_frac + (1.0 - idle_frac) * u.clamp(0.0, 1.0));
+        let scale = |tdp: f64, idle_frac: f64, u: f64| {
+            tdp * (idle_frac + (1.0 - idle_frac) * u.clamp(0.0, 1.0))
+        };
         PowerBreakdown {
             cpu_w: scale(c.cpu_tdp_w, c.cpu_idle_frac, cpu_util),
             gpu_w: scale(c.gpu_tdp_w, c.gpu_idle_frac, gpu_util),

@@ -87,7 +87,13 @@ mod tests {
 
     #[test]
     fn zero_total_guard() {
-        let cfg = TcoConfig { server_usd: 0.0, gpu_usd: 0.0, fpga_usd: 0.0, years: 0.0, usd_per_kwh: 0.0 };
+        let cfg = TcoConfig {
+            server_usd: 0.0,
+            gpu_usd: 0.0,
+            fpga_usd: 0.0,
+            years: 0.0,
+            usd_per_kwh: 0.0,
+        };
         let m = TcoModel::new(&cfg);
         let r = m.evaluate(10.0, &power(0.0), false);
         assert_eq!(r.queries_per_usd, 0.0);

@@ -5,9 +5,17 @@
 //! (model, slice size, batch, audio length), calibrated so the paper's
 //! measured Batch_knee / Time_knee values reproduce (see DESIGN.md §4).
 
+//! `reconfig` turns the partition decision online (windowed rate
+//! telemetry + hysteresis controller + amortized reconfig-cost model) and
+//! `placement` packs slice requests onto a multi-GPU inventory with
+//! fragmentation awareness.
+
 pub mod partition;
+pub mod placement;
 pub mod planner;
+pub mod reconfig;
 pub mod service;
 
 pub use partition::{MigConfig, Partition, Slice};
+pub use reconfig::{Plan, ReconfigController, ReconfigPolicy, TenantSpec};
 pub use service::ServiceModel;

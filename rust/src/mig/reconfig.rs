@@ -1,0 +1,549 @@
+//! Online MIG reconfiguration: windowed rate telemetry, a hysteresis
+//! controller with an amortized reconfig-cost model, and a rate-aware
+//! partition/allocation planner.
+//!
+//! PREBA's characterization says the right slicing is workload-dependent;
+//! the offline `mig::planner` freezes one answer. Real traffic is diurnal
+//! and bursty (`workload::trace`), so the partition — both the slice
+//! *geometry* (`MigConfig`) and, under multi-tenancy, the *assignment* of
+//! slices to tenants — should track the observed arrival rate. This is the
+//! "reconfigurable machine scheduling" problem (Tan et al.,
+//! arXiv:2109.11067): repartitioning has a real cost (MIG instances must
+//! drain before they can be destroyed/re-created), so the controller only
+//! moves when the predicted gain amortizes that cost, and never twice
+//! within a cooldown window.
+//!
+//! Three layers, usable independently:
+//! * [`RateWatcher`] — windowed arrival-rate estimation with EWMA
+//!   smoothing (the `workload::trace::windowed_rates` telemetry, online).
+//! * [`plan_for_rates`] — for observed per-tenant rates, the best
+//!   (geometry, slice allocation) under the same analytic latency model
+//!   the DES implements (Time_knee/n batching wait + service + an M/D/c
+//!   utilization inflation).
+//! * [`ReconfigController`] — the decision gate: EWMA telemetry in,
+//!   `Option<Plan>` out, with hysteresis deadband, cooldown, and the
+//!   amortized cost-benefit check.
+//!
+//! The DES drivers (`server::sim_driver` single-tenant geometry,
+//! `server::multi` multi-tenant slice reallocation) turn an emitted plan
+//! into first-class drain/restart events.
+
+use crate::clock::{secs, to_secs, Nanos};
+use crate::mig::{MigConfig, ServiceModel};
+use crate::models::ModelId;
+
+/// Predicted-latency cap for infeasible (rate >= capacity) operating
+/// points, ms. Kept finite so ordering between two overloaded plans still
+/// works (more overloaded scores worse).
+const INFEASIBLE_MS: f64 = 60_000.0;
+
+/// Controller knobs. Defaults suit the experiment scenarios (periods of
+/// seconds); production deployments would scale window/cooldown up with
+/// their traffic periods.
+#[derive(Debug, Clone)]
+pub struct ReconfigPolicy {
+    /// Arrival-rate estimation window, seconds (also the decision cadence).
+    pub window_s: f64,
+    /// EWMA weight of the newest window (1.0 = no smoothing).
+    pub ewma_alpha: f64,
+    /// Minimum time between two reconfigurations, seconds. Also the
+    /// commitment horizon the cost model amortizes over.
+    pub cooldown_s: f64,
+    /// Hysteresis deadband: a candidate plan must beat the current plan's
+    /// predicted worst SLA ratio by at least this relative margin.
+    pub min_gain: f64,
+    /// Fixed repartition outage per move (instance destroy + create +
+    /// server restart), seconds, charged after the affected slices drain.
+    pub repartition_s: f64,
+    /// Utilization target the allocator sizes slice counts for.
+    pub target_util: f64,
+}
+
+impl Default for ReconfigPolicy {
+    fn default() -> Self {
+        ReconfigPolicy {
+            window_s: 0.75,
+            ewma_alpha: 0.5,
+            cooldown_s: 1.5,
+            min_gain: 0.15,
+            repartition_s: 0.15,
+            target_util: 0.85,
+        }
+    }
+}
+
+/// One tenant the controller plans for.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub model: ModelId,
+    /// End-to-end p95 SLA, ms.
+    pub sla_ms: f64,
+    /// Representative input length, seconds (0 for vision).
+    pub len_s: f64,
+}
+
+impl TenantSpec {
+    pub fn new(model: ModelId, sla_ms: f64) -> TenantSpec {
+        TenantSpec { model, sla_ms, len_s: crate::mig::planner::default_len(model) }
+    }
+}
+
+/// A concrete partition decision: slice geometry + per-tenant slice counts
+/// (`alloc[i]` vGPUs for tenant `i`; the counts need not exhaust the
+/// partition, but the planner always hands out every slice).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Plan {
+    pub mig: MigConfig,
+    pub alloc: Vec<usize>,
+}
+
+impl Plan {
+    /// Single-tenant plan owning the whole partition.
+    pub fn single(mig: MigConfig) -> Plan {
+        Plan { mig, alloc: vec![mig.vgpus()] }
+    }
+
+    pub fn slices(&self) -> usize {
+        self.alloc.iter().sum()
+    }
+}
+
+impl std::fmt::Display for Plan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}[", self.mig.name())?;
+        for (i, a) in self.alloc.iter().enumerate() {
+            if i > 0 {
+                f.write_str("/")?;
+            }
+            write!(f, "{a}")?;
+        }
+        f.write_str("]")
+    }
+}
+
+/// One committed reconfiguration (timeline entry).
+#[derive(Debug, Clone)]
+pub struct ReconfigEvent {
+    pub at: Nanos,
+    pub plan: Plan,
+    /// Smoothed per-tenant rates that justified the move, queries/s.
+    pub rates: Vec<f64>,
+    /// Predicted worst-tenant p95 improvement, ms.
+    pub predicted_gain_ms: f64,
+}
+
+/// Windowed arrival-rate estimator with EWMA smoothing.
+#[derive(Debug, Clone)]
+pub struct RateWatcher {
+    window_start: Nanos,
+    count: u64,
+    alpha: f64,
+    ewma: f64,
+    primed: bool,
+}
+
+impl RateWatcher {
+    pub fn new(alpha: f64) -> RateWatcher {
+        RateWatcher { window_start: 0, count: 0, alpha, ewma: 0.0, primed: false }
+    }
+
+    /// Count one arrival in the current window.
+    pub fn observe(&mut self) {
+        self.count += 1;
+    }
+
+    /// Close the window ending at `now`; returns the smoothed estimate.
+    pub fn roll(&mut self, now: Nanos) -> f64 {
+        let span_s = to_secs(now.saturating_sub(self.window_start)).max(1e-9);
+        let inst = self.count as f64 / span_s;
+        if self.primed {
+            self.ewma = self.alpha * inst + (1.0 - self.alpha) * self.ewma;
+        } else {
+            self.ewma = inst;
+            self.primed = true;
+        }
+        self.window_start = now;
+        self.count = 0;
+        self.ewma
+    }
+
+    /// Current smoothed rate, queries/s.
+    pub fn rate(&self) -> f64 {
+        self.ewma
+    }
+}
+
+/// Analytic p95 prediction for `rate_qps` offered to `n_vgpus` slices of
+/// `mig`'s geometry — the same latency structure the DES produces: a
+/// request waits for its batch (up to the Time_knee/n deadline the
+/// batching policy uses), executes, and sees M/D/c-style queueing
+/// inflation as utilization rises. Deliberately mirrors the simulator so
+/// the controller's ranking matches simulated outcomes.
+pub fn predicted_p95_ms(spec: &TenantSpec, mig: MigConfig, n_vgpus: usize, rate_qps: f64) -> f64 {
+    if n_vgpus == 0 {
+        return 2.0 * INFEASIBLE_MS;
+    }
+    let sm = ServiceModel::new(spec.model.spec(), mig.gpcs_per_vgpu());
+    let len = spec.len_s;
+    let per_vgpu = rate_qps / n_vgpus as f64;
+    let rho = per_vgpu / sm.plateau_qps(len);
+    if rho >= 0.999 {
+        return INFEASIBLE_MS * rho.min(10.0);
+    }
+    let knee = sm.knee(len);
+    // The drivers' dynamic policy: Batch_max = knee, Time_queue = T(knee)/n.
+    let tq_s = sm.exec_secs(knee, len) / n_vgpus as f64;
+    // Batch the offered rate fills before the deadline fires.
+    let fill = (per_vgpu * tq_s).floor() as usize;
+    let b = (fill + 1).clamp(1, knee);
+    // Head-of-line wait: the deadline when the queue can't fill the knee
+    // in time, else the knee fill time.
+    let wait_s = if b >= knee { (knee as f64 / per_vgpu.max(1e-9)).min(tq_s) } else { tq_s };
+    let exec_s = sm.exec_secs(b, len);
+    let inflation = 1.0 + rho * rho / (2.0 * (1.0 - rho));
+    (wait_s + exec_s * inflation) * 1e3 * 1.10
+}
+
+/// Allocate `mig`'s slices across tenants for the observed rates: everyone
+/// gets at least one slice, then each remaining slice goes to the tenant
+/// with the largest unmet demand (in slices, sized at `target_util`).
+/// Deterministic: ties break toward the lowest tenant index. `None` when
+/// the partition has fewer slices than tenants.
+pub fn alloc_for_rates(
+    tenants: &[TenantSpec],
+    rates: &[f64],
+    mig: MigConfig,
+    target_util: f64,
+) -> Option<Vec<usize>> {
+    let n = mig.vgpus();
+    let t = tenants.len();
+    if t == 0 || t > n {
+        return None;
+    }
+    let need: Vec<f64> = tenants
+        .iter()
+        .zip(rates.iter())
+        .map(|(ts, &r)| {
+            let per_slice = ServiceModel::new(ts.model.spec(), mig.gpcs_per_vgpu())
+                .plateau_qps(ts.len_s);
+            r / (per_slice * target_util).max(1e-9)
+        })
+        .collect();
+    let mut alloc = vec![1usize; t];
+    for _ in t..n {
+        let mut best = 0usize;
+        let mut best_deficit = f64::NEG_INFINITY;
+        for (i, (&n_i, &a)) in need.iter().zip(alloc.iter()).enumerate() {
+            let deficit = n_i - a as f64;
+            if deficit > best_deficit {
+                best_deficit = deficit;
+                best = i;
+            }
+        }
+        alloc[best] += 1;
+    }
+    Some(alloc)
+}
+
+/// Worst tenant's (predicted p95 / SLA) under `plan`, plus that p95 and
+/// the tenant index.
+pub fn worst_ratio(tenants: &[TenantSpec], rates: &[f64], plan: &Plan) -> (f64, f64, usize) {
+    let mut ratio = 0.0;
+    let mut p95 = 0.0;
+    let mut idx = 0;
+    for (i, (ts, (&r, &a))) in
+        tenants.iter().zip(rates.iter().zip(plan.alloc.iter())).enumerate()
+    {
+        let p = predicted_p95_ms(ts, plan.mig, a, r);
+        let q = p / ts.sla_ms.max(1e-9);
+        if q > ratio {
+            ratio = q;
+            p95 = p;
+            idx = i;
+        }
+    }
+    (ratio, p95, idx)
+}
+
+/// Best (geometry, allocation) for the observed rates: evaluates every
+/// MIG configuration with at least one slice per tenant and returns the
+/// plan minimizing the worst tenant's predicted-p95/SLA ratio, plus that
+/// ratio. Deterministic (fixed search order, strict improvement).
+pub fn plan_for_rates(tenants: &[TenantSpec], rates: &[f64], target_util: f64) -> (Plan, f64) {
+    assert!(!tenants.is_empty() && tenants.len() <= 7, "1..=7 tenants supported");
+    let mut best: Option<(Plan, f64)> = None;
+    for mig in MigConfig::ALL {
+        let Some(alloc) = alloc_for_rates(tenants, rates, mig, target_util) else {
+            continue;
+        };
+        let plan = Plan { mig, alloc };
+        let (ratio, _, _) = worst_ratio(tenants, rates, &plan);
+        let better = match &best {
+            None => true,
+            Some((_, b)) => ratio < *b,
+        };
+        if better {
+            best = Some((plan, ratio));
+        }
+    }
+    best.expect("Small7 admits up to 7 tenants")
+}
+
+/// The online decision gate. Feed it arrivals (`observe_arrival`) and call
+/// [`ReconfigController::tick`] once per window; it returns `Some(plan)`
+/// only when a repartition clears hysteresis, cooldown, and the amortized
+/// cost-benefit check.
+#[derive(Debug)]
+pub struct ReconfigController {
+    policy: ReconfigPolicy,
+    tenants: Vec<TenantSpec>,
+    watchers: Vec<RateWatcher>,
+    plan: Plan,
+    last_reconfig: Option<Nanos>,
+    events: Vec<ReconfigEvent>,
+}
+
+impl ReconfigController {
+    pub fn new(tenants: Vec<TenantSpec>, initial: Plan, policy: ReconfigPolicy) -> Self {
+        assert_eq!(tenants.len(), initial.alloc.len(), "plan/tenant arity mismatch");
+        assert!(!tenants.is_empty() && tenants.len() <= 7, "1..=7 tenants supported");
+        let watchers = tenants.iter().map(|_| RateWatcher::new(policy.ewma_alpha)).collect();
+        ReconfigController {
+            policy,
+            tenants,
+            watchers,
+            plan: initial,
+            last_reconfig: None,
+            events: Vec::new(),
+        }
+    }
+
+    /// Decision cadence as virtual nanoseconds.
+    pub fn window(&self) -> Nanos {
+        secs(self.policy.window_s)
+    }
+
+    pub fn policy(&self) -> &ReconfigPolicy {
+        &self.policy
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    pub fn events(&self) -> &[ReconfigEvent] {
+        &self.events
+    }
+
+    /// Smoothed per-tenant rate estimates, queries/s.
+    pub fn rates(&self) -> Vec<f64> {
+        self.watchers.iter().map(RateWatcher::rate).collect()
+    }
+
+    /// Count one arrival for tenant `i` in the current window.
+    pub fn observe_arrival(&mut self, i: usize) {
+        self.watchers[i].observe();
+    }
+
+    /// Close the telemetry window without making a decision (used while a
+    /// previous reconfiguration is still draining, or after the workload's
+    /// final arrival).
+    pub fn roll_only(&mut self, now: Nanos) {
+        for w in &mut self.watchers {
+            w.roll(now);
+        }
+    }
+
+    /// Close the window at `now` and decide. `Some(plan)` commits the
+    /// reconfiguration (the caller must then drain + apply it).
+    pub fn tick(&mut self, now: Nanos) -> Option<Plan> {
+        let rates: Vec<f64> = self.watchers.iter_mut().map(|w| w.roll(now)).collect();
+        if let Some(t) = self.last_reconfig {
+            if now < t.saturating_add(secs(self.policy.cooldown_s)) {
+                return None;
+            }
+        }
+        let (cur_ratio, cur_p95, worst_idx) = worst_ratio(&self.tenants, &rates, &self.plan);
+        let (cand, cand_ratio) = plan_for_rates(&self.tenants, &rates, self.policy.target_util);
+        if cand == self.plan {
+            return None;
+        }
+        // Hysteresis deadband: ignore marginal improvements.
+        if cand_ratio >= cur_ratio * (1.0 - self.policy.min_gain) {
+            return None;
+        }
+        // Amortized reconfig-cost model: moving `moved` slices takes them
+        // offline for ~repartition_s, displacing their share of the load
+        // by ~repartition_s each (latency mass in query-seconds). The
+        // switch must win that back, at the worst tenant's rate, within
+        // one cooldown (the minimum commitment horizon).
+        let (_, cand_p95, _) = worst_ratio(&self.tenants, &rates, &cand);
+        let total_rate: f64 = rates.iter().sum();
+        let moved = if cand.mig == self.plan.mig {
+            let diff: usize = cand
+                .alloc
+                .iter()
+                .zip(self.plan.alloc.iter())
+                .map(|(&a, &b)| a.abs_diff(b))
+                .sum();
+            (diff / 2).max(1) as f64
+        } else {
+            self.plan.slices() as f64
+        };
+        let displaced_qps = total_rate * moved / self.plan.slices().max(1) as f64;
+        let cost_qs = displaced_qps * self.policy.repartition_s * self.policy.repartition_s;
+        let saved_qs =
+            (cur_p95 - cand_p95) * 1e-3 * rates[worst_idx] * self.policy.cooldown_s;
+        if saved_qs <= cost_qs {
+            return None;
+        }
+        self.last_reconfig = Some(now);
+        self.plan = cand.clone();
+        self.events.push(ReconfigEvent {
+            at: now,
+            plan: cand.clone(),
+            rates,
+            predicted_gain_ms: cur_p95 - cand_p95,
+        });
+        Some(cand)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::millis;
+
+    fn swin(sla_ms: f64) -> TenantSpec {
+        TenantSpec { model: ModelId::SwinTransformer, sla_ms, len_s: 0.0 }
+    }
+
+    #[test]
+    fn watcher_estimates_rate_and_smooths() {
+        let mut w = RateWatcher::new(0.5);
+        for _ in 0..100 {
+            w.observe();
+        }
+        let r1 = w.roll(secs(1.0));
+        assert!((r1 - 100.0).abs() < 1e-9, "{r1}");
+        // Next window empty: EWMA halves rather than dropping to zero.
+        let r2 = w.roll(secs(2.0));
+        assert!((r2 - 50.0).abs() < 1e-9, "{r2}");
+    }
+
+    #[test]
+    fn low_rate_prediction_includes_batching_deadline() {
+        // A lone request waits the full Time_queue before executing.
+        let ts = swin(50.0);
+        let p_small = predicted_p95_ms(&ts, MigConfig::Small7, 7, 1.0);
+        let p_full = predicted_p95_ms(&ts, MigConfig::Full1, 1, 1.0);
+        // Full GPU's Time_knee deadline (no /n division) dominates.
+        assert!(p_full > p_small, "full={p_full} small={p_small}");
+    }
+
+    #[test]
+    fn overload_scores_infeasible() {
+        let ts = swin(50.0);
+        let cap = 7.0 * ServiceModel::new(ts.model.spec(), 1).plateau_qps(0.0);
+        let p = predicted_p95_ms(&ts, MigConfig::Small7, 7, cap * 1.5);
+        assert!(p >= INFEASIBLE_MS, "{p}");
+    }
+
+    #[test]
+    fn alloc_tracks_demand() {
+        let tenants = vec![swin(25.0), swin(25.0)];
+        let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+        // A cold, B hot: B should get most of the slices.
+        let alloc =
+            alloc_for_rates(&tenants, &[0.2 * u, 4.0 * u], MigConfig::Small7, 0.85).unwrap();
+        assert_eq!(alloc.iter().sum::<usize>(), 7);
+        assert!(alloc[1] >= 5, "{alloc:?}");
+        assert!(alloc[0] >= 1);
+        // Symmetric demand: near-even split, deterministic tie-break.
+        let even =
+            alloc_for_rates(&tenants, &[u, u], MigConfig::Small7, 0.85).unwrap();
+        assert_eq!(even, vec![4, 3]);
+    }
+
+    #[test]
+    fn alloc_rejects_too_many_tenants() {
+        let tenants: Vec<TenantSpec> = (0..3).map(|_| swin(25.0)).collect();
+        assert!(alloc_for_rates(&tenants, &[1.0, 1.0, 1.0], MigConfig::Full1, 0.85).is_none());
+    }
+
+    #[test]
+    fn plan_prefers_capacity_under_load() {
+        // At rates beyond the full GPU's capacity, only the fine partition
+        // is feasible (paper Fig 5: 1g.5gb(7x) aggregate > 7g.40gb(1x)).
+        let tenants = vec![swin(25.0)];
+        let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+        let (plan, _) = plan_for_rates(&tenants, &[6.0 * u], 0.85);
+        assert_eq!(plan.mig, MigConfig::Small7);
+    }
+
+    #[test]
+    fn controller_stays_put_on_constant_load() {
+        let tenants = vec![swin(25.0), swin(25.0)];
+        let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+        let rate = 2.0 * u; // per tenant, comfortably served by [4,3]
+        let mut ctrl = ReconfigController::new(
+            tenants,
+            Plan { mig: MigConfig::Small7, alloc: vec![4, 3] },
+            ReconfigPolicy::default(),
+        );
+        let window = ctrl.window();
+        let mut now = 0;
+        for _ in 0..40 {
+            now += window;
+            let per_window = (rate * to_secs(window)) as usize;
+            for _ in 0..per_window {
+                ctrl.observe_arrival(0);
+                ctrl.observe_arrival(1);
+            }
+            assert!(ctrl.tick(now).is_none(), "thrashes at t={now}");
+        }
+        assert!(ctrl.events().is_empty());
+    }
+
+    #[test]
+    fn controller_reallocates_on_skew_and_respects_cooldown() {
+        let tenants = vec![swin(25.0), swin(25.0)];
+        let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+        let mut ctrl = ReconfigController::new(
+            tenants,
+            Plan { mig: MigConfig::Small7, alloc: vec![4, 3] },
+            ReconfigPolicy::default(),
+        );
+        let window = ctrl.window();
+        let mut now = 0;
+        let mut reconfigs = Vec::new();
+        // Tenant B runs far past its 3-slice capacity; A idles.
+        for _ in 0..20 {
+            now += window;
+            let a = (0.3 * u * to_secs(window)) as usize;
+            let b = (3.8 * u * to_secs(window)) as usize;
+            for _ in 0..a {
+                ctrl.observe_arrival(0);
+            }
+            for _ in 0..b {
+                ctrl.observe_arrival(1);
+            }
+            if let Some(plan) = ctrl.tick(now) {
+                assert!(plan.alloc[1] > 3, "should shift slices to B: {plan}");
+                reconfigs.push(now);
+            }
+        }
+        assert!(!reconfigs.is_empty(), "controller never reacted");
+        let cooldown = millis(ctrl.policy().cooldown_s * 1e3);
+        for pair in reconfigs.windows(2) {
+            assert!(pair[1] - pair[0] >= cooldown, "reconfigs thrash: {reconfigs:?}");
+        }
+    }
+
+    #[test]
+    fn plan_display_is_compact() {
+        let p = Plan { mig: MigConfig::Small7, alloc: vec![4, 3] };
+        assert_eq!(p.to_string(), "1g.5gb(7x)[4/3]");
+        assert_eq!(p.slices(), 7);
+    }
+}

@@ -151,7 +151,11 @@ mod tests {
 
     #[test]
     fn vision_knees_match_paper_at_1g_and_7g() {
-        let cases = [(ModelId::MobileNet, 16, 128), (ModelId::SqueezeNet, 4, 32), (ModelId::SwinTransformer, 2, 16)];
+        let cases = [
+            (ModelId::MobileNet, 16, 128),
+            (ModelId::SqueezeNet, 4, 32),
+            (ModelId::SwinTransformer, 2, 16),
+        ];
         for (m, k1, k7) in cases {
             assert_eq!(ServiceModel::new(m.spec(), 1).knee(0.0), k1, "{m} 1g");
             assert_eq!(ServiceModel::new(m.spec(), 7).knee(0.0), k7, "{m} 7g");

@@ -51,8 +51,9 @@ impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: &str) -> anyhow::Result<Manifest> {
         let path = Path::new(dir).join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("cannot read {}: {e} (run `make artifacts`)", path.display())
+        })?;
         let doc = json::parse(&text)?;
         let mut entries = BTreeMap::new();
         for item in doc.req("artifacts")?.as_arr().unwrap_or(&[]) {
@@ -91,7 +92,10 @@ impl Manifest {
     /// Model artifact for (name, batch, len bucket), if lowered.
     pub fn model(&self, name: &str, batch: usize, len_s: f64) -> Option<&ArtifactEntry> {
         self.entries.values().find(|e| {
-            e.key.starts_with("model/") && e.name == name && e.batch == batch && (e.len_s - len_s).abs() < 1e-6
+            e.key.starts_with("model/")
+                && e.name == name
+                && e.batch == batch
+                && (e.len_s - len_s).abs() < 1e-6
         })
     }
 

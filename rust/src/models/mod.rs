@@ -79,7 +79,9 @@ impl ModelId {
 
     pub fn kind(&self) -> ModelKind {
         match self {
-            ModelId::MobileNet | ModelId::SqueezeNet | ModelId::SwinTransformer => ModelKind::Vision,
+            ModelId::MobileNet | ModelId::SqueezeNet | ModelId::SwinTransformer => {
+                ModelKind::Vision
+            }
             _ => ModelKind::Audio,
         }
     }

@@ -171,7 +171,14 @@ pub fn resize_matrix(src: usize, dst: usize) -> Vec<f32> {
 /// §Perf: evaluated in sparse two-tap form rather than dense matmul —
 /// O(out * 2) instead of O(out * src) — numerically identical to the
 /// dense matrix (<= 2 nonzeros per row; `tests::resize_*` pin this).
-pub fn resize_bilinear(img: &[f32], h: usize, w: usize, ch: usize, oh: usize, ow: usize) -> Vec<f32> {
+pub fn resize_bilinear(
+    img: &[f32],
+    h: usize,
+    w: usize,
+    ch: usize,
+    oh: usize,
+    ow: usize,
+) -> Vec<f32> {
     assert_eq!(img.len(), h * w * ch);
     let row_taps = resize_taps(h, oh);
     let col_taps = resize_taps(w, ow);
@@ -610,7 +617,8 @@ mod tests {
         normalize_features(&mut feat, nf, nm);
         for m in 0..nm {
             let mean: f32 = (0..nf).map(|f| feat[f * nm + m]).sum::<f32>() / nf as f32;
-            let var: f32 = (0..nf).map(|f| (feat[f * nm + m] - mean).powi(2)).sum::<f32>() / nf as f32;
+            let var: f32 =
+                (0..nf).map(|f| (feat[f * nm + m] - mean).powi(2)).sum::<f32>() / nf as f32;
             assert!(mean.abs() < 1e-4, "mel {m} mean {mean}");
             assert!((var - 1.0).abs() < 1e-2, "mel {m} var {var}");
         }

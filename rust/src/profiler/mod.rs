@@ -150,10 +150,18 @@ mod tests {
     #[test]
     fn curve_throughput_monotonic_until_plateau() {
         let mut rng = Rng::new(11);
-        let curve = profile_curve(ModelId::MobileNet.spec(), 1, 0.0, &sweep_batches(256), 40, &mut rng);
+        let curve =
+            profile_curve(ModelId::MobileNet.spec(), 1, 0.0, &sweep_batches(256), 40, &mut rng);
         // QPS non-decreasing (within jitter tolerance).
         for w in curve.windows(2) {
-            assert!(w[1].qps > w[0].qps * 0.97, "b={} {} -> b={} {}", w[0].batch, w[0].qps, w[1].batch, w[1].qps);
+            assert!(
+                w[1].qps > w[0].qps * 0.97,
+                "b={} {} -> b={} {}",
+                w[0].batch,
+                w[0].qps,
+                w[1].batch,
+                w[1].qps
+            );
         }
         // Latency strictly grows with batch.
         for w in curve.windows(2) {

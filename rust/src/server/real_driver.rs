@@ -75,7 +75,11 @@ pub struct RealOutcome {
 pub const IMG_SRC: usize = 96;
 
 /// Serve `cfg.requests` requests end-to-end; blocks until drained.
-pub fn serve(cfg: &RealConfig, sys: &PrebaConfig, engine: &mut Engine) -> anyhow::Result<RealOutcome> {
+pub fn serve(
+    cfg: &RealConfig,
+    sys: &PrebaConfig,
+    engine: &mut Engine,
+) -> anyhow::Result<RealOutcome> {
     let spec = cfg.model.spec();
     // ONE clock for frontend + server: two epochs would silently shift
     // the arrival timestamps by the warm-up duration.
@@ -93,7 +97,8 @@ pub fn serve(cfg: &RealConfig, sys: &PrebaConfig, engine: &mut Engine) -> anyhow
         engine,
         cfg.model,
     );
-    let mut batcher = DynamicBatcher::new(cfg.model, buckets.clone(), policy, sys.batching.merge_adjacent);
+    let mut batcher =
+        DynamicBatcher::new(cfg.model, buckets.clone(), policy, sys.batching.merge_adjacent);
 
     // Warm-up: compile every artifact this run can touch and execute each
     // once with zeros, so PJRT compilation happens at server startup (as
@@ -284,7 +289,11 @@ fn warmup(cfg: &RealConfig, engine: &mut Engine) -> anyhow::Result<()> {
 }
 
 /// Preprocess one raw request on the configured path.
-fn preprocess_one(cfg: &RealConfig, engine: &mut Engine, raw: &RawRequest) -> anyhow::Result<Vec<f32>> {
+fn preprocess_one(
+    cfg: &RealConfig,
+    engine: &mut Engine,
+    raw: &RawRequest,
+) -> anyhow::Result<Vec<f32>> {
     match (cfg.model.kind(), cfg.preproc) {
         (ModelKind::Vision, RealPreproc::HostRust) => {
             // Decode(IDCT) -> resize 72 -> crop 64 -> normalize; must match

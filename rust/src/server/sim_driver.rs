@@ -65,6 +65,15 @@ pub struct SimConfig {
     /// Non-stationary traffic profile; `None` = constant Poisson at
     /// `rate_qps` (the MLPerf-server default).
     pub profile: Option<crate::workload::RateProfile>,
+    /// Online MIG reconfiguration (`mig::reconfig`): when set, a
+    /// controller watches windowed arrival rates and repartitions the GPU
+    /// (drain → repartition outage → restart) when the predicted gain
+    /// amortizes the cost. `active_servers` is ignored in this mode — the
+    /// controller owns the whole GPU.
+    pub reconfig: Option<crate::mig::ReconfigPolicy>,
+    /// End-to-end SLA the reconfig controller plans against (and the
+    /// violation-rate metric uses), ms.
+    pub sla_ms: f64,
 }
 
 impl SimConfig {
@@ -81,6 +90,8 @@ impl SimConfig {
             warmup_frac: 0.1,
             fixed_len_s: None,
             profile: None,
+            reconfig: None,
+            sla_ms: 50.0,
         }
     }
 
@@ -116,6 +127,16 @@ pub struct SimOutcome {
     pub horizon: Nanos,
     /// Offered load, for reference.
     pub offered_qps: f64,
+    /// Committed online reconfigurations (0 without a controller).
+    pub reconfigs: u64,
+    /// Total decision→restart wall time across reconfigurations (drain +
+    /// repartition outage).
+    pub reconfig_downtime: Nanos,
+    /// Reconfiguration timeline (empty without a controller).
+    pub reconfig_events: Vec<crate::mig::reconfig::ReconfigEvent>,
+    /// Partition the run ended on (== the configured one without a
+    /// controller).
+    pub final_mig: MigConfig,
 }
 
 impl SimOutcome {
@@ -156,6 +177,12 @@ enum Ev {
         vgpu: usize,
         batch_idx: usize,
     },
+    /// Close a telemetry window and ask the reconfig controller for a
+    /// decision (scheduled every `ReconfigPolicy::window_s`).
+    ReconfigCheck,
+    /// The drain + repartition outage finished: bring the new partition
+    /// up and resume dispatch.
+    ReconfigApply { to: MigConfig },
 }
 
 struct ReqState {
@@ -164,12 +191,51 @@ struct ReqState {
     preproc_done: Nanos,
 }
 
+/// Batching policy for the current partition — shared by the initial
+/// build and reconfig-time rebuilds (the Time_queue = Time_knee/n rule
+/// depends on the live vGPU count).
+fn build_policy(
+    policy: PolicyKind,
+    sys: &PrebaConfig,
+    spec: &'static crate::models::ModelSpec,
+    sm: &ServiceModel,
+    buckets: &Bucketizer,
+    n_vgpus: usize,
+) -> BatchPolicy {
+    match policy {
+        PolicyKind::Static => BatchPolicy::Static(QueueParams {
+            batch_max: sys.batching.static_batch_max,
+            time_queue: sys.batching.static_time_queue,
+        }),
+        PolicyKind::Dynamic => {
+            let mut p = BatchPolicy::dynamic_from_model(spec, sm, buckets, n_vgpus);
+            // Time_queue-rule ablation: rescale every bucket's wait from
+            // the paper's /n_vGPUs rule to the configured divisor.
+            if let (Some(div), BatchPolicy::Dynamic { per_bucket }) =
+                (sys.batching.time_queue_divisor, &mut p)
+            {
+                for q in per_bucket {
+                    q.time_queue =
+                        (q.time_queue as f64 * n_vgpus as f64 / div.max(1e-6)) as u64;
+                }
+            }
+            p
+        }
+    }
+}
+
 /// Run one simulation.
 pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
     let spec = cfg.model.spec();
-    let gpcs = cfg.mig.gpcs_per_vgpu();
-    let n_vgpus = cfg.active_servers.min(cfg.mig.vgpus()).max(1);
-    let sm = ServiceModel::new(spec, gpcs);
+    // Under online reconfiguration the controller owns the whole GPU;
+    // otherwise the configured partition + active-server count are fixed
+    // for the run.
+    let mut mig_now = cfg.mig;
+    let mut n_vgpus = match cfg.reconfig {
+        Some(_) => cfg.mig.vgpus(),
+        None => cfg.active_servers.min(cfg.mig.vgpus()).max(1),
+    };
+    let mut sm = ServiceModel::new(spec, mig_now.gpcs_per_vgpu());
 
     let mut root_rng = Rng::new(cfg.seed ^ 0x5EED);
     let gen_rng = root_rng.split(1);
@@ -185,28 +251,22 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
         }
         _ => Bucketizer::fixed(),
     };
-    let policy = match cfg.policy {
-        PolicyKind::Static => BatchPolicy::Static(QueueParams {
-            batch_max: sys.batching.static_batch_max,
-            time_queue: sys.batching.static_time_queue,
-        }),
-        PolicyKind::Dynamic => {
-            let mut p = BatchPolicy::dynamic_from_model(spec, &sm, &buckets, n_vgpus);
-            // Time_queue-rule ablation: rescale every bucket's wait from
-            // the paper's /n_vGPUs rule to the configured divisor.
-            if let (Some(div), BatchPolicy::Dynamic { per_bucket }) =
-                (sys.batching.time_queue_divisor, &mut p)
-            {
-                for q in per_bucket {
-                    q.time_queue =
-                        (q.time_queue as f64 * n_vgpus as f64 / div.max(1e-6)) as u64;
-                }
-            }
-            p
-        }
-    };
+    let policy = build_policy(cfg.policy, sys, spec, &sm, &buckets, n_vgpus);
     let mut batcher =
         DynamicBatcher::new(cfg.model, buckets.clone(), policy, sys.batching.merge_adjacent);
+
+    // Online reconfiguration controller (None = static partition).
+    let mut ctrl = cfg.reconfig.clone().map(|policy| {
+        let len_s = match cfg.model.kind() {
+            ModelKind::Vision => 0.0,
+            ModelKind::Audio => cfg.fixed_len_s.unwrap_or(10.0),
+        };
+        crate::mig::ReconfigController::new(
+            vec![crate::mig::TenantSpec { model: cfg.model, sla_ms: cfg.sla_ms, len_s }],
+            crate::mig::Plan::single(cfg.mig),
+            policy,
+        )
+    });
 
     // Preprocessing stage.
     let usable_cores = sys.hardware.cpu_cores - sys.hardware.cpu_reserved_cores;
@@ -245,9 +305,23 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
     for (i, a) in arrivals.iter().enumerate() {
         q.schedule(a.at, Ev::Arrival(i));
     }
+    if let Some(c) = &ctrl {
+        q.schedule(c.window(), Ev::ReconfigCheck);
+    }
 
     let warmup = (cfg.requests as f64 * cfg.warmup_frac) as usize;
     let mut stats = RunStats::new();
+    // Reconfiguration state: while a drain is in progress no new batches
+    // are dispatched (in-flight ones finish); `busy_folded` accumulates
+    // the busy time of torn-down vGPU sets and `cap_ns` integrates
+    // capacity (vGPUs × time) across geometry changes so utilization
+    // stays meaningful.
+    let mut reconfiguring = false;
+    let mut downtime: Nanos = 0;
+    let mut arrivals_seen: usize = 0;
+    let mut busy_folded: u128 = 0;
+    let mut cap_last_change: Nanos = 0;
+    let mut cap_ns: u128 = 0;
     // In-flight batch slab: completed slots go on a free list and are
     // reused, so memory stays O(outstanding batches) instead of growing
     // O(total batches) over the run.
@@ -296,6 +370,10 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
     let events = crate::sim::run(&mut q, u64::MAX, |now, ev, q| {
         match ev {
             Ev::Arrival(i) => {
+                arrivals_seen += 1;
+                if let Some(c) = ctrl.as_mut() {
+                    c.observe_arrival(0);
+                }
                 let len = reqs[i].len_s;
                 match cfg.preproc {
                     PreprocMode::Ideal => q.schedule(now, Ev::PreprocDone(i)),
@@ -319,19 +397,23 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                     enqueued: now,
                     len_s: reqs[i].len_s,
                 });
-                while let Some((batch, _)) = batcher.try_form(now) {
-                    dispatch(
-                        batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches,
-                        &mut free_slots, q, &mut exec_rng, &sm, &buckets,
-                    );
-                }
-                // Arm a tick only when this enqueue moved the earliest
-                // deadline forward; an already-armed earlier (or equal)
-                // tick covers this deadline.
-                if let Some(deadline) = batcher.next_deadline() {
-                    if armed_tick.map_or(true, |t| deadline < t) {
-                        q.schedule(deadline, Ev::BatchTick);
-                        armed_tick = Some(deadline.max(now));
+                // During a reconfiguration drain requests queue up in the
+                // batcher; ReconfigApply resumes dispatch.
+                if !reconfiguring {
+                    while let Some((batch, _)) = batcher.try_form(now) {
+                        dispatch(
+                            batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches,
+                            &mut free_slots, q, &mut exec_rng, &sm, &buckets,
+                        );
+                    }
+                    // Arm a tick only when this enqueue moved the earliest
+                    // deadline forward; an already-armed earlier (or equal)
+                    // tick covers this deadline.
+                    if let Some(deadline) = batcher.next_deadline() {
+                        if armed_tick.is_none_or(|t| deadline < t) {
+                            q.schedule(deadline, Ev::BatchTick);
+                            armed_tick = Some(deadline.max(now));
+                        }
                     }
                 }
             }
@@ -341,15 +423,17 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 // no-ops. Resetting to None can only over-schedule, never
                 // miss a deadline.
                 armed_tick = None;
-                while let Some((batch, _)) = batcher.try_form(now) {
-                    dispatch(
-                        batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches,
-                        &mut free_slots, q, &mut exec_rng, &sm, &buckets,
-                    );
-                }
-                if let Some(deadline) = batcher.next_deadline() {
-                    q.schedule(deadline, Ev::BatchTick);
-                    armed_tick = Some(deadline.max(now));
+                if !reconfiguring {
+                    while let Some((batch, _)) = batcher.try_form(now) {
+                        dispatch(
+                            batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches,
+                            &mut free_slots, q, &mut exec_rng, &sm, &buckets,
+                        );
+                    }
+                    if let Some(deadline) = batcher.next_deadline() {
+                        q.schedule(deadline, Ev::BatchTick);
+                        armed_tick = Some(deadline.max(now));
+                    }
                 }
             }
             Ev::ExecDone { vgpu: _, batch_idx } => {
@@ -383,17 +467,81 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 // next formation reuses the allocation.
                 batcher.recycle(batch);
             }
+            Ev::ReconfigCheck => {
+                let c = ctrl.as_mut().expect("ReconfigCheck without controller");
+                let tail = arrivals_seen >= cfg.requests;
+                if reconfiguring || tail {
+                    // Keep telemetry rolling, but don't stack a second
+                    // reconfiguration on a live drain or on the workload
+                    // tail (an empty window would read as rate ~ 0).
+                    c.roll_only(now);
+                } else if let Some(plan) = c.tick(now) {
+                    // Commit: stop dispatching, let in-flight batches
+                    // drain, then pay the repartition outage.
+                    reconfiguring = true;
+                    let drain_end =
+                        vgpu_free.iter().copied().max().unwrap_or(now).max(now);
+                    let resume =
+                        drain_end + crate::clock::secs(c.policy().repartition_s);
+                    downtime += resume - now;
+                    q.schedule(resume, Ev::ReconfigApply { to: plan.mig });
+                }
+                if !tail {
+                    let w = c.window();
+                    q.schedule_in(w, Ev::ReconfigCheck);
+                }
+            }
+            Ev::ReconfigApply { to } => {
+                // Fold the old vGPU set's accounting.
+                busy_folded += vgpu_busy.iter().sum::<u128>();
+                cap_ns +=
+                    n_vgpus as u128 * (now.saturating_sub(cap_last_change)) as u128;
+                cap_last_change = now;
+                // Bring up the new partition.
+                mig_now = to;
+                n_vgpus = to.vgpus();
+                sm = ServiceModel::new(spec, to.gpcs_per_vgpu());
+                vgpu_free = vec![now; n_vgpus];
+                vgpu_busy = vec![0; n_vgpus];
+                // Rebuild the batching policy for the new slice count and
+                // carry queued requests over (original enqueue times keep
+                // their deadlines honest).
+                batcher.rebuild(build_policy(cfg.policy, sys, spec, &sm, &buckets, n_vgpus), now);
+                reconfiguring = false;
+                // Dispatch whatever became releasable during the outage
+                // and re-arm the deadline tick.
+                while let Some((batch, _)) = batcher.try_form(now) {
+                    dispatch(
+                        batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches,
+                        &mut free_slots, q, &mut exec_rng, &sm, &buckets,
+                    );
+                }
+                if let Some(deadline) = batcher.next_deadline() {
+                    if armed_tick.is_none_or(|t| deadline < t) {
+                        q.schedule(deadline, Ev::BatchTick);
+                        armed_tick = Some(deadline.max(now));
+                    }
+                }
+            }
         }
         true
     });
 
-    let gpu_util = if horizon > 0 {
-        vgpu_busy.iter().map(|&b| b as f64).sum::<f64>()
-            / (horizon as f64 * n_vgpus as f64)
+    // Close the capacity integral at the horizon (vGPUs × time survives
+    // geometry changes); without reconfiguration this reduces to the old
+    // `n_vgpus * horizon` denominator.
+    cap_ns += n_vgpus as u128 * (horizon.saturating_sub(cap_last_change)) as u128;
+    let busy_total = busy_folded + vgpu_busy.iter().sum::<u128>();
+    let gpu_util = if cap_ns > 0 {
+        (busy_total as f64 / cap_ns as f64).min(1.0)
     } else {
         0.0
-    }
-    .min(1.0);
+    };
+
+    let (reconfigs, reconfig_events) = match &ctrl {
+        Some(c) => (c.events().len() as u64, c.events().to_vec()),
+        None => (0, Vec::new()),
+    };
 
     SimOutcome {
         events,
@@ -406,6 +554,10 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
         pcie_gbps: dpu.as_ref().map(|d| d.pcie_gbps_used(horizon)).unwrap_or(0.0),
         horizon,
         offered_qps: cfg.rate_qps,
+        reconfigs,
+        reconfig_downtime: downtime,
+        reconfig_events,
+        final_mig: mig_now,
         stats,
     }
 }
@@ -501,7 +653,8 @@ mod tests {
     fn dynamic_policy_beats_static_on_tail_latency() {
         // Fig 22's software ablation, in miniature: at moderate load the
         // dynamic policy should cut tail latency vs a naive static batcher.
-        let mut cfg = SimConfig::new(ModelId::ConformerDefault, MigConfig::Small7, PreprocMode::Dpu);
+        let mut cfg =
+            SimConfig::new(ModelId::ConformerDefault, MigConfig::Small7, PreprocMode::Dpu);
         cfg.requests = 4000;
         cfg.rate_qps = 0.7 * cfg.saturating_rate() / 1.25;
         let sys = PrebaConfig::new();
@@ -514,6 +667,78 @@ mod tests {
             dyn_out.p95_ms(),
             static_out.p95_ms()
         );
+    }
+
+    #[test]
+    fn online_reconfig_rescues_a_bad_static_partition() {
+        // A full-GPU deployment offered ~95% of its plateau runs past its
+        // batch-limited sustained capacity and diverges; the online
+        // controller should repartition to 1g.5gb(7x) (higher aggregate
+        // capacity, paper Fig 5) within a few windows and keep the tail
+        // bounded. The static run is identical except reconfig is off.
+        let sys = PrebaConfig::new();
+        let mut cfg =
+            SimConfig::new(ModelId::SwinTransformer, MigConfig::Full1, PreprocMode::Ideal);
+        cfg.requests = 4000;
+        cfg.rate_qps =
+            0.95 * crate::mig::ServiceModel::new(cfg.model.spec(), 7).plateau_qps(0.0);
+        cfg.sla_ms = 50.0;
+        let static_out = run(&cfg, &sys);
+        cfg.reconfig = Some(crate::mig::ReconfigPolicy::default());
+        let online = run(&cfg, &sys);
+        assert!(online.reconfigs >= 1, "controller never repartitioned");
+        assert_eq!(online.final_mig, MigConfig::Small7, "{:?}", online.reconfig_events);
+        assert!(online.reconfig_downtime > 0);
+        // Conservation: every request still completes exactly once.
+        let warmup = (cfg.requests as f64 * cfg.warmup_frac) as u64;
+        assert_eq!(online.stats.completed, cfg.requests as u64 - warmup);
+        assert!(
+            online.p95_ms() < static_out.p95_ms(),
+            "online {} vs static {}",
+            online.p95_ms(),
+            static_out.p95_ms()
+        );
+        assert!(
+            online.stats.sla_violation_frac(cfg.sla_ms)
+                <= static_out.stats.sla_violation_frac(cfg.sla_ms),
+            "online {} vs static {}",
+            online.stats.sla_violation_frac(cfg.sla_ms),
+            static_out.stats.sla_violation_frac(cfg.sla_ms)
+        );
+    }
+
+    #[test]
+    fn reconfig_stays_put_on_well_partitioned_constant_load() {
+        // 1g.5gb(7x) at a comfortable constant load is already the best
+        // partition; hysteresis must keep the controller from thrashing.
+        let sys = PrebaConfig::new();
+        let mut cfg =
+            SimConfig::new(ModelId::SwinTransformer, MigConfig::Small7, PreprocMode::Ideal);
+        cfg.requests = 4000;
+        cfg.rate_qps = 0.6 * cfg.saturating_rate() / 1.25;
+        cfg.reconfig = Some(crate::mig::ReconfigPolicy::default());
+        let out = run(&cfg, &sys);
+        assert_eq!(out.reconfigs, 0, "{:?}", out.reconfig_events);
+        assert_eq!(out.final_mig, MigConfig::Small7);
+        assert_eq!(out.reconfig_downtime, 0);
+    }
+
+    #[test]
+    fn reconfig_runs_deterministic_given_seed() {
+        let sys = PrebaConfig::new();
+        let mut cfg =
+            SimConfig::new(ModelId::SwinTransformer, MigConfig::Full1, PreprocMode::Ideal);
+        cfg.requests = 2000;
+        cfg.rate_qps =
+            0.95 * crate::mig::ServiceModel::new(cfg.model.spec(), 7).plateau_qps(0.0);
+        cfg.reconfig = Some(crate::mig::ReconfigPolicy::default());
+        let a = run(&cfg, &sys);
+        let b = run(&cfg, &sys);
+        assert_eq!(a.p95_ms(), b.p95_ms());
+        assert_eq!(a.horizon, b.horizon);
+        assert_eq!(a.reconfigs, b.reconfigs);
+        assert_eq!(a.reconfig_downtime, b.reconfig_downtime);
+        assert_eq!(a.events, b.events);
     }
 
     #[test]

@@ -71,7 +71,7 @@ thread_local! {
     /// of printing — the parallel `experiment all` runner captures each
     /// experiment's output on its worker thread and prints the blocks in
     /// job order, so stdout is bitwise identical to a serial run.
-    static CAPTURE: RefCell<Option<String>> = RefCell::new(None);
+    static CAPTURE: RefCell<Option<String>> = const { RefCell::new(None) };
 }
 
 /// Start capturing `Reporter` output on this thread.

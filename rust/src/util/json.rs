@@ -96,12 +96,6 @@ impl Json {
 
     // ---- writer ----------------------------------------------------------
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, None, 0);
-        out
-    }
-
     /// Pretty-printed with 2-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
@@ -155,6 +149,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact (no-whitespace) encoding via `Display` — `doc.to_string()`
+/// keeps working through the blanket `ToString`.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        f.write_str(&out)
     }
 }
 
@@ -345,8 +349,10 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
             self.i += 1;
         }
         let text = std::str::from_utf8(&self.b[start..self.i])?;

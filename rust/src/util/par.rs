@@ -22,13 +22,20 @@ thread_local! {
     /// `experiment all` runner) then execute inline instead of spawning a
     /// second full-width pool — otherwise `all` would oversubscribe the
     /// CPU with ~jobs² simulation threads.
-    static IN_POOL: Cell<bool> = Cell::new(false);
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
 }
 
 /// Resolve the worker count: `PREBA_JOBS` if set (and >= 1), otherwise the
 /// number of available cores. The CLI's `--jobs N` sets `PREBA_JOBS`.
 pub fn jobs() -> usize {
-    if let Ok(v) = std::env::var("PREBA_JOBS") {
+    parse_jobs(std::env::var("PREBA_JOBS").ok().as_deref())
+}
+
+/// Pure half of [`jobs`]: interpret an optional `PREBA_JOBS` value. Split
+/// out so tests never have to mutate the process environment (setenv
+/// racing getenv across parallel lib tests is UB on glibc).
+fn parse_jobs(v: Option<&str>) -> usize {
+    if let Some(v) = v {
         if let Ok(n) = v.trim().parse::<usize>() {
             if n >= 1 {
                 return n;
@@ -180,12 +187,11 @@ mod tests {
     }
 
     #[test]
-    fn jobs_env_override() {
-        std::env::set_var("PREBA_JOBS", "3");
-        assert_eq!(jobs(), 3);
-        std::env::set_var("PREBA_JOBS", "not-a-number");
-        assert!(jobs() >= 1);
-        std::env::remove_var("PREBA_JOBS");
-        assert!(jobs() >= 1);
+    fn jobs_value_parsing() {
+        assert_eq!(parse_jobs(Some("3")), 3);
+        assert_eq!(parse_jobs(Some(" 5 ")), 5);
+        assert!(parse_jobs(Some("not-a-number")) >= 1);
+        assert!(parse_jobs(Some("0")) >= 1);
+        assert!(parse_jobs(None) >= 1);
     }
 }

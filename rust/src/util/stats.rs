@@ -58,6 +58,15 @@ impl Summary {
         percentile(&self.samples, q)
     }
 
+    /// Fraction of samples strictly above `x` (SLA-violation accounting).
+    /// Returns 0 on an empty summary.
+    pub fn frac_above(&self, x: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().filter(|&&s| s > x).count() as f64 / self.samples.len() as f64
+    }
+
     /// 95th percentile — the paper's tail-latency metric.
     pub fn p95(&self) -> f64 {
         self.percentile(95.0)

@@ -21,8 +21,10 @@ use super::{sample_librispeech_len, Arrival};
 pub enum RateProfile {
     /// Fixed rate.
     Constant { qps: f64 },
-    /// `base * (1 + amplitude * sin(2π t / period))`.
-    Diurnal { base_qps: f64, amplitude: f64, period_s: f64 },
+    /// `base * (1 + amplitude * sin(2π (t/period + phase)))`. `phase_frac`
+    /// shifts the cycle (0.5 = anti-phase — two tenants peaking in
+    /// opposite halves of the day, the multi-tenant reconfig scenario).
+    Diurnal { base_qps: f64, amplitude: f64, period_s: f64, phase_frac: f64 },
     /// Two-state MMPP: quiet rate / burst rate with exponential dwell
     /// times.
     Bursty {
@@ -38,8 +40,9 @@ impl RateProfile {
     pub fn rate_at(&self, t_s: f64, in_burst: bool) -> f64 {
         match self {
             RateProfile::Constant { qps } => *qps,
-            RateProfile::Diurnal { base_qps, amplitude, period_s } => {
-                base_qps * (1.0 + amplitude * (2.0 * std::f64::consts::PI * t_s / period_s).sin())
+            RateProfile::Diurnal { base_qps, amplitude, period_s, phase_frac } => {
+                let angle = 2.0 * std::f64::consts::PI * (t_s / period_s + phase_frac);
+                base_qps * (1.0 + amplitude * angle.sin())
             }
             RateProfile::Bursty { quiet_qps, burst_qps, .. } => {
                 if in_burst {
@@ -58,6 +61,27 @@ impl RateProfile {
             RateProfile::Constant { qps } => *qps,
             RateProfile::Diurnal { base_qps, amplitude, .. } => base_qps * (1.0 + amplitude.abs()),
             RateProfile::Bursty { quiet_qps, burst_qps, .. } => quiet_qps.max(*burst_qps),
+        }
+    }
+
+    /// Named profile shapes around a base rate (CLI `--profile` and the
+    /// reconfiguration experiments' defaults).
+    pub fn named(kind: &str, base_qps: f64) -> Option<RateProfile> {
+        match kind {
+            "constant" => Some(RateProfile::Constant { qps: base_qps }),
+            "diurnal" => Some(RateProfile::Diurnal {
+                base_qps,
+                amplitude: 0.7,
+                period_s: 30.0,
+                phase_frac: 0.0,
+            }),
+            "bursty" => Some(RateProfile::Bursty {
+                quiet_qps: 0.25 * base_qps,
+                burst_qps: 2.5 * base_qps,
+                mean_quiet_s: 4.0,
+                mean_burst_s: 1.5,
+            }),
+            _ => None,
         }
     }
 
@@ -162,12 +186,22 @@ mod tests {
 
     #[test]
     fn diurnal_rate_oscillates() {
-        let profile = RateProfile::Diurnal { base_qps: 100.0, amplitude: 0.8, period_s: 20.0 };
+        let profile = RateProfile::Diurnal {
+            base_qps: 100.0,
+            amplitude: 0.8,
+            period_s: 20.0,
+            phase_frac: 0.0,
+        };
         let mut g = TraceGen::new(ModelId::MobileNet, profile, Rng::new(2));
         let a = g.take(30_000);
         let rates = windowed_rates(&a, secs(2.0));
         let max = rates.iter().cloned().fold(0.0, f64::max);
-        let min = rates.iter().skip(1).take(rates.len().saturating_sub(2)).cloned().fold(f64::INFINITY, f64::min);
+        let min = rates
+            .iter()
+            .skip(1)
+            .take(rates.len().saturating_sub(2))
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
         assert!(max > 140.0, "max window rate {max}");
         assert!(min < 60.0, "min window rate {min}");
     }
@@ -210,10 +244,51 @@ mod tests {
     }
 
     #[test]
+    fn anti_phase_profiles_peak_in_opposite_halves() {
+        let a = RateProfile::Diurnal {
+            base_qps: 100.0,
+            amplitude: 0.8,
+            period_s: 20.0,
+            phase_frac: 0.0,
+        };
+        let b = RateProfile::Diurnal {
+            base_qps: 100.0,
+            amplitude: 0.8,
+            period_s: 20.0,
+            phase_frac: 0.5,
+        };
+        // Quarter-period: A at peak, B at trough; total constant.
+        assert!(a.rate_at(5.0, false) > 170.0);
+        assert!(b.rate_at(5.0, false) < 30.0);
+        for t in [0.0, 3.0, 7.5, 12.0] {
+            let total = a.rate_at(t, false) + b.rate_at(t, false);
+            assert!((total - 200.0).abs() < 1e-6, "t={t}: {total}");
+        }
+    }
+
+    #[test]
+    fn named_profiles_resolve() {
+        assert!(matches!(
+            RateProfile::named("constant", 10.0),
+            Some(RateProfile::Constant { qps }) if qps == 10.0
+        ));
+        let d = RateProfile::named("diurnal", 100.0).unwrap();
+        assert!((d.mean_rate() - 100.0).abs() < 1e-9);
+        let b = RateProfile::named("bursty", 100.0).unwrap();
+        assert!(b.max_rate() > 2.0 * b.mean_rate());
+        assert!(RateProfile::named("square-wave", 1.0).is_none());
+    }
+
+    #[test]
     fn arrivals_strictly_ordered() {
         for profile in [
             RateProfile::Constant { qps: 50.0 },
-            RateProfile::Diurnal { base_qps: 50.0, amplitude: 0.5, period_s: 10.0 },
+            RateProfile::Diurnal {
+                base_qps: 50.0,
+                amplitude: 0.5,
+                period_s: 10.0,
+                phase_frac: 0.0,
+            },
         ] {
             let mut g = TraceGen::new(ModelId::SqueezeNet, profile, Rng::new(5));
             let a = g.take(2000);

@@ -25,7 +25,8 @@ fn registry_ids_unique_and_resolvable() {
 fn cheap_experiments_produce_data() {
     // The analytic / non-simulation experiments run in milliseconds and
     // must produce non-empty data sections.
-    std::env::set_var("PREBA_RESULTS_DIR", std::env::temp_dir().join("preba_results").to_str().unwrap());
+    let dir = std::env::temp_dir().join("preba_results");
+    std::env::set_var("PREBA_RESULTS_DIR", dir.to_str().unwrap());
     let sys = PrebaConfig::new();
     for id in ["fig5", "fig6", "fig12", "fig13", "fig14", "fig15", "table1"] {
         let f = experiments::by_id(id).unwrap();

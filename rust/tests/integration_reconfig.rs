@@ -1,0 +1,64 @@
+//! Integration: the reconfiguration experiment must be bitwise identical
+//! at any `--jobs` count — every cell (including the reconfig-enabled
+//! multi-tenant runs and their controller decisions) is a pure function
+//! of its seed, and the sweep engine merges in job order.
+
+use std::process::Command;
+
+fn run_reconfig(jobs: &str, out_dir: &std::path::Path) -> Vec<u8> {
+    let _ = std::fs::remove_dir_all(out_dir);
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .env("PREBA_FAST", "1")
+        .args([
+            "experiment",
+            "reconfig",
+            "--jobs",
+            jobs,
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba experiment reconfig --jobs {jobs} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out.stdout
+}
+
+#[test]
+fn experiment_reconfig_identical_at_jobs_1_and_4() {
+    let base = std::env::temp_dir().join("preba_reconfig_determinism");
+    let dir1 = base.join("j1");
+    let dir4 = base.join("j4");
+    let stdout1 = run_reconfig("1", &dir1);
+    let stdout4 = run_reconfig("4", &dir4);
+
+    assert_eq!(
+        String::from_utf8_lossy(&stdout1).replace(dir1.to_str().unwrap(), "<out>"),
+        String::from_utf8_lossy(&stdout4).replace(dir4.to_str().unwrap(), "<out>"),
+        "stdout differs between --jobs 1 and --jobs 4"
+    );
+
+    let json1 = std::fs::read(dir1.join("reconfig.json")).expect("reconfig.json at jobs=1");
+    let json4 = std::fs::read(dir4.join("reconfig.json")).expect("reconfig.json at jobs=4");
+    assert!(!json1.is_empty());
+    assert_eq!(json1, json4, "results JSON differs between --jobs 1 and --jobs 4");
+}
+
+#[test]
+fn reconfig_cli_runs_and_reports_a_timeline() {
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args(["reconfig", "--requests", "4000", "--profile", "diurnal"])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba reconfig failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("online"), "{text}");
+    assert!(text.contains("reallocations"), "{text}");
+}

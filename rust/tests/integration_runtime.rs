@@ -107,8 +107,10 @@ fn batch_padding_roundtrip() {
     let Some(dir) = artifacts_dir() else { return };
     let mut engine = Engine::new(&dir).unwrap();
     let mut rng = Rng::new(46);
-    let t1 = ops::image_pipeline(&workload::synth_image_coeffs(96, 96, 3, &mut rng), 96, 96, 3, 72, 64);
-    let t2 = ops::image_pipeline(&workload::synth_image_coeffs(96, 96, 3, &mut rng), 96, 96, 3, 72, 64);
+    let t1 =
+        ops::image_pipeline(&workload::synth_image_coeffs(96, 96, 3, &mut rng), 96, 96, 3, 72, 64);
+    let t2 =
+        ops::image_pipeline(&workload::synth_image_coeffs(96, 96, 3, &mut rng), 96, 96, 3, 72, 64);
     let single1 = engine.execute_f32("model/squeezenet/b1", &[t1.clone()]).unwrap().remove(0);
     let mut flat = Vec::new();
     flat.extend_from_slice(&t1);

@@ -6,7 +6,12 @@ use preba::mig::MigConfig;
 use preba::models::ModelId;
 use preba::server::{sim_driver, PolicyKind, PreprocMode, SimConfig};
 
-fn saturated(model: ModelId, mig: MigConfig, preproc: PreprocMode, policy: PolicyKind) -> sim_driver::SimOutcome {
+fn saturated(
+    model: ModelId,
+    mig: MigConfig,
+    preproc: PreprocMode,
+    policy: PolicyKind,
+) -> sim_driver::SimOutcome {
     let mut cfg = SimConfig::new(model, mig, preproc);
     cfg.policy = policy;
     cfg.requests = 6000;
@@ -33,7 +38,8 @@ fn preba_within_10pct_of_ideal_for_most_models() {
     // Paper §6.1: >= 91.6% of Ideal for 5 of 6 models.
     let mut close = 0;
     for model in ModelId::ALL {
-        let ideal = saturated(model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
+        let ideal =
+            saturated(model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
         let dpu = saturated(model, MigConfig::Small7, PreprocMode::Dpu, PolicyKind::Dynamic).qps();
         if dpu >= 0.85 * ideal {
             close += 1;
@@ -46,8 +52,10 @@ fn preba_within_10pct_of_ideal_for_most_models() {
 fn small_slices_beat_full_gpu_on_aggregate_throughput() {
     // Paper Fig 5: 1g.5gb(7x) aggregate > 7g.40gb(1x), preproc disabled.
     for model in [ModelId::MobileNet, ModelId::CitriNet] {
-        let small = saturated(model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
-        let full = saturated(model, MigConfig::Full1, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
+        let small =
+            saturated(model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
+        let full =
+            saturated(model, MigConfig::Full1, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
         assert!(small > full, "{model}: small {small} !> full {full}");
     }
 }
@@ -78,7 +86,8 @@ fn tail_latency_reduction_vs_baseline_at_moderate_load() {
 fn medium_partition_lands_between_small_and_full() {
     let model = ModelId::MobileNet;
     let small = saturated(model, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
-    let medium = saturated(model, MigConfig::Medium3, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
+    let medium =
+        saturated(model, MigConfig::Medium3, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
     let full = saturated(model, MigConfig::Full1, PreprocMode::Ideal, PolicyKind::Dynamic).qps();
     assert!(medium < small, "medium {medium} !< small {small}");
     assert!(medium > full * 0.8, "medium {medium} too far below full {full}");
@@ -86,13 +95,19 @@ fn medium_partition_lands_between_small_and_full() {
 
 #[test]
 fn gpu_utilization_high_when_saturated_ideal() {
-    let out = saturated(ModelId::SwinTransformer, MigConfig::Small7, PreprocMode::Ideal, PolicyKind::Dynamic);
+    let out = saturated(
+        ModelId::SwinTransformer,
+        MigConfig::Small7,
+        PreprocMode::Ideal,
+        PolicyKind::Dynamic,
+    );
     assert!(out.gpu_util > 0.7, "gpu util {}", out.gpu_util);
 }
 
 #[test]
 fn dpu_pcie_usage_reported_and_sane() {
-    let out = saturated(ModelId::MobileNet, MigConfig::Small7, PreprocMode::Dpu, PolicyKind::Dynamic);
+    let out =
+        saturated(ModelId::MobileNet, MigConfig::Small7, PreprocMode::Dpu, PolicyKind::Dynamic);
     // Paper §4.2: MobileNet's CPU<->DPU traffic ~6 GB/s << 32 GB/s.
     assert!(out.pcie_gbps > 0.5 && out.pcie_gbps < 32.0, "pcie {}", out.pcie_gbps);
     assert!(out.dpu_util.unwrap() > 0.05);

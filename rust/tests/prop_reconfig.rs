@@ -1,0 +1,118 @@
+//! Property tests for the online reconfiguration controller: whatever the
+//! traffic does, the controller must never thrash (no two committed
+//! reconfigurations within the cooldown window), must stay put under
+//! steady symmetric load, and must always emit well-formed plans.
+
+use preba::clock::{secs, to_secs, Nanos};
+use preba::mig::{MigConfig, Plan, ReconfigController, ReconfigPolicy, TenantSpec};
+use preba::models::ModelId;
+use preba::util::Rng;
+
+fn tenants(n: usize) -> Vec<TenantSpec> {
+    (0..n).map(|_| TenantSpec::new(ModelId::SwinTransformer, 25.0)).collect()
+}
+
+fn initial(n: usize) -> Plan {
+    // Fair split of the 7 slices.
+    let alloc: Vec<usize> = (0..n).map(|i| 7 / n + usize::from(i < 7 % n)).collect();
+    Plan { mig: MigConfig::Small7, alloc }
+}
+
+/// Drive a controller with per-window arrival counts drawn from `rates`
+/// (queries/s per tenant per window) and return the committed events'
+/// timestamps.
+fn drive(ctrl: &mut ReconfigController, rates: &[Vec<f64>]) -> Vec<Nanos> {
+    let window = ctrl.window();
+    let mut out = Vec::new();
+    let mut now: Nanos = 0;
+    for per_tenant in rates {
+        now += window;
+        for (t, &r) in per_tenant.iter().enumerate() {
+            let arrivals = (r * to_secs(window)) as usize;
+            for _ in 0..arrivals {
+                ctrl.observe_arrival(t);
+            }
+        }
+        if ctrl.tick(now).is_some() {
+            out.push(now);
+        }
+    }
+    out
+}
+
+#[test]
+fn hysteresis_never_thrashes_under_random_rates() {
+    // 30 random traffic tapes: whatever happens, two reconfigurations are
+    // never closer than the cooldown.
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(0x4E5E ^ seed);
+        let n = 2 + (rng.f64() * 2.0) as usize; // 2..=3 tenants
+        let policy = ReconfigPolicy::default();
+        let cooldown = secs(policy.cooldown_s);
+        let mut ctrl = ReconfigController::new(tenants(n), initial(n), policy);
+        let tape: Vec<Vec<f64>> = (0..80)
+            .map(|_| (0..n).map(|_| rng.f64() * 2200.0).collect())
+            .collect();
+        let events = drive(&mut ctrl, &tape);
+        for pair in events.windows(2) {
+            assert!(
+                pair[1] - pair[0] >= cooldown,
+                "seed {seed}: reconfigs {} ns apart (cooldown {})",
+                pair[1] - pair[0],
+                cooldown
+            );
+        }
+        // The controller's own event log agrees.
+        assert_eq!(ctrl.events().len(), events.len());
+    }
+}
+
+#[test]
+fn steady_symmetric_load_commits_nothing() {
+    let policy = ReconfigPolicy::default();
+    let mut ctrl = ReconfigController::new(tenants(2), initial(2), policy);
+    let tape: Vec<Vec<f64>> = (0..60).map(|_| vec![400.0, 400.0]).collect();
+    let events = drive(&mut ctrl, &tape);
+    assert!(events.is_empty(), "thrash on steady load: {events:?}");
+}
+
+#[test]
+fn plans_are_always_well_formed() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(0xF00D ^ seed);
+        let n = 2 + (rng.f64() * 2.0) as usize;
+        let mut ctrl =
+            ReconfigController::new(tenants(n), initial(n), ReconfigPolicy::default());
+        let tape: Vec<Vec<f64>> = (0..60)
+            .map(|_| (0..n).map(|_| rng.f64() * 2500.0).collect())
+            .collect();
+        drive(&mut ctrl, &tape);
+        for ev in ctrl.events() {
+            assert_eq!(ev.plan.alloc.len(), n, "seed {seed}");
+            assert!(ev.plan.alloc.iter().all(|&a| a >= 1), "seed {seed}: {:?}", ev.plan);
+            assert_eq!(
+                ev.plan.slices(),
+                ev.plan.mig.vgpus(),
+                "seed {seed}: plan must hand out every slice"
+            );
+            assert!(ev.predicted_gain_ms > 0.0, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn controller_is_deterministic() {
+    let mk_events = || {
+        let mut rng = Rng::new(0xD0);
+        let mut ctrl =
+            ReconfigController::new(tenants(2), initial(2), ReconfigPolicy::default());
+        let tape: Vec<Vec<f64>> =
+            (0..50).map(|_| vec![rng.f64() * 2000.0, rng.f64() * 2000.0]).collect();
+        drive(&mut ctrl, &tape);
+        ctrl.events()
+            .iter()
+            .map(|e| (e.at, e.plan.clone()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(mk_events(), mk_events());
+}
