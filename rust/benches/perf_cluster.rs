@@ -1,0 +1,65 @@
+//! §Perf cluster-DES benchmark: events/second of the multi-GPU
+//! simulation (`server::cluster`) so fleet-scale serving is tracked from
+//! day one, alongside `perf_hotpath`'s single-GPU number.
+//!
+//! `cargo bench --bench perf_cluster`. The measured configuration is the
+//! `cluster` experiment's 4-GPU diurnal fleet on best-fit-decreasing
+//! packing with JSQ routing and the online cross-GPU controller enabled —
+//! the heaviest code path (routing + per-GPU preproc + rebalancing).
+
+use preba::config::PrebaConfig;
+use preba::experiments;
+use preba::mig::PackStrategy;
+use preba::server::cluster::{self, ClusterConfig};
+use preba::util::bench::time_fn;
+use preba::util::json::Json;
+
+fn main() {
+    experiments::set_fast(true);
+    let sys = PrebaConfig::new();
+    println!("== cluster-DES benchmark (4 GPUs, diurnal fleet, BFD + JSQ + reconfig) ==");
+
+    let mk_cfg = || {
+        let mut cfg = ClusterConfig::new(
+            4,
+            PackStrategy::BestFit,
+            experiments::cluster::diurnal_fleet(4, 4.0),
+        );
+        cfg.seed = 0xBE7C;
+        cfg.reconfig = Some(experiments::cluster::policy(&sys));
+        cfg
+    };
+    let probe = cluster::run(&mk_cfg(), &sys).expect("valid cluster config");
+    let events_per_run = probe.events;
+    let cfg = mk_cfg();
+    let requests: usize = cfg.tenants.iter().map(|t| t.requests).sum();
+    println!(
+        "{} tenants, {} requests, {} DES events/run",
+        cfg.tenants.len(),
+        requests,
+        events_per_run
+    );
+
+    let stats = time_fn("cluster::run 4-GPU diurnal fleet", 32, || {
+        std::hint::black_box(cluster::run(&mk_cfg(), &sys).expect("valid cluster config"));
+    });
+    stats.print();
+    let events_per_sec = events_per_run as f64 / stats.mean_ns * 1e9;
+    println!("  -> {:.2} M cluster-DES events/s (mean)", events_per_sec / 1e6);
+
+    // Machine-readable output for the CI perf artifact
+    // (PREBA_BENCH_JSON=<path>); gated once
+    // benches/perf_baseline.json's cluster_events_per_sec is non-null.
+    if let Ok(path) = std::env::var("PREBA_BENCH_JSON") {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("perf_cluster")),
+            ("events_per_run", Json::num(events_per_run as f64)),
+            ("events_per_sec", Json::num(events_per_sec)),
+            ("sim_mean_ns", Json::num(stats.mean_ns)),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty()).expect("write PREBA_BENCH_JSON");
+        println!("[bench json written {path}]");
+    }
+
+    println!("\n(record before/after numbers in EXPERIMENTS.md §Perf)");
+}

@@ -30,21 +30,21 @@ fn run_suite(sys: &PrebaConfig) -> String {
 }
 
 fn main() {
-    std::env::set_var("PREBA_FAST", "1");
+    experiments::set_fast(true);
     let tmp = std::env::temp_dir().join("preba_perf_sweep");
-    std::env::set_var("PREBA_RESULTS_DIR", tmp.to_str().unwrap());
+    preba::util::bench::set_results_dir(tmp.to_str().unwrap());
     let sys = PrebaConfig::new();
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("== sweep-engine wall-clock ({} cores available) ==", cores);
 
-    std::env::set_var("PREBA_JOBS", "1");
+    preba::util::par::set_jobs(1);
     let t0 = Instant::now();
     let serial_text = run_suite(&sys);
     let serial = t0.elapsed();
     println!("jobs=1      : {:>8.2} s", serial.as_secs_f64());
 
-    std::env::set_var("PREBA_JOBS", cores.to_string());
+    preba::util::par::set_jobs(cores);
     let t0 = Instant::now();
     let parallel_text = run_suite(&sys);
     let parallel = t0.elapsed();

@@ -2,17 +2,23 @@
 //! AIaaS operator's question — which MIG partition + batching policy
 //! sustains a target workload within an SLA, and at what cost?
 //!
-//! Sweeps the three paper partitions × both batching policies for a
-//! given model and SLA, reporting SLA-bounded throughput, energy
-//! efficiency, and TCO — the paper's §6 metrics as a planning tool.
+//! Two levels:
+//! 1. **One GPU** — sweeps the three paper partitions × both batching
+//!    policies for a given model and SLA, reporting SLA-bounded
+//!    throughput, energy efficiency, and TCO (the paper's §6 metrics).
+//! 2. **A cluster** — packs the diurnal tenant fleet onto N A100s
+//!    first-fit vs best-fit-decreasing and runs the multi-GPU DES
+//!    (`server::cluster`), so the packing decision is priced in stranded
+//!    GPCs and fleet tail latency, not just an analytic count.
 //!
-//! Run: `cargo run --release --example capacity_planning [-- model sla_ms]`
+//! Run: `cargo run --release --example capacity_planning [-- model sla_ms n_gpus]`
 
 use preba::config::PrebaConfig;
 use preba::experiments::support;
 use preba::metrics::{PowerModel, TcoModel};
-use preba::mig::MigConfig;
+use preba::mig::{MigConfig, PackStrategy};
 use preba::models::ModelId;
+use preba::server::cluster::{self, ClusterConfig};
 use preba::server::{PolicyKind, PreprocMode};
 use preba::util::table::{num, Table};
 
@@ -23,6 +29,7 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| ModelId::parse(s))
         .unwrap_or(ModelId::ConformerDefault);
     let sla_ms: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100.0);
+    let n_gpus: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
     let sys = PrebaConfig::new();
     let pm = PowerModel::new(&sys.power);
     let tco = TcoModel::new(&sys.tco);
@@ -59,5 +66,29 @@ fn main() -> anyhow::Result<()> {
     t.print();
     let (qps, label) = best.unwrap();
     println!("\nrecommended: {label} ({qps:.0} QPS within SLA)");
+
+    // ---- Cluster level: how should the fleet be packed? ----
+    println!(
+        "\ncluster plan: diurnal tenant fleet on {n_gpus} A100s, first-fit vs \
+         best-fit-decreasing"
+    );
+    let mut t = Table::new(&[
+        "packing", "admitted GPCs", "stranded %", "worst p95 ms", "worst p99 ms", "viol %",
+    ]);
+    for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
+        let tenants = preba::experiments::cluster::diurnal_fleet(n_gpus, 6.0);
+        let cfg = ClusterConfig::new(n_gpus, strategy, tenants);
+        let out = cluster::run(&cfg, &sys)?;
+        t.row(&[
+            strategy.label().to_string(),
+            out.packing.admitted_gpcs().to_string(),
+            num(out.packing.fragmentation() * 100.0),
+            num(out.worst_p95_ms()),
+            num(out.worst_p99_ms()),
+            num(out.max_violation_frac(&cfg.tenants) * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\n(best-fit-decreasing should admit more capacity with fewer stranded GPCs)");
     Ok(())
 }

@@ -167,6 +167,29 @@ impl Default for DpuConfig {
     }
 }
 
+/// Cluster-serving defaults (`preba cluster`, `server::cluster`).
+#[derive(Debug, Clone)]
+pub struct ClusterDefaults {
+    /// GPUs in the inventory the CLI simulates by default.
+    pub gpus: usize,
+    /// Default simulated horizon per run, seconds (per-tenant request
+    /// budgets are sized as rate × horizon).
+    pub horizon_s: f64,
+    /// Cross-GPU tenant-migration outage fed into
+    /// [`crate::mig::ReconfigPolicy::migration_s`], seconds. ≫ the
+    /// in-place repartition outage: a migration ships model weights and
+    /// restarts the server on a GPU the tenant was not resident on.
+    pub migration_s: f64,
+    /// In-place repartition outage, seconds.
+    pub repartition_s: f64,
+}
+
+impl Default for ClusterDefaults {
+    fn default() -> Self {
+        ClusterDefaults { gpus: 4, horizon_s: 10.0, migration_s: 0.3, repartition_s: 0.1 }
+    }
+}
+
 /// Workload-generation configuration (paper §5 "Input query modeling").
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
@@ -192,6 +215,7 @@ pub struct PrebaConfig {
     pub tco: TcoConfig,
     pub batching: BatchingConfig,
     pub dpu: DpuConfig,
+    pub cluster: ClusterDefaults,
     pub workload: WorkloadConfig,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
@@ -251,6 +275,12 @@ impl PrebaConfig {
         d.audio_norm_cus = doc.i64_or("dpu.audio_norm_cus", d.audio_norm_cus as i64) as usize;
         d.split_audio_cu = doc.bool_or("dpu.split_audio_cu", d.split_audio_cu);
 
+        let c = &mut self.cluster;
+        c.gpus = doc.i64_or("cluster.gpus", c.gpus as i64) as usize;
+        c.horizon_s = doc.f64_or("cluster.horizon_s", c.horizon_s);
+        c.migration_s = doc.f64_or("cluster.migration_s", c.migration_s);
+        c.repartition_s = doc.f64_or("cluster.repartition_s", c.repartition_s);
+
         let w = &mut self.workload;
         w.seed = doc.i64_or("workload.seed", w.seed as i64) as u64;
         w.requests = doc.i64_or("workload.requests", w.requests as i64) as usize;
@@ -274,6 +304,12 @@ impl PrebaConfig {
         anyhow::ensure!(self.batching.bucket_window_s > 0.0, "bucket_window_s must be positive");
         anyhow::ensure!(self.workload.warmup_frac < 0.9, "warmup_frac too large");
         anyhow::ensure!(self.dpu.image_cus >= 1, "need at least one image CU");
+        anyhow::ensure!(self.cluster.gpus >= 1, "cluster needs at least one GPU");
+        anyhow::ensure!(self.cluster.horizon_s > 0.0, "cluster horizon must be positive");
+        anyhow::ensure!(
+            self.cluster.migration_s >= self.cluster.repartition_s,
+            "migration must cost at least a repartition"
+        );
         Ok(())
     }
 }

@@ -308,7 +308,7 @@ mod tests {
 
     #[test]
     fn merging_helps_tail_latency_at_low_load() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run_merge(&PrebaConfig::new());
         let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
         // At 15% load, for each audio model: merge=true p95 <= merge=false.
@@ -338,7 +338,7 @@ mod tests {
 
     #[test]
     fn bursty_traffic_widens_dynamic_advantage() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run_traffic(&PrebaConfig::new());
         let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
         let p95 = |traffic: &str, policy: &str| -> f64 {

@@ -1,0 +1,362 @@
+//! Cluster-scale serving: packing quality, routing, and cross-GPU
+//! reconfiguration, measured in simulated latency.
+//!
+//! `mig::placement` shows analytically that best-fit-decreasing strands
+//! fewer GPCs than first-fit; this experiment closes the loop by driving
+//! the packed inventory with the cluster DES (`server::cluster`) so the
+//! stranded capacity shows up where it hurts — the fleet's p99 and
+//! SLA-violation fraction (ParvaGPU, arXiv:2409.14447). Three sections:
+//!
+//! 1. **FF vs BFD at 2/4/8 GPUs** under diurnal multi-tenant load. The
+//!    ask list arrives small-profile-first (the adversarial order for
+//!    first-fit): FF strands GPCs and rejects one hot tenant's second
+//!    4g.20gb replica, overloading it; BFD admits everything.
+//! 2. **Routing**: join-shortest-queue vs round-robin for a tenant whose
+//!    slices are split asymmetrically (2/5) across GPUs.
+//! 3. **Cross-GPU reconfiguration**: two anti-phase diurnal tenants each
+//!    packed onto their own GPU. Capacity can only follow demand by
+//!    crossing GPUs — the controller's first move is a migration (paying
+//!    `migration_s`), follow-ups on the same GPU are in-place.
+
+use crate::config::PrebaConfig;
+use crate::mig::{PackStrategy, ReconfigPolicy, ServiceModel, Slice};
+use crate::models::ModelId;
+use crate::server::cluster::{self, ClusterConfig, ClusterOutcome, ClusterTenant, Routing};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+use crate::workload::RateProfile;
+
+use super::support;
+
+/// Per-tenant p95 SLA for violation accounting, ms. Sized so a
+/// well-packed tenant (BFD) sits inside it with headroom while a tenant
+/// running past its admitted capacity (FF's rejected replica) blows
+/// through it.
+const SLA_MS: f64 = 40.0;
+
+fn swin_plateau(gpcs: usize) -> f64 {
+    ServiceModel::new(ModelId::SwinTransformer.spec(), gpcs).plateau_qps(0.0)
+}
+
+/// Controller tuned for the sections' seconds-scale diurnal periods —
+/// the ONE cluster-controller tuning, shared by the `preba cluster` CLI
+/// and the `perf_cluster` bench so they measure the configuration this
+/// experiment ships.
+pub fn policy(sys: &PrebaConfig) -> ReconfigPolicy {
+    ReconfigPolicy {
+        window_s: 0.5,
+        ewma_alpha: 0.7,
+        cooldown_s: 1.0,
+        min_gain: 0.10,
+        repartition_s: sys.cluster.repartition_s,
+        migration_s: sys.cluster.migration_s,
+        target_util: 0.85,
+    }
+}
+
+/// The diurnal multi-tenant fleet: per 2 GPUs, three Swin tenants asking
+/// 3×1g.5gb, 1×3g.20gb and 2×4g.20gb (14 GPCs — exactly two A100s), each
+/// offered 55% of its asked capacity with a ±35% staggered diurnal swing.
+/// Ask order is small-profile-first per block — the order that tricks
+/// first-fit into stranding GPCs while best-fit-decreasing packs the
+/// inventory perfectly.
+pub fn diurnal_fleet(n_gpus: usize, horizon_s: f64) -> Vec<ClusterTenant> {
+    let k = (n_gpus / 2).max(1);
+    let mut out = Vec::new();
+    for b in 0..k {
+        let mut mk = |slice: Slice, count: usize, role: usize| {
+            let rate = 0.55 * count as f64 * swin_plateau(slice.gpcs);
+            let mut t = ClusterTenant::new(ModelId::SwinTransformer, slice, count, rate);
+            t.sla_ms = SLA_MS;
+            t.profile = Some(RateProfile::Diurnal {
+                base_qps: rate,
+                amplitude: 0.35,
+                period_s: 4.0,
+                phase_frac: (b * 3 + role) as f64 / (3 * k) as f64,
+            });
+            t.requests = (rate * horizon_s).ceil() as usize;
+            out.push(t);
+        };
+        mk(Slice::new(1, 5), 3, 0);
+        mk(Slice::new(3, 20), 1, 1);
+        mk(Slice::new(4, 20), 2, 2);
+    }
+    out
+}
+
+/// Routing study tenants: a light tenant occupies 5 GPCs of GPU0 so the
+/// hot tenant's 7 slices split 2/5 across the two GPUs.
+pub fn asym_routing_tenants(horizon_s: f64) -> Vec<ClusterTenant> {
+    let u = swin_plateau(1);
+    let mut light = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), 5, 1.5 * u);
+    light.sla_ms = SLA_MS;
+    light.requests = (light.rate_qps * horizon_s).ceil() as usize;
+    let mut hot = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), 7, 5.25 * u);
+    hot.sla_ms = SLA_MS;
+    hot.requests = (hot.rate_qps * horizon_s).ceil() as usize;
+    vec![light, hot]
+}
+
+/// Cross-GPU reconfiguration tenants: two 7×1g.5gb tenants, each filling
+/// one GPU, with anti-phase diurnal demand whose peaks overrun a single
+/// GPU's capacity.
+pub fn antiphase_pair(horizon_s: f64) -> Vec<ClusterTenant> {
+    let base = 5.6 * 0.9 * swin_plateau(1);
+    let mk = |phase_frac: f64| {
+        let mut t = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), 7, base);
+        t.sla_ms = 25.0;
+        t.profile = Some(RateProfile::Diurnal {
+            base_qps: base,
+            amplitude: 0.577,
+            period_s: 5.0,
+            phase_frac,
+        });
+        t.requests = (base * horizon_s).ceil() as usize;
+        t
+    };
+    vec![mk(0.0), mk(0.5)]
+}
+
+fn run_cell(cfg: &ClusterConfig, sys: &PrebaConfig) -> ClusterOutcome {
+    cluster::run(cfg, sys).expect("valid cluster config")
+}
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Cluster: multi-GPU packing, routing and cross-GPU reconfig");
+    // Fast mode shortens the simulated horizon, not the fleet.
+    let horizon_s = if super::fast() { 10.0 } else { 20.0 };
+
+    // ---- Section 1: FF vs BFD packing under diurnal load. ----
+    rep.section("first-fit vs best-fit-decreasing, diurnal fleet, 2/4/8 GPUs");
+    let grid = support::cross2(&[2usize, 4, 8], &[PackStrategy::FirstFit, PackStrategy::BestFit]);
+    // One config per cell, shared by the sweep and the reporting loop so
+    // outcomes are always scored against the tenants that produced them.
+    let cfgs: Vec<ClusterConfig> = grid
+        .iter()
+        .map(|&(n_gpus, strategy)| {
+            let mut cfg = ClusterConfig::new(n_gpus, strategy, diurnal_fleet(n_gpus, horizon_s));
+            cfg.seed = 0xC1A0;
+            cfg
+        })
+        .collect();
+    let outs = super::sweep(&cfgs, |cfg| run_cell(cfg, sys));
+    let mut t = Table::new(&[
+        "GPUs", "packing", "admitted", "asked", "stranded %", "worst p95 ms", "worst p99 ms",
+        "viol %", "dropped",
+    ]);
+    let mut rows = Vec::new();
+    for ((&(n_gpus, strategy), cfg), out) in grid.iter().zip(cfgs.iter()).zip(outs.iter()) {
+        let viol = out.max_violation_frac(&cfg.tenants);
+        let dropped: u64 = out.dropped.iter().sum();
+        t.row(&[
+            n_gpus.to_string(),
+            strategy.label().to_string(),
+            out.packing.admitted_gpcs().to_string(),
+            out.packing.asked_gpcs().to_string(),
+            num(out.packing.fragmentation() * 100.0),
+            num(out.worst_p95_ms()),
+            num(out.worst_p99_ms()),
+            num(viol * 100.0),
+            dropped.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("gpus", Json::num(n_gpus as f64)),
+            ("strategy", Json::str(strategy.label())),
+            ("admitted_gpcs", Json::num(out.packing.admitted_gpcs() as f64)),
+            ("asked_gpcs", Json::num(out.packing.asked_gpcs() as f64)),
+            ("stranded_gpcs", Json::num(out.packing.stranded_gpcs() as f64)),
+            ("stranded_frac", Json::num(out.packing.fragmentation())),
+            ("worst_p95_ms", Json::num(out.worst_p95_ms())),
+            ("worst_p99_ms", Json::num(out.worst_p99_ms())),
+            ("max_violation_frac", Json::num(viol)),
+            ("dropped", Json::num(dropped as f64)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("packing", Json::Arr(rows));
+
+    // ---- Section 2: routing policy. ----
+    rep.section("join-shortest-queue vs round-robin, hot tenant split 2/5 across GPUs");
+    let routings = [Routing::ShortestQueue, Routing::RoundRobin];
+    let cfgs: Vec<ClusterConfig> = routings
+        .iter()
+        .map(|&routing| {
+            let mut cfg = ClusterConfig::new(
+                2,
+                PackStrategy::FirstFit,
+                asym_routing_tenants(horizon_s * 0.5),
+            );
+            cfg.routing = routing;
+            cfg.seed = 0xC1A1;
+            cfg
+        })
+        .collect();
+    let outs = super::sweep(&cfgs, |cfg| run_cell(cfg, sys));
+    let mut t = Table::new(&["routing", "worst p95 ms", "worst p99 ms", "viol %"]);
+    let mut rows = Vec::new();
+    for ((routing, cfg), out) in routings.iter().zip(cfgs.iter()).zip(outs.iter()) {
+        let viol = out.max_violation_frac(&cfg.tenants);
+        t.row(&[
+            routing.label().to_string(),
+            num(out.worst_p95_ms()),
+            num(out.worst_p99_ms()),
+            num(viol * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("routing", Json::str(routing.label())),
+            ("worst_p95_ms", Json::num(out.worst_p95_ms())),
+            ("worst_p99_ms", Json::num(out.worst_p99_ms())),
+            ("max_violation_frac", Json::num(viol)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("routing", Json::Arr(rows));
+
+    // ---- Section 3: cross-GPU reconfiguration. ----
+    rep.section("anti-phase tenants on separate GPUs: static packing vs online rebalancing");
+    let modes = [false, true];
+    let cfgs: Vec<ClusterConfig> = modes
+        .iter()
+        .map(|&online| {
+            let mut cfg =
+                ClusterConfig::new(2, PackStrategy::BestFit, antiphase_pair(horizon_s * 1.2));
+            cfg.seed = 0xC1A2;
+            cfg.reconfig = online.then(|| policy(sys));
+            cfg
+        })
+        .collect();
+    let outs = super::sweep(&cfgs, |cfg| run_cell(cfg, sys));
+    let mut t = Table::new(&[
+        "mode", "worst p95 ms", "viol %", "rebalances", "migrations", "outage ms",
+    ]);
+    let mut rows = Vec::new();
+    for ((&online, cfg), out) in modes.iter().zip(cfgs.iter()).zip(outs.iter()) {
+        let viol = out.max_violation_frac(&cfg.tenants);
+        let mode = if online { "online" } else { "static" };
+        t.row(&[
+            mode.to_string(),
+            num(out.worst_p95_ms()),
+            num(viol * 100.0),
+            out.reconfigs.to_string(),
+            out.migrations.to_string(),
+            num(out.reconfig_downtime as f64 * 1e-6),
+        ]);
+        rows.push(Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("worst_p95_ms", Json::num(out.worst_p95_ms())),
+            ("max_violation_frac", Json::num(viol)),
+            ("reconfigs", Json::num(out.reconfigs as f64)),
+            ("migrations", Json::num(out.migrations as f64)),
+            ("outage_ms", Json::num(out.reconfig_downtime as f64 * 1e-6)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    if let Some(online) = outs.get(1) {
+        for ev in &online.reconfig_events {
+            rep.row(&format!(
+                "  t={:.2}s -> {} moves ({} migration) (predicted gain {:.1} ms)",
+                crate::clock::to_secs(ev.at),
+                ev.moves.len(),
+                ev.migrations(),
+                ev.predicted_gain_ms
+            ));
+        }
+    }
+    rep.data("reconfig", Json::Arr(rows));
+    rep.finish("cluster")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(r: &Json, key: &str) -> f64 {
+        r.get(key).unwrap().as_f64().unwrap()
+    }
+
+    fn packing_row<'a>(rows: &'a [Json], gpus: f64, strategy: &str) -> &'a Json {
+        rows.iter()
+            .find(|r| {
+                f(r, "gpus") == gpus
+                    && r.get("strategy").unwrap().as_str().unwrap().starts_with(strategy)
+            })
+            .unwrap()
+    }
+
+    /// One test, one `run()` — the sweep is heavy, so every assertion
+    /// (packing, routing, reconfig sections) shares a single execution.
+    #[test]
+    fn bfd_beats_ff_at_fleet_scale_and_rebalancing_crosses_gpus() {
+        crate::experiments::set_fast(true);
+        let doc = run(&PrebaConfig::new());
+        let data = doc.get("data").unwrap();
+
+        // Packing: at 4 and 8 GPUs, BFD admits more capacity, strands
+        // fewer GPCs, and that shows up in the fleet tail.
+        let rows = data.get("packing").unwrap().as_arr().unwrap();
+        for gpus in [4.0, 8.0] {
+            let ff = packing_row(rows, gpus, "first-fit");
+            let bf = packing_row(rows, gpus, "best-fit");
+            assert!(
+                f(bf, "stranded_gpcs") < f(ff, "stranded_gpcs"),
+                "gpus={gpus}: bfd stranded {} vs ff {}",
+                f(bf, "stranded_gpcs"),
+                f(ff, "stranded_gpcs")
+            );
+            assert!(f(bf, "admitted_gpcs") > f(ff, "admitted_gpcs"), "gpus={gpus}");
+            assert!(
+                f(bf, "worst_p99_ms") < f(ff, "worst_p99_ms"),
+                "gpus={gpus}: bfd p99 {} vs ff {}",
+                f(bf, "worst_p99_ms"),
+                f(ff, "worst_p99_ms")
+            );
+            assert!(
+                f(bf, "max_violation_frac") < f(ff, "max_violation_frac"),
+                "gpus={gpus}"
+            );
+        }
+
+        // Routing: JSQ keeps the asymmetric split balanced; RR overloads
+        // the small group.
+        let rows = data.get("routing").unwrap().as_arr().unwrap();
+        let get = |label: &str, key: &str| -> f64 {
+            f(
+                rows.iter()
+                    .find(|r| r.get("routing").unwrap().as_str().unwrap().starts_with(label))
+                    .unwrap(),
+                key,
+            )
+        };
+        assert!(
+            get("join", "worst_p95_ms") < 0.7 * get("round", "worst_p95_ms"),
+            "jsq {} vs rr {}",
+            get("join", "worst_p95_ms"),
+            get("round", "worst_p95_ms")
+        );
+
+        // Cross-GPU reconfig: the online controller migrates at least
+        // once (capacity crosses GPUs) and beats the static packing.
+        let rows = data.get("reconfig").unwrap().as_arr().unwrap();
+        let row = |mode: &str| {
+            rows.iter().find(|r| r.get("mode").unwrap().as_str() == Some(mode)).unwrap()
+        };
+        assert!(f(row("online"), "reconfigs") >= 2.0);
+        assert!(f(row("online"), "migrations") >= 1.0, "never crossed a GPU");
+        assert!(
+            f(row("online"), "worst_p95_ms") < f(row("static"), "worst_p95_ms"),
+            "online {} vs static {}",
+            f(row("online"), "worst_p95_ms"),
+            f(row("static"), "worst_p95_ms")
+        );
+        assert!(
+            f(row("online"), "max_violation_frac") < f(row("static"), "max_violation_frac")
+        );
+    }
+}

@@ -87,7 +87,7 @@ mod tests {
 
     #[test]
     fn small_slices_spend_less_time_batching() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run(&PrebaConfig::new());
         let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
         // For MobileNet, batching time on 1g(7x) must be below 7g(1x).

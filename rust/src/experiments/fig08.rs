@@ -79,7 +79,7 @@ mod tests {
 
     #[test]
     fn citrinet_needs_hundreds_of_cores_and_throughput_collapses() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run(&PrebaConfig::new());
         let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
         let citrinet = rows

@@ -64,7 +64,7 @@ mod tests {
 
     #[test]
     fn cpu_saturates_and_throughput_flattens() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run(&PrebaConfig::new());
         let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
         let get = |m: &str, s: usize, k: &str| -> f64 {

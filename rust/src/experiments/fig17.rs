@@ -84,7 +84,7 @@ mod tests {
 
     #[test]
     fn preba_speedup_in_paper_band() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run(&PrebaConfig::new());
         let avg = doc.get("data").unwrap().get("avg_speedup").unwrap().as_f64().unwrap();
         // Paper: 3.7x average. Accept the 2.5-6x band for the simulated

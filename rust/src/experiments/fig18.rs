@@ -84,7 +84,7 @@ mod tests {
 
     #[test]
     fn baseline_tail_explodes_before_preba() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run(&PrebaConfig::new());
         let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
         // At 70% of capacity for Conformer(default): CPU's p95 must be far

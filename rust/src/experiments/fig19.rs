@@ -82,7 +82,7 @@ mod tests {
 
     #[test]
     fn baseline_dominated_by_preprocessing_preba_not() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run(&PrebaConfig::new());
         let rows = doc.get("data").unwrap().get("rows").unwrap().as_arr().unwrap();
         let frac = |m: &str, d: &str| -> f64 {

@@ -68,7 +68,7 @@ mod tests {
 
     #[test]
     fn tco_gain_in_paper_band() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run(&PrebaConfig::new());
         let avg = doc.get("data").unwrap().get("avg_gain").unwrap().as_f64().unwrap();
         assert!((2.0..6.0).contains(&avg), "TCO gain {avg}");

@@ -84,7 +84,7 @@ mod tests {
 
     #[test]
     fn both_ablation_steps_help() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run(&PrebaConfig::new());
         let d = doc.get("data").unwrap();
         let dpu = d.get("avg_dpu_gain").unwrap().as_f64().unwrap();

@@ -5,6 +5,7 @@
 //! targets and the `preba experiment` CLI both call into here.
 
 pub mod ablation;
+pub mod cluster;
 pub mod packing;
 pub mod reconfig;
 pub mod support;
@@ -30,7 +31,7 @@ use crate::config::PrebaConfig;
 use crate::util::json::Json;
 
 /// Registry of all experiments for `preba experiment <id>` / `all`.
-pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 22] = [
+pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 23] = [
     ("fig5", fig05::run),
     ("fig6", fig06::run),
     ("fig7", fig07::run),
@@ -56,6 +57,7 @@ pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 22] = [
     // paper: reconfigurable machine scheduling / fragmentation).
     ("reconfig", reconfig::run),
     ("packing", packing::run),
+    ("cluster", cluster::run),
 ];
 
 /// Look up an experiment by id.
@@ -63,16 +65,29 @@ pub fn by_id(id: &str) -> Option<fn(&PrebaConfig) -> Json> {
     ALL.iter().find(|(k, _)| *k == id).map(|(_, f)| *f)
 }
 
-/// `PREBA_FAST` sampled once — `default_requests` sits on every
-/// experiment's call path and an env-var lookup is a syscall on some
-/// platforms. The CLI's `--fast` sets the env var before any experiment
-/// runs, so the cached read observes it.
-static FAST: once_cell::sync::Lazy<bool> =
-    once_cell::sync::Lazy::new(|| std::env::var("PREBA_FAST").is_ok());
+/// Request-budget mode, resolved once. Programmatic callers (the CLI's
+/// `--fast`, lib tests, benches) inject it through [`set_fast`]; absent
+/// that, the first `default_requests` call samples the `PREBA_FAST`
+/// environment variable. Injection exists because the old idiom — tests
+/// calling `std::env::set_var` — is UB on glibc once the test harness
+/// runs threads in parallel (setenv racing getenv).
+static FAST: once_cell::sync::OnceCell<bool> = once_cell::sync::OnceCell::new();
 
-/// Shared default: fewer requests when `PREBA_FAST` is set (CI).
+/// Choose the request-budget mode programmatically. First caller wins
+/// (and an earlier `default_requests` call wins over both); safe to call
+/// from any thread, idempotent across parallel tests.
+pub fn set_fast(fast: bool) {
+    let _ = FAST.set(fast);
+}
+
+/// True when running with CI-sized request budgets.
+pub fn fast() -> bool {
+    *FAST.get_or_init(|| std::env::var("PREBA_FAST").is_ok())
+}
+
+/// Shared default: fewer requests in fast mode (CI).
 pub fn default_requests() -> usize {
-    if *FAST {
+    if fast() {
         2_000
     } else {
         8_000

@@ -181,7 +181,7 @@ mod tests {
 
     #[test]
     fn best_fit_dominates_the_study_and_placement_rescues_the_hot_tenant() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run(&PrebaConfig::new());
         let data = doc.get("data").unwrap();
 

@@ -41,6 +41,7 @@ fn policy() -> ReconfigPolicy {
         cooldown_s: 1.0,
         min_gain: 0.10,
         repartition_s: 0.1,
+        migration_s: 0.3,
         target_util: 0.85,
     }
 }
@@ -229,7 +230,7 @@ mod tests {
     /// single execution.
     #[test]
     fn online_beats_static_where_it_should_and_matches_elsewhere() {
-        std::env::set_var("PREBA_FAST", "1");
+        crate::experiments::set_fast(true);
         let doc = run(&PrebaConfig::new());
         let rows = doc.get("data").unwrap().get("scenarios").unwrap().as_arr().unwrap();
 

@@ -22,7 +22,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: preba <serve|simulate|profile|plan|reconfig|experiment|list> [options]\n\
+    "usage: preba <serve|simulate|profile|plan|reconfig|cluster|experiment|list> [options]\n\
      \n\
      serve      --model M [--preproc host|dpu] [--rate QPS] [--requests N] [--artifacts DIR]\n\
      simulate   --model M [--mig 1g|2g|7g] [--preproc ideal|cpu|dpu] [--policy static|dynamic]\n\
@@ -37,7 +37,12 @@ fn usage() -> &'static str {
                 [--window S] [--cooldown S] [--repartition S]\n\
                 (two colocated tenants, static fair split vs online slice\n\
                 reallocation; diurnal tenants run in anti-phase)\n\
-     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|all>\n\
+     cluster    [--gpus N] [--strategy ff|bfd|both] [--routing jsq|rr] [--horizon S]\n\
+                [--seed S] [--reconfig] [--migration S] [--repartition S]\n\
+                (multi-GPU DES: a diurnal tenant fleet packed onto N A100s;\n\
+                FF vs BFD stranded capacity, fleet p95/p99/SLA violations,\n\
+                and optional online cross-GPU rebalancing with migrations)\n\
+     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|cluster|all>\n\
                 [--jobs N] [--out DIR]\n\
      list\n\
      \n\
@@ -55,14 +60,15 @@ fn run() -> anyhow::Result<()> {
         return Ok(());
     }
     if args.flag("fast") {
-        std::env::set_var("PREBA_FAST", "1");
+        preba::experiments::set_fast(true);
     }
     if let Some(jobs) = args.opt("jobs") {
-        jobs.parse::<usize>()
+        let n = jobs
+            .parse::<usize>()
             .ok()
             .filter(|&n| n >= 1)
             .ok_or_else(|| anyhow::anyhow!("--jobs expects a positive integer, got '{jobs}'"))?;
-        std::env::set_var("PREBA_JOBS", jobs);
+        preba::util::par::set_jobs(n);
     }
     let sys = match args.opt("config") {
         Some(path) => PrebaConfig::from_file(path)?,
@@ -76,6 +82,7 @@ fn run() -> anyhow::Result<()> {
         "profile" => profile(&args, &sys),
         "plan" => plan(&args),
         "reconfig" => reconfig_cmd(&args, &sys),
+        "cluster" => cluster_cmd(&args, &sys),
         "experiment" => experiment(&args, &sys),
         other => {
             anyhow::bail!("unknown command '{other}'\n{}", usage());
@@ -360,6 +367,98 @@ fn reconfig_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `preba cluster`: the diurnal tenant fleet from the `cluster`
+/// experiment packed onto N GPUs — first-fit vs best-fit-decreasing side
+/// by side (stranded capacity and fleet tails), optionally with online
+/// cross-GPU rebalancing.
+fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
+    use preba::experiments::cluster::diurnal_fleet;
+    use preba::mig::PackStrategy;
+    use preba::server::cluster::{self, ClusterConfig, Routing};
+
+    let n_gpus = args.opt_u64("gpus", sys.cluster.gpus as u64)? as usize;
+    anyhow::ensure!(n_gpus >= 1, "--gpus must be >= 1");
+    let horizon_s = args.opt_f64("horizon", sys.cluster.horizon_s)?;
+    anyhow::ensure!(horizon_s > 0.0, "--horizon must be positive");
+    let seed = args.opt_u64("seed", 0xC1A0)?;
+    let routing_s = args.opt_or("routing", "jsq");
+    let routing = Routing::parse(routing_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown --routing '{routing_s}' (jsq|rr)"))?;
+    let strategies: Vec<PackStrategy> = match args.opt_or("strategy", "both") {
+        "ff" | "first-fit" => vec![PackStrategy::FirstFit],
+        "bfd" | "best-fit" => vec![PackStrategy::BestFit],
+        "both" => vec![PackStrategy::FirstFit, PackStrategy::BestFit],
+        other => anyhow::bail!("unknown --strategy '{other}' (ff|bfd|both)"),
+    };
+    let reconfig = if args.flag("reconfig") {
+        let repartition_s = args.opt_f64("repartition", sys.cluster.repartition_s)?;
+        let migration_s = args.opt_f64("migration", sys.cluster.migration_s)?;
+        anyhow::ensure!(
+            migration_s >= repartition_s,
+            "--migration ({migration_s}s) must cost at least --repartition ({repartition_s}s): \
+             the planner assumes crossing a GPU is the expensive move"
+        );
+        Some(preba::mig::ReconfigPolicy {
+            repartition_s,
+            migration_s,
+            ..preba::experiments::cluster::policy(sys)
+        })
+    } else {
+        None
+    };
+
+    let tenants = diurnal_fleet(n_gpus, horizon_s);
+    let total_reqs: usize = tenants.iter().map(|t| t.requests).sum();
+    println!(
+        "cluster of {n_gpus} A100s, {} tenants ({total_reqs} requests over ~{horizon_s} s, \
+         routing {}{})\n",
+        tenants.len(),
+        routing.label(),
+        if reconfig.is_some() { ", online cross-GPU rebalancing" } else { "" }
+    );
+
+    let mut t = Table::new(&[
+        "packing", "admitted", "asked", "stranded %", "worst p95 ms", "worst p99 ms", "viol %",
+        "rebalances", "migrations",
+    ]);
+    // Event detail lines are buffered so they print AFTER the summary
+    // table whose rebalance/migration columns they annotate.
+    let mut timeline: Vec<String> = Vec::new();
+    for strategy in strategies {
+        let mut cfg = ClusterConfig::new(n_gpus, strategy, tenants.clone());
+        cfg.routing = routing;
+        cfg.seed = seed;
+        cfg.reconfig = reconfig.clone();
+        let out = cluster::run(&cfg, sys)?;
+        t.row(&[
+            strategy.label().to_string(),
+            out.packing.admitted_gpcs().to_string(),
+            out.packing.asked_gpcs().to_string(),
+            num(out.packing.fragmentation() * 100.0),
+            num(out.worst_p95_ms()),
+            num(out.worst_p99_ms()),
+            num(out.max_violation_frac(&cfg.tenants) * 100.0),
+            out.reconfigs.to_string(),
+            out.migrations.to_string(),
+        ]);
+        for ev in &out.reconfig_events {
+            timeline.push(format!(
+                "  [{}] t={:.2}s -> {} moves ({} migration, predicted gain {:.1} ms)",
+                strategy.label(),
+                preba::clock::to_secs(ev.at),
+                ev.moves.len(),
+                ev.migrations(),
+                ev.predicted_gain_ms
+            ));
+        }
+    }
+    t.print();
+    for line in timeline {
+        println!("{line}");
+    }
+    Ok(())
+}
+
 fn profile(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     let model = parse_model(args)?;
     let mig = parse_mig(args)?;
@@ -404,7 +503,7 @@ fn experiment(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
         .map(String::as_str)
         .ok_or_else(|| anyhow::anyhow!("experiment id required (or 'all')"))?;
     if let Some(dir) = args.opt("out") {
-        std::env::set_var("PREBA_RESULTS_DIR", dir);
+        preba::util::bench::set_results_dir(dir);
     }
     if id == "all" {
         // Run the whole suite through the job pool. Each worker captures

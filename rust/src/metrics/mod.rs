@@ -76,6 +76,13 @@ impl RunStats {
         self.e2e_ms.p95()
     }
 
+    /// p99 end-to-end latency, ms (the cluster experiments' fleet-tail
+    /// metric — packing mistakes surface further out in the tail than the
+    /// paper's single-GPU p95).
+    pub fn p99_ms(&self) -> f64 {
+        self.e2e_ms.p99()
+    }
+
     /// Fraction of completed requests whose end-to-end latency exceeded
     /// `sla_ms` (the reconfiguration experiments' violation metric).
     pub fn sla_violation_frac(&self, sla_ms: f64) -> f64 {

@@ -17,5 +17,8 @@ pub mod reconfig;
 pub mod service;
 
 pub use partition::{MigConfig, Partition, Slice};
-pub use reconfig::{Plan, ReconfigController, ReconfigPolicy, TenantSpec};
+pub use placement::PackStrategy;
+pub use reconfig::{
+    ClusterReconfigController, Plan, ReconfigController, ReconfigPolicy, SliceMove, TenantSpec,
+};
 pub use service::ServiceModel;

@@ -5,6 +5,14 @@
 //! the A100-40GB instance profiles and the homogeneous partitions the
 //! paper evaluates: `1g.5gb(7x)`, `2g.10gb(3x)`, `7g.40gb(1x)`.
 
+/// Compute capacity of one A100: 7 GPCs. Shared by the inventory packer
+/// (`placement::GpuBin`) and the cross-GPU planner (`reconfig`) so their
+/// capacity models cannot drift apart.
+pub const A100_GPCS: usize = 7;
+
+/// Memory capacity of one A100-40GB, GB (8 L2/DRAM slices).
+pub const A100_MEM_GB: usize = 40;
+
 /// One MIG instance profile: `<gpcs>g.<mem_gb>gb`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Slice {

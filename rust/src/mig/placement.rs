@@ -11,7 +11,7 @@
 //! This module is analytic (no DES): `server::multi` consumes per-GPU
 //! allocations, and the `packing` experiment compares strategies.
 
-use super::partition::Slice;
+use super::partition::{Slice, A100_GPCS, A100_MEM_GB};
 
 /// Packing strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,7 +50,7 @@ pub struct GpuBin {
 
 impl GpuBin {
     fn new() -> GpuBin {
-        GpuBin { gpcs_free: 7, mem_free_gb: 40, placed: Vec::new() }
+        GpuBin { gpcs_free: A100_GPCS, mem_free_gb: A100_MEM_GB, placed: Vec::new() }
     }
 
     /// Can this GPU still host `s`? (Compute and memory budgets; mixed
@@ -111,7 +111,7 @@ impl Packing {
         if self.bins.is_empty() {
             0.0
         } else {
-            self.stranded_gpcs() as f64 / (7 * self.bins.len()) as f64
+            self.stranded_gpcs() as f64 / (A100_GPCS * self.bins.len()) as f64
         }
     }
 }

@@ -1,0 +1,925 @@
+//! Cluster-scale serving: one discrete-event simulation spanning a fleet
+//! of MIG GPUs.
+//!
+//! `server::multi` colocates tenants on ONE partitioned GPU; real AIaaS
+//! fleets pack tenants over MANY GPUs, and that packing quality — not
+//! per-GPU scheduling — is where stranded capacity and tail latency are
+//! won or lost (ParvaGPU, arXiv:2409.14447; fragmentation-aware MIG
+//! scheduling, arXiv:2512.16099). This module closes the loop between
+//! `mig::placement` (which packs a slice-ask inventory analytically) and
+//! the DES: tenants are placed onto N A100s by first-fit or
+//! best-fit-decreasing, requests are routed to a tenant's per-GPU serving
+//! groups (join-shortest-queue or round-robin), each GPU hosts its own
+//! preprocessing resources, and one event heap drives everything.
+//!
+//! Online rebalancing (`ClusterConfig::reconfig`) runs the cross-GPU
+//! controller (`mig::reconfig::ClusterReconfigController`): slices move
+//! between tenants with a drain → outage → restart cycle per move, where
+//! an in-place reassignment (both tenants already serve from that GPU)
+//! pays `repartition_s` and a migration (new residency: model weights
+//! shipped to a GPU the tenant was not on) pays `migration_s` ≫ that.
+
+use crate::batching::{Batch, BatchPolicy, Bucketizer, DynamicBatcher, QueueParams, Request};
+use crate::clock::{secs, Nanos};
+use crate::config::PrebaConfig;
+use crate::dpu::Dpu;
+use crate::metrics::{LatencyParts, RunStats};
+use crate::mig::placement::{pack, Packing, SliceAsk};
+use crate::mig::reconfig::{ClusterReconfigEvent, SliceMove};
+use crate::mig::{
+    ClusterReconfigController, PackStrategy, ReconfigPolicy, ServiceModel, Slice, TenantSpec,
+};
+use crate::models::{ModelId, ModelKind, ModelSpec};
+use crate::preprocess::CpuPool;
+use crate::sim::EventQueue;
+use crate::util::Rng;
+use crate::workload::{QueryGen, RateProfile, TraceGen};
+
+use super::{PolicyKind, PreprocMode};
+
+/// How arrivals are routed to a tenant's per-GPU serving groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Cycle through the tenant's groups in GPU order.
+    RoundRobin,
+    /// Join-shortest-queue: the group with the fewest outstanding
+    /// requests per slice (ties to the lowest group index).
+    ShortestQueue,
+}
+
+impl Routing {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Routing::RoundRobin => "round-robin",
+            Routing::ShortestQueue => "join-shortest-queue",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Routing> {
+        match s {
+            "rr" | "round-robin" => Some(Routing::RoundRobin),
+            "jsq" | "shortest-queue" => Some(Routing::ShortestQueue),
+            _ => None,
+        }
+    }
+}
+
+/// One tenant of the cluster: a model served from `slices` instances of
+/// one MIG profile, wherever the packer places them.
+#[derive(Debug, Clone)]
+pub struct ClusterTenant {
+    pub model: ModelId,
+    /// Instance profile every replica of this tenant uses.
+    pub slice: Slice,
+    /// Requested replica count (the packer may admit fewer).
+    pub slices: usize,
+    /// Offered load, queries/s (mean of `profile` when set).
+    pub rate_qps: f64,
+    /// End-to-end p95 SLA, ms (violation accounting + the controller).
+    pub sla_ms: f64,
+    /// Non-stationary traffic; `None` = constant Poisson at `rate_qps`.
+    pub profile: Option<RateProfile>,
+    /// Arrivals to generate for this tenant.
+    pub requests: usize,
+}
+
+impl ClusterTenant {
+    pub fn new(model: ModelId, slice: Slice, slices: usize, rate_qps: f64) -> ClusterTenant {
+        ClusterTenant {
+            model,
+            slice,
+            slices,
+            rate_qps,
+            sla_ms: 50.0,
+            profile: None,
+            requests: 4000,
+        }
+    }
+
+    /// Replica count sized by the reconfig controller's own rule
+    /// ([`crate::mig::reconfig::slices_for_rate`]), so a sized deployment
+    /// starts exactly where the controller would put it (no rebalance at
+    /// the first telemetry window).
+    pub fn sized_for(
+        model: ModelId,
+        slice: Slice,
+        rate_qps: f64,
+        target_util: f64,
+    ) -> ClusterTenant {
+        let spec = TenantSpec::new(model, 50.0);
+        let n = crate::mig::reconfig::slices_for_rate(&spec, slice, rate_qps, target_util);
+        ClusterTenant::new(model, slice, n, rate_qps)
+    }
+}
+
+/// Cluster run parameters.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// A100s in the inventory (7 GPCs / 40 GB each).
+    pub n_gpus: usize,
+    /// How tenant slice asks are packed onto the inventory.
+    pub strategy: PackStrategy,
+    pub routing: Routing,
+    pub tenants: Vec<ClusterTenant>,
+    /// Preprocessing resources are PER GPU (each GPU lives in its own
+    /// host): a request routed to GPU `g` pays `g`'s CPU pool or DPU.
+    pub preproc: PreprocMode,
+    pub policy: PolicyKind,
+    pub seed: u64,
+    pub warmup_frac: f64,
+    /// Online cross-GPU rebalancing; `None` = the packing is fixed.
+    pub reconfig: Option<ReconfigPolicy>,
+}
+
+impl ClusterConfig {
+    pub fn new(n_gpus: usize, strategy: PackStrategy, tenants: Vec<ClusterTenant>) -> Self {
+        ClusterConfig {
+            n_gpus,
+            strategy,
+            routing: Routing::ShortestQueue,
+            tenants,
+            preproc: PreprocMode::Ideal,
+            policy: PolicyKind::Dynamic,
+            seed: 0xC105,
+            warmup_frac: 0.05,
+            reconfig: None,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_gpus >= 1, "cluster needs at least one GPU");
+        anyhow::ensure!(!self.tenants.is_empty(), "no tenants");
+        for t in &self.tenants {
+            let name = t.slice.name();
+            anyhow::ensure!(t.slice.is_legal(), "{}: illegal profile {name}", t.model);
+            anyhow::ensure!(t.slices >= 1, "{}: zero slices requested", t.model);
+            anyhow::ensure!(t.requests >= 1, "{}: zero requests", t.model);
+            anyhow::ensure!(t.rate_qps > 0.0, "{}: non-positive rate", t.model);
+        }
+        Ok(())
+    }
+
+    /// The slice-ask list this cluster presents to the packer, in tenant
+    /// order (the "arrival order" first-fit is sensitive to).
+    pub fn asks(&self) -> Vec<SliceAsk> {
+        let mut out = Vec::new();
+        for (i, t) in self.tenants.iter().enumerate() {
+            for _ in 0..t.slices {
+                out.push(SliceAsk { tenant: i, slice: t.slice });
+            }
+        }
+        out
+    }
+}
+
+/// Cluster run results.
+#[derive(Debug)]
+pub struct ClusterOutcome {
+    pub per_tenant: Vec<(ModelId, RunStats)>,
+    /// Post-warmup requests that arrived for a tenant with no admitted
+    /// capacity anywhere (counted as SLA violations). Warmup-window drops
+    /// are excluded, mirroring how the latency stats skip warmup
+    /// completions — the violation fraction scores one population.
+    pub dropped: Vec<u64>,
+    /// The initial placement (stranded-capacity metrics live here).
+    pub packing: Packing,
+    pub horizon: Nanos,
+    /// DES events processed (the `perf_cluster` bench denominator).
+    pub events: u64,
+    /// Committed rebalances (controller events).
+    pub reconfigs: u64,
+    /// Cross-GPU migrations among them (new residencies).
+    pub migrations: u64,
+    /// Summed per-move outage (drain of the moved slice + repartition or
+    /// migration) across rebalances.
+    pub reconfig_downtime: Nanos,
+    pub reconfig_events: Vec<ClusterReconfigEvent>,
+    /// `alloc[gpu][tenant]` the run ended on.
+    pub final_alloc: Vec<Vec<usize>>,
+}
+
+impl ClusterOutcome {
+    pub fn tenant_stats(&self, i: usize) -> &RunStats {
+        &self.per_tenant[i].1
+    }
+
+    /// Worst per-tenant p95, ms.
+    pub fn worst_p95_ms(&self) -> f64 {
+        self.per_tenant.iter().map(|(_, s)| s.p95_ms()).fold(0.0, f64::max)
+    }
+
+    /// Worst per-tenant p99, ms.
+    pub fn worst_p99_ms(&self) -> f64 {
+        self.per_tenant.iter().map(|(_, s)| s.p99_ms()).fold(0.0, f64::max)
+    }
+
+    /// Tenant `i`'s SLA-violation fraction with dropped requests counted
+    /// as violations (a request a packer turned away still missed its SLA).
+    pub fn violation_frac(&self, i: usize, sla_ms: f64) -> f64 {
+        let stats = &self.per_tenant[i].1;
+        let n = stats.e2e_ms.count() as f64;
+        let d = self.dropped[i] as f64;
+        if n + d == 0.0 {
+            return 0.0;
+        }
+        (stats.sla_violation_frac(sla_ms) * n + d) / (n + d)
+    }
+
+    /// Worst per-tenant violation fraction against each tenant's own SLA.
+    pub fn max_violation_frac(&self, tenants: &[ClusterTenant]) -> f64 {
+        (0..self.per_tenant.len())
+            .map(|i| self.violation_frac(i, tenants[i].sla_ms))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrival { tenant: usize, idx: usize },
+    PreprocDone { tenant: usize, idx: usize },
+    BatchTick { group: usize },
+    ExecDone { group: usize, batch_idx: usize },
+    /// Close a telemetry window and ask the cross-GPU controller for a
+    /// rebalance.
+    ReconfigCheck,
+}
+
+/// One (tenant, GPU) serving group: the tenant's slices on that GPU share
+/// a batcher; dispatch goes to the group's least-loaded slice.
+struct Group {
+    tenant: usize,
+    gpu: usize,
+    batcher: DynamicBatcher,
+    slice_free: Vec<Nanos>,
+    in_flight: Vec<Option<Batch>>,
+    free_slots: Vec<usize>,
+    /// Requests routed here and not yet completed (the JSQ signal).
+    outstanding: usize,
+    armed_tick: Option<Nanos>,
+}
+
+struct TenantState {
+    spec: &'static ModelSpec,
+    sm: ServiceModel,
+    buckets: Bucketizer,
+    arrivals: Vec<(Nanos, f64)>,
+    preproc_done: Vec<Nanos>,
+    /// Group each request was routed to.
+    routed: Vec<usize>,
+    /// This tenant's group indices, in GPU order (append order for
+    /// migration-created groups).
+    route: Vec<usize>,
+    rr_cursor: usize,
+    stats: RunStats,
+    completed: usize,
+    warmup: usize,
+    dropped: u64,
+}
+
+impl TenantState {
+    /// Count a dropped request, unless it falls in the warmup window
+    /// (arrival index as the proxy) — the latency stats skip warmup
+    /// completions, so the violation metric must skip warmup drops too.
+    fn drop_request(&mut self, idx: usize) {
+        if idx >= self.warmup {
+            self.dropped += 1;
+        }
+    }
+}
+
+fn build_policy(
+    policy: PolicyKind,
+    sys: &PrebaConfig,
+    spec: &'static ModelSpec,
+    sm: &ServiceModel,
+    buckets: &Bucketizer,
+    n_slices: usize,
+) -> BatchPolicy {
+    match policy {
+        PolicyKind::Dynamic => {
+            BatchPolicy::dynamic_from_model(spec, sm, buckets, n_slices.max(1))
+        }
+        PolicyKind::Static => BatchPolicy::Static(QueueParams {
+            batch_max: sys.batching.static_batch_max,
+            time_queue: sys.batching.static_time_queue,
+        }),
+    }
+}
+
+fn padded_len(buckets: &Bucketizer, batch: &Batch) -> f64 {
+    if batch.max_len_s <= 0.0 {
+        return 0.0;
+    }
+    let edge = buckets.repr_len(buckets.bucket_of(batch.max_len_s));
+    if edge > 0.0 {
+        edge.max(batch.max_len_s)
+    } else {
+        batch.max_len_s
+    }
+}
+
+/// Pick the group an arrival is routed to, or `None` when the tenant has
+/// no live capacity anywhere (the request is dropped).
+fn route(groups: &[Group], ts: &mut TenantState, routing: Routing) -> Option<usize> {
+    match routing {
+        Routing::RoundRobin => {
+            let n_active =
+                ts.route.iter().filter(|&&g| !groups[g].slice_free.is_empty()).count();
+            if n_active == 0 {
+                return None;
+            }
+            let k = ts.rr_cursor % n_active;
+            ts.rr_cursor = ts.rr_cursor.wrapping_add(1);
+            ts.route.iter().copied().filter(|&g| !groups[g].slice_free.is_empty()).nth(k)
+        }
+        Routing::ShortestQueue => {
+            let mut best = None;
+            let mut best_load = f64::INFINITY;
+            for &g in &ts.route {
+                if groups[g].slice_free.is_empty() {
+                    continue;
+                }
+                let load = groups[g].outstanding as f64 / groups[g].slice_free.len() as f64;
+                if load < best_load {
+                    best_load = load;
+                    best = Some(g);
+                }
+            }
+            best
+        }
+    }
+}
+
+/// Form and dispatch every releasable batch of `group` onto its
+/// least-loaded slice.
+fn dispatch_ready(
+    gi: usize,
+    now: Nanos,
+    groups: &mut [Group],
+    tenants: &[TenantState],
+    q: &mut EventQueue<Ev>,
+    exec_rng: &mut Rng,
+) {
+    let grp = &mut groups[gi];
+    if grp.slice_free.is_empty() {
+        return;
+    }
+    let ts = &tenants[grp.tenant];
+    while let Some((batch, _)) = grp.batcher.try_form(now) {
+        let (slot, &free) =
+            grp.slice_free.iter().enumerate().min_by_key(|(_, &t)| t).expect("slices");
+        let start = now.max(free);
+        let padded = padded_len(&ts.buckets, &batch);
+        let exec = secs(ts.sm.exec_secs_jittered(batch.size(), padded, exec_rng));
+        let done = start + exec;
+        grp.slice_free[slot] = done;
+        let idx = match grp.free_slots.pop() {
+            Some(slot) => {
+                debug_assert!(grp.in_flight[slot].is_none());
+                grp.in_flight[slot] = Some(batch);
+                slot
+            }
+            None => {
+                grp.in_flight.push(Some(batch));
+                grp.in_flight.len() - 1
+            }
+        };
+        q.schedule(done, Ev::ExecDone { group: gi, batch_idx: idx });
+    }
+}
+
+/// Arm a BatchTick for the group's earliest deadline unless an earlier
+/// (or equal) tick is already pending (the `sim_driver` dedupe).
+fn arm_tick(gi: usize, now: Nanos, groups: &mut [Group], q: &mut EventQueue<Ev>) {
+    let grp = &mut groups[gi];
+    if let Some(d) = grp.batcher.next_deadline() {
+        if grp.armed_tick.is_none_or(|t| d < t) {
+            q.schedule(d, Ev::BatchTick { group: gi });
+            grp.armed_tick = Some(d.max(now));
+        }
+    }
+}
+
+/// Run one cluster simulation.
+pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutcome> {
+    cfg.validate()?;
+    let mut root = Rng::new(cfg.seed ^ 0xC1A5);
+    let mut exec_rng = root.split(2);
+
+    // Per-GPU preprocessing resources. The split tag lives in its own
+    // namespace so pool streams can never collide with the per-tenant
+    // arrival streams (`100 + ti`) at any fleet size.
+    let usable = sys.hardware.cpu_cores - sys.hardware.cpu_reserved_cores;
+    let mut cpu_pools: Vec<CpuPool> = (0..cfg.n_gpus)
+        .map(|g| CpuPool::new(usable, root.split(0x9AD5_0000 + g as u64)))
+        .collect();
+    let mut dpus: Vec<Option<Dpu>> = (0..cfg.n_gpus)
+        .map(|_| match cfg.preproc {
+            PreprocMode::Dpu => Some(Dpu::new(&sys.dpu, &sys.hardware)),
+            _ => None,
+        })
+        .collect();
+
+    // Place the slice inventory.
+    let packing = pack(&cfg.asks(), cfg.n_gpus, cfg.strategy);
+    let mut alloc: Vec<Vec<usize>> = vec![vec![0; cfg.tenants.len()]; cfg.n_gpus];
+    for (ask, gpu) in &packing.placements {
+        alloc[*gpu][ask.tenant] += 1;
+    }
+
+    // Tenant state + workloads.
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut tenants: Vec<TenantState> = Vec::with_capacity(cfg.tenants.len());
+    for (ti, t) in cfg.tenants.iter().enumerate() {
+        let spec = t.model.spec();
+        let sm = ServiceModel::new(spec, t.slice.gpcs);
+        let buckets = match (t.model.kind(), cfg.policy) {
+            (ModelKind::Audio, PolicyKind::Dynamic) => {
+                Bucketizer::new(sys.batching.bucket_window_s, sys.batching.max_audio_s)
+            }
+            _ => Bucketizer::fixed(),
+        };
+        let gen_rng = root.split(100 + ti as u64);
+        let arrivals: Vec<(Nanos, f64)> = match &t.profile {
+            None => QueryGen::new(t.model, t.rate_qps, gen_rng)
+                .take(t.requests)
+                .into_iter()
+                .map(|a| (a.at, a.len_s))
+                .collect(),
+            Some(profile) => TraceGen::new(t.model, profile.clone(), gen_rng)
+                .take(t.requests)
+                .into_iter()
+                .map(|a| (a.at, a.len_s))
+                .collect(),
+        };
+        for (i, &(at, _)) in arrivals.iter().enumerate() {
+            q.schedule(at, Ev::Arrival { tenant: ti, idx: i });
+        }
+        tenants.push(TenantState {
+            spec,
+            sm,
+            buckets,
+            preproc_done: vec![0; arrivals.len()],
+            routed: vec![usize::MAX; arrivals.len()],
+            arrivals,
+            route: Vec::new(),
+            rr_cursor: 0,
+            stats: RunStats::new(),
+            completed: 0,
+            warmup: (t.requests as f64 * cfg.warmup_frac) as usize,
+            dropped: 0,
+        });
+    }
+
+    // Serving groups, one per (GPU, tenant) with admitted slices, in
+    // GPU-major order so every tenant's route list is GPU-ordered.
+    let mut groups: Vec<Group> = Vec::new();
+    let mut group_of: Vec<Vec<Option<usize>>> = vec![vec![None; cfg.tenants.len()]; cfg.n_gpus];
+    for (g, row) in alloc.iter().enumerate() {
+        for (ti, &n) in row.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let ts = &tenants[ti];
+            let policy = build_policy(cfg.policy, sys, ts.spec, &ts.sm, &ts.buckets, n);
+            let batcher = DynamicBatcher::new(
+                cfg.tenants[ti].model,
+                ts.buckets.clone(),
+                policy,
+                sys.batching.merge_adjacent,
+            );
+            group_of[g][ti] = Some(groups.len());
+            tenants[ti].route.push(groups.len());
+            groups.push(Group {
+                tenant: ti,
+                gpu: g,
+                batcher,
+                slice_free: vec![0; n],
+                in_flight: Vec::new(),
+                free_slots: Vec::new(),
+                outstanding: 0,
+                armed_tick: None,
+            });
+        }
+    }
+
+    // Cross-GPU rebalancing controller.
+    let mut ctrl = cfg.reconfig.clone().map(|policy| {
+        let specs: Vec<TenantSpec> =
+            cfg.tenants.iter().map(|t| TenantSpec::new(t.model, t.sla_ms)).collect();
+        let slices: Vec<Slice> = cfg.tenants.iter().map(|t| t.slice).collect();
+        ClusterReconfigController::new(specs, slices, alloc.clone(), policy)
+    });
+    if let Some(c) = &ctrl {
+        q.schedule(c.window(), Ev::ReconfigCheck);
+    }
+
+    let total_arrivals: usize = cfg.tenants.iter().map(|t| t.requests).sum();
+    let mut arrivals_seen = 0usize;
+    let mut downtime: Nanos = 0;
+    let mut horizon: Nanos = 0;
+    let events = crate::sim::run(&mut q, u64::MAX, |now, ev, q| {
+        match ev {
+            Ev::Arrival { tenant, idx } => {
+                arrivals_seen += 1;
+                if let Some(c) = ctrl.as_mut() {
+                    c.observe_arrival(tenant);
+                }
+                let Some(gi) = route(&groups, &mut tenants[tenant], cfg.routing) else {
+                    tenants[tenant].drop_request(idx);
+                    return true;
+                };
+                tenants[tenant].routed[idx] = gi;
+                groups[gi].outstanding += 1;
+                let gpu = groups[gi].gpu;
+                let len = tenants[tenant].arrivals[idx].1;
+                match cfg.preproc {
+                    PreprocMode::Ideal => q.schedule(now, Ev::PreprocDone { tenant, idx }),
+                    PreprocMode::Cpu => {
+                        let service = tenants[tenant].spec.cpu_preproc_secs(len.max(0.1));
+                        let (_, done) = cpu_pools[gpu].admit(now, service);
+                        q.schedule(done, Ev::PreprocDone { tenant, idx });
+                    }
+                    PreprocMode::Dpu => {
+                        let model = cfg.tenants[tenant].model;
+                        let done =
+                            dpus[gpu].as_mut().unwrap().admit(now, model, len.max(0.1));
+                        q.schedule(done, Ev::PreprocDone { tenant, idx });
+                    }
+                }
+            }
+            Ev::PreprocDone { tenant, idx } => {
+                tenants[tenant].preproc_done[idx] = now;
+                let mut gi = tenants[tenant].routed[idx];
+                // The routed group may have lost its last slice to a
+                // rebalance while this request preprocessed; re-route to
+                // the tenant's least-loaded live group.
+                if groups[gi].slice_free.is_empty() {
+                    groups[gi].outstanding -= 1;
+                    match route(&groups, &mut tenants[tenant], Routing::ShortestQueue) {
+                        Some(g2) => {
+                            gi = g2;
+                            tenants[tenant].routed[idx] = gi;
+                            groups[gi].outstanding += 1;
+                        }
+                        None => {
+                            tenants[tenant].drop_request(idx);
+                            return true;
+                        }
+                    }
+                }
+                let (at, len) = tenants[tenant].arrivals[idx];
+                groups[gi].batcher.enqueue(Request {
+                    id: idx as u64,
+                    model: cfg.tenants[tenant].model,
+                    arrival: at,
+                    enqueued: now,
+                    len_s: len,
+                });
+                dispatch_ready(gi, now, &mut groups, &tenants, q, &mut exec_rng);
+                arm_tick(gi, now, &mut groups, q);
+            }
+            Ev::BatchTick { group } => {
+                groups[group].armed_tick = None;
+                dispatch_ready(group, now, &mut groups, &tenants, q, &mut exec_rng);
+                arm_tick(group, now, &mut groups, q);
+            }
+            Ev::ExecDone { group, batch_idx } => {
+                horizon = horizon.max(now);
+                let ti = groups[group].tenant;
+                let batch = groups[group].in_flight[batch_idx].take().expect("double completion");
+                groups[group].free_slots.push(batch_idx);
+                let bsize = batch.size();
+                groups[group].outstanding -= bsize;
+                let ts = &mut tenants[ti];
+                let padded = padded_len(&ts.buckets, &batch);
+                let exec_model = secs(ts.sm.exec_secs(bsize, padded));
+                let since_formed = now.saturating_sub(batch.formed);
+                let exec_ns = exec_model.min(since_formed);
+                for r in &batch.requests {
+                    ts.completed += 1;
+                    if ts.completed <= ts.warmup {
+                        continue;
+                    }
+                    let i = r.id as usize;
+                    ts.stats.record(
+                        LatencyParts {
+                            preprocess: ts.preproc_done[i] - ts.arrivals[i].0,
+                            batching: batch.formed.saturating_sub(ts.preproc_done[i]),
+                            dispatch_wait: since_formed - exec_ns,
+                            execution: exec_ns,
+                        },
+                        now,
+                        bsize,
+                    );
+                }
+                groups[group].batcher.recycle(batch);
+            }
+            Ev::ReconfigCheck => {
+                let c = ctrl.as_mut().expect("ReconfigCheck without controller");
+                let tail = arrivals_seen >= total_arrivals;
+                if tail {
+                    c.roll_only(now);
+                } else {
+                    if let Some(moves) = c.tick(now) {
+                        downtime += apply_moves(
+                            &moves, c.policy(), cfg, sys, now, &mut groups, &mut group_of,
+                            &mut tenants, q, &mut exec_rng,
+                        );
+                    }
+                    q.schedule_in(c.window(), Ev::ReconfigCheck);
+                }
+            }
+        }
+        true
+    });
+
+    let (reconfigs, migrations, reconfig_events) = match &ctrl {
+        Some(c) => (c.events().len() as u64, c.migrations(), c.events().to_vec()),
+        None => (0, 0, Vec::new()),
+    };
+    let final_alloc = match &ctrl {
+        Some(c) => c.alloc().to_vec(),
+        None => alloc,
+    };
+
+    Ok(ClusterOutcome {
+        dropped: tenants.iter().map(|t| t.dropped).collect(),
+        per_tenant: tenants
+            .into_iter()
+            .zip(cfg.tenants.iter())
+            .map(|(ts, t)| (t.model, ts.stats))
+            .collect(),
+        packing,
+        horizon,
+        events,
+        reconfigs,
+        migrations,
+        reconfig_downtime: downtime,
+        reconfig_events,
+        final_alloc,
+    })
+}
+
+/// Apply a committed move list. Each move drains the donor group's
+/// earliest-free slice, pays its outage (repartition in place, migration
+/// for a new residency), and hands the slice to the gaining tenant's
+/// group on that GPU (created on first residency). Donor groups that lose
+/// their last slice re-route their queued requests to the tenant's
+/// least-loaded surviving group. Returns the summed per-move outage.
+#[allow(clippy::too_many_arguments)]
+fn apply_moves(
+    moves: &[SliceMove],
+    policy: &ReconfigPolicy,
+    cfg: &ClusterConfig,
+    sys: &PrebaConfig,
+    now: Nanos,
+    groups: &mut Vec<Group>,
+    group_of: &mut [Vec<Option<usize>>],
+    tenants: &mut [TenantState],
+    q: &mut EventQueue<Ev>,
+    exec_rng: &mut Rng,
+) -> Nanos {
+    let mut downtime: Nanos = 0;
+    let mut touched: Vec<usize> = Vec::new();
+    for m in moves {
+        let donor = group_of[m.gpu][m.from].expect("move from a GPU the donor is not on");
+        // Earliest-free slice drains soonest; it is the one transferred.
+        groups[donor].slice_free.sort_unstable();
+        let drained = groups[donor].slice_free.remove(0).max(now);
+        let avail = drained + secs(m.outage_s(policy));
+        downtime += avail - now;
+
+        let gainer = match group_of[m.gpu][m.to] {
+            Some(g) => g,
+            None => {
+                let ts = &tenants[m.to];
+                let policy_b = build_policy(cfg.policy, sys, ts.spec, &ts.sm, &ts.buckets, 1);
+                let batcher = DynamicBatcher::new(
+                    cfg.tenants[m.to].model,
+                    ts.buckets.clone(),
+                    policy_b,
+                    sys.batching.merge_adjacent,
+                );
+                group_of[m.gpu][m.to] = Some(groups.len());
+                tenants[m.to].route.push(groups.len());
+                groups.push(Group {
+                    tenant: m.to,
+                    gpu: m.gpu,
+                    batcher,
+                    slice_free: Vec::new(),
+                    in_flight: Vec::new(),
+                    free_slots: Vec::new(),
+                    outstanding: 0,
+                    armed_tick: None,
+                });
+                groups.len() - 1
+            }
+        };
+        groups[gainer].slice_free.push(avail);
+        for g in [donor, gainer] {
+            if !touched.contains(&g) {
+                touched.push(g);
+            }
+        }
+    }
+
+    // Rebuild batching policies for every touched group (Time_queue =
+    // Time_knee/n tracks the live slice count in both directions), then
+    // re-route the queues of groups that lost their last slice.
+    for &gi in &touched {
+        let ti = groups[gi].tenant;
+        let n = groups[gi].slice_free.len();
+        if n > 0 {
+            let ts = &tenants[ti];
+            let new_policy = build_policy(cfg.policy, sys, ts.spec, &ts.sm, &ts.buckets, n);
+            groups[gi].batcher.rebuild(new_policy, now);
+            dispatch_ready(gi, now, groups, tenants, q, exec_rng);
+            arm_tick(gi, now, groups, q);
+        }
+    }
+    for &gi in &touched {
+        if !groups[gi].slice_free.is_empty() || groups[gi].batcher.pending() == 0 {
+            continue;
+        }
+        let ti = groups[gi].tenant;
+        let target = route(groups, &mut tenants[ti], Routing::ShortestQueue);
+        let pending: Vec<Request> = groups[gi]
+            .batcher
+            .flush(now)
+            .into_iter()
+            .flat_map(|b| b.requests)
+            .collect();
+        groups[gi].outstanding -= pending.len();
+        match target {
+            Some(tg) => {
+                groups[tg].outstanding += pending.len();
+                for r in pending {
+                    tenants[ti].routed[r.id as usize] = tg;
+                    groups[tg].batcher.enqueue(r);
+                }
+                dispatch_ready(tg, now, groups, tenants, q, exec_rng);
+                arm_tick(tg, now, groups, q);
+            }
+            None => {
+                for r in pending {
+                    tenants[ti].drop_request(r.id as usize);
+                }
+            }
+        }
+    }
+    downtime
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_g() -> Slice {
+        Slice::new(1, 5)
+    }
+
+    fn swin_unit() -> f64 {
+        ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0)
+    }
+
+    /// Two 4-slice tenants on 2 GPUs; BFD packs 4+3 / 1, so one tenant
+    /// spans both GPUs and exercises cross-GPU routing.
+    fn two_tenant_cfg() -> ClusterConfig {
+        let u = swin_unit();
+        let mk = || {
+            let mut t =
+                ClusterTenant::new(ModelId::SwinTransformer, one_g(), 4, 2.0 * u);
+            t.requests = 2000;
+            t.sla_ms = 25.0;
+            t
+        };
+        ClusterConfig::new(2, PackStrategy::BestFit, vec![mk(), mk()])
+    }
+
+    #[test]
+    fn sized_for_matches_the_planner_rule() {
+        let u = swin_unit();
+        let t = ClusterTenant::sized_for(ModelId::SwinTransformer, one_g(), 3.0 * u, 0.85);
+        assert_eq!(t.slices, (3.0f64 / 0.85).ceil() as usize, "rule drifted from the planner");
+    }
+
+    #[test]
+    fn all_requests_complete_and_nothing_drops() {
+        let cfg = two_tenant_cfg();
+        let out = run(&cfg, &PrebaConfig::new()).unwrap();
+        assert!(out.packing.rejected.is_empty(), "{:?}", out.packing.rejected);
+        for (i, (model, stats)) in out.per_tenant.iter().enumerate() {
+            let expect = cfg.tenants[i].requests as u64
+                - (cfg.tenants[i].requests as f64 * cfg.warmup_frac) as u64;
+            assert_eq!(stats.completed, expect, "{model}");
+            assert_eq!(out.dropped[i], 0, "{model}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = two_tenant_cfg();
+        let sys = PrebaConfig::new();
+        let a = run(&cfg, &sys).unwrap();
+        let b = run(&cfg, &sys).unwrap();
+        assert_eq!(a.horizon, b.horizon);
+        assert_eq!(a.events, b.events);
+        for ((_, s1), (_, s2)) in a.per_tenant.iter().zip(b.per_tenant.iter()) {
+            assert_eq!(s1.p95_ms(), s2.p95_ms());
+        }
+    }
+
+    #[test]
+    fn tenant_without_capacity_drops_all_requests() {
+        let u = swin_unit();
+        // Second tenant asks a full GPU the 1-GPU inventory cannot host.
+        let mut a = ClusterTenant::new(ModelId::SwinTransformer, one_g(), 7, 2.0 * u);
+        a.requests = 800;
+        let mut b = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(7, 40), 1, u);
+        b.requests = 500;
+        let cfg = ClusterConfig::new(1, PackStrategy::FirstFit, vec![a, b]);
+        let out = run(&cfg, &PrebaConfig::new()).unwrap();
+        assert_eq!(out.packing.rejected.len(), 1);
+        // Post-warmup drops only: 500 requests minus the 5% warmup window.
+        let warmup = (500.0 * cfg.warmup_frac) as u64;
+        assert_eq!(out.dropped[1], 500 - warmup);
+        assert_eq!(out.per_tenant[1].1.completed, 0);
+        assert!(out.violation_frac(1, 25.0) == 1.0);
+    }
+
+    #[test]
+    fn jsq_beats_rr_on_an_asymmetric_split() {
+        // FF places the light tenant's 5 slices on GPU0, splitting the hot
+        // tenant 2/5 across GPUs. Round-robin halves the hot tenant's load
+        // onto the 2-slice group (overload); JSQ balances by backlog. The
+        // scenario is the `cluster` experiment's shared constructor so the
+        // test and `preba experiment cluster` validate the same fleet.
+        let mut cfg = ClusterConfig::new(
+            2,
+            PackStrategy::FirstFit,
+            crate::experiments::cluster::asym_routing_tenants(3.5),
+        );
+        let sys = PrebaConfig::new();
+        cfg.routing = Routing::ShortestQueue;
+        let jsq = run(&cfg, &sys).unwrap();
+        cfg.routing = Routing::RoundRobin;
+        let rr = run(&cfg, &sys).unwrap();
+        // Hot tenant spans 2 + 5 slices.
+        assert_eq!(jsq.final_alloc[0][1], 2, "{:?}", jsq.final_alloc);
+        assert_eq!(jsq.final_alloc[1][1], 5);
+        assert!(
+            jsq.worst_p95_ms() < 0.7 * rr.worst_p95_ms(),
+            "jsq {} vs rr {}",
+            jsq.worst_p95_ms(),
+            rr.worst_p95_ms()
+        );
+    }
+
+    /// Anti-phase diurnal tenants each owning one full GPU: capacity can
+    /// only follow demand by crossing GPUs, so the first rebalance move is
+    /// a migration (new residency), and later moves on that GPU are
+    /// in-place. Scenario and tuning come from the `cluster` experiment's
+    /// shared constructors so this test cannot drift from what
+    /// `preba experiment cluster` / `preba cluster` actually run.
+    fn antiphase_cfg(online: bool) -> ClusterConfig {
+        let sys = PrebaConfig::new();
+        let mut cfg = ClusterConfig::new(
+            2,
+            PackStrategy::BestFit,
+            crate::experiments::cluster::antiphase_pair(12.0),
+        );
+        cfg.reconfig = online.then(|| crate::experiments::cluster::policy(&sys));
+        cfg
+    }
+
+    #[test]
+    fn cross_gpu_reconfig_migrates_and_beats_the_static_packing() {
+        let sys = PrebaConfig::new();
+        let stat = run(&antiphase_cfg(false), &sys).unwrap();
+        let online = run(&antiphase_cfg(true), &sys).unwrap();
+        assert!(online.reconfigs >= 2, "{:?}", online.reconfig_events);
+        assert!(online.migrations >= 1, "never crossed a GPU: {:?}", online.reconfig_events);
+        assert!(online.reconfig_downtime > 0);
+        assert!(
+            online.worst_p95_ms() < stat.worst_p95_ms(),
+            "online {} vs static {}",
+            online.worst_p95_ms(),
+            stat.worst_p95_ms()
+        );
+        let cfg = antiphase_cfg(true);
+        assert!(
+            online.max_violation_frac(&cfg.tenants) < stat.max_violation_frac(&cfg.tenants),
+            "online {} vs static {}",
+            online.max_violation_frac(&cfg.tenants),
+            stat.max_violation_frac(&cfg.tenants)
+        );
+        // Conservation through rebalances: every request completes once.
+        for (i, (model, stats)) in online.per_tenant.iter().enumerate() {
+            let expect = cfg.tenants[i].requests as u64
+                - (cfg.tenants[i].requests as f64 * cfg.warmup_frac) as u64;
+            assert_eq!(stats.completed, expect, "{model}");
+            assert_eq!(online.dropped[i], 0, "{model}");
+        }
+    }
+}

@@ -9,11 +9,17 @@
 //!   the calibrated MIG service model; regenerates the paper's figures.
 //! * [`real_driver`] — threads + the PJRT runtime executing the AOT
 //!   Pallas/JAX artifacts for real (examples & end-to-end validation).
+//!
+//! Above the single GPU, [`multi`] colocates tenants on one partition and
+//! [`cluster`] runs one DES over a multi-GPU inventory (packing-based
+//! placement, cross-GPU routing and online rebalancing).
 
+pub mod cluster;
 pub mod multi;
 pub mod real_driver;
 pub mod sim_driver;
 
+pub use cluster::{ClusterConfig, ClusterOutcome, ClusterTenant, Routing};
 pub use sim_driver::{PreprocMode, SimConfig, SimOutcome};
 
 /// Which batching policy the server uses (ablation axis, Fig 22).

@@ -66,6 +66,24 @@ pub fn time_fn<F: FnMut()>(name: &str, max_iters: u64, mut f: F) -> BenchStats {
     }
 }
 
+/// Where `results/*.json` land. Programmatic callers (the CLI's `--out`,
+/// integration tests, benches) inject it through [`set_results_dir`];
+/// absent that, the first `finish` samples `PREBA_RESULTS_DIR` (default
+/// `results`). Injection replaces the old `std::env::set_var` idiom,
+/// which is UB on glibc with parallel test threads.
+static RESULTS_DIR: once_cell::sync::OnceCell<String> = once_cell::sync::OnceCell::new();
+
+/// Choose the results directory programmatically. First caller wins (and
+/// an earlier `Reporter::finish` wins over both); thread-safe.
+pub fn set_results_dir(dir: &str) {
+    let _ = RESULTS_DIR.set(dir.to_string());
+}
+
+fn results_dir() -> &'static str {
+    RESULTS_DIR
+        .get_or_init(|| std::env::var("PREBA_RESULTS_DIR").unwrap_or_else(|_| "results".into()))
+}
+
 thread_local! {
     /// When set, `Reporter::finish` appends its rendered block here instead
     /// of printing — the parallel `experiment all` runner captures each
@@ -165,9 +183,10 @@ impl Reporter {
         self.json.push((key.to_string(), value));
     }
 
-    /// Write `results/<slug>.json` if the `PREBA_RESULTS_DIR` env var (or
-    /// `results/` default) is writable, flush any buffered report block,
-    /// and return the JSON document.
+    /// Write `results/<slug>.json` if the configured results directory
+    /// ([`set_results_dir`], or `PREBA_RESULTS_DIR`, or `results/`) is
+    /// writable, flush any buffered report block, and return the JSON
+    /// document.
     pub fn finish(mut self, slug: &str) -> crate::util::json::Json {
         use crate::util::json::Json;
         let doc = Json::obj(vec![
@@ -177,8 +196,8 @@ impl Reporter {
                 Json::Obj(self.json.into_iter().collect()),
             ),
         ]);
-        let dir = std::env::var("PREBA_RESULTS_DIR").unwrap_or_else(|_| "results".to_string());
-        if std::fs::create_dir_all(&dir).is_ok() {
+        let dir = results_dir();
+        if std::fs::create_dir_all(dir).is_ok() {
             let path = format!("{dir}/{slug}.json");
             if std::fs::write(&path, doc.to_string_pretty()).is_ok() {
                 self.push(format!("\n[written {path}]"));

@@ -16,6 +16,19 @@
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Worker-count override; 0 = unset (fall back to `PREBA_JOBS` / core
+/// count). An atomic rather than an env write: the CLI's `--jobs` and the
+/// benches inject it through [`set_jobs`], because `std::env::set_var`
+/// racing `getenv` across threads is UB on glibc — and `perf_sweep`
+/// legitimately switches worker counts mid-process.
+static JOBS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the worker count programmatically (clamped to >= 1). Overrides
+/// `PREBA_JOBS`; may be called repeatedly.
+pub fn set_jobs(n: usize) {
+    JOBS_OVERRIDE.store(n.max(1), Ordering::Relaxed);
+}
+
 thread_local! {
     /// True while this thread is a pool worker. Nested `run_jobs` calls
     /// (an experiment's inner sweep running inside the parallel
@@ -25,10 +38,14 @@ thread_local! {
     static IN_POOL: Cell<bool> = const { Cell::new(false) };
 }
 
-/// Resolve the worker count: `PREBA_JOBS` if set (and >= 1), otherwise the
-/// number of available cores. The CLI's `--jobs N` sets `PREBA_JOBS`.
+/// Resolve the worker count: [`set_jobs`] override first (the CLI's
+/// `--jobs N`), then `PREBA_JOBS` if set (and >= 1), otherwise the number
+/// of available cores.
 pub fn jobs() -> usize {
-    parse_jobs(std::env::var("PREBA_JOBS").ok().as_deref())
+    match JOBS_OVERRIDE.load(Ordering::Relaxed) {
+        0 => parse_jobs(std::env::var("PREBA_JOBS").ok().as_deref()),
+        n => n,
+    }
 }
 
 /// Pure half of [`jobs`]: interpret an optional `PREBA_JOBS` value. Split

@@ -1,0 +1,91 @@
+//! Integration: the cluster experiment must be bitwise identical at any
+//! `--jobs` count — every cell (packing DES runs, routing comparison, and
+//! the reconfig-enabled runs with their controller decisions) is a pure
+//! function of its seed, and the sweep engine merges in job order. Plus a
+//! `preba cluster` CLI smoke test.
+
+use std::process::Command;
+
+fn run_cluster(jobs: &str, out_dir: &std::path::Path) -> Vec<u8> {
+    let _ = std::fs::remove_dir_all(out_dir);
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .env("PREBA_FAST", "1")
+        .args([
+            "experiment",
+            "cluster",
+            "--jobs",
+            jobs,
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba experiment cluster --jobs {jobs} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out.stdout
+}
+
+#[test]
+fn experiment_cluster_identical_at_jobs_1_and_4() {
+    let base = std::env::temp_dir().join("preba_cluster_determinism");
+    let dir1 = base.join("j1");
+    let dir4 = base.join("j4");
+    let stdout1 = run_cluster("1", &dir1);
+    let stdout4 = run_cluster("4", &dir4);
+
+    assert_eq!(
+        String::from_utf8_lossy(&stdout1).replace(dir1.to_str().unwrap(), "<out>"),
+        String::from_utf8_lossy(&stdout4).replace(dir4.to_str().unwrap(), "<out>"),
+        "stdout differs between --jobs 1 and --jobs 4"
+    );
+
+    let json1 = std::fs::read(dir1.join("cluster.json")).expect("cluster.json at jobs=1");
+    let json4 = std::fs::read(dir4.join("cluster.json")).expect("cluster.json at jobs=4");
+    assert!(!json1.is_empty());
+    assert_eq!(json1, json4, "results JSON differs between --jobs 1 and --jobs 4");
+}
+
+#[test]
+fn cluster_cli_reports_both_packings_and_the_bfd_win() {
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args(["cluster", "--gpus", "4", "--horizon", "2"])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba cluster failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("first-fit"), "{text}");
+    assert!(text.contains("best-fit"), "{text}");
+    assert!(text.contains("stranded"), "{text}");
+}
+
+#[test]
+fn cluster_cli_online_rebalancing_smoke() {
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args([
+            "cluster",
+            "--gpus",
+            "2",
+            "--horizon",
+            "2",
+            "--strategy",
+            "bfd",
+            "--reconfig",
+        ])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba cluster --reconfig failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rebalances"), "{text}");
+    assert!(text.contains("migrations"), "{text}");
+}

@@ -8,6 +8,16 @@
 use preba::config::PrebaConfig;
 use preba::experiments;
 
+/// One results directory for the whole binary: `set_results_dir` is a
+/// process-wide first-caller-wins OnceCell (the replacement for the old
+/// `std::env::set_var` idiom, which is UB with parallel test threads), so
+/// every test that writes results shares it.
+fn results_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("preba_results_integration");
+    preba::util::bench::set_results_dir(dir.to_str().unwrap());
+    dir
+}
+
 #[test]
 fn registry_ids_unique_and_resolvable() {
     let mut ids: Vec<&str> = experiments::ALL.iter().map(|(id, _)| *id).collect();
@@ -24,11 +34,13 @@ fn registry_ids_unique_and_resolvable() {
 #[test]
 fn cheap_experiments_produce_data() {
     // The analytic / non-simulation experiments run in milliseconds and
-    // must produce non-empty data sections.
-    let dir = std::env::temp_dir().join("preba_results");
-    std::env::set_var("PREBA_RESULTS_DIR", dir.to_str().unwrap());
+    // must produce non-empty data sections. table1 is exercised by
+    // `results_files_written_and_parse_back` instead — both tests share
+    // one results directory now, and running table1 here too would race
+    // that test's read of table1.json under the parallel harness.
+    let _dir = results_dir();
     let sys = PrebaConfig::new();
-    for id in ["fig5", "fig6", "fig12", "fig13", "fig14", "fig15", "table1"] {
+    for id in ["fig5", "fig6", "fig12", "fig13", "fig14", "fig15"] {
         let f = experiments::by_id(id).unwrap();
         let doc = f(&sys);
         let data = doc.get("data").unwrap().as_obj().unwrap();
@@ -38,8 +50,7 @@ fn cheap_experiments_produce_data() {
 
 #[test]
 fn results_files_written_and_parse_back() {
-    let dir = std::env::temp_dir().join("preba_results_roundtrip");
-    std::env::set_var("PREBA_RESULTS_DIR", dir.to_str().unwrap());
+    let dir = results_dir();
     let sys = PrebaConfig::new();
     experiments::by_id("table1").unwrap()(&sys);
     let text = std::fs::read_to_string(dir.join("table1.json")).unwrap();

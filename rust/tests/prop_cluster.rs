@@ -1,0 +1,183 @@
+//! Property tests for the cross-GPU rebalancing planner
+//! (`mig::reconfig::plan_cluster_moves`): moves are always legal (donor
+//! present, per-GPU capacity held, no tenant starved to zero), the
+//! migration flag is truthful, in-place reassignment is preferred
+//! whenever one exists for the gaining tenant, and migrations clear the
+//! amortized-cost bar — an astronomically expensive migration is never
+//! emitted.
+
+use preba::mig::reconfig::plan_cluster_moves;
+use preba::mig::{ReconfigPolicy, ServiceModel, Slice, TenantSpec};
+use preba::models::ModelId;
+use preba::prop_assert;
+use preba::util::prop::check_default;
+use preba::util::Rng;
+
+fn swin(sla_ms: f64) -> TenantSpec {
+    TenantSpec::new(ModelId::SwinTransformer, sla_ms)
+}
+
+/// Slices a tenant needs at the planner's sizing rule (the contract the
+/// planner documents: rate / (plateau × target_util), ceil, min 1).
+fn need_of(spec: &TenantSpec, slice: Slice, rate: f64, target_util: f64) -> usize {
+    let per_slice = ServiceModel::new(spec.model.spec(), slice.gpcs).plateau_qps(spec.len_s);
+    ((rate / (per_slice * target_util).max(1e-9)).ceil() as usize).max(1)
+}
+
+struct Scenario {
+    tenants: Vec<TenantSpec>,
+    slices: Vec<Slice>,
+    rates: Vec<f64>,
+    alloc: Vec<Vec<usize>>,
+}
+
+/// Random cluster state: 2-4 tenants on 1g/2g profiles, 2-4 GPUs filled
+/// greedily, rates anywhere from idle to 3× current capacity.
+fn random_scenario(rng: &mut Rng) -> Scenario {
+    let n_tenants = 2 + rng.below(3) as usize;
+    let n_gpus = 2 + rng.below(3) as usize;
+    let profiles = [Slice::new(1, 5), Slice::new(2, 10)];
+    let slices: Vec<Slice> =
+        (0..n_tenants).map(|_| profiles[rng.below(2) as usize]).collect();
+    let mut alloc = vec![vec![0usize; n_tenants]; n_gpus];
+    for row in alloc.iter_mut() {
+        let mut gpcs = 0usize;
+        let mut mem = 0usize;
+        for _ in 0..8 {
+            let t = rng.below(n_tenants as u64) as usize;
+            if gpcs + slices[t].gpcs <= 7 && mem + slices[t].mem_gb <= 40 {
+                row[t] += 1;
+                gpcs += slices[t].gpcs;
+                mem += slices[t].mem_gb;
+            }
+        }
+    }
+    let tenants: Vec<TenantSpec> = (0..n_tenants).map(|_| swin(25.0)).collect();
+    let rates: Vec<f64> = (0..n_tenants)
+        .map(|i| {
+            let have: usize = alloc.iter().map(|g| g[i]).sum();
+            let cap = have.max(1) as f64
+                * ServiceModel::new(tenants[i].model.spec(), slices[i].gpcs).plateau_qps(0.0);
+            rng.f64() * 3.0 * cap
+        })
+        .collect();
+    Scenario { tenants, slices, rates, alloc }
+}
+
+#[test]
+fn moves_are_legal_and_in_place_is_preferred() {
+    check_default("cluster moves legal + in-place preferred", |rng| {
+        let s = random_scenario(rng);
+        let policy = ReconfigPolicy::default();
+        let moves =
+            plan_cluster_moves(&s.tenants, &s.slices, &s.rates, &s.alloc, &policy);
+
+        let t = s.tenants.len();
+        let need: Vec<usize> = (0..t)
+            .map(|i| need_of(&s.tenants[i], s.slices[i], s.rates[i], policy.target_util))
+            .collect();
+        let started: Vec<usize> = (0..t).map(|i| s.alloc.iter().map(|g| g[i]).sum()).collect();
+
+        // Replay each move against an evolving state and re-check the
+        // planner's own invariants.
+        let mut state = s.alloc.clone();
+        let mut have = started.clone();
+        for m in &moves {
+            prop_assert!(m.from != m.to, "self-move {m:?}");
+            prop_assert!(state[m.gpu][m.from] >= 1, "donor absent on GPU: {m:?}");
+            prop_assert!(have[m.from] > need[m.from], "donor had no surplus: {m:?}");
+            prop_assert!(have[m.to] < need[m.to], "gainer had no deficit: {m:?}");
+            prop_assert!(
+                m.migration == (state[m.gpu][m.to] == 0),
+                "migration flag untruthful: {m:?}"
+            );
+            if m.migration {
+                // An in-place alternative for this gainer must not exist.
+                for (g, row) in state.iter().enumerate() {
+                    for (d, &cnt) in row.iter().enumerate() {
+                        if d == m.to || cnt == 0 || have[d] <= need[d] || state[g][m.to] == 0 {
+                            continue;
+                        }
+                        let gpc_used: usize =
+                            (0..t).map(|i| state[g][i] * s.slices[i].gpcs).sum();
+                        let mem_used: usize =
+                            (0..t).map(|i| state[g][i] * s.slices[i].mem_gb).sum();
+                        let fits = 7 - gpc_used + s.slices[d].gpcs >= s.slices[m.to].gpcs
+                            && 40 - mem_used + s.slices[d].mem_gb >= s.slices[m.to].mem_gb;
+                        prop_assert!(
+                            !fits,
+                            "migrated while in-place existed on GPU {g} from {d}: {m:?}"
+                        );
+                    }
+                }
+            }
+            state[m.gpu][m.from] -= 1;
+            state[m.gpu][m.to] += 1;
+            have[m.from] -= 1;
+            have[m.to] += 1;
+            // Capacity invariants after the move.
+            let gpcs: usize = (0..t).map(|i| state[m.gpu][i] * s.slices[i].gpcs).sum();
+            let mem: usize = (0..t).map(|i| state[m.gpu][i] * s.slices[i].mem_gb).sum();
+            prop_assert!(gpcs <= 7 && mem <= 40, "GPU over capacity after {m:?}");
+        }
+        // No tenant that had capacity is starved to zero.
+        for i in 0..t {
+            if started[i] >= 1 {
+                prop_assert!(have[i] >= 1, "tenant {i} starved to zero");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn planner_is_deterministic() {
+    check_default("cluster planner determinism", |rng| {
+        let s = random_scenario(rng);
+        let policy = ReconfigPolicy::default();
+        let a = plan_cluster_moves(&s.tenants, &s.slices, &s.rates, &s.alloc, &policy);
+        let b = plan_cluster_moves(&s.tenants, &s.slices, &s.rates, &s.alloc, &policy);
+        prop_assert!(a == b, "moves diverged: {a:?} vs {b:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn migrations_never_clear_an_astronomical_cost_bar() {
+    check_default("migration bar", |rng| {
+        let s = random_scenario(rng);
+        let policy = ReconfigPolicy { migration_s: 1e9, ..Default::default() };
+        let moves =
+            plan_cluster_moves(&s.tenants, &s.slices, &s.rates, &s.alloc, &policy);
+        for m in &moves {
+            prop_assert!(
+                !m.migration,
+                "migration emitted despite an unamortizable cost: {m:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The directed version of the cost-bar property: relief that must cross
+/// GPUs happens exactly when the amortized win clears the migration bar.
+#[test]
+fn cross_gpu_relief_is_gated_by_the_bar() {
+    let tenants = vec![swin(25.0), swin(25.0)];
+    let slices = vec![Slice::new(1, 5), Slice::new(1, 5)];
+    let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+    // A owns GPU0 and is overloaded 30%; B idles on GPU1.
+    let alloc = vec![vec![7, 0], vec![0, 7]];
+    let rates = [9.1 * u, 0.1 * u];
+
+    let cheap = ReconfigPolicy { migration_s: 0.2, ..Default::default() };
+    let moves = plan_cluster_moves(&tenants, &slices, &rates, &alloc, &cheap);
+    assert!(
+        moves.iter().any(|m| m.migration),
+        "cheap migration should rescue the overloaded tenant: {moves:?}"
+    );
+
+    let dear = ReconfigPolicy { migration_s: 1e6, ..Default::default() };
+    let moves = plan_cluster_moves(&tenants, &slices, &rates, &alloc, &dear);
+    assert!(moves.is_empty(), "unamortizable migration must not be planned: {moves:?}");
+}

@@ -1,0 +1,99 @@
+//! Property tests for `mig::placement`: packing never violates per-GPU
+//! capacity, conserves the ask list, is deterministic, and
+//! best-fit-decreasing dominates first-fit on the divisible-profile
+//! family.
+
+use preba::mig::placement::{pack, PackStrategy, SliceAsk};
+use preba::mig::Slice;
+use preba::prop_assert;
+use preba::util::prop::check_default;
+use preba::util::Rng;
+
+/// Random ask list over the full legal profile set.
+fn random_asks(rng: &mut Rng, profiles: &[Slice]) -> Vec<SliceAsk> {
+    let n = 1 + rng.below(12) as usize;
+    (0..n)
+        .map(|i| {
+            let k = rng.below(profiles.len() as u64) as usize;
+            SliceAsk { tenant: i % 5, slice: profiles[k] }
+        })
+        .collect()
+}
+
+#[test]
+fn packing_never_exceeds_gpu_capacity_and_conserves_asks() {
+    check_default("placement capacity+conservation", |rng| {
+        let asks = random_asks(rng, &Slice::PROFILES);
+        let n_gpus = 1 + rng.below(4) as usize;
+        for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
+            let p = pack(&asks, n_gpus, strategy);
+            // Per-GPU compute and memory budgets hold — no slice overlaps
+            // a GPC or a DRAM slice another instance owns.
+            for (g, bin) in p.bins.iter().enumerate() {
+                let gpcs: usize = bin.placed.iter().map(|a| a.slice.gpcs).sum();
+                let mem: usize = bin.placed.iter().map(|a| a.slice.mem_gb).sum();
+                prop_assert!(gpcs <= 7, "GPU {g} over GPCs: {gpcs} ({strategy:?})");
+                prop_assert!(mem <= 40, "GPU {g} over memory: {mem} ({strategy:?})");
+                prop_assert!(
+                    bin.gpcs_free == 7 - gpcs && bin.mem_free_gb == 40 - mem,
+                    "GPU {g} free-capacity accounting drifted"
+                );
+            }
+            // Placed + rejected = asked (multiset, by total GPCs and count).
+            let placed = p.placements.len() + p.rejected.len();
+            prop_assert!(placed == asks.len(), "{} of {} asks accounted", placed, asks.len());
+            let asked: usize = asks.iter().map(|a| a.slice.gpcs).sum();
+            prop_assert!(p.asked_gpcs() == asked);
+            // Every placement is inside the bin it claims.
+            for (ask, g) in &p.placements {
+                prop_assert!(*g < n_gpus);
+                prop_assert!(p.bins[*g].placed.contains(ask));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packing_is_deterministic_for_a_fixed_seed() {
+    check_default("placement determinism", |rng| {
+        let asks = random_asks(rng, &Slice::PROFILES);
+        let n_gpus = 1 + rng.below(4) as usize;
+        for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
+            let a = pack(&asks, n_gpus, strategy);
+            let b = pack(&asks, n_gpus, strategy);
+            prop_assert!(a.placements == b.placements, "{strategy:?} placements diverged");
+            prop_assert!(a.rejected == b.rejected, "{strategy:?} rejections diverged");
+        }
+        Ok(())
+    });
+}
+
+/// On the divisible profile family {1g.5gb, 2g.10gb, 4g.20gb} (each size
+/// divides the next; memory is exactly 5 GB/GPC so it never binds before
+/// compute), big-first greedy packing is optimal — so best-fit-decreasing
+/// must admit at least as much capacity as first-fit and never strand
+/// more GPCs behind awkward remainders.
+#[test]
+fn bfd_dominates_ff_on_divisible_demand() {
+    let divisible = [Slice::new(1, 5), Slice::new(2, 10), Slice::new(4, 20)];
+    check_default("bfd >= ff (divisible family)", |rng| {
+        let asks = random_asks(rng, &divisible);
+        let n_gpus = 1 + rng.below(4) as usize;
+        let ff = pack(&asks, n_gpus, PackStrategy::FirstFit);
+        let bf = pack(&asks, n_gpus, PackStrategy::BestFit);
+        prop_assert!(
+            bf.admitted_gpcs() >= ff.admitted_gpcs(),
+            "bfd admitted {} < ff {} for {asks:?} on {n_gpus} GPUs",
+            bf.admitted_gpcs(),
+            ff.admitted_gpcs()
+        );
+        prop_assert!(
+            bf.stranded_gpcs() <= ff.stranded_gpcs(),
+            "bfd stranded {} > ff {} for {asks:?} on {n_gpus} GPUs",
+            bf.stranded_gpcs(),
+            ff.stranded_gpcs()
+        );
+        Ok(())
+    });
+}
