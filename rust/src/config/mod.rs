@@ -170,8 +170,20 @@ impl Default for DpuConfig {
 /// Cluster-serving defaults (`preba cluster`, `server::cluster`).
 #[derive(Debug, Clone)]
 pub struct ClusterDefaults {
-    /// GPUs in the inventory the CLI simulates by default.
+    /// GPUs in the inventory the CLI simulates by default (all A100 when
+    /// no `--fleet`/`fleet` spec is given).
     pub gpus: usize,
+    /// Default fleet spec (`a100x4`, `a100x2,a30x2`, ...); empty = a
+    /// homogeneous A100 pool of `gpus`.
+    pub fleet: String,
+    /// A100-preset compute capacity, GPCs (datasheet: 7).
+    pub a100_gpcs: usize,
+    /// A100-preset memory capacity, GB (A100-40GB).
+    pub a100_mem_gb: usize,
+    /// A30-style-preset compute capacity, GPCs (datasheet: 4).
+    pub a30_gpcs: usize,
+    /// A30-style-preset memory capacity, GB (A30: 24).
+    pub a30_mem_gb: usize,
     /// Default simulated horizon per run, seconds (per-tenant request
     /// budgets are sized as rate × horizon).
     pub horizon_s: f64,
@@ -186,7 +198,53 @@ pub struct ClusterDefaults {
 
 impl Default for ClusterDefaults {
     fn default() -> Self {
-        ClusterDefaults { gpus: 4, horizon_s: 10.0, migration_s: 0.3, repartition_s: 0.1 }
+        ClusterDefaults {
+            gpus: 4,
+            fleet: String::new(),
+            a100_gpcs: crate::mig::GpuClass::A100.gpcs,
+            a100_mem_gb: crate::mig::GpuClass::A100.mem_gb,
+            a30_gpcs: crate::mig::GpuClass::A30.gpcs,
+            a30_mem_gb: crate::mig::GpuClass::A30.mem_gb,
+            horizon_s: 10.0,
+            migration_s: 0.3,
+            repartition_s: 0.1,
+        }
+    }
+}
+
+impl ClusterDefaults {
+    /// Resolve a class label against these (possibly TOML-overridden)
+    /// preset capacities.
+    pub fn class(&self, name: &str) -> Option<crate::mig::GpuClass> {
+        match name {
+            "a100" | "A100" => Some(crate::mig::GpuClass {
+                name: "a100",
+                gpcs: self.a100_gpcs,
+                mem_gb: self.a100_mem_gb,
+            }),
+            "a30" | "A30" => Some(crate::mig::GpuClass {
+                name: "a30",
+                gpcs: self.a30_gpcs,
+                mem_gb: self.a30_mem_gb,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Parse a `a100x4,a30x2` fleet spec with these preset capacities.
+    pub fn parse_fleet(&self, spec: &str) -> anyhow::Result<Vec<crate::mig::GpuClass>> {
+        crate::mig::partition::parse_fleet_with(spec, |name| self.class(name))
+    }
+
+    /// The inventory the CLI should simulate: the configured `fleet` spec
+    /// when set, else `gpus` A100s.
+    pub fn default_fleet(&self) -> anyhow::Result<Vec<crate::mig::GpuClass>> {
+        if self.fleet.trim().is_empty() {
+            let a100 = self.class("a100").expect("a100 preset");
+            Ok(vec![a100; self.gpus])
+        } else {
+            self.parse_fleet(&self.fleet)
+        }
     }
 }
 
@@ -277,6 +335,13 @@ impl PrebaConfig {
 
         let c = &mut self.cluster;
         c.gpus = doc.i64_or("cluster.gpus", c.gpus as i64) as usize;
+        if let Some(v) = doc.get("cluster.fleet").and_then(toml::Value::as_str) {
+            c.fleet = v.to_string();
+        }
+        c.a100_gpcs = doc.i64_or("cluster.a100_gpcs", c.a100_gpcs as i64) as usize;
+        c.a100_mem_gb = doc.i64_or("cluster.a100_mem_gb", c.a100_mem_gb as i64) as usize;
+        c.a30_gpcs = doc.i64_or("cluster.a30_gpcs", c.a30_gpcs as i64) as usize;
+        c.a30_mem_gb = doc.i64_or("cluster.a30_mem_gb", c.a30_mem_gb as i64) as usize;
         c.horizon_s = doc.f64_or("cluster.horizon_s", c.horizon_s);
         c.migration_s = doc.f64_or("cluster.migration_s", c.migration_s);
         c.repartition_s = doc.f64_or("cluster.repartition_s", c.repartition_s);
@@ -305,6 +370,15 @@ impl PrebaConfig {
         anyhow::ensure!(self.workload.warmup_frac < 0.9, "warmup_frac too large");
         anyhow::ensure!(self.dpu.image_cus >= 1, "need at least one image CU");
         anyhow::ensure!(self.cluster.gpus >= 1, "cluster needs at least one GPU");
+        anyhow::ensure!(
+            self.cluster.a100_gpcs >= 1 && self.cluster.a30_gpcs >= 1,
+            "GPU class presets need at least one GPC"
+        );
+        anyhow::ensure!(
+            self.cluster.a100_mem_gb >= 1 && self.cluster.a30_mem_gb >= 1,
+            "GPU class presets need memory"
+        );
+        self.cluster.default_fleet().map_err(|e| anyhow::anyhow!("cluster.fleet: {e}"))?;
         anyhow::ensure!(self.cluster.horizon_s > 0.0, "cluster horizon must be positive");
         anyhow::ensure!(
             self.cluster.migration_s >= self.cluster.repartition_s,
@@ -346,6 +420,35 @@ mod tests {
         assert_eq!(cfg.workload.requests, 500);
         // untouched default survives
         assert_eq!(cfg.power.gpu_tdp_w, 400.0);
+    }
+
+    #[test]
+    fn fleet_presets_resolve_and_override() {
+        let defaults = ClusterDefaults::default();
+        let fleet = defaults.parse_fleet("a100x2,a30").unwrap();
+        assert_eq!(fleet.len(), 3);
+        assert_eq!(fleet[0], crate::mig::GpuClass::A100);
+        assert_eq!(fleet[2], crate::mig::GpuClass::A30);
+        assert_eq!(defaults.default_fleet().unwrap().len(), defaults.gpus);
+
+        let doc = toml::parse(
+            r#"
+            [cluster]
+            fleet = "a30x2"
+            a30_mem_gb = 32
+            "#,
+        )
+        .unwrap();
+        let mut cfg = PrebaConfig::new();
+        cfg.apply(&doc).unwrap();
+        let fleet = cfg.cluster.default_fleet().unwrap();
+        assert_eq!(fleet.len(), 2);
+        assert_eq!(fleet[0].name, "a30");
+        assert_eq!(fleet[0].mem_gb, 32, "preset override ignored");
+
+        let mut bad = PrebaConfig::new();
+        bad.cluster.fleet = "h100x8".into();
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! fewer GPCs than first-fit; this experiment closes the loop by driving
 //! the packed inventory with the cluster DES (`server::cluster`) so the
 //! stranded capacity shows up where it hurts — the fleet's p99 and
-//! SLA-violation fraction (ParvaGPU, arXiv:2409.14447). Three sections:
+//! SLA-violation fraction (ParvaGPU, arXiv:2409.14447). Five sections:
 //!
 //! 1. **FF vs BFD at 2/4/8 GPUs** under diurnal multi-tenant load. The
 //!    ask list arrives small-profile-first (the adversarial order for
@@ -17,15 +17,25 @@
 //!    packed onto their own GPU. Capacity can only follow demand by
 //!    crossing GPUs — the controller's first move is a migration (paying
 //!    `migration_s`), follow-ups on the same GPU are in-place.
+//! 4. **Heterogeneous fleet** (2×A100 + 2×A30-style 4-GPC): per-GPU
+//!    class capacity decides placement quality — FF burns the big GPUs
+//!    on small slices and rejects a hot 4g replica, BFD packs the tight
+//!    A30 bins with the 4g replicas first.
+//! 5. **Trace replay + admission control**: both tenants replay
+//!    Azure-style recorded traces; one tenant's ask is rejected at pack
+//!    time. Without admission its pre-rescue traffic is dropped; with
+//!    admission it waits in the pending queue and is served once the
+//!    controller re-packs capacity freed by the other tenant's diurnal
+//!    trough (deferred_served > 0, strictly fewer drops).
 
 use crate::config::PrebaConfig;
-use crate::mig::{PackStrategy, ReconfigPolicy, ServiceModel, Slice};
+use crate::mig::{GpuClass, PackStrategy, ReconfigPolicy, ServiceModel, Slice};
 use crate::models::ModelId;
 use crate::server::cluster::{self, ClusterConfig, ClusterOutcome, ClusterTenant, Routing};
 use crate::util::bench::Reporter;
 use crate::util::json::Json;
 use crate::util::table::{num, Table};
-use crate::workload::RateProfile;
+use crate::workload::{RateProfile, ReplayTrace};
 
 use super::support;
 
@@ -116,6 +126,65 @@ pub fn antiphase_pair(horizon_s: f64) -> Vec<ClusterTenant> {
         t
     };
     vec![mk(0.0), mk(0.5)]
+}
+
+/// The heterogeneous inventory of section 4: two A100s + two A30-style
+/// 4-GPC GPUs (22 GPCs total).
+pub fn hetero_fleet() -> Vec<GpuClass> {
+    vec![GpuClass::A100, GpuClass::A100, GpuClass::A30, GpuClass::A30]
+}
+
+/// Heterogeneous-fleet tenants: 6×1g (light), 2×3g (medium), 3×4g (hot).
+/// In ask order (small-profile-first) first-fit burns the A100s on small
+/// slices, parks two 4g replicas on the A30s and must reject the third —
+/// the hot tenant then runs ~40% past its admitted capacity and its tail
+/// diverges. Best-fit-decreasing gives the 4g replicas the tight A30 bins
+/// first, packs 22/24 GPCs and keeps every tenant under ρ≈0.7.
+pub fn hetero_tenants(horizon_s: f64) -> Vec<ClusterTenant> {
+    let mk = |slice: Slice, count: usize, util: f64| {
+        let rate = util * count as f64 * swin_plateau(slice.gpcs);
+        let mut t = ClusterTenant::new(ModelId::SwinTransformer, slice, count, rate);
+        t.sla_ms = SLA_MS;
+        t.requests = (rate * horizon_s).ceil() as usize;
+        t
+    };
+    vec![
+        mk(Slice::new(1, 5), 6, 0.45),
+        mk(Slice::new(3, 20), 2, 0.5),
+        mk(Slice::new(4, 20), 3, 0.7),
+    ]
+}
+
+/// Trace-replay + admission tenants (section 5): tenant A replays an
+/// Azure-style recorded trace sized to fill both GPUs at its diurnal
+/// peak (asking all 14 slices); tenant B replays a light trace but its
+/// 2×1g ask is REJECTED at pack time — the fleet is full. The cross-GPU
+/// controller rescues B out of A's diurnal trough; admission control
+/// decides whether B's pre-rescue traffic waits (deferred-then-served)
+/// or is dropped.
+pub fn replay_tenants(horizon_s: f64) -> Vec<ClusterTenant> {
+    let u = swin_plateau(1);
+    let mut a = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), 14, 9.0 * u)
+        .with_trace(ReplayTrace::synth_azure(0xA2A1, horizon_s, 9.0 * u));
+    a.sla_ms = SLA_MS;
+    let mut b = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), 2, 2.0 * u)
+        .with_trace(ReplayTrace::synth_azure(0xA2B2, horizon_s, 2.0 * u));
+    b.sla_ms = SLA_MS;
+    vec![a, b]
+}
+
+/// One replay-run config for section 5: BFD packing, online controller,
+/// admission on/off. `pub` so tests and examples can rerun the exact
+/// scenario the experiment reports.
+pub fn replay_cfg(admission: bool, horizon_s: f64, sys: &PrebaConfig) -> ClusterConfig {
+    let mut cfg = ClusterConfig::new(2, PackStrategy::BestFit, replay_tenants(horizon_s));
+    cfg.seed = 0xC1A3;
+    cfg.reconfig = Some(policy(sys));
+    cfg.admission = admission;
+    // Deferral starts at the first telemetry window; a 5% warmup would
+    // swallow the pre-rescue drops the comparison scores.
+    cfg.warmup_frac = 0.01;
+    cfg
 }
 
 fn run_cell(cfg: &ClusterConfig, sys: &PrebaConfig) -> ClusterOutcome {
@@ -270,6 +339,95 @@ pub fn run(sys: &PrebaConfig) -> Json {
         }
     }
     rep.data("reconfig", Json::Arr(rows));
+
+    // ---- Section 4: heterogeneous fleet (A100 + A30) FF vs BFD. ----
+    rep.section("heterogeneous fleet (2×A100 + 2×A30): first-fit vs best-fit-decreasing");
+    let strategies = [PackStrategy::FirstFit, PackStrategy::BestFit];
+    let cfgs: Vec<ClusterConfig> = strategies
+        .iter()
+        .map(|&strategy| {
+            let mut cfg = ClusterConfig::with_fleet(
+                hetero_fleet(),
+                strategy,
+                hetero_tenants(horizon_s * 0.5),
+            );
+            cfg.seed = 0xC1A4;
+            cfg
+        })
+        .collect();
+    let outs = super::sweep(&cfgs, |cfg| run_cell(cfg, sys));
+    let mut t = Table::new(&[
+        "packing", "admitted", "asked", "stranded %", "worst p95 ms", "worst p99 ms", "viol %",
+    ]);
+    let mut rows = Vec::new();
+    for ((strategy, cfg), out) in strategies.iter().zip(cfgs.iter()).zip(outs.iter()) {
+        let viol = out.max_violation_frac(&cfg.tenants);
+        t.row(&[
+            strategy.label().to_string(),
+            out.packing.admitted_gpcs().to_string(),
+            out.packing.asked_gpcs().to_string(),
+            num(out.packing.fragmentation() * 100.0),
+            num(out.worst_p95_ms()),
+            num(out.worst_p99_ms()),
+            num(viol * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("strategy", Json::str(strategy.label())),
+            ("admitted_gpcs", Json::num(out.packing.admitted_gpcs() as f64)),
+            ("asked_gpcs", Json::num(out.packing.asked_gpcs() as f64)),
+            ("stranded_gpcs", Json::num(out.packing.stranded_gpcs() as f64)),
+            ("worst_p95_ms", Json::num(out.worst_p95_ms())),
+            ("worst_p99_ms", Json::num(out.worst_p99_ms())),
+            ("max_violation_frac", Json::num(viol)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("hetero", Json::Arr(rows));
+
+    // ---- Section 5: trace replay + admission control. ----
+    rep.section("Azure-style trace replay: rejected tenant, drop vs admission-defer");
+    let modes = [false, true];
+    let cfgs: Vec<ClusterConfig> =
+        modes.iter().map(|&adm| replay_cfg(adm, horizon_s * 0.6, sys)).collect();
+    let outs = super::sweep(&cfgs, |cfg| run_cell(cfg, sys));
+    let mut t = Table::new(&[
+        "mode", "dropped", "deferred", "deferred served", "rebalances", "migrations",
+        "worst p95 ms",
+    ]);
+    let mut rows = Vec::new();
+    for ((&adm, cfg), out) in modes.iter().zip(cfgs.iter()).zip(outs.iter()) {
+        let mode = if adm { "admission" } else { "drop" };
+        let dropped: u64 = out.dropped.iter().sum();
+        let deferred: u64 = out.deferred.iter().sum();
+        let deferred_served: u64 = out.deferred_served.iter().sum();
+        t.row(&[
+            mode.to_string(),
+            dropped.to_string(),
+            deferred.to_string(),
+            deferred_served.to_string(),
+            out.reconfigs.to_string(),
+            out.migrations.to_string(),
+            num(out.worst_p95_ms()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("dropped", Json::num(dropped as f64)),
+            ("deferred", Json::num(deferred as f64)),
+            ("deferred_served", Json::num(deferred_served as f64)),
+            ("rejected_asks", Json::num(out.packing.rejected.len() as f64)),
+            ("reconfigs", Json::num(out.reconfigs as f64)),
+            ("migrations", Json::num(out.migrations as f64)),
+            ("worst_p95_ms", Json::num(out.worst_p95_ms())),
+            ("max_violation_frac", Json::num(out.max_violation_frac(&cfg.tenants))),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("replay", Json::Arr(rows));
+
     rep.finish("cluster")
 }
 
@@ -358,5 +516,44 @@ mod tests {
         assert!(
             f(row("online"), "max_violation_frac") < f(row("static"), "max_violation_frac")
         );
+
+        // Heterogeneous fleet: BFD admits more capacity (the A30 bins go
+        // to the 4g replicas), strands less, and the hot tenant's tail
+        // shows the difference.
+        let rows = data.get("hetero").unwrap().as_arr().unwrap();
+        let row = |s: &str| {
+            rows.iter()
+                .find(|r| r.get("strategy").unwrap().as_str().unwrap().starts_with(s))
+                .unwrap()
+        };
+        let (ff, bf) = (row("first-fit"), row("best-fit"));
+        assert!(f(bf, "admitted_gpcs") > f(ff, "admitted_gpcs"), "hetero admitted");
+        assert!(f(bf, "stranded_gpcs") < f(ff, "stranded_gpcs"), "hetero stranded");
+        assert!(
+            f(bf, "worst_p99_ms") < f(ff, "worst_p99_ms"),
+            "hetero p99: bfd {} vs ff {}",
+            f(bf, "worst_p99_ms"),
+            f(ff, "worst_p99_ms")
+        );
+        assert!(f(bf, "max_violation_frac") < f(ff, "max_violation_frac"), "hetero viol");
+
+        // Trace replay + admission: the rejected tenant's traffic is
+        // deferred-then-served instead of dropped.
+        let rows = data.get("replay").unwrap().as_arr().unwrap();
+        let row = |mode: &str| {
+            rows.iter().find(|r| r.get("mode").unwrap().as_str() == Some(mode)).unwrap()
+        };
+        let (drop, adm) = (row("drop"), row("admission"));
+        assert!(f(drop, "rejected_asks") >= 1.0, "nothing was rejected at pack time");
+        assert!(f(drop, "dropped") > 0.0, "baseline never dropped");
+        assert_eq!(f(drop, "deferred"), 0.0);
+        assert!(f(adm, "deferred_served") > 0.0, "admission served no deferred traffic");
+        assert!(
+            f(adm, "dropped") < f(drop, "dropped"),
+            "admission {} vs drop {} drops",
+            f(adm, "dropped"),
+            f(drop, "dropped")
+        );
+        assert!(f(adm, "migrations") >= 1.0, "the rescue must cross GPUs");
     }
 }

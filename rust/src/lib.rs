@@ -23,8 +23,35 @@
 //! `artifacts/*.hlo.txt` + `manifest.json` once, and the `preba` binary is
 //! self-contained afterwards.
 //!
-//! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! ## Module map (bottom-up)
+//!
+//! | layer | modules | role |
+//! |---|---|---|
+//! | core | [`clock`], [`util`], [`sim`] | virtual time, RNG/stats/JSON/job pool, 4-ary event heap |
+//! | models | [`models`], [`mig`], [`profiler`] | workload specs, MIG geometry + service model + packing/reconfig planners |
+//! | serving | [`batching`], [`preprocess`], [`dpu`], [`workload`] | dynamic batching, CPU-pool/DPU preprocessing, arrival synthesis + trace replay |
+//! | drivers | [`server`] | DES drivers (single GPU, multi-tenant, multi-GPU cluster) + the real-PJRT driver |
+//! | surface | [`experiments`], [`metrics`], [`config`], [`cli`], [`rt`], [`runtime`] | figure regeneration, power/TCO, TOML config, CLI plumbing, PJRT runtime |
+//!
+//! `ARCHITECTURE.md` walks the same map in prose — including the
+//! drain → outage → restart reconfiguration lifecycle and the
+//! determinism contract; `EXPERIMENTS.md` has the per-experiment notes
+//! and paper-vs-measured results.
+//!
+//! A five-line taste of the analytic layer (everything below the DES is
+//! callable as a library):
+//!
+//! ```
+//! use preba::mig::placement::{pack, SliceAsk};
+//! use preba::mig::{PackStrategy, Slice};
+//!
+//! // Three 4g.20gb asks onto two A100s: one per GPU fits, the third is
+//! // rejected (7 - 4 = 3 GPCs left on each).
+//! let asks = vec![SliceAsk { tenant: 0, slice: Slice::new(4, 20) }; 3];
+//! let packing = pack(&asks, 2, PackStrategy::BestFit);
+//! assert_eq!(packing.placements.len(), 2);
+//! assert_eq!(packing.rejected.len(), 1);
+//! ```
 
 pub mod batching;
 pub mod cli;

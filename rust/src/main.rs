@@ -37,11 +37,18 @@ fn usage() -> &'static str {
                 [--window S] [--cooldown S] [--repartition S]\n\
                 (two colocated tenants, static fair split vs online slice\n\
                 reallocation; diurnal tenants run in anti-phase)\n\
-     cluster    [--gpus N] [--strategy ff|bfd|both] [--routing jsq|rr] [--horizon S]\n\
-                [--seed S] [--reconfig] [--migration S] [--repartition S]\n\
-                (multi-GPU DES: a diurnal tenant fleet packed onto N A100s;\n\
-                FF vs BFD stranded capacity, fleet p95/p99/SLA violations,\n\
-                and optional online cross-GPU rebalancing with migrations)\n\
+     cluster    [--gpus N] [--fleet a100x4,a30x4] [--strategy ff|bfd|both] [--routing jsq|rr]\n\
+                [--horizon S] [--seed S] [--reconfig] [--migration S] [--repartition S]\n\
+                [--trace PATH|azure] [--rate-scale X] [--admission]\n\
+                (multi-GPU DES: a diurnal tenant fleet packed onto a — possibly\n\
+                heterogeneous — GPU inventory; FF vs BFD stranded capacity, fleet\n\
+                p95/p99/SLA violations, optional online cross-GPU rebalancing.\n\
+                --trace replays recorded arrival timestamps (CSV/JSON; 'azure' =\n\
+                bundled synthetic generator) fitted to the horizon and thinned\n\
+                per tenant, --rate-scale multiplies the offered load, and\n\
+                --admission parks rejected\n\
+                tenants' traffic in a pending queue the controller re-packs\n\
+                instead of dropping it — implies --reconfig)\n\
      experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|cluster|all>\n\
                 [--jobs N] [--out DIR]\n\
      list\n\
@@ -54,7 +61,7 @@ fn usage() -> &'static str {
 }
 
 fn run() -> anyhow::Result<()> {
-    let args = Args::from_env(&["fast", "help", "reconfig"])?;
+    let args = Args::from_env(&["fast", "help", "reconfig", "admission"])?;
     if args.flag("help") || args.command.is_none() {
         println!("{}", usage());
         return Ok(());
@@ -368,16 +375,28 @@ fn reconfig_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
 }
 
 /// `preba cluster`: the diurnal tenant fleet from the `cluster`
-/// experiment packed onto N GPUs — first-fit vs best-fit-decreasing side
-/// by side (stranded capacity and fleet tails), optionally with online
-/// cross-GPU rebalancing.
+/// experiment packed onto a (possibly heterogeneous) GPU inventory —
+/// first-fit vs best-fit-decreasing side by side (stranded capacity and
+/// fleet tails), optionally with online cross-GPU rebalancing, recorded
+/// trace replay, and admission control.
 fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     use preba::experiments::cluster::diurnal_fleet;
-    use preba::mig::PackStrategy;
+    use preba::mig::{GpuClass, PackStrategy};
     use preba::server::cluster::{self, ClusterConfig, Routing};
+    use preba::workload::ReplayTrace;
 
-    let n_gpus = args.opt_u64("gpus", sys.cluster.gpus as u64)? as usize;
-    anyhow::ensure!(n_gpus >= 1, "--gpus must be >= 1");
+    let fleet: Vec<GpuClass> = match args.opt("fleet") {
+        Some(spec) => sys.cluster.parse_fleet(spec)?,
+        None => match args.opt("gpus") {
+            Some(_) => {
+                let n = args.opt_u64("gpus", sys.cluster.gpus as u64)? as usize;
+                anyhow::ensure!(n >= 1, "--gpus must be >= 1");
+                vec![sys.cluster.class("a100").expect("a100 preset"); n]
+            }
+            None => sys.cluster.default_fleet()?,
+        },
+    };
+    let n_gpus = fleet.len();
     let horizon_s = args.opt_f64("horizon", sys.cluster.horizon_s)?;
     anyhow::ensure!(horizon_s > 0.0, "--horizon must be positive");
     let seed = args.opt_u64("seed", 0xC1A0)?;
@@ -390,7 +409,8 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
         "both" => vec![PackStrategy::FirstFit, PackStrategy::BestFit],
         other => anyhow::bail!("unknown --strategy '{other}' (ff|bfd|both)"),
     };
-    let reconfig = if args.flag("reconfig") {
+    let admission = args.flag("admission");
+    let reconfig = if args.flag("reconfig") || admission {
         let repartition_s = args.opt_f64("repartition", sys.cluster.repartition_s)?;
         let migration_s = args.opt_f64("migration", sys.cluster.migration_s)?;
         anyhow::ensure!(
@@ -407,28 +427,66 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
         None
     };
 
-    let tenants = diurnal_fleet(n_gpus, horizon_s);
+    // Recorded-trace replay. The recorded timeline is first fitted onto
+    // the simulated horizon (every tenant replays the SAME span, so the
+    // cross-tenant burst/diurnal alignment survives), then per-tenant
+    // THINNED toward that tenant's mean rate (× --rate-scale) without
+    // re-timing the surviving arrivals. Thinning cannot invent traffic:
+    // a tenant asking more than the recorded density replays the full
+    // trace.
+    let rate_scale = args.opt_f64("rate-scale", 1.0)?;
+    anyhow::ensure!(rate_scale > 0.0, "--rate-scale must be positive");
+    let mut tenants = diurnal_fleet(n_gpus, horizon_s);
+    let trace = match args.opt("trace") {
+        None => None,
+        Some(spec) => {
+            // Dense enough that per-tenant thinning can hit every
+            // tenant's target rate.
+            let max_qps =
+                tenants.iter().map(|t| t.rate_qps).fold(0.0f64, f64::max) * rate_scale;
+            let raw = match spec {
+                "azure" => ReplayTrace::synth_azure(seed ^ 0xA27E, horizon_s, max_qps),
+                path => ReplayTrace::load(path)?,
+            };
+            Some(raw.scaled_to_duration(horizon_s))
+        }
+    };
+    if let Some(trace) = &trace {
+        tenants = tenants
+            .into_iter()
+            .enumerate()
+            .map(|(ti, t)| {
+                let qps = t.rate_qps * rate_scale;
+                let thinned = trace.thinned_to_qps(qps, seed ^ (0x7ACE_0000 + ti as u64));
+                t.with_trace(thinned)
+            })
+            .collect();
+    }
     let total_reqs: usize = tenants.iter().map(|t| t.requests).sum();
+    let fleet_desc = fleet.iter().map(|c| c.name).collect::<Vec<_>>().join(",");
     println!(
-        "cluster of {n_gpus} A100s, {} tenants ({total_reqs} requests over ~{horizon_s} s, \
-         routing {}{})\n",
+        "cluster of {n_gpus} GPUs [{fleet_desc}], {} tenants ({total_reqs} requests over \
+         ~{horizon_s} s, routing {}{}{}{})\n",
         tenants.len(),
         routing.label(),
-        if reconfig.is_some() { ", online cross-GPU rebalancing" } else { "" }
+        if trace.is_some() { ", trace replay" } else { "" },
+        if reconfig.is_some() { ", online cross-GPU rebalancing" } else { "" },
+        if admission { ", admission control" } else { "" }
     );
 
     let mut t = Table::new(&[
         "packing", "admitted", "asked", "stranded %", "worst p95 ms", "worst p99 ms", "viol %",
-        "rebalances", "migrations",
+        "dropped", "deferred", "served late", "rebalances", "migrations",
     ]);
     // Event detail lines are buffered so they print AFTER the summary
     // table whose rebalance/migration columns they annotate.
     let mut timeline: Vec<String> = Vec::new();
     for strategy in strategies {
-        let mut cfg = ClusterConfig::new(n_gpus, strategy, tenants.clone());
+        let mut cfg = ClusterConfig::with_fleet(fleet.clone(), strategy, tenants.clone());
         cfg.routing = routing;
         cfg.seed = seed;
         cfg.reconfig = reconfig.clone();
+        cfg.admission = admission;
         let out = cluster::run(&cfg, sys)?;
         t.row(&[
             strategy.label().to_string(),
@@ -438,6 +496,9 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
             num(out.worst_p95_ms()),
             num(out.worst_p99_ms()),
             num(out.max_violation_frac(&cfg.tenants) * 100.0),
+            out.dropped.iter().sum::<u64>().to_string(),
+            out.deferred.iter().sum::<u64>().to_string(),
+            out.deferred_served.iter().sum::<u64>().to_string(),
             out.reconfigs.to_string(),
             out.migrations.to_string(),
         ]);

@@ -38,6 +38,18 @@ pub struct RunStats {
     pub execution_ms: Summary,
     pub batch_sizes: Summary,
     pub completed: u64,
+    /// Post-warmup requests turned away with no capacity and never
+    /// served (cluster admission accounting; latency summaries above
+    /// exclude these).
+    pub dropped: u64,
+    /// Post-warmup requests that waited in an admission queue because no
+    /// capacity was live at arrival (instead of being dropped outright).
+    /// `deferred - deferred_served` of them still ended as `dropped`.
+    pub deferred: u64,
+    /// Deferred requests that were served once re-packing freed capacity
+    /// — the traffic admission control converts from dropped to merely
+    /// late. Always counted inside `completed` too.
+    pub deferred_served: u64,
     /// Time of first/last completion (for measured throughput).
     first_done: Option<Nanos>,
     last_done: Option<Nanos>,
@@ -87,6 +99,17 @@ impl RunStats {
     /// `sla_ms` (the reconfiguration experiments' violation metric).
     pub fn sla_violation_frac(&self, sla_ms: f64) -> f64 {
         self.e2e_ms.frac_above(sla_ms)
+    }
+
+    /// Fraction of post-warmup demand that was actually served
+    /// (`completed / (completed + dropped)`); 1.0 with no demand.
+    pub fn served_frac(&self) -> f64 {
+        let demand = self.completed + self.dropped;
+        if demand == 0 {
+            1.0
+        } else {
+            self.completed as f64 / demand as f64
+        }
     }
 
     pub fn mean_ms(&self) -> f64 {
@@ -150,6 +173,16 @@ mod tests {
         assert_eq!(s.throughput_qps(), 0.0);
         assert_eq!(s.p95_ms(), 0.0);
         assert_eq!(s.sla_violation_frac(10.0), 0.0);
+    }
+
+    #[test]
+    fn admission_counters_default_zero_and_served_frac() {
+        let mut s = RunStats::new();
+        assert_eq!((s.dropped, s.deferred, s.deferred_served), (0, 0, 0));
+        assert_eq!(s.served_frac(), 1.0);
+        s.record(parts(0.0, 0.0, 0.0, 1.0), millis(1.0), 1);
+        s.dropped = 3;
+        assert_eq!(s.served_frac(), 0.25);
     }
 
     #[test]

@@ -1,14 +1,34 @@
 //! NVIDIA MIG partition model + calibrated vGPU service-time model.
 //!
-//! `partition` encodes the A100's legal MIG geometries (paper Fig 2);
-//! `service` gives per-vGPU model-execution time as a function of
-//! (model, slice size, batch, audio length), calibrated so the paper's
-//! measured Batch_knee / Time_knee values reproduce (see DESIGN.md §4).
-
-//! `reconfig` turns the partition decision online (windowed rate
-//! telemetry + hysteresis controller + amortized reconfig-cost model) and
-//! `placement` packs slice requests onto a multi-GPU inventory with
-//! fragmentation awareness.
+//! The layer map, bottom-up:
+//!
+//! * [`partition`] — the A100's legal MIG geometries (paper Fig 2): a
+//!   [`Slice`] is one `Mg.Ngb` instance profile, a [`Partition`] a
+//!   homogeneous split, and a [`GpuClass`] the per-GPU capacity of a
+//!   (possibly heterogeneous) fleet inventory (A100 7-GPC vs A30-style
+//!   4-GPC).
+//! * [`service`] — per-vGPU model-execution time as a function of
+//!   (model, slice size, batch, audio length), calibrated so the paper's
+//!   measured Batch_knee / Time_knee values reproduce (provenance is
+//!   documented on the calibration constants in [`crate::models`]).
+//! * [`planner`] — offline partition recommendation for one SLA.
+//! * [`placement`] — fragmentation-aware packing of slice asks onto a
+//!   multi-GPU inventory (first-fit vs best-fit-decreasing).
+//! * [`reconfig`] — the partition decision made *online*: windowed rate
+//!   telemetry, hysteresis controller, amortized reconfig-cost model,
+//!   and the cluster-scale planner that moves slices across GPUs
+//!   (in-place reassignment vs paid migration).
+//!
+//! ```
+//! use preba::mig::{MigConfig, Slice};
+//!
+//! // The paper's three characterized configurations all fit an A100.
+//! for cfg in MigConfig::ALL {
+//!     assert!(cfg.partition().fits_a100(), "{cfg}");
+//! }
+//! // 1 GPC + 20 GB is not a profile NVIDIA exposes.
+//! assert!(!Slice::new(1, 20).is_legal());
+//! ```
 
 pub mod partition;
 pub mod placement;
@@ -16,7 +36,7 @@ pub mod planner;
 pub mod reconfig;
 pub mod service;
 
-pub use partition::{MigConfig, Partition, Slice};
+pub use partition::{parse_fleet, GpuClass, MigConfig, Partition, Slice};
 pub use placement::PackStrategy;
 pub use reconfig::{
     ClusterReconfigController, Plan, ReconfigController, ReconfigPolicy, SliceMove, TenantSpec,

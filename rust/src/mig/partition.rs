@@ -5,13 +5,109 @@
 //! the A100-40GB instance profiles and the homogeneous partitions the
 //! paper evaluates: `1g.5gb(7x)`, `2g.10gb(3x)`, `7g.40gb(1x)`.
 
-/// Compute capacity of one A100: 7 GPCs. Shared by the inventory packer
-/// (`placement::GpuBin`) and the cross-GPU planner (`reconfig`) so their
-/// capacity models cannot drift apart.
+/// Compute capacity of one A100: 7 GPCs. Only the [`GpuClass::A100`]
+/// preset may read this directly; everything downstream (the inventory
+/// packer `placement::GpuBin`, the cross-GPU planner `reconfig`) goes
+/// through a [`GpuClass`] so per-GPU capacity models cannot drift apart.
 pub const A100_GPCS: usize = 7;
 
-/// Memory capacity of one A100-40GB, GB (8 L2/DRAM slices).
+/// Memory capacity of one A100-40GB, GB (8 L2/DRAM slices). Like
+/// [`A100_GPCS`], routed through [`GpuClass::A100`].
 pub const A100_MEM_GB: usize = 40;
+
+/// One GPU class of a (possibly heterogeneous) fleet: its compute and
+/// memory capacity. PREBA's evaluation assumes a homogeneous pool of
+/// A100s; real MIG fleets mix GPU classes (ParvaGPU, arXiv:2409.14447),
+/// and placement quality hinges on scoring each GPU against its *own*
+/// capacity — a `7g.40gb` ask must be rejected per-GPU on a 4-GPC class,
+/// not fleet-wide.
+///
+/// ```
+/// use preba::mig::{GpuClass, Slice};
+///
+/// assert!(GpuClass::A100.supports(&Slice::new(7, 40)));
+/// assert!(!GpuClass::A30.supports(&Slice::new(7, 40))); // 7g needs 7 GPCs
+/// assert!(GpuClass::A30.supports(&Slice::new(4, 20)));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GpuClass {
+    /// Short label (`a100`, `a30`) used by fleet specs and reports.
+    pub name: &'static str,
+    /// GPCs this class exposes to MIG instances.
+    pub gpcs: usize,
+    /// DRAM this class exposes, GB.
+    pub mem_gb: usize,
+}
+
+impl GpuClass {
+    /// The paper's testbed GPU: A100-40GB, 7 GPCs.
+    pub const A100: GpuClass = GpuClass { name: "a100", gpcs: A100_GPCS, mem_gb: A100_MEM_GB };
+
+    /// An A30-style 4-GPC / 24 GB inventory class: the half-height MIG
+    /// part real fleets mix with A100s. `7g.40gb` (and any profile above
+    /// 4 GPCs) can never be placed here.
+    pub const A30: GpuClass = GpuClass { name: "a30", gpcs: 4, mem_gb: 24 };
+
+    /// Can this class host `s` at all (profile legality + class capacity)?
+    /// Per-GPU feasibility, independent of what is already placed.
+    pub fn supports(&self, s: &Slice) -> bool {
+        s.is_legal() && s.gpcs <= self.gpcs && s.mem_gb <= self.mem_gb
+    }
+
+    /// Parse a class label (`a100` | `a30`).
+    pub fn parse(s: &str) -> Option<GpuClass> {
+        match s {
+            "a100" | "A100" => Some(GpuClass::A100),
+            "a30" | "A30" => Some(GpuClass::A30),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for GpuClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name)
+    }
+}
+
+/// Parse a fleet spec like `a100x4,a30x2` into an inventory (GPU order
+/// follows the spec). A bare class name means one GPU of that class.
+pub fn parse_fleet(spec: &str) -> anyhow::Result<Vec<GpuClass>> {
+    parse_fleet_with(spec, GpuClass::parse)
+}
+
+/// [`parse_fleet`] with a caller-supplied class resolver, so deployments
+/// with config-overridden class capacities (`config.cluster` presets)
+/// share one spec grammar with the built-in presets.
+pub fn parse_fleet_with(
+    spec: &str,
+    resolve: impl Fn(&str) -> Option<GpuClass>,
+) -> anyhow::Result<Vec<GpuClass>> {
+    let mut fleet = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, count) = match part.rsplit_once('x') {
+            Some((n, c)) if !c.is_empty() && c.chars().all(|ch| ch.is_ascii_digit()) => {
+                match c.parse::<usize>() {
+                    Ok(k) => (n, k),
+                    Err(_) => anyhow::bail!("fleet spec '{part}': count out of range"),
+                }
+            }
+            _ => (part, 1),
+        };
+        let class = resolve(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown GPU class '{name}' (a100|a30)"))?;
+        anyhow::ensure!(count >= 1, "fleet spec '{part}': count must be >= 1");
+        for _ in 0..count {
+            fleet.push(class);
+        }
+    }
+    anyhow::ensure!(!fleet.is_empty(), "empty fleet spec '{spec}'");
+    Ok(fleet)
+}
 
 /// One MIG instance profile: `<gpcs>g.<mem_gb>gb`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -190,6 +286,40 @@ mod tests {
         // 3g.20gb can appear at most twice.
         assert!(all.contains(&Partition { slice: Slice::new(3, 20), count: 2 }));
         assert!(!all.contains(&Partition { slice: Slice::new(3, 20), count: 3 }));
+    }
+
+    /// The A100 preset is THE consumer of the bare constants; everything
+    /// else must go through `GpuClass` (regression guard for the
+    /// fleet-wide-capacity cleanup).
+    #[test]
+    fn a100_class_matches_the_constants() {
+        assert_eq!(GpuClass::A100.gpcs, A100_GPCS);
+        assert_eq!(GpuClass::A100.mem_gb, A100_MEM_GB);
+        assert!(GpuClass::A30.gpcs < GpuClass::A100.gpcs);
+    }
+
+    #[test]
+    fn class_support_is_per_class() {
+        for s in Slice::PROFILES {
+            assert!(GpuClass::A100.supports(&s), "{}", s.name());
+        }
+        assert!(!GpuClass::A30.supports(&Slice::new(7, 40)));
+        assert!(GpuClass::A30.supports(&Slice::new(3, 20)));
+        assert!(GpuClass::A30.supports(&Slice::new(1, 5)));
+        // Illegal profiles are rejected by every class.
+        assert!(!GpuClass::A100.supports(&Slice::new(5, 20)));
+    }
+
+    #[test]
+    fn fleet_specs_parse() {
+        let f = parse_fleet("a100x2,a30x3").unwrap();
+        assert_eq!(f.len(), 5);
+        assert_eq!(f[0], GpuClass::A100);
+        assert_eq!(f[2], GpuClass::A30);
+        assert_eq!(parse_fleet("a30").unwrap(), vec![GpuClass::A30]);
+        assert!(parse_fleet("h100x2").is_err());
+        assert!(parse_fleet("").is_err());
+        assert!(parse_fleet("a100x0").is_err());
     }
 
     #[test]

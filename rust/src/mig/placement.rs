@@ -1,17 +1,34 @@
 //! Fragmentation-aware slice placement over a multi-GPU inventory.
 //!
 //! Multi-tenant MIG serving packs slice requests (a tenant wants `k`
-//! instances of some profile) onto GPUs, each offering 7 GPCs and 40 GB.
-//! Naive first-fit in arrival order strands GPCs behind awkward remainders
-//! — the fragmentation problem of GPU-cluster schedulers (Ting et al.,
-//! arXiv:2512.16099). Best-fit-decreasing places big slices first and
-//! each into the tightest GPU that still fits, which keeps contiguous
-//! room for large profiles and measurably raises admitted capacity.
+//! instances of some profile) onto GPUs. Naive first-fit in arrival order
+//! strands GPCs behind awkward remainders — the fragmentation problem of
+//! GPU-cluster schedulers (Ting et al., arXiv:2512.16099). Best-fit-
+//! decreasing places big slices first and each into the tightest GPU that
+//! still fits, which keeps contiguous room for large profiles and
+//! measurably raises admitted capacity.
 //!
-//! This module is analytic (no DES): `server::multi` consumes per-GPU
-//! allocations, and the `packing` experiment compares strategies.
+//! The inventory may be **heterogeneous** ([`pack_fleet`]): every bin
+//! carries its own [`GpuClass`] capacity (A100 7-GPC, A30-style 4-GPC),
+//! and an ask that exceeds a class (a `7g.40gb` on an A30) is rejected
+//! per-GPU — it simply never fits that bin — not fleet-wide.
+//!
+//! This module is analytic (no DES): `server::multi` and
+//! `server::cluster` consume per-GPU allocations, and the `packing` /
+//! `cluster` experiments compare strategies.
+//!
+//! ```
+//! use preba::mig::placement::{pack_fleet, SliceAsk};
+//! use preba::mig::{GpuClass, PackStrategy, Slice};
+//!
+//! // One 7g ask over [A100, A30]: only the A100 can host it.
+//! let asks = vec![SliceAsk { tenant: 0, slice: Slice::new(7, 40) }; 2];
+//! let p = pack_fleet(&asks, &[GpuClass::A100, GpuClass::A30], PackStrategy::BestFit);
+//! assert_eq!(p.placements, vec![(asks[0], 0)]);
+//! assert_eq!(p.rejected.len(), 1);
+//! ```
 
-use super::partition::{Slice, A100_GPCS, A100_MEM_GB};
+use super::partition::{GpuClass, Slice};
 
 /// Packing strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,17 +57,19 @@ pub struct SliceAsk {
     pub slice: Slice,
 }
 
-/// One GPU's remaining capacity and its placed instances.
+/// One GPU's class, remaining capacity, and its placed instances.
 #[derive(Debug, Clone)]
 pub struct GpuBin {
+    /// The GPU class this bin was created from (its capacity ceiling).
+    pub class: GpuClass,
     pub gpcs_free: usize,
     pub mem_free_gb: usize,
     pub placed: Vec<SliceAsk>,
 }
 
 impl GpuBin {
-    fn new() -> GpuBin {
-        GpuBin { gpcs_free: A100_GPCS, mem_free_gb: A100_MEM_GB, placed: Vec::new() }
+    fn new(class: GpuClass) -> GpuBin {
+        GpuBin { class, gpcs_free: class.gpcs, mem_free_gb: class.mem_gb, placed: Vec::new() }
     }
 
     /// Can this GPU still host `s`? (Compute and memory budgets; mixed
@@ -106,12 +125,19 @@ impl Packing {
         }
     }
 
+    /// Total GPCs the inventory offers (sum of per-bin class capacity —
+    /// NOT `7 × bins`, which over-counts a heterogeneous fleet).
+    pub fn inventory_gpcs(&self) -> usize {
+        self.bins.iter().map(|b| b.class.gpcs).sum()
+    }
+
     /// Stranded fraction of the inventory.
     pub fn fragmentation(&self) -> f64 {
-        if self.bins.is_empty() {
+        let inv = self.inventory_gpcs();
+        if inv == 0 {
             0.0
         } else {
-            self.stranded_gpcs() as f64 / (A100_GPCS * self.bins.len()) as f64
+            self.stranded_gpcs() as f64 / inv as f64
         }
     }
 }
@@ -135,10 +161,18 @@ pub fn adversarial_demo() -> Vec<SliceAsk> {
     ]
 }
 
-/// Pack `asks` onto `n_gpus` A100s. Deterministic: stable ordering, ties
-/// break toward the lowest GPU index.
+/// Pack `asks` onto `n_gpus` A100s ([`pack_fleet`] over a homogeneous
+/// [`GpuClass::A100`] inventory).
 pub fn pack(asks: &[SliceAsk], n_gpus: usize, strategy: PackStrategy) -> Packing {
-    let mut bins = vec![GpuBin::new(); n_gpus];
+    pack_fleet(asks, &vec![GpuClass::A100; n_gpus], strategy)
+}
+
+/// Pack `asks` onto a (possibly heterogeneous) `fleet`. Deterministic:
+/// stable ordering, ties break toward the lowest GPU index. An ask that
+/// exceeds a bin's class capacity simply never fits that bin; it is
+/// rejected only when NO bin of the fleet can host it.
+pub fn pack_fleet(asks: &[SliceAsk], fleet: &[GpuClass], strategy: PackStrategy) -> Packing {
+    let mut bins: Vec<GpuBin> = fleet.iter().map(|&c| GpuBin::new(c)).collect();
     let mut order: Vec<usize> = (0..asks.len()).collect();
     if strategy == PackStrategy::BestFit {
         // Largest first; stable sort keeps arrival order among equals.
@@ -225,5 +259,39 @@ mod tests {
             assert_eq!(a.placements, b.placements);
             assert_eq!(a.rejected, b.rejected);
         }
+    }
+
+    #[test]
+    fn hetero_bins_cap_at_their_own_class() {
+        use crate::mig::GpuClass;
+        // 2×4g over [A30, A30]: one per GPU (4 GPCs each), nothing strands.
+        let asks = vec![ask(0, 4, 20), ask(0, 4, 20)];
+        let p = pack_fleet(&asks, &[GpuClass::A30, GpuClass::A30], PackStrategy::FirstFit);
+        assert_eq!(p.placements.len(), 2);
+        assert_eq!(p.bins[0].gpcs_free, 0);
+        assert_eq!(p.bins[1].gpcs_free, 0);
+        assert_eq!(p.inventory_gpcs(), 8);
+        // A 7g ask can never land on a 4-GPC class.
+        let p = pack_fleet(&[ask(0, 7, 40)], &[GpuClass::A30; 3], PackStrategy::BestFit);
+        assert!(p.placements.is_empty());
+        assert_eq!(p.rejected.len(), 1);
+    }
+
+    #[test]
+    fn best_fit_prefers_the_tightest_class() {
+        use crate::mig::GpuClass;
+        // BFD puts the 4g on the A30 (tightest feasible bin), leaving the
+        // A100 whole for the 7g; first-fit burns the A100 on the 4g and
+        // must reject the 7g.
+        let asks = vec![ask(0, 4, 20), ask(1, 7, 40)];
+        let fleet = [GpuClass::A100, GpuClass::A30];
+        let bf = pack_fleet(&asks, &fleet, PackStrategy::BestFit);
+        assert_eq!(bf.rejected.len(), 0, "{bf:?}");
+        assert_eq!(bf.placements, vec![(asks[1], 0), (asks[0], 1)]);
+        let ff = pack_fleet(&asks, &fleet, PackStrategy::FirstFit);
+        assert_eq!(ff.rejected.len(), 1, "{ff:?}");
+        // Stranded metric scores against per-class inventory (11 GPCs).
+        assert_eq!(ff.stranded_gpcs(), 7);
+        assert!((ff.fragmentation() - 7.0 / 11.0).abs() < 1e-12);
     }
 }

@@ -29,7 +29,7 @@
 //! into first-class drain/restart events.
 
 use crate::clock::{secs, to_secs, Nanos};
-use crate::mig::partition::{A100_GPCS, A100_MEM_GB};
+use crate::mig::partition::GpuClass;
 use crate::mig::{MigConfig, ServiceModel, Slice};
 use crate::models::ModelId;
 
@@ -499,14 +499,7 @@ pub fn slices_for_rate(spec: &TenantSpec, slice: Slice, rate_qps: f64, target_ut
     (need.ceil() as usize).max(1)
 }
 
-/// Plan slice moves for observed rates over a cluster allocation
-/// (`alloc[gpu][tenant]` = instance count; GPUs are A100s: 7 GPCs,
-/// 40 GB). Greedy and deterministic: the worst-deficit tenant is served
-/// first, from the biggest-surplus donor, preferring GPUs where the
-/// gainer is already resident (in-place). A migration (new residency) is
-/// emitted only when no in-place option exists AND the gainer's predicted
-/// p95 gain from one more slice amortizes `migration_s` within one
-/// cooldown. Donors never drop below their own need (min 1 slice).
+/// [`plan_cluster_moves_fleet`] over a homogeneous A100 inventory.
 pub fn plan_cluster_moves(
     tenants: &[TenantSpec],
     slices: &[Slice],
@@ -514,9 +507,33 @@ pub fn plan_cluster_moves(
     alloc: &[Vec<usize>],
     policy: &ReconfigPolicy,
 ) -> Vec<SliceMove> {
+    let fleet = vec![GpuClass::A100; alloc.len()];
+    plan_cluster_moves_fleet(tenants, slices, rates, alloc, &fleet, policy)
+}
+
+/// Plan slice moves for observed rates over a cluster allocation
+/// (`alloc[gpu][tenant]` = instance count; `fleet[gpu]` gives each GPU's
+/// class capacity — heterogeneous inventories score every GPU against
+/// its own GPC/memory budget, so a gainer's profile that exceeds a class
+/// is simply never planned onto it). Greedy and deterministic: the
+/// worst-deficit tenant is served first, from the biggest-surplus donor,
+/// preferring GPUs where the gainer is already resident (in-place). A
+/// migration (new residency) is emitted only when no in-place option
+/// exists AND the gainer's predicted p95 gain from one more slice
+/// amortizes `migration_s` within one cooldown. Donors never drop below
+/// their own need (min 1 slice).
+pub fn plan_cluster_moves_fleet(
+    tenants: &[TenantSpec],
+    slices: &[Slice],
+    rates: &[f64],
+    alloc: &[Vec<usize>],
+    fleet: &[GpuClass],
+    policy: &ReconfigPolicy,
+) -> Vec<SliceMove> {
     let t = tenants.len();
     assert!(t > 0 && slices.len() == t && rates.len() == t, "tenant arity mismatch");
     let n_gpus = alloc.len();
+    assert_eq!(fleet.len(), n_gpus, "fleet/alloc arity mismatch");
     let mut state: Vec<Vec<usize>> = alloc.to_vec();
     for g in &state {
         assert_eq!(g.len(), t, "alloc arity mismatch");
@@ -529,15 +546,23 @@ pub fn plan_cluster_moves(
         .map(|i| state.iter().map(|g| g[i]).sum())
         .collect();
     let mut gpc_free: Vec<usize> = (0..n_gpus)
-        .map(|g| A100_GPCS.saturating_sub((0..t).map(|i| state[g][i] * slices[i].gpcs).sum()))
+        .map(|g| {
+            fleet[g].gpcs.saturating_sub((0..t).map(|i| state[g][i] * slices[i].gpcs).sum())
+        })
         .collect();
     let mut mem_free: Vec<usize> = (0..n_gpus)
-        .map(|g| A100_MEM_GB.saturating_sub((0..t).map(|i| state[g][i] * slices[i].mem_gb).sum()))
+        .map(|g| {
+            fleet[g].mem_gb.saturating_sub((0..t).map(|i| state[g][i] * slices[i].mem_gb).sum())
+        })
         .collect();
 
     // Freeing one of `d`'s slices on `g` leaves room for one of `i`'s?
+    // (`supports` is implied by the free-capacity arithmetic — freed
+    // capacity can never exceed the class — but stays explicit so the
+    // per-class feasibility rule is visible at the decision point.)
     let fits = |gpc_free: &[usize], mem_free: &[usize], g: usize, d: usize, i: usize| {
-        gpc_free[g] + slices[d].gpcs >= slices[i].gpcs
+        fleet[g].supports(&slices[i])
+            && gpc_free[g] + slices[d].gpcs >= slices[i].gpcs
             && mem_free[g] + slices[d].mem_gb >= slices[i].mem_gb
     };
 
@@ -630,6 +655,7 @@ pub struct ClusterReconfigController {
     policy: ReconfigPolicy,
     tenants: Vec<TenantSpec>,
     slices: Vec<Slice>,
+    fleet: Vec<GpuClass>,
     watchers: Vec<RateWatcher>,
     alloc: Vec<Vec<usize>>,
     last_reconfig: Option<Nanos>,
@@ -637,13 +663,30 @@ pub struct ClusterReconfigController {
 }
 
 impl ClusterReconfigController {
+    /// Homogeneous-A100 constructor ([`Self::with_fleet`] with every GPU
+    /// an [`GpuClass::A100`]).
     pub fn new(
         tenants: Vec<TenantSpec>,
         slices: Vec<Slice>,
         initial_alloc: Vec<Vec<usize>>,
         policy: ReconfigPolicy,
     ) -> Self {
+        let fleet = vec![GpuClass::A100; initial_alloc.len()];
+        Self::with_fleet(tenants, slices, fleet, initial_alloc, policy)
+    }
+
+    /// Controller over a (possibly heterogeneous) fleet: `fleet[gpu]`
+    /// gives each GPU's class, and every planning decision scores free
+    /// capacity against that class.
+    pub fn with_fleet(
+        tenants: Vec<TenantSpec>,
+        slices: Vec<Slice>,
+        fleet: Vec<GpuClass>,
+        initial_alloc: Vec<Vec<usize>>,
+        policy: ReconfigPolicy,
+    ) -> Self {
         assert_eq!(tenants.len(), slices.len(), "tenant/slice arity mismatch");
+        assert_eq!(fleet.len(), initial_alloc.len(), "fleet/alloc arity mismatch");
         for g in &initial_alloc {
             assert_eq!(g.len(), tenants.len(), "alloc/tenant arity mismatch");
         }
@@ -652,11 +695,45 @@ impl ClusterReconfigController {
             policy,
             tenants,
             slices,
+            fleet,
             watchers,
             alloc: initial_alloc,
             last_reconfig: None,
             events: Vec::new(),
         }
+    }
+
+    /// Per-GPU classes the controller plans against.
+    pub fn fleet(&self) -> &[GpuClass] {
+        &self.fleet
+    }
+
+    /// Try to admit one pending (previously rejected) instance of tenant
+    /// `ti`'s profile into currently-free capacity: the first GPU whose
+    /// class supports the profile and whose free GPCs/memory (given the
+    /// live alloc mirror) fit it. Updates the mirror and returns the GPU
+    /// index, or `None` while no capacity has freed up. This is the
+    /// admission-control re-pack hook: the cluster DES offers its pending
+    /// ask queue here every telemetry window, so capacity released by
+    /// rebalances (drain/outage moves during diurnal troughs) is handed
+    /// to deferred demand instead of sitting stranded.
+    pub fn try_admit(&mut self, ti: usize) -> Option<usize> {
+        let t = self.tenants.len();
+        let s = self.slices[ti];
+        for (g, class) in self.fleet.iter().enumerate() {
+            if !class.supports(&s) {
+                continue;
+            }
+            let gpcs_used: usize = (0..t).map(|i| self.alloc[g][i] * self.slices[i].gpcs).sum();
+            let mem_used: usize = (0..t).map(|i| self.alloc[g][i] * self.slices[i].mem_gb).sum();
+            if class.gpcs - gpcs_used.min(class.gpcs) >= s.gpcs
+                && class.mem_gb - mem_used.min(class.mem_gb) >= s.mem_gb
+            {
+                self.alloc[g][ti] += 1;
+                return Some(g);
+            }
+        }
+        None
     }
 
     /// Decision cadence as virtual nanoseconds.
@@ -703,8 +780,14 @@ impl ClusterReconfigController {
                 return None;
             }
         }
-        let moves =
-            plan_cluster_moves(&self.tenants, &self.slices, &rates, &self.alloc, &self.policy);
+        let moves = plan_cluster_moves_fleet(
+            &self.tenants,
+            &self.slices,
+            &rates,
+            &self.alloc,
+            &self.fleet,
+            &self.policy,
+        );
         if moves.is_empty() {
             return None;
         }
@@ -969,6 +1052,56 @@ mod tests {
         policy.migration_s = 1e6;
         let gated = plan_cluster_moves(&tenants, &slices, &rates, &alloc, &policy);
         assert!(gated.is_empty(), "{gated:?}");
+    }
+
+    #[test]
+    fn fleet_planner_never_overflows_a_small_class() {
+        let tenants = vec![swin(25.0), swin(25.0)];
+        let slices = vec![Slice::new(4, 20), Slice::new(1, 5)];
+        let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 4).plateau_qps(0.0);
+        // Tenant 0 (4g profile) is overloaded on its A100; the only donor
+        // slices are tenant 1's 4×1g on a full A30. Freeing one 1g leaves
+        // 1 GPC — a 4g can never fit there, so the planner must emit no
+        // move that overflows the A30's class capacity (here: none).
+        let fleet = vec![GpuClass::A100, GpuClass::A30];
+        let alloc = vec![vec![1, 0], vec![0, 4]];
+        let rates = [5.0 * u, 0.01];
+        let policy = ReconfigPolicy { migration_s: 0.05, ..Default::default() };
+        let moves =
+            plan_cluster_moves_fleet(&tenants, &slices, &rates, &alloc, &fleet, &policy);
+        // Replay: per-GPU class capacity must hold after every move.
+        let mut state = alloc.clone();
+        for m in &moves {
+            state[m.gpu][m.from] -= 1;
+            state[m.gpu][m.to] += 1;
+            let gpcs: usize = (0..2).map(|i| state[m.gpu][i] * slices[i].gpcs).sum();
+            assert!(gpcs <= fleet[m.gpu].gpcs, "class capacity violated by {m:?}");
+        }
+        // In particular tenant 0's 4g never landed on the A30.
+        assert_eq!(state[1][0], 0, "{moves:?}");
+    }
+
+    #[test]
+    fn try_admit_places_only_into_freed_class_capacity() {
+        let tenants = vec![swin(25.0), swin(25.0)];
+        let slices = vec![Slice::new(1, 5), Slice::new(4, 20)];
+        let fleet = vec![GpuClass::A30];
+        // The A30 starts full with 4×1g of tenant 0: nothing to admit.
+        let mut ctrl = ClusterReconfigController::with_fleet(
+            tenants,
+            slices,
+            fleet,
+            vec![vec![4, 0]],
+            ReconfigPolicy::default(),
+        );
+        assert_eq!(ctrl.try_admit(1), None, "admitted into a full GPU");
+        // Drain tenant 0 down to nothing (as rebalances would): now the
+        // 4g pending ask fits the A30's 4 free GPCs.
+        ctrl.alloc[0][0] = 0;
+        assert_eq!(ctrl.try_admit(1), Some(0));
+        assert_eq!(ctrl.alloc()[0], vec![0, 1]);
+        // And a second replica no longer fits.
+        assert_eq!(ctrl.try_admit(1), None);
     }
 
     #[test]

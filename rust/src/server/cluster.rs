@@ -18,22 +18,35 @@
 //! an in-place reassignment (both tenants already serve from that GPU)
 //! pays `repartition_s` and a migration (new residency: model weights
 //! shipped to a GPU the tenant was not on) pays `migration_s` ≫ that.
+//!
+//! The inventory may be **heterogeneous** (`ClusterConfig::fleet` mixes
+//! [`GpuClass`] entries, e.g. A100 7-GPC + A30-style 4-GPC): packing and
+//! rebalancing score every GPU against its own class capacity, and a
+//! profile too big for a class is rejected per-GPU, never fleet-wide.
+//! **Admission control** (`ClusterConfig::admission`) parks requests of
+//! capacity-less tenants in a pending queue and re-offers the packer's
+//! rejected asks to the controller each window, so drain/outage events
+//! and diurnal troughs convert dropped traffic into deferred-then-served
+//! traffic (accounted in [`RunStats`]). Tenants can replay **recorded
+//! arrival traces** ([`ClusterTenant::with_trace`]) instead of synthetic
+//! Poisson/diurnal profiles.
 
 use crate::batching::{Batch, BatchPolicy, Bucketizer, DynamicBatcher, QueueParams, Request};
 use crate::clock::{secs, Nanos};
 use crate::config::PrebaConfig;
 use crate::dpu::Dpu;
 use crate::metrics::{LatencyParts, RunStats};
-use crate::mig::placement::{pack, Packing, SliceAsk};
+use crate::mig::placement::{pack_fleet, Packing, SliceAsk};
 use crate::mig::reconfig::{ClusterReconfigEvent, SliceMove};
 use crate::mig::{
-    ClusterReconfigController, PackStrategy, ReconfigPolicy, ServiceModel, Slice, TenantSpec,
+    ClusterReconfigController, GpuClass, PackStrategy, ReconfigPolicy, ServiceModel, Slice,
+    TenantSpec,
 };
 use crate::models::{ModelId, ModelKind, ModelSpec};
 use crate::preprocess::CpuPool;
 use crate::sim::EventQueue;
 use crate::util::Rng;
-use crate::workload::{QueryGen, RateProfile, TraceGen};
+use crate::workload::{QueryGen, RateProfile, ReplayTrace, TraceGen};
 
 use super::{PolicyKind, PreprocMode};
 
@@ -79,6 +92,10 @@ pub struct ClusterTenant {
     pub sla_ms: f64,
     /// Non-stationary traffic; `None` = constant Poisson at `rate_qps`.
     pub profile: Option<RateProfile>,
+    /// Recorded-trace replay: when set, this tenant's arrivals are the
+    /// trace's timestamps verbatim (`profile` is ignored and `requests`
+    /// is the trace length).
+    pub trace: Option<ReplayTrace>,
     /// Arrivals to generate for this tenant.
     pub requests: usize,
 }
@@ -92,8 +109,21 @@ impl ClusterTenant {
             rate_qps,
             sla_ms: 50.0,
             profile: None,
+            trace: None,
             requests: 4000,
         }
+    }
+
+    /// Drive this tenant from a recorded trace: arrivals come from the
+    /// trace's timestamps, `requests` becomes the trace length, and
+    /// `rate_qps` its mean rate (so sizing heuristics and reports stay
+    /// truthful).
+    pub fn with_trace(mut self, trace: ReplayTrace) -> ClusterTenant {
+        self.requests = trace.len();
+        self.rate_qps = trace.mean_qps();
+        self.profile = None;
+        self.trace = Some(trace);
+        self
     }
 
     /// Replica count sized by the reconfig controller's own rule
@@ -115,8 +145,10 @@ impl ClusterTenant {
 /// Cluster run parameters.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
-    /// A100s in the inventory (7 GPCs / 40 GB each).
-    pub n_gpus: usize,
+    /// The GPU inventory, one class per GPU — homogeneous A100 pools and
+    /// mixed A100+A30 fleets alike. Every placement/rebalance decision
+    /// scores against `fleet[g]`'s own GPC/memory capacity.
+    pub fleet: Vec<GpuClass>,
     /// How tenant slice asks are packed onto the inventory.
     pub strategy: PackStrategy,
     pub routing: Routing,
@@ -129,12 +161,44 @@ pub struct ClusterConfig {
     pub warmup_frac: f64,
     /// Online cross-GPU rebalancing; `None` = the packing is fixed.
     pub reconfig: Option<ReconfigPolicy>,
+    /// Admission control: requests for a tenant with no live capacity
+    /// wait in a pending queue (dropped-vs-deferred accounting in
+    /// [`RunStats`]) and the packer's rejected asks are re-offered to the
+    /// reconfig controller every window, instead of that traffic being
+    /// dropped forever. Requires `reconfig` — deferral without re-packing
+    /// would never flush the queue.
+    pub admission: bool,
 }
 
 impl ClusterConfig {
+    /// Homogeneous pool: `n_gpus` A100s.
     pub fn new(n_gpus: usize, strategy: PackStrategy, tenants: Vec<ClusterTenant>) -> Self {
+        Self::with_fleet(vec![GpuClass::A100; n_gpus], strategy, tenants)
+    }
+
+    /// Heterogeneous inventory: one [`GpuClass`] per GPU.
+    ///
+    /// ```
+    /// use preba::mig::{GpuClass, PackStrategy, Slice};
+    /// use preba::models::ModelId;
+    /// use preba::server::cluster::{ClusterConfig, ClusterTenant};
+    ///
+    /// let t = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), 2, 40.0);
+    /// let cfg = ClusterConfig::with_fleet(
+    ///     vec![GpuClass::A100, GpuClass::A30],
+    ///     PackStrategy::BestFit,
+    ///     vec![t],
+    /// );
+    /// assert_eq!(cfg.n_gpus(), 2);
+    /// assert!(cfg.validate().is_ok());
+    /// ```
+    pub fn with_fleet(
+        fleet: Vec<GpuClass>,
+        strategy: PackStrategy,
+        tenants: Vec<ClusterTenant>,
+    ) -> Self {
         ClusterConfig {
-            n_gpus,
+            fleet,
             strategy,
             routing: Routing::ShortestQueue,
             tenants,
@@ -143,18 +207,41 @@ impl ClusterConfig {
             seed: 0xC105,
             warmup_frac: 0.05,
             reconfig: None,
+            admission: false,
         }
     }
 
+    /// GPUs in the inventory.
+    pub fn n_gpus(&self) -> usize {
+        self.fleet.len()
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.n_gpus >= 1, "cluster needs at least one GPU");
+        anyhow::ensure!(!self.fleet.is_empty(), "cluster needs at least one GPU");
         anyhow::ensure!(!self.tenants.is_empty(), "no tenants");
+        anyhow::ensure!(
+            !self.admission || self.reconfig.is_some(),
+            "admission control needs the reconfig controller (deferred \
+             requests are only re-admitted when re-packing frees capacity)"
+        );
+        for g in &self.fleet {
+            anyhow::ensure!(g.gpcs >= 1 && g.mem_gb >= 1, "degenerate GPU class {g}");
+        }
         for t in &self.tenants {
             let name = t.slice.name();
             anyhow::ensure!(t.slice.is_legal(), "{}: illegal profile {name}", t.model);
             anyhow::ensure!(t.slices >= 1, "{}: zero slices requested", t.model);
             anyhow::ensure!(t.requests >= 1, "{}: zero requests", t.model);
             anyhow::ensure!(t.rate_qps > 0.0, "{}: non-positive rate", t.model);
+            if let Some(trace) = &t.trace {
+                anyhow::ensure!(
+                    t.requests == trace.len(),
+                    "{}: requests ({}) out of sync with its trace ({}) — use with_trace",
+                    t.model,
+                    t.requests,
+                    trace.len()
+                );
+            }
         }
         Ok(())
     }
@@ -177,10 +264,21 @@ impl ClusterConfig {
 pub struct ClusterOutcome {
     pub per_tenant: Vec<(ModelId, RunStats)>,
     /// Post-warmup requests that arrived for a tenant with no admitted
-    /// capacity anywhere (counted as SLA violations). Warmup-window drops
-    /// are excluded, mirroring how the latency stats skip warmup
-    /// completions — the violation fraction scores one population.
+    /// capacity anywhere and were never served (counted as SLA
+    /// violations). Warmup-window drops are excluded, mirroring how the
+    /// latency stats skip warmup completions — the violation fraction
+    /// scores one population. Under admission control this counts only
+    /// the deferred requests still unserved at the end of the run.
     pub dropped: Vec<u64>,
+    /// Post-warmup requests that waited in the admission queue (0 without
+    /// `ClusterConfig::admission`).
+    pub deferred: Vec<u64>,
+    /// Deferred requests eventually served after re-packing freed
+    /// capacity — traffic admission control converted from dropped to
+    /// merely late.
+    pub deferred_served: Vec<u64>,
+    /// Rejected asks admitted after t=0 (the pending-queue re-pack).
+    pub late_admissions: u64,
     /// The initial placement (stranded-capacity metrics live here).
     pub packing: Packing,
     pub horizon: Nanos,
@@ -240,8 +338,10 @@ enum Ev {
     BatchTick { group: usize },
     ExecDone { group: usize, batch_idx: usize },
     /// Close a telemetry window and ask the cross-GPU controller for a
-    /// rebalance.
+    /// rebalance (and, under admission control, re-offer pending asks).
     ReconfigCheck,
+    /// Flush a tenant's admission queue into its (newly live) capacity.
+    Readmit { tenant: usize },
 }
 
 /// One (tenant, GPU) serving group: the tenant's slices on that GPU share
@@ -274,6 +374,12 @@ struct TenantState {
     completed: usize,
     warmup: usize,
     dropped: u64,
+    /// Admission queue: arrival indices waiting for capacity (FIFO).
+    deferred_q: Vec<usize>,
+    /// Requests that passed through the admission queue.
+    was_deferred: Vec<bool>,
+    deferred: u64,
+    deferred_served: u64,
 }
 
 impl TenantState {
@@ -283,6 +389,19 @@ impl TenantState {
     fn drop_request(&mut self, idx: usize) {
         if idx >= self.warmup {
             self.dropped += 1;
+        }
+    }
+
+    /// Park a request in the admission queue instead of dropping it
+    /// (same warmup rule as [`TenantState::drop_request`]; a request
+    /// deferred more than once is counted once).
+    fn defer_request(&mut self, idx: usize) {
+        self.deferred_q.push(idx);
+        if !self.was_deferred[idx] {
+            self.was_deferred[idx] = true;
+            if idx >= self.warmup {
+                self.deferred += 1;
+            }
         }
     }
 }
@@ -400,6 +519,109 @@ fn arm_tick(gi: usize, now: Nanos, groups: &mut [Group], q: &mut EventQueue<Ev>)
     }
 }
 
+/// Route request `idx` of `tenant` and start its preprocessing on the
+/// routed GPU's resources. `false` = the tenant has no live capacity
+/// anywhere (the caller drops or defers it).
+#[allow(clippy::too_many_arguments)]
+fn start_request(
+    tenant: usize,
+    idx: usize,
+    now: Nanos,
+    cfg: &ClusterConfig,
+    groups: &mut [Group],
+    tenants: &mut [TenantState],
+    cpu_pools: &mut [CpuPool],
+    dpus: &mut [Option<Dpu>],
+    q: &mut EventQueue<Ev>,
+) -> bool {
+    let Some(gi) = route(groups, &mut tenants[tenant], cfg.routing) else {
+        return false;
+    };
+    tenants[tenant].routed[idx] = gi;
+    groups[gi].outstanding += 1;
+    let gpu = groups[gi].gpu;
+    let len = tenants[tenant].arrivals[idx].1;
+    match cfg.preproc {
+        PreprocMode::Ideal => q.schedule(now, Ev::PreprocDone { tenant, idx }),
+        PreprocMode::Cpu => {
+            let service = tenants[tenant].spec.cpu_preproc_secs(len.max(0.1));
+            let (_, done) = cpu_pools[gpu].admit(now, service);
+            q.schedule(done, Ev::PreprocDone { tenant, idx });
+        }
+        PreprocMode::Dpu => {
+            let model = cfg.tenants[tenant].model;
+            let done = dpus[gpu].as_mut().unwrap().admit(now, model, len.max(0.1));
+            q.schedule(done, Ev::PreprocDone { tenant, idx });
+        }
+    }
+    true
+}
+
+/// The (gpu, tenant) serving group, created empty on first residency
+/// (shared by rebalance moves and late admissions so group bookkeeping
+/// cannot diverge between the two paths).
+fn ensure_group(
+    ti: usize,
+    gpu: usize,
+    cfg: &ClusterConfig,
+    sys: &PrebaConfig,
+    groups: &mut Vec<Group>,
+    group_of: &mut [Vec<Option<usize>>],
+    tenants: &mut [TenantState],
+) -> usize {
+    if let Some(g) = group_of[gpu][ti] {
+        return g;
+    }
+    let ts = &tenants[ti];
+    let policy = build_policy(cfg.policy, sys, ts.spec, &ts.sm, &ts.buckets, 1);
+    let batcher = DynamicBatcher::new(
+        cfg.tenants[ti].model,
+        ts.buckets.clone(),
+        policy,
+        sys.batching.merge_adjacent,
+    );
+    group_of[gpu][ti] = Some(groups.len());
+    tenants[ti].route.push(groups.len());
+    groups.push(Group {
+        tenant: ti,
+        gpu,
+        batcher,
+        slice_free: Vec::new(),
+        in_flight: Vec::new(),
+        free_slots: Vec::new(),
+        outstanding: 0,
+        armed_tick: None,
+    });
+    groups.len() - 1
+}
+
+/// Hand tenant `ti` a freshly created slice on `gpu` (a late admission),
+/// available once its spin-up outage ends at `avail`, and rebuild the
+/// group's batching policy for the new slice count.
+#[allow(clippy::too_many_arguments)]
+fn grant_slice(
+    ti: usize,
+    gpu: usize,
+    avail: Nanos,
+    cfg: &ClusterConfig,
+    sys: &PrebaConfig,
+    now: Nanos,
+    groups: &mut Vec<Group>,
+    group_of: &mut [Vec<Option<usize>>],
+    tenants: &mut [TenantState],
+    q: &mut EventQueue<Ev>,
+    exec_rng: &mut Rng,
+) {
+    let gi = ensure_group(ti, gpu, cfg, sys, groups, group_of, tenants);
+    groups[gi].slice_free.push(avail);
+    let n = groups[gi].slice_free.len();
+    let ts = &tenants[ti];
+    let new_policy = build_policy(cfg.policy, sys, ts.spec, &ts.sm, &ts.buckets, n);
+    groups[gi].batcher.rebuild(new_policy, now);
+    dispatch_ready(gi, now, groups, tenants, q, exec_rng);
+    arm_tick(gi, now, groups, q);
+}
+
 /// Run one cluster simulation.
 pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutcome> {
     cfg.validate()?;
@@ -410,22 +632,27 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
     // namespace so pool streams can never collide with the per-tenant
     // arrival streams (`100 + ti`) at any fleet size.
     let usable = sys.hardware.cpu_cores - sys.hardware.cpu_reserved_cores;
-    let mut cpu_pools: Vec<CpuPool> = (0..cfg.n_gpus)
+    let mut cpu_pools: Vec<CpuPool> = (0..cfg.n_gpus())
         .map(|g| CpuPool::new(usable, root.split(0x9AD5_0000 + g as u64)))
         .collect();
-    let mut dpus: Vec<Option<Dpu>> = (0..cfg.n_gpus)
+    let mut dpus: Vec<Option<Dpu>> = (0..cfg.n_gpus())
         .map(|_| match cfg.preproc {
             PreprocMode::Dpu => Some(Dpu::new(&sys.dpu, &sys.hardware)),
             _ => None,
         })
         .collect();
 
-    // Place the slice inventory.
-    let packing = pack(&cfg.asks(), cfg.n_gpus, cfg.strategy);
-    let mut alloc: Vec<Vec<usize>> = vec![vec![0; cfg.tenants.len()]; cfg.n_gpus];
+    // Place the slice inventory (each GPU offers its own class capacity).
+    let packing = pack_fleet(&cfg.asks(), &cfg.fleet, cfg.strategy);
+    let mut alloc: Vec<Vec<usize>> = vec![vec![0; cfg.tenants.len()]; cfg.n_gpus()];
     for (ask, gpu) in &packing.placements {
         alloc[*gpu][ask.tenant] += 1;
     }
+    // Admission control: rejected asks wait here and are re-offered to
+    // the controller every telemetry window.
+    let mut pending: Vec<SliceAsk> =
+        if cfg.admission { packing.rejected.clone() } else { Vec::new() };
+    let mut late_admissions = 0u64;
 
     // Tenant state + workloads.
     let mut q: EventQueue<Ev> = EventQueue::new();
@@ -439,14 +666,19 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
             }
             _ => Bucketizer::fixed(),
         };
-        let gen_rng = root.split(100 + ti as u64);
-        let arrivals: Vec<(Nanos, f64)> = match &t.profile {
-            None => QueryGen::new(t.model, t.rate_qps, gen_rng)
+        let mut gen_rng = root.split(100 + ti as u64);
+        let arrivals: Vec<(Nanos, f64)> = match (&t.trace, &t.profile) {
+            (Some(trace), _) => trace
+                .arrivals(t.model, &mut gen_rng)
+                .into_iter()
+                .map(|a| (a.at, a.len_s))
+                .collect(),
+            (None, None) => QueryGen::new(t.model, t.rate_qps, gen_rng)
                 .take(t.requests)
                 .into_iter()
                 .map(|a| (a.at, a.len_s))
                 .collect(),
-            Some(profile) => TraceGen::new(t.model, profile.clone(), gen_rng)
+            (None, Some(profile)) => TraceGen::new(t.model, profile.clone(), gen_rng)
                 .take(t.requests)
                 .into_iter()
                 .map(|a| (a.at, a.len_s))
@@ -461,6 +693,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
             buckets,
             preproc_done: vec![0; arrivals.len()],
             routed: vec![usize::MAX; arrivals.len()],
+            was_deferred: vec![false; arrivals.len()],
             arrivals,
             route: Vec::new(),
             rr_cursor: 0,
@@ -468,13 +701,17 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
             completed: 0,
             warmup: (t.requests as f64 * cfg.warmup_frac) as usize,
             dropped: 0,
+            deferred_q: Vec::new(),
+            deferred: 0,
+            deferred_served: 0,
         });
     }
 
     // Serving groups, one per (GPU, tenant) with admitted slices, in
     // GPU-major order so every tenant's route list is GPU-ordered.
     let mut groups: Vec<Group> = Vec::new();
-    let mut group_of: Vec<Vec<Option<usize>>> = vec![vec![None; cfg.tenants.len()]; cfg.n_gpus];
+    let mut group_of: Vec<Vec<Option<usize>>> =
+        vec![vec![None; cfg.tenants.len()]; cfg.n_gpus()];
     for (g, row) in alloc.iter().enumerate() {
         for (ti, &n) in row.iter().enumerate() {
             if n == 0 {
@@ -503,12 +740,18 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
         }
     }
 
-    // Cross-GPU rebalancing controller.
+    // Cross-GPU rebalancing controller (plans against each GPU's class).
     let mut ctrl = cfg.reconfig.clone().map(|policy| {
         let specs: Vec<TenantSpec> =
             cfg.tenants.iter().map(|t| TenantSpec::new(t.model, t.sla_ms)).collect();
         let slices: Vec<Slice> = cfg.tenants.iter().map(|t| t.slice).collect();
-        ClusterReconfigController::new(specs, slices, alloc.clone(), policy)
+        ClusterReconfigController::with_fleet(
+            specs,
+            slices,
+            cfg.fleet.clone(),
+            alloc.clone(),
+            policy,
+        )
     });
     if let Some(c) = &ctrl {
         q.schedule(c.window(), Ev::ReconfigCheck);
@@ -525,26 +768,28 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                 if let Some(c) = ctrl.as_mut() {
                     c.observe_arrival(tenant);
                 }
-                let Some(gi) = route(&groups, &mut tenants[tenant], cfg.routing) else {
-                    tenants[tenant].drop_request(idx);
-                    return true;
-                };
-                tenants[tenant].routed[idx] = gi;
-                groups[gi].outstanding += 1;
-                let gpu = groups[gi].gpu;
-                let len = tenants[tenant].arrivals[idx].1;
-                match cfg.preproc {
-                    PreprocMode::Ideal => q.schedule(now, Ev::PreprocDone { tenant, idx }),
-                    PreprocMode::Cpu => {
-                        let service = tenants[tenant].spec.cpu_preproc_secs(len.max(0.1));
-                        let (_, done) = cpu_pools[gpu].admit(now, service);
-                        q.schedule(done, Ev::PreprocDone { tenant, idx });
+                if !start_request(
+                    tenant, idx, now, cfg, &mut groups, &mut tenants, &mut cpu_pools,
+                    &mut dpus, q,
+                ) {
+                    if cfg.admission {
+                        tenants[tenant].defer_request(idx);
+                    } else {
+                        tenants[tenant].drop_request(idx);
                     }
-                    PreprocMode::Dpu => {
-                        let model = cfg.tenants[tenant].model;
-                        let done =
-                            dpus[gpu].as_mut().unwrap().admit(now, model, len.max(0.1));
-                        q.schedule(done, Ev::PreprocDone { tenant, idx });
+                }
+            }
+            Ev::Readmit { tenant } => {
+                // Flush the admission queue into newly-live capacity in
+                // arrival order; anything that still finds no slice goes
+                // back to waiting.
+                let waiting = std::mem::take(&mut tenants[tenant].deferred_q);
+                for idx in waiting {
+                    if !start_request(
+                        tenant, idx, now, cfg, &mut groups, &mut tenants, &mut cpu_pools,
+                        &mut dpus, q,
+                    ) {
+                        tenants[tenant].deferred_q.push(idx);
                     }
                 }
             }
@@ -561,6 +806,13 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                             gi = g2;
                             tenants[tenant].routed[idx] = gi;
                             groups[gi].outstanding += 1;
+                        }
+                        None if cfg.admission => {
+                            // Park it; it re-enters (and re-preprocesses,
+                            // as a resubmission would) once capacity
+                            // returns.
+                            tenants[tenant].defer_request(idx);
+                            return true;
                         }
                         None => {
                             tenants[tenant].drop_request(idx);
@@ -598,10 +850,15 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                 let exec_ns = exec_model.min(since_formed);
                 for r in &batch.requests {
                     ts.completed += 1;
+                    let i = r.id as usize;
+                    // Deferred-then-served accounting uses the arrival
+                    // index for its warmup rule, matching `defer_request`.
+                    if ts.was_deferred[i] && i >= ts.warmup {
+                        ts.deferred_served += 1;
+                    }
                     if ts.completed <= ts.warmup {
                         continue;
                     }
-                    let i = r.id as usize;
                     ts.stats.record(
                         LatencyParts {
                             preprocess: ts.preproc_done[i] - ts.arrivals[i].0,
@@ -627,6 +884,33 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                             &mut tenants, q, &mut exec_rng,
                         );
                     }
+                    // Admission re-pack: offer every still-pending ask to
+                    // whatever capacity the rebalance freed. An admitted
+                    // ask is a new residency — it pays the migration
+                    // outage before its slice serves.
+                    let mut i = 0;
+                    while i < pending.len() {
+                        match c.try_admit(pending[i].tenant) {
+                            None => i += 1,
+                            Some(gpu) => {
+                                let ask = pending.remove(i);
+                                late_admissions += 1;
+                                let avail = now + secs(c.policy().migration_s);
+                                grant_slice(
+                                    ask.tenant, gpu, avail, cfg, sys, now, &mut groups,
+                                    &mut group_of, &mut tenants, q, &mut exec_rng,
+                                );
+                            }
+                        }
+                    }
+                    // Wake admission queues that now see live capacity.
+                    for (ti, ts) in tenants.iter().enumerate() {
+                        if !ts.deferred_q.is_empty()
+                            && ts.route.iter().any(|&g| !groups[g].slice_free.is_empty())
+                        {
+                            q.schedule(now, Ev::Readmit { tenant: ti });
+                        }
+                    }
                     q.schedule_in(c.window(), Ev::ReconfigCheck);
                 }
             }
@@ -643,8 +927,24 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
         None => alloc,
     };
 
+    // Requests still parked in an admission queue never got capacity:
+    // they end the run as drops (same post-warmup rule), and the
+    // dropped-vs-deferred split lands in each tenant's RunStats.
+    for ts in &mut tenants {
+        let waiting = std::mem::take(&mut ts.deferred_q);
+        for idx in waiting {
+            ts.drop_request(idx);
+        }
+        ts.stats.dropped = ts.dropped;
+        ts.stats.deferred = ts.deferred;
+        ts.stats.deferred_served = ts.deferred_served;
+    }
+
     Ok(ClusterOutcome {
         dropped: tenants.iter().map(|t| t.dropped).collect(),
+        deferred: tenants.iter().map(|t| t.deferred).collect(),
+        deferred_served: tenants.iter().map(|t| t.deferred_served).collect(),
+        late_admissions,
         per_tenant: tenants
             .into_iter()
             .zip(cfg.tenants.iter())
@@ -690,32 +990,7 @@ fn apply_moves(
         let avail = drained + secs(m.outage_s(policy));
         downtime += avail - now;
 
-        let gainer = match group_of[m.gpu][m.to] {
-            Some(g) => g,
-            None => {
-                let ts = &tenants[m.to];
-                let policy_b = build_policy(cfg.policy, sys, ts.spec, &ts.sm, &ts.buckets, 1);
-                let batcher = DynamicBatcher::new(
-                    cfg.tenants[m.to].model,
-                    ts.buckets.clone(),
-                    policy_b,
-                    sys.batching.merge_adjacent,
-                );
-                group_of[m.gpu][m.to] = Some(groups.len());
-                tenants[m.to].route.push(groups.len());
-                groups.push(Group {
-                    tenant: m.to,
-                    gpu: m.gpu,
-                    batcher,
-                    slice_free: Vec::new(),
-                    in_flight: Vec::new(),
-                    free_slots: Vec::new(),
-                    outstanding: 0,
-                    armed_tick: None,
-                });
-                groups.len() - 1
-            }
-        };
+        let gainer = ensure_group(m.to, m.gpu, cfg, sys, groups, group_of, tenants);
         groups[gainer].slice_free.push(avail);
         for g in [donor, gainer] {
             if !touched.contains(&g) {
@@ -760,6 +1035,15 @@ fn apply_moves(
                 }
                 dispatch_ready(tg, now, groups, tenants, q, exec_rng);
                 arm_tick(tg, now, groups, q);
+            }
+            // Same no-capacity contract as the Arrival/PreprocDone
+            // paths: under admission control the flushed requests wait
+            // for re-packed capacity (re-entering as resubmissions),
+            // otherwise they are dropped.
+            None if cfg.admission => {
+                for r in pending {
+                    tenants[ti].defer_request(r.id as usize);
+                }
             }
             None => {
                 for r in pending {
@@ -873,6 +1157,94 @@ mod tests {
             "jsq {} vs rr {}",
             jsq.worst_p95_ms(),
             rr.worst_p95_ms()
+        );
+    }
+
+    #[test]
+    fn hetero_fleet_rejects_per_gpu_not_fleet_wide() {
+        let u = swin_unit();
+        // 4g fits the A30 exactly; 7g fits only the A100. With BFD both
+        // are admitted; the 7g is *not* rejected just because one class
+        // cannot host it.
+        let mut a = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(7, 40), 1, 3.0 * u);
+        a.requests = 600;
+        let mut b = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(4, 20), 1, 2.0 * u);
+        b.requests = 600;
+        let cfg = ClusterConfig::with_fleet(
+            vec![GpuClass::A100, GpuClass::A30],
+            PackStrategy::BestFit,
+            vec![a, b],
+        );
+        let out = run(&cfg, &PrebaConfig::new()).unwrap();
+        assert!(out.packing.rejected.is_empty(), "{:?}", out.packing.rejected);
+        assert_eq!(out.final_alloc[0], vec![1, 0], "7g must sit on the A100");
+        assert_eq!(out.final_alloc[1], vec![0, 1], "4g must sit on the A30");
+        assert_eq!(out.dropped, vec![0, 0]);
+        for (model, stats) in &out.per_tenant {
+            assert!(stats.completed > 0, "{model}");
+        }
+    }
+
+    /// The admission-control scenario: tenant A fills a 2-GPU pool with
+    /// 14×1g; tenant B's 2×1g ask is rejected at pack time. Without
+    /// admission, B's pre-rescue traffic is dropped even though the
+    /// controller later migrates slices to B; with admission it waits in
+    /// the pending queue and is served late (deferred_served > 0,
+    /// strictly fewer drops).
+    fn admission_cfg(admission: bool) -> ClusterConfig {
+        let u = swin_unit();
+        let sys = PrebaConfig::new();
+        let horizon = 6.0;
+        let mut a =
+            ClusterTenant::new(ModelId::SwinTransformer, one_g(), 14, 9.0 * u);
+        a.sla_ms = 25.0;
+        a.profile = Some(RateProfile::Diurnal {
+            base_qps: a.rate_qps,
+            amplitude: 0.5,
+            period_s: horizon / 2.0,
+            phase_frac: 0.0,
+        });
+        a.requests = (a.rate_qps * horizon).ceil() as usize;
+        let mut b = ClusterTenant::new(ModelId::SwinTransformer, one_g(), 2, 2.0 * u);
+        b.sla_ms = 25.0;
+        b.requests = (b.rate_qps * horizon).ceil() as usize;
+        let mut cfg = ClusterConfig::new(2, PackStrategy::BestFit, vec![a, b]);
+        cfg.reconfig = Some(crate::experiments::cluster::policy(&sys));
+        cfg.admission = admission;
+        cfg.warmup_frac = 0.01;
+        cfg
+    }
+
+    #[test]
+    fn admission_converts_drops_into_deferred_served() {
+        let sys = PrebaConfig::new();
+        let base = run(&admission_cfg(false), &sys).unwrap();
+        let adm = run(&admission_cfg(true), &sys).unwrap();
+        // The packer rejected B in both runs.
+        assert_eq!(base.packing.rejected.len(), 2, "{:?}", base.packing.rejected);
+        assert!(base.dropped[1] > 0, "baseline never dropped — scenario broken");
+        assert_eq!(base.deferred, vec![0, 0]);
+        assert!(adm.deferred[1] > 0, "nothing was deferred");
+        assert!(
+            adm.deferred_served[1] > 0,
+            "admission never served deferred traffic: {:?}",
+            adm.deferred
+        );
+        assert!(
+            adm.dropped[1] < base.dropped[1],
+            "admission {} vs baseline {} drops",
+            adm.dropped[1],
+            base.dropped[1]
+        );
+        assert!(adm.per_tenant[1].1.deferred_served == adm.deferred_served[1]);
+        // Conservation: every post-warmup request of B is served or
+        // dropped exactly once.
+        let cfg = admission_cfg(true);
+        let warmup = (cfg.tenants[1].requests as f64 * cfg.warmup_frac) as u64;
+        assert_eq!(
+            adm.per_tenant[1].1.completed + adm.dropped[1],
+            cfg.tenants[1].requests as u64 - warmup,
+            "B's accounting leaked requests"
         );
     }
 

@@ -12,7 +12,8 @@
 //!
 //! Above the single GPU, [`multi`] colocates tenants on one partition and
 //! [`cluster`] runs one DES over a multi-GPU inventory (packing-based
-//! placement, cross-GPU routing and online rebalancing).
+//! placement over possibly heterogeneous GPU classes, cross-GPU routing,
+//! online rebalancing, admission control, and recorded-trace replay).
 
 pub mod cluster;
 pub mod multi;

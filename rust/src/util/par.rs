@@ -12,6 +12,16 @@
 //! machine's available parallelism. Jobs run on `std::thread::scope`
 //! threads, so borrowed captures (`&PrebaConfig`, parameter slices) work
 //! without `Arc`.
+//!
+//! ```
+//! use preba::util::par::run_jobs_on;
+//!
+//! // Results always come back in job order, whatever the worker count.
+//! let serial = run_jobs_on(1, 8, |i| i * i);
+//! let parallel = run_jobs_on(4, 8, |i| i * i);
+//! assert_eq!(serial, parallel);
+//! assert_eq!(serial, (0..8).map(|i| i * i).collect::<Vec<_>>());
+//! ```
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};

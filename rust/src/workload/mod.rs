@@ -1,15 +1,37 @@
 //! Workload synthesis (paper §5 "Input query modeling").
 //!
-//! * Poisson arrivals (MLPerf-server style) with configurable rate.
+//! * Poisson arrivals (MLPerf-server style) with configurable rate
+//!   ([`QueryGen`]).
+//! * Non-stationary traffic ([`trace`]): diurnal and MMPP-bursty rate
+//!   profiles ([`RateProfile`]/[`TraceGen`]), plus recorded-trace replay
+//!   ([`ReplayTrace`]) with CSV/JSON loading, a rate-scaling knob, and a
+//!   bundled Azure-style synthetic generator.
 //! * Audio lengths drawn from a LibriSpeech-shaped distribution
 //!   (Fig 13): a lognormal body peaking ~12-14 s with a short-utterance
-//!   mode, clipped to [1, 25] s. Vision inputs are fixed-size.
+//!   mode, clipped to 1-25 s. Vision inputs are fixed-size.
 //! * Input synthesis for the real driver: DCT-coefficient images and
 //!   sinusoid-mixture PCM audio.
+//!
+//! Every generator draws from the crate's deterministic [`Rng`], so a
+//! workload is a pure function of its seed:
+//!
+//! ```
+//! use preba::models::ModelId;
+//! use preba::util::Rng;
+//! use preba::workload::QueryGen;
+//!
+//! let arrivals = QueryGen::new(ModelId::MobileNet, 100.0, Rng::new(1)).take(50);
+//! assert_eq!(arrivals.len(), 50);
+//! assert!(arrivals.windows(2).all(|w| w[0].at <= w[1].at));
+//! // Same seed, same stream.
+//! let again = QueryGen::new(ModelId::MobileNet, 100.0, Rng::new(1)).take(50);
+//! assert_eq!(arrivals.iter().map(|a| a.at).collect::<Vec<_>>(),
+//!            again.iter().map(|a| a.at).collect::<Vec<_>>());
+//! ```
 
 pub mod trace;
 
-pub use trace::{RateProfile, TraceGen};
+pub use trace::{RateProfile, ReplayTrace, TraceGen};
 
 use crate::clock::{secs, Nanos};
 use crate::models::{ModelId, ModelKind};

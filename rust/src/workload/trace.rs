@@ -9,6 +9,12 @@
 //!   states), the adversarial case for a batching system: bursts fill
 //!   batches instantly while quiet periods leave requests waiting on
 //!   `Time_queue`.
+//!
+//! Plus **trace replay** ([`ReplayTrace`]): recorded arrival timestamps
+//! (CSV / JSON) driven through the cluster DES verbatim, with a
+//! rate-scaling knob and a bundled Azure-Functions-style synthetic
+//! generator ([`ReplayTrace::synth_azure`]) so fleet experiments can run
+//! against realistic recorded traffic without shipping a dataset.
 
 use crate::clock::{secs, Nanos};
 use crate::models::{ModelId, ModelKind};
@@ -152,6 +158,215 @@ impl TraceGen {
     }
 }
 
+/// A recorded arrival-timestamp trace for replay (sorted seconds from
+/// trace start). Replay feeds the cluster DES the *exact* recorded
+/// arrival process — Poisson/MMPP synthesis matches first moments but
+/// not the autocorrelation structure real fleets see.
+///
+/// ```
+/// use preba::workload::ReplayTrace;
+///
+/// let t = ReplayTrace::from_csv("# header\n0.0\n0.5\n1.0\n").unwrap();
+/// assert_eq!(t.len(), 3);
+/// // Rate-scaling knob: 2× the rate = timestamps squeezed 2×.
+/// let fast = t.scaled(2.0);
+/// assert!((fast.duration_s() - 0.5).abs() < 1e-12);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayTrace {
+    at_s: Vec<f64>,
+}
+
+impl ReplayTrace {
+    /// Build from raw timestamps (seconds; sorted internally). Errors on
+    /// an empty list or non-finite/negative entries.
+    pub fn new(mut at_s: Vec<f64>) -> anyhow::Result<ReplayTrace> {
+        anyhow::ensure!(!at_s.is_empty(), "empty trace");
+        for &t in &at_s {
+            anyhow::ensure!(t.is_finite() && t >= 0.0, "bad trace timestamp {t}");
+        }
+        at_s.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        Ok(ReplayTrace { at_s })
+    }
+
+    pub fn len(&self) -> usize {
+        self.at_s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.at_s.is_empty()
+    }
+
+    /// Trace span: the last arrival's timestamp, seconds.
+    pub fn duration_s(&self) -> f64 {
+        *self.at_s.last().expect("non-empty")
+    }
+
+    /// Mean offered rate over the trace span, queries/s.
+    pub fn mean_qps(&self) -> f64 {
+        self.at_s.len() as f64 / self.duration_s().max(1e-9)
+    }
+
+    /// Rate-scaling knob: multiply the offered rate by `factor` by
+    /// compressing (or stretching) the timeline. The arrival *pattern*
+    /// (burst structure, diurnal shape) is preserved.
+    pub fn scaled(&self, factor: f64) -> ReplayTrace {
+        assert!(factor > 0.0, "rate scale must be positive");
+        ReplayTrace { at_s: self.at_s.iter().map(|t| t / factor).collect() }
+    }
+
+    /// [`ReplayTrace::scaled`] to hit a target mean rate.
+    pub fn scaled_to_qps(&self, qps: f64) -> ReplayTrace {
+        self.scaled(qps / self.mean_qps())
+    }
+
+    /// Stretch/compress the timeline so the trace spans `duration_s`
+    /// (e.g. to align a recorded day onto a simulated horizon).
+    pub fn scaled_to_duration(&self, duration_s: f64) -> ReplayTrace {
+        assert!(duration_s > 0.0, "duration must be positive");
+        self.scaled(self.duration_s().max(1e-9) / duration_s)
+    }
+
+    /// Deterministically thin the trace to a ~`qps` mean WITHOUT moving
+    /// the surviving timestamps: each arrival is kept i.i.d. with
+    /// probability `qps / mean_qps()`, so the burst/diurnal shape and
+    /// the timeline stay intact (unlike [`ReplayTrace::scaled`], which
+    /// re-times every arrival). A target at or above the current mean
+    /// keeps everything — replay cannot invent arrivals.
+    pub fn thinned_to_qps(&self, qps: f64, seed: u64) -> ReplayTrace {
+        assert!(qps > 0.0, "target rate must be positive");
+        let keep = qps / self.mean_qps();
+        if keep >= 1.0 {
+            return self.clone();
+        }
+        let mut rng = Rng::new(seed ^ 0x7417_11ED);
+        let kept: Vec<f64> = self.at_s.iter().copied().filter(|_| rng.f64() < keep).collect();
+        if kept.is_empty() {
+            // Degenerate target (keep-probability ~0): one arrival is the
+            // smallest non-empty replay.
+            return ReplayTrace { at_s: vec![self.at_s[0]] };
+        }
+        ReplayTrace { at_s: kept }
+    }
+
+    /// Materialize the trace as DES arrivals for `model` (audio lengths
+    /// sampled from the LibriSpeech distribution; vision inputs are 0 s).
+    pub fn arrivals(&self, model: ModelId, rng: &mut Rng) -> Vec<Arrival> {
+        self.at_s
+            .iter()
+            .map(|&t| {
+                let len_s = match model.kind() {
+                    ModelKind::Vision => 0.0,
+                    ModelKind::Audio => sample_librispeech_len(rng),
+                };
+                Arrival { at: secs(t), len_s }
+            })
+            .collect()
+    }
+
+    /// Parse a CSV of arrival timestamps: one record per line, first
+    /// field is the timestamp in seconds. Blank lines, `#` comments, and
+    /// a non-numeric header line are skipped.
+    pub fn from_csv(text: &str) -> anyhow::Result<ReplayTrace> {
+        let mut out = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let field = line.split(',').next().unwrap_or("").trim();
+            match field.parse::<f64>() {
+                Ok(t) => out.push(t),
+                // A header is only acceptable before any data row.
+                Err(_) if out.is_empty() => continue,
+                Err(_) => anyhow::bail!("trace CSV line {}: bad timestamp '{field}'", lineno + 1),
+            }
+        }
+        ReplayTrace::new(out)
+    }
+
+    /// Parse a JSON array of arrival timestamps — either a bare
+    /// `[0.1, 0.2, ...]` or any object whose first `[...]` value is that
+    /// array (e.g. `{"arrivals_s": [...]}`).
+    pub fn from_json(text: &str) -> anyhow::Result<ReplayTrace> {
+        let start = text.find('[').ok_or_else(|| anyhow::anyhow!("no JSON array in trace"))?;
+        let end = text[start..]
+            .find(']')
+            .map(|e| start + e)
+            .ok_or_else(|| anyhow::anyhow!("unterminated JSON array in trace"))?;
+        let mut out = Vec::new();
+        for tok in text[start + 1..end].split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            out.push(
+                tok.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad JSON trace timestamp '{tok}'"))?,
+            );
+        }
+        ReplayTrace::new(out)
+    }
+
+    /// Load a trace file, dispatching on extension (`.json` → JSON,
+    /// anything else → CSV).
+    pub fn load(path: &str) -> anyhow::Result<ReplayTrace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read trace '{path}': {e}"))?;
+        if path.ends_with(".json") {
+            ReplayTrace::from_json(&text)
+        } else {
+            ReplayTrace::from_csv(&text)
+        }
+    }
+
+    /// Bundled synthetic Azure-Functions-style trace: a diurnal envelope
+    /// (two full cycles over `duration_s`, ±60%) modulated by an MMPP
+    /// burst overlay (3× spikes with short dwell) — the shape of the
+    /// public Azure Functions / LAQS arrival datasets, generated
+    /// deterministically from `seed` so experiments need no dataset
+    /// download. Mean rate ≈ `base_qps`.
+    pub fn synth_azure(seed: u64, duration_s: f64, base_qps: f64) -> ReplayTrace {
+        assert!(duration_s > 0.0 && base_qps > 0.0);
+        let mut rng = Rng::new(seed ^ 0xA27E_57AC_E5);
+        let period_s = duration_s / 2.0;
+        const AMPLITUDE: f64 = 0.6;
+        const BURST_X: f64 = 3.0;
+        // Burst dwell ≪ quiet dwell: spikes, not regimes. The long-run
+        // burst fraction is dwell_burst/(dwell_burst+dwell_quiet) = 1/11,
+        // so the stationary rate multiplier is ~1.18; fold it out of
+        // `base` to keep the realized mean near `base_qps`.
+        let quiet_s = duration_s / 12.0;
+        let burst_s = duration_s / 120.0;
+        let burst_frac = burst_s / (burst_s + quiet_s);
+        let base = base_qps / (1.0 + (BURST_X - 1.0) * burst_frac);
+        let lambda_max = base * (1.0 + AMPLITUDE) * BURST_X;
+        let mut at_s = Vec::new();
+        let mut t = 0.0;
+        let mut in_burst = false;
+        let mut next_switch = rng.exp(1.0 / quiet_s);
+        loop {
+            t += rng.exp(lambda_max);
+            if t > duration_s {
+                break;
+            }
+            while t >= next_switch {
+                in_burst = !in_burst;
+                next_switch += rng.exp(1.0 / if in_burst { burst_s } else { quiet_s });
+            }
+            let angle = 2.0 * std::f64::consts::PI * t / period_s;
+            let mut lambda = base * (1.0 + AMPLITUDE * angle.sin());
+            if in_burst {
+                lambda *= BURST_X;
+            }
+            if rng.f64() <= lambda / lambda_max {
+                at_s.push(t);
+            }
+        }
+        ReplayTrace::new(at_s).expect("synthetic trace is non-empty")
+    }
+}
+
 /// Windowed arrival-rate estimate of a trace (diagnostics / tests).
 pub fn windowed_rates(arrivals: &[Arrival], window: Nanos) -> Vec<f64> {
     if arrivals.is_empty() {
@@ -277,6 +492,88 @@ mod tests {
         let b = RateProfile::named("bursty", 100.0).unwrap();
         assert!(b.max_rate() > 2.0 * b.mean_rate());
         assert!(RateProfile::named("square-wave", 1.0).is_none());
+    }
+
+    #[test]
+    fn replay_parses_csv_and_json() {
+        let csv = ReplayTrace::from_csv("ts,extra\n# comment\n0.5,a\n0.25,b\n\n1.5,c\n").unwrap();
+        assert_eq!(csv.len(), 3);
+        // Sorted on construction.
+        assert!((csv.duration_s() - 1.5).abs() < 1e-12);
+        let json = ReplayTrace::from_json("{\"arrivals_s\": [0.25, 0.5, 1.5]}").unwrap();
+        assert_eq!(json, csv);
+        assert!(ReplayTrace::from_csv("h1\n1.0\nnot-a-number\n").is_err());
+        assert!(ReplayTrace::from_json("[]").is_err());
+        assert!(ReplayTrace::from_csv("").is_err());
+        assert!(ReplayTrace::new(vec![-1.0]).is_err());
+        assert!(ReplayTrace::new(vec![f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn replay_scaling_preserves_shape() {
+        let t = ReplayTrace::new(vec![1.0, 2.0, 4.0, 8.0]).unwrap();
+        let s = t.scaled(4.0);
+        assert!((s.duration_s() - 2.0).abs() < 1e-12);
+        assert!((s.mean_qps() - 4.0 * t.mean_qps()).abs() < 1e-9);
+        let to = t.scaled_to_qps(10.0);
+        assert!((to.mean_qps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replay_duration_fit_and_thinning_preserve_the_timeline() {
+        let t = ReplayTrace::new((1..=400).map(|i| i as f64 * 0.01).collect()).unwrap();
+        let fit = t.scaled_to_duration(2.0);
+        assert!((fit.duration_s() - 2.0).abs() < 1e-9);
+        assert_eq!(fit.len(), t.len());
+        // Thinning halves the rate without re-timing survivors: every
+        // kept timestamp exists in the source.
+        let thin = t.thinned_to_qps(0.5 * t.mean_qps(), 7);
+        assert!(thin.len() < t.len());
+        assert!(thin.len() > t.len() / 4, "thinning kept {} of {}", thin.len(), t.len());
+        assert!((thin.duration_s() - t.duration_s()).abs() < 0.2 * t.duration_s());
+        assert_eq!(thin, t.thinned_to_qps(0.5 * t.mean_qps(), 7), "thinning not seeded");
+        // At or above the source rate, replay cannot invent arrivals.
+        assert_eq!(t.thinned_to_qps(10.0 * t.mean_qps(), 7), t);
+    }
+
+    #[test]
+    fn replay_arrivals_are_ordered_and_typed() {
+        let t = ReplayTrace::new(vec![0.5, 0.1, 0.9]).unwrap();
+        let vision = t.arrivals(ModelId::MobileNet, &mut Rng::new(1));
+        assert_eq!(vision.len(), 3);
+        assert!(vision.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(vision.iter().all(|a| a.len_s == 0.0));
+        let audio = t.arrivals(ModelId::CitriNet, &mut Rng::new(1));
+        assert!(audio.iter().all(|a| a.len_s >= 1.0));
+        // Replay is deterministic given the same rng seed.
+        assert_eq!(
+            audio.iter().map(|a| a.at).collect::<Vec<_>>(),
+            t.arrivals(ModelId::CitriNet, &mut Rng::new(1))
+                .iter()
+                .map(|a| a.at)
+                .collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn synth_azure_is_deterministic_diurnal_and_bursty() {
+        let a = ReplayTrace::synth_azure(7, 40.0, 300.0);
+        let b = ReplayTrace::synth_azure(7, 40.0, 300.0);
+        assert_eq!(a, b);
+        assert!(ReplayTrace::synth_azure(8, 40.0, 300.0) != a, "seed ignored");
+        // Mean rate lands near the requested base.
+        assert!((a.mean_qps() / 300.0 - 1.0).abs() < 0.25, "mean={}", a.mean_qps());
+        // Diurnal envelope: the peak window rate well above the trough's.
+        let arrivals = a.arrivals(ModelId::MobileNet, &mut Rng::new(2));
+        let rates = windowed_rates(&arrivals, secs(2.0));
+        let max = rates.iter().cloned().fold(0.0, f64::max);
+        let min = rates
+            .iter()
+            .skip(1)
+            .take(rates.len().saturating_sub(2))
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!(max > 2.0 * min.max(1.0), "max={max} min={min}");
     }
 
     #[test]

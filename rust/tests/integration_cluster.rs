@@ -1,8 +1,9 @@
 //! Integration: the cluster experiment must be bitwise identical at any
-//! `--jobs` count — every cell (packing DES runs, routing comparison, and
-//! the reconfig-enabled runs with their controller decisions) is a pure
-//! function of its seed, and the sweep engine merges in job order. Plus a
-//! `preba cluster` CLI smoke test.
+//! `--jobs` count — every cell (packing DES runs, routing comparison,
+//! the reconfig-enabled runs with their controller decisions, and the
+//! trace-replay/admission section) is a pure function of its seed, and
+//! the sweep engine merges in job order. Plus `preba cluster` CLI smoke
+//! tests for `--fleet`, `--trace`, and `--admission`.
 
 use std::process::Command;
 
@@ -63,6 +64,78 @@ fn cluster_cli_reports_both_packings_and_the_bfd_win() {
     assert!(text.contains("first-fit"), "{text}");
     assert!(text.contains("best-fit"), "{text}");
     assert!(text.contains("stranded"), "{text}");
+}
+
+#[test]
+fn cluster_cli_hetero_fleet_smoke() {
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args(["cluster", "--fleet", "a100x2,a30x2", "--horizon", "2", "--strategy", "bfd"])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba cluster --fleet failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("a30"), "{text}");
+    assert!(text.contains("4 GPUs"), "{text}");
+    // A bogus class is a clean CLI error, not a panic.
+    let bad = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args(["cluster", "--fleet", "h100x8", "--horizon", "1"])
+        .output()
+        .expect("spawn preba");
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("unknown GPU class"));
+}
+
+#[test]
+fn cluster_cli_trace_replay_smoke() {
+    // A recorded CSV trace replayed through the fleet (rescaled per
+    // tenant), plus the bundled synthetic generator.
+    let dir = std::env::temp_dir().join("preba_cluster_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("arrivals.csv");
+    let mut csv = String::from("arrival_s\n");
+    for i in 0..400 {
+        csv.push_str(&format!("{}\n", i as f64 * 0.01));
+    }
+    std::fs::write(&path, csv).unwrap();
+    for trace in [path.to_str().unwrap(), "azure"] {
+        let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+            .args([
+                "cluster", "--gpus", "2", "--horizon", "2", "--strategy", "bfd", "--trace",
+                trace,
+            ])
+            .output()
+            .expect("spawn preba");
+        assert!(
+            out.status.success(),
+            "preba cluster --trace {trace} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("trace replay"), "{text}");
+    }
+}
+
+#[test]
+fn cluster_cli_admission_smoke() {
+    // --admission implies the reconfig controller and reports the
+    // dropped-vs-deferred split.
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args(["cluster", "--gpus", "2", "--horizon", "2", "--strategy", "bfd", "--admission"])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba cluster --admission failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("admission control"), "{text}");
+    assert!(text.contains("deferred"), "{text}");
+    assert!(text.contains("served late"), "{text}");
 }
 
 #[test]

@@ -1,10 +1,11 @@
 //! Property tests for `mig::placement`: packing never violates per-GPU
 //! capacity, conserves the ask list, is deterministic, and
 //! best-fit-decreasing dominates first-fit on the divisible-profile
-//! family.
+//! family — plus heterogeneous-inventory invariants (every bin caps at
+//! its own class, 7g never lands on a 4-GPC class, per-class BFD ≥ FF).
 
-use preba::mig::placement::{pack, PackStrategy, SliceAsk};
-use preba::mig::Slice;
+use preba::mig::placement::{pack, pack_fleet, PackStrategy, SliceAsk};
+use preba::mig::{GpuClass, Slice};
 use preba::prop_assert;
 use preba::util::prop::check_default;
 use preba::util::Rng;
@@ -94,6 +95,135 @@ fn bfd_dominates_ff_on_divisible_demand() {
             bf.stranded_gpcs(),
             ff.stranded_gpcs()
         );
+        Ok(())
+    });
+}
+
+/// Random mixed A100/A30 inventory (1-4 GPUs, at least one of each when
+/// size allows).
+fn random_fleet(rng: &mut Rng) -> Vec<GpuClass> {
+    let n = 1 + rng.below(4) as usize;
+    (0..n)
+        .map(|_| if rng.below(2) == 0 { GpuClass::A100 } else { GpuClass::A30 })
+        .collect()
+}
+
+/// Heterogeneous invariants: every bin caps at ITS class (an A30 bin
+/// never exceeds 4 GPCs / 24 GB), free-capacity accounting is per-class,
+/// the ask list is conserved, and no slice lands on a class that cannot
+/// host its profile (7g on a 4-GPC class in particular).
+#[test]
+fn hetero_packing_respects_every_class() {
+    check_default("hetero capacity+conservation", |rng| {
+        let asks = random_asks(rng, &Slice::PROFILES);
+        let fleet = random_fleet(rng);
+        for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
+            let p = pack_fleet(&asks, &fleet, strategy);
+            for (g, bin) in p.bins.iter().enumerate() {
+                let class = fleet[g];
+                prop_assert!(bin.class == class, "bin {g} lost its class");
+                let gpcs: usize = bin.placed.iter().map(|a| a.slice.gpcs).sum();
+                let mem: usize = bin.placed.iter().map(|a| a.slice.mem_gb).sum();
+                prop_assert!(
+                    gpcs <= class.gpcs,
+                    "GPU {g} ({}) over GPCs: {gpcs} ({strategy:?})",
+                    class.name
+                );
+                prop_assert!(
+                    mem <= class.mem_gb,
+                    "GPU {g} ({}) over memory: {mem} ({strategy:?})",
+                    class.name
+                );
+                prop_assert!(
+                    bin.gpcs_free == class.gpcs - gpcs && bin.mem_free_gb == class.mem_gb - mem,
+                    "GPU {g} free-capacity accounting drifted"
+                );
+                for a in &bin.placed {
+                    prop_assert!(
+                        class.supports(&a.slice),
+                        "{} landed on {} ({strategy:?})",
+                        a.slice.name(),
+                        class.name
+                    );
+                }
+            }
+            prop_assert!(
+                p.placements.len() + p.rejected.len() == asks.len(),
+                "asks not conserved ({strategy:?})"
+            );
+            // A profile no class supports must be rejected; one some class
+            // supports must never sit on a class that doesn't.
+            for (ask, g) in &p.placements {
+                prop_assert!(fleet[*g].supports(&ask.slice));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// 7g.40gb asks over a fleet with A30s: they either sit on an A100 or
+/// are rejected — never on the 4-GPC class — and an all-A30 fleet
+/// rejects them outright (per-GPU rejection, not a fleet-wide error).
+#[test]
+fn seven_g_never_lands_on_a_4gpc_class() {
+    check_default("7g placement", |rng| {
+        let mut asks = random_asks(rng, &Slice::PROFILES);
+        asks.push(SliceAsk { tenant: 9, slice: Slice::new(7, 40) });
+        let fleet = random_fleet(rng);
+        for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
+            let p = pack_fleet(&asks, &fleet, strategy);
+            for (ask, g) in &p.placements {
+                if ask.slice.gpcs == 7 {
+                    prop_assert!(
+                        fleet[*g] == GpuClass::A100,
+                        "7g on {} ({strategy:?})",
+                        fleet[*g].name
+                    );
+                }
+            }
+            let all_a30: Vec<GpuClass> = vec![GpuClass::A30; fleet.len()];
+            let p30 = pack_fleet(&asks, &all_a30, strategy);
+            prop_assert!(
+                p30.placements.iter().all(|(a, _)| a.slice.gpcs <= 4),
+                "an A30-only fleet hosted a big slice ({strategy:?})"
+            );
+            prop_assert!(
+                p30.rejected.iter().any(|a| a.slice.gpcs == 7),
+                "the 7g ask vanished ({strategy:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Per-class BFD ≥ FF: the divisible-family dominance holds on a
+/// homogeneous fleet of EITHER class (for the A30 the family sizes even
+/// divide the bin capacity exactly).
+#[test]
+fn bfd_dominates_ff_per_class_on_divisible_demand() {
+    let divisible = [Slice::new(1, 5), Slice::new(2, 10), Slice::new(4, 20)];
+    check_default("bfd >= ff per class", |rng| {
+        let asks = random_asks(rng, &divisible);
+        let n_gpus = 1 + rng.below(4) as usize;
+        for class in [GpuClass::A100, GpuClass::A30] {
+            let fleet: Vec<GpuClass> = vec![class; n_gpus];
+            let ff = pack_fleet(&asks, &fleet, PackStrategy::FirstFit);
+            let bf = pack_fleet(&asks, &fleet, PackStrategy::BestFit);
+            prop_assert!(
+                bf.admitted_gpcs() >= ff.admitted_gpcs(),
+                "{}: bfd admitted {} < ff {} for {asks:?} on {n_gpus} GPUs",
+                class.name,
+                bf.admitted_gpcs(),
+                ff.admitted_gpcs()
+            );
+            prop_assert!(
+                bf.stranded_gpcs() <= ff.stranded_gpcs(),
+                "{}: bfd stranded {} > ff {} for {asks:?} on {n_gpus} GPUs",
+                class.name,
+                bf.stranded_gpcs(),
+                ff.stranded_gpcs()
+            );
+        }
         Ok(())
     });
 }
