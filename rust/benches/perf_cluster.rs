@@ -31,13 +31,15 @@ fn main() {
     };
     let probe = cluster::run(&mk_cfg(), &sys).expect("valid cluster config");
     let events_per_run = probe.events;
+    let joules_per_query = probe.joules_per_query();
     let cfg = mk_cfg();
     let requests: usize = cfg.tenants.iter().map(|t| t.requests).sum();
     println!(
-        "{} tenants, {} requests, {} DES events/run",
+        "{} tenants, {} requests, {} DES events/run, {:.2} J/query",
         cfg.tenants.len(),
         requests,
-        events_per_run
+        events_per_run,
+        joules_per_query
     );
 
     let stats = time_fn("cluster::run 4-GPU diurnal fleet", 32, || {
@@ -56,6 +58,10 @@ fn main() {
             ("events_per_run", Json::num(events_per_run as f64)),
             ("events_per_sec", Json::num(events_per_sec)),
             ("sim_mean_ns", Json::num(stats.mean_ns)),
+            // Fleet energy efficiency of the measured configuration —
+            // gated (lower is better) once the committed baseline's
+            // cluster_joules_per_query is non-null.
+            ("joules_per_query", Json::num(joules_per_query)),
         ]);
         std::fs::write(&path, doc.to_string_pretty()).expect("write PREBA_BENCH_JSON");
         println!("[bench json written {path}]");

@@ -15,7 +15,7 @@
 
 use preba::config::PrebaConfig;
 use preba::experiments::support;
-use preba::metrics::{PowerModel, TcoModel};
+use preba::energy::{PowerModel, TcoModel};
 use preba::mig::{MigConfig, PackStrategy};
 use preba::models::ModelId;
 use preba::server::cluster::{self, ClusterConfig};

@@ -77,6 +77,60 @@ impl Default for PowerConfig {
     }
 }
 
+/// Component-energy integrator constants (`energy::EnergyModel`,
+/// `[energy]` in TOML). Calibrated so a fully-active / fully-idle GPU
+/// lands on the same envelope as [`PowerConfig`]'s TDP × idle-fraction
+/// figures: A100 = 45 + 7×50 = 395 W active, 45 + 7×5 = 80 W idle
+/// (PowerConfig: 400 / 80 W); host = 32 cores × 5.7 = 182.4 W active,
+/// 32 × 2.0 = 64 W idle (PowerConfig: 180 / 63 W). The per-GPC split is
+/// what lets the DES integrate energy through MIG geometry changes and
+/// elide idle power for consolidation-powered-down GPUs (MIGPerf shows
+/// slice energy is geometry-dependent, not a constant per-GPC figure).
+#[derive(Debug, Clone)]
+pub struct EnergyConfig {
+    /// A100: one GPC executing a batch, W.
+    pub gpc_active_w: f64,
+    /// A100: one powered-but-idle GPC, W.
+    pub gpc_idle_w: f64,
+    /// A100: uncore/HBM floor of a powered-on GPU, W.
+    pub uncore_w: f64,
+    /// A30-style class: active GPC, W (165 W TDP over 4 GPCs + uncore).
+    pub a30_gpc_active_w: f64,
+    /// A30-style class: idle GPC, W.
+    pub a30_gpc_idle_w: f64,
+    /// A30-style class: uncore/HBM floor, W.
+    pub a30_uncore_w: f64,
+    /// One busy host core (preprocessing or serving reserve), W.
+    pub cpu_core_active_w: f64,
+    /// One idle host core, W.
+    pub cpu_core_idle_w: f64,
+    /// FPGA DPU fully busy, W (Alveo U55C ~75 W typical).
+    pub dpu_active_w: f64,
+    /// FPGA DPU idle, W (clocks never gate fully off).
+    pub dpu_idle_w: f64,
+    /// Host base draw (DRAM, fans, NIC), W — matches
+    /// [`PowerConfig::server_base_w`].
+    pub host_base_w: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        EnergyConfig {
+            gpc_active_w: 50.0,
+            gpc_idle_w: 5.0,
+            uncore_w: 45.0,
+            a30_gpc_active_w: 32.5,
+            a30_gpc_idle_w: 4.0,
+            a30_uncore_w: 35.0,
+            cpu_core_active_w: 5.7,
+            cpu_core_idle_w: 2.0,
+            dpu_active_w: 75.0,
+            dpu_idle_w: 22.5,
+            host_base_w: 120.0,
+        }
+    }
+}
+
 /// TCO model constants (paper §6.3).
 #[derive(Debug, Clone)]
 pub struct TcoConfig {
@@ -270,6 +324,7 @@ impl Default for WorkloadConfig {
 pub struct PrebaConfig {
     pub hardware: HardwareConfig,
     pub power: PowerConfig,
+    pub energy: EnergyConfig,
     pub tco: TcoConfig,
     pub batching: BatchingConfig,
     pub dpu: DpuConfig,
@@ -311,6 +366,19 @@ impl PrebaConfig {
         p.gpu_tdp_w = doc.f64_or("power.gpu_tdp_w", p.gpu_tdp_w);
         p.fpga_w = doc.f64_or("power.fpga_w", p.fpga_w);
         p.server_base_w = doc.f64_or("power.server_base_w", p.server_base_w);
+
+        let e = &mut self.energy;
+        e.gpc_active_w = doc.f64_or("energy.gpc_active_w", e.gpc_active_w);
+        e.gpc_idle_w = doc.f64_or("energy.gpc_idle_w", e.gpc_idle_w);
+        e.uncore_w = doc.f64_or("energy.uncore_w", e.uncore_w);
+        e.a30_gpc_active_w = doc.f64_or("energy.a30_gpc_active_w", e.a30_gpc_active_w);
+        e.a30_gpc_idle_w = doc.f64_or("energy.a30_gpc_idle_w", e.a30_gpc_idle_w);
+        e.a30_uncore_w = doc.f64_or("energy.a30_uncore_w", e.a30_uncore_w);
+        e.cpu_core_active_w = doc.f64_or("energy.cpu_core_active_w", e.cpu_core_active_w);
+        e.cpu_core_idle_w = doc.f64_or("energy.cpu_core_idle_w", e.cpu_core_idle_w);
+        e.dpu_active_w = doc.f64_or("energy.dpu_active_w", e.dpu_active_w);
+        e.dpu_idle_w = doc.f64_or("energy.dpu_idle_w", e.dpu_idle_w);
+        e.host_base_w = doc.f64_or("energy.host_base_w", e.host_base_w);
 
         let t = &mut self.tco;
         t.server_usd = doc.f64_or("tco.server_usd", t.server_usd);
@@ -379,6 +447,22 @@ impl PrebaConfig {
             "GPU class presets need memory"
         );
         self.cluster.default_fleet().map_err(|e| anyhow::anyhow!("cluster.fleet: {e}"))?;
+        let e = &self.energy;
+        for (name, active, idle) in [
+            ("energy.gpc", e.gpc_active_w, e.gpc_idle_w),
+            ("energy.a30_gpc", e.a30_gpc_active_w, e.a30_gpc_idle_w),
+            ("energy.cpu_core", e.cpu_core_active_w, e.cpu_core_idle_w),
+            ("energy.dpu", e.dpu_active_w, e.dpu_idle_w),
+        ] {
+            anyhow::ensure!(
+                active >= idle && idle >= 0.0,
+                "{name}: active watts must be >= idle watts >= 0"
+            );
+        }
+        anyhow::ensure!(
+            e.uncore_w >= 0.0 && e.a30_uncore_w >= 0.0 && e.host_base_w >= 0.0,
+            "energy floors must be non-negative"
+        );
         anyhow::ensure!(self.cluster.horizon_s > 0.0, "cluster horizon must be positive");
         anyhow::ensure!(
             self.cluster.migration_s >= self.cluster.repartition_s,
@@ -449,6 +533,33 @@ mod tests {
         let mut bad = PrebaConfig::new();
         bad.cluster.fleet = "h100x8".into();
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn energy_overrides_apply_and_validate() {
+        let doc = toml::parse(
+            r#"
+            [energy]
+            gpc_active_w = 60.0
+            uncore_w = 50.0
+            host_base_w = 100.0
+            "#,
+        )
+        .unwrap();
+        let mut cfg = PrebaConfig::new();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.energy.gpc_active_w, 60.0);
+        assert_eq!(cfg.energy.uncore_w, 50.0);
+        assert_eq!(cfg.energy.host_base_w, 100.0);
+        // untouched default survives
+        assert_eq!(cfg.energy.dpu_active_w, 75.0);
+
+        let mut bad = PrebaConfig::new();
+        bad.energy.gpc_idle_w = bad.energy.gpc_active_w + 1.0;
+        assert!(bad.validate().is_err(), "idle above active must be rejected");
+        let mut bad2 = PrebaConfig::new();
+        bad2.energy.uncore_w = -1.0;
+        assert!(bad2.validate().is_err());
     }
 
     #[test]

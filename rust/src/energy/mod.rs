@@ -1,0 +1,44 @@
+//! Energy & cost accounting: component power models, DES-integrated
+//! energy, and the TCO fold onto queries-per-dollar.
+//!
+//! PREBA's two economic headline claims — **3.5× energy-efficiency** and
+//! **3.0× cost-efficiency** (paper §6.2/§6.3, Figs 20/21) — are
+//! properties of *integrated* power, not of a point-in-time utilization
+//! snapshot. MIGPerf further shows MIG slice energy behavior is workload-
+//! and geometry-dependent, so this subsystem makes energy a first-class
+//! simulated quantity the schedulers can optimize:
+//!
+//! * [`model`] — the component power models. [`PowerModel`] is the
+//!   utilization-weighted snapshot model Figs 20/21 are built on
+//!   (CPU/GPU/FPGA TDP × idle-floor scaling). [`EnergyModel`] is the
+//!   finer-grained integrator the DES drivers use: **per-GPC**
+//!   active/idle watts plus a GPU uncore/HBM floor (with presets per
+//!   [`crate::mig::GpuClass`]), per-host-core CPU power, the FPGA DPU,
+//!   and a host base draw — all overridable from TOML under `[energy]`
+//!   ([`crate::config::EnergyConfig`]).
+//! * DES integration — `server::sim_driver` and `server::cluster`
+//!   accumulate busy GPC-time through the same capacity-integral
+//!   machinery that tracks `gpu_util` (folding across geometry changes),
+//!   and surface an [`EnergyBreakdown`] via
+//!   [`crate::metrics::RunStats::energy_j`] /
+//!   `joules_per_query` / `perf_per_watt` and
+//!   `ClusterOutcome::energy`. A cluster GPU a consolidation decision
+//!   powered down stops paying its idle + uncore power (idle-power
+//!   elision) for exactly the powered-off interval.
+//! * [`tco`] — capex presets + integrated energy folded into
+//!   queries-per-dollar over the depreciation horizon
+//!   ([`TcoModel::evaluate_watts`] takes the DES's mean measured power
+//!   directly).
+//!
+//! The energy-aware *policy* consuming all this lives in
+//! [`crate::mig::reconfig`]: `ClusterReconfigController` with
+//! `ReconfigPolicy::consolidate` drains lightly-loaded GPUs under
+//! sustained low load and powers them down, with hysteresis so it never
+//! fights the rate-driven planner. `preba experiment energy` measures
+//! the whole loop.
+
+pub mod model;
+pub mod tco;
+
+pub use model::{EnergyBreakdown, EnergyModel, GpuPowerParams, PowerBreakdown, PowerModel};
+pub use tco::{TcoModel, TcoReport};

@@ -7,7 +7,7 @@
 
 use crate::config::TcoConfig;
 
-use super::power::PowerBreakdown;
+use super::model::PowerBreakdown;
 
 /// TCO calculator.
 #[derive(Debug, Clone)]
@@ -34,10 +34,19 @@ impl TcoModel {
     /// Evaluate a design point sustaining `qps` at `power` draw.
     /// `with_fpga` adds the DPU's CAPEX.
     pub fn evaluate(&self, qps: f64, power: &PowerBreakdown, with_fpga: bool) -> TcoReport {
+        self.evaluate_watts(qps, power.total(), with_fpga)
+    }
+
+    /// [`TcoModel::evaluate`] from a bare mean power draw — the entry
+    /// point for DES-integrated energy: pass
+    /// `energy_j / horizon_s` as `total_w` and the measured goodput as
+    /// `qps`, and the depreciation-horizon extrapolation is identical to
+    /// the snapshot model's.
+    pub fn evaluate_watts(&self, qps: f64, total_w: f64, with_fpga: bool) -> TcoReport {
         let c = &self.cfg;
         let capex = c.server_usd + c.gpu_usd + if with_fpga { c.fpga_usd } else { 0.0 };
         let hours = c.years * 365.25 * 24.0;
-        let opex = power.total() / 1000.0 * hours * c.usd_per_kwh;
+        let opex = total_w / 1000.0 * hours * c.usd_per_kwh;
         let queries = qps * hours * 3600.0;
         let total = capex + opex;
         TcoReport {
@@ -83,6 +92,16 @@ mod tests {
         let preba = m.evaluate(3700.0, &power(800.0), true);
         let ratio = preba.queries_per_usd / base.queries_per_usd;
         assert!(ratio > 2.0 && ratio < 5.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn evaluate_watts_matches_breakdown_path() {
+        let m = TcoModel::new(&TcoConfig::default());
+        let a = m.evaluate(500.0, &power(700.0), true);
+        let b = m.evaluate_watts(500.0, 700.0, true);
+        assert_eq!(a.capex_usd, b.capex_usd);
+        assert_eq!(a.opex_usd, b.opex_usd);
+        assert_eq!(a.queries_per_usd, b.queries_per_usd);
     }
 
     #[test]

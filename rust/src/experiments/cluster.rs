@@ -62,6 +62,7 @@ pub fn policy(sys: &PrebaConfig) -> ReconfigPolicy {
         repartition_s: sys.cluster.repartition_s,
         migration_s: sys.cluster.migration_s,
         target_util: 0.85,
+        ..ReconfigPolicy::default()
     }
 }
 

@@ -6,7 +6,7 @@
 //! improves system energy-efficiency ~3.5× on average.
 
 use crate::config::PrebaConfig;
-use crate::metrics::PowerModel;
+use crate::energy::PowerModel;
 use crate::mig::MigConfig;
 use crate::models::ModelId;
 use crate::server::{PolicyKind, PreprocMode};
@@ -22,7 +22,7 @@ pub fn measure(
     preproc: PreprocMode,
     requests: usize,
     sys: &PrebaConfig,
-) -> (f64, crate::metrics::PowerBreakdown) {
+) -> (f64, crate::energy::PowerBreakdown) {
     let out = support::saturated_qps(
         model, MigConfig::Small7, preproc, PolicyKind::Dynamic, 7, requests, sys,
     );

@@ -3,7 +3,7 @@
 //! FPGA CAPEX).
 
 use crate::config::PrebaConfig;
-use crate::metrics::TcoModel;
+use crate::energy::TcoModel;
 use crate::models::ModelId;
 use crate::server::PreprocMode;
 use crate::util::bench::Reporter;

@@ -6,6 +6,7 @@
 
 pub mod ablation;
 pub mod cluster;
+pub mod energy;
 pub mod packing;
 pub mod reconfig;
 pub mod support;
@@ -31,7 +32,7 @@ use crate::config::PrebaConfig;
 use crate::util::json::Json;
 
 /// Registry of all experiments for `preba experiment <id>` / `all`.
-pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 23] = [
+pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 24] = [
     ("fig5", fig05::run),
     ("fig6", fig06::run),
     ("fig7", fig07::run),
@@ -58,6 +59,9 @@ pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 23] = [
     ("reconfig", reconfig::run),
     ("packing", packing::run),
     ("cluster", cluster::run),
+    // Energy & cost accounting: DES-integrated power, TCO, and the
+    // power-aware consolidation study (paper §6.2/§6.3 at fleet scale).
+    ("energy", energy::run),
 ];
 
 /// Look up an experiment by id.

@@ -43,6 +43,7 @@ fn policy() -> ReconfigPolicy {
         repartition_s: 0.1,
         migration_s: 0.3,
         target_util: 0.85,
+        ..ReconfigPolicy::default()
     }
 }
 

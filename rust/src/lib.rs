@@ -31,7 +31,7 @@
 //! | models | [`models`], [`mig`], [`profiler`] | workload specs, MIG geometry + service model + packing/reconfig planners |
 //! | serving | [`batching`], [`preprocess`], [`dpu`], [`workload`] | dynamic batching, CPU-pool/DPU preprocessing, arrival synthesis + trace replay |
 //! | drivers | [`server`] | DES drivers (single GPU, multi-tenant, multi-GPU cluster) + the real-PJRT driver |
-//! | surface | [`experiments`], [`metrics`], [`config`], [`cli`], [`rt`], [`runtime`] | figure regeneration, power/TCO, TOML config, CLI plumbing, PJRT runtime |
+//! | surface | [`experiments`], [`metrics`], [`energy`], [`config`], [`cli`], [`rt`], [`runtime`] | figure regeneration, power/energy/TCO accounting, TOML config, CLI plumbing, PJRT runtime |
 //!
 //! `ARCHITECTURE.md` walks the same map in prose — including the
 //! drain → outage → restart reconfiguration lifecycle and the
@@ -58,6 +58,7 @@ pub mod cli;
 pub mod clock;
 pub mod config;
 pub mod dpu;
+pub mod energy;
 pub mod experiments;
 pub mod metrics;
 pub mod mig;

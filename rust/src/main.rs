@@ -4,6 +4,7 @@
 //! * `serve`      — run the real-PJRT serving pipeline on AOT artifacts.
 //! * `simulate`   — one DES run with explicit knobs (model/mig/preproc/...).
 //! * `profile`    — offline Batch_knee profiling for a model+MIG config.
+//! * `energy`     — integrated energy & cost: baseline vs PREBA per model.
 //! * `experiment` — regenerate a paper figure/table (`all` for everything).
 //! * `list`       — enumerate models, MIG configs and experiments.
 
@@ -22,7 +23,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: preba <serve|simulate|profile|plan|reconfig|cluster|experiment|list> [options]\n\
+    "usage: preba <serve|simulate|profile|plan|reconfig|cluster|energy|experiment|list> [options]\n\
      \n\
      serve      --model M [--preproc host|dpu] [--rate QPS] [--requests N] [--artifacts DIR]\n\
      simulate   --model M [--mig 1g|2g|7g] [--preproc ideal|cpu|dpu] [--policy static|dynamic]\n\
@@ -39,7 +40,7 @@ fn usage() -> &'static str {
                 reallocation; diurnal tenants run in anti-phase)\n\
      cluster    [--gpus N] [--fleet a100x4,a30x4] [--strategy ff|bfd|both] [--routing jsq|rr]\n\
                 [--horizon S] [--seed S] [--reconfig] [--migration S] [--repartition S]\n\
-                [--trace PATH|azure] [--rate-scale X] [--admission]\n\
+                [--trace PATH|azure] [--rate-scale X] [--admission] [--energy] [--consolidate]\n\
                 (multi-GPU DES: a diurnal tenant fleet packed onto a — possibly\n\
                 heterogeneous — GPU inventory; FF vs BFD stranded capacity, fleet\n\
                 p95/p99/SLA violations, optional online cross-GPU rebalancing.\n\
@@ -48,8 +49,14 @@ fn usage() -> &'static str {
                 per tenant, --rate-scale multiplies the offered load, and\n\
                 --admission parks rejected\n\
                 tenants' traffic in a pending queue the controller re-packs\n\
-                instead of dropping it — implies --reconfig)\n\
-     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|cluster|all>\n\
+                instead of dropping it — implies --reconfig. --energy adds the\n\
+                fleet's integrated-energy columns (kJ, J/query, perf/W) and\n\
+                --consolidate lets the controller power down drained GPUs\n\
+                under sustained low load — implies --reconfig)\n\
+     energy     [--model M] [--requests N]\n\
+                (integrated energy & cost per design point: baseline CPU\n\
+                preprocessing vs PREBA's DPU — J/query, QPS/W, queries/$)\n\
+     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|cluster|energy|all>\n\
                 [--jobs N] [--out DIR]\n\
      list\n\
      \n\
@@ -61,7 +68,8 @@ fn usage() -> &'static str {
 }
 
 fn run() -> anyhow::Result<()> {
-    let args = Args::from_env(&["fast", "help", "reconfig", "admission"])?;
+    let args =
+        Args::from_env(&["fast", "help", "reconfig", "admission", "energy", "consolidate"])?;
     if args.flag("help") || args.command.is_none() {
         println!("{}", usage());
         return Ok(());
@@ -90,6 +98,7 @@ fn run() -> anyhow::Result<()> {
         "plan" => plan(&args),
         "reconfig" => reconfig_cmd(&args, &sys),
         "cluster" => cluster_cmd(&args, &sys),
+        "energy" => energy_cmd(&args, &sys),
         "experiment" => experiment(&args, &sys),
         other => {
             anyhow::bail!("unknown command '{other}'\n{}", usage());
@@ -410,7 +419,9 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown --strategy '{other}' (ff|bfd|both)"),
     };
     let admission = args.flag("admission");
-    let reconfig = if args.flag("reconfig") || admission {
+    let consolidate = args.flag("consolidate");
+    let energy_cols = args.flag("energy");
+    let reconfig = if args.flag("reconfig") || admission || consolidate {
         let repartition_s = args.opt_f64("repartition", sys.cluster.repartition_s)?;
         let migration_s = args.opt_f64("migration", sys.cluster.migration_s)?;
         anyhow::ensure!(
@@ -466,18 +477,23 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     let fleet_desc = fleet.iter().map(|c| c.name).collect::<Vec<_>>().join(",");
     println!(
         "cluster of {n_gpus} GPUs [{fleet_desc}], {} tenants ({total_reqs} requests over \
-         ~{horizon_s} s, routing {}{}{}{})\n",
+         ~{horizon_s} s, routing {}{}{}{}{})\n",
         tenants.len(),
         routing.label(),
         if trace.is_some() { ", trace replay" } else { "" },
         if reconfig.is_some() { ", online cross-GPU rebalancing" } else { "" },
-        if admission { ", admission control" } else { "" }
+        if admission { ", admission control" } else { "" },
+        if consolidate { ", energy consolidation" } else { "" }
     );
 
-    let mut t = Table::new(&[
+    let mut headers = vec![
         "packing", "admitted", "asked", "stranded %", "worst p95 ms", "worst p99 ms", "viol %",
         "dropped", "deferred", "served late", "rebalances", "migrations",
-    ]);
+    ];
+    if energy_cols {
+        headers.extend(["fleet kJ", "J/query", "perf/W", "GPU-off s", "power-downs"]);
+    }
+    let mut t = Table::new(&headers);
     // Event detail lines are buffered so they print AFTER the summary
     // table whose rebalance/migration columns they annotate.
     let mut timeline: Vec<String> = Vec::new();
@@ -487,8 +503,9 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
         cfg.seed = seed;
         cfg.reconfig = reconfig.clone();
         cfg.admission = admission;
+        cfg.consolidate = consolidate;
         let out = cluster::run(&cfg, sys)?;
-        t.row(&[
+        let mut row = vec![
             strategy.label().to_string(),
             out.packing.admitted_gpcs().to_string(),
             out.packing.asked_gpcs().to_string(),
@@ -501,7 +518,17 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
             out.deferred_served.iter().sum::<u64>().to_string(),
             out.reconfigs.to_string(),
             out.migrations.to_string(),
-        ]);
+        ];
+        if energy_cols {
+            row.extend([
+                num(out.energy.total_j() / 1e3),
+                num(out.joules_per_query()),
+                num(out.perf_per_watt()),
+                num(out.gpu_off_s),
+                out.consolidations.to_string(),
+            ]);
+        }
+        t.row(&row);
         for ev in &out.reconfig_events {
             timeline.push(format!(
                 "  [{}] t={:.2}s -> {} moves ({} migration, predicted gain {:.1} ms)",
@@ -512,11 +539,82 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
                 ev.predicted_gain_ms
             ));
         }
+        for ev in &out.consolidation_events {
+            timeline.push(format!(
+                "  [{}] t={:.2}s -> {} GPU{} (retired {}, moved {})",
+                strategy.label(),
+                preba::clock::to_secs(ev.at),
+                if ev.powered_down { "power-down" } else { "wake" },
+                ev.gpu,
+                ev.retired,
+                ev.moved
+            ));
+        }
     }
     t.print();
     for line in timeline {
         println!("{line}");
     }
+    Ok(())
+}
+
+/// `preba energy`: integrated energy & cost per design point — baseline
+/// (CPU preprocessing) vs PREBA (DPU) at saturation, for one model or
+/// all of them. The same measurement `preba experiment energy` sweeps,
+/// without the cluster sections.
+fn energy_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
+    use preba::experiments::energy::{mean_w, measure, measure_all};
+
+    let requests = args.opt_u64("requests", 4000)? as usize;
+    // The measurement is the energy experiment's section-1 sweep
+    // (parallel over the job pool); a single --model measures just its
+    // own pair.
+    let measured: Vec<(ModelId, _, _)> = match args.opt("model") {
+        None => measure_all(requests, sys),
+        Some(name) => {
+            let model = ModelId::parse(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown model '{name}' (known: {})",
+                    ModelId::ALL.map(|m| m.name()).join(", ")
+                )
+            })?;
+            vec![(
+                model,
+                measure(model, PreprocMode::Cpu, requests, sys),
+                measure(model, PreprocMode::Dpu, requests, sys),
+            )]
+        }
+    };
+    let tco = preba::energy::TcoModel::new(&sys.tco);
+    println!(
+        "integrated energy at saturation on 1g.5gb(7x) ({requests} requests per design point)\n"
+    );
+    let mut t = Table::new(&[
+        "model", "design", "QPS", "mean W", "J/query", "QPS/W", "Mqueries/$", "perf/W gain",
+    ]);
+    for (model, base, preba_out) in &measured {
+        let gain = preba_out.stats.perf_per_watt() / base.stats.perf_per_watt().max(1e-12);
+        for (label, o, fpga, g) in
+            [("baseline", base, false, String::new()), ("PREBA", preba_out, true, num(gain))]
+        {
+            let report = tco.evaluate_watts(o.qps(), mean_w(o), fpga);
+            t.row(&[
+                model.display().to_string(),
+                label.to_string(),
+                num(o.qps()),
+                num(mean_w(o)),
+                num(o.stats.joules_per_query()),
+                num(o.stats.perf_per_watt()),
+                num(report.queries_per_usd / 1e6),
+                g,
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\n(paper §6.2/§6.3: ~3.5x energy-efficiency, ~3.0x cost-efficiency on average; \
+         fleet-scale energy: `preba cluster --energy [--consolidate]`)"
+    );
     Ok(())
 }
 

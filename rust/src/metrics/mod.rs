@@ -1,10 +1,10 @@
-//! Serving metrics: latency breakdowns, throughput, power, energy and TCO.
+//! Serving metrics: latency breakdowns, throughput and energy counters.
+//!
+//! The power/energy/TCO *models* live in [`crate::energy`] (re-exported
+//! here for compatibility); this module holds the per-run measurement
+//! containers the DES drivers fill.
 
-pub mod power;
-pub mod tco;
-
-pub use power::{PowerBreakdown, PowerModel};
-pub use tco::TcoModel;
+pub use crate::energy::{EnergyBreakdown, PowerBreakdown, PowerModel, TcoModel};
 
 use crate::clock::{to_millis, to_secs, Nanos};
 use crate::util::Summary;
@@ -50,6 +50,10 @@ pub struct RunStats {
     /// — the traffic admission control converts from dropped to merely
     /// late. Always counted inside `completed` too.
     pub deferred_served: u64,
+    /// Integrated component energy over the run's horizon
+    /// ([`crate::energy::EnergyModel`]); zero for drivers that do not
+    /// integrate power (the real-PJRT driver).
+    pub energy: EnergyBreakdown,
     /// Time of first/last completion (for measured throughput).
     first_done: Option<Nanos>,
     last_done: Option<Nanos>,
@@ -109,6 +113,33 @@ impl RunStats {
             1.0
         } else {
             self.completed as f64 / demand as f64
+        }
+    }
+
+    /// Total integrated energy over the run, joules (0 when the driver
+    /// does not integrate power).
+    pub fn energy_j(&self) -> f64 {
+        self.energy.total_j()
+    }
+
+    /// Mean energy per completed query, joules (0 with no completions).
+    pub fn joules_per_query(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.energy_j() / self.completed as f64
+        }
+    }
+
+    /// Energy efficiency, queries per joule — numerically identical to
+    /// sustained QPS per watt (the paper's Perf/Watt metric), since both
+    /// divide the same completion count by the same ∫power·dt.
+    pub fn perf_per_watt(&self) -> f64 {
+        let e = self.energy_j();
+        if e <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / e
         }
     }
 
@@ -173,6 +204,21 @@ mod tests {
         assert_eq!(s.throughput_qps(), 0.0);
         assert_eq!(s.p95_ms(), 0.0);
         assert_eq!(s.sla_violation_frac(10.0), 0.0);
+    }
+
+    #[test]
+    fn energy_counters_default_zero_and_divide_safely() {
+        let mut s = RunStats::new();
+        assert_eq!(s.energy_j(), 0.0);
+        assert_eq!(s.joules_per_query(), 0.0);
+        assert_eq!(s.perf_per_watt(), 0.0);
+        s.record(parts(0.0, 0.0, 0.0, 1.0), millis(1.0), 1);
+        s.record(parts(0.0, 0.0, 0.0, 1.0), millis(2.0), 1);
+        s.energy.gpu_active_j = 6.0;
+        s.energy.base_j = 4.0;
+        assert_eq!(s.energy_j(), 10.0);
+        assert_eq!(s.joules_per_query(), 5.0);
+        assert!((s.perf_per_watt() - 0.2).abs() < 1e-12);
     }
 
     #[test]

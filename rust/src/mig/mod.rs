@@ -39,6 +39,7 @@ pub mod service;
 pub use partition::{parse_fleet, GpuClass, MigConfig, Partition, Slice};
 pub use placement::PackStrategy;
 pub use reconfig::{
-    ClusterReconfigController, Plan, ReconfigController, ReconfigPolicy, SliceMove, TenantSpec,
+    ClusterReconfigController, ConsolidationAction, Plan, ReconfigController, ReconfigPolicy,
+    Relocation, SliceMove, TenantSpec,
 };
 pub use service::ServiceModel;

@@ -32,15 +32,16 @@
 //! Poisson/diurnal profiles.
 
 use crate::batching::{Batch, BatchPolicy, Bucketizer, DynamicBatcher, QueueParams, Request};
-use crate::clock::{secs, Nanos};
+use crate::clock::{secs, to_secs, Nanos};
 use crate::config::PrebaConfig;
 use crate::dpu::Dpu;
+use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::metrics::{LatencyParts, RunStats};
 use crate::mig::placement::{pack_fleet, Packing, SliceAsk};
-use crate::mig::reconfig::{ClusterReconfigEvent, SliceMove};
+use crate::mig::reconfig::{ClusterReconfigEvent, ConsolidationEvent, SliceMove};
 use crate::mig::{
-    ClusterReconfigController, GpuClass, PackStrategy, ReconfigPolicy, ServiceModel, Slice,
-    TenantSpec,
+    ClusterReconfigController, ConsolidationAction, GpuClass, PackStrategy, ReconfigPolicy,
+    ServiceModel, Slice, TenantSpec,
 };
 use crate::models::{ModelId, ModelKind, ModelSpec};
 use crate::preprocess::CpuPool;
@@ -168,6 +169,13 @@ pub struct ClusterConfig {
     /// dropped forever. Requires `reconfig` — deferral without re-packing
     /// would never flush the queue.
     pub admission: bool,
+    /// Energy-aware consolidation
+    /// ([`crate::mig::ReconfigPolicy::consolidate`]): under sustained
+    /// low load the controller drains the lightest GPU and powers it
+    /// down (its idle + uncore energy is elided until demand wakes it).
+    /// Requires `reconfig`; setting this forces `consolidate` on in the
+    /// policy the run uses.
+    pub consolidate: bool,
 }
 
 impl ClusterConfig {
@@ -208,6 +216,7 @@ impl ClusterConfig {
             warmup_frac: 0.05,
             reconfig: None,
             admission: false,
+            consolidate: false,
         }
     }
 
@@ -223,6 +232,11 @@ impl ClusterConfig {
             !self.admission || self.reconfig.is_some(),
             "admission control needs the reconfig controller (deferred \
              requests are only re-admitted when re-packing frees capacity)"
+        );
+        anyhow::ensure!(
+            !self.consolidate || self.reconfig.is_some(),
+            "consolidation needs the reconfig controller (power decisions \
+             ride the telemetry windows)"
         );
         for g in &self.fleet {
             anyhow::ensure!(g.gpcs >= 1 && g.mem_gb >= 1, "degenerate GPU class {g}");
@@ -294,11 +308,46 @@ pub struct ClusterOutcome {
     pub reconfig_events: Vec<ClusterReconfigEvent>,
     /// `alloc[gpu][tenant]` the run ended on.
     pub final_alloc: Vec<Vec<usize>>,
+    /// Fleet-wide integrated component energy over the horizon
+    /// ([`crate::energy::EnergyModel`]).
+    pub energy: EnergyBreakdown,
+    /// Committed consolidation power-downs.
+    pub consolidations: u64,
+    /// Total GPU-off time across the fleet, seconds (idle-power elision
+    /// the consolidation decisions bought).
+    pub gpu_off_s: f64,
+    /// Consolidation decision timeline (empty without `consolidate`).
+    pub consolidation_events: Vec<ConsolidationEvent>,
 }
 
 impl ClusterOutcome {
     pub fn tenant_stats(&self, i: usize) -> &RunStats {
         &self.per_tenant[i].1
+    }
+
+    /// Post-warmup completions across all tenants.
+    pub fn completed_total(&self) -> u64 {
+        self.per_tenant.iter().map(|(_, s)| s.completed).sum()
+    }
+
+    /// Fleet energy per completed query, joules.
+    pub fn joules_per_query(&self) -> f64 {
+        let done = self.completed_total();
+        if done == 0 {
+            0.0
+        } else {
+            self.energy.total_j() / done as f64
+        }
+    }
+
+    /// Fleet energy efficiency, queries per joule (= sustained QPS/W).
+    pub fn perf_per_watt(&self) -> f64 {
+        let e = self.energy.total_j();
+        if e <= 0.0 {
+            0.0
+        } else {
+            self.completed_total() as f64 / e
+        }
     }
 
     /// Worst per-tenant p95, ms.
@@ -340,8 +389,10 @@ enum Ev {
     /// Close a telemetry window and ask the cross-GPU controller for a
     /// rebalance (and, under admission control, re-offer pending asks).
     ReconfigCheck,
-    /// Flush a tenant's admission queue into its (newly live) capacity.
-    Readmit { tenant: usize },
+    /// Drain the admission queues into (newly live) capacity —
+    /// weighted-round-robin across tenants, so one tenant's backlog can
+    /// never monopolize a readmission pass.
+    Readmit,
 }
 
 /// One (tenant, GPU) serving group: the tenant's slices on that GPU share
@@ -356,6 +407,46 @@ struct Group {
     /// Requests routed here and not yet completed (the JSQ signal).
     outstanding: usize,
     armed_tick: Option<Nanos>,
+    /// Accumulated per-slice execution time (the energy integral's
+    /// active-GPC numerator; × the tenant's GPCs-per-slice at the end).
+    busy_ns: u128,
+}
+
+/// Per-GPU power timeline: consolidation marks a GPU off once its last
+/// mover drains, and any later slice grant wakes it. Off intervals are
+/// closed at power-on (or the horizon) into `off_ns`, which the energy
+/// integral subtracts from the GPU's powered-on time.
+struct GpuPower {
+    off_at: Vec<Option<Nanos>>,
+    off_ns: Vec<u128>,
+}
+
+impl GpuPower {
+    fn new(n_gpus: usize) -> GpuPower {
+        GpuPower { off_at: vec![None; n_gpus], off_ns: vec![0; n_gpus] }
+    }
+
+    /// Mark `g` powered off from `at` (no-op if already off).
+    fn power_off(&mut self, g: usize, at: Nanos) {
+        if self.off_at[g].is_none() {
+            self.off_at[g] = Some(at);
+        }
+    }
+
+    /// Mark `g` powered on at `now`, closing its off interval. Waking a
+    /// GPU whose off mark lies in the future (its drain had not finished
+    /// yet) simply cancels the mark.
+    fn power_on(&mut self, g: usize, now: Nanos) {
+        if let Some(off) = self.off_at[g].take() {
+            self.off_ns[g] += now.saturating_sub(off) as u128;
+        }
+    }
+
+    /// Seconds `g` spent off within `[0, horizon]`.
+    fn off_secs(&self, g: usize, horizon: Nanos) -> f64 {
+        let open = self.off_at[g].map_or(0, |off| horizon.saturating_sub(off) as u128);
+        (self.off_ns[g] + open) as f64 * 1e-9
+    }
 }
 
 struct TenantState {
@@ -492,6 +583,7 @@ fn dispatch_ready(
         let exec = secs(ts.sm.exec_secs_jittered(batch.size(), padded, exec_rng));
         let done = start + exec;
         grp.slice_free[slot] = done;
+        grp.busy_ns += exec as u128;
         let idx = match grp.free_slots.pop() {
             Some(slot) => {
                 debug_assert!(grp.in_flight[slot].is_none());
@@ -505,6 +597,32 @@ fn dispatch_ready(
         };
         q.schedule(done, Ev::ExecDone { group: gi, batch_idx: idx });
     }
+}
+
+/// Smooth weighted-round-robin slot order over per-tenant weights (the
+/// nginx SWRR discipline): each tenant appears exactly `weights[i]`
+/// times, interleaved proportionally, ties to the lowest index. The
+/// admission drain walks this order so a tenant with a 100-deep backlog
+/// cannot push another tenant's first deferred request behind all 100 of
+/// its own (the old FIFO-across-tenants drain) — no tenant starves.
+fn wrr_order(weights: &[usize]) -> Vec<usize> {
+    let total: usize = weights.iter().sum();
+    let mut current: Vec<i64> = vec![0; weights.len()];
+    let mut out = Vec::with_capacity(total);
+    for _ in 0..total {
+        let mut best = usize::MAX;
+        let mut best_cur = i64::MIN;
+        for (i, c) in current.iter_mut().enumerate() {
+            *c += weights[i] as i64;
+            if *c > best_cur && weights[i] > 0 {
+                best_cur = *c;
+                best = i;
+            }
+        }
+        current[best] -= total as i64;
+        out.push(best);
+    }
+    out
 }
 
 /// Arm a BatchTick for the group's earliest deadline unless an earlier
@@ -591,6 +709,7 @@ fn ensure_group(
         free_slots: Vec::new(),
         outstanding: 0,
         armed_tick: None,
+        busy_ns: 0,
     });
     groups.len() - 1
 }
@@ -736,12 +855,14 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                 free_slots: Vec::new(),
                 outstanding: 0,
                 armed_tick: None,
+                busy_ns: 0,
             });
         }
     }
 
     // Cross-GPU rebalancing controller (plans against each GPU's class).
-    let mut ctrl = cfg.reconfig.clone().map(|policy| {
+    let mut ctrl = cfg.reconfig.clone().map(|mut policy| {
+        policy.consolidate |= cfg.consolidate;
         let specs: Vec<TenantSpec> =
             cfg.tenants.iter().map(|t| TenantSpec::new(t.model, t.sla_ms)).collect();
         let slices: Vec<Slice> = cfg.tenants.iter().map(|t| t.slice).collect();
@@ -753,6 +874,8 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
             policy,
         )
     });
+    // Per-GPU power timeline (consolidation's idle-power elision).
+    let mut power = GpuPower::new(cfg.n_gpus());
     if let Some(c) = &ctrl {
         q.schedule(c.window(), Ev::ReconfigCheck);
     }
@@ -779,18 +902,46 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     }
                 }
             }
-            Ev::Readmit { tenant } => {
-                // Flush the admission queue into newly-live capacity in
-                // arrival order; anything that still finds no slice goes
-                // back to waiting.
-                let waiting = std::mem::take(&mut tenants[tenant].deferred_q);
-                for idx in waiting {
-                    if !start_request(
-                        tenant, idx, now, cfg, &mut groups, &mut tenants, &mut cpu_pools,
+            Ev::Readmit => {
+                // Drain the admission queues into newly-live capacity
+                // weighted-round-robin: weights are the backlog depths,
+                // so service stays proportional while every waiting
+                // tenant gets interleaved slots (FIFO-across-tenants
+                // would enqueue one tenant's whole backlog first).
+                // Arrival order is preserved within a tenant; anything
+                // that still finds no slice goes back to waiting.
+                let queues: Vec<Vec<usize>> =
+                    tenants.iter_mut().map(|t| std::mem::take(&mut t.deferred_q)).collect();
+                let weights: Vec<usize> = queues.iter().map(Vec::len).collect();
+                let mut cursor = vec![0usize; queues.len()];
+                let mut stalled = vec![false; queues.len()];
+                // A tenant stalls permanently within one drain (routing
+                // failure is tenant-level), so once every queue is
+                // stalled or exhausted the rest of the order is no-ops.
+                let mut live = queues.iter().filter(|qd| !qd.is_empty()).count();
+                for ti in wrr_order(&weights) {
+                    if live == 0 {
+                        break;
+                    }
+                    if stalled[ti] || cursor[ti] >= queues[ti].len() {
+                        continue;
+                    }
+                    let idx = queues[ti][cursor[ti]];
+                    if start_request(
+                        ti, idx, now, cfg, &mut groups, &mut tenants, &mut cpu_pools,
                         &mut dpus, q,
                     ) {
-                        tenants[tenant].deferred_q.push(idx);
+                        cursor[ti] += 1;
+                        if cursor[ti] >= queues[ti].len() {
+                            live -= 1;
+                        }
+                    } else {
+                        stalled[ti] = true;
+                        live -= 1;
                     }
+                }
+                for (ti, qd) in queues.into_iter().enumerate() {
+                    tenants[ti].deferred_q.extend(qd.into_iter().skip(cursor[ti]));
                 }
             }
             Ev::PreprocDone { tenant, idx } => {
@@ -895,6 +1046,8 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                             Some(gpu) => {
                                 let ask = pending.remove(i);
                                 late_admissions += 1;
+                                // Admitting into a parked GPU wakes it.
+                                power.power_on(gpu, now);
                                 let avail = now + secs(c.policy().migration_s);
                                 grant_slice(
                                     ask.tenant, gpu, avail, cfg, sys, now, &mut groups,
@@ -903,13 +1056,22 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                             }
                         }
                     }
-                    // Wake admission queues that now see live capacity.
-                    for (ti, ts) in tenants.iter().enumerate() {
-                        if !ts.deferred_q.is_empty()
+                    // Energy pass: consolidation shares the window
+                    // cadence and the cooldown, so a power decision can
+                    // never fight the rate-driven moves above.
+                    if let Some(action) = c.tick_consolidation(now) {
+                        downtime += apply_consolidation(
+                            &action, c.policy(), cfg, sys, now, &mut groups, &mut group_of,
+                            &mut tenants, q, &mut exec_rng, &mut power,
+                        );
+                    }
+                    // Wake the admission drain if any waiting tenant now
+                    // sees live capacity.
+                    if tenants.iter().any(|ts| {
+                        !ts.deferred_q.is_empty()
                             && ts.route.iter().any(|&g| !groups[g].slice_free.is_empty())
-                        {
-                            q.schedule(now, Ev::Readmit { tenant: ti });
-                        }
+                    }) {
+                        q.schedule(now, Ev::Readmit);
                     }
                     q.schedule_in(c.window(), Ev::ReconfigCheck);
                 }
@@ -922,10 +1084,46 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
         Some(c) => (c.events().len() as u64, c.migrations(), c.events().to_vec()),
         None => (0, 0, Vec::new()),
     };
+    let (consolidations, consolidation_events) = match &ctrl {
+        Some(c) => (c.consolidations(), c.consolidation_events().to_vec()),
+        None => (0, Vec::new()),
+    };
     let final_alloc = match &ctrl {
         Some(c) => c.alloc().to_vec(),
         None => alloc,
     };
+
+    // Fleet energy: integrate each GPU (its class's per-GPC/uncore
+    // parameters over busy GPC-time and powered-on time) plus its host's
+    // CPU cores, DPU and base draw. Power-downs show up as shortened
+    // `on_s` — the idle-power elision consolidation buys.
+    let em = EnergyModel::new(&sys.energy);
+    let horizon_s = to_secs(horizon);
+    let mut busy_gpc_s = vec![0.0f64; cfg.n_gpus()];
+    for grp in &groups {
+        busy_gpc_s[grp.gpu] +=
+            grp.busy_ns as f64 * 1e-9 * cfg.tenants[grp.tenant].slice.gpcs as f64;
+    }
+    let mut energy = EnergyBreakdown::default();
+    let mut gpu_off_s = 0.0;
+    for g in 0..cfg.n_gpus() {
+        let off_s = power.off_secs(g, horizon);
+        gpu_off_s += off_s;
+        let on_s = (horizon_s - off_s).max(0.0);
+        let (active_j, idle_j) = em.gpu_energy(&cfg.fleet[g], busy_gpc_s[g], on_s);
+        energy.gpu_active_j += active_j;
+        energy.gpu_idle_j += idle_j;
+        let pool_busy_s = cpu_pools[g].utilization(horizon) * usable as f64 * horizon_s;
+        let reserved_s = sys.hardware.cpu_reserved_cores as f64 * horizon_s;
+        energy.cpu_j += em.cpu_energy(
+            reserved_s + pool_busy_s,
+            sys.hardware.cpu_cores as f64 * horizon_s,
+        );
+        if let Some(d) = &dpus[g] {
+            energy.dpu_j += em.dpu_energy(d.utilization(horizon), horizon_s);
+        }
+        energy.base_j += em.base_energy(horizon_s);
+    }
 
     // Requests still parked in an admission queue never got capacity:
     // they end the run as drops (same post-warmup rule), and the
@@ -958,6 +1156,10 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
         reconfig_downtime: downtime,
         reconfig_events,
         final_alloc,
+        energy,
+        consolidations,
+        gpu_off_s,
+        consolidation_events,
     })
 }
 
@@ -999,10 +1201,26 @@ fn apply_moves(
         }
     }
 
-    // Rebuild batching policies for every touched group (Time_queue =
-    // Time_knee/n tracks the live slice count in both directions), then
-    // re-route the queues of groups that lost their last slice.
-    for &gi in &touched {
+    settle_groups(&touched, cfg, sys, now, groups, tenants, q, exec_rng);
+    downtime
+}
+
+/// Post-move settlement shared by rebalances and consolidation: rebuild
+/// batching policies for every touched group (Time_queue = Time_knee/n
+/// tracks the live slice count in both directions), then re-route the
+/// queues of groups that lost their last slice.
+#[allow(clippy::too_many_arguments)]
+fn settle_groups(
+    touched: &[usize],
+    cfg: &ClusterConfig,
+    sys: &PrebaConfig,
+    now: Nanos,
+    groups: &mut [Group],
+    tenants: &mut [TenantState],
+    q: &mut EventQueue<Ev>,
+    exec_rng: &mut Rng,
+) {
+    for &gi in touched {
         let ti = groups[gi].tenant;
         let n = groups[gi].slice_free.len();
         if n > 0 {
@@ -1013,7 +1231,7 @@ fn apply_moves(
             arm_tick(gi, now, groups, q);
         }
     }
-    for &gi in &touched {
+    for &gi in touched {
         if !groups[gi].slice_free.is_empty() || groups[gi].batcher.pending() == 0 {
             continue;
         }
@@ -1048,6 +1266,88 @@ fn apply_moves(
             None => {
                 for r in pending {
                     tenants[ti].drop_request(r.id as usize);
+                }
+            }
+        }
+    }
+}
+
+/// Apply a committed consolidation decision.
+///
+/// * Power-down: every retired replica drains its group's earliest-free
+///   slice and is destroyed (scale-in, no spin-up anywhere); every
+///   relocation drains the same way and re-appears on its target GPU a
+///   `migration_s` outage later (a new residency — weights ship). The
+///   victim GPU powers off once its last mover drains; emptied groups
+///   re-route exactly like rebalance moves.
+/// * Power-up: the GPU powers on at the decision instant and each
+///   granted instance becomes serveable after the migration (spin-up)
+///   outage.
+///
+/// Returns the summed relocation/grant outage (retirements remove
+/// capacity and charge none).
+#[allow(clippy::too_many_arguments)]
+fn apply_consolidation(
+    action: &ConsolidationAction,
+    policy: &ReconfigPolicy,
+    cfg: &ClusterConfig,
+    sys: &PrebaConfig,
+    now: Nanos,
+    groups: &mut Vec<Group>,
+    group_of: &mut [Vec<Option<usize>>],
+    tenants: &mut [TenantState],
+    q: &mut EventQueue<Ev>,
+    exec_rng: &mut Rng,
+    power: &mut GpuPower,
+) -> Nanos {
+    let mut downtime: Nanos = 0;
+    match action {
+        ConsolidationAction::PowerDown { gpu, retire, relocate } => {
+            let mut touched: Vec<usize> = Vec::new();
+            let touch = |g: usize, touched: &mut Vec<usize>| {
+                if !touched.contains(&g) {
+                    touched.push(g);
+                }
+            };
+            // The GPU can only power off once its last in-flight work
+            // has drained off it.
+            let mut off_at = now;
+            for &(g, ti) in retire {
+                let gi = group_of[g][ti].expect("retire from a GPU the tenant is not on");
+                groups[gi].slice_free.sort_unstable();
+                let drained = groups[gi].slice_free.remove(0).max(now);
+                if g == *gpu {
+                    off_at = off_at.max(drained);
+                }
+                touch(gi, &mut touched);
+            }
+            for r in relocate {
+                let donor =
+                    group_of[r.from_gpu][r.tenant].expect("relocate from an absent group");
+                groups[donor].slice_free.sort_unstable();
+                let drained = groups[donor].slice_free.remove(0).max(now);
+                off_at = off_at.max(drained);
+                let avail = drained + secs(policy.migration_s);
+                downtime += avail - now;
+                let gainer =
+                    ensure_group(r.tenant, r.to_gpu, cfg, sys, groups, group_of, tenants);
+                groups[gainer].slice_free.push(avail);
+                touch(donor, &mut touched);
+                touch(gainer, &mut touched);
+            }
+            settle_groups(&touched, cfg, sys, now, groups, tenants, q, exec_rng);
+            power.power_off(*gpu, off_at);
+        }
+        ConsolidationAction::PowerUp { gpu, grants } => {
+            power.power_on(*gpu, now);
+            let avail = now + secs(policy.migration_s);
+            for &(ti, n) in grants {
+                for _ in 0..n {
+                    downtime += avail - now;
+                    grant_slice(
+                        ti, *gpu, avail, cfg, sys, now, groups, group_of, tenants, q,
+                        exec_rng,
+                    );
                 }
             }
         }
@@ -1246,6 +1546,72 @@ mod tests {
             cfg.tenants[1].requests as u64 - warmup,
             "B's accounting leaked requests"
         );
+    }
+
+    #[test]
+    fn wrr_order_interleaves_proportionally_without_starvation() {
+        // Exact slot counts: every tenant appears weight[i] times.
+        let order = wrr_order(&[3, 1]);
+        assert_eq!(order, vec![0, 0, 1, 0], "smooth-WRR order drifted");
+        for (weights, n) in [(vec![5usize, 1, 1], 7usize), (vec![2, 2, 2], 6)] {
+            let order = wrr_order(&weights);
+            assert_eq!(order.len(), n);
+            for (i, &w) in weights.iter().enumerate() {
+                assert_eq!(order.iter().filter(|&&t| t == i).count(), w, "tenant {i}");
+            }
+        }
+        // No starvation: with a 100-deep backlog against a 2-deep one,
+        // the small tenant's first slot lands near its proportional
+        // position, not behind all 100 (FIFO-across-tenants would put it
+        // at index 100).
+        let order = wrr_order(&[100, 2]);
+        let first_b = order.iter().position(|&t| t == 1).unwrap();
+        assert!(first_b < 52, "tenant 1 starved until slot {first_b}");
+        // Zero-weight tenants never appear; empty input is empty.
+        assert!(wrr_order(&[0, 4, 0]).iter().all(|&t| t == 1));
+        assert!(wrr_order(&[]).is_empty());
+    }
+
+    #[test]
+    fn admission_drain_serves_every_deferred_tenant() {
+        // The admission scenario with the rejected ask split across TWO
+        // tenants: both are parked at pack time, both defer traffic, and
+        // the WRR drain + rescue must serve both — neither may starve
+        // behind the other's backlog.
+        let u = swin_unit();
+        let sys = PrebaConfig::new();
+        let horizon = 6.0;
+        let mut a = ClusterTenant::new(ModelId::SwinTransformer, one_g(), 14, 9.0 * u);
+        a.sla_ms = 25.0;
+        a.profile = Some(RateProfile::Diurnal {
+            base_qps: a.rate_qps,
+            amplitude: 0.5,
+            period_s: horizon / 2.0,
+            phase_frac: 0.0,
+        });
+        a.requests = (a.rate_qps * horizon).ceil() as usize;
+        let mk_small = || {
+            let mut t = ClusterTenant::new(ModelId::SwinTransformer, one_g(), 1, 2.0 * u);
+            t.sla_ms = 25.0;
+            t.requests = (t.rate_qps * horizon).ceil() as usize;
+            t
+        };
+        let mut cfg =
+            ClusterConfig::new(2, PackStrategy::BestFit, vec![a, mk_small(), mk_small()]);
+        cfg.reconfig = Some(crate::experiments::cluster::policy(&sys));
+        cfg.admission = true;
+        cfg.warmup_frac = 0.01;
+        let out = run(&cfg, &sys).unwrap();
+        assert_eq!(out.packing.rejected.len(), 2, "{:?}", out.packing.rejected);
+        for ti in [1, 2] {
+            assert!(out.deferred[ti] > 0, "tenant {ti} never deferred");
+            assert!(
+                out.deferred_served[ti] > 0,
+                "tenant {ti} starved: deferred {} served 0 (other: {:?})",
+                out.deferred[ti],
+                out.deferred_served
+            );
+        }
     }
 
     /// Anti-phase diurnal tenants each owning one full GPU: capacity can

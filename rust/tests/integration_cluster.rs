@@ -91,17 +91,11 @@ fn cluster_cli_hetero_fleet_smoke() {
 
 #[test]
 fn cluster_cli_trace_replay_smoke() {
-    // A recorded CSV trace replayed through the fleet (rescaled per
-    // tenant), plus the bundled synthetic generator.
-    let dir = std::env::temp_dir().join("preba_cluster_trace");
-    std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join("arrivals.csv");
-    let mut csv = String::from("arrival_s\n");
-    for i in 0..400 {
-        csv.push_str(&format!("{}\n", i as f64 * 0.01));
-    }
-    std::fs::write(&path, csv).unwrap();
-    for trace in [path.to_str().unwrap(), "azure"] {
+    // The bundled real-style replay fixture (rust/fixtures/) driven
+    // through the fleet (rescaled per tenant), plus the synthetic
+    // generator.
+    let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/fixtures/azure_sample.csv");
+    for trace in [fixture, "azure"] {
         let out = Command::new(env!("CARGO_BIN_EXE_preba"))
             .args([
                 "cluster", "--gpus", "2", "--horizon", "2", "--strategy", "bfd", "--trace",
@@ -117,6 +111,42 @@ fn cluster_cli_trace_replay_smoke() {
         let text = String::from_utf8_lossy(&out.stdout);
         assert!(text.contains("trace replay"), "{text}");
     }
+}
+
+#[test]
+fn bundled_azure_fixture_parses_and_has_the_recorded_shape() {
+    let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/fixtures/azure_sample.csv");
+    let trace = preba::workload::ReplayTrace::load(fixture).expect("fixture parses");
+    assert!(
+        (180..=260).contains(&trace.len()),
+        "fixture should hold ~200 arrivals, got {}",
+        trace.len()
+    );
+    assert!((55.0..=60.0).contains(&trace.duration_s()), "span {}", trace.duration_s());
+    assert!(trace.mean_qps() > 2.0, "mean {}", trace.mean_qps());
+}
+
+#[test]
+fn cluster_cli_energy_and_consolidation_smoke() {
+    // --energy adds the fleet energy columns; --consolidate implies the
+    // reconfig controller.
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args([
+            "cluster", "--gpus", "2", "--horizon", "2", "--strategy", "bfd", "--energy",
+            "--consolidate",
+        ])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba cluster --energy --consolidate failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fleet kJ"), "{text}");
+    assert!(text.contains("J/query"), "{text}");
+    assert!(text.contains("power-downs"), "{text}");
+    assert!(text.contains("energy consolidation"), "{text}");
 }
 
 #[test]

@@ -1,0 +1,156 @@
+//! Properties of the energy subsystem: conservation (the integrated
+//! total is exactly the sum of components AND equals ∫power·dt of the
+//! component models over the horizon), bitwise determinism of the
+//! `energy` experiment across `--jobs` counts, and the consolidation
+//! contract — powering GPUs down never increases fleet energy at an
+//! equal served count.
+
+use std::process::Command;
+
+use preba::clock::to_secs;
+use preba::config::PrebaConfig;
+use preba::mig::MigConfig;
+use preba::models::ModelId;
+use preba::server::{cluster, sim_driver, PreprocMode, SimConfig, SimOutcome};
+
+fn saturated(model: ModelId, preproc: PreprocMode) -> (SimConfig, SimOutcome) {
+    let mut cfg = SimConfig::new(model, MigConfig::Small7, preproc);
+    cfg.requests = 3000;
+    cfg.rate_qps = cfg.saturating_rate();
+    let out = sim_driver::run(&cfg, &PrebaConfig::new());
+    (cfg, out)
+}
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1e-9)
+}
+
+#[test]
+fn energy_total_is_the_component_sum() {
+    for preproc in [PreprocMode::Ideal, PreprocMode::Cpu, PreprocMode::Dpu] {
+        let (_, out) = saturated(ModelId::CitriNet, preproc);
+        let e = &out.stats.energy;
+        let sum = e.gpu_active_j + e.gpu_idle_j + e.cpu_j + e.dpu_j + e.base_j;
+        assert_eq!(sum, e.total_j(), "{preproc:?}");
+        assert!(e.total_j() > 0.0);
+    }
+}
+
+#[test]
+fn energy_matches_the_power_integral_over_the_horizon() {
+    // Recompute each component's ∫power·dt from the run's OWN reported
+    // utilizations and the config constants; the integrated breakdown
+    // must agree to float precision (no reconfiguration: the capacity
+    // integral reduces to n_vgpus × horizon exactly).
+    let sys = PrebaConfig::new();
+    let e = &sys.energy;
+    let (cfg, out) = saturated(ModelId::SwinTransformer, PreprocMode::Ideal);
+    let h_s = to_secs(out.horizon);
+    let busy_gpc_s =
+        out.gpu_util * cfg.active_servers as f64 * h_s * cfg.mig.gpcs_per_vgpu() as f64;
+    let expect_active = e.gpc_active_w * busy_gpc_s;
+    let expect_idle =
+        e.gpc_idle_w * (sys.hardware.gpcs as f64 * h_s - busy_gpc_s) + e.uncore_w * h_s;
+    assert!(
+        rel_close(out.stats.energy.gpu_active_j, expect_active, 1e-6),
+        "active {} vs ∫ {}",
+        out.stats.energy.gpu_active_j,
+        expect_active
+    );
+    assert!(
+        rel_close(out.stats.energy.gpu_idle_j, expect_idle, 1e-6),
+        "idle {} vs ∫ {}",
+        out.stats.energy.gpu_idle_j,
+        expect_idle
+    );
+    // Ideal preprocessing: only the serving reserve is active.
+    let reserved = sys.hardware.cpu_reserved_cores as f64;
+    let idle_cores = (sys.hardware.cpu_cores as f64 - reserved) * h_s;
+    let expect_cpu = e.cpu_core_active_w * reserved * h_s + e.cpu_core_idle_w * idle_cores;
+    assert!(rel_close(out.stats.energy.cpu_j, expect_cpu, 1e-6));
+    assert_eq!(out.stats.energy.dpu_j, 0.0);
+    assert!(rel_close(out.stats.energy.base_j, e.host_base_w * h_s, 1e-9));
+
+    // DPU mode: the FPGA integral follows its reported utilization.
+    let (_, out) = saturated(ModelId::CitriNet, PreprocMode::Dpu);
+    let h_s = to_secs(out.horizon);
+    let u = out.dpu_util.expect("dpu installed");
+    let expect_dpu = (e.dpu_idle_w + (e.dpu_active_w - e.dpu_idle_w) * u) * h_s;
+    assert!(
+        rel_close(out.stats.energy.dpu_j, expect_dpu, 1e-6),
+        "dpu {} vs ∫ {}",
+        out.stats.energy.dpu_j,
+        expect_dpu
+    );
+}
+
+#[test]
+fn consolidation_never_increases_energy_at_equal_served_count() {
+    // The shipped overnight scenario, with and without consolidation:
+    // same arrivals, same completions, strictly less energy once a GPU
+    // powers down — and off-time only ever shortens the idle integral.
+    let sys = PrebaConfig::new();
+    let horizon_s = 6.0;
+    let base =
+        cluster::run(&preba::experiments::energy::idle_fleet_cfg(false, horizon_s, &sys), &sys)
+            .unwrap();
+    let consol =
+        cluster::run(&preba::experiments::energy::idle_fleet_cfg(true, horizon_s, &sys), &sys)
+            .unwrap();
+    assert_eq!(base.consolidations, 0);
+    assert_eq!(base.gpu_off_s, 0.0);
+    assert!(consol.consolidations >= 1, "low load never consolidated");
+    assert!(consol.gpu_off_s > 0.0);
+    assert_eq!(
+        base.completed_total(),
+        consol.completed_total(),
+        "consolidation changed the served count"
+    );
+    assert!(
+        consol.energy.total_j() < base.energy.total_j(),
+        "consolidation increased energy: {} vs {}",
+        consol.energy.total_j(),
+        base.energy.total_j()
+    );
+    // Idle-power elision only: the active-GPC work is conserved (up to
+    // batch-formation differences after the relocation's policy rebuild).
+    assert!(
+        rel_close(consol.energy.gpu_active_j, base.energy.gpu_active_j, 0.15),
+        "active work drifted: {} vs {}",
+        consol.energy.gpu_active_j,
+        base.energy.gpu_active_j
+    );
+}
+
+fn run_energy(jobs: &str, out_dir: &std::path::Path) -> Vec<u8> {
+    let _ = std::fs::remove_dir_all(out_dir);
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .env("PREBA_FAST", "1")
+        .args(["experiment", "energy", "--jobs", jobs, "--out", out_dir.to_str().unwrap()])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba experiment energy --jobs {jobs} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out.stdout
+}
+
+#[test]
+fn experiment_energy_identical_at_jobs_1_and_4() {
+    let base = std::env::temp_dir().join("preba_energy_determinism");
+    let dir1 = base.join("j1");
+    let dir4 = base.join("j4");
+    let stdout1 = run_energy("1", &dir1);
+    let stdout4 = run_energy("4", &dir4);
+    assert_eq!(
+        String::from_utf8_lossy(&stdout1).replace(dir1.to_str().unwrap(), "<out>"),
+        String::from_utf8_lossy(&stdout4).replace(dir4.to_str().unwrap(), "<out>"),
+        "stdout differs between --jobs 1 and --jobs 4"
+    );
+    let json1 = std::fs::read(dir1.join("energy.json")).expect("energy.json at jobs=1");
+    let json4 = std::fs::read(dir4.join("energy.json")).expect("energy.json at jobs=4");
+    assert!(!json1.is_empty());
+    assert_eq!(json1, json4, "results JSON differs between --jobs 1 and --jobs 4");
+}

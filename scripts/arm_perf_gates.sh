@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# Arm the CI perf gates from a green run's bench artifact.
+#
+# The CI `perf` job uploads BENCH_pr<N>.json (the `bench-results`
+# artifact) on every run, but the gates stay disarmed while
+# rust/benches/perf_baseline.json holds nulls. Download the artifact
+# from the first green main-branch run and point this script at it:
+#
+#   scripts/arm_perf_gates.sh path/to/BENCH_pr12.json
+#
+# It copies hotpath.events_per_sec, cluster.events_per_sec and
+# cluster.joules_per_query into rust/benches/perf_baseline.json
+# (preserving the note), prints the before/after values, and leaves the
+# change for you to review and commit.
+set -euo pipefail
+
+if [ $# -ne 1 ] || [ ! -f "$1" ]; then
+    echo "usage: $0 BENCH_pr<N>.json   (a CI bench-results artifact)" >&2
+    exit 2
+fi
+
+repo_root="$(cd "$(dirname "$0")/.." && pwd)"
+baseline="$repo_root/rust/benches/perf_baseline.json"
+
+python3 - "$1" "$baseline" <<'EOF'
+import json, sys
+
+bench_path, baseline_path = sys.argv[1], sys.argv[2]
+bench = json.load(open(bench_path))
+baseline = json.load(open(baseline_path))
+
+updates = {
+    "events_per_sec": bench["hotpath"]["events_per_sec"],
+    "cluster_events_per_sec": bench["cluster"]["events_per_sec"],
+    "cluster_joules_per_query": bench["cluster"].get("joules_per_query"),
+}
+for key, value in updates.items():
+    if value is None:
+        print(f"{key}: artifact has no measurement; leaving {baseline.get(key)}")
+        continue
+    print(f"{key}: {baseline.get(key)} -> {value}")
+    baseline[key] = value
+
+with open(baseline_path, "w") as f:
+    json.dump(baseline, f, indent=2)
+    f.write("\n")
+print(f"\nwrote {baseline_path} — review with `git diff` and commit to arm the gates")
+EOF
