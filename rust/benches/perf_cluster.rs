@@ -42,6 +42,21 @@ fn main() {
         joules_per_query
     );
 
+    // Fault-recovery probe: the `faults` experiment's directed failover
+    // scenario (GPU crash, never repaired, full recovery stack). Its
+    // availability lands in the bench JSON and is gated (a floor, like
+    // events/s) once the committed baseline arms cluster_availability_frac.
+    let fault_out = cluster::run(&experiments::faults::failover_cfg(true, 4.0, &sys), &sys)
+        .expect("valid failover config");
+    let availability_frac = fault_out.availability_frac();
+    println!(
+        "failover probe: availability {:.4}, {} retries, {} hedges, {} timed out",
+        availability_frac,
+        fault_out.retries.iter().sum::<u64>(),
+        fault_out.hedges.iter().sum::<u64>(),
+        fault_out.timed_out_total()
+    );
+
     let stats = time_fn("cluster::run 4-GPU diurnal fleet", 32, || {
         std::hint::black_box(cluster::run(&mk_cfg(), &sys).expect("valid cluster config"));
     });
@@ -62,6 +77,10 @@ fn main() {
             // gated (lower is better) once the committed baseline's
             // cluster_joules_per_query is non-null.
             ("joules_per_query", Json::num(joules_per_query)),
+            // Availability under the directed crash+recovery scenario —
+            // gated (higher is better) once the committed baseline's
+            // cluster_availability_frac is non-null.
+            ("availability_frac", Json::num(availability_frac)),
         ]);
         std::fs::write(&path, doc.to_string_pretty()).expect("write PREBA_BENCH_JSON");
         println!("[bench json written {path}]");

@@ -302,6 +302,60 @@ impl ClusterDefaults {
     }
 }
 
+/// Fault-injection & recovery defaults (`[fault]` in TOML; the
+/// `preba cluster --faults SPEC` flag overrides `spec`). The schedule
+/// grammar is [`crate::fault::FaultSchedule::parse`]; the recovery knobs
+/// mirror [`crate::fault::RecoveryPolicy`].
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Default fault spec string; empty = no faults injected.
+    /// Examples: `"crash@2:g1:3"`, `"mtbf:25,mttr:1"`,
+    /// `"slice@1:g0:0.5,slow@2:g1:2:1.8"`.
+    pub spec: String,
+    /// Mean time between failures for `mtbf:`-only specs, seconds.
+    pub mtbf_s: f64,
+    /// Mean time to repair for stochastic schedules, seconds.
+    pub mttr_s: f64,
+    /// Health-check detection latency, seconds.
+    pub detect_s: f64,
+    /// Client request timeout, ms.
+    pub timeout_ms: f64,
+    /// Retry budget per request.
+    pub retries: u32,
+    /// Exponential backoff base, ms.
+    pub backoff_ms: f64,
+    /// Hedge delay, ms; 0 disables hedged requests.
+    pub hedge_ms: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            spec: String::new(),
+            mtbf_s: 25.0,
+            mttr_s: 1.0,
+            detect_s: 0.2,
+            timeout_ms: 250.0,
+            retries: 3,
+            backoff_ms: 50.0,
+            hedge_ms: 0.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// The recovery policy these knobs describe.
+    pub fn recovery(&self) -> crate::fault::RecoveryPolicy {
+        crate::fault::RecoveryPolicy {
+            detect_s: self.detect_s,
+            timeout_s: self.timeout_ms / 1000.0,
+            max_retries: self.retries,
+            backoff_s: self.backoff_ms / 1000.0,
+            hedge_s: self.hedge_ms / 1000.0,
+        }
+    }
+}
+
 /// Workload-generation configuration (paper §5 "Input query modeling").
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
@@ -329,6 +383,7 @@ pub struct PrebaConfig {
     pub batching: BatchingConfig,
     pub dpu: DpuConfig,
     pub cluster: ClusterDefaults,
+    pub fault: FaultConfig,
     pub workload: WorkloadConfig,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
@@ -414,6 +469,18 @@ impl PrebaConfig {
         c.migration_s = doc.f64_or("cluster.migration_s", c.migration_s);
         c.repartition_s = doc.f64_or("cluster.repartition_s", c.repartition_s);
 
+        let f = &mut self.fault;
+        if let Some(v) = doc.get("fault.spec").and_then(toml::Value::as_str) {
+            f.spec = v.to_string();
+        }
+        f.mtbf_s = doc.f64_or("fault.mtbf_s", f.mtbf_s);
+        f.mttr_s = doc.f64_or("fault.mttr_s", f.mttr_s);
+        f.detect_s = doc.f64_or("fault.detect_s", f.detect_s);
+        f.timeout_ms = doc.f64_or("fault.timeout_ms", f.timeout_ms);
+        f.retries = doc.i64_or("fault.retries", i64::from(f.retries)) as u32;
+        f.backoff_ms = doc.f64_or("fault.backoff_ms", f.backoff_ms);
+        f.hedge_ms = doc.f64_or("fault.hedge_ms", f.hedge_ms);
+
         let w = &mut self.workload;
         w.seed = doc.i64_or("workload.seed", w.seed as i64) as u64;
         w.requests = doc.i64_or("workload.requests", w.requests as i64) as usize;
@@ -468,6 +535,11 @@ impl PrebaConfig {
             self.cluster.migration_s >= self.cluster.repartition_s,
             "migration must cost at least a repartition"
         );
+        anyhow::ensure!(
+            self.fault.mtbf_s > 0.0 && self.fault.mttr_s > 0.0,
+            "fault mtbf_s/mttr_s must be positive"
+        );
+        self.fault.recovery().validate().map_err(|e| anyhow::anyhow!("[fault]: {e}"))?;
         Ok(())
     }
 }
@@ -559,6 +631,38 @@ mod tests {
         assert!(bad.validate().is_err(), "idle above active must be rejected");
         let mut bad2 = PrebaConfig::new();
         bad2.energy.uncore_w = -1.0;
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn fault_overrides_apply_and_validate() {
+        let doc = toml::parse(
+            r#"
+            [fault]
+            spec = "crash@2:g1:3"
+            detect_s = 0.5
+            timeout_ms = 100.0
+            retries = 1
+            hedge_ms = 30.0
+            "#,
+        )
+        .unwrap();
+        let mut cfg = PrebaConfig::new();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.fault.spec, "crash@2:g1:3");
+        let pol = cfg.fault.recovery();
+        assert_eq!(pol.detect_s, 0.5);
+        assert_eq!(pol.timeout_s, 0.1);
+        assert_eq!(pol.max_retries, 1);
+        assert_eq!(pol.hedge_s, 0.03);
+        // untouched default survives
+        assert_eq!(cfg.fault.mtbf_s, 25.0);
+
+        let mut bad = PrebaConfig::new();
+        bad.fault.mtbf_s = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad2 = PrebaConfig::new();
+        bad2.fault.timeout_ms = -5.0;
         assert!(bad2.validate().is_err());
     }
 

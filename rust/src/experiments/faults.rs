@@ -1,0 +1,343 @@
+//! Fault injection & failure recovery at fleet scale.
+//!
+//! The cluster DES grew packing, routing, cross-GPU reconfiguration and
+//! power-aware consolidation in fair weather; this experiment breaks the
+//! machines underneath it (`crate::fault`) and measures whether the
+//! recovery stack — detection, retry, hedging, failover re-packing
+//! through the controller's `try_admit` seam — actually buys
+//! availability. Three sections:
+//!
+//! 1. **Failover A/B**: tenant A fills GPU0 (7×1g), tenant B spans GPU1
+//!    (7×1g) + GPU2 (2×1g); GPU1 crashes a quarter into the run and
+//!    never comes back. The no-recovery baseline keeps blind-routing
+//!    into the dead group and strands its backlog; with recovery the
+//!    health check flushes the queue, in-flight losses are retried, the
+//!    blind window is hedged to GPU2, and the displaced slices re-pack
+//!    onto GPU2's free GPCs. Recovery must win strictly on availability
+//!    AND served count at identical load and schedule.
+//! 2. **Crash during consolidation** (the PR-5 interplay): sustained low
+//!    load lets the consolidation controller drain and power down the
+//!    lighter GPU; then the GPU carrying everything crashes. Failover
+//!    wakes the parked GPU through the same `try_admit`/power-on seam
+//!    consolidation used to park it — proving the power-down path and
+//!    the failover path never fight.
+//! 3. **Stochastic MTBF sweep**: seeded alternating-renewal fault
+//!    streams at a few MTBF points, recovery on — the availability
+//!    erosion curve as faults densify.
+
+use crate::config::PrebaConfig;
+use crate::fault::{FaultEvent, FaultKind, FaultSchedule, FaultSpec, RecoveryPolicy};
+use crate::mig::{PackStrategy, ServiceModel, Slice};
+use crate::models::ModelId;
+use crate::server::cluster::{self, ClusterConfig, ClusterOutcome, ClusterTenant};
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+fn swin_plateau(gpcs: usize) -> f64 {
+    ServiceModel::new(ModelId::SwinTransformer.spec(), gpcs).plateau_qps(0.0)
+}
+
+/// The recovery stack under test: the `[fault]` config knobs with
+/// hedging switched on (30 ms — well inside the 200 ms blind window, so
+/// requests routed to the silently-dead group get a second copy).
+pub fn recovery_policy(sys: &PrebaConfig) -> RecoveryPolicy {
+    RecoveryPolicy { hedge_s: 0.03, ..sys.fault.recovery() }
+}
+
+/// §1 fleet: tenant A 7×1g fills GPU0; tenant B 9×1g spans GPU1 (7
+/// slices) + GPU2 (2 slices), leaving 5 GPCs free on GPU2 as failover
+/// headroom. Both offered ~45% of asked capacity.
+pub fn failover_tenants(horizon_s: f64) -> Vec<ClusterTenant> {
+    let u = swin_plateau(1);
+    let mk = |slices: usize| {
+        let rate = 0.45 * slices as f64 * u;
+        let mut t = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), slices, rate);
+        t.sla_ms = 40.0;
+        t.requests = (rate * horizon_s).ceil() as usize;
+        t
+    };
+    vec![mk(7), mk(9)]
+}
+
+/// §1's fault: GPU1 — tenant B's 7-slice group — dies a quarter into the
+/// run and stays dead past the horizon (repair never lands).
+pub fn crash_schedule(horizon_s: f64) -> FaultSchedule {
+    FaultSchedule::scripted(vec![FaultEvent {
+        at_s: 0.25 * horizon_s,
+        gpu: 1,
+        kind: FaultKind::GpuCrash,
+        duration_s: f64::INFINITY,
+    }])
+}
+
+/// One §1 cell: identical fleet, load, seed and crash; `recover` toggles
+/// the recovery stack (false = the blind baseline). `pub` so the
+/// property tests and the CLI rerun the exact reported scenario.
+pub fn failover_cfg(recover: bool, horizon_s: f64, sys: &PrebaConfig) -> ClusterConfig {
+    let mut cfg = ClusterConfig::new(3, PackStrategy::BestFit, failover_tenants(horizon_s));
+    cfg.seed = 0xFA01;
+    cfg.reconfig = Some(super::cluster::policy(sys));
+    // Deferral/telemetry from the first window; the crash comparison
+    // must score the whole run, not a warmup-trimmed tail.
+    cfg.warmup_frac = 0.01;
+    let sched = crash_schedule(horizon_s);
+    cfg.faults = Some(if recover {
+        FaultSpec::recovering(sched, recovery_policy(sys))
+    } else {
+        FaultSpec::baseline(sched)
+    });
+    cfg
+}
+
+/// §2: sustained ~20% load on two 5×1g tenants packed 7+3 across two
+/// A100s — the consolidation regime. The controller drains and powers
+/// down the lighter GPU; then GPU0, now carrying everything, crashes at
+/// 55% of the horizon and stays down. Recovery must wake the parked GPU.
+pub fn consolidation_crash_cfg(horizon_s: f64, sys: &PrebaConfig) -> ClusterConfig {
+    let u = swin_plateau(1);
+    let mk = || {
+        let rate = 0.2 * 5.0 * u;
+        let mut t = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), 5, rate);
+        t.sla_ms = 60.0;
+        t.requests = (rate * horizon_s).ceil() as usize;
+        t
+    };
+    let mut cfg = ClusterConfig::new(2, PackStrategy::BestFit, vec![mk(), mk()]);
+    cfg.seed = 0xFA02;
+    cfg.reconfig = Some(super::cluster::policy(sys));
+    cfg.consolidate = true;
+    // Admission queues give the detect-time queue flush somewhere to put
+    // requests while the parked GPU is still waking (graceful
+    // degradation instead of drops).
+    cfg.admission = true;
+    cfg.warmup_frac = 0.01;
+    cfg.faults = Some(FaultSpec::recovering(
+        FaultSchedule::scripted(vec![FaultEvent {
+            at_s: 0.55 * horizon_s,
+            gpu: 0,
+            kind: FaultKind::GpuCrash,
+            duration_s: f64::INFINITY,
+        }]),
+        recovery_policy(sys),
+    ));
+    cfg
+}
+
+fn run_cell(cfg: &ClusterConfig, sys: &PrebaConfig) -> ClusterOutcome {
+    cluster::run(cfg, sys).expect("valid cluster config")
+}
+
+fn fault_row(label: &str, out: &ClusterOutcome) -> Json {
+    Json::obj(vec![
+        ("mode", Json::str(label)),
+        ("availability_frac", Json::num(out.availability_frac())),
+        ("completed", Json::num(out.completed_total() as f64)),
+        ("timed_out", Json::num(out.timed_out_total() as f64)),
+        ("dropped", Json::num(out.dropped.iter().sum::<u64>() as f64)),
+        ("retries", Json::num(out.retries.iter().sum::<u64>() as f64)),
+        ("hedges", Json::num(out.hedges.iter().sum::<u64>() as f64)),
+        ("reconfig_aborts", Json::num(out.reconfig_aborts as f64)),
+        ("served_by_failed", Json::num(out.served_by_failed as f64)),
+        ("mttr_s", Json::num(out.mttr_s)),
+        ("worst_p95_ms", Json::num(out.worst_p95_ms())),
+    ])
+}
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Faults: injection, recovery and failover re-packing");
+    let horizon_s = if super::fast() { 8.0 } else { 16.0 };
+
+    // ---- Section 1: failover A/B at identical load + schedule. ----
+    rep.section("GPU crash, never repaired: no-recovery baseline vs full recovery stack");
+    let modes = [false, true];
+    let cfgs: Vec<ClusterConfig> =
+        modes.iter().map(|&rec| failover_cfg(rec, horizon_s, sys)).collect();
+    let outs = super::sweep(&cfgs, |cfg| run_cell(cfg, sys));
+    let mut t = Table::new(&[
+        "mode", "avail %", "served", "timed out", "retries", "hedges", "aborts", "MTTR s",
+    ]);
+    let mut rows = Vec::new();
+    for (&rec, out) in modes.iter().zip(outs.iter()) {
+        let mode = if rec { "recovery" } else { "baseline" };
+        t.row(&[
+            mode.to_string(),
+            num(out.availability_frac() * 100.0),
+            out.completed_total().to_string(),
+            out.timed_out_total().to_string(),
+            out.retries.iter().sum::<u64>().to_string(),
+            out.hedges.iter().sum::<u64>().to_string(),
+            out.reconfig_aborts.to_string(),
+            num(out.mttr_s),
+        ]);
+        rows.push(fault_row(mode, out));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    if let Some(recov) = outs.get(1) {
+        for r in &recov.fault_records {
+            rep.row(&format!(
+                "  t={:.2}s {} on gpu{} -> detected {} repaired {}",
+                r.at_s,
+                r.kind.label(),
+                r.gpu,
+                r.detected_s.map_or("never".into(), |d| format!("{d:.2}s")),
+                r.repaired_s.map_or("never".into(), |d| format!("{d:.2}s")),
+            ));
+        }
+    }
+    rep.data("failover", Json::Arr(rows));
+
+    // ---- Section 2: crash during consolidation. ----
+    rep.section("low load parks a GPU; the loaded one crashes — failover wakes the parked GPU");
+    let cfg = consolidation_crash_cfg(horizon_s, sys);
+    let out = run_cell(&cfg, sys);
+    let mut t = Table::new(&[
+        "consolidations", "gpu off s", "avail %", "served", "timed out", "served-by-failed",
+    ]);
+    t.row(&[
+        out.consolidations.to_string(),
+        num(out.gpu_off_s),
+        num(out.availability_frac() * 100.0),
+        out.completed_total().to_string(),
+        out.timed_out_total().to_string(),
+        out.served_by_failed.to_string(),
+    ]);
+    for line in t.render() {
+        rep.row(&line);
+    }
+    let mut row = fault_row("consolidation-crash", &out);
+    if let Json::Obj(pairs) = &mut row {
+        pairs.insert("consolidations".to_string(), Json::num(out.consolidations as f64));
+        pairs.insert("gpu_off_s".to_string(), Json::num(out.gpu_off_s));
+    }
+    rep.data("consolidation_crash", row);
+
+    // ---- Section 3: stochastic MTBF sweep, recovery on. ----
+    rep.section("seeded stochastic faults (alternating renewal): availability vs MTBF");
+    let mtbfs = [10.0f64, 30.0];
+    let cfgs: Vec<ClusterConfig> = mtbfs
+        .iter()
+        .map(|&mtbf| {
+            let mut cfg = failover_cfg(true, horizon_s, sys);
+            cfg.seed = 0xFA03;
+            let sched =
+                FaultSchedule::parse(&format!("mtbf:{mtbf},mttr:1"), 3, horizon_s, cfg.seed)
+                    .expect("valid stochastic spec");
+            cfg.faults = Some(FaultSpec::recovering(sched, recovery_policy(sys)));
+            cfg
+        })
+        .collect();
+    let outs = super::sweep(&cfgs, |cfg| run_cell(cfg, sys));
+    let mut t = Table::new(&["MTBF s", "faults", "avail %", "timed out", "MTTR s"]);
+    let mut rows = Vec::new();
+    for ((&mtbf, cfg), out) in mtbfs.iter().zip(cfgs.iter()).zip(outs.iter()) {
+        let n_faults =
+            cfg.faults.as_ref().map_or(0, |f| f.schedule.events.len());
+        t.row(&[
+            num(mtbf),
+            n_faults.to_string(),
+            num(out.availability_frac() * 100.0),
+            out.timed_out_total().to_string(),
+            num(out.mttr_s),
+        ]);
+        rows.push(Json::obj(vec![
+            ("mtbf_s", Json::num(mtbf)),
+            ("faults", Json::num(n_faults as f64)),
+            ("availability_frac", Json::num(out.availability_frac())),
+            ("timed_out", Json::num(out.timed_out_total() as f64)),
+            ("mttr_s", Json::num(out.mttr_s)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("stochastic", Json::Arr(rows));
+
+    rep.finish("faults")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(r: &Json, key: &str) -> f64 {
+        r.get(key).unwrap().as_f64().unwrap()
+    }
+
+    /// One test, one `run()` — every assertion (failover A/B,
+    /// consolidation interplay, stochastic sweep) shares one execution.
+    #[test]
+    fn recovery_beats_baseline_and_coexists_with_consolidation() {
+        crate::experiments::set_fast(true);
+        let sys = PrebaConfig::new();
+        let doc = run(&sys);
+        let data = doc.get("data").unwrap();
+
+        // §1: recovery strictly wins on availability and served count at
+        // identical load and fault schedule.
+        let rows = data.get("failover").unwrap().as_arr().unwrap();
+        let row = |mode: &str| {
+            rows.iter().find(|r| r.get("mode").unwrap().as_str() == Some(mode)).unwrap()
+        };
+        let (base, rec) = (row("baseline"), row("recovery"));
+        assert!(
+            f(rec, "availability_frac") > f(base, "availability_frac"),
+            "recovery {} vs baseline {} availability",
+            f(rec, "availability_frac"),
+            f(base, "availability_frac")
+        );
+        assert!(
+            f(rec, "completed") > f(base, "completed"),
+            "recovery {} vs baseline {} served",
+            f(rec, "completed"),
+            f(base, "completed")
+        );
+        assert!(f(rec, "timed_out") < f(base, "timed_out"), "recovery must strand less");
+        assert!(f(base, "timed_out") > 0.0, "the crash must actually hurt the baseline");
+        assert!(f(rec, "retries") > 0.0, "in-flight losses were never retried");
+        assert!(f(rec, "hedges") > 0.0, "the blind window was never hedged");
+        assert_eq!(f(base, "retries"), 0.0, "baseline has no recovery stack");
+        assert_eq!(f(base, "hedges"), 0.0);
+        // Nothing is ever served by a failed group, with or without
+        // recovery (the dispatch gate, not the recovery stack, owns this).
+        assert_eq!(f(base, "served_by_failed"), 0.0);
+        assert_eq!(f(rec, "served_by_failed"), 0.0);
+
+        // §1 conservation: every post-warmup request ends in exactly one
+        // terminal bucket on both sides of the A/B. (8.0 s matches the
+        // fast-mode horizon `run` used above.)
+        let cfg = failover_cfg(true, 8.0, &sys);
+        let demand: f64 = cfg
+            .tenants
+            .iter()
+            .map(|t| (t.requests - (t.requests as f64 * cfg.warmup_frac) as usize) as f64)
+            .sum();
+        for r in [base, rec] {
+            assert_eq!(
+                f(r, "completed") + f(r, "timed_out") + f(r, "dropped"),
+                demand,
+                "conservation broke for {:?}",
+                r.get("mode")
+            );
+        }
+
+        // §2: consolidation parked a GPU, the crash did not un-prove it,
+        // and failover re-served the load on the woken GPU.
+        let cc = data.get("consolidation_crash").unwrap();
+        assert!(f(cc, "consolidations") >= 1.0, "never powered a GPU down");
+        assert!(f(cc, "gpu_off_s") > 0.0);
+        assert_eq!(f(cc, "served_by_failed"), 0.0);
+        assert!(
+            f(cc, "availability_frac") > 0.9,
+            "failover through the consolidation seam failed: {}",
+            f(cc, "availability_frac")
+        );
+
+        // §3: the dense-fault cell actually injected faults.
+        let rows = data.get("stochastic").unwrap().as_arr().unwrap();
+        let dense = rows.iter().find(|r| f(r, "mtbf_s") == 10.0).unwrap();
+        assert!(f(dense, "faults") >= 1.0, "stochastic schedule was empty");
+    }
+}

@@ -7,6 +7,7 @@
 pub mod ablation;
 pub mod cluster;
 pub mod energy;
+pub mod faults;
 pub mod packing;
 pub mod reconfig;
 pub mod support;
@@ -32,7 +33,7 @@ use crate::config::PrebaConfig;
 use crate::util::json::Json;
 
 /// Registry of all experiments for `preba experiment <id>` / `all`.
-pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 24] = [
+pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 25] = [
     ("fig5", fig05::run),
     ("fig6", fig06::run),
     ("fig7", fig07::run),
@@ -62,6 +63,9 @@ pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 24] = [
     // Energy & cost accounting: DES-integrated power, TCO, and the
     // power-aware consolidation study (paper §6.2/§6.3 at fleet scale).
     ("energy", energy::run),
+    // Fault injection & failure recovery: crashes, stragglers, outages
+    // and the detect/retry/hedge/failover stack (fault::*).
+    ("faults", faults::run),
 ];
 
 /// Look up an experiment by id.

@@ -1,0 +1,320 @@
+//! Fault schedules: what breaks, where, when, and for how long.
+//!
+//! A schedule is an explicit, time-sorted `(t, gpu, kind, duration)`
+//! list. It can be built three ways, all deterministic:
+//!
+//! * [`FaultSchedule::scripted`] — hand-written event lists (tests, the
+//!   `faults` experiment's directed scenarios).
+//! * [`FaultSchedule::stochastic`] — per-GPU alternating-renewal
+//!   up/down processes with exponential MTBF/MTTR, drawn from a seeded
+//!   [`Rng`] split per GPU so the schedule is invariant to fleet
+//!   iteration order.
+//! * [`FaultSchedule::parse`] — the `--faults` / `[fault] spec` grammar:
+//!   comma-separated entries `kind@t:gN[:dur[:factor]]`, e.g.
+//!   `crash@2.5:g1:1.0,slow@4:g0:2:3.0`, plus `mtbf:M[,mttr:R]` to mix
+//!   in a stochastic background.
+
+use crate::util::Rng;
+
+/// The failure modes the cluster DES can inject.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Whole-GPU crash: every slice on the GPU stops executing, in-flight
+    /// batches are lost, and the GPU draws no power until repair.
+    GpuCrash,
+    /// One MIG slice fails: the fullest group on the GPU loses its
+    /// earliest-free slice until repair.
+    SliceFail,
+    /// The GPU's host preprocessing resources (CPU pool / DPU) go down;
+    /// requests admitted during the outage wait it out.
+    PreprocOutage,
+    /// Straggler: service times on the GPU are multiplied by `factor`
+    /// for the duration; completions count as served-degraded.
+    Slowdown { factor: f64 },
+    /// The next repartition/migration plan at or after the fault instant
+    /// aborts mid-drain and rolls back (the drained slice returns to its
+    /// donor after paying the drain + repartition outage).
+    ReconfigAbort,
+}
+
+impl FaultKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::GpuCrash => "crash",
+            FaultKind::SliceFail => "slice",
+            FaultKind::PreprocOutage => "preproc",
+            FaultKind::Slowdown { .. } => "slow",
+            FaultKind::ReconfigAbort => "abort",
+        }
+    }
+}
+
+/// One scheduled fault: `(t, target, kind, duration)`.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultEvent {
+    pub at_s: f64,
+    pub gpu: usize,
+    pub kind: FaultKind,
+    /// Repair arrives this long after injection (0 for the instantaneous
+    /// [`FaultKind::ReconfigAbort`]). `f64::INFINITY` means the unit never
+    /// comes back: no repair event is scheduled, and only recovery (or the
+    /// end of the run) resolves whatever the fault stranded. The spec
+    /// grammar spells it `inf`, e.g. `crash@2:g1:inf`.
+    pub duration_s: f64,
+}
+
+/// A deterministic fault schedule, sorted by injection time.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// An explicit event list (sorted on construction; ties keep their
+    /// given order).
+    pub fn scripted(mut events: Vec<FaultEvent>) -> FaultSchedule {
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        FaultSchedule { events }
+    }
+
+    /// Per-GPU alternating-renewal fault process: up-times are
+    /// exponential with mean `mtbf_s`, down-times exponential with mean
+    /// `mttr_s` (floored at 1% of the mean so a repair is never
+    /// instantaneous). Kinds are drawn 40% crash / 30% slice /
+    /// 20% slowdown (factor 1.5–3.5) / 10% preprocessing outage.
+    /// Each GPU draws from its own [`Rng::split`] stream, so the
+    /// schedule does not depend on how many faults other GPUs see.
+    pub fn stochastic(
+        mtbf_s: f64,
+        mttr_s: f64,
+        horizon_s: f64,
+        n_gpus: usize,
+        rng: &mut Rng,
+    ) -> FaultSchedule {
+        assert!(mtbf_s > 0.0 && mttr_s > 0.0 && horizon_s > 0.0, "non-positive MTBF/MTTR");
+        let mut events = Vec::new();
+        for g in 0..n_gpus {
+            let mut r = rng.split(0xFA17_0000 + g as u64);
+            let mut t = r.exp(1.0 / mtbf_s);
+            while t < horizon_s {
+                let duration_s = r.exp(1.0 / mttr_s).max(0.01 * mttr_s);
+                let kind = match r.below(10) {
+                    0..=3 => FaultKind::GpuCrash,
+                    4..=6 => FaultKind::SliceFail,
+                    7..=8 => FaultKind::Slowdown { factor: 1.5 + 2.0 * r.f64() },
+                    _ => FaultKind::PreprocOutage,
+                };
+                events.push(FaultEvent { at_s: t, gpu: g, kind, duration_s });
+                t += duration_s + r.exp(1.0 / mtbf_s);
+            }
+        }
+        FaultSchedule::scripted(events)
+    }
+
+    /// Parse a `--faults` spec string. Grammar (comma-separated):
+    ///
+    /// * `crash@T:gN[:DUR]` — GPU `N` crashes at `T` s for `DUR` s (1.0)
+    /// * `slice@T:gN[:DUR]` — one slice on GPU `N` fails
+    /// * `preproc@T:gN[:DUR]` — GPU `N`'s preprocessing is out
+    /// * `slow@T:gN[:DUR[:FACTOR]]` — service ×`FACTOR` (2.0) for `DUR` s
+    /// * `abort@T:gN` — the next reconfig plan at/after `T` aborts
+    /// * `mtbf:M` / `mttr:R` — add a stochastic background over the
+    ///   horizon (MTTR defaults to `M/10`), seeded from `seed`
+    ///
+    /// A GPU target is `gN` or a bare index. `DUR` may be `inf` for a
+    /// permanent fault that is never repaired.
+    pub fn parse(
+        spec: &str,
+        n_gpus: usize,
+        horizon_s: f64,
+        seed: u64,
+    ) -> anyhow::Result<FaultSchedule> {
+        let mut events = Vec::new();
+        let (mut mtbf, mut mttr) = (None, None);
+        for ent in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            if let Some(v) = ent.strip_prefix("mtbf:") {
+                mtbf = Some(parse_num(v, ent, "MTBF")?);
+                continue;
+            }
+            if let Some(v) = ent.strip_prefix("mttr:") {
+                mttr = Some(parse_num(v, ent, "MTTR")?);
+                continue;
+            }
+            let (kind_s, rest) = ent.split_once('@').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "fault entry '{ent}': expected kind@t:gN[:dur[:factor]], \
+                     mtbf:M, or mttr:R"
+                )
+            })?;
+            let parts: Vec<&str> = rest.split(':').collect();
+            anyhow::ensure!(parts.len() >= 2, "fault entry '{ent}': missing target GPU");
+            let at_s = parse_num(parts[0], ent, "time")?;
+            let gpu = parse_gpu(parts[1], ent)?;
+            let num_at = |i: usize, what: &str, default: f64| -> anyhow::Result<f64> {
+                match parts.get(i) {
+                    None => Ok(default),
+                    Some(s) => parse_num(s, ent, what),
+                }
+            };
+            let (kind, duration_s) = match kind_s {
+                "crash" => (FaultKind::GpuCrash, num_at(2, "duration", 1.0)?),
+                "slice" => (FaultKind::SliceFail, num_at(2, "duration", 1.0)?),
+                "preproc" => (FaultKind::PreprocOutage, num_at(2, "duration", 1.0)?),
+                "slow" => (
+                    FaultKind::Slowdown { factor: num_at(3, "factor", 2.0)? },
+                    num_at(2, "duration", 1.0)?,
+                ),
+                "abort" => (FaultKind::ReconfigAbort, 0.0),
+                other => anyhow::bail!(
+                    "unknown fault kind '{other}' in '{ent}' \
+                     (crash|slice|preproc|slow|abort)"
+                ),
+            };
+            events.push(FaultEvent { at_s, gpu, kind, duration_s });
+        }
+        if let Some(m) = mtbf {
+            let r = mttr.unwrap_or(m / 10.0);
+            let mut rng = Rng::new(seed ^ 0xFA17_C0DE);
+            events.extend(FaultSchedule::stochastic(m, r, horizon_s, n_gpus, &mut rng).events);
+        } else {
+            anyhow::ensure!(mttr.is_none(), "mttr: given without mtbf:");
+        }
+        let sched = FaultSchedule::scripted(events);
+        sched.validate(n_gpus)?;
+        Ok(sched)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn validate(&self, n_gpus: usize) -> anyhow::Result<()> {
+        for (i, e) in self.events.iter().enumerate() {
+            anyhow::ensure!(
+                e.at_s.is_finite() && e.at_s >= 0.0,
+                "fault {i}: bad injection time {}",
+                e.at_s
+            );
+            // Infinity is legal (permanent fault, never repaired); NaN and
+            // negatives are not.
+            anyhow::ensure!(
+                !e.duration_s.is_nan() && e.duration_s >= 0.0,
+                "fault {i}: bad duration {}",
+                e.duration_s
+            );
+            anyhow::ensure!(
+                e.gpu < n_gpus,
+                "fault {i}: GPU g{} outside the {n_gpus}-GPU fleet",
+                e.gpu
+            );
+            if let FaultKind::Slowdown { factor } = e.kind {
+                anyhow::ensure!(
+                    factor.is_finite() && factor >= 1.0,
+                    "fault {i}: slowdown factor {factor} must be >= 1"
+                );
+            }
+            if !matches!(e.kind, FaultKind::ReconfigAbort) {
+                anyhow::ensure!(e.duration_s > 0.0, "fault {i}: zero-length outage");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_num(s: &str, ent: &str, what: &str) -> anyhow::Result<f64> {
+    s.trim()
+        .parse::<f64>()
+        .map_err(|_| anyhow::anyhow!("fault entry '{ent}': bad {what} '{s}'"))
+}
+
+fn parse_gpu(s: &str, ent: &str) -> anyhow::Result<usize> {
+    let digits = s.strip_prefix('g').unwrap_or(s);
+    digits
+        .parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("fault entry '{ent}': bad GPU target '{s}' (use gN)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_every_kind_and_sorts() {
+        let s = FaultSchedule::parse(
+            "slow@4:g0:2:3.0, crash@2.5:g1:1.0, abort@5:g1, slice@1:0:0.5, preproc@3:g0",
+            2,
+            10.0,
+            7,
+        )
+        .unwrap();
+        assert_eq!(s.len(), 5);
+        assert!(s.events.windows(2).all(|w| w[0].at_s <= w[1].at_s), "unsorted");
+        assert_eq!(s.events[0].kind, FaultKind::SliceFail);
+        assert_eq!(s.events[0].gpu, 0, "bare GPU index accepted");
+        assert_eq!(s.events[1].kind, FaultKind::GpuCrash);
+        assert!(matches!(s.events[4].kind, FaultKind::ReconfigAbort));
+        assert_eq!(s.events[2].duration_s, 1.0, "preproc default duration");
+        assert!(matches!(s.events[3].kind, FaultKind::Slowdown { factor } if factor == 3.0));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        for bad in [
+            "crash@2.5",             // no target
+            "crash@x:g0",            // bad time
+            "crash@1:g9:1.0",        // GPU outside fleet
+            "melt@1:g0:1.0",         // unknown kind
+            "slow@1:g0:1.0:0.5",     // factor < 1
+            "crash@1:g0:0",          // zero-length outage
+            "mttr:0.5",              // mttr without mtbf
+            "crash",                 // no @
+        ] {
+            assert!(FaultSchedule::parse(bad, 2, 10.0, 7).is_err(), "accepted '{bad}'");
+        }
+        assert!(FaultSchedule::parse("", 2, 10.0, 7).unwrap().is_empty());
+    }
+
+    #[test]
+    fn infinite_duration_means_permanent_fault() {
+        let s = FaultSchedule::parse("crash@2:g1:inf", 2, 10.0, 7).unwrap();
+        assert_eq!(s.len(), 1);
+        assert!(s.events[0].duration_s.is_infinite());
+        assert!(s.validate(2).is_ok(), "inf duration must validate");
+        assert!(FaultSchedule::parse("crash@2:g1:nan", 2, 10.0, 7).is_err());
+        assert!(FaultSchedule::parse("crash@2:g1:-1", 2, 10.0, 7).is_err());
+    }
+
+    #[test]
+    fn stochastic_is_seeded_and_respects_the_horizon() {
+        let mut r1 = Rng::new(11);
+        let mut r2 = Rng::new(11);
+        let a = FaultSchedule::stochastic(2.0, 0.5, 30.0, 3, &mut r1);
+        let b = FaultSchedule::stochastic(2.0, 0.5, 30.0, 3, &mut r2);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.gpu, y.gpu);
+        }
+        assert!(!a.is_empty(), "30 s at MTBF 2 s should fault");
+        assert!(a.events.iter().all(|e| e.at_s < 30.0 && e.duration_s > 0.0));
+        assert!(a.validate(3).is_ok());
+        let mut r3 = Rng::new(12);
+        let c = FaultSchedule::stochastic(2.0, 0.5, 30.0, 3, &mut r3);
+        assert!(
+            a.len() != c.len()
+                || a.events.iter().zip(&c.events).any(|(x, y)| x.at_s != y.at_s),
+            "seed ignored"
+        );
+    }
+
+    #[test]
+    fn parse_mixes_scripted_and_stochastic() {
+        let s = FaultSchedule::parse("crash@1:g0:2,mtbf:3,mttr:0.5", 2, 20.0, 9).unwrap();
+        assert!(s.len() > 1, "stochastic background missing");
+        assert!(s.events.iter().any(|e| e.at_s == 1.0 && e.gpu == 0));
+    }
+}

@@ -1,0 +1,139 @@
+//! Fault injection & failure recovery for the cluster DES.
+//!
+//! The fleet simulated by `server::cluster` was a fair-weather machine:
+//! no GPU, slice, or preprocessing unit ever failed, so the reconfig
+//! planner, admission control, and consolidation had never been
+//! exercised under loss of capacity. Real MIG serving systems must
+//! survive exactly this — MIG-Serving (arXiv:2109.11067) frames
+//! reconfiguration as rescheduling under a changing machine set, and
+//! ParvaGPU (arXiv:2409.14447) targets cloud scales where unit failures
+//! are routine.
+//!
+//! Two halves:
+//!
+//! * [`inject`] — deterministic fault schedules: explicit
+//!   `(t, target, kind, duration)` event lists, a `--faults` spec-string
+//!   grammar, and stochastic MTBF/MTTR generation seeded via
+//!   [`crate::util::Rng`] (so `--jobs N` sweeps stay byte-identical).
+//! * [`recover`] — the recovery policy: detection latency, per-request
+//!   timeout + retry with exponential backoff, optional hedged requests,
+//!   and failover re-packing through the reconfig controller's
+//!   `try_admit` seam.
+//!
+//! The DES wiring lives in `server::cluster`: a [`FaultSpec`] on
+//! `ClusterConfig::faults` turns faults on; `recovery: None` is the
+//! no-recovery baseline the `faults` experiment compares against.
+
+pub mod inject;
+pub mod recover;
+
+pub use inject::{FaultEvent, FaultKind, FaultSchedule};
+pub use recover::RecoveryPolicy;
+
+/// What a cluster run should break, and whether the fleet fights back.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSpec {
+    pub schedule: FaultSchedule,
+    /// `None` = the no-recovery baseline: faults strike but nothing is
+    /// detected, retried, re-routed, or re-packed — lost requests time
+    /// out and blind routing keeps feeding dead groups until repair.
+    pub recovery: Option<RecoveryPolicy>,
+}
+
+impl FaultSpec {
+    /// Scripted faults with recovery enabled at the given policy.
+    pub fn recovering(schedule: FaultSchedule, recovery: RecoveryPolicy) -> FaultSpec {
+        FaultSpec { schedule, recovery: Some(recovery) }
+    }
+
+    /// The same schedule with recovery stripped (the A/B baseline).
+    pub fn baseline(schedule: FaultSchedule) -> FaultSpec {
+        FaultSpec { schedule, recovery: None }
+    }
+
+    pub fn validate(&self, n_gpus: usize) -> anyhow::Result<()> {
+        self.schedule.validate(n_gpus)?;
+        if let Some(r) = &self.recovery {
+            r.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// One injected fault's observed lifecycle — drives the CLI timeline and
+/// the MTTR aggregate on `ClusterOutcome`.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    pub at_s: f64,
+    pub gpu: usize,
+    pub kind: FaultKind,
+    /// When the health check noticed (recovery runs only; crashes).
+    pub detected_s: Option<f64>,
+    /// When the unit came back. `None` = still down at the horizon.
+    pub repaired_s: Option<f64>,
+    /// The fault landed on a unit already down and was ignored.
+    pub skipped: bool,
+}
+
+impl FaultRecord {
+    /// Observed time-to-repair, seconds.
+    pub fn ttr_s(&self) -> Option<f64> {
+        self.repaired_s.map(|r| r - self.at_s)
+    }
+}
+
+/// Mean time-to-repair over the records whose repair completed, seconds
+/// (0 when nothing was repaired). [`FaultKind::ReconfigAbort`] records are
+/// excluded: an abort's "repair" stamp is the instant its arm was
+/// consumed, not a unit coming back from downtime.
+pub fn mttr_s(records: &[FaultRecord]) -> f64 {
+    let reps: Vec<f64> = records
+        .iter()
+        .filter(|r| !matches!(r.kind, FaultKind::ReconfigAbort))
+        .filter_map(FaultRecord::ttr_s)
+        .collect();
+    if reps.is_empty() {
+        0.0
+    } else {
+        reps.iter().sum::<f64>() / reps.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mttr_averages_completed_repairs_only() {
+        let rec = |at, rep| FaultRecord {
+            at_s: at,
+            gpu: 0,
+            kind: FaultKind::GpuCrash,
+            detected_s: None,
+            repaired_s: rep,
+            skipped: false,
+        };
+        assert_eq!(mttr_s(&[]), 0.0);
+        let recs = [rec(1.0, Some(2.0)), rec(5.0, Some(8.0)), rec(9.0, None)];
+        assert!((mttr_s(&recs) - 2.0).abs() < 1e-12);
+        let abort = FaultRecord {
+            at_s: 0.0,
+            gpu: 0,
+            kind: FaultKind::ReconfigAbort,
+            detected_s: None,
+            repaired_s: Some(100.0),
+            skipped: false,
+        };
+        let mixed = [recs[0].clone(), recs[1].clone(), abort];
+        assert!((mttr_s(&mixed) - 2.0).abs() < 1e-12, "aborts are not repairs");
+    }
+
+    #[test]
+    fn spec_validation_composes_schedule_and_policy() {
+        let sched = FaultSchedule::parse("crash@1:g0:0.5", 2, 10.0, 7).unwrap();
+        assert!(FaultSpec::baseline(sched.clone()).validate(2).is_ok());
+        assert!(FaultSpec::baseline(sched.clone()).validate(1).is_err(), "gpu out of fleet");
+        let bad = RecoveryPolicy { timeout_s: -1.0, ..Default::default() };
+        assert!(FaultSpec::recovering(sched, bad).validate(2).is_err());
+    }
+}

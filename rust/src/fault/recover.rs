@@ -1,0 +1,113 @@
+//! Recovery policy: how the fleet fights back after an injected fault.
+//!
+//! Recovery in `server::cluster` is layered, mirroring production
+//! serving stacks:
+//!
+//! 1. **Detection** — a crashed group keeps receiving traffic for
+//!    `detect_s` (the health-check interval); only then does the router
+//!    learn, flush the dead group's queue to surviving replicas, and
+//!    hand the controller the lost capacity.
+//! 2. **Timeout + retry** — requests lost in-flight are noticed by the
+//!    client `timeout_s` after the crash and re-submitted with
+//!    exponential backoff, up to `max_retries`; an exhausted budget is a
+//!    timed-out request (terminal, counted separately from drops).
+//! 3. **Hedging** (optional) — a request unanswered after `hedge_s`
+//!    whose routed group has silently failed is re-issued to a second
+//!    replica; the first completion wins, the loser is discarded.
+//! 4. **Failover re-packing** — capacity the crash destroyed re-enters
+//!    the controller's pending-ask queue and is re-admitted through
+//!    `try_admit` onto surviving (or repaired) GPUs, paying the
+//!    migration outage like any late admission.
+//!
+//! Degradation is graceful by construction: when surviving capacity
+//! cannot carry the load, the existing admission queues (weighted
+//! round-robin drain) shed the overflow rather than collapsing.
+
+/// Knobs for the recovery layers (all deterministic; no RNG involved).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Health-check latency, seconds: how long a crashed group keeps
+    /// receiving new traffic before the router learns.
+    pub detect_s: f64,
+    /// Client-side request timeout, seconds: a request lost in a crash
+    /// is noticed (retried, or given up on) this long after the fault.
+    pub timeout_s: f64,
+    /// Retry budget per request; 0 disables retries entirely.
+    pub max_retries: u32,
+    /// Exponential backoff base, seconds: retry `k` (0-based) waits
+    /// `backoff_s * 2^k` after its timeout fires.
+    pub backoff_s: f64,
+    /// Hedged requests: when > 0, a request unanswered after this many
+    /// seconds whose routed group has failed is re-issued to a second
+    /// replica. 0 disables hedging.
+    pub hedge_s: f64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> RecoveryPolicy {
+        RecoveryPolicy {
+            detect_s: 0.2,
+            timeout_s: 0.25,
+            max_retries: 3,
+            backoff_s: 0.05,
+            hedge_s: 0.0,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.detect_s.is_finite() && self.detect_s >= 0.0,
+            "detection latency must be >= 0, got {}",
+            self.detect_s
+        );
+        anyhow::ensure!(
+            self.timeout_s.is_finite() && self.timeout_s > 0.0,
+            "request timeout must be > 0, got {}",
+            self.timeout_s
+        );
+        anyhow::ensure!(
+            self.backoff_s.is_finite() && self.backoff_s >= 0.0,
+            "retry backoff must be >= 0, got {}",
+            self.backoff_s
+        );
+        anyhow::ensure!(
+            self.hedge_s.is_finite() && self.hedge_s >= 0.0,
+            "hedge delay must be >= 0, got {}",
+            self.hedge_s
+        );
+        Ok(())
+    }
+
+    /// Backoff before retry `attempt` (0-based), seconds. The exponent
+    /// is clamped so a deep budget cannot overflow into infinity.
+    pub fn backoff_delay_s(&self, attempt: u32) -> f64 {
+        self.backoff_s * f64::from(1u32 << attempt.min(16))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        let p = RecoveryPolicy { backoff_s: 0.05, ..Default::default() };
+        assert!((p.backoff_delay_s(0) - 0.05).abs() < 1e-12);
+        assert!((p.backoff_delay_s(1) - 0.10).abs() < 1e-12);
+        assert!((p.backoff_delay_s(3) - 0.40).abs() < 1e-12);
+        assert!(p.backoff_delay_s(1000).is_finite(), "exponent must clamp");
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_knobs() {
+        assert!(RecoveryPolicy::default().validate().is_ok());
+        assert!(RecoveryPolicy { detect_s: -0.1, ..Default::default() }.validate().is_err());
+        assert!(RecoveryPolicy { timeout_s: 0.0, ..Default::default() }.validate().is_err());
+        assert!(
+            RecoveryPolicy { backoff_s: f64::NAN, ..Default::default() }.validate().is_err()
+        );
+        assert!(RecoveryPolicy { hedge_s: -1.0, ..Default::default() }.validate().is_err());
+    }
+}

@@ -30,7 +30,7 @@
 //! | core | [`clock`], [`util`], [`sim`] | virtual time, RNG/stats/JSON/job pool, 4-ary event heap |
 //! | models | [`models`], [`mig`], [`profiler`] | workload specs, MIG geometry + service model + packing/reconfig planners |
 //! | serving | [`batching`], [`preprocess`], [`dpu`], [`workload`] | dynamic batching, CPU-pool/DPU preprocessing, arrival synthesis + trace replay |
-//! | drivers | [`server`] | DES drivers (single GPU, multi-tenant, multi-GPU cluster) + the real-PJRT driver |
+//! | drivers | [`server`], [`fault`] | DES drivers (single GPU, multi-tenant, multi-GPU cluster) + the real-PJRT driver, fault injection/recovery for the fleet |
 //! | surface | [`experiments`], [`metrics`], [`energy`], [`config`], [`cli`], [`rt`], [`runtime`] | figure regeneration, power/energy/TCO accounting, TOML config, CLI plumbing, PJRT runtime |
 //!
 //! `ARCHITECTURE.md` walks the same map in prose — including the
@@ -60,6 +60,7 @@ pub mod config;
 pub mod dpu;
 pub mod energy;
 pub mod experiments;
+pub mod fault;
 pub mod metrics;
 pub mod mig;
 pub mod models;

@@ -41,6 +41,7 @@ fn usage() -> &'static str {
      cluster    [--gpus N] [--fleet a100x4,a30x4] [--strategy ff|bfd|both] [--routing jsq|rr]\n\
                 [--horizon S] [--seed S] [--reconfig] [--migration S] [--repartition S]\n\
                 [--trace PATH|azure] [--rate-scale X] [--admission] [--energy] [--consolidate]\n\
+                [--faults SPEC]\n\
                 (multi-GPU DES: a diurnal tenant fleet packed onto a — possibly\n\
                 heterogeneous — GPU inventory; FF vs BFD stranded capacity, fleet\n\
                 p95/p99/SLA violations, optional online cross-GPU rebalancing.\n\
@@ -52,11 +53,17 @@ fn usage() -> &'static str {
                 instead of dropping it — implies --reconfig. --energy adds the\n\
                 fleet's integrated-energy columns (kJ, J/query, perf/W) and\n\
                 --consolidate lets the controller power down drained GPUs\n\
-                under sustained low load — implies --reconfig)\n\
+                under sustained low load — implies --reconfig. --faults injects\n\
+                a deterministic fault schedule — comma-separated\n\
+                kind@T:gN[:DUR[:FACTOR]] with kind in crash|slice|preproc|slow|\n\
+                abort (DUR 'inf' = never repaired) plus mtbf:M[,mttr:R] for a\n\
+                seeded stochastic background — and runs each packing twice:\n\
+                a blind no-recovery baseline vs the [fault] recovery stack\n\
+                (detect/retry/hedge/failover), adding availability columns)\n\
      energy     [--model M] [--requests N]\n\
                 (integrated energy & cost per design point: baseline CPU\n\
                 preprocessing vs PREBA's DPU — J/query, QPS/W, queries/$)\n\
-     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|cluster|energy|all>\n\
+     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|cluster|energy|faults|all>\n\
                 [--jobs N] [--out DIR]\n\
      list\n\
      \n\
@@ -390,6 +397,7 @@ fn reconfig_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
 /// trace replay, and admission control.
 fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     use preba::experiments::cluster::diurnal_fleet;
+    use preba::fault::{FaultSchedule, FaultSpec};
     use preba::mig::{GpuClass, PackStrategy};
     use preba::server::cluster::{self, ClusterConfig, Routing};
     use preba::workload::ReplayTrace;
@@ -421,6 +429,22 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     let admission = args.flag("admission");
     let consolidate = args.flag("consolidate");
     let energy_cols = args.flag("energy");
+    // Fault injection: --faults SPEC, falling back to `[fault] spec` from
+    // the TOML. Each packing strategy then runs twice — a blind
+    // no-recovery baseline vs the `[fault]` recovery stack — at identical
+    // schedule, load and seed.
+    let faults_spec = args
+        .opt("faults")
+        .map(str::to_string)
+        .or_else(|| (!sys.fault.spec.is_empty()).then(|| sys.fault.spec.clone()));
+    let fault_sched = match &faults_spec {
+        None => None,
+        Some(spec) => {
+            let sched = FaultSchedule::parse(spec, n_gpus, horizon_s, seed)?;
+            anyhow::ensure!(!sched.is_empty(), "--faults '{spec}' produced no fault events");
+            Some(sched)
+        }
+    };
     let reconfig = if args.flag("reconfig") || admission || consolidate {
         let repartition_s = args.opt_f64("repartition", sys.cluster.repartition_s)?;
         let migration_s = args.opt_f64("migration", sys.cluster.migration_s)?;
@@ -477,13 +501,17 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     let fleet_desc = fleet.iter().map(|c| c.name).collect::<Vec<_>>().join(",");
     println!(
         "cluster of {n_gpus} GPUs [{fleet_desc}], {} tenants ({total_reqs} requests over \
-         ~{horizon_s} s, routing {}{}{}{}{})\n",
+         ~{horizon_s} s, routing {}{}{}{}{}{})\n",
         tenants.len(),
         routing.label(),
         if trace.is_some() { ", trace replay" } else { "" },
         if reconfig.is_some() { ", online cross-GPU rebalancing" } else { "" },
         if admission { ", admission control" } else { "" },
-        if consolidate { ", energy consolidation" } else { "" }
+        if consolidate { ", energy consolidation" } else { "" },
+        match &fault_sched {
+            Some(s) => format!(", {} injected faults", s.len()),
+            None => String::new(),
+        }
     );
 
     let mut headers = vec![
@@ -493,20 +521,44 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     if energy_cols {
         headers.extend(["fleet kJ", "J/query", "perf/W", "GPU-off s", "power-downs"]);
     }
+    if fault_sched.is_some() {
+        headers.extend(["avail %", "timed out", "retries", "hedges", "degraded", "MTTR s"]);
+    }
     let mut t = Table::new(&headers);
     // Event detail lines are buffered so they print AFTER the summary
     // table whose rebalance/migration columns they annotate.
     let mut timeline: Vec<String> = Vec::new();
-    for strategy in strategies {
+    // With faults on, each strategy becomes an A/B pair at identical
+    // schedule/load/seed; without, the single fault-free run.
+    let runs: Vec<(PackStrategy, Option<FaultSpec>)> = strategies
+        .iter()
+        .flat_map(|&strategy| match &fault_sched {
+            None => vec![(strategy, None)],
+            Some(sched) => vec![
+                (strategy, Some(FaultSpec::baseline(sched.clone()))),
+                (strategy, Some(FaultSpec::recovering(sched.clone(), sys.fault.recovery()))),
+            ],
+        })
+        .collect();
+    for (strategy, faults) in runs {
+        let label = match &faults {
+            None => strategy.label().to_string(),
+            Some(f) => format!(
+                "{}/{}",
+                strategy.label(),
+                if f.recovery.is_some() { "recovery" } else { "baseline" }
+            ),
+        };
         let mut cfg = ClusterConfig::with_fleet(fleet.clone(), strategy, tenants.clone());
         cfg.routing = routing;
         cfg.seed = seed;
         cfg.reconfig = reconfig.clone();
         cfg.admission = admission;
         cfg.consolidate = consolidate;
+        cfg.faults = faults;
         let out = cluster::run(&cfg, sys)?;
         let mut row = vec![
-            strategy.label().to_string(),
+            label.clone(),
             out.packing.admitted_gpcs().to_string(),
             out.packing.asked_gpcs().to_string(),
             num(out.packing.fragmentation() * 100.0),
@@ -528,11 +580,20 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
                 out.consolidations.to_string(),
             ]);
         }
+        if fault_sched.is_some() {
+            row.extend([
+                num(out.availability_frac() * 100.0),
+                out.timed_out_total().to_string(),
+                out.retries.iter().sum::<u64>().to_string(),
+                out.hedges.iter().sum::<u64>().to_string(),
+                out.served_degraded.iter().sum::<u64>().to_string(),
+                num(out.mttr_s),
+            ]);
+        }
         t.row(&row);
         for ev in &out.reconfig_events {
             timeline.push(format!(
-                "  [{}] t={:.2}s -> {} moves ({} migration, predicted gain {:.1} ms)",
-                strategy.label(),
+                "  [{label}] t={:.2}s -> {} moves ({} migration, predicted gain {:.1} ms)",
                 preba::clock::to_secs(ev.at),
                 ev.moves.len(),
                 ev.migrations(),
@@ -541,13 +602,23 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
         }
         for ev in &out.consolidation_events {
             timeline.push(format!(
-                "  [{}] t={:.2}s -> {} GPU{} (retired {}, moved {})",
-                strategy.label(),
+                "  [{label}] t={:.2}s -> {} GPU{} (retired {}, moved {})",
                 preba::clock::to_secs(ev.at),
                 if ev.powered_down { "power-down" } else { "wake" },
                 ev.gpu,
                 ev.retired,
                 ev.moved
+            ));
+        }
+        for r in &out.fault_records {
+            timeline.push(format!(
+                "  [{label}] t={:.2}s {} on gpu{}{} -> detected {}, repaired {}",
+                r.at_s,
+                r.kind.label(),
+                r.gpu,
+                if r.skipped { " (skipped: unit already down)" } else { "" },
+                r.detected_s.map_or("never".into(), |d| format!("{d:.2}s")),
+                r.repaired_s.map_or("never".into(), |d| format!("{d:.2}s")),
             ));
         }
     }

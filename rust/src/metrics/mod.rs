@@ -50,6 +50,20 @@ pub struct RunStats {
     /// — the traffic admission control converts from dropped to merely
     /// late. Always counted inside `completed` too.
     pub deferred_served: u64,
+    /// Post-warmup requests lost to an injected fault: swallowed by a
+    /// crash (retry budget exhausted, or no recovery at all) and never
+    /// served. Terminal, disjoint from `completed` and `dropped`.
+    pub timed_out: u64,
+    /// Retry attempts issued for crash-lost requests (attempts, not
+    /// requests: one request can contribute up to the retry budget).
+    pub retries: u64,
+    /// Hedged duplicates issued to a second replica after the routed
+    /// group silently failed.
+    pub hedges: u64,
+    /// Completions that ran on a slowdown-degraded GPU (the fault's
+    /// service-time multiplier was > 1 at dispatch). Counted inside
+    /// `completed` too.
+    pub served_degraded: u64,
     /// Integrated component energy over the run's horizon
     /// ([`crate::energy::EnergyModel`]); zero for drivers that do not
     /// integrate power (the real-PJRT driver).
@@ -109,6 +123,19 @@ impl RunStats {
     /// (`completed / (completed + dropped)`); 1.0 with no demand.
     pub fn served_frac(&self) -> f64 {
         let demand = self.completed + self.dropped;
+        if demand == 0 {
+            1.0
+        } else {
+            self.completed as f64 / demand as f64
+        }
+    }
+
+    /// Availability under faults: the fraction of post-warmup demand that
+    /// was served, with fault-timed-out requests counted against it
+    /// (`completed / (completed + dropped + timed_out)`); 1.0 with no
+    /// demand. Equals `served_frac` in fault-free runs.
+    pub fn availability_frac(&self) -> f64 {
+        let demand = self.completed + self.dropped + self.timed_out;
         if demand == 0 {
             1.0
         } else {
@@ -229,6 +256,18 @@ mod tests {
         s.record(parts(0.0, 0.0, 0.0, 1.0), millis(1.0), 1);
         s.dropped = 3;
         assert_eq!(s.served_frac(), 0.25);
+    }
+
+    #[test]
+    fn availability_counts_fault_timeouts_against_demand() {
+        let mut s = RunStats::new();
+        assert_eq!(s.availability_frac(), 1.0);
+        s.record(parts(0.0, 0.0, 0.0, 1.0), millis(1.0), 1);
+        assert_eq!(s.availability_frac(), 1.0);
+        s.timed_out = 2;
+        s.dropped = 1;
+        assert_eq!(s.availability_frac(), 0.25);
+        assert_eq!(s.served_frac(), 0.5, "served_frac ignores timeouts");
     }
 
     #[test]

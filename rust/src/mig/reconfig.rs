@@ -726,6 +726,9 @@ pub struct ClusterReconfigController {
     events: Vec<ClusterReconfigEvent>,
     /// Per-GPU powered-down flags (consolidation victims).
     powered_down: Vec<bool>,
+    /// Per-GPU failed flags (fault injection): a failed GPU is invisible
+    /// to admission, planning, and the power paths until repaired.
+    failed: Vec<bool>,
     /// Consecutive low-load windows seen (consolidation hysteresis).
     low_windows: usize,
     /// Rates from the latest [`Self::tick`] roll, for the consolidation
@@ -774,6 +777,7 @@ impl ClusterReconfigController {
             last_reconfig: None,
             events: Vec::new(),
             powered_down: vec![false; n_gpus],
+            failed: vec![false; n_gpus],
             low_windows: 0,
             last_rates: Vec::new(),
             consolidation_events: Vec::new(),
@@ -798,7 +802,7 @@ impl ClusterReconfigController {
         let t = self.tenants.len();
         let s = self.slices[ti];
         for (g, class) in self.fleet.iter().enumerate() {
-            if !class.supports(&s) {
+            if self.failed[g] || !class.supports(&s) {
                 continue;
             }
             let gpcs_used: usize = (0..t).map(|i| self.alloc[g][i] * self.slices[i].gpcs).sum();
@@ -859,12 +863,21 @@ impl ClusterReconfigController {
                 return None;
             }
         }
+        // A failed GPU contributes no capacity: mask its class to zero so
+        // the planner can neither migrate into it nor count it as free
+        // (its alloc row was zeroed when the failure was detected).
+        let fleet: Vec<GpuClass> = self
+            .fleet
+            .iter()
+            .zip(&self.failed)
+            .map(|(&c, &down)| if down { GpuClass { gpcs: 0, mem_gb: 0, ..c } } else { c })
+            .collect();
         let moves = plan_cluster_moves_fleet(
             &self.tenants,
             &self.slices,
             &rates,
             &self.alloc,
-            &self.fleet,
+            &fleet,
             &self.policy,
         );
         if moves.is_empty() {
@@ -961,6 +974,61 @@ impl ClusterReconfigController {
         &self.consolidation_events
     }
 
+    /// Per-GPU failed flags (true = crashed and not yet repaired).
+    pub fn gpu_failed(&self) -> &[bool] {
+        &self.failed
+    }
+
+    /// A detected GPU crash: the GPU's capacity is gone. Marks it failed
+    /// (so `try_admit`, the move planner, and both power paths skip it),
+    /// zeroes its alloc-mirror row, and returns the displaced
+    /// `(tenant, count)` holdings so the caller can re-offer them as
+    /// pending asks — the failover re-pack rides the same admission seam
+    /// rebalances already use.
+    pub fn fail_gpu(&mut self, g: usize) -> Vec<(usize, usize)> {
+        self.failed[g] = true;
+        let mut displaced = Vec::new();
+        for (ti, n) in self.alloc[g].iter_mut().enumerate() {
+            if *n > 0 {
+                displaced.push((ti, *n));
+                *n = 0;
+            }
+        }
+        displaced
+    }
+
+    /// A repaired GPU rejoins the pool empty; pending asks re-admit
+    /// through [`Self::try_admit`] at the next telemetry window.
+    pub fn restore_gpu(&mut self, g: usize) {
+        self.failed[g] = false;
+    }
+
+    /// A single-slice failure on `g` destroyed one of `ti`'s instances:
+    /// keep the alloc mirror truthful so planning stays honest.
+    pub fn note_slice_lost(&mut self, g: usize, ti: usize) {
+        self.alloc[g][ti] = self.alloc[g][ti].saturating_sub(1);
+    }
+
+    /// The failed slice on `g` came back for tenant `ti`.
+    pub fn note_slice_restored(&mut self, g: usize, ti: usize) {
+        self.alloc[g][ti] += 1;
+    }
+
+    /// Roll back the rebalance [`Self::tick`] just committed — a
+    /// repartition abort mid-drain (fault injection) or a donor that
+    /// crashed between plan and apply. The alloc mirror reverts move by
+    /// move and the event is popped (aborted rebalances don't count as
+    /// reconfigurations), but `last_reconfig` stands: the failed attempt
+    /// still burns the cooldown, so an abort can't cause thrash.
+    pub fn abort_last(&mut self) -> Option<ClusterReconfigEvent> {
+        let ev = self.events.pop()?;
+        for m in ev.moves.iter().rev() {
+            self.alloc[m.gpu][m.from] += 1;
+            self.alloc[m.gpu][m.to] -= 1;
+        }
+        Some(ev)
+    }
+
     /// GPCs of `g` currently allocated to instances.
     fn used_gpcs(&self, g: usize) -> usize {
         (0..self.tenants.len()).map(|i| self.alloc[g][i] * self.slices[i].gpcs).sum()
@@ -1044,8 +1112,9 @@ impl ClusterReconfigController {
         // Lowest-index parked GPU whose class fits at least one starved
         // profile — a parked GPU that fits nothing (e.g. an A30 while
         // only 7g tenants starve) must not block waking one that does.
-        let parked: Vec<usize> =
-            (0..self.fleet.len()).filter(|&g| self.powered_down[g]).collect();
+        let parked: Vec<usize> = (0..self.fleet.len())
+            .filter(|&g| self.powered_down[g] && !self.failed[g])
+            .collect();
         for gpu in parked {
             let class = self.fleet[gpu];
             let mut free_gpc = class.gpcs.saturating_sub(self.used_gpcs(gpu));
@@ -1097,7 +1166,8 @@ impl ClusterReconfigController {
     ) -> Option<ConsolidationAction> {
         let t = self.tenants.len();
         let n_gpus = self.fleet.len();
-        let up: Vec<usize> = (0..n_gpus).filter(|&g| !self.powered_down[g]).collect();
+        let up: Vec<usize> =
+            (0..n_gpus).filter(|&g| !self.powered_down[g] && !self.failed[g]).collect();
         if up.len() < 2 {
             return None;
         }
@@ -1666,5 +1736,123 @@ mod tests {
             let consolidated = ctrl.tick_consolidation(now).is_some();
             assert!(!(moved && consolidated), "both passes acted in one window");
         }
+    }
+
+    #[test]
+    fn failed_gpu_displaces_holdings_and_blocks_admission_until_restore() {
+        let tenants = vec![swin(25.0), swin(25.0)];
+        let slices = vec![Slice::new(1, 5), Slice::new(1, 5)];
+        let mut ctrl = ClusterReconfigController::new(
+            tenants,
+            slices,
+            vec![vec![3, 2], vec![0, 0]],
+            ReconfigPolicy::default(),
+        );
+        let displaced = ctrl.fail_gpu(0);
+        assert_eq!(displaced, vec![(0, 3), (1, 2)]);
+        assert_eq!(ctrl.alloc()[0], vec![0, 0], "failed row must zero");
+        assert!(ctrl.gpu_failed()[0]);
+        // Admission skips the dead GPU: asks land on GPU1, and once it
+        // fills the rest must wait.
+        for _ in 0..7 {
+            assert_eq!(ctrl.try_admit(0), Some(1));
+        }
+        assert_eq!(ctrl.try_admit(0), None, "fleet is one GPU short");
+        // Repair: the GPU rejoins empty and takes the waiting ask.
+        ctrl.restore_gpu(0);
+        assert_eq!(ctrl.try_admit(0), Some(0));
+    }
+
+    #[test]
+    fn planner_never_targets_a_failed_gpu() {
+        let tenants = vec![swin(25.0), swin(25.0)];
+        let slices = vec![Slice::new(1, 5), Slice::new(1, 5)];
+        let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+        // Three GPUs; GPU2 crashed. A is overloaded on GPU0, so relief
+        // wants a migration — it must pick GPU1, never the dead GPU2.
+        let mut ctrl = ClusterReconfigController::new(
+            tenants,
+            slices,
+            vec![vec![7, 0], vec![0, 2], vec![0, 0]],
+            ReconfigPolicy { migration_s: 0.05, ..Default::default() },
+        );
+        ctrl.fail_gpu(2);
+        let window = ctrl.window();
+        let mut now = 0;
+        let mut planned = None;
+        for _ in 0..10 {
+            now += window;
+            let a = (9.0 * u * to_secs(window)) as usize;
+            for _ in 0..a {
+                ctrl.observe_arrival(0);
+            }
+            if let Some(moves) = ctrl.tick(now) {
+                planned = Some(moves);
+                break;
+            }
+        }
+        let moves = planned.expect("overload never triggered a rebalance");
+        assert!(moves.iter().all(|m| m.gpu != 2), "move onto a dead GPU: {moves:?}");
+        assert_eq!(ctrl.alloc()[2], vec![0, 0]);
+    }
+
+    #[test]
+    fn abort_last_reverts_the_mirror_and_pops_the_event() {
+        let tenants = vec![swin(25.0), swin(25.0)];
+        let slices = vec![Slice::new(1, 5), Slice::new(1, 5)];
+        let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+        let mut ctrl = ClusterReconfigController::new(
+            tenants,
+            slices,
+            vec![vec![4, 3]],
+            ReconfigPolicy::default(),
+        );
+        let before = ctrl.alloc().to_vec();
+        let window = ctrl.window();
+        let mut now = 0;
+        let mut committed = false;
+        for _ in 0..10 {
+            now += window;
+            let b = (5.5 * u * to_secs(window)) as usize;
+            for _ in 0..b {
+                ctrl.observe_arrival(1);
+            }
+            if ctrl.tick(now).is_some() {
+                committed = true;
+                break;
+            }
+        }
+        assert!(committed, "skew never committed a rebalance");
+        assert_ne!(ctrl.alloc(), &before[..]);
+        let ev = ctrl.abort_last().expect("an event was committed");
+        assert!(!ev.moves.is_empty());
+        assert_eq!(ctrl.alloc(), &before[..], "abort must restore the mirror");
+        assert!(ctrl.events().is_empty(), "aborted rebalances don't count");
+        // Cooldown still stands: an immediate re-tick with the same skew
+        // cannot commit inside the window the abort burned.
+        for _ in 0..((5.5 * u * to_secs(window)) as usize) {
+            ctrl.observe_arrival(1);
+        }
+        assert!(ctrl.tick(now + 1).is_none(), "abort must not bypass cooldown");
+        assert!(ctrl.abort_last().is_none(), "nothing left to abort");
+    }
+
+    #[test]
+    fn slice_loss_notes_keep_the_mirror_truthful() {
+        let tenants = vec![swin(25.0)];
+        let slices = vec![Slice::new(1, 5)];
+        let mut ctrl = ClusterReconfigController::new(
+            tenants,
+            slices,
+            vec![vec![2]],
+            ReconfigPolicy::default(),
+        );
+        ctrl.note_slice_lost(0, 0);
+        assert_eq!(ctrl.alloc()[0], vec![1]);
+        ctrl.note_slice_lost(0, 0);
+        ctrl.note_slice_lost(0, 0); // saturates at zero
+        assert_eq!(ctrl.alloc()[0], vec![0]);
+        ctrl.note_slice_restored(0, 0);
+        assert_eq!(ctrl.alloc()[0], vec![1]);
     }
 }

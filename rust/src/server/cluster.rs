@@ -36,6 +36,7 @@ use crate::clock::{secs, to_secs, Nanos};
 use crate::config::PrebaConfig;
 use crate::dpu::Dpu;
 use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::fault::{mttr_s, FaultKind, FaultRecord, FaultSchedule, FaultSpec, RecoveryPolicy};
 use crate::metrics::{LatencyParts, RunStats};
 use crate::mig::placement::{pack_fleet, Packing, SliceAsk};
 use crate::mig::reconfig::{ClusterReconfigEvent, ConsolidationEvent, SliceMove};
@@ -176,6 +177,11 @@ pub struct ClusterConfig {
     /// Requires `reconfig`; setting this forces `consolidate` on in the
     /// policy the run uses.
     pub consolidate: bool,
+    /// Fault injection ([`crate::fault`]): what breaks during the run
+    /// and whether the fleet fights back. `None` = fair weather.
+    /// Recovery requires `reconfig` — failover re-packs displaced
+    /// tenants through the controller's admission seam.
+    pub faults: Option<FaultSpec>,
 }
 
 impl ClusterConfig {
@@ -217,6 +223,7 @@ impl ClusterConfig {
             reconfig: None,
             admission: false,
             consolidate: false,
+            faults: None,
         }
     }
 
@@ -238,6 +245,14 @@ impl ClusterConfig {
             "consolidation needs the reconfig controller (power decisions \
              ride the telemetry windows)"
         );
+        if let Some(f) = &self.faults {
+            f.validate(self.fleet.len())?;
+            anyhow::ensure!(
+                f.recovery.is_none() || self.reconfig.is_some(),
+                "fault recovery needs the reconfig controller (failover \
+                 re-packs displaced tenants through its admission seam)"
+            );
+        }
         for g in &self.fleet {
             anyhow::ensure!(g.gpcs >= 1 && g.mem_gb >= 1, "degenerate GPU class {g}");
         }
@@ -318,6 +333,26 @@ pub struct ClusterOutcome {
     pub gpu_off_s: f64,
     /// Consolidation decision timeline (empty without `consolidate`).
     pub consolidation_events: Vec<ConsolidationEvent>,
+    /// Post-warmup requests lost to a fault and never served: an
+    /// exhausted retry budget, or (no recovery) a backlog stranded on a
+    /// unit whose repair never came.
+    pub timed_out: Vec<u64>,
+    /// Retry attempts the recovery layer issued.
+    pub retries: Vec<u64>,
+    /// Hedged duplicates issued to a second replica.
+    pub hedges: Vec<u64>,
+    /// Post-warmup completions executed under a slowdown fault.
+    pub served_degraded: Vec<u64>,
+    /// Injected-fault lifecycle timeline (empty without faults).
+    pub fault_records: Vec<FaultRecord>,
+    /// Mean time-to-repair over completed repairs, seconds.
+    pub mttr_s: f64,
+    /// Rebalances killed mid-drain (an injected abort, or a donor GPU
+    /// that crashed between plan and apply) and rolled back.
+    pub reconfig_aborts: u64,
+    /// Invariant probe: completions recorded on a failed group. The DES
+    /// harvests a crashed group's in-flight work, so this must stay 0.
+    pub served_by_failed: u64,
 }
 
 impl ClusterOutcome {
@@ -360,12 +395,33 @@ impl ClusterOutcome {
         self.per_tenant.iter().map(|(_, s)| s.p99_ms()).fold(0.0, f64::max)
     }
 
-    /// Tenant `i`'s SLA-violation fraction with dropped requests counted
-    /// as violations (a request a packer turned away still missed its SLA).
+    /// Fraction of post-warmup demand actually served:
+    /// `completed / (completed + dropped + timed-out)`. 1.0 when the run
+    /// saw no post-warmup demand. This is the A/B metric the `faults`
+    /// experiment compares across recovery policies.
+    pub fn availability_frac(&self) -> f64 {
+        let done = self.completed_total() as f64;
+        let lost =
+            (self.dropped.iter().sum::<u64>() + self.timed_out.iter().sum::<u64>()) as f64;
+        if done + lost == 0.0 {
+            1.0
+        } else {
+            done / (done + lost)
+        }
+    }
+
+    /// Post-warmup requests lost to faults, all tenants.
+    pub fn timed_out_total(&self) -> u64 {
+        self.timed_out.iter().sum()
+    }
+
+    /// Tenant `i`'s SLA-violation fraction with dropped and timed-out
+    /// requests counted as violations (a request a packer turned away, or
+    /// one a fault swallowed, still missed its SLA).
     pub fn violation_frac(&self, i: usize, sla_ms: f64) -> f64 {
         let stats = &self.per_tenant[i].1;
         let n = stats.e2e_ms.count() as f64;
-        let d = self.dropped[i] as f64;
+        let d = (self.dropped[i] + self.timed_out[i]) as f64;
         if n + d == 0.0 {
             return 0.0;
         }
@@ -393,6 +449,19 @@ enum Ev {
     /// weighted-round-robin across tenants, so one tenant's backlog can
     /// never monopolize a readmission pass.
     Readmit,
+    /// An injected fault strikes (index into the run's fault schedule).
+    Fault { fault: usize },
+    /// The health check notices a crash (recovery runs only): flush the
+    /// dead groups, re-route, and failover-re-pack displaced capacity.
+    FaultDetect { fault: usize },
+    /// The faulted unit's repair completes.
+    FaultRepair { fault: usize },
+    /// Client-side retry of a request lost to a fault (`attempt` is
+    /// 0-based; the backoff doubles per attempt).
+    Retry { tenant: usize, idx: usize, attempt: u32 },
+    /// Hedge check: re-issue `idx` to a second replica if its routed
+    /// group has (possibly still undetected) failed.
+    Hedge { tenant: usize, idx: usize },
 }
 
 /// One (tenant, GPU) serving group: the tenant's slices on that GPU share
@@ -403,6 +472,9 @@ struct Group {
     batcher: DynamicBatcher,
     slice_free: Vec<Nanos>,
     in_flight: Vec<Option<Batch>>,
+    /// Whether `in_flight[i]` was dispatched under a slowdown fault
+    /// (drives the served-degraded accounting).
+    in_flight_deg: Vec<bool>,
     free_slots: Vec<usize>,
     /// Requests routed here and not yet completed (the JSQ signal).
     outstanding: usize,
@@ -410,6 +482,10 @@ struct Group {
     /// Accumulated per-slice execution time (the energy integral's
     /// active-GPC numerator; × the tenant's GPCs-per-slice at the end).
     busy_ns: u128,
+    /// The group's GPU has crashed: dispatch stops, but `slice_free`
+    /// survives until detection (or repair) so blind routing keeps
+    /// feeding the dead group — the detection-latency window is real.
+    failed: bool,
 }
 
 /// Per-GPU power timeline: consolidation marks a GPU off once its last
@@ -447,6 +523,76 @@ impl GpuPower {
         let open = self.off_at[g].map_or(0, |off| horizon.saturating_sub(off) as u128);
         (self.off_ns[g] + open) as f64 * 1e-9
     }
+
+    /// No off interval is open (pending drains count as off).
+    fn is_on(&self, g: usize) -> bool {
+        self.off_at[g].is_none()
+    }
+}
+
+/// Live fault state for one cluster run ([`crate::fault`] wiring).
+struct FaultRt {
+    /// Per-GPU crash flag (set at the fault, cleared at repair).
+    crashed: Vec<bool>,
+    /// Per-GPU service-time multiplier (1.0 = healthy).
+    slow: Vec<f64>,
+    /// Per-GPU preprocessing-outage end: the stage admits no work before
+    /// this instant.
+    preproc_until: Vec<Nanos>,
+    /// The crash itself (not consolidation) powered the GPU off, so the
+    /// repair — not a consolidation wake — closes the interval.
+    crash_powered_off: Vec<bool>,
+    /// One record per scheduled fault, same order as the schedule.
+    records: Vec<FaultRecord>,
+    /// Armed reconfig-abort faults (schedule indices): the next
+    /// committed rebalance rolls back mid-drain.
+    abort_arm: Vec<usize>,
+    /// Which serving group each SliceFail struck (by schedule index), so
+    /// the repair restores the slice to the same group.
+    slice_victim: Vec<Option<usize>>,
+    aborts: u64,
+    served_by_failed: u64,
+}
+
+impl FaultRt {
+    fn new(n_gpus: usize, schedule: &FaultSchedule) -> FaultRt {
+        FaultRt {
+            crashed: vec![false; n_gpus],
+            slow: vec![1.0; n_gpus],
+            preproc_until: vec![0; n_gpus],
+            crash_powered_off: vec![false; n_gpus],
+            records: schedule
+                .events
+                .iter()
+                .map(|e| FaultRecord {
+                    at_s: e.at_s,
+                    gpu: e.gpu,
+                    kind: e.kind,
+                    detected_s: None,
+                    repaired_s: None,
+                    skipped: false,
+                })
+                .collect(),
+            abort_arm: Vec::new(),
+            slice_victim: vec![None; schedule.events.len()],
+            aborts: 0,
+            served_by_failed: 0,
+        }
+    }
+}
+
+/// A request's terminal bookkeeping. Faults create racing outcomes — a
+/// hedge's duplicate completion, a retry chasing a request a flush
+/// already re-routed, a timeout racing a late completion — and the first
+/// terminal transition wins; everything later is discarded. This is what
+/// keeps conservation exact: every arrival ends in exactly one of
+/// `Done` / `Dropped` / `TimedOut`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReqState {
+    Pending,
+    Done,
+    Dropped,
+    TimedOut,
 }
 
 struct TenantState {
@@ -471,15 +617,39 @@ struct TenantState {
     was_deferred: Vec<bool>,
     deferred: u64,
     deferred_served: u64,
+    /// Per-request terminal state (the fault-accounting guard).
+    state: Vec<ReqState>,
+    timed_out: u64,
+    retries: u64,
+    hedges: u64,
+    served_degraded: u64,
 }
 
 impl TenantState {
     /// Count a dropped request, unless it falls in the warmup window
     /// (arrival index as the proxy) — the latency stats skip warmup
     /// completions, so the violation metric must skip warmup drops too.
+    /// Idempotent: a request already terminal stays terminal.
     fn drop_request(&mut self, idx: usize) {
+        if self.state[idx] != ReqState::Pending {
+            return;
+        }
+        self.state[idx] = ReqState::Dropped;
         if idx >= self.warmup {
             self.dropped += 1;
+        }
+    }
+
+    /// A request lost to a fault whose retry budget (or horizon) ran
+    /// out. Same warmup and idempotence rules as
+    /// [`TenantState::drop_request`].
+    fn timeout_request(&mut self, idx: usize) {
+        if self.state[idx] != ReqState::Pending {
+            return;
+        }
+        self.state[idx] = ReqState::TimedOut;
+        if idx >= self.warmup {
+            self.timed_out += 1;
         }
     }
 
@@ -561,7 +731,10 @@ fn route(groups: &[Group], ts: &mut TenantState, routing: Routing) -> Option<usi
 }
 
 /// Form and dispatch every releasable batch of `group` onto its
-/// least-loaded slice.
+/// least-loaded slice. `slow` is the per-GPU service-time multiplier
+/// (slowdown faults); a crashed group dispatches nothing — its queue
+/// sits until the health check flushes it (recovery) or the repair
+/// revives the GPU (no-recovery baseline).
 fn dispatch_ready(
     gi: usize,
     now: Nanos,
@@ -569,29 +742,40 @@ fn dispatch_ready(
     tenants: &[TenantState],
     q: &mut EventQueue<Ev>,
     exec_rng: &mut Rng,
+    slow: &[f64],
 ) {
     let grp = &mut groups[gi];
-    if grp.slice_free.is_empty() {
+    if grp.failed || grp.slice_free.is_empty() {
         return;
     }
+    let slow = slow.get(grp.gpu).copied().unwrap_or(1.0);
     let ts = &tenants[grp.tenant];
     while let Some((batch, _)) = grp.batcher.try_form(now) {
-        let (slot, &free) =
-            grp.slice_free.iter().enumerate().min_by_key(|(_, &t)| t).expect("slices");
+        // Invariant: checked non-empty above, and the loop never
+        // removes slices.
+        let Some((slot, &free)) = grp.slice_free.iter().enumerate().min_by_key(|(_, &t)| t)
+        else {
+            debug_assert!(false, "dispatch with no slices");
+            return;
+        };
         let start = now.max(free);
         let padded = padded_len(&ts.buckets, &batch);
-        let exec = secs(ts.sm.exec_secs_jittered(batch.size(), padded, exec_rng));
+        let exec =
+            secs(ts.sm.exec_secs_jittered(batch.size(), padded, exec_rng) * slow);
         let done = start + exec;
         grp.slice_free[slot] = done;
         grp.busy_ns += exec as u128;
+        let degraded = slow > 1.0;
         let idx = match grp.free_slots.pop() {
             Some(slot) => {
                 debug_assert!(grp.in_flight[slot].is_none());
                 grp.in_flight[slot] = Some(batch);
+                grp.in_flight_deg[slot] = degraded;
                 slot
             }
             None => {
                 grp.in_flight.push(Some(batch));
+                grp.in_flight_deg.push(degraded);
                 grp.in_flight.len() - 1
             }
         };
@@ -626,9 +810,15 @@ fn wrr_order(weights: &[usize]) -> Vec<usize> {
 }
 
 /// Arm a BatchTick for the group's earliest deadline unless an earlier
-/// (or equal) tick is already pending (the `sim_driver` dedupe).
+/// (or equal) tick is already pending (the `sim_driver` dedupe). A
+/// failed group never arms: its queue cannot dispatch, so a stale
+/// deadline would re-fire forever — the unfail paths (repair, or the
+/// detection flush emptying the queue) re-arm it.
 fn arm_tick(gi: usize, now: Nanos, groups: &mut [Group], q: &mut EventQueue<Ev>) {
     let grp = &mut groups[gi];
+    if grp.failed {
+        return;
+    }
     if let Some(d) = grp.batcher.next_deadline() {
         if grp.armed_tick.is_none_or(|t| d < t) {
             q.schedule(d, Ev::BatchTick { group: gi });
@@ -639,7 +829,10 @@ fn arm_tick(gi: usize, now: Nanos, groups: &mut [Group], q: &mut EventQueue<Ev>)
 
 /// Route request `idx` of `tenant` and start its preprocessing on the
 /// routed GPU's resources. `false` = the tenant has no live capacity
-/// anywhere (the caller drops or defers it).
+/// anywhere (the caller drops or defers it). A preprocessing outage
+/// (`preproc_until[gpu]` in the future) stalls the stage: work admits
+/// once the pool returns — in every mode, including `Ideal`, where the
+/// stage is instantaneous but still a stage.
 #[allow(clippy::too_many_arguments)]
 fn start_request(
     tenant: usize,
@@ -651,6 +844,7 @@ fn start_request(
     cpu_pools: &mut [CpuPool],
     dpus: &mut [Option<Dpu>],
     q: &mut EventQueue<Ev>,
+    preproc_until: &[Nanos],
 ) -> bool {
     let Some(gi) = route(groups, &mut tenants[tenant], cfg.routing) else {
         return false;
@@ -659,16 +853,25 @@ fn start_request(
     groups[gi].outstanding += 1;
     let gpu = groups[gi].gpu;
     let len = tenants[tenant].arrivals[idx].1;
+    let at = now.max(preproc_until.get(gpu).copied().unwrap_or(0));
     match cfg.preproc {
-        PreprocMode::Ideal => q.schedule(now, Ev::PreprocDone { tenant, idx }),
+        PreprocMode::Ideal => q.schedule(at, Ev::PreprocDone { tenant, idx }),
         PreprocMode::Cpu => {
             let service = tenants[tenant].spec.cpu_preproc_secs(len.max(0.1));
-            let (_, done) = cpu_pools[gpu].admit(now, service);
+            let (_, done) = cpu_pools[gpu].admit(at, service);
             q.schedule(done, Ev::PreprocDone { tenant, idx });
         }
         PreprocMode::Dpu => {
             let model = cfg.tenants[tenant].model;
-            let done = dpus[gpu].as_mut().unwrap().admit(now, model, len.max(0.1));
+            // Invariant: a DPU exists per GPU in Dpu mode (built in
+            // `run`); degrade to ideal preprocessing rather than panic.
+            let done = match dpus[gpu].as_mut() {
+                Some(d) => d.admit(at, model, len.max(0.1)),
+                None => {
+                    debug_assert!(false, "DPU mode without a DPU on GPU {gpu}");
+                    at
+                }
+            };
             q.schedule(done, Ev::PreprocDone { tenant, idx });
         }
     }
@@ -706,10 +909,12 @@ fn ensure_group(
         batcher,
         slice_free: Vec::new(),
         in_flight: Vec::new(),
+        in_flight_deg: Vec::new(),
         free_slots: Vec::new(),
         outstanding: 0,
         armed_tick: None,
         busy_ns: 0,
+        failed: false,
     });
     groups.len() - 1
 }
@@ -730,6 +935,7 @@ fn grant_slice(
     tenants: &mut [TenantState],
     q: &mut EventQueue<Ev>,
     exec_rng: &mut Rng,
+    slow: &[f64],
 ) {
     let gi = ensure_group(ti, gpu, cfg, sys, groups, group_of, tenants);
     groups[gi].slice_free.push(avail);
@@ -737,7 +943,7 @@ fn grant_slice(
     let ts = &tenants[ti];
     let new_policy = build_policy(cfg.policy, sys, ts.spec, &ts.sm, &ts.buckets, n);
     groups[gi].batcher.rebuild(new_policy, now);
-    dispatch_ready(gi, now, groups, tenants, q, exec_rng);
+    dispatch_ready(gi, now, groups, tenants, q, exec_rng, slow);
     arm_tick(gi, now, groups, q);
 }
 
@@ -813,6 +1019,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
             preproc_done: vec![0; arrivals.len()],
             routed: vec![usize::MAX; arrivals.len()],
             was_deferred: vec![false; arrivals.len()],
+            state: vec![ReqState::Pending; arrivals.len()],
             arrivals,
             route: Vec::new(),
             rr_cursor: 0,
@@ -823,6 +1030,10 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
             deferred_q: Vec::new(),
             deferred: 0,
             deferred_served: 0,
+            timed_out: 0,
+            retries: 0,
+            hedges: 0,
+            served_degraded: 0,
         });
     }
 
@@ -852,10 +1063,12 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                 batcher,
                 slice_free: vec![0; n],
                 in_flight: Vec::new(),
+                in_flight_deg: Vec::new(),
                 free_slots: Vec::new(),
                 outstanding: 0,
                 armed_tick: None,
                 busy_ns: 0,
+                failed: false,
             });
         }
     }
@@ -880,6 +1093,15 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
         q.schedule(c.window(), Ev::ReconfigCheck);
     }
 
+    // Fault injection: the whole schedule enters the heap up front; the
+    // recovery knobs (when present) drive detection, retry, and hedging.
+    let fspec = cfg.faults.clone().unwrap_or_default();
+    let recovery = fspec.recovery;
+    let mut frt = FaultRt::new(cfg.n_gpus(), &fspec.schedule);
+    for (k, e) in fspec.schedule.events.iter().enumerate() {
+        q.schedule(secs(e.at_s), Ev::Fault { fault: k });
+    }
+
     let total_arrivals: usize = cfg.tenants.iter().map(|t| t.requests).sum();
     let mut arrivals_seen = 0usize;
     let mut downtime: Nanos = 0;
@@ -891,15 +1113,19 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                 if let Some(c) = ctrl.as_mut() {
                     c.observe_arrival(tenant);
                 }
-                if !start_request(
+                if start_request(
                     tenant, idx, now, cfg, &mut groups, &mut tenants, &mut cpu_pools,
-                    &mut dpus, q,
+                    &mut dpus, q, &frt.preproc_until,
                 ) {
-                    if cfg.admission {
-                        tenants[tenant].defer_request(idx);
-                    } else {
-                        tenants[tenant].drop_request(idx);
+                    if let Some(p) = recovery {
+                        if p.hedge_s > 0.0 {
+                            q.schedule_in(secs(p.hedge_s), Ev::Hedge { tenant, idx });
+                        }
                     }
+                } else if cfg.admission {
+                    tenants[tenant].defer_request(idx);
+                } else {
+                    tenants[tenant].drop_request(idx);
                 }
             }
             Ev::Readmit => {
@@ -929,7 +1155,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     let idx = queues[ti][cursor[ti]];
                     if start_request(
                         ti, idx, now, cfg, &mut groups, &mut tenants, &mut cpu_pools,
-                        &mut dpus, q,
+                        &mut dpus, q, &frt.preproc_until,
                     ) {
                         cursor[ti] += 1;
                         if cursor[ti] >= queues[ti].len() {
@@ -979,29 +1205,49 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     enqueued: now,
                     len_s: len,
                 });
-                dispatch_ready(gi, now, &mut groups, &tenants, q, &mut exec_rng);
+                dispatch_ready(gi, now, &mut groups, &tenants, q, &mut exec_rng, &frt.slow);
                 arm_tick(gi, now, &mut groups, q);
             }
             Ev::BatchTick { group } => {
                 groups[group].armed_tick = None;
-                dispatch_ready(group, now, &mut groups, &tenants, q, &mut exec_rng);
+                dispatch_ready(group, now, &mut groups, &tenants, q, &mut exec_rng, &frt.slow);
                 arm_tick(group, now, &mut groups, q);
             }
             Ev::ExecDone { group, batch_idx } => {
-                horizon = horizon.max(now);
                 let ti = groups[group].tenant;
-                let batch = groups[group].in_flight[batch_idx].take().expect("double completion");
+                let Some(batch) = groups[group].in_flight[batch_idx].take() else {
+                    // The batch was harvested when its GPU crashed; this
+                    // is the stale completion still in the heap. Reclaim
+                    // the slot (the harvest left it un-recycled for
+                    // exactly this moment).
+                    groups[group].free_slots.push(batch_idx);
+                    return true;
+                };
+                horizon = horizon.max(now);
+                if groups[group].failed {
+                    // Invariant probe (must stay 0): a crashed group's
+                    // in-flight work was harvested at the fault, so no
+                    // completion can land while it is failed.
+                    frt.served_by_failed += batch.size() as u64;
+                }
+                let degraded = groups[group].in_flight_deg[batch_idx];
                 groups[group].free_slots.push(batch_idx);
                 let bsize = batch.size();
-                groups[group].outstanding -= bsize;
+                groups[group].outstanding = groups[group].outstanding.saturating_sub(bsize);
                 let ts = &mut tenants[ti];
                 let padded = padded_len(&ts.buckets, &batch);
                 let exec_model = secs(ts.sm.exec_secs(bsize, padded));
                 let since_formed = now.saturating_sub(batch.formed);
                 let exec_ns = exec_model.min(since_formed);
                 for r in &batch.requests {
-                    ts.completed += 1;
                     let i = r.id as usize;
+                    // Terminal-state guard: a hedged duplicate's
+                    // completion, or one racing a timeout, is discarded.
+                    if ts.state[i] != ReqState::Pending {
+                        continue;
+                    }
+                    ts.state[i] = ReqState::Done;
+                    ts.completed += 1;
                     // Deferred-then-served accounting uses the arrival
                     // index for its warmup rule, matching `defer_request`.
                     if ts.was_deferred[i] && i >= ts.warmup {
@@ -1009,6 +1255,9 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     }
                     if ts.completed <= ts.warmup {
                         continue;
+                    }
+                    if degraded {
+                        ts.served_degraded += 1;
                     }
                     ts.stats.record(
                         LatencyParts {
@@ -1024,16 +1273,56 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                 groups[group].batcher.recycle(batch);
             }
             Ev::ReconfigCheck => {
-                let c = ctrl.as_mut().expect("ReconfigCheck without controller");
+                // Invariant: ReconfigCheck is only ever scheduled when a
+                // controller exists; a stray event is ignored.
+                let Some(c) = ctrl.as_mut() else {
+                    debug_assert!(false, "ReconfigCheck without controller");
+                    return true;
+                };
                 let tail = arrivals_seen >= total_arrivals;
                 if tail {
                     c.roll_only(now);
                 } else {
                     if let Some(moves) = c.tick(now) {
-                        downtime += apply_moves(
-                            &moves, c.policy(), cfg, sys, now, &mut groups, &mut group_of,
-                            &mut tenants, q, &mut exec_rng,
-                        );
+                        // A committed rebalance can die mid-drain: an
+                        // armed ReconfigAbort fault, or a donor GPU that
+                        // crashed inside the detection window (the
+                        // controller's mirror is blind until the health
+                        // check). Either way the repartition rolls back.
+                        let crashed_donor = moves.iter().any(|m| frt.crashed[m.gpu]);
+                        if crashed_donor || !frt.abort_arm.is_empty() {
+                            if !crashed_donor {
+                                let k = frt.abort_arm.remove(0);
+                                frt.records[k].repaired_s = Some(to_secs(now));
+                            }
+                            c.abort_last();
+                            frt.aborts += 1;
+                            // The aborted drain still disturbed every
+                            // surviving donor: its earliest slice pays
+                            // the repartition outage and returns.
+                            for m in &moves {
+                                if frt.crashed[m.gpu] {
+                                    continue;
+                                }
+                                let Some(donor) = group_of[m.gpu][m.from] else {
+                                    continue;
+                                };
+                                let grp = &mut groups[donor];
+                                if grp.slice_free.is_empty() {
+                                    continue;
+                                }
+                                grp.slice_free.sort_unstable();
+                                let back = grp.slice_free[0].max(now)
+                                    + secs(c.policy().repartition_s);
+                                grp.slice_free[0] = back;
+                                downtime += back - now;
+                            }
+                        } else {
+                            downtime += apply_moves(
+                                &moves, c.policy(), cfg, sys, now, &mut groups,
+                                &mut group_of, &mut tenants, q, &mut exec_rng, &frt.slow,
+                            );
+                        }
                     }
                     // Admission re-pack: offer every still-pending ask to
                     // whatever capacity the rebalance freed. An admitted
@@ -1052,6 +1341,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                                 grant_slice(
                                     ask.tenant, gpu, avail, cfg, sys, now, &mut groups,
                                     &mut group_of, &mut tenants, q, &mut exec_rng,
+                                    &frt.slow,
                                 );
                             }
                         }
@@ -1062,7 +1352,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     if let Some(action) = c.tick_consolidation(now) {
                         downtime += apply_consolidation(
                             &action, c.policy(), cfg, sys, now, &mut groups, &mut group_of,
-                            &mut tenants, q, &mut exec_rng, &mut power,
+                            &mut tenants, q, &mut exec_rng, &mut power, &frt.slow,
                         );
                     }
                     // Wake the admission drain if any waiting tenant now
@@ -1074,6 +1364,344 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                         q.schedule(now, Ev::Readmit);
                     }
                     q.schedule_in(c.window(), Ev::ReconfigCheck);
+                }
+            }
+            Ev::Fault { fault } => {
+                let e = fspec.schedule.events[fault];
+                let g = e.gpu;
+                match e.kind {
+                    FaultKind::GpuCrash => {
+                        if frt.crashed[g] {
+                            frt.records[fault].skipped = true;
+                            return true;
+                        }
+                        frt.crashed[g] = true;
+                        // Kill every serving group on the GPU: keep the
+                        // slice clocks (the router is blind until the
+                        // health check), stop dispatch, and harvest the
+                        // in-flight batches — their completions will
+                        // never arrive. Slots stay un-recycled so the
+                        // stale ExecDone events reclaim them gracefully.
+                        for gi in 0..groups.len() {
+                            if groups[gi].gpu != g {
+                                continue;
+                            }
+                            groups[gi].failed = true;
+                            let lost: Vec<Request> = groups[gi]
+                                .in_flight
+                                .iter_mut()
+                                .filter_map(Option::take)
+                                .flat_map(|b| b.requests)
+                                .collect();
+                            groups[gi].outstanding =
+                                groups[gi].outstanding.saturating_sub(lost.len());
+                            let ti = groups[gi].tenant;
+                            for r in lost {
+                                let idx = r.id as usize;
+                                match recovery {
+                                    // The client notices at its timeout
+                                    // and re-submits with backoff.
+                                    Some(p) if p.max_retries > 0 => {
+                                        tenants[ti].retries += 1;
+                                        q.schedule_in(
+                                            secs(p.timeout_s + p.backoff_delay_s(0)),
+                                            Ev::Retry { tenant: ti, idx, attempt: 0 },
+                                        );
+                                    }
+                                    _ => tenants[ti].timeout_request(idx),
+                                }
+                            }
+                        }
+                        // A dead GPU draws no power (unless consolidation
+                        // already parked it — that interval stands).
+                        if power.is_on(g) {
+                            power.power_off(g, now);
+                            frt.crash_powered_off[g] = true;
+                        }
+                        if let Some(p) = recovery {
+                            q.schedule_in(secs(p.detect_s), Ev::FaultDetect { fault });
+                        }
+                        // An infinite duration = the unit never comes
+                        // back (no repair event enters the heap).
+                        if e.duration_s.is_finite() {
+                            q.schedule_in(secs(e.duration_s), Ev::FaultRepair { fault });
+                        }
+                    }
+                    FaultKind::SliceFail => {
+                        // The fullest group on `g` loses its earliest-free
+                        // slice (fail-stop after its current batch).
+                        let victim = (0..groups.len())
+                            .filter(|&gi| {
+                                groups[gi].gpu == g && !groups[gi].slice_free.is_empty()
+                            })
+                            .max_by_key(|&gi| {
+                                (groups[gi].slice_free.len(), std::cmp::Reverse(gi))
+                            });
+                        let Some(gi) = victim else {
+                            frt.records[fault].skipped = true;
+                            return true;
+                        };
+                        frt.slice_victim[fault] = Some(gi);
+                        groups[gi].slice_free.sort_unstable();
+                        groups[gi].slice_free.remove(0);
+                        let ti = groups[gi].tenant;
+                        if let Some(c) = ctrl.as_mut() {
+                            c.note_slice_lost(g, ti);
+                        }
+                        // Rebuilds the policy for the shrunken slice
+                        // count, or flushes the queue to survivors if
+                        // that was the last slice.
+                        settle_groups(
+                            &[gi], cfg, sys, now, &mut groups, &mut tenants, q,
+                            &mut exec_rng, &frt.slow,
+                        );
+                        if e.duration_s.is_finite() {
+                            q.schedule_in(secs(e.duration_s), Ev::FaultRepair { fault });
+                        }
+                    }
+                    FaultKind::PreprocOutage => {
+                        let until = now.saturating_add(secs(e.duration_s));
+                        frt.preproc_until[g] = frt.preproc_until[g].max(until);
+                        if e.duration_s.is_finite() {
+                            q.schedule_in(secs(e.duration_s), Ev::FaultRepair { fault });
+                        }
+                    }
+                    FaultKind::Slowdown { factor } => {
+                        frt.slow[g] = frt.slow[g].max(factor);
+                        if e.duration_s.is_finite() {
+                            q.schedule_in(secs(e.duration_s), Ev::FaultRepair { fault });
+                        }
+                    }
+                    FaultKind::ReconfigAbort => {
+                        // Arms: the next committed rebalance dies
+                        // mid-drain and rolls back (consumed at the
+                        // ReconfigCheck that commits it).
+                        frt.abort_arm.push(fault);
+                    }
+                }
+            }
+            Ev::FaultDetect { fault } => {
+                let g = fspec.schedule.events[fault].gpu;
+                // Crashes only, and only if the repair has not already
+                // raced the health check (a blip shorter than the
+                // detection latency needs no failover).
+                if !frt.crashed[g] {
+                    return true;
+                }
+                frt.records[fault].detected_s = Some(to_secs(now));
+                // The router learns: dead groups lose their slice clocks
+                // and their queued requests flush to survivors (or the
+                // admission queue) exactly like a rebalance drain.
+                let mut touched = Vec::new();
+                for gi in 0..groups.len() {
+                    if groups[gi].gpu == g && !groups[gi].slice_free.is_empty() {
+                        groups[gi].slice_free.clear();
+                        touched.push(gi);
+                    }
+                }
+                settle_groups(
+                    &touched, cfg, sys, now, &mut groups, &mut tenants, q, &mut exec_rng,
+                    &frt.slow,
+                );
+                // Failover re-pack: the dead GPU's holdings become
+                // pending asks and re-admit through the controller's
+                // admission seam — immediately if surviving capacity
+                // fits them, else at a later window (or repair).
+                if let Some(c) = ctrl.as_mut() {
+                    for (ti, n) in c.fail_gpu(g) {
+                        for _ in 0..n {
+                            pending.push(SliceAsk { tenant: ti, slice: cfg.tenants[ti].slice });
+                        }
+                    }
+                    let mut i = 0;
+                    while i < pending.len() {
+                        match c.try_admit(pending[i].tenant) {
+                            None => i += 1,
+                            Some(gpu) => {
+                                let ask = pending.remove(i);
+                                late_admissions += 1;
+                                power.power_on(gpu, now);
+                                let avail = now + secs(c.policy().migration_s);
+                                grant_slice(
+                                    ask.tenant, gpu, avail, cfg, sys, now, &mut groups,
+                                    &mut group_of, &mut tenants, q, &mut exec_rng,
+                                    &frt.slow,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            Ev::FaultRepair { fault } => {
+                let e = fspec.schedule.events[fault];
+                let g = e.gpu;
+                match e.kind {
+                    FaultKind::GpuCrash => {
+                        frt.records[fault].repaired_s = Some(to_secs(now));
+                        frt.crashed[g] = false;
+                        if frt.crash_powered_off[g] {
+                            frt.crash_powered_off[g] = false;
+                            power.power_on(g, now);
+                        }
+                        if ctrl.is_some() && recovery.is_some() {
+                            // The repaired GPU rejoins empty: capacity
+                            // was re-packed at failover, and the
+                            // controller may grant into it again (its
+                            // old groups revive on the next grant).
+                            for grp in groups.iter_mut() {
+                                if grp.gpu == g {
+                                    grp.failed = false;
+                                }
+                            }
+                            if let Some(c) = ctrl.as_mut() {
+                                c.restore_gpu(g);
+                            }
+                        } else {
+                            // No recovery: capacity returns exactly as it
+                            // was and the stranded backlog finally drains.
+                            let mut touched = Vec::new();
+                            for gi in 0..groups.len() {
+                                if groups[gi].gpu == g && groups[gi].failed {
+                                    groups[gi].failed = false;
+                                    touched.push(gi);
+                                }
+                            }
+                            for gi in touched {
+                                dispatch_ready(
+                                    gi, now, &mut groups, &tenants, q, &mut exec_rng,
+                                    &frt.slow,
+                                );
+                                arm_tick(gi, now, &mut groups, q);
+                            }
+                        }
+                    }
+                    FaultKind::SliceFail => {
+                        frt.records[fault].repaired_s = Some(to_secs(now));
+                        let Some(gi) = frt.slice_victim[fault].take() else {
+                            return true;
+                        };
+                        // If the whole GPU crashed meanwhile, the
+                        // GPU-level repair/restore path owns the state.
+                        if frt.crashed[g] {
+                            return true;
+                        }
+                        groups[gi].slice_free.push(now);
+                        let ti = groups[gi].tenant;
+                        if let Some(c) = ctrl.as_mut() {
+                            c.note_slice_restored(g, ti);
+                        }
+                        settle_groups(
+                            &[gi], cfg, sys, now, &mut groups, &mut tenants, q,
+                            &mut exec_rng, &frt.slow,
+                        );
+                    }
+                    FaultKind::PreprocOutage => {
+                        frt.records[fault].repaired_s = Some(to_secs(now));
+                    }
+                    FaultKind::Slowdown { .. } => {
+                        frt.records[fault].repaired_s = Some(to_secs(now));
+                        // Overlapping slowdowns: keep the strongest of
+                        // whatever is still active on this GPU.
+                        frt.slow[g] = fspec
+                            .schedule
+                            .events
+                            .iter()
+                            .enumerate()
+                            .filter(|&(k, e2)| k != fault && e2.gpu == g)
+                            .filter_map(|(_, e2)| match e2.kind {
+                                FaultKind::Slowdown { factor }
+                                    if secs(e2.at_s) <= now
+                                        && now < secs(e2.at_s + e2.duration_s) =>
+                                {
+                                    Some(factor)
+                                }
+                                _ => None,
+                            })
+                            .fold(1.0, f64::max);
+                    }
+                    FaultKind::ReconfigAbort => {}
+                }
+            }
+            Ev::Retry { tenant, idx, attempt } => {
+                // The retry is moot once the request reached a terminal
+                // state (a racing completion, or an earlier give-up).
+                if tenants[tenant].state[idx] != ReqState::Pending {
+                    return true;
+                }
+                if start_request(
+                    tenant, idx, now, cfg, &mut groups, &mut tenants, &mut cpu_pools,
+                    &mut dpus, q, &frt.preproc_until,
+                ) {
+                    // Re-issued: a fresh preprocess + enqueue, exactly
+                    // like a client re-submission.
+                } else if cfg.admission {
+                    tenants[tenant].defer_request(idx);
+                } else if let Some(p) = recovery {
+                    if attempt + 1 < p.max_retries {
+                        tenants[tenant].retries += 1;
+                        q.schedule_in(
+                            secs(p.timeout_s + p.backoff_delay_s(attempt + 1)),
+                            Ev::Retry { tenant, idx, attempt: attempt + 1 },
+                        );
+                    } else {
+                        tenants[tenant].timeout_request(idx);
+                    }
+                } else {
+                    tenants[tenant].timeout_request(idx);
+                }
+            }
+            Ev::Hedge { tenant, idx } => {
+                // Hedge only when the request is still unanswered AND its
+                // routed group has failed (possibly still undetected) —
+                // the duplicate goes to the tenant's best healthy group.
+                let gi = tenants[tenant].routed[idx];
+                if tenants[tenant].state[idx] != ReqState::Pending
+                    || gi == usize::MAX
+                    || !groups[gi].failed
+                {
+                    return true;
+                }
+                let mut best = None;
+                let mut best_load = f64::INFINITY;
+                for &g2 in &tenants[tenant].route {
+                    if g2 == gi || groups[g2].failed || groups[g2].slice_free.is_empty() {
+                        continue;
+                    }
+                    let load =
+                        groups[g2].outstanding as f64 / groups[g2].slice_free.len() as f64;
+                    if load < best_load {
+                        best_load = load;
+                        best = Some(g2);
+                    }
+                }
+                let Some(g2) = best else {
+                    return true;
+                };
+                tenants[tenant].hedges += 1;
+                // The duplicate re-routes and re-preprocesses; whichever
+                // copy completes first wins (the loser is discarded by
+                // the terminal-state guard at ExecDone).
+                tenants[tenant].routed[idx] = g2;
+                groups[g2].outstanding += 1;
+                let gpu = groups[g2].gpu;
+                let len = tenants[tenant].arrivals[idx].1;
+                let at = now.max(frt.preproc_until[gpu]);
+                match cfg.preproc {
+                    PreprocMode::Ideal => q.schedule(at, Ev::PreprocDone { tenant, idx }),
+                    PreprocMode::Cpu => {
+                        let service =
+                            tenants[tenant].spec.cpu_preproc_secs(len.max(0.1));
+                        let (_, done) = cpu_pools[gpu].admit(at, service);
+                        q.schedule(done, Ev::PreprocDone { tenant, idx });
+                    }
+                    PreprocMode::Dpu => {
+                        let model = cfg.tenants[tenant].model;
+                        let done = match dpus[gpu].as_mut() {
+                            Some(d) => d.admit(at, model, len.max(0.1)),
+                            None => at,
+                        };
+                        q.schedule(done, Ev::PreprocDone { tenant, idx });
+                    }
                 }
             }
         }
@@ -1127,21 +1755,38 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
 
     // Requests still parked in an admission queue never got capacity:
     // they end the run as drops (same post-warmup rule), and the
-    // dropped-vs-deferred split lands in each tenant's RunStats.
+    // dropped-vs-deferred split lands in each tenant's RunStats. A fault
+    // can also strand requests forever (a dead group's backlog when the
+    // repair never comes): anything still pending after that is a
+    // timed-out request, so conservation stays exact — every arrival is
+    // served, dropped, or timed out, exactly once.
     for ts in &mut tenants {
         let waiting = std::mem::take(&mut ts.deferred_q);
         for idx in waiting {
             ts.drop_request(idx);
         }
+        for idx in 0..ts.state.len() {
+            if ts.state[idx] == ReqState::Pending {
+                ts.timeout_request(idx);
+            }
+        }
         ts.stats.dropped = ts.dropped;
         ts.stats.deferred = ts.deferred;
         ts.stats.deferred_served = ts.deferred_served;
+        ts.stats.timed_out = ts.timed_out;
+        ts.stats.retries = ts.retries;
+        ts.stats.hedges = ts.hedges;
+        ts.stats.served_degraded = ts.served_degraded;
     }
 
     Ok(ClusterOutcome {
         dropped: tenants.iter().map(|t| t.dropped).collect(),
         deferred: tenants.iter().map(|t| t.deferred).collect(),
         deferred_served: tenants.iter().map(|t| t.deferred_served).collect(),
+        timed_out: tenants.iter().map(|t| t.timed_out).collect(),
+        retries: tenants.iter().map(|t| t.retries).collect(),
+        hedges: tenants.iter().map(|t| t.hedges).collect(),
+        served_degraded: tenants.iter().map(|t| t.served_degraded).collect(),
         late_admissions,
         per_tenant: tenants
             .into_iter()
@@ -1160,6 +1805,10 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
         consolidations,
         gpu_off_s,
         consolidation_events,
+        mttr_s: mttr_s(&frt.records),
+        fault_records: frt.records,
+        reconfig_aborts: frt.aborts,
+        served_by_failed: frt.served_by_failed,
     })
 }
 
@@ -1181,11 +1830,22 @@ fn apply_moves(
     tenants: &mut [TenantState],
     q: &mut EventQueue<Ev>,
     exec_rng: &mut Rng,
+    slow: &[f64],
 ) -> Nanos {
     let mut downtime: Nanos = 0;
     let mut touched: Vec<usize> = Vec::new();
     for m in moves {
-        let donor = group_of[m.gpu][m.from].expect("move from a GPU the donor is not on");
+        // Invariant: the controller only plans moves from GPUs the donor
+        // holds slices on (its alloc mirror). A divergence — e.g. a
+        // fault the controller has not seen yet — skips the move rather
+        // than corrupting group state; the mirror re-syncs at detection.
+        let donor = match group_of[m.gpu][m.from] {
+            Some(g) if !groups[g].slice_free.is_empty() => g,
+            _ => {
+                debug_assert!(false, "move from a GPU the donor is not on: {m:?}");
+                continue;
+            }
+        };
         // Earliest-free slice drains soonest; it is the one transferred.
         groups[donor].slice_free.sort_unstable();
         let drained = groups[donor].slice_free.remove(0).max(now);
@@ -1201,7 +1861,7 @@ fn apply_moves(
         }
     }
 
-    settle_groups(&touched, cfg, sys, now, groups, tenants, q, exec_rng);
+    settle_groups(&touched, cfg, sys, now, groups, tenants, q, exec_rng, slow);
     downtime
 }
 
@@ -1219,6 +1879,7 @@ fn settle_groups(
     tenants: &mut [TenantState],
     q: &mut EventQueue<Ev>,
     exec_rng: &mut Rng,
+    slow: &[f64],
 ) {
     for &gi in touched {
         let ti = groups[gi].tenant;
@@ -1227,7 +1888,7 @@ fn settle_groups(
             let ts = &tenants[ti];
             let new_policy = build_policy(cfg.policy, sys, ts.spec, &ts.sm, &ts.buckets, n);
             groups[gi].batcher.rebuild(new_policy, now);
-            dispatch_ready(gi, now, groups, tenants, q, exec_rng);
+            dispatch_ready(gi, now, groups, tenants, q, exec_rng, slow);
             arm_tick(gi, now, groups, q);
         }
     }
@@ -1243,7 +1904,7 @@ fn settle_groups(
             .into_iter()
             .flat_map(|b| b.requests)
             .collect();
-        groups[gi].outstanding -= pending.len();
+        groups[gi].outstanding = groups[gi].outstanding.saturating_sub(pending.len());
         match target {
             Some(tg) => {
                 groups[tg].outstanding += pending.len();
@@ -1251,7 +1912,7 @@ fn settle_groups(
                     tenants[ti].routed[r.id as usize] = tg;
                     groups[tg].batcher.enqueue(r);
                 }
-                dispatch_ready(tg, now, groups, tenants, q, exec_rng);
+                dispatch_ready(tg, now, groups, tenants, q, exec_rng, slow);
                 arm_tick(tg, now, groups, q);
             }
             // Same no-capacity contract as the Arrival/PreprocDone
@@ -1299,6 +1960,7 @@ fn apply_consolidation(
     q: &mut EventQueue<Ev>,
     exec_rng: &mut Rng,
     power: &mut GpuPower,
+    slow: &[f64],
 ) -> Nanos {
     let mut downtime: Nanos = 0;
     match action {
@@ -1310,10 +1972,18 @@ fn apply_consolidation(
                 }
             };
             // The GPU can only power off once its last in-flight work
-            // has drained off it.
+            // has drained off it. A retire/relocate source the groups no
+            // longer hold (controller-mirror divergence — should not
+            // happen) is skipped rather than corrupting group state.
             let mut off_at = now;
             for &(g, ti) in retire {
-                let gi = group_of[g][ti].expect("retire from a GPU the tenant is not on");
+                let gi = match group_of[g][ti] {
+                    Some(gi) if !groups[gi].slice_free.is_empty() => gi,
+                    _ => {
+                        debug_assert!(false, "retire from a GPU tenant {ti} is not on");
+                        continue;
+                    }
+                };
                 groups[gi].slice_free.sort_unstable();
                 let drained = groups[gi].slice_free.remove(0).max(now);
                 if g == *gpu {
@@ -1322,8 +1992,13 @@ fn apply_consolidation(
                 touch(gi, &mut touched);
             }
             for r in relocate {
-                let donor =
-                    group_of[r.from_gpu][r.tenant].expect("relocate from an absent group");
+                let donor = match group_of[r.from_gpu][r.tenant] {
+                    Some(gi) if !groups[gi].slice_free.is_empty() => gi,
+                    _ => {
+                        debug_assert!(false, "relocate from an absent group: {r:?}");
+                        continue;
+                    }
+                };
                 groups[donor].slice_free.sort_unstable();
                 let drained = groups[donor].slice_free.remove(0).max(now);
                 off_at = off_at.max(drained);
@@ -1335,7 +2010,7 @@ fn apply_consolidation(
                 touch(donor, &mut touched);
                 touch(gainer, &mut touched);
             }
-            settle_groups(&touched, cfg, sys, now, groups, tenants, q, exec_rng);
+            settle_groups(&touched, cfg, sys, now, groups, tenants, q, exec_rng, slow);
             power.power_off(*gpu, off_at);
         }
         ConsolidationAction::PowerUp { gpu, grants } => {
@@ -1346,7 +2021,7 @@ fn apply_consolidation(
                     downtime += avail - now;
                     grant_slice(
                         ti, *gpu, avail, cfg, sys, now, groups, group_of, tenants, q,
-                        exec_rng,
+                        exec_rng, slow,
                     );
                 }
             }

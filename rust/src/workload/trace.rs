@@ -266,9 +266,11 @@ impl ReplayTrace {
 
     /// Parse a CSV of arrival timestamps: one record per line, first
     /// field is the timestamp in seconds. Blank lines, `#` comments, and
-    /// a non-numeric header line are skipped.
+    /// a non-numeric header line are skipped. A recorded log must be
+    /// time-ordered — a timestamp running backwards is corruption, not a
+    /// formatting choice — so every rejection names its line.
     pub fn from_csv(text: &str) -> anyhow::Result<ReplayTrace> {
-        let mut out = Vec::new();
+        let mut out: Vec<f64> = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -276,12 +278,27 @@ impl ReplayTrace {
             }
             let field = line.split(',').next().unwrap_or("").trim();
             match field.parse::<f64>() {
-                Ok(t) => out.push(t),
+                Ok(t) => {
+                    anyhow::ensure!(
+                        t.is_finite() && t >= 0.0,
+                        "trace CSV line {}: bad timestamp {t}",
+                        lineno + 1
+                    );
+                    if let Some(&prev) = out.last() {
+                        anyhow::ensure!(
+                            t >= prev,
+                            "trace CSV line {}: timestamp {t} runs backwards (previous {prev})",
+                            lineno + 1
+                        );
+                    }
+                    out.push(t);
+                }
                 // A header is only acceptable before any data row.
                 Err(_) if out.is_empty() => continue,
                 Err(_) => anyhow::bail!("trace CSV line {}: bad timestamp '{field}'", lineno + 1),
             }
         }
+        anyhow::ensure!(!out.is_empty(), "trace CSV has no data rows");
         ReplayTrace::new(out)
     }
 
@@ -294,17 +311,28 @@ impl ReplayTrace {
             .find(']')
             .map(|e| start + e)
             .ok_or_else(|| anyhow::anyhow!("unterminated JSON array in trace"))?;
-        let mut out = Vec::new();
-        for tok in text[start + 1..end].split(',') {
+        let mut out: Vec<f64> = Vec::new();
+        for (i, tok) in text[start + 1..end].split(',').enumerate() {
             let tok = tok.trim();
             if tok.is_empty() {
                 continue;
             }
-            out.push(
-                tok.parse::<f64>()
-                    .map_err(|_| anyhow::anyhow!("bad JSON trace timestamp '{tok}'"))?,
+            let t = tok
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("JSON trace element {i}: bad timestamp '{tok}'"))?;
+            anyhow::ensure!(
+                t.is_finite() && t >= 0.0,
+                "JSON trace element {i}: bad timestamp {t}"
             );
+            if let Some(&prev) = out.last() {
+                anyhow::ensure!(
+                    t >= prev,
+                    "JSON trace element {i}: timestamp {t} runs backwards (previous {prev})"
+                );
+            }
+            out.push(t);
         }
+        anyhow::ensure!(!out.is_empty(), "JSON trace array is empty");
         ReplayTrace::new(out)
     }
 
@@ -313,11 +341,12 @@ impl ReplayTrace {
     pub fn load(path: &str) -> anyhow::Result<ReplayTrace> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("cannot read trace '{path}': {e}"))?;
-        if path.ends_with(".json") {
+        let parsed = if path.ends_with(".json") {
             ReplayTrace::from_json(&text)
         } else {
             ReplayTrace::from_csv(&text)
-        }
+        };
+        parsed.map_err(|e| anyhow::anyhow!("trace '{path}': {e}"))
     }
 
     /// Bundled synthetic Azure-Functions-style trace: a diurnal envelope
@@ -496,17 +525,44 @@ mod tests {
 
     #[test]
     fn replay_parses_csv_and_json() {
-        let csv = ReplayTrace::from_csv("ts,extra\n# comment\n0.5,a\n0.25,b\n\n1.5,c\n").unwrap();
+        let csv = ReplayTrace::from_csv("ts,extra\n# comment\n0.25,a\n0.5,b\n\n1.5,c\n").unwrap();
         assert_eq!(csv.len(), 3);
-        // Sorted on construction.
         assert!((csv.duration_s() - 1.5).abs() < 1e-12);
         let json = ReplayTrace::from_json("{\"arrivals_s\": [0.25, 0.5, 1.5]}").unwrap();
         assert_eq!(json, csv);
-        assert!(ReplayTrace::from_csv("h1\n1.0\nnot-a-number\n").is_err());
-        assert!(ReplayTrace::from_json("[]").is_err());
-        assert!(ReplayTrace::from_csv("").is_err());
+        // Programmatic construction sorts; the loaders demand order.
+        assert_eq!(ReplayTrace::new(vec![0.5, 0.25, 1.5]).unwrap(), csv);
         assert!(ReplayTrace::new(vec![-1.0]).is_err());
         assert!(ReplayTrace::new(vec![f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn replay_loaders_reject_corrupt_fixtures_with_row_context() {
+        // Malformed row: the error names the offending line and field.
+        let err = ReplayTrace::from_csv("h1\n1.0\nnot-a-number\n").unwrap_err().to_string();
+        assert!(err.contains("line 3") && err.contains("not-a-number"), "{err}");
+        // Non-finite / negative timestamps, with line context.
+        let err = ReplayTrace::from_csv("0.5\nnan\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(ReplayTrace::from_csv("0.5\n-2.0\n").is_err());
+        // Out-of-order rows are corruption in a recorded log, not a
+        // formatting choice.
+        let err = ReplayTrace::from_csv("1.0\n0.5\n").unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("backwards"), "{err}");
+        let err = ReplayTrace::from_json("[1.0, 0.5]").unwrap_err().to_string();
+        assert!(err.contains("element 1") && err.contains("backwards"), "{err}");
+        // Bad JSON element, named by index.
+        let err = ReplayTrace::from_json("[0.5, oops]").unwrap_err().to_string();
+        assert!(err.contains("element 1") && err.contains("oops"), "{err}");
+        // Empty / headers-only / array-less files.
+        assert!(ReplayTrace::from_csv("").is_err());
+        assert!(ReplayTrace::from_csv("# only comments\nts\n").is_err());
+        assert!(ReplayTrace::from_json("[]").is_err());
+        assert!(ReplayTrace::from_json("{}").is_err());
+        // load(): errors carry the path for both unreadable and corrupt
+        // files.
+        let err = ReplayTrace::load("/nonexistent/trace.csv").unwrap_err().to_string();
+        assert!(err.contains("/nonexistent/trace.csv"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Properties of the fault subsystem (`fault::*` plus the cluster DES
+//! wiring): request conservation under arbitrary seeded fault schedules
+//! (every offered request ends in exactly one terminal bucket), the
+//! failed-group dispatch gate, recovery never losing the directed
+//! failover A/B to the blind baseline at any arrival seed, bitwise
+//! determinism of the `faults` experiment across `--jobs` counts, and
+//! `preba cluster --faults` CLI smoke.
+
+use std::process::Command;
+
+use preba::config::PrebaConfig;
+use preba::experiments::faults::failover_cfg;
+use preba::fault::{FaultSchedule, FaultSpec};
+use preba::mig::{PackStrategy, ServiceModel, Slice};
+use preba::models::ModelId;
+use preba::prop_assert;
+use preba::server::cluster::{self, ClusterConfig, ClusterTenant};
+use preba::util::prop::check;
+use preba::util::Rng;
+
+/// A small random fleet under a random seeded fault schedule (crashes,
+/// slice failures, stragglers, preprocessing outages). Warmup 0:
+/// conservation must hold over EVERY arrival, not just a trimmed tail.
+fn random_faulted_cfg(rng: &mut Rng, sys: &PrebaConfig) -> ClusterConfig {
+    let horizon_s = 2.0 + rng.f64() * 2.0;
+    let n_gpus = 2 + rng.below(2) as usize;
+    let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+    let tenants: Vec<ClusterTenant> = (0..2)
+        .map(|_| {
+            let slices = 2 + rng.below(3) as usize;
+            let rate = rng.range_f64(0.25, 0.55) * slices as f64 * u;
+            let mut t =
+                ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), slices, rate);
+            t.sla_ms = 50.0;
+            t.requests = ((rate * horizon_s).ceil() as usize).max(40);
+            t
+        })
+        .collect();
+    let mut cfg = ClusterConfig::new(n_gpus, PackStrategy::BestFit, tenants);
+    cfg.seed = rng.next_u64();
+    cfg.warmup_frac = 0.0;
+    cfg.reconfig = Some(preba::experiments::cluster::policy(sys));
+    cfg.admission = rng.below(2) == 0;
+    let mtbf = rng.range_f64(0.6, 2.5);
+    let mttr = rng.range_f64(0.2, 0.8);
+    let mut srng = rng.split(0xFA17);
+    let sched = FaultSchedule::stochastic(mtbf, mttr, horizon_s, n_gpus, &mut srng);
+    cfg.faults = Some(if rng.below(2) == 0 {
+        FaultSpec::recovering(sched, sys.fault.recovery())
+    } else {
+        FaultSpec::baseline(sched)
+    });
+    cfg
+}
+
+#[test]
+fn every_request_ends_in_exactly_one_terminal_bucket() {
+    let sys = PrebaConfig::new();
+    check("fault conservation", 48, |rng| {
+        let cfg = random_faulted_cfg(rng, &sys);
+        let out = cluster::run(&cfg, &sys).expect("valid faulted config");
+        for (i, t) in cfg.tenants.iter().enumerate() {
+            let (_, stats) = &out.per_tenant[i];
+            let total = stats.completed + out.dropped[i] + out.timed_out[i];
+            prop_assert!(
+                total == t.requests as u64,
+                "tenant {i}: {} completed + {} dropped + {} timed out != {} offered",
+                stats.completed,
+                out.dropped[i],
+                out.timed_out[i],
+                t.requests
+            );
+        }
+        // The dispatch gate, not the recovery stack, owns this: nothing
+        // ever completes on a failed group.
+        prop_assert!(
+            out.served_by_failed == 0,
+            "served {} requests on failed groups",
+            out.served_by_failed
+        );
+        let avail = out.availability_frac();
+        prop_assert!((0.0..=1.0).contains(&avail), "availability {avail} out of range");
+        Ok(())
+    });
+}
+
+#[test]
+fn faulted_runs_are_deterministic() {
+    let sys = PrebaConfig::new();
+    check("fault run determinism", 8, |rng| {
+        let cfg = random_faulted_cfg(rng, &sys);
+        let a = cluster::run(&cfg, &sys).expect("valid faulted config");
+        let b = cluster::run(&cfg, &sys).expect("valid faulted config");
+        prop_assert!(
+            a.completed_total() == b.completed_total()
+                && a.timed_out == b.timed_out
+                && a.dropped == b.dropped
+                && a.retries == b.retries
+                && a.hedges == b.hedges
+                && a.events == b.events,
+            "identical faulted config diverged between runs"
+        );
+        Ok(())
+    });
+}
+
+/// The directed failover scenario (GPU crash, never repaired) must never
+/// come out WORSE with recovery than without, whatever the arrival seed:
+/// the experiment asserts a strict win at its shipped seed, this guards
+/// the weaker ordering everywhere else.
+#[test]
+fn recovery_never_loses_the_failover_ab_at_any_arrival_seed() {
+    let sys = PrebaConfig::new();
+    check("failover recovery >= baseline", 6, |rng| {
+        let seed = rng.next_u64();
+        let horizon_s = 5.0;
+        let mut base_cfg = failover_cfg(false, horizon_s, &sys);
+        let mut rec_cfg = failover_cfg(true, horizon_s, &sys);
+        base_cfg.seed = seed;
+        rec_cfg.seed = seed;
+        let base = cluster::run(&base_cfg, &sys).expect("valid baseline config");
+        let rec = cluster::run(&rec_cfg, &sys).expect("valid recovery config");
+        prop_assert!(
+            rec.availability_frac() >= base.availability_frac(),
+            "recovery availability {} < baseline {} at seed {seed:#x}",
+            rec.availability_frac(),
+            base.availability_frac()
+        );
+        prop_assert!(
+            rec.completed_total() >= base.completed_total(),
+            "recovery served {} < baseline {} at seed {seed:#x}",
+            rec.completed_total(),
+            base.completed_total()
+        );
+        Ok(())
+    });
+}
+
+fn run_faults_experiment(jobs: &str, out_dir: &std::path::Path) -> Vec<u8> {
+    let _ = std::fs::remove_dir_all(out_dir);
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .env("PREBA_FAST", "1")
+        .args(["experiment", "faults", "--jobs", jobs, "--out", out_dir.to_str().unwrap()])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba experiment faults --jobs {jobs} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out.stdout
+}
+
+#[test]
+fn experiment_faults_identical_at_jobs_1_and_4() {
+    let base = std::env::temp_dir().join("preba_faults_determinism");
+    let dir1 = base.join("j1");
+    let dir4 = base.join("j4");
+    let stdout1 = run_faults_experiment("1", &dir1);
+    let stdout4 = run_faults_experiment("4", &dir4);
+    assert_eq!(
+        String::from_utf8_lossy(&stdout1).replace(dir1.to_str().unwrap(), "<out>"),
+        String::from_utf8_lossy(&stdout4).replace(dir4.to_str().unwrap(), "<out>"),
+        "stdout differs between --jobs 1 and --jobs 4"
+    );
+    let json1 = std::fs::read(dir1.join("faults.json")).expect("faults.json at jobs=1");
+    let json4 = std::fs::read(dir4.join("faults.json")).expect("faults.json at jobs=4");
+    assert!(!json1.is_empty());
+    assert_eq!(json1, json4, "results JSON differs between --jobs 1 and --jobs 4");
+}
+
+#[test]
+fn cluster_cli_faults_smoke() {
+    // --faults runs each packing twice (baseline vs recovery) and adds
+    // the availability columns plus a fault timeline.
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args([
+            "cluster", "--gpus", "2", "--horizon", "2", "--strategy", "bfd", "--reconfig",
+            "--faults", "crash@0.5:g0:0.5,slow@1.0:g1:0.5:2.5",
+        ])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba cluster --faults failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("2 injected faults"), "{text}");
+    assert!(text.contains("avail %"), "{text}");
+    assert!(text.contains("best-fit/baseline"), "{text}");
+    assert!(text.contains("best-fit/recovery"), "{text}");
+    assert!(text.contains("crash on gpu0"), "{text}");
+    // A malformed spec is a clean CLI error, not a panic.
+    let bad = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args(["cluster", "--gpus", "2", "--horizon", "1", "--faults", "melt@1:g0"])
+        .output()
+        .expect("spawn preba");
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("unknown fault kind"));
+}

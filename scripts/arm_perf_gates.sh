@@ -8,8 +8,9 @@
 #
 #   scripts/arm_perf_gates.sh path/to/BENCH_pr12.json
 #
-# It copies hotpath.events_per_sec, cluster.events_per_sec and
-# cluster.joules_per_query into rust/benches/perf_baseline.json
+# It copies hotpath.events_per_sec, cluster.events_per_sec,
+# cluster.joules_per_query and cluster.availability_frac into
+# rust/benches/perf_baseline.json
 # (preserving the note), prints the before/after values, and leaves the
 # change for you to review and commit.
 set -euo pipefail
@@ -33,6 +34,7 @@ updates = {
     "events_per_sec": bench["hotpath"]["events_per_sec"],
     "cluster_events_per_sec": bench["cluster"]["events_per_sec"],
     "cluster_joules_per_query": bench["cluster"].get("joules_per_query"),
+    "cluster_availability_frac": bench["cluster"].get("availability_frac"),
 }
 for key, value in updates.items():
     if value is None:
