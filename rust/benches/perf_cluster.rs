@@ -6,28 +6,89 @@
 //! `cluster` experiment's 4-GPU diurnal fleet on best-fit-decreasing
 //! packing with JSQ routing and the online cross-GPU controller enabled —
 //! the heaviest code path (routing + per-GPU preproc + rebalancing).
+//! A streamed ~1M-arrival trace-day probe (`cluster_1m_trace`) runs
+//! first, recording events/s and the process's peak RSS so the
+//! arrival-stream seam's bounded-memory claim is gated, not asserted.
 
 use preba::config::PrebaConfig;
 use preba::experiments;
-use preba::mig::PackStrategy;
-use preba::server::cluster::{self, ClusterConfig};
+use preba::mig::{PackStrategy, ServiceModel, Slice};
+use preba::models::ModelId;
+use preba::server::cluster::{self, ClusterConfig, ClusterTenant};
 use preba::util::bench::time_fn;
 use preba::util::json::Json;
+use preba::workload::StreamSpec;
+
+/// Peak resident set of this process so far (`VmHWM`), MB. The streamed
+/// trace-day probe runs FIRST in `main` so this reflects its footprint.
+#[cfg(target_os = "linux")]
+fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn peak_rss_mb() -> Option<f64> {
+    None
+}
 
 fn main() {
     experiments::set_fast(true);
     let sys = PrebaConfig::new();
-    println!("== cluster-DES benchmark (4 GPUs, diurnal fleet, BFD + JSQ + reconfig) ==");
+
+    // §cluster_1m_trace probe: a ~1M-arrival streamed trace day on a
+    // 16-GPU fleet — 24 tenants each pulled lazily from a synthetic
+    // Azure-shaped StreamSpec, nothing materialized. Runs FIRST so
+    // VmHWM is this probe's peak footprint: the gate's RSS ceiling is
+    // what proves planet-scale replay stays in bounded memory.
+    println!("== streamed trace-day probe (16 GPUs, 24 azure streams, ~1M arrivals) ==");
+    let u = ServiceModel::new(ModelId::MobileNet.spec(), 1).plateau_qps(0.0);
+    let per_tenant_qps = 0.5 * 2.0 * u; // 2 slices at 50% utilization
+    let n_tenants = 24;
+    let duration_s = 1e6 / (n_tenants as f64 * per_tenant_qps);
+    let stream_fleet: Vec<ClusterTenant> = (0..n_tenants)
+        .map(|ti| {
+            let spec = StreamSpec::azure(0x1A7E ^ ti as u64, duration_s, per_tenant_qps);
+            ClusterTenant::new(ModelId::MobileNet, Slice::new(1, 5), 2, per_tenant_qps)
+                .with_stream(spec)
+                .expect("synthetic source probes")
+        })
+        .collect();
+    let arrivals_1m: usize = stream_fleet.iter().map(|t| t.requests).sum();
+    let cfg_1m = ClusterConfig::builder()
+        .gpus(16)
+        .strategy(PackStrategy::BestFit)
+        .tenants(stream_fleet)
+        .seed(0x1A7E)
+        .build();
+    let t0 = std::time::Instant::now();
+    let out_1m = cluster::run(&cfg_1m, &sys).expect("valid streamed config");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let trace_1m_events_per_sec = out_1m.events as f64 / wall_s;
+    let trace_1m_peak_rss_mb = peak_rss_mb();
+    println!(
+        "{arrivals_1m} arrivals over ~{duration_s:.0} s, {} DES events in {wall_s:.2} s -> \
+         {:.2} M events/s, peak RSS {}",
+        out_1m.events,
+        trace_1m_events_per_sec / 1e6,
+        match trace_1m_peak_rss_mb {
+            Some(mb) => format!("{mb:.0} MB"),
+            None => "unavailable (non-Linux)".to_string(),
+        }
+    );
+
+    println!("\n== cluster-DES benchmark (4 GPUs, diurnal fleet, BFD + JSQ + reconfig) ==");
 
     let mk_cfg = || {
-        let mut cfg = ClusterConfig::new(
-            4,
-            PackStrategy::BestFit,
-            experiments::cluster::diurnal_fleet(4, 4.0),
-        );
-        cfg.seed = 0xBE7C;
-        cfg.reconfig = Some(experiments::cluster::policy(&sys));
-        cfg
+        ClusterConfig::builder()
+            .gpus(4)
+            .strategy(PackStrategy::BestFit)
+            .tenants(experiments::cluster::diurnal_fleet(4, 4.0))
+            .seed(0xBE7C)
+            .reconfig(experiments::cluster::policy(&sys))
+            .build()
     };
     let probe = cluster::run(&mk_cfg(), &sys).expect("valid cluster config");
     let events_per_run = probe.events;
@@ -81,6 +142,12 @@ fn main() {
             // gated (higher is better) once the committed baseline's
             // cluster_availability_frac is non-null.
             ("availability_frac", Json::num(availability_frac)),
+            // Streamed ~1M-arrival trace-day probe — events/s gated as a
+            // floor via cluster_1m_events_per_sec, peak RSS as a CEILING
+            // via cluster_1m_peak_rss_mb (lower is better: the whole
+            // point of the arrival-stream seam is bounded memory).
+            ("trace_1m_events_per_sec", Json::num(trace_1m_events_per_sec)),
+            ("trace_1m_peak_rss_mb", trace_1m_peak_rss_mb.map_or(Json::Null, Json::num)),
         ]);
         std::fs::write(&path, doc.to_string_pretty()).expect("write PREBA_BENCH_JSON");
         println!("[bench json written {path}]");

@@ -13,13 +13,10 @@
 //!
 //! Run: `cargo run --release --example capacity_planning [-- model sla_ms n_gpus]`
 
-use preba::config::PrebaConfig;
-use preba::experiments::support;
 use preba::energy::{PowerModel, TcoModel};
-use preba::mig::{MigConfig, PackStrategy};
-use preba::models::ModelId;
-use preba::server::cluster::{self, ClusterConfig};
-use preba::server::{PolicyKind, PreprocMode};
+use preba::experiments::support;
+use preba::prelude::*;
+use preba::server::cluster;
 use preba::util::table::{num, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -77,7 +74,11 @@ fn main() -> anyhow::Result<()> {
     ]);
     for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
         let tenants = preba::experiments::cluster::diurnal_fleet(n_gpus, 6.0);
-        let cfg = ClusterConfig::new(n_gpus, strategy, tenants);
+        let cfg = ClusterConfig::builder()
+            .gpus(n_gpus)
+            .strategy(strategy)
+            .tenants(tenants)
+            .build();
         let out = cluster::run(&cfg, &sys)?;
         t.row(&[
             strategy.label().to_string(),

@@ -11,8 +11,7 @@
 //!
 //! Run: `cargo run --release --example e2e_pipeline` (after `make artifacts`)
 
-use preba::config::PrebaConfig;
-use preba::models::ModelId;
+use preba::prelude::*;
 use preba::runtime::Engine;
 use preba::server::real_driver::{serve, RealConfig, RealPreproc};
 use preba::util::table::{num, Table};

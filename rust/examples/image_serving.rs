@@ -8,8 +8,7 @@
 //!
 //! Run: `cargo run --release --example image_serving`
 
-use preba::config::PrebaConfig;
-use preba::models::ModelId;
+use preba::prelude::*;
 use preba::runtime::Engine;
 use preba::server::real_driver::{serve, RealConfig, RealPreproc};
 

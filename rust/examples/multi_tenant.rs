@@ -7,11 +7,9 @@
 //!
 //! Run: `cargo run --release --example multi_tenant`
 
-use preba::config::PrebaConfig;
-use preba::mig::{MigConfig, ServiceModel};
-use preba::models::ModelId;
+use preba::mig::ServiceModel;
+use preba::prelude::*;
 use preba::server::multi::{run, MultiConfig, Tenant};
-use preba::server::{PolicyKind, PreprocMode};
 use preba::util::table::{num, Table};
 
 fn main() -> anyhow::Result<()> {

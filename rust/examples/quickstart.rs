@@ -7,8 +7,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use preba::config::PrebaConfig;
-use preba::models::ModelId;
+use preba::prelude::*;
 use preba::runtime::Engine;
 use preba::server::real_driver::{serve, RealConfig, RealPreproc};
 

@@ -248,6 +248,13 @@ pub struct ClusterDefaults {
     pub migration_s: f64,
     /// In-place repartition outage, seconds.
     pub repartition_s: f64,
+    /// Event-heap shard count fed into
+    /// [`crate::server::cluster::ClusterConfig::shards`]: 0 = auto (one
+    /// shard per connected component of the tenant↔GPU residency
+    /// graph), 1 = force a single global heap, n = merge components
+    /// round-robin into at most n shards. Outcomes are byte-identical
+    /// at every setting.
+    pub shards: usize,
 }
 
 impl Default for ClusterDefaults {
@@ -262,6 +269,7 @@ impl Default for ClusterDefaults {
             horizon_s: 10.0,
             migration_s: 0.3,
             repartition_s: 0.1,
+            shards: 0,
         }
     }
 }
@@ -468,6 +476,7 @@ impl PrebaConfig {
         c.horizon_s = doc.f64_or("cluster.horizon_s", c.horizon_s);
         c.migration_s = doc.f64_or("cluster.migration_s", c.migration_s);
         c.repartition_s = doc.f64_or("cluster.repartition_s", c.repartition_s);
+        c.shards = doc.i64_or("cluster.shards", c.shards as i64) as usize;
 
         let f = &mut self.fault;
         if let Some(v) = doc.get("fault.spec").and_then(toml::Value::as_str) {

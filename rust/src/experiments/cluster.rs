@@ -28,14 +28,12 @@
 //!    controller re-packs capacity freed by the other tenant's diurnal
 //!    trough (deferred_served > 0, strictly fewer drops).
 
-use crate::config::PrebaConfig;
-use crate::mig::{GpuClass, PackStrategy, ReconfigPolicy, ServiceModel, Slice};
-use crate::models::ModelId;
-use crate::server::cluster::{self, ClusterConfig, ClusterOutcome, ClusterTenant, Routing};
+use crate::mig::ServiceModel;
+use crate::prelude::*;
+use crate::server::cluster;
 use crate::util::bench::Reporter;
 use crate::util::json::Json;
 use crate::util::table::{num, Table};
-use crate::workload::{RateProfile, ReplayTrace};
 
 use super::support;
 
@@ -178,14 +176,17 @@ pub fn replay_tenants(horizon_s: f64) -> Vec<ClusterTenant> {
 /// admission on/off. `pub` so tests and examples can rerun the exact
 /// scenario the experiment reports.
 pub fn replay_cfg(admission: bool, horizon_s: f64, sys: &PrebaConfig) -> ClusterConfig {
-    let mut cfg = ClusterConfig::new(2, PackStrategy::BestFit, replay_tenants(horizon_s));
-    cfg.seed = 0xC1A3;
-    cfg.reconfig = Some(policy(sys));
-    cfg.admission = admission;
     // Deferral starts at the first telemetry window; a 5% warmup would
     // swallow the pre-rescue drops the comparison scores.
-    cfg.warmup_frac = 0.01;
-    cfg
+    ClusterConfig::builder()
+        .gpus(2)
+        .strategy(PackStrategy::BestFit)
+        .tenants(replay_tenants(horizon_s))
+        .seed(0xC1A3)
+        .reconfig(policy(sys))
+        .admission(admission)
+        .warmup_frac(0.01)
+        .build()
 }
 
 fn run_cell(cfg: &ClusterConfig, sys: &PrebaConfig) -> ClusterOutcome {
@@ -205,9 +206,12 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let cfgs: Vec<ClusterConfig> = grid
         .iter()
         .map(|&(n_gpus, strategy)| {
-            let mut cfg = ClusterConfig::new(n_gpus, strategy, diurnal_fleet(n_gpus, horizon_s));
-            cfg.seed = 0xC1A0;
-            cfg
+            ClusterConfig::builder()
+                .gpus(n_gpus)
+                .strategy(strategy)
+                .tenants(diurnal_fleet(n_gpus, horizon_s))
+                .seed(0xC1A0)
+                .build()
         })
         .collect();
     let outs = super::sweep(&cfgs, |cfg| run_cell(cfg, sys));
@@ -254,14 +258,13 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let cfgs: Vec<ClusterConfig> = routings
         .iter()
         .map(|&routing| {
-            let mut cfg = ClusterConfig::new(
-                2,
-                PackStrategy::FirstFit,
-                asym_routing_tenants(horizon_s * 0.5),
-            );
-            cfg.routing = routing;
-            cfg.seed = 0xC1A1;
-            cfg
+            ClusterConfig::builder()
+                .gpus(2)
+                .strategy(PackStrategy::FirstFit)
+                .tenants(asym_routing_tenants(horizon_s * 0.5))
+                .routing(routing)
+                .seed(0xC1A1)
+                .build()
         })
         .collect();
     let outs = super::sweep(&cfgs, |cfg| run_cell(cfg, sys));
@@ -293,9 +296,12 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let cfgs: Vec<ClusterConfig> = modes
         .iter()
         .map(|&online| {
-            let mut cfg =
-                ClusterConfig::new(2, PackStrategy::BestFit, antiphase_pair(horizon_s * 1.2));
-            cfg.seed = 0xC1A2;
+            let mut cfg = ClusterConfig::builder()
+                .gpus(2)
+                .strategy(PackStrategy::BestFit)
+                .tenants(antiphase_pair(horizon_s * 1.2))
+                .seed(0xC1A2)
+                .build();
             cfg.reconfig = online.then(|| policy(sys));
             cfg
         })
@@ -347,13 +353,12 @@ pub fn run(sys: &PrebaConfig) -> Json {
     let cfgs: Vec<ClusterConfig> = strategies
         .iter()
         .map(|&strategy| {
-            let mut cfg = ClusterConfig::with_fleet(
-                hetero_fleet(),
-                strategy,
-                hetero_tenants(horizon_s * 0.5),
-            );
-            cfg.seed = 0xC1A4;
-            cfg
+            ClusterConfig::builder()
+                .fleet(hetero_fleet())
+                .strategy(strategy)
+                .tenants(hetero_tenants(horizon_s * 0.5))
+                .seed(0xC1A4)
+                .build()
         })
         .collect();
     let outs = super::sweep(&cfgs, |cfg| run_cell(cfg, sys));

@@ -24,16 +24,13 @@
 //!    fleet energy at equal served count with no increase in the
 //!    SLA-violation fraction.
 
-use crate::config::PrebaConfig;
 use crate::energy::TcoModel;
-use crate::mig::{MigConfig, PackStrategy, ServiceModel, Slice};
-use crate::models::ModelId;
-use crate::server::cluster::{self, ClusterConfig, ClusterOutcome, ClusterTenant};
-use crate::server::{PolicyKind, PreprocMode, SimOutcome};
+use crate::mig::ServiceModel;
+use crate::prelude::*;
+use crate::server::cluster;
 use crate::util::bench::Reporter;
 use crate::util::json::Json;
 use crate::util::table::{num, Table};
-use crate::workload::RateProfile;
 
 use super::support;
 
@@ -102,11 +99,13 @@ pub fn busy_fleet_cfg(preproc: PreprocMode, horizon_s: f64) -> ClusterConfig {
         t.requests = (rate * horizon_s).ceil() as usize;
         t
     };
-    let mut cfg =
-        ClusterConfig::new(2, PackStrategy::BestFit, vec![mk(0.0), mk(0.5)]);
-    cfg.preproc = preproc;
-    cfg.seed = 0xE6E1;
-    cfg
+    ClusterConfig::builder()
+        .gpus(2)
+        .strategy(PackStrategy::BestFit)
+        .tenants(vec![mk(0.0), mk(0.5)])
+        .preproc(preproc)
+        .seed(0xE6E1)
+        .build()
 }
 
 /// Section 3's overnight fleet: two Swin tenants asking 5×1g.5gb each
@@ -130,13 +129,15 @@ pub fn idle_fleet_cfg(consolidate: bool, horizon_s: f64, sys: &PrebaConfig) -> C
         t.requests = (rate * horizon_s).ceil() as usize;
         t
     };
-    let mut cfg =
-        ClusterConfig::new(2, PackStrategy::BestFit, vec![mk(0.0), mk(0.5)]);
-    cfg.preproc = PreprocMode::Dpu;
-    cfg.seed = 0xE6E2;
-    cfg.reconfig = Some(crate::experiments::cluster::policy(sys));
-    cfg.consolidate = consolidate;
-    cfg
+    ClusterConfig::builder()
+        .gpus(2)
+        .strategy(PackStrategy::BestFit)
+        .tenants(vec![mk(0.0), mk(0.5)])
+        .preproc(PreprocMode::Dpu)
+        .seed(0xE6E2)
+        .reconfig(crate::experiments::cluster::policy(sys))
+        .consolidate(consolidate)
+        .build()
 }
 
 fn run_cell(cfg: &ClusterConfig, sys: &PrebaConfig) -> ClusterOutcome {

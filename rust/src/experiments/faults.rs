@@ -25,11 +25,10 @@
 //!    streams at a few MTBF points, recovery on — the availability
 //!    erosion curve as faults densify.
 
-use crate::config::PrebaConfig;
 use crate::fault::{FaultEvent, FaultKind, FaultSchedule, FaultSpec, RecoveryPolicy};
-use crate::mig::{PackStrategy, ServiceModel, Slice};
-use crate::models::ModelId;
-use crate::server::cluster::{self, ClusterConfig, ClusterOutcome, ClusterTenant};
+use crate::mig::ServiceModel;
+use crate::prelude::*;
+use crate::server::cluster;
 use crate::util::bench::Reporter;
 use crate::util::json::Json;
 use crate::util::table::{num, Table};
@@ -75,19 +74,22 @@ pub fn crash_schedule(horizon_s: f64) -> FaultSchedule {
 /// the recovery stack (false = the blind baseline). `pub` so the
 /// property tests and the CLI rerun the exact reported scenario.
 pub fn failover_cfg(recover: bool, horizon_s: f64, sys: &PrebaConfig) -> ClusterConfig {
-    let mut cfg = ClusterConfig::new(3, PackStrategy::BestFit, failover_tenants(horizon_s));
-    cfg.seed = 0xFA01;
-    cfg.reconfig = Some(super::cluster::policy(sys));
+    let sched = crash_schedule(horizon_s);
     // Deferral/telemetry from the first window; the crash comparison
     // must score the whole run, not a warmup-trimmed tail.
-    cfg.warmup_frac = 0.01;
-    let sched = crash_schedule(horizon_s);
-    cfg.faults = Some(if recover {
-        FaultSpec::recovering(sched, recovery_policy(sys))
-    } else {
-        FaultSpec::baseline(sched)
-    });
-    cfg
+    ClusterConfig::builder()
+        .gpus(3)
+        .strategy(PackStrategy::BestFit)
+        .tenants(failover_tenants(horizon_s))
+        .seed(0xFA01)
+        .reconfig(super::cluster::policy(sys))
+        .warmup_frac(0.01)
+        .faults(if recover {
+            FaultSpec::recovering(sched, recovery_policy(sys))
+        } else {
+            FaultSpec::baseline(sched)
+        })
+        .build()
 }
 
 /// §2: sustained ~20% load on two 5×1g tenants packed 7+3 across two
@@ -103,25 +105,28 @@ pub fn consolidation_crash_cfg(horizon_s: f64, sys: &PrebaConfig) -> ClusterConf
         t.requests = (rate * horizon_s).ceil() as usize;
         t
     };
-    let mut cfg = ClusterConfig::new(2, PackStrategy::BestFit, vec![mk(), mk()]);
-    cfg.seed = 0xFA02;
-    cfg.reconfig = Some(super::cluster::policy(sys));
-    cfg.consolidate = true;
     // Admission queues give the detect-time queue flush somewhere to put
     // requests while the parked GPU is still waking (graceful
     // degradation instead of drops).
-    cfg.admission = true;
-    cfg.warmup_frac = 0.01;
-    cfg.faults = Some(FaultSpec::recovering(
-        FaultSchedule::scripted(vec![FaultEvent {
-            at_s: 0.55 * horizon_s,
-            gpu: 0,
-            kind: FaultKind::GpuCrash,
-            duration_s: f64::INFINITY,
-        }]),
-        recovery_policy(sys),
-    ));
-    cfg
+    ClusterConfig::builder()
+        .gpus(2)
+        .strategy(PackStrategy::BestFit)
+        .tenants(vec![mk(), mk()])
+        .seed(0xFA02)
+        .reconfig(super::cluster::policy(sys))
+        .consolidate(true)
+        .admission(true)
+        .warmup_frac(0.01)
+        .faults(FaultSpec::recovering(
+            FaultSchedule::scripted(vec![FaultEvent {
+                at_s: 0.55 * horizon_s,
+                gpu: 0,
+                kind: FaultKind::GpuCrash,
+                duration_s: f64::INFINITY,
+            }]),
+            recovery_policy(sys),
+        ))
+        .build()
 }
 
 fn run_cell(cfg: &ClusterConfig, sys: &PrebaConfig) -> ClusterOutcome {

@@ -20,16 +20,13 @@
 //! stranded GPCs; demand-aware placement cuts the hot tenant's tail and
 //! violation rate versus the even split.
 
-use crate::config::PrebaConfig;
-use crate::mig::placement::{adversarial_demo, pack, PackStrategy, SliceAsk};
-use crate::mig::{MigConfig, ServiceModel, Slice};
-use crate::models::ModelId;
+use crate::mig::placement::{adversarial_demo, pack, SliceAsk};
+use crate::mig::ServiceModel;
+use crate::prelude::*;
 use crate::server::multi::{self, even_split, place_tenants, MultiConfig, TenantDemand};
-use crate::server::{PolicyKind, PreprocMode};
 use crate::util::bench::Reporter;
 use crate::util::json::Json;
 use crate::util::table::{num, Table};
-use crate::util::Rng;
 
 /// Per-tenant SLA for the DES section, ms.
 const SLA_MS: f64 = 25.0;

@@ -17,15 +17,13 @@
 //! `server::sim_driver`: a full-GPU deployment pushed past its sustained
 //! capacity is rescued by repartitioning to 1g.5gb(7x) mid-run.
 
-use crate::config::PrebaConfig;
-use crate::mig::{MigConfig, ReconfigPolicy, ServiceModel};
-use crate::models::ModelId;
+use crate::mig::ServiceModel;
+use crate::prelude::*;
 use crate::server::multi::{self, MultiConfig, MultiOutcome, Tenant};
-use crate::server::{sim_driver, PolicyKind, PreprocMode, SimConfig};
+use crate::server::sim_driver;
 use crate::util::bench::Reporter;
 use crate::util::json::Json;
 use crate::util::table::{num, Table};
-use crate::workload::RateProfile;
 
 use super::support;
 

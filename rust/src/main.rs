@@ -40,14 +40,19 @@ fn usage() -> &'static str {
                 reallocation; diurnal tenants run in anti-phase)\n\
      cluster    [--gpus N] [--fleet a100x4,a30x4] [--strategy ff|bfd|both] [--routing jsq|rr]\n\
                 [--horizon S] [--seed S] [--reconfig] [--migration S] [--repartition S]\n\
-                [--trace PATH|azure] [--rate-scale X] [--admission] [--energy] [--consolidate]\n\
-                [--faults SPEC]\n\
+                [--trace PATH|azure] [--rate-scale X] [--shards N] [--admission] [--energy]\n\
+                [--consolidate] [--faults SPEC]\n\
                 (multi-GPU DES: a diurnal tenant fleet packed onto a — possibly\n\
                 heterogeneous — GPU inventory; FF vs BFD stranded capacity, fleet\n\
                 p95/p99/SLA violations, optional online cross-GPU rebalancing.\n\
-                --trace replays recorded arrival timestamps (CSV/JSON; 'azure' =\n\
-                bundled synthetic generator) fitted to the horizon and thinned\n\
-                per tenant, --rate-scale multiplies the offered load, and\n\
+                --trace streams recorded arrival timestamps (CSV/JSON read in\n\
+                bounded-memory chunks; 'azure' = bundled synthetic generator)\n\
+                fitted to the horizon and thinned per tenant — arrivals are\n\
+                pulled lazily, so million-row trace days replay without being\n\
+                materialized. --shards overrides event-heap sharding (0 = auto:\n\
+                one shard per tenant↔GPU residency component; 1 = single global\n\
+                heap; N = round-robin cap) — outcomes are byte-identical at any\n\
+                setting. --rate-scale multiplies the offered load, and\n\
                 --admission parks rejected\n\
                 tenants' traffic in a pending queue the controller re-packs\n\
                 instead of dropping it — implies --reconfig. --energy adds the\n\
@@ -400,7 +405,7 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     use preba::fault::{FaultSchedule, FaultSpec};
     use preba::mig::{GpuClass, PackStrategy};
     use preba::server::cluster::{self, ClusterConfig, Routing};
-    use preba::workload::ReplayTrace;
+    use preba::workload::StreamSpec;
 
     let fleet: Vec<GpuClass> = match args.opt("fleet") {
         Some(spec) => sys.cluster.parse_fleet(spec)?,
@@ -417,6 +422,10 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     let horizon_s = args.opt_f64("horizon", sys.cluster.horizon_s)?;
     anyhow::ensure!(horizon_s > 0.0, "--horizon must be positive");
     let seed = args.opt_u64("seed", 0xC1A0)?;
+    // Event-heap sharding: 0 = auto (per residency component), 1 = the
+    // single global heap, N = round-robin cap. Byte-identical outcomes
+    // at every setting — this is a performance knob, not a semantic one.
+    let shards = args.opt_u64("shards", sys.cluster.shards as u64)? as usize;
     let routing_s = args.opt_or("routing", "jsq");
     let routing = Routing::parse(routing_s)
         .ok_or_else(|| anyhow::anyhow!("unknown --routing '{routing_s}' (jsq|rr)"))?;
@@ -462,40 +471,40 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
         None
     };
 
-    // Recorded-trace replay. The recorded timeline is first fitted onto
-    // the simulated horizon (every tenant replays the SAME span, so the
-    // cross-tenant burst/diurnal alignment survives), then per-tenant
-    // THINNED toward that tenant's mean rate (× --rate-scale) without
-    // re-timing the surviving arrivals. Thinning cannot invent traffic:
-    // a tenant asking more than the recorded density replays the full
-    // trace.
+    // Recorded-trace replay, streamed: each tenant carries a cloneable
+    // [`StreamSpec`] and the DES pulls arrivals lazily, so a million-row
+    // trace day replays in bounded memory. The recorded timeline is
+    // first fitted onto the simulated horizon (every tenant replays the
+    // SAME span, so the cross-tenant burst/diurnal alignment survives),
+    // then per-tenant THINNED toward that tenant's mean rate
+    // (× --rate-scale) without re-timing the surviving arrivals.
+    // Thinning cannot invent traffic: a tenant asking more than the
+    // recorded density replays the full trace.
     let rate_scale = args.opt_f64("rate-scale", 1.0)?;
     anyhow::ensure!(rate_scale > 0.0, "--rate-scale must be positive");
     let mut tenants = diurnal_fleet(n_gpus, horizon_s);
-    let trace = match args.opt("trace") {
-        None => None,
-        Some(spec) => {
-            // Dense enough that per-tenant thinning can hit every
-            // tenant's target rate.
-            let max_qps =
-                tenants.iter().map(|t| t.rate_qps).fold(0.0f64, f64::max) * rate_scale;
-            let raw = match spec {
-                "azure" => ReplayTrace::synth_azure(seed ^ 0xA27E, horizon_s, max_qps),
-                path => ReplayTrace::load(path)?,
-            };
-            Some(raw.scaled_to_duration(horizon_s))
+    let trace = args.opt("trace").map(|spec| {
+        // Dense enough that per-tenant thinning can hit every tenant's
+        // target rate.
+        let max_qps = tenants.iter().map(|t| t.rate_qps).fold(0.0f64, f64::max) * rate_scale;
+        match spec {
+            "azure" => StreamSpec::azure(seed ^ 0xA27E, horizon_s, max_qps),
+            path => StreamSpec::file(path),
         }
-    };
-    if let Some(trace) = &trace {
+    });
+    if let Some(base) = &trace {
         tenants = tenants
             .into_iter()
             .enumerate()
             .map(|(ti, t)| {
                 let qps = t.rate_qps * rate_scale;
-                let thinned = trace.thinned_to_qps(qps, seed ^ (0x7ACE_0000 + ti as u64));
-                t.with_trace(thinned)
+                let spec = base
+                    .clone()
+                    .fit_duration(horizon_s)
+                    .thin_to_qps(qps, seed ^ (0x7ACE_0000 + ti as u64));
+                t.with_stream(spec)
             })
-            .collect();
+            .collect::<anyhow::Result<_>>()?;
     }
     let total_reqs: usize = tenants.iter().map(|t| t.requests).sum();
     let fleet_desc = fleet.iter().map(|c| c.name).collect::<Vec<_>>().join(",");
@@ -549,13 +558,18 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
                 if f.recovery.is_some() { "recovery" } else { "baseline" }
             ),
         };
-        let mut cfg = ClusterConfig::with_fleet(fleet.clone(), strategy, tenants.clone());
-        cfg.routing = routing;
-        cfg.seed = seed;
+        let mut cfg = ClusterConfig::builder()
+            .fleet(fleet.clone())
+            .strategy(strategy)
+            .tenants(tenants.clone())
+            .routing(routing)
+            .seed(seed)
+            .admission(admission)
+            .consolidate(consolidate)
+            .build();
         cfg.reconfig = reconfig.clone();
-        cfg.admission = admission;
-        cfg.consolidate = consolidate;
         cfg.faults = faults;
+        cfg.shards = (shards != 0).then_some(shards);
         let out = cluster::run(&cfg, sys)?;
         let mut row = vec![
             label.clone(),

@@ -1,0 +1,31 @@
+//! One-line import surface for the crate's most-used types.
+//!
+//! Scripts, examples and experiments keep reaching for the same ~15
+//! names (config, fleet/tenant description, the workload sources and the
+//! outcome types); `use preba::prelude::*` pulls them in without a wall
+//! of `use` lines. Functions stay on their module paths
+//! (`server::cluster::run`, `server::sim_driver::run`) — the prelude
+//! re-exports *types and traits* only, so glob-importing it cannot
+//! shadow local fn names.
+//!
+//! ```
+//! use preba::prelude::*;
+//!
+//! let tenant = ClusterTenant::new(ModelId::MobileNet, Slice::new(1, 5), 1, 50.0);
+//! let cfg = ClusterConfig::builder().gpus(1).tenants(vec![tenant]).build();
+//! assert_eq!(cfg.fleet, vec![GpuClass::A100]);
+//! assert!(matches!(cfg.routing, Routing::ShortestQueue));
+//! ```
+
+pub use crate::config::PrebaConfig;
+pub use crate::mig::{GpuClass, MigConfig, PackStrategy, ReconfigPolicy, Slice};
+pub use crate::models::ModelId;
+pub use crate::server::cluster::{
+    ClusterConfig, ClusterConfigBuilder, ClusterOutcome, ClusterTenant, Routing,
+};
+pub use crate::server::{PolicyKind, PreprocMode, SimConfig, SimOutcome};
+pub use crate::util::Rng;
+pub use crate::workload::{
+    Arrival, ArrivalStream, Bounded, QueryGen, RateProfile, ReplayTrace, Rescale, StreamSpec,
+    TraceGen,
+};

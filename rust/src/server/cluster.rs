@@ -48,7 +48,11 @@ use crate::models::{ModelId, ModelKind, ModelSpec};
 use crate::preprocess::CpuPool;
 use crate::sim::EventQueue;
 use crate::util::Rng;
-use crate::workload::{QueryGen, RateProfile, ReplayTrace, TraceGen};
+use crate::workload::{
+    Arrival, ArrivalStream, Bounded, QueryGen, RateProfile, ReplayTrace, StreamSpec, TraceGen,
+};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use super::{PolicyKind, PreprocMode};
 
@@ -98,6 +102,10 @@ pub struct ClusterTenant {
     /// trace's timestamps verbatim (`profile` is ignored and `requests`
     /// is the trace length).
     pub trace: Option<ReplayTrace>,
+    /// Lazily-pulled arrival source ([`StreamSpec`]): the DES pulls
+    /// arrivals through the [`ArrivalStream`] seam without materializing
+    /// the trace. Takes precedence over `trace` and `profile`.
+    pub stream: Option<StreamSpec>,
     /// Arrivals to generate for this tenant.
     pub requests: usize,
 }
@@ -112,6 +120,7 @@ impl ClusterTenant {
             sla_ms: 50.0,
             profile: None,
             trace: None,
+            stream: None,
             requests: 4000,
         }
     }
@@ -124,8 +133,27 @@ impl ClusterTenant {
         self.requests = trace.len();
         self.rate_qps = trace.mean_qps();
         self.profile = None;
+        self.stream = None;
         self.trace = Some(trace);
         self
+    }
+
+    /// Drive this tenant from a lazily-pulled arrival stream. The spec
+    /// is probed once (a streaming counting pass, nothing materialized)
+    /// so `requests` and `rate_qps` reflect the stream exactly; the DES
+    /// then pulls arrivals through the [`ArrivalStream`] seam with a
+    /// bounded memory footprint however long the trace is. Fails when a
+    /// file-backed source cannot be read or fails validation.
+    pub fn with_stream(mut self, spec: StreamSpec) -> anyhow::Result<ClusterTenant> {
+        let probe = spec.probe()?;
+        self.requests = probe.requests;
+        if probe.mean_qps > 0.0 {
+            self.rate_qps = probe.mean_qps;
+        }
+        self.profile = None;
+        self.trace = None;
+        self.stream = Some(spec);
+        Ok(self)
     }
 
     /// Replica count sized by the reconfig controller's own rule
@@ -182,15 +210,21 @@ pub struct ClusterConfig {
     /// Recovery requires `reconfig` — failover re-packs displaced
     /// tenants through the controller's admission seam.
     pub faults: Option<FaultSpec>,
+    /// Event-heap sharding. `None` (default) = one shard per connected
+    /// component of the tenant↔GPU residency graph; `Some(1)` = a single
+    /// global heap; `Some(k)` = merge components round-robin into at
+    /// most `k` shards. Outcomes are byte-identical across every
+    /// setting and every `util::par` worker count. Controller-coupled
+    /// runs (reconfig/admission/consolidation/faults) always collapse to
+    /// one heap — see [`run`].
+    pub shards: Option<usize>,
 }
 
 impl ClusterConfig {
-    /// Homogeneous pool: `n_gpus` A100s.
-    pub fn new(n_gpus: usize, strategy: PackStrategy, tenants: Vec<ClusterTenant>) -> Self {
-        Self::with_fleet(vec![GpuClass::A100; n_gpus], strategy, tenants)
-    }
-
-    /// Heterogeneous inventory: one [`GpuClass`] per GPU.
+    /// Fluent constructor. Defaults: best-fit-decreasing packing,
+    /// join-shortest-queue routing, ideal preprocessing, the dynamic
+    /// batching policy, seed `0xC105`, 5% warmup, no controller
+    /// features, auto sharding.
     ///
     /// ```
     /// use preba::mig::{GpuClass, PackStrategy, Slice};
@@ -198,33 +232,48 @@ impl ClusterConfig {
     /// use preba::server::cluster::{ClusterConfig, ClusterTenant};
     ///
     /// let t = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), 2, 40.0);
-    /// let cfg = ClusterConfig::with_fleet(
-    ///     vec![GpuClass::A100, GpuClass::A30],
-    ///     PackStrategy::BestFit,
-    ///     vec![t],
-    /// );
+    /// let cfg = ClusterConfig::builder()
+    ///     .fleet(vec![GpuClass::A100, GpuClass::A30])
+    ///     .strategy(PackStrategy::BestFit)
+    ///     .tenants(vec![t])
+    ///     .build();
     /// assert_eq!(cfg.n_gpus(), 2);
     /// assert!(cfg.validate().is_ok());
     /// ```
+    pub fn builder() -> ClusterConfigBuilder {
+        ClusterConfigBuilder {
+            cfg: ClusterConfig {
+                fleet: Vec::new(),
+                strategy: PackStrategy::BestFit,
+                routing: Routing::ShortestQueue,
+                tenants: Vec::new(),
+                preproc: PreprocMode::Ideal,
+                policy: PolicyKind::Dynamic,
+                seed: 0xC105,
+                warmup_frac: 0.05,
+                reconfig: None,
+                admission: false,
+                consolidate: false,
+                faults: None,
+                shards: None,
+            },
+        }
+    }
+
+    /// Homogeneous pool: `n_gpus` A100s.
+    #[deprecated(note = "use ClusterConfig::builder().gpus(n).strategy(s).tenants(t).build()")]
+    pub fn new(n_gpus: usize, strategy: PackStrategy, tenants: Vec<ClusterTenant>) -> Self {
+        ClusterConfig::builder().gpus(n_gpus).strategy(strategy).tenants(tenants).build()
+    }
+
+    /// Heterogeneous inventory: one [`GpuClass`] per GPU.
+    #[deprecated(note = "use ClusterConfig::builder().fleet(f).strategy(s).tenants(t).build()")]
     pub fn with_fleet(
         fleet: Vec<GpuClass>,
         strategy: PackStrategy,
         tenants: Vec<ClusterTenant>,
     ) -> Self {
-        ClusterConfig {
-            fleet,
-            strategy,
-            routing: Routing::ShortestQueue,
-            tenants,
-            preproc: PreprocMode::Ideal,
-            policy: PolicyKind::Dynamic,
-            seed: 0xC105,
-            warmup_frac: 0.05,
-            reconfig: None,
-            admission: false,
-            consolidate: false,
-            faults: None,
-        }
+        ClusterConfig::builder().fleet(fleet).strategy(strategy).tenants(tenants).build()
     }
 
     /// GPUs in the inventory.
@@ -256,6 +305,9 @@ impl ClusterConfig {
         for g in &self.fleet {
             anyhow::ensure!(g.gpcs >= 1 && g.mem_gb >= 1, "degenerate GPU class {g}");
         }
+        if let Some(k) = self.shards {
+            anyhow::ensure!(k >= 1, "shards = 0 is meaningless; use None for auto");
+        }
         for t in &self.tenants {
             let name = t.slice.name();
             anyhow::ensure!(t.slice.is_legal(), "{}: illegal profile {name}", t.model);
@@ -285,6 +337,103 @@ impl ClusterConfig {
             }
         }
         out
+    }
+}
+
+/// Fluent [`ClusterConfig`] constructor ([`ClusterConfig::builder`]).
+/// Every knob has a sensible default, so a minimal cluster is
+/// `ClusterConfig::builder().gpus(2).tenants(ts).build()`.
+#[derive(Debug, Clone)]
+pub struct ClusterConfigBuilder {
+    cfg: ClusterConfig,
+}
+
+impl ClusterConfigBuilder {
+    /// Homogeneous inventory: `n` A100s (shorthand for [`Self::fleet`]).
+    pub fn gpus(mut self, n: usize) -> Self {
+        self.cfg.fleet = vec![GpuClass::A100; n];
+        self
+    }
+
+    /// Heterogeneous inventory: one [`GpuClass`] per GPU.
+    pub fn fleet(mut self, fleet: Vec<GpuClass>) -> Self {
+        self.cfg.fleet = fleet;
+        self
+    }
+
+    pub fn strategy(mut self, strategy: PackStrategy) -> Self {
+        self.cfg.strategy = strategy;
+        self
+    }
+
+    pub fn routing(mut self, routing: Routing) -> Self {
+        self.cfg.routing = routing;
+        self
+    }
+
+    /// Replace the tenant list.
+    pub fn tenants(mut self, tenants: Vec<ClusterTenant>) -> Self {
+        self.cfg.tenants = tenants;
+        self
+    }
+
+    /// Append one tenant.
+    pub fn tenant(mut self, tenant: ClusterTenant) -> Self {
+        self.cfg.tenants.push(tenant);
+        self
+    }
+
+    pub fn preproc(mut self, preproc: PreprocMode) -> Self {
+        self.cfg.preproc = preproc;
+        self
+    }
+
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn warmup_frac(mut self, warmup_frac: f64) -> Self {
+        self.cfg.warmup_frac = warmup_frac;
+        self
+    }
+
+    /// Enable online cross-GPU rebalancing under `policy`.
+    pub fn reconfig(mut self, policy: ReconfigPolicy) -> Self {
+        self.cfg.reconfig = Some(policy);
+        self
+    }
+
+    pub fn admission(mut self, admission: bool) -> Self {
+        self.cfg.admission = admission;
+        self
+    }
+
+    pub fn consolidate(mut self, consolidate: bool) -> Self {
+        self.cfg.consolidate = consolidate;
+        self
+    }
+
+    pub fn faults(mut self, faults: FaultSpec) -> Self {
+        self.cfg.faults = Some(faults);
+        self
+    }
+
+    /// Event-heap shard count ([`ClusterConfig::shards`]): `1` forces a
+    /// single global heap, `k > 1` caps the shard count. The default
+    /// (unset) shards per connected component.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.cfg.shards = Some(shards);
+        self
+    }
+
+    pub fn build(self) -> ClusterConfig {
+        self.cfg
     }
 }
 
@@ -436,9 +585,12 @@ impl ClusterOutcome {
     }
 }
 
+/// Runtime events. Arrivals are NOT events: the driver loop injects them
+/// lazily from the per-tenant [`ArrivalStream`] sources whenever the next
+/// arrival precedes (or ties) the heap's next scheduled event, so the
+/// heap never holds a materialized workload.
 #[derive(Debug, Clone, Copy)]
 enum Ev {
-    Arrival { tenant: usize, idx: usize },
     PreprocDone { tenant: usize, idx: usize },
     BatchTick { group: usize },
     ExecDone { group: usize, batch_idx: usize },
@@ -482,6 +634,11 @@ struct Group {
     /// Accumulated per-slice execution time (the energy integral's
     /// active-GPC numerator; × the tenant's GPCs-per-slice at the end).
     busy_ns: u128,
+    /// Execution-jitter stream, derived from the group's GLOBAL
+    /// (GPU, tenant) identity ([`group_exec_rng`]) so jitter draws are a
+    /// pure function of the group — identical however the fleet is
+    /// sharded across event heaps.
+    exec: Rng,
     /// The group's GPU has crashed: dispatch stops, but `slice_free`
     /// survives until detection (or repair) so blind routing keeps
     /// feeding the dead group — the detection-latency window is real.
@@ -741,7 +898,6 @@ fn dispatch_ready(
     groups: &mut [Group],
     tenants: &[TenantState],
     q: &mut EventQueue<Ev>,
-    exec_rng: &mut Rng,
     slow: &[f64],
 ) {
     let grp = &mut groups[gi];
@@ -761,7 +917,7 @@ fn dispatch_ready(
         let start = now.max(free);
         let padded = padded_len(&ts.buckets, &batch);
         let exec =
-            secs(ts.sm.exec_secs_jittered(batch.size(), padded, exec_rng) * slow);
+            secs(ts.sm.exec_secs_jittered(batch.size(), padded, &mut grp.exec) * slow);
         let done = start + exec;
         grp.slice_free[slot] = done;
         grp.busy_ns += exec as u128;
@@ -914,6 +1070,10 @@ fn ensure_group(
         outstanding: 0,
         armed_tick: None,
         busy_ns: 0,
+        // Late-admission groups only arise under the coupled policies
+        // (reconfig/admission/consolidation), which always run as a
+        // single identity shard, so local ids here ARE global ids.
+        exec: group_exec_rng(cfg.seed, gpu, ti),
         failed: false,
     });
     groups.len() - 1
@@ -934,7 +1094,6 @@ fn grant_slice(
     group_of: &mut [Vec<Option<usize>>],
     tenants: &mut [TenantState],
     q: &mut EventQueue<Ev>,
-    exec_rng: &mut Rng,
     slow: &[f64],
 ) {
     let gi = ensure_group(ti, gpu, cfg, sys, groups, group_of, tenants);
@@ -943,22 +1102,212 @@ fn grant_slice(
     let ts = &tenants[ti];
     let new_policy = build_policy(cfg.policy, sys, ts.spec, &ts.sm, &ts.buckets, n);
     groups[gi].batcher.rebuild(new_policy, now);
-    dispatch_ready(gi, now, groups, tenants, q, exec_rng, slow);
+    dispatch_ready(gi, now, groups, tenants, q, slow);
     arm_tick(gi, now, groups, q);
 }
 
+/// A shard of the fleet: the subset of global GPU / tenant indices one
+/// event heap simulates. Local index `g` in a shard's state maps to
+/// global GPU `gpu_ids[g]` (same for tenants), and every derived rng
+/// stream is keyed by the GLOBAL id, so shard outputs are a pure
+/// function of the global configuration — bitwise identical however the
+/// fleet is cut.
+struct ShardCtx {
+    n_gpus_global: usize,
+    gpu_ids: Vec<usize>,
+    tenant_ids: Vec<usize>,
+}
+
+impl ShardCtx {
+    fn identity(n_gpus: usize, n_tenants: usize) -> ShardCtx {
+        ShardCtx {
+            n_gpus_global: n_gpus,
+            gpu_ids: (0..n_gpus).collect(),
+            tenant_ids: (0..n_tenants).collect(),
+        }
+    }
+
+    fn is_identity(&self, cfg: &ClusterConfig) -> bool {
+        self.gpu_ids.len() == cfg.n_gpus() && self.tenant_ids.len() == cfg.tenants.len()
+    }
+}
+
+/// Replay the single-heap setup's root-rng draw order: burn `nth` draws
+/// off the root (exec draw #0, then one per CPU pool, then one per
+/// tenant), then split with `tag`. Every shard reconstructs exactly the
+/// pool / arrival stream the legacy eager setup handed that global
+/// index, without owning the root.
+fn derived_rng(seed: u64, nth: usize, tag: u64) -> Rng {
+    let mut root = Rng::new(seed ^ 0xC1A5);
+    for _ in 0..nth {
+        root.next_u64();
+    }
+    root.split(tag)
+}
+
+/// Execution-jitter stream for serving group (GPU, tenant), keyed by the
+/// GLOBAL ids so the draws a group sees do not depend on which shard —
+/// or which event heap — it runs in.
+fn group_exec_rng(seed: u64, gpu: usize, tenant: usize) -> Rng {
+    let mut r = Rng::new(seed ^ 0xE8EC_C1A5);
+    r.split(((gpu as u64) << 32) ^ tenant as u64)
+}
+
+/// Union-find root with path halving.
+fn uf_find(parent: &mut [usize], mut x: usize) -> usize {
+    while parent[x] != x {
+        parent[x] = parent[parent[x]];
+        x = parent[x];
+    }
+    x
+}
+
+/// Cut the fleet into independently-simulable shards.
+///
+/// The cluster-wide couplers — rebalancing, admission control,
+/// consolidation, fault injection — entangle every GPU through the
+/// controller, so any of them (or an explicit `shards = 1`) forces one
+/// identity shard. Otherwise GPUs and tenants form a bipartite graph
+/// (an edge per admitted slice) whose connected components share no
+/// state at all: each becomes a shard, a capacity-less tenant becomes a
+/// GPU-less singleton (its requests all drop), and a tenant-less GPU
+/// joins no shard (`finalize` charges it idle energy). An explicit
+/// `shards = k` bound merges components round-robin into at most `k`
+/// shards; merged lists are re-sorted ascending so local index order —
+/// and with it every routing tie-break — matches any other shard count.
+fn partition(cfg: &ClusterConfig, alloc: &[Vec<usize>]) -> Vec<ShardCtx> {
+    let ng = cfg.n_gpus();
+    let nt = cfg.tenants.len();
+    let coupled = cfg.reconfig.is_some()
+        || cfg.admission
+        || cfg.consolidate
+        || cfg.faults.as_ref().is_some_and(|f| !f.schedule.events.is_empty());
+    if coupled || cfg.shards == Some(1) {
+        return vec![ShardCtx::identity(ng, nt)];
+    }
+    // Tenants are nodes [0, nt), GPUs are nodes [nt, nt + ng).
+    let mut parent: Vec<usize> = (0..nt + ng).collect();
+    for (g, row) in alloc.iter().enumerate() {
+        for (ti, &n) in row.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let a = uf_find(&mut parent, ti);
+            let b = uf_find(&mut parent, nt + g);
+            let (lo, hi) = (a.min(b), a.max(b));
+            parent[hi] = lo;
+        }
+    }
+    // Components indexed in smallest-member-tenant order (deterministic:
+    // no hash maps anywhere near the partition).
+    let mut comp_of_root: Vec<Option<usize>> = vec![None; nt + ng];
+    let mut comps: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
+    for ti in 0..nt {
+        let r = uf_find(&mut parent, ti);
+        let c = match comp_of_root[r] {
+            Some(c) => c,
+            None => {
+                comps.push((Vec::new(), Vec::new()));
+                comp_of_root[r] = Some(comps.len() - 1);
+                comps.len() - 1
+            }
+        };
+        comps[c].0.push(ti);
+    }
+    for g in 0..ng {
+        let r = uf_find(&mut parent, nt + g);
+        // A tenant-less GPU has no component: no shard simulates it and
+        // `finalize` accounts it as idle for the whole horizon.
+        if let Some(c) = comp_of_root[r] {
+            comps[c].1.push(g);
+        }
+    }
+    if let Some(k) = cfg.shards {
+        if comps.len() > k {
+            let mut buckets: Vec<(Vec<usize>, Vec<usize>)> =
+                vec![(Vec::new(), Vec::new()); k];
+            for (i, (ts, gs)) in comps.into_iter().enumerate() {
+                buckets[i % k].0.extend(ts);
+                buckets[i % k].1.extend(gs);
+            }
+            for b in &mut buckets {
+                b.0.sort_unstable();
+                b.1.sort_unstable();
+            }
+            comps = buckets;
+        }
+    }
+    comps
+        .into_iter()
+        .map(|(tenant_ids, gpu_ids)| ShardCtx { n_gpus_global: ng, gpu_ids, tenant_ids })
+        .collect()
+}
+
 /// Run one cluster simulation.
+///
+/// The fleet is packed globally, cut into shards ([`partition`]), and
+/// each shard runs its own event heap on the worker pool
+/// ([`crate::util::par::run_jobs`]); [`finalize`] merges the shard
+/// outputs into one [`ClusterOutcome`]. Results are bitwise identical
+/// for every worker count and every shard count.
 pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutcome> {
     cfg.validate()?;
-    let mut root = Rng::new(cfg.seed ^ 0xC1A5);
-    let mut exec_rng = root.split(2);
 
+    // Place the slice inventory (each GPU offers its own class capacity).
+    let packing = pack_fleet(&cfg.asks(), &cfg.fleet, cfg.strategy);
+    let mut alloc: Vec<Vec<usize>> = vec![vec![0; cfg.tenants.len()]; cfg.n_gpus()];
+    for (ask, gpu) in &packing.placements {
+        alloc[*gpu][ask.tenant] += 1;
+    }
+    // Admission control: rejected asks wait and are re-offered to the
+    // controller every telemetry window (identity shard only — admission
+    // is a coupler).
+    let pending: Vec<SliceAsk> =
+        if cfg.admission { packing.rejected.clone() } else { Vec::new() };
+
+    let parts = partition(cfg, &alloc);
+    let results = crate::util::par::run_jobs(parts.len(), |p| {
+        let ctx = &parts[p];
+        if ctx.is_identity(cfg) {
+            run_inner(cfg, sys, ctx, alloc.clone(), pending.clone())
+        } else {
+            // Restrict the config to the shard's slice of the fleet; the
+            // ctx keeps the global ids every rng derivation needs.
+            let mut local = cfg.clone();
+            local.fleet = ctx.gpu_ids.iter().map(|&g| cfg.fleet[g]).collect();
+            local.tenants =
+                ctx.tenant_ids.iter().map(|&ti| cfg.tenants[ti].clone()).collect();
+            let alloc_local: Vec<Vec<usize>> = ctx
+                .gpu_ids
+                .iter()
+                .map(|&g| ctx.tenant_ids.iter().map(|&ti| alloc[g][ti]).collect())
+                .collect();
+            run_inner(&local, sys, ctx, alloc_local, Vec::new())
+        }
+    });
+    let outs = results.into_iter().collect::<anyhow::Result<Vec<PartOut>>>()?;
+    Ok(finalize(cfg, sys, packing, alloc, &parts, outs))
+}
+
+/// Simulate one shard. `cfg` is already restricted to the shard
+/// (fleet/tenants local-indexed); `ctx` maps local indices back to
+/// global ids so every derived rng replays exactly the stream the
+/// single-heap run would hand the same GPU / tenant / group.
+fn run_inner(
+    cfg: &ClusterConfig,
+    sys: &PrebaConfig,
+    ctx: &ShardCtx,
+    alloc: Vec<Vec<usize>>,
+    mut pending: Vec<SliceAsk>,
+) -> anyhow::Result<PartOut> {
     // Per-GPU preprocessing resources. The split tag lives in its own
     // namespace so pool streams can never collide with the per-tenant
     // arrival streams (`100 + ti`) at any fleet size.
     let usable = sys.hardware.cpu_cores - sys.hardware.cpu_reserved_cores;
-    let mut cpu_pools: Vec<CpuPool> = (0..cfg.n_gpus())
-        .map(|g| CpuPool::new(usable, root.split(0x9AD5_0000 + g as u64)))
+    let mut cpu_pools: Vec<CpuPool> = ctx
+        .gpu_ids
+        .iter()
+        .map(|&gg| CpuPool::new(usable, derived_rng(cfg.seed, 1 + gg, 0x9AD5_0000 + gg as u64)))
         .collect();
     let mut dpus: Vec<Option<Dpu>> = (0..cfg.n_gpus())
         .map(|_| match cfg.preproc {
@@ -967,21 +1316,15 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
         })
         .collect();
 
-    // Place the slice inventory (each GPU offers its own class capacity).
-    let packing = pack_fleet(&cfg.asks(), &cfg.fleet, cfg.strategy);
-    let mut alloc: Vec<Vec<usize>> = vec![vec![0; cfg.tenants.len()]; cfg.n_gpus()];
-    for (ask, gpu) in &packing.placements {
-        alloc[*gpu][ask.tenant] += 1;
-    }
-    // Admission control: rejected asks wait here and are re-offered to
-    // the controller every telemetry window.
-    let mut pending: Vec<SliceAsk> =
-        if cfg.admission { packing.rejected.clone() } else { Vec::new() };
     let mut late_admissions = 0u64;
 
-    // Tenant state + workloads.
-    let mut q: EventQueue<Ev> = EventQueue::new();
+    // Tenant state + lazily-pulled workloads: each tenant exposes one
+    // bounded [`ArrivalStream`]; the driver loop below injects from it
+    // and nothing is materialized up front.
+    let mut queue: EventQueue<Ev> = EventQueue::with_capacity(64);
     let mut tenants: Vec<TenantState> = Vec::with_capacity(cfg.tenants.len());
+    let mut sources: Vec<Bounded<Box<dyn ArrivalStream>>> =
+        Vec::with_capacity(cfg.tenants.len());
     for (ti, t) in cfg.tenants.iter().enumerate() {
         let spec = t.model.spec();
         let sm = ServiceModel::new(spec, t.slice.gpcs);
@@ -991,36 +1334,27 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
             }
             _ => Bucketizer::fixed(),
         };
-        let mut gen_rng = root.split(100 + ti as u64);
-        let arrivals: Vec<(Nanos, f64)> = match (&t.trace, &t.profile) {
-            (Some(trace), _) => trace
-                .arrivals(t.model, &mut gen_rng)
-                .into_iter()
-                .map(|a| (a.at, a.len_s))
-                .collect(),
-            (None, None) => QueryGen::new(t.model, t.rate_qps, gen_rng)
-                .take(t.requests)
-                .into_iter()
-                .map(|a| (a.at, a.len_s))
-                .collect(),
-            (None, Some(profile)) => TraceGen::new(t.model, profile.clone(), gen_rng)
-                .take(t.requests)
-                .into_iter()
-                .map(|a| (a.at, a.len_s))
-                .collect(),
+        let tg = ctx.tenant_ids[ti];
+        let gen_rng = derived_rng(cfg.seed, 1 + ctx.n_gpus_global + tg, 100 + tg as u64);
+        let src: Box<dyn ArrivalStream> = if let Some(sspec) = &t.stream {
+            sspec.open(t.model, gen_rng)?
+        } else if let Some(trace) = &t.trace {
+            Box::new(trace.cursor(t.model, gen_rng))
+        } else if let Some(profile) = &t.profile {
+            Box::new(TraceGen::new(t.model, profile.clone(), gen_rng))
+        } else {
+            Box::new(QueryGen::new(t.model, t.rate_qps, gen_rng))
         };
-        for (i, &(at, _)) in arrivals.iter().enumerate() {
-            q.schedule(at, Ev::Arrival { tenant: ti, idx: i });
-        }
+        sources.push(Bounded::new(src, t.requests));
         tenants.push(TenantState {
             spec,
             sm,
             buckets,
-            preproc_done: vec![0; arrivals.len()],
-            routed: vec![usize::MAX; arrivals.len()],
-            was_deferred: vec![false; arrivals.len()],
-            state: vec![ReqState::Pending; arrivals.len()],
-            arrivals,
+            preproc_done: Vec::new(),
+            routed: Vec::new(),
+            was_deferred: Vec::new(),
+            state: Vec::new(),
+            arrivals: Vec::new(),
             route: Vec::new(),
             rr_cursor: 0,
             stats: RunStats::new(),
@@ -1035,6 +1369,20 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
             hedges: 0,
             served_degraded: 0,
         });
+    }
+
+    // Injection frontier: the earliest pending arrival per tenant,
+    // ordered (time, tenant) so simultaneous arrivals inject
+    // lowest-tenant first — the same order the eager setup's tenant-major
+    // `schedule()` seqs produced.
+    let mut peeked: Vec<Option<Arrival>> = Vec::with_capacity(sources.len());
+    let mut front: BinaryHeap<Reverse<(Nanos, usize)>> = BinaryHeap::new();
+    for (ti, s) in sources.iter_mut().enumerate() {
+        let a = s.next_arrival();
+        if let Some(a) = &a {
+            front.push(Reverse((a.at, ti)));
+        }
+        peeked.push(a);
     }
 
     // Serving groups, one per (GPU, tenant) with admitted slices, in
@@ -1068,6 +1416,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                 outstanding: 0,
                 armed_tick: None,
                 busy_ns: 0,
+                exec: group_exec_rng(cfg.seed, ctx.gpu_ids[g], ctx.tenant_ids[ti]),
                 failed: false,
             });
         }
@@ -1090,7 +1439,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
     // Per-GPU power timeline (consolidation's idle-power elision).
     let mut power = GpuPower::new(cfg.n_gpus());
     if let Some(c) = &ctrl {
-        q.schedule(c.window(), Ev::ReconfigCheck);
+        queue.schedule(c.window(), Ev::ReconfigCheck);
     }
 
     // Fault injection: the whole schedule enters the heap up front; the
@@ -1099,35 +1448,63 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
     let recovery = fspec.recovery;
     let mut frt = FaultRt::new(cfg.n_gpus(), &fspec.schedule);
     for (k, e) in fspec.schedule.events.iter().enumerate() {
-        q.schedule(secs(e.at_s), Ev::Fault { fault: k });
+        queue.schedule(secs(e.at_s), Ev::Fault { fault: k });
     }
 
-    let total_arrivals: usize = cfg.tenants.iter().map(|t| t.requests).sum();
-    let mut arrivals_seen = 0usize;
     let mut downtime: Nanos = 0;
     let mut horizon: Nanos = 0;
-    let events = crate::sim::run(&mut q, u64::MAX, |now, ev, q| {
-        match ev {
-            Ev::Arrival { tenant, idx } => {
-                arrivals_seen += 1;
-                if let Some(c) = ctrl.as_mut() {
-                    c.observe_arrival(tenant);
-                }
-                if start_request(
-                    tenant, idx, now, cfg, &mut groups, &mut tenants, &mut cpu_pools,
-                    &mut dpus, q, &frt.preproc_until,
-                ) {
-                    if let Some(p) = recovery {
-                        if p.hedge_s > 0.0 {
-                            q.schedule_in(secs(p.hedge_s), Ev::Hedge { tenant, idx });
-                        }
-                    }
-                } else if cfg.admission {
-                    tenants[tenant].defer_request(idx);
-                } else {
-                    tenants[tenant].drop_request(idx);
-                }
+    let mut events: u64 = 0;
+    // Driver: interleave lazy arrival injection with heap pops. An
+    // arrival injects whenever it precedes — or ties — the next
+    // scheduled event; ties go to the arrival, matching the eager setup
+    // where every arrival's `schedule()` seq was smaller than any
+    // runtime event's. Each injection advances virtual time and runs the
+    // arrival logic inline, so the heap never holds the workload.
+    let q = &mut queue;
+    loop {
+        while let Some(&Reverse((at, ti))) = front.peek() {
+            if q.peek_time().is_some_and(|t| at > t) {
+                break;
             }
+            front.pop();
+            let a = peeked[ti].take().expect("frontier entry without peeked arrival");
+            if let Some(next) = sources[ti].next_arrival() {
+                front.push(Reverse((next.at, ti)));
+                peeked[ti] = Some(next);
+            }
+            q.advance_to(at);
+            events += 1;
+            let now = at;
+            let ts = &mut tenants[ti];
+            let idx = ts.arrivals.len();
+            ts.arrivals.push((a.at, a.len_s));
+            ts.preproc_done.push(0);
+            ts.routed.push(usize::MAX);
+            ts.was_deferred.push(false);
+            ts.state.push(ReqState::Pending);
+            if let Some(c) = ctrl.as_mut() {
+                c.observe_arrival(ti);
+            }
+            if start_request(
+                ti, idx, now, cfg, &mut groups, &mut tenants, &mut cpu_pools, &mut dpus,
+                q, &frt.preproc_until,
+            ) {
+                if let Some(p) = recovery {
+                    if p.hedge_s > 0.0 {
+                        q.schedule_in(secs(p.hedge_s), Ev::Hedge { tenant: ti, idx });
+                    }
+                }
+            } else if cfg.admission {
+                tenants[ti].defer_request(idx);
+            } else {
+                tenants[ti].drop_request(idx);
+            }
+        }
+        let Some((now, ev)) = q.pop() else {
+            break;
+        };
+        events += 1;
+        match ev {
             Ev::Readmit => {
                 // Drain the admission queues into newly-live capacity
                 // weighted-round-robin: weights are the backlog depths,
@@ -1189,11 +1566,11 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                             // as a resubmission would) once capacity
                             // returns.
                             tenants[tenant].defer_request(idx);
-                            return true;
+                            continue;
                         }
                         None => {
                             tenants[tenant].drop_request(idx);
-                            return true;
+                            continue;
                         }
                     }
                 }
@@ -1205,12 +1582,12 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     enqueued: now,
                     len_s: len,
                 });
-                dispatch_ready(gi, now, &mut groups, &tenants, q, &mut exec_rng, &frt.slow);
+                dispatch_ready(gi, now, &mut groups, &tenants, q, &frt.slow);
                 arm_tick(gi, now, &mut groups, q);
             }
             Ev::BatchTick { group } => {
                 groups[group].armed_tick = None;
-                dispatch_ready(group, now, &mut groups, &tenants, q, &mut exec_rng, &frt.slow);
+                dispatch_ready(group, now, &mut groups, &tenants, q, &frt.slow);
                 arm_tick(group, now, &mut groups, q);
             }
             Ev::ExecDone { group, batch_idx } => {
@@ -1221,7 +1598,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     // the slot (the harvest left it un-recycled for
                     // exactly this moment).
                     groups[group].free_slots.push(batch_idx);
-                    return true;
+                    continue;
                 };
                 horizon = horizon.max(now);
                 if groups[group].failed {
@@ -1277,9 +1654,9 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                 // controller exists; a stray event is ignored.
                 let Some(c) = ctrl.as_mut() else {
                     debug_assert!(false, "ReconfigCheck without controller");
-                    return true;
+                    continue;
                 };
-                let tail = arrivals_seen >= total_arrivals;
+                let tail = front.is_empty();
                 if tail {
                     c.roll_only(now);
                 } else {
@@ -1320,7 +1697,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                         } else {
                             downtime += apply_moves(
                                 &moves, c.policy(), cfg, sys, now, &mut groups,
-                                &mut group_of, &mut tenants, q, &mut exec_rng, &frt.slow,
+                                &mut group_of, &mut tenants, q, &frt.slow,
                             );
                         }
                     }
@@ -1340,8 +1717,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                                 let avail = now + secs(c.policy().migration_s);
                                 grant_slice(
                                     ask.tenant, gpu, avail, cfg, sys, now, &mut groups,
-                                    &mut group_of, &mut tenants, q, &mut exec_rng,
-                                    &frt.slow,
+                                    &mut group_of, &mut tenants, q, &frt.slow,
                                 );
                             }
                         }
@@ -1352,7 +1728,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     if let Some(action) = c.tick_consolidation(now) {
                         downtime += apply_consolidation(
                             &action, c.policy(), cfg, sys, now, &mut groups, &mut group_of,
-                            &mut tenants, q, &mut exec_rng, &mut power, &frt.slow,
+                            &mut tenants, q, &mut power, &frt.slow,
                         );
                     }
                     // Wake the admission drain if any waiting tenant now
@@ -1373,7 +1749,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     FaultKind::GpuCrash => {
                         if frt.crashed[g] {
                             frt.records[fault].skipped = true;
-                            return true;
+                            continue;
                         }
                         frt.crashed[g] = true;
                         // Kill every serving group on the GPU: keep the
@@ -1439,7 +1815,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                             });
                         let Some(gi) = victim else {
                             frt.records[fault].skipped = true;
-                            return true;
+                            continue;
                         };
                         frt.slice_victim[fault] = Some(gi);
                         groups[gi].slice_free.sort_unstable();
@@ -1452,8 +1828,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                         // count, or flushes the queue to survivors if
                         // that was the last slice.
                         settle_groups(
-                            &[gi], cfg, sys, now, &mut groups, &mut tenants, q,
-                            &mut exec_rng, &frt.slow,
+                            &[gi], cfg, sys, now, &mut groups, &mut tenants, q, &frt.slow,
                         );
                         if e.duration_s.is_finite() {
                             q.schedule_in(secs(e.duration_s), Ev::FaultRepair { fault });
@@ -1486,7 +1861,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                 // raced the health check (a blip shorter than the
                 // detection latency needs no failover).
                 if !frt.crashed[g] {
-                    return true;
+                    continue;
                 }
                 frt.records[fault].detected_s = Some(to_secs(now));
                 // The router learns: dead groups lose their slice clocks
@@ -1500,8 +1875,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     }
                 }
                 settle_groups(
-                    &touched, cfg, sys, now, &mut groups, &mut tenants, q, &mut exec_rng,
-                    &frt.slow,
+                    &touched, cfg, sys, now, &mut groups, &mut tenants, q, &frt.slow,
                 );
                 // Failover re-pack: the dead GPU's holdings become
                 // pending asks and re-admit through the controller's
@@ -1524,8 +1898,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                                 let avail = now + secs(c.policy().migration_s);
                                 grant_slice(
                                     ask.tenant, gpu, avail, cfg, sys, now, &mut groups,
-                                    &mut group_of, &mut tenants, q, &mut exec_rng,
-                                    &frt.slow,
+                                    &mut group_of, &mut tenants, q, &frt.slow,
                                 );
                             }
                         }
@@ -1567,10 +1940,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                                 }
                             }
                             for gi in touched {
-                                dispatch_ready(
-                                    gi, now, &mut groups, &tenants, q, &mut exec_rng,
-                                    &frt.slow,
-                                );
+                                dispatch_ready(gi, now, &mut groups, &tenants, q, &frt.slow);
                                 arm_tick(gi, now, &mut groups, q);
                             }
                         }
@@ -1578,12 +1948,12 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     FaultKind::SliceFail => {
                         frt.records[fault].repaired_s = Some(to_secs(now));
                         let Some(gi) = frt.slice_victim[fault].take() else {
-                            return true;
+                            continue;
                         };
                         // If the whole GPU crashed meanwhile, the
                         // GPU-level repair/restore path owns the state.
                         if frt.crashed[g] {
-                            return true;
+                            continue;
                         }
                         groups[gi].slice_free.push(now);
                         let ti = groups[gi].tenant;
@@ -1591,8 +1961,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                             c.note_slice_restored(g, ti);
                         }
                         settle_groups(
-                            &[gi], cfg, sys, now, &mut groups, &mut tenants, q,
-                            &mut exec_rng, &frt.slow,
+                            &[gi], cfg, sys, now, &mut groups, &mut tenants, q, &frt.slow,
                         );
                     }
                     FaultKind::PreprocOutage => {
@@ -1626,7 +1995,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                 // The retry is moot once the request reached a terminal
                 // state (a racing completion, or an earlier give-up).
                 if tenants[tenant].state[idx] != ReqState::Pending {
-                    return true;
+                    continue;
                 }
                 if start_request(
                     tenant, idx, now, cfg, &mut groups, &mut tenants, &mut cpu_pools,
@@ -1659,7 +2028,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     || gi == usize::MAX
                     || !groups[gi].failed
                 {
-                    return true;
+                    continue;
                 }
                 let mut best = None;
                 let mut best_load = f64::INFINITY;
@@ -1675,7 +2044,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                     }
                 }
                 let Some(g2) = best else {
-                    return true;
+                    continue;
                 };
                 tenants[tenant].hedges += 1;
                 // The duplicate re-routes and re-preprocesses; whichever
@@ -1705,8 +2074,7 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
                 }
             }
         }
-        true
-    });
+    }
 
     let (reconfigs, migrations, reconfig_events) = match &ctrl {
         Some(c) => (c.events().len() as u64, c.migrations(), c.events().to_vec()),
@@ -1721,36 +2089,12 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
         None => alloc,
     };
 
-    // Fleet energy: integrate each GPU (its class's per-GPC/uncore
-    // parameters over busy GPC-time and powered-on time) plus its host's
-    // CPU cores, DPU and base draw. Power-downs show up as shortened
-    // `on_s` — the idle-power elision consolidation buys.
-    let em = EnergyModel::new(&sys.energy);
-    let horizon_s = to_secs(horizon);
+    // Busy GPC-time per local GPU, accumulated in group-creation order
+    // (the same order the single-heap run sums it).
     let mut busy_gpc_s = vec![0.0f64; cfg.n_gpus()];
     for grp in &groups {
         busy_gpc_s[grp.gpu] +=
             grp.busy_ns as f64 * 1e-9 * cfg.tenants[grp.tenant].slice.gpcs as f64;
-    }
-    let mut energy = EnergyBreakdown::default();
-    let mut gpu_off_s = 0.0;
-    for g in 0..cfg.n_gpus() {
-        let off_s = power.off_secs(g, horizon);
-        gpu_off_s += off_s;
-        let on_s = (horizon_s - off_s).max(0.0);
-        let (active_j, idle_j) = em.gpu_energy(&cfg.fleet[g], busy_gpc_s[g], on_s);
-        energy.gpu_active_j += active_j;
-        energy.gpu_idle_j += idle_j;
-        let pool_busy_s = cpu_pools[g].utilization(horizon) * usable as f64 * horizon_s;
-        let reserved_s = sys.hardware.cpu_reserved_cores as f64 * horizon_s;
-        energy.cpu_j += em.cpu_energy(
-            reserved_s + pool_busy_s,
-            sys.hardware.cpu_cores as f64 * horizon_s,
-        );
-        if let Some(d) = &dpus[g] {
-            energy.dpu_j += em.dpu_energy(d.utilization(horizon), horizon_s);
-        }
-        energy.base_j += em.base_energy(horizon_s);
     }
 
     // Requests still parked in an admission queue never got capacity:
@@ -1779,19 +2123,174 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
         ts.stats.served_degraded = ts.served_degraded;
     }
 
-    Ok(ClusterOutcome {
-        dropped: tenants.iter().map(|t| t.dropped).collect(),
-        deferred: tenants.iter().map(|t| t.deferred).collect(),
-        deferred_served: tenants.iter().map(|t| t.deferred_served).collect(),
-        timed_out: tenants.iter().map(|t| t.timed_out).collect(),
-        retries: tenants.iter().map(|t| t.retries).collect(),
-        hedges: tenants.iter().map(|t| t.hedges).collect(),
-        served_degraded: tenants.iter().map(|t| t.served_degraded).collect(),
+    Ok(PartOut {
+        tenants,
         late_admissions,
-        per_tenant: tenants
+        events,
+        horizon,
+        downtime,
+        reconfigs,
+        migrations,
+        reconfig_events,
+        final_alloc,
+        consolidations,
+        consolidation_events,
+        busy_gpc_s,
+        cpu_pools,
+        dpus,
+        power,
+        fault_records: frt.records,
+        reconfig_aborts: frt.aborts,
+        served_by_failed: frt.served_by_failed,
+    })
+}
+
+/// One shard's raw output, local-indexed; [`finalize`] scatters it back
+/// onto the global fleet/tenant axes.
+struct PartOut {
+    tenants: Vec<TenantState>,
+    late_admissions: u64,
+    events: u64,
+    horizon: Nanos,
+    downtime: Nanos,
+    reconfigs: u64,
+    migrations: u64,
+    reconfig_events: Vec<ClusterReconfigEvent>,
+    final_alloc: Vec<Vec<usize>>,
+    consolidations: u64,
+    consolidation_events: Vec<ConsolidationEvent>,
+    busy_gpc_s: Vec<f64>,
+    cpu_pools: Vec<CpuPool>,
+    dpus: Vec<Option<Dpu>>,
+    power: GpuPower,
+    fault_records: Vec<FaultRecord>,
+    reconfig_aborts: u64,
+    served_by_failed: u64,
+}
+
+/// Merge shard outputs into one global [`ClusterOutcome`].
+///
+/// Scalars sum, timelines concatenate, and every per-GPU / per-tenant
+/// series scatters through its shard's id maps. Energy integrates over
+/// the GLOBAL horizon: a shard that drained early — or a GPU no shard
+/// simulated at all — still pays idle, CPU-reserved and base power to
+/// the end of the run, exactly as the single-heap accounting charges an
+/// untouched GPU (whose utilizations are all zero).
+fn finalize(
+    cfg: &ClusterConfig,
+    sys: &PrebaConfig,
+    packing: Packing,
+    alloc: Vec<Vec<usize>>,
+    parts: &[ShardCtx],
+    outs: Vec<PartOut>,
+) -> ClusterOutcome {
+    let horizon = outs.iter().map(|o| o.horizon).max().unwrap_or(0);
+    let usable = sys.hardware.cpu_cores - sys.hardware.cpu_reserved_cores;
+
+    // Scatter the per-GPU utilization inputs to global indices (absent
+    // GPUs keep zeros), then run the fleet energy integral: each GPU's
+    // class parameters over busy GPC-time and powered-on time, plus its
+    // host's CPU cores, DPU and base draw. Power-downs show up as
+    // shortened `on_s` — the idle-power elision consolidation buys.
+    let mut busy_gpc_s = vec![0.0f64; cfg.n_gpus()];
+    let mut pool_util = vec![0.0f64; cfg.n_gpus()];
+    let mut dpu_util = vec![0.0f64; cfg.n_gpus()];
+    let mut off_s_gpu = vec![0.0f64; cfg.n_gpus()];
+    for (ctx, o) in parts.iter().zip(&outs) {
+        for (g, &gg) in ctx.gpu_ids.iter().enumerate() {
+            busy_gpc_s[gg] = o.busy_gpc_s[g];
+            pool_util[gg] = o.cpu_pools[g].utilization(horizon);
+            if let Some(d) = &o.dpus[g] {
+                dpu_util[gg] = d.utilization(horizon);
+            }
+            off_s_gpu[gg] = o.power.off_secs(g, horizon);
+        }
+    }
+    let em = EnergyModel::new(&sys.energy);
+    let horizon_s = to_secs(horizon);
+    let mut energy = EnergyBreakdown::default();
+    let mut gpu_off_s = 0.0;
+    for g in 0..cfg.n_gpus() {
+        gpu_off_s += off_s_gpu[g];
+        let on_s = (horizon_s - off_s_gpu[g]).max(0.0);
+        let (active_j, idle_j) = em.gpu_energy(&cfg.fleet[g], busy_gpc_s[g], on_s);
+        energy.gpu_active_j += active_j;
+        energy.gpu_idle_j += idle_j;
+        let pool_busy_s = pool_util[g] * usable as f64 * horizon_s;
+        let reserved_s = sys.hardware.cpu_reserved_cores as f64 * horizon_s;
+        energy.cpu_j += em.cpu_energy(
+            reserved_s + pool_busy_s,
+            sys.hardware.cpu_cores as f64 * horizon_s,
+        );
+        if matches!(cfg.preproc, PreprocMode::Dpu) {
+            energy.dpu_j += em.dpu_energy(dpu_util[g], horizon_s);
+        }
+        energy.base_j += em.base_energy(horizon_s);
+    }
+
+    let mut events = 0u64;
+    let mut downtime: Nanos = 0;
+    let mut late_admissions = 0u64;
+    let mut reconfigs = 0u64;
+    let mut migrations = 0u64;
+    let mut consolidations = 0u64;
+    let mut reconfig_aborts = 0u64;
+    let mut served_by_failed = 0u64;
+    let mut reconfig_events = Vec::new();
+    let mut consolidation_events = Vec::new();
+    let mut fault_records = Vec::new();
+    let mut final_alloc = alloc;
+    let nt = cfg.tenants.len();
+    let mut dropped = vec![0u64; nt];
+    let mut deferred = vec![0u64; nt];
+    let mut deferred_served = vec![0u64; nt];
+    let mut timed_out = vec![0u64; nt];
+    let mut retries = vec![0u64; nt];
+    let mut hedges = vec![0u64; nt];
+    let mut served_degraded = vec![0u64; nt];
+    let mut per_tenant: Vec<Option<(ModelId, RunStats)>> = (0..nt).map(|_| None).collect();
+    for (ctx, o) in parts.iter().zip(outs.into_iter()) {
+        events += o.events;
+        downtime += o.downtime;
+        late_admissions += o.late_admissions;
+        reconfigs += o.reconfigs;
+        migrations += o.migrations;
+        consolidations += o.consolidations;
+        reconfig_aborts += o.reconfig_aborts;
+        served_by_failed += o.served_by_failed;
+        reconfig_events.extend(o.reconfig_events);
+        consolidation_events.extend(o.consolidation_events);
+        fault_records.extend(o.fault_records);
+        for (g, &gg) in ctx.gpu_ids.iter().enumerate() {
+            for (ti, &tg) in ctx.tenant_ids.iter().enumerate() {
+                final_alloc[gg][tg] = o.final_alloc[g][ti];
+            }
+        }
+        for (ti, ts) in o.tenants.into_iter().enumerate() {
+            let tg = ctx.tenant_ids[ti];
+            dropped[tg] = ts.dropped;
+            deferred[tg] = ts.deferred;
+            deferred_served[tg] = ts.deferred_served;
+            timed_out[tg] = ts.timed_out;
+            retries[tg] = ts.retries;
+            hedges[tg] = ts.hedges;
+            served_degraded[tg] = ts.served_degraded;
+            per_tenant[tg] = Some((cfg.tenants[tg].model, ts.stats));
+        }
+    }
+
+    ClusterOutcome {
+        dropped,
+        deferred,
+        deferred_served,
+        timed_out,
+        retries,
+        hedges,
+        served_degraded,
+        late_admissions,
+        per_tenant: per_tenant
             .into_iter()
-            .zip(cfg.tenants.iter())
-            .map(|(ts, t)| (t.model, ts.stats))
+            .map(|t| t.expect("every tenant belongs to exactly one shard"))
             .collect(),
         packing,
         horizon,
@@ -1805,11 +2304,11 @@ pub fn run(cfg: &ClusterConfig, sys: &PrebaConfig) -> anyhow::Result<ClusterOutc
         consolidations,
         gpu_off_s,
         consolidation_events,
-        mttr_s: mttr_s(&frt.records),
-        fault_records: frt.records,
-        reconfig_aborts: frt.aborts,
-        served_by_failed: frt.served_by_failed,
-    })
+        mttr_s: mttr_s(&fault_records),
+        fault_records,
+        reconfig_aborts,
+        served_by_failed,
+    }
 }
 
 /// Apply a committed move list. Each move drains the donor group's
@@ -1829,7 +2328,6 @@ fn apply_moves(
     group_of: &mut [Vec<Option<usize>>],
     tenants: &mut [TenantState],
     q: &mut EventQueue<Ev>,
-    exec_rng: &mut Rng,
     slow: &[f64],
 ) -> Nanos {
     let mut downtime: Nanos = 0;
@@ -1861,7 +2359,7 @@ fn apply_moves(
         }
     }
 
-    settle_groups(&touched, cfg, sys, now, groups, tenants, q, exec_rng, slow);
+    settle_groups(&touched, cfg, sys, now, groups, tenants, q, slow);
     downtime
 }
 
@@ -1878,7 +2376,6 @@ fn settle_groups(
     groups: &mut [Group],
     tenants: &mut [TenantState],
     q: &mut EventQueue<Ev>,
-    exec_rng: &mut Rng,
     slow: &[f64],
 ) {
     for &gi in touched {
@@ -1888,7 +2385,7 @@ fn settle_groups(
             let ts = &tenants[ti];
             let new_policy = build_policy(cfg.policy, sys, ts.spec, &ts.sm, &ts.buckets, n);
             groups[gi].batcher.rebuild(new_policy, now);
-            dispatch_ready(gi, now, groups, tenants, q, exec_rng, slow);
+            dispatch_ready(gi, now, groups, tenants, q, slow);
             arm_tick(gi, now, groups, q);
         }
     }
@@ -1912,7 +2409,7 @@ fn settle_groups(
                     tenants[ti].routed[r.id as usize] = tg;
                     groups[tg].batcher.enqueue(r);
                 }
-                dispatch_ready(tg, now, groups, tenants, q, exec_rng, slow);
+                dispatch_ready(tg, now, groups, tenants, q, slow);
                 arm_tick(tg, now, groups, q);
             }
             // Same no-capacity contract as the Arrival/PreprocDone
@@ -1958,7 +2455,6 @@ fn apply_consolidation(
     group_of: &mut [Vec<Option<usize>>],
     tenants: &mut [TenantState],
     q: &mut EventQueue<Ev>,
-    exec_rng: &mut Rng,
     power: &mut GpuPower,
     slow: &[f64],
 ) -> Nanos {
@@ -2010,7 +2506,7 @@ fn apply_consolidation(
                 touch(donor, &mut touched);
                 touch(gainer, &mut touched);
             }
-            settle_groups(&touched, cfg, sys, now, groups, tenants, q, exec_rng, slow);
+            settle_groups(&touched, cfg, sys, now, groups, tenants, q, slow);
             power.power_off(*gpu, off_at);
         }
         ConsolidationAction::PowerUp { gpu, grants } => {
@@ -2020,8 +2516,7 @@ fn apply_consolidation(
                 for _ in 0..n {
                     downtime += avail - now;
                     grant_slice(
-                        ti, *gpu, avail, cfg, sys, now, groups, group_of, tenants, q,
-                        exec_rng, slow,
+                        ti, *gpu, avail, cfg, sys, now, groups, group_of, tenants, q, slow,
                     );
                 }
             }
@@ -2053,7 +2548,28 @@ mod tests {
             t.sla_ms = 25.0;
             t
         };
-        ClusterConfig::new(2, PackStrategy::BestFit, vec![mk(), mk()])
+        ClusterConfig::builder()
+            .gpus(2)
+            .strategy(PackStrategy::BestFit)
+            .tenants(vec![mk(), mk()])
+            .build()
+    }
+
+    /// Two full-GPU tenants on 2 GPUs: the tenant/GPU graph splits into
+    /// two independent components, so auto-sharding actually shards.
+    fn disjoint_pair_cfg() -> ClusterConfig {
+        let u = swin_unit();
+        let mk = || {
+            let mut t = ClusterTenant::new(ModelId::SwinTransformer, one_g(), 7, 3.0 * u);
+            t.requests = 1500;
+            t.sla_ms = 25.0;
+            t
+        };
+        ClusterConfig::builder()
+            .gpus(2)
+            .strategy(PackStrategy::FirstFit)
+            .tenants(vec![mk(), mk()])
+            .build()
     }
 
     #[test]
@@ -2097,7 +2613,11 @@ mod tests {
         a.requests = 800;
         let mut b = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(7, 40), 1, u);
         b.requests = 500;
-        let cfg = ClusterConfig::new(1, PackStrategy::FirstFit, vec![a, b]);
+        let cfg = ClusterConfig::builder()
+            .gpus(1)
+            .strategy(PackStrategy::FirstFit)
+            .tenants(vec![a, b])
+            .build();
         let out = run(&cfg, &PrebaConfig::new()).unwrap();
         assert_eq!(out.packing.rejected.len(), 1);
         // Post-warmup drops only: 500 requests minus the 5% warmup window.
@@ -2114,11 +2634,11 @@ mod tests {
         // onto the 2-slice group (overload); JSQ balances by backlog. The
         // scenario is the `cluster` experiment's shared constructor so the
         // test and `preba experiment cluster` validate the same fleet.
-        let mut cfg = ClusterConfig::new(
-            2,
-            PackStrategy::FirstFit,
-            crate::experiments::cluster::asym_routing_tenants(3.5),
-        );
+        let mut cfg = ClusterConfig::builder()
+            .gpus(2)
+            .strategy(PackStrategy::FirstFit)
+            .tenants(crate::experiments::cluster::asym_routing_tenants(3.5))
+            .build();
         let sys = PrebaConfig::new();
         cfg.routing = Routing::ShortestQueue;
         let jsq = run(&cfg, &sys).unwrap();
@@ -2145,11 +2665,11 @@ mod tests {
         a.requests = 600;
         let mut b = ClusterTenant::new(ModelId::SwinTransformer, Slice::new(4, 20), 1, 2.0 * u);
         b.requests = 600;
-        let cfg = ClusterConfig::with_fleet(
-            vec![GpuClass::A100, GpuClass::A30],
-            PackStrategy::BestFit,
-            vec![a, b],
-        );
+        let cfg = ClusterConfig::builder()
+            .fleet(vec![GpuClass::A100, GpuClass::A30])
+            .strategy(PackStrategy::BestFit)
+            .tenants(vec![a, b])
+            .build();
         let out = run(&cfg, &PrebaConfig::new()).unwrap();
         assert!(out.packing.rejected.is_empty(), "{:?}", out.packing.rejected);
         assert_eq!(out.final_alloc[0], vec![1, 0], "7g must sit on the A100");
@@ -2183,11 +2703,14 @@ mod tests {
         let mut b = ClusterTenant::new(ModelId::SwinTransformer, one_g(), 2, 2.0 * u);
         b.sla_ms = 25.0;
         b.requests = (b.rate_qps * horizon).ceil() as usize;
-        let mut cfg = ClusterConfig::new(2, PackStrategy::BestFit, vec![a, b]);
-        cfg.reconfig = Some(crate::experiments::cluster::policy(&sys));
-        cfg.admission = admission;
-        cfg.warmup_frac = 0.01;
-        cfg
+        ClusterConfig::builder()
+            .gpus(2)
+            .strategy(PackStrategy::BestFit)
+            .tenants(vec![a, b])
+            .reconfig(crate::experiments::cluster::policy(&sys))
+            .admission(admission)
+            .warmup_frac(0.01)
+            .build()
     }
 
     #[test]
@@ -2271,11 +2794,14 @@ mod tests {
             t.requests = (t.rate_qps * horizon).ceil() as usize;
             t
         };
-        let mut cfg =
-            ClusterConfig::new(2, PackStrategy::BestFit, vec![a, mk_small(), mk_small()]);
-        cfg.reconfig = Some(crate::experiments::cluster::policy(&sys));
-        cfg.admission = true;
-        cfg.warmup_frac = 0.01;
+        let cfg = ClusterConfig::builder()
+            .gpus(2)
+            .strategy(PackStrategy::BestFit)
+            .tenants(vec![a, mk_small(), mk_small()])
+            .reconfig(crate::experiments::cluster::policy(&sys))
+            .admission(true)
+            .warmup_frac(0.01)
+            .build();
         let out = run(&cfg, &sys).unwrap();
         assert_eq!(out.packing.rejected.len(), 2, "{:?}", out.packing.rejected);
         for ti in [1, 2] {
@@ -2297,11 +2823,11 @@ mod tests {
     /// `preba experiment cluster` / `preba cluster` actually run.
     fn antiphase_cfg(online: bool) -> ClusterConfig {
         let sys = PrebaConfig::new();
-        let mut cfg = ClusterConfig::new(
-            2,
-            PackStrategy::BestFit,
-            crate::experiments::cluster::antiphase_pair(12.0),
-        );
+        let mut cfg = ClusterConfig::builder()
+            .gpus(2)
+            .strategy(PackStrategy::BestFit)
+            .tenants(crate::experiments::cluster::antiphase_pair(12.0))
+            .build();
         cfg.reconfig = online.then(|| crate::experiments::cluster::policy(&sys));
         cfg
     }
@@ -2334,5 +2860,95 @@ mod tests {
             assert_eq!(stats.completed, expect, "{model}");
             assert_eq!(online.dropped[i], 0, "{model}");
         }
+    }
+
+    /// Bit-compare the outcome fields that matter across shard layouts.
+    fn assert_outcomes_identical(a: &ClusterOutcome, b: &ClusterOutcome, label: &str) {
+        assert_eq!(a.events, b.events, "{label}: events");
+        assert_eq!(a.horizon, b.horizon, "{label}: horizon");
+        assert_eq!(a.dropped, b.dropped, "{label}: dropped");
+        assert_eq!(a.final_alloc, b.final_alloc, "{label}: final_alloc");
+        assert_eq!(
+            a.energy.total_j().to_bits(),
+            b.energy.total_j().to_bits(),
+            "{label}: energy {} vs {}",
+            a.energy.total_j(),
+            b.energy.total_j()
+        );
+        for (ti, ((ma, sa), (mb, sb))) in a.per_tenant.iter().zip(&b.per_tenant).enumerate() {
+            assert_eq!(ma, mb, "{label}: tenant {ti} model");
+            assert_eq!(sa.completed, sb.completed, "{label}: tenant {ti} completed");
+            assert_eq!(
+                sa.p95_ms().to_bits(),
+                sb.p95_ms().to_bits(),
+                "{label}: tenant {ti} p95 {} vs {}",
+                sa.p95_ms(),
+                sb.p95_ms()
+            );
+            assert_eq!(
+                sa.mean_ms().to_bits(),
+                sb.mean_ms().to_bits(),
+                "{label}: tenant {ti} mean {} vs {}",
+                sa.mean_ms(),
+                sb.mean_ms()
+            );
+        }
+    }
+
+    /// The tentpole acceptance invariant: sharding is an execution
+    /// strategy, not a model change. `shards = Some(1)` forces the
+    /// single-heap identity path; `None` auto-partitions; explicit
+    /// counts re-bucket the components. All must agree bit-for-bit.
+    #[test]
+    fn sharded_runs_match_single_heap_exactly() {
+        let sys = PrebaConfig::new();
+        for base in [two_tenant_cfg(), disjoint_pair_cfg()] {
+            let mut single = base.clone();
+            single.shards = Some(1);
+            let reference = run(&single, &sys).unwrap();
+            for shards in [None, Some(2), Some(4)] {
+                let mut cfg = base.clone();
+                cfg.shards = shards;
+                let out = run(&cfg, &sys).unwrap();
+                assert_outcomes_identical(&out, &reference, &format!("shards={shards:?}"));
+            }
+        }
+    }
+
+    /// Auto-sharding must also be invariant to the worker count the
+    /// partitions are executed on (`run_jobs` merges in job order).
+    #[test]
+    fn sharded_run_is_jobs_invariant() {
+        let sys = PrebaConfig::new();
+        let cfg = disjoint_pair_cfg();
+        let serial = crate::util::par::with_jobs(1, || run(&cfg, &sys)).unwrap();
+        let parallel = crate::util::par::with_jobs(4, || run(&cfg, &sys)).unwrap();
+        assert_outcomes_identical(&serial, &parallel, "jobs 1 vs 4");
+    }
+
+    /// The deprecated positional constructors are thin shims over the
+    /// builder; both must produce the same config.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_ctors_delegate_to_builder() {
+        let u = swin_unit();
+        let t = ClusterTenant::new(ModelId::SwinTransformer, one_g(), 2, u);
+        let a = ClusterConfig::new(2, PackStrategy::BestFit, vec![t.clone()]);
+        let b = ClusterConfig::builder()
+            .gpus(2)
+            .strategy(PackStrategy::BestFit)
+            .tenants(vec![t.clone()])
+            .build();
+        assert_eq!(a.fleet, b.fleet);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.warmup_frac, b.warmup_frac);
+        assert_eq!(a.shards, b.shards);
+        let c = ClusterConfig::with_fleet(
+            vec![GpuClass::A100, GpuClass::A30],
+            PackStrategy::FirstFit,
+            vec![t],
+        );
+        assert_eq!(c.fleet, vec![GpuClass::A100, GpuClass::A30]);
+        assert!(matches!(c.strategy, PackStrategy::FirstFit));
     }
 }

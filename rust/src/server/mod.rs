@@ -20,7 +20,7 @@ pub mod multi;
 pub mod real_driver;
 pub mod sim_driver;
 
-pub use cluster::{ClusterConfig, ClusterOutcome, ClusterTenant, Routing};
+pub use cluster::{ClusterConfig, ClusterConfigBuilder, ClusterOutcome, ClusterTenant, Routing};
 pub use sim_driver::{PreprocMode, SimConfig, SimOutcome};
 
 /// Which batching policy the server uses (ablation axis, Fig 22).

@@ -17,7 +17,7 @@ use crate::preprocess::CpuPool;
 use crate::dpu::Dpu;
 use crate::sim::EventQueue;
 use crate::util::Rng;
-use crate::workload::QueryGen;
+use crate::workload::{ArrivalStream, Bounded, QueryGen, TraceGen};
 
 use super::PolicyKind;
 
@@ -168,7 +168,6 @@ fn padded_len_of(buckets: &Bucketizer, batch: &Batch) -> f64 {
 
 #[derive(Debug, Clone, Copy)]
 enum Ev {
-    Arrival(usize),
     PreprocDone(usize),
     /// Re-check batching deadlines.
     BatchTick,
@@ -281,33 +280,22 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
     let mut vgpu_free: Vec<Nanos> = vec![0; n_vgpus];
     let mut vgpu_busy: Vec<u128> = vec![0; n_vgpus];
 
-    // Workload.
-    let arrivals = match &cfg.profile {
-        None => QueryGen::new(cfg.model, cfg.rate_qps, gen_rng).take(cfg.requests),
-        Some(profile) => {
-            crate::workload::TraceGen::new(cfg.model, profile.clone(), gen_rng)
-                .take(cfg.requests)
-        }
+    // Workload: a bounded pull-based stream. Arrivals are injected into
+    // the event heap lazily — at most one is pending outside the heap at
+    // a time — so the heap stays O(in-flight events) instead of holding
+    // every future arrival up front.
+    let gen: Box<dyn ArrivalStream> = match &cfg.profile {
+        None => Box::new(QueryGen::new(cfg.model, cfg.rate_qps, gen_rng)),
+        Some(profile) => Box::new(TraceGen::new(cfg.model, profile.clone(), gen_rng)),
     };
+    let mut source = Bounded::new(gen, cfg.requests);
+    let mut peeked = source.next_arrival();
 
-    let mut reqs: Vec<ReqState> = arrivals
-        .iter()
-        .map(|a| ReqState {
-            arrival: a.at,
-            len_s: match (cfg.model.kind(), cfg.fixed_len_s) {
-                (ModelKind::Audio, Some(l)) => l,
-                _ => a.len_s,
-            },
-            preproc_done: 0,
-        })
-        .collect();
+    let mut reqs: Vec<ReqState> = Vec::with_capacity(cfg.requests);
 
-    let mut q: EventQueue<Ev> = EventQueue::with_capacity(cfg.requests + 16);
-    for (i, a) in arrivals.iter().enumerate() {
-        q.schedule(a.at, Ev::Arrival(i));
-    }
+    let mut queue: EventQueue<Ev> = EventQueue::with_capacity(64);
     if let Some(c) = &ctrl {
-        q.schedule(c.window(), Ev::ReconfigCheck);
+        queue.schedule(c.window(), Ev::ReconfigCheck);
     }
 
     let warmup = (cfg.requests as f64 * cfg.warmup_frac) as usize;
@@ -373,27 +361,52 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
         q.schedule(done, Ev::ExecDone { vgpu, batch_idx: idx });
     };
 
-    let events = crate::sim::run(&mut q, u64::MAX, |now, ev, q| {
-        match ev {
-            Ev::Arrival(i) => {
-                arrivals_seen += 1;
-                if let Some(c) = ctrl.as_mut() {
-                    c.observe_arrival(0);
+    let mut events: u64 = 0;
+    let q = &mut queue;
+    loop {
+        // Inject every arrival due at or before the next scheduled event;
+        // ties go to the arrival, matching the FIFO priority the old
+        // pre-scheduled Arrival events had (setup-time sequence numbers).
+        while let Some(a) = peeked {
+            if q.peek_time().is_some_and(|t| a.at > t) {
+                break;
+            }
+            peeked = source.next_arrival();
+            q.advance_to(a.at);
+            events += 1;
+            let now = a.at;
+            let i = reqs.len();
+            reqs.push(ReqState {
+                arrival: a.at,
+                len_s: match (cfg.model.kind(), cfg.fixed_len_s) {
+                    (ModelKind::Audio, Some(l)) => l,
+                    _ => a.len_s,
+                },
+                preproc_done: 0,
+            });
+            arrivals_seen += 1;
+            if let Some(c) = ctrl.as_mut() {
+                c.observe_arrival(0);
+            }
+            let len = reqs[i].len_s;
+            match cfg.preproc {
+                PreprocMode::Ideal => q.schedule(now, Ev::PreprocDone(i)),
+                PreprocMode::Cpu => {
+                    let service = spec.cpu_preproc_secs(len.max(0.1));
+                    let (_, done) = cpu_pool.admit(now, service);
+                    q.schedule(done, Ev::PreprocDone(i));
                 }
-                let len = reqs[i].len_s;
-                match cfg.preproc {
-                    PreprocMode::Ideal => q.schedule(now, Ev::PreprocDone(i)),
-                    PreprocMode::Cpu => {
-                        let service = spec.cpu_preproc_secs(len.max(0.1));
-                        let (_, done) = cpu_pool.admit(now, service);
-                        q.schedule(done, Ev::PreprocDone(i));
-                    }
-                    PreprocMode::Dpu => {
-                        let done = dpu.as_mut().unwrap().admit(now, cfg.model, len.max(0.1));
-                        q.schedule(done, Ev::PreprocDone(i));
-                    }
+                PreprocMode::Dpu => {
+                    let done = dpu.as_mut().unwrap().admit(now, cfg.model, len.max(0.1));
+                    q.schedule(done, Ev::PreprocDone(i));
                 }
             }
+        }
+        let Some((now, ev)) = q.pop() else {
+            break;
+        };
+        events += 1;
+        match ev {
             Ev::PreprocDone(i) => {
                 reqs[i].preproc_done = now;
                 batcher.enqueue(Request {
@@ -532,8 +545,7 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 }
             }
         }
-        true
-    });
+    }
 
     // Close the capacity integral at the horizon (vGPUs × time survives
     // geometry changes); without reconfiguration this reduces to the old

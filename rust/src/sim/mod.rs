@@ -109,6 +109,19 @@ impl<E> EventQueue<E> {
         self.heap.first().map(|s| s.at)
     }
 
+    /// Advance virtual time to `at` without popping (never moves time
+    /// backwards). Used by drivers that inject externally-sourced events
+    /// (lazy arrival streams) between heap pops: the injected event's
+    /// timestamp becomes `now` so subsequent `schedule` calls clamp
+    /// correctly.
+    pub fn advance_to(&mut self, at: Nanos) {
+        debug_assert!(
+            self.peek_time().is_none_or(|t| at <= t),
+            "advance_to({at}) past the next scheduled event"
+        );
+        self.now = self.now.max(at);
+    }
+
     #[inline]
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {

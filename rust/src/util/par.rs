@@ -46,12 +46,37 @@ thread_local! {
     /// second full-width pool — otherwise `all` would oversubscribe the
     /// CPU with ~jobs² simulation threads.
     static IN_POOL: Cell<bool> = const { Cell::new(false) };
+
+    /// Scoped worker-count pin for this thread; 0 = unset. Takes
+    /// precedence over [`set_jobs`] so determinism tests can compare a
+    /// serial against a parallel run without racing the process-global
+    /// override from concurrently running tests.
+    static JOBS_TLS: Cell<usize> = const { Cell::new(0) };
 }
 
-/// Resolve the worker count: [`set_jobs`] override first (the CLI's
-/// `--jobs N`), then `PREBA_JOBS` if set (and >= 1), otherwise the number
-/// of available cores.
+/// Run `f` with the worker count pinned to `n` (>= 1) on the calling
+/// thread only, restoring the previous pin afterwards (also on panic).
+/// `run_jobs` resolves its worker count on the calling thread, so the pin
+/// covers every fan-out `f` performs directly.
+pub fn with_jobs<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            JOBS_TLS.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(JOBS_TLS.with(|c| c.replace(n.max(1))));
+    f()
+}
+
+/// Resolve the worker count: the thread's [`with_jobs`] pin first, then
+/// the [`set_jobs`] override (the CLI's `--jobs N`), then `PREBA_JOBS` if
+/// set (and >= 1), otherwise the number of available cores.
 pub fn jobs() -> usize {
+    let pinned = JOBS_TLS.with(Cell::get);
+    if pinned != 0 {
+        return pinned;
+    }
     match JOBS_OVERRIDE.load(Ordering::Relaxed) {
         0 => parse_jobs(std::env::var("PREBA_JOBS").ok().as_deref()),
         n => n,
@@ -211,6 +236,17 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn with_jobs_pins_and_restores() {
+        let before = jobs();
+        let inside = with_jobs(3, || {
+            assert_eq!(jobs(), 3);
+            with_jobs(1, jobs)
+        });
+        assert_eq!(inside, 1);
+        assert_eq!(jobs(), before);
     }
 
     #[test]

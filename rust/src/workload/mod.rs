@@ -4,8 +4,12 @@
 //!   ([`QueryGen`]).
 //! * Non-stationary traffic ([`trace`]): diurnal and MMPP-bursty rate
 //!   profiles ([`RateProfile`]/[`TraceGen`]), plus recorded-trace replay
-//!   ([`ReplayTrace`]) with CSV/JSON loading, a rate-scaling knob, and a
-//!   bundled Azure-style synthetic generator.
+//!   ([`ReplayTrace`]) with CSV/JSON loading, a rate-rescaling knob
+//!   ([`Rescale`]), and a bundled Azure-style synthetic generator.
+//! * Pull-based streaming ([`stream`]): the [`ArrivalStream`] seam the
+//!   DES drivers pull arrivals through lazily, with chunked CSV/JSON
+//!   file readers and a tenant-attachable [`StreamSpec`] so
+//!   multi-million-row traces never materialize.
 //! * Audio lengths drawn from a LibriSpeech-shaped distribution
 //!   (Fig 13): a lognormal body peaking ~12-14 s with a short-utterance
 //!   mode, clipped to 1-25 s. Vision inputs are fixed-size.
@@ -29,9 +33,11 @@
 //!            again.iter().map(|a| a.at).collect::<Vec<_>>());
 //! ```
 
+pub mod stream;
 pub mod trace;
 
-pub use trace::{RateProfile, ReplayTrace, TraceGen};
+pub use stream::{ArrivalStream, Bounded, ReplayCursor, StreamSource, StreamSpec, SynthAzure};
+pub use trace::{RateProfile, ReplayTrace, Rescale, TraceGen};
 
 use crate::clock::{secs, Nanos};
 use crate::models::{ModelId, ModelKind};

@@ -1,0 +1,958 @@
+//! Pull-based arrival streams: the lazy seam between workload synthesis
+//! and the DES drivers.
+//!
+//! Every arrival source in the crate used to materialize a full
+//! `Vec<Arrival>` up front and the drivers scheduled the whole workload
+//! into the event heap before the first pop. That caps trace scale at
+//! whatever fits in memory twice (the trace plus the heap). This module
+//! inverts the flow: a driver *pulls* arrivals one at a time through
+//! [`ArrivalStream`] and injects them into the simulation as virtual time
+//! reaches them, so the heap only ever holds in-flight work and the
+//! source only ever holds a bounded read window.
+//!
+//! Three layers:
+//!
+//! * [`ArrivalStream`] — `next_arrival()` plus rate/duration hints.
+//!   Implemented by [`QueryGen`], [`TraceGen`], [`ReplayCursor`] (a
+//!   cursor over a materialized [`ReplayTrace`]), and [`Bounded`].
+//! * [`TimestampStream`] — a bare monotone `f64`-seconds source:
+//!   [`SynthAzure`] (the deterministic Azure-shaped generator, usable at
+//!   multi-million-row scale without materializing), plus chunked
+//!   [`CsvTraceReader`]/[`JsonTraceReader`] file readers and the
+//!   [`ScaleTs`]/[`ThinTs`] rescaling adapters. [`WithLengths`] lifts a
+//!   timestamp stream to an [`ArrivalStream`] by sampling per-request
+//!   input lengths.
+//! * [`StreamSpec`] — a cloneable, `Send + Sync` *description* of a
+//!   stream (source + rescale knobs) that `ClusterTenant` can carry;
+//!   the driver opens one live stream per tenant per run.
+//!
+//! Determinism contract: for the same seed, a stream yields bit-identical
+//! arrivals to the eager path it replaces ([`ReplayTrace::arrivals`],
+//! `QueryGen::take`, `ReplayTrace::synth_azure` + `rescaled`), which is
+//! what lets `tests/prop_stream.rs` demand byte-identical
+//! `ClusterOutcome`s across the two paths.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+
+use crate::clock::secs;
+use crate::models::{ModelId, ModelKind};
+use crate::util::Rng;
+
+use super::trace::ReplayTrace;
+use super::{sample_librispeech_len, Arrival, QueryGen, TraceGen};
+
+/// A pull-based arrival source. Arrivals must be yielded in
+/// non-decreasing `at` order; a `None` is final (streams are fused).
+pub trait ArrivalStream {
+    /// The next arrival, or `None` when the stream is exhausted.
+    /// Infinite processes (Poisson, MMPP) never return `None`; wrap them
+    /// in [`Bounded`] before handing them to a driver.
+    fn next_arrival(&mut self) -> Option<Arrival>;
+
+    /// Long-run mean offered rate, queries/s, if the source knows it.
+    fn rate_hint(&self) -> Option<f64> {
+        None
+    }
+
+    /// Total span of the stream in seconds, if finite and known.
+    fn duration_hint_s(&self) -> Option<f64> {
+        None
+    }
+}
+
+impl ArrivalStream for QueryGen {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        Some(self.next())
+    }
+
+    fn rate_hint(&self) -> Option<f64> {
+        Some(self.rate())
+    }
+}
+
+impl ArrivalStream for TraceGen {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        Some(self.next())
+    }
+
+    fn rate_hint(&self) -> Option<f64> {
+        Some(self.profile().mean_rate())
+    }
+}
+
+impl ArrivalStream for Box<dyn ArrivalStream> {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        (**self).next_arrival()
+    }
+
+    fn rate_hint(&self) -> Option<f64> {
+        (**self).rate_hint()
+    }
+
+    fn duration_hint_s(&self) -> Option<f64> {
+        (**self).duration_hint_s()
+    }
+}
+
+/// Caps an (often infinite) stream at `n` arrivals. The DES drivers wrap
+/// every source in this so a tenant delivers exactly `requests` arrivals
+/// no matter what the underlying process would produce.
+pub struct Bounded<S: ArrivalStream> {
+    inner: S,
+    left: usize,
+}
+
+impl<S: ArrivalStream> Bounded<S> {
+    pub fn new(inner: S, n: usize) -> Bounded<S> {
+        Bounded { inner, left: n }
+    }
+}
+
+impl<S: ArrivalStream> ArrivalStream for Bounded<S> {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        if self.left == 0 {
+            return None;
+        }
+        self.left -= 1;
+        self.inner.next_arrival()
+    }
+
+    fn rate_hint(&self) -> Option<f64> {
+        self.inner.rate_hint()
+    }
+
+    fn duration_hint_s(&self) -> Option<f64> {
+        self.inner.duration_hint_s()
+    }
+}
+
+/// Cursor over a materialized [`ReplayTrace`]: yields the same arrivals,
+/// in the same order, with the same length draws from `rng`, as
+/// [`ReplayTrace::arrivals`] would materialize.
+pub struct ReplayCursor {
+    at_s: Vec<f64>,
+    pos: usize,
+    model: ModelId,
+    rng: Rng,
+}
+
+impl ReplayCursor {
+    pub fn new(trace: &ReplayTrace, model: ModelId, rng: Rng) -> ReplayCursor {
+        ReplayCursor { at_s: trace.timestamps_s().to_vec(), pos: 0, model, rng }
+    }
+}
+
+impl ArrivalStream for ReplayCursor {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        let &t = self.at_s.get(self.pos)?;
+        self.pos += 1;
+        Some(Arrival { at: secs(t), len_s: draw_len(self.model, &mut self.rng) })
+    }
+
+    fn rate_hint(&self) -> Option<f64> {
+        let dur = *self.at_s.last()?;
+        Some(self.at_s.len() as f64 / dur.max(1e-9))
+    }
+
+    fn duration_hint_s(&self) -> Option<f64> {
+        self.at_s.last().copied()
+    }
+}
+
+/// Per-request input length for `model` (same sampler the eager paths
+/// use: audio from the LibriSpeech mixture, vision fixed at 0 s).
+fn draw_len(model: ModelId, rng: &mut Rng) -> f64 {
+    match model.kind() {
+        ModelKind::Vision => 0.0,
+        ModelKind::Audio => sample_librispeech_len(rng),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Timestamp streams: bare monotone seconds sources.
+// ---------------------------------------------------------------------
+
+/// A monotone stream of arrival timestamps (seconds from trace start).
+/// The building block under [`WithLengths`]; file readers and the
+/// synthetic generator speak this so rescaling adapters compose.
+pub trait TimestampStream {
+    fn next_ts(&mut self) -> Option<f64>;
+}
+
+impl TimestampStream for Box<dyn TimestampStream> {
+    fn next_ts(&mut self) -> Option<f64> {
+        (**self).next_ts()
+    }
+}
+
+/// Streaming equivalent of [`ReplayTrace::synth_azure`]: the identical
+/// thinned-Poisson state machine (diurnal envelope × MMPP burst overlay),
+/// yielding timestamps one at a time instead of materializing. For the
+/// same `(seed, duration_s, base_qps)` the sequence is bit-identical to
+/// the materialized trace — `synth_azure` is now implemented as a
+/// collect of this stream.
+#[derive(Debug, Clone)]
+pub struct SynthAzure {
+    rng: Rng,
+    duration_s: f64,
+    period_s: f64,
+    base: f64,
+    lambda_max: f64,
+    quiet_s: f64,
+    burst_s: f64,
+    t: f64,
+    in_burst: bool,
+    next_switch: f64,
+}
+
+impl SynthAzure {
+    /// Diurnal swing of the envelope (±60%).
+    const AMPLITUDE: f64 = 0.6;
+    /// Rate multiplier while a burst is active.
+    const BURST_X: f64 = 3.0;
+
+    pub fn new(seed: u64, duration_s: f64, base_qps: f64) -> SynthAzure {
+        assert!(duration_s > 0.0 && base_qps > 0.0);
+        let mut rng = Rng::new(seed ^ 0xA27E_57AC_E5);
+        let period_s = duration_s / 2.0;
+        // Burst dwell ≪ quiet dwell: spikes, not regimes. The long-run
+        // burst fraction is dwell_burst/(dwell_burst+dwell_quiet) = 1/11,
+        // so the stationary rate multiplier is ~1.18; fold it out of
+        // `base` to keep the realized mean near `base_qps`.
+        let quiet_s = duration_s / 12.0;
+        let burst_s = duration_s / 120.0;
+        let burst_frac = burst_s / (burst_s + quiet_s);
+        let base = base_qps / (1.0 + (Self::BURST_X - 1.0) * burst_frac);
+        let lambda_max = base * (1.0 + Self::AMPLITUDE) * Self::BURST_X;
+        let next_switch = rng.exp(1.0 / quiet_s);
+        SynthAzure {
+            rng,
+            duration_s,
+            period_s,
+            base,
+            lambda_max,
+            quiet_s,
+            burst_s,
+            t: 0.0,
+            in_burst: false,
+            next_switch,
+        }
+    }
+}
+
+impl TimestampStream for SynthAzure {
+    fn next_ts(&mut self) -> Option<f64> {
+        loop {
+            self.t += self.rng.exp(self.lambda_max);
+            if self.t > self.duration_s {
+                return None;
+            }
+            while self.t >= self.next_switch {
+                self.in_burst = !self.in_burst;
+                let dwell = if self.in_burst { self.burst_s } else { self.quiet_s };
+                self.next_switch += self.rng.exp(1.0 / dwell);
+            }
+            let angle = 2.0 * std::f64::consts::PI * self.t / self.period_s;
+            let mut lambda = self.base * (1.0 + Self::AMPLITUDE * angle.sin());
+            if self.in_burst {
+                lambda *= Self::BURST_X;
+            }
+            if self.rng.f64() <= lambda / self.lambda_max {
+                return Some(self.t);
+            }
+        }
+    }
+}
+
+/// Lifts a [`TimestampStream`] to an [`ArrivalStream`] by drawing one
+/// input length per arrival from `rng` — the draw order matches
+/// [`ReplayTrace::arrivals`] on the materialized equivalent.
+pub struct WithLengths<S: TimestampStream> {
+    inner: S,
+    model: ModelId,
+    rng: Rng,
+    rate_hint: Option<f64>,
+    duration_hint_s: Option<f64>,
+}
+
+impl<S: TimestampStream> WithLengths<S> {
+    pub fn new(inner: S, model: ModelId, rng: Rng) -> WithLengths<S> {
+        WithLengths { inner, model, rng, rate_hint: None, duration_hint_s: None }
+    }
+
+    /// Attach rate/duration hints (usually from a [`StreamSpec`] probe).
+    pub fn with_hints(mut self, rate_qps: Option<f64>, duration_s: Option<f64>) -> Self {
+        self.rate_hint = rate_qps;
+        self.duration_hint_s = duration_s;
+        self
+    }
+}
+
+impl<S: TimestampStream> ArrivalStream for WithLengths<S> {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        let t = self.inner.next_ts()?;
+        Some(Arrival { at: secs(t), len_s: draw_len(self.model, &mut self.rng) })
+    }
+
+    fn rate_hint(&self) -> Option<f64> {
+        self.rate_hint
+    }
+
+    fn duration_hint_s(&self) -> Option<f64> {
+        self.duration_hint_s
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chunked trace-file readers.
+// ---------------------------------------------------------------------
+
+/// Streaming CSV trace reader: one record per line, first field is the
+/// timestamp in seconds; blank lines, `#` comments, and one non-numeric
+/// header line are skipped — the same grammar as
+/// [`ReplayTrace::from_csv`], but holding only the current line in
+/// memory. [`scan_trace_file`] runs this same reader as a validation
+/// pass, so the streaming replay pass ([`TimestampStream::next_ts`])
+/// treats any residual error (a file mutated between passes) as
+/// end-of-stream.
+pub struct CsvTraceReader {
+    rd: BufReader<File>,
+    line: String,
+    lineno: usize,
+    prev: Option<f64>,
+}
+
+impl CsvTraceReader {
+    pub fn open(path: &str) -> anyhow::Result<CsvTraceReader> {
+        let f =
+            File::open(path).map_err(|e| anyhow::anyhow!("cannot read trace '{path}': {e}"))?;
+        Ok(CsvTraceReader { rd: BufReader::new(f), line: String::new(), lineno: 0, prev: None })
+    }
+
+    /// The next timestamp, or a parse/order error naming the line.
+    pub fn try_next_ts(&mut self) -> anyhow::Result<Option<f64>> {
+        loop {
+            self.line.clear();
+            if self.rd.read_line(&mut self.line)? == 0 {
+                return Ok(None);
+            }
+            self.lineno += 1;
+            let line = self.line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let field = line.split(',').next().unwrap_or("").trim();
+            match field.parse::<f64>() {
+                Ok(t) => {
+                    anyhow::ensure!(
+                        t.is_finite() && t >= 0.0,
+                        "trace CSV line {}: bad timestamp {t}",
+                        self.lineno
+                    );
+                    if let Some(prev) = self.prev {
+                        anyhow::ensure!(
+                            t >= prev,
+                            "trace CSV line {}: timestamp {t} runs backwards (previous {prev})",
+                            self.lineno
+                        );
+                    }
+                    self.prev = Some(t);
+                    return Ok(Some(t));
+                }
+                // A header is only acceptable before any data row.
+                Err(_) if self.prev.is_none() => continue,
+                Err(_) => {
+                    anyhow::bail!("trace CSV line {}: bad timestamp '{field}'", self.lineno)
+                }
+            }
+        }
+    }
+}
+
+impl TimestampStream for CsvTraceReader {
+    fn next_ts(&mut self) -> Option<f64> {
+        self.try_next_ts().ok().flatten()
+    }
+}
+
+/// Streaming JSON trace reader: scans to the first `[` and yields the
+/// comma-separated numbers up to the matching first `]` — the same
+/// grammar as [`ReplayTrace::from_json`], but reading the file in
+/// buffered chunks instead of one giant string.
+pub struct JsonTraceReader {
+    rd: BufReader<File>,
+    in_array: bool,
+    done: bool,
+    elem: usize,
+    prev: Option<f64>,
+}
+
+impl JsonTraceReader {
+    pub fn open(path: &str) -> anyhow::Result<JsonTraceReader> {
+        let f =
+            File::open(path).map_err(|e| anyhow::anyhow!("cannot read trace '{path}': {e}"))?;
+        Ok(JsonTraceReader {
+            rd: BufReader::new(f),
+            in_array: false,
+            done: false,
+            elem: 0,
+            prev: None,
+        })
+    }
+
+    fn next_byte(&mut self) -> anyhow::Result<Option<u8>> {
+        let buf = self.rd.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(None);
+        }
+        let b = buf[0];
+        self.rd.consume(1);
+        Ok(Some(b))
+    }
+
+    /// The next timestamp, or a parse/order error naming the element.
+    pub fn try_next_ts(&mut self) -> anyhow::Result<Option<f64>> {
+        if self.done {
+            return Ok(None);
+        }
+        while !self.in_array {
+            match self.next_byte()? {
+                Some(b'[') => self.in_array = true,
+                Some(_) => continue,
+                None => anyhow::bail!("no JSON array in trace"),
+            }
+        }
+        let mut tok = String::new();
+        loop {
+            let (end_of_array, end_of_elem) = match self.next_byte()? {
+                Some(b']') => (true, true),
+                Some(b',') => (false, true),
+                Some(b) => {
+                    tok.push(b as char);
+                    (false, false)
+                }
+                None => anyhow::bail!("unterminated JSON array in trace"),
+            };
+            if !end_of_elem {
+                continue;
+            }
+            self.done = end_of_array;
+            let i = self.elem;
+            self.elem += 1;
+            let trimmed = tok.trim();
+            if trimmed.is_empty() {
+                if self.done {
+                    return Ok(None);
+                }
+                tok.clear();
+                continue;
+            }
+            let t = trimmed.parse::<f64>().map_err(|_| {
+                anyhow::anyhow!("JSON trace element {i}: bad timestamp '{trimmed}'")
+            })?;
+            anyhow::ensure!(t.is_finite() && t >= 0.0, "JSON trace element {i}: bad timestamp {t}");
+            if let Some(prev) = self.prev {
+                anyhow::ensure!(
+                    t >= prev,
+                    "JSON trace element {i}: timestamp {t} runs backwards (previous {prev})"
+                );
+            }
+            self.prev = Some(t);
+            return Ok(Some(t));
+        }
+    }
+}
+
+impl TimestampStream for JsonTraceReader {
+    fn next_ts(&mut self) -> Option<f64> {
+        self.try_next_ts().ok().flatten()
+    }
+}
+
+/// Extension-dispatched chunked trace-file reader (`.json` → JSON,
+/// anything else → CSV — the same rule as [`ReplayTrace::load`]).
+pub enum TraceFileReader {
+    Csv(CsvTraceReader),
+    Json(JsonTraceReader),
+}
+
+impl TraceFileReader {
+    pub fn open(path: &str) -> anyhow::Result<TraceFileReader> {
+        if path.ends_with(".json") {
+            Ok(TraceFileReader::Json(JsonTraceReader::open(path)?))
+        } else {
+            Ok(TraceFileReader::Csv(CsvTraceReader::open(path)?))
+        }
+    }
+
+    pub fn try_next_ts(&mut self) -> anyhow::Result<Option<f64>> {
+        match self {
+            TraceFileReader::Csv(r) => r.try_next_ts(),
+            TraceFileReader::Json(r) => r.try_next_ts(),
+        }
+    }
+}
+
+impl TimestampStream for TraceFileReader {
+    fn next_ts(&mut self) -> Option<f64> {
+        self.try_next_ts().ok().flatten()
+    }
+}
+
+/// Shape summary of a timestamp source from a full validation pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceScan {
+    /// Number of timestamps.
+    pub len: usize,
+    /// First timestamp, seconds.
+    pub first_s: f64,
+    /// Last timestamp, seconds (the trace span).
+    pub last_s: f64,
+}
+
+/// Validate a trace file end-to-end in O(1) memory and report its shape.
+/// This is the pass-1 of the two-pass streaming protocol: every
+/// malformed row is rejected here with line/element context, so the
+/// replay pass can treat errors as end-of-stream.
+pub fn scan_trace_file(path: &str) -> anyhow::Result<TraceScan> {
+    let mut rd = TraceFileReader::open(path)?;
+    let scan = scan_ts(|| rd.try_next_ts()).map_err(|e| anyhow::anyhow!("trace '{path}': {e}"))?;
+    scan.ok_or_else(|| {
+        let what = if path.ends_with(".json") {
+            "JSON trace array is empty"
+        } else {
+            "trace CSV has no data rows"
+        };
+        anyhow::anyhow!("trace '{path}': {what}")
+    })
+}
+
+/// Drain a fallible timestamp source, returning its shape (or `None` if
+/// it yields nothing).
+fn scan_ts(
+    mut next: impl FnMut() -> anyhow::Result<Option<f64>>,
+) -> anyhow::Result<Option<TraceScan>> {
+    let mut scan: Option<TraceScan> = None;
+    while let Some(t) = next()? {
+        match &mut scan {
+            None => scan = Some(TraceScan { len: 1, first_s: t, last_s: t }),
+            Some(s) => {
+                s.len += 1;
+                s.last_s = t;
+            }
+        }
+    }
+    Ok(scan)
+}
+
+// ---------------------------------------------------------------------
+// Rescaling adapters (streaming equivalents of `ReplayTrace::rescaled`).
+// ---------------------------------------------------------------------
+
+/// Divides every timestamp by `factor` — the streaming form of
+/// [`crate::workload::Rescale::Factor`] (identical float op, so scaled
+/// streams stay bit-identical to scaled materialized traces).
+pub struct ScaleTs {
+    inner: Box<dyn TimestampStream>,
+    factor: f64,
+}
+
+impl ScaleTs {
+    pub fn new(inner: Box<dyn TimestampStream>, factor: f64) -> ScaleTs {
+        assert!(factor > 0.0, "rate scale must be positive");
+        ScaleTs { inner, factor }
+    }
+}
+
+impl TimestampStream for ScaleTs {
+    fn next_ts(&mut self) -> Option<f64> {
+        self.inner.next_ts().map(|t| t / self.factor)
+    }
+}
+
+/// I.i.d. thinning with keep-probability `keep` — the streaming form of
+/// [`crate::workload::Rescale::Thin`]: the same `Rng` stream and the
+/// same `f64() < keep` test per candidate, so the surviving timestamps
+/// match `thinned_to_qps` exactly, including the degenerate all-dropped
+/// case (which yields the first timestamp once, at end-of-source).
+pub struct ThinTs {
+    inner: Box<dyn TimestampStream>,
+    keep: f64,
+    rng: Rng,
+    first: Option<f64>,
+    kept: usize,
+}
+
+impl ThinTs {
+    /// `seed` matches the `thinned_to_qps` seed parameter (the reader
+    /// mixes in the same constant internally).
+    pub fn new(inner: Box<dyn TimestampStream>, keep: f64, seed: u64) -> ThinTs {
+        ThinTs { inner, keep, rng: Rng::new(seed ^ 0x7417_11ED), first: None, kept: 0 }
+    }
+}
+
+impl TimestampStream for ThinTs {
+    fn next_ts(&mut self) -> Option<f64> {
+        loop {
+            match self.inner.next_ts() {
+                Some(t) => {
+                    if self.first.is_none() {
+                        self.first = Some(t);
+                    }
+                    if self.rng.f64() < self.keep {
+                        self.kept += 1;
+                        return Some(t);
+                    }
+                }
+                None => {
+                    if self.kept == 0 {
+                        // Degenerate target (keep-probability ~0): one
+                        // arrival is the smallest non-empty replay.
+                        if let Some(f) = self.first.take() {
+                            self.kept = 1;
+                            return Some(f);
+                        }
+                    }
+                    return None;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// StreamSpec: a cloneable description a tenant can carry.
+// ---------------------------------------------------------------------
+
+/// Where a [`StreamSpec`]'s raw timestamps come from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamSource {
+    /// The deterministic Azure-shaped synthetic generator
+    /// ([`SynthAzure`]) — multi-million-row traces at zero memory.
+    Azure { seed: u64, duration_s: f64, base_qps: f64 },
+    /// A CSV/JSON trace file, read in bounded-memory chunks.
+    File { path: String },
+}
+
+/// A cloneable, openable description of an arrival stream: raw source
+/// plus the rescale knobs the CLI trace path applies (fit the span onto
+/// the simulated horizon, then thin to a per-tenant rate). Stored on
+/// `ClusterTenant` so a config stays `Clone + Send + Sync`; each DES
+/// run opens its own live stream.
+///
+/// Opening is a two-pass protocol: [`StreamSpec::probe`] validates the
+/// source end-to-end and computes the final shape (request count, mean
+/// rate, span) in O(1) memory; [`StreamSpec::open`] replays it lazily.
+/// Both passes are deterministic, so `probe().requests` is exactly the
+/// number of arrivals the opened stream yields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSpec {
+    pub source: StreamSource,
+    /// Stretch/compress the timeline onto this span (seconds) —
+    /// equivalent to [`crate::workload::Rescale::ToDuration`].
+    pub fit_duration_s: Option<f64>,
+    /// Thin to this mean rate (queries/s) after fitting — equivalent to
+    /// [`crate::workload::Rescale::Thin`]. Ignored at or above the
+    /// source's mean rate (replay cannot invent arrivals).
+    pub thin_qps: Option<f64>,
+    /// Seed for the thinning filter.
+    pub thin_seed: u64,
+}
+
+/// Final shape of a [`StreamSpec`] after rescaling, from a probe pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamProbe {
+    /// Exact number of arrivals the opened stream yields.
+    pub requests: usize,
+    /// Mean offered rate of the final stream, queries/s.
+    pub mean_qps: f64,
+    /// Span of the final stream, seconds.
+    pub duration_s: f64,
+}
+
+impl StreamSpec {
+    /// A plain source with no rescaling.
+    pub fn new(source: StreamSource) -> StreamSpec {
+        StreamSpec { source, fit_duration_s: None, thin_qps: None, thin_seed: 0 }
+    }
+
+    /// Synthetic Azure-shaped source (see [`SynthAzure`]).
+    pub fn azure(seed: u64, duration_s: f64, base_qps: f64) -> StreamSpec {
+        StreamSpec::new(StreamSource::Azure { seed, duration_s, base_qps })
+    }
+
+    /// Chunked CSV/JSON file source (see [`TraceFileReader`]).
+    pub fn file(path: impl Into<String>) -> StreamSpec {
+        StreamSpec::new(StreamSource::File { path: path.into() })
+    }
+
+    /// Fit the timeline onto `duration_s` (builder-style).
+    pub fn fit_duration(mut self, duration_s: f64) -> StreamSpec {
+        assert!(duration_s > 0.0, "duration must be positive");
+        self.fit_duration_s = Some(duration_s);
+        self
+    }
+
+    /// Thin to a ~`qps` mean with a seeded filter (builder-style).
+    pub fn thin_to_qps(mut self, qps: f64, seed: u64) -> StreamSpec {
+        assert!(qps > 0.0, "target rate must be positive");
+        self.thin_qps = Some(qps);
+        self.thin_seed = seed;
+        self
+    }
+
+    /// One validating pass over the raw source.
+    fn scan_source(&self) -> anyhow::Result<TraceScan> {
+        match &self.source {
+            StreamSource::Azure { seed, duration_s, base_qps } => {
+                let mut gen = SynthAzure::new(*seed, *duration_s, *base_qps);
+                scan_ts(|| Ok(gen.next_ts()))?
+                    .ok_or_else(|| anyhow::anyhow!("synthetic trace is empty"))
+            }
+            StreamSource::File { path } => scan_trace_file(path),
+        }
+    }
+
+    /// Open the raw source for a replay pass (already validated).
+    fn open_source(&self) -> anyhow::Result<Box<dyn TimestampStream>> {
+        Ok(match &self.source {
+            StreamSource::Azure { seed, duration_s, base_qps } => {
+                Box::new(SynthAzure::new(*seed, *duration_s, *base_qps))
+            }
+            StreamSource::File { path } => Box::new(TraceFileReader::open(path)?),
+        })
+    }
+
+    /// Timeline-compression factor and scaled span from a raw scan —
+    /// float-for-float the computation `scaled_to_duration` does, so
+    /// scaled timestamps match the materialized path bit-for-bit.
+    fn fit(&self, raw: &TraceScan) -> (Option<f64>, f64) {
+        match self.fit_duration_s {
+            Some(d) => {
+                let factor = raw.last_s.max(1e-9) / d;
+                (Some(factor), raw.last_s / factor)
+            }
+            None => (None, raw.last_s),
+        }
+    }
+
+    /// Keep-probability for the thinning stage (`None` = no thinning,
+    /// including targets at/above the source mean).
+    fn keep_prob(&self, len: usize, scaled_dur: f64) -> Option<f64> {
+        let qps = self.thin_qps?;
+        let mean = len as f64 / scaled_dur.max(1e-9);
+        let keep = qps / mean;
+        (keep < 1.0).then_some(keep)
+    }
+
+    /// Validate the source and compute the final stream shape (request
+    /// count, mean rate, span) without materializing anything. Costs one
+    /// source pass, or two when thinning below the source rate.
+    pub fn probe(&self) -> anyhow::Result<StreamProbe> {
+        let raw = self.scan_source()?;
+        let (factor, scaled_dur) = self.fit(&raw);
+        let scale = |t: f64| factor.map_or(t, |f| t / f);
+        let Some(keep) = self.keep_prob(raw.len, scaled_dur) else {
+            return Ok(StreamProbe {
+                requests: raw.len,
+                mean_qps: raw.len as f64 / scaled_dur.max(1e-9),
+                duration_s: scaled_dur,
+            });
+        };
+        // Second pass: replay the thinning filter to count survivors.
+        let mut src = self.open_source()?;
+        let mut rng = Rng::new(self.thin_seed ^ 0x7417_11ED);
+        let mut kept = 0usize;
+        let mut last_kept = scale(raw.first_s);
+        while let Some(t) = src.next_ts() {
+            if rng.f64() < keep {
+                kept += 1;
+                last_kept = scale(t);
+            }
+        }
+        let requests = kept.max(1); // all-dropped => first timestamp once
+        Ok(StreamProbe {
+            requests,
+            mean_qps: requests as f64 / last_kept.max(1e-9),
+            duration_s: last_kept,
+        })
+    }
+
+    /// Open the stream for a run: raw source → optional timeline fit →
+    /// optional thinning → per-arrival length draws from `gen_rng`.
+    /// Arrival-for-arrival identical to materializing the source as a
+    /// [`ReplayTrace`], applying the equivalent `rescaled` calls, and
+    /// calling `arrivals(model, gen_rng)`.
+    pub fn open(&self, model: ModelId, gen_rng: Rng) -> anyhow::Result<Box<dyn ArrivalStream>> {
+        let raw = self.scan_source()?;
+        let (factor, scaled_dur) = self.fit(&raw);
+        let mut ts: Box<dyn TimestampStream> = self.open_source()?;
+        if let Some(f) = factor {
+            ts = Box::new(ScaleTs::new(ts, f));
+        }
+        let mut len = raw.len;
+        if let Some(keep) = self.keep_prob(raw.len, scaled_dur) {
+            ts = Box::new(ThinTs::new(ts, keep, self.thin_seed));
+            len = 0; // final length only known from probe(); hint below
+        }
+        let probe_hint = if len == 0 { self.probe().ok() } else { None };
+        let (rate, dur) = match probe_hint {
+            Some(p) => (Some(p.mean_qps), Some(p.duration_s)),
+            None => (Some(len as f64 / scaled_dur.max(1e-9)), Some(scaled_dur)),
+        };
+        Ok(Box::new(WithLengths::new(ts, model, gen_rng).with_hints(rate, dur)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Rescale;
+
+    fn collect_ts(mut s: impl TimestampStream) -> Vec<f64> {
+        std::iter::from_fn(|| s.next_ts()).collect()
+    }
+
+    fn collect_arrivals(mut s: impl ArrivalStream) -> Vec<Arrival> {
+        std::iter::from_fn(|| s.next_arrival()).collect()
+    }
+
+    fn tmp_path(name: &str) -> String {
+        let dir = std::env::temp_dir().join("preba_stream_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn query_gen_stream_matches_take() {
+        let eager = QueryGen::new(ModelId::CitriNet, 80.0, Rng::new(11)).take(500);
+        let gen = QueryGen::new(ModelId::CitriNet, 80.0, Rng::new(11));
+        assert_eq!(gen.rate_hint(), Some(80.0));
+        let lazy = collect_arrivals(Bounded::new(gen, 500));
+        assert_eq!(lazy.len(), 500);
+        for (a, b) in eager.iter().zip(&lazy) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.len_s.to_bits(), b.len_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn replay_cursor_matches_materialized_arrivals() {
+        let t = ReplayTrace::synth_azure(3, 20.0, 50.0);
+        let eager = t.arrivals(ModelId::CitriNet, &mut Rng::new(9));
+        let lazy = collect_arrivals(t.cursor(ModelId::CitriNet, Rng::new(9)));
+        assert_eq!(eager.len(), lazy.len());
+        for (a, b) in eager.iter().zip(&lazy) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.len_s.to_bits(), b.len_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn synth_azure_stream_matches_materialized_trace() {
+        let eager = ReplayTrace::synth_azure(7, 40.0, 300.0);
+        let lazy = collect_ts(SynthAzure::new(7, 40.0, 300.0));
+        assert_eq!(eager.timestamps_s(), &lazy[..]);
+    }
+
+    #[test]
+    fn bounded_caps_infinite_sources() {
+        let gen = TraceGen::new(
+            ModelId::MobileNet,
+            crate::workload::RateProfile::Constant { qps: 40.0 },
+            Rng::new(4),
+        );
+        let got = collect_arrivals(Bounded::new(gen, 37));
+        assert_eq!(got.len(), 37);
+    }
+
+    #[test]
+    fn csv_reader_matches_from_csv() {
+        let text = "ts,extra\n# comment\n0.25,a\n0.5,b\n\n1.5,c\n";
+        let path = tmp_path("match.csv");
+        std::fs::write(&path, text).unwrap();
+        let eager = ReplayTrace::from_csv(text).unwrap();
+        let lazy = collect_ts(CsvTraceReader::open(&path).unwrap());
+        assert_eq!(eager.timestamps_s(), &lazy[..]);
+        assert_eq!(
+            scan_trace_file(&path).unwrap(),
+            TraceScan { len: 3, first_s: 0.25, last_s: 1.5 }
+        );
+    }
+
+    #[test]
+    fn json_reader_matches_from_json() {
+        let text = "{\"arrivals_s\": [0.25, 0.5, 1.5]}";
+        let path = tmp_path("match.json");
+        std::fs::write(&path, text).unwrap();
+        let eager = ReplayTrace::from_json(text).unwrap();
+        let lazy = collect_ts(JsonTraceReader::open(&path).unwrap());
+        assert_eq!(eager.timestamps_s(), &lazy[..]);
+    }
+
+    #[test]
+    fn scan_rejects_corrupt_files_with_context() {
+        let path = tmp_path("corrupt.csv");
+        std::fs::write(&path, "h1\n1.0\nnot-a-number\n").unwrap();
+        let err = scan_trace_file(&path).unwrap_err().to_string();
+        assert!(err.contains("line 3") && err.contains("not-a-number"), "{err}");
+        let path = tmp_path("backwards.json");
+        std::fs::write(&path, "[1.0, 0.5]").unwrap();
+        let err = scan_trace_file(&path).unwrap_err().to_string();
+        assert!(err.contains("backwards"), "{err}");
+        let path = tmp_path("empty.csv");
+        std::fs::write(&path, "# only comments\n").unwrap();
+        assert!(scan_trace_file(&path).is_err());
+    }
+
+    #[test]
+    fn spec_rescaling_matches_materialized_rescale() {
+        // Azure source, fit onto a 10 s horizon, thinned to a low rate:
+        // the full CLI trace pipeline, streamed vs materialized.
+        let spec = StreamSpec::azure(21, 30.0, 200.0).fit_duration(10.0).thin_to_qps(40.0, 77);
+        let raw = ReplayTrace::synth_azure(21, 30.0, 200.0);
+        let eager = raw
+            .rescaled(Rescale::ToDuration(10.0))
+            .rescaled(Rescale::Thin { qps: 40.0, seed: 77 })
+            .arrivals(ModelId::CitriNet, &mut Rng::new(5));
+        let probe = spec.probe().unwrap();
+        assert_eq!(probe.requests, eager.len());
+        let lazy = collect_arrivals(spec.open(ModelId::CitriNet, Rng::new(5)).unwrap());
+        assert_eq!(eager.len(), lazy.len());
+        for (a, b) in eager.iter().zip(&lazy) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.len_s.to_bits(), b.len_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn spec_degenerate_thin_yields_one_arrival() {
+        let spec = StreamSpec::azure(5, 10.0, 30.0).thin_to_qps(1e-9, 3);
+        let raw = ReplayTrace::synth_azure(5, 10.0, 30.0);
+        let eager = raw.rescaled(Rescale::Thin { qps: 1e-9, seed: 3 });
+        assert_eq!(eager.len(), 1);
+        assert_eq!(spec.probe().unwrap().requests, 1);
+        let lazy = collect_arrivals(spec.open(ModelId::MobileNet, Rng::new(1)).unwrap());
+        assert_eq!(lazy.len(), 1);
+        assert_eq!(lazy[0].at, secs(eager.timestamps_s()[0]));
+    }
+
+    #[test]
+    fn spec_probe_counts_match_open_counts() {
+        for (fit, thin) in
+            [(None, None), (Some(7.0), None), (None, Some(25.0)), (Some(5.0), Some(10.0))]
+        {
+            let mut spec = StreamSpec::azure(13, 20.0, 80.0);
+            if let Some(d) = fit {
+                spec = spec.fit_duration(d);
+            }
+            if let Some(q) = thin {
+                spec = spec.thin_to_qps(q, 42);
+            }
+            let probe = spec.probe().unwrap();
+            let got = collect_arrivals(spec.open(ModelId::MobileNet, Rng::new(2)).unwrap());
+            assert_eq!(probe.requests, got.len(), "fit={fit:?} thin={thin:?}");
+        }
+    }
+}

@@ -20,6 +20,7 @@ use crate::clock::{secs, Nanos};
 use crate::models::{ModelId, ModelKind};
 use crate::util::Rng;
 
+use super::stream::{ReplayCursor, SynthAzure, TimestampStream};
 use super::{sample_librispeech_len, Arrival};
 
 /// Time-varying offered-rate profile, queries/s at time `t`.
@@ -156,6 +157,38 @@ impl TraceGen {
     pub fn take(&mut self, n: usize) -> Vec<Arrival> {
         (0..n).map(|_| self.next()).collect()
     }
+
+    /// The generator's rate profile.
+    pub fn profile(&self) -> &RateProfile {
+        &self.profile
+    }
+}
+
+/// How to rescale a [`ReplayTrace`]'s timeline (see
+/// [`ReplayTrace::rescaled`]). The first three re-time every arrival;
+/// [`Rescale::Thin`] drops arrivals without moving the survivors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Rescale {
+    /// Multiply the offered rate by this factor by compressing (or
+    /// stretching) the timeline. The arrival *pattern* (burst structure,
+    /// diurnal shape) is preserved.
+    Factor(f64),
+    /// [`Rescale::Factor`] chosen to hit a target mean rate, queries/s.
+    ToQps(f64),
+    /// Stretch/compress the timeline so the trace spans this many
+    /// seconds (e.g. to align a recorded day onto a simulated horizon).
+    ToDuration(f64),
+    /// Deterministically thin to a ~`qps` mean WITHOUT moving the
+    /// surviving timestamps: each arrival is kept i.i.d. with
+    /// probability `qps / mean_qps()`, so the burst/diurnal shape and
+    /// the timeline stay intact. A target at or above the current mean
+    /// keeps everything — replay cannot invent arrivals.
+    Thin {
+        /// Target mean rate, queries/s.
+        qps: f64,
+        /// Seed for the keep/drop filter.
+        seed: u64,
+    },
 }
 
 /// A recorded arrival-timestamp trace for replay (sorted seconds from
@@ -164,12 +197,12 @@ impl TraceGen {
 /// not the autocorrelation structure real fleets see.
 ///
 /// ```
-/// use preba::workload::ReplayTrace;
+/// use preba::workload::{ReplayTrace, Rescale};
 ///
 /// let t = ReplayTrace::from_csv("# header\n0.0\n0.5\n1.0\n").unwrap();
 /// assert_eq!(t.len(), 3);
 /// // Rate-scaling knob: 2× the rate = timestamps squeezed 2×.
-/// let fast = t.scaled(2.0);
+/// let fast = t.rescaled(Rescale::Factor(2.0));
 /// assert!((fast.duration_s() - 0.5).abs() < 1e-12);
 /// ```
 #[derive(Debug, Clone, PartialEq)]
@@ -207,46 +240,67 @@ impl ReplayTrace {
         self.at_s.len() as f64 / self.duration_s().max(1e-9)
     }
 
-    /// Rate-scaling knob: multiply the offered rate by `factor` by
-    /// compressing (or stretching) the timeline. The arrival *pattern*
-    /// (burst structure, diurnal shape) is preserved.
+    /// The raw timestamps, seconds from trace start (sorted).
+    pub fn timestamps_s(&self) -> &[f64] {
+        &self.at_s
+    }
+
+    /// Rescale the trace's timeline or rate (see [`Rescale`] for the
+    /// four knobs). This subsumes the deprecated
+    /// `scaled`/`scaled_to_qps`/`scaled_to_duration`/`thinned_to_qps`
+    /// quartet behind one documented entry point.
+    pub fn rescaled(&self, rescale: Rescale) -> ReplayTrace {
+        match rescale {
+            Rescale::Factor(factor) => {
+                assert!(factor > 0.0, "rate scale must be positive");
+                ReplayTrace { at_s: self.at_s.iter().map(|t| t / factor).collect() }
+            }
+            Rescale::ToQps(qps) => self.rescaled(Rescale::Factor(qps / self.mean_qps())),
+            Rescale::ToDuration(duration_s) => {
+                assert!(duration_s > 0.0, "duration must be positive");
+                self.rescaled(Rescale::Factor(self.duration_s().max(1e-9) / duration_s))
+            }
+            Rescale::Thin { qps, seed } => {
+                assert!(qps > 0.0, "target rate must be positive");
+                let keep = qps / self.mean_qps();
+                if keep >= 1.0 {
+                    return self.clone();
+                }
+                let mut rng = Rng::new(seed ^ 0x7417_11ED);
+                let kept: Vec<f64> =
+                    self.at_s.iter().copied().filter(|_| rng.f64() < keep).collect();
+                if kept.is_empty() {
+                    // Degenerate target (keep-probability ~0): one arrival
+                    // is the smallest non-empty replay.
+                    return ReplayTrace { at_s: vec![self.at_s[0]] };
+                }
+                ReplayTrace { at_s: kept }
+            }
+        }
+    }
+
+    /// Multiply the offered rate by `factor`.
+    #[deprecated(note = "use rescaled(Rescale::Factor(factor))")]
     pub fn scaled(&self, factor: f64) -> ReplayTrace {
-        assert!(factor > 0.0, "rate scale must be positive");
-        ReplayTrace { at_s: self.at_s.iter().map(|t| t / factor).collect() }
+        self.rescaled(Rescale::Factor(factor))
     }
 
-    /// [`ReplayTrace::scaled`] to hit a target mean rate.
+    /// Scale to hit a target mean rate.
+    #[deprecated(note = "use rescaled(Rescale::ToQps(qps))")]
     pub fn scaled_to_qps(&self, qps: f64) -> ReplayTrace {
-        self.scaled(qps / self.mean_qps())
+        self.rescaled(Rescale::ToQps(qps))
     }
 
-    /// Stretch/compress the timeline so the trace spans `duration_s`
-    /// (e.g. to align a recorded day onto a simulated horizon).
+    /// Stretch/compress the timeline onto `duration_s`.
+    #[deprecated(note = "use rescaled(Rescale::ToDuration(duration_s))")]
     pub fn scaled_to_duration(&self, duration_s: f64) -> ReplayTrace {
-        assert!(duration_s > 0.0, "duration must be positive");
-        self.scaled(self.duration_s().max(1e-9) / duration_s)
+        self.rescaled(Rescale::ToDuration(duration_s))
     }
 
-    /// Deterministically thin the trace to a ~`qps` mean WITHOUT moving
-    /// the surviving timestamps: each arrival is kept i.i.d. with
-    /// probability `qps / mean_qps()`, so the burst/diurnal shape and
-    /// the timeline stay intact (unlike [`ReplayTrace::scaled`], which
-    /// re-times every arrival). A target at or above the current mean
-    /// keeps everything — replay cannot invent arrivals.
+    /// Thin to a ~`qps` mean without re-timing survivors.
+    #[deprecated(note = "use rescaled(Rescale::Thin { qps, seed })")]
     pub fn thinned_to_qps(&self, qps: f64, seed: u64) -> ReplayTrace {
-        assert!(qps > 0.0, "target rate must be positive");
-        let keep = qps / self.mean_qps();
-        if keep >= 1.0 {
-            return self.clone();
-        }
-        let mut rng = Rng::new(seed ^ 0x7417_11ED);
-        let kept: Vec<f64> = self.at_s.iter().copied().filter(|_| rng.f64() < keep).collect();
-        if kept.is_empty() {
-            // Degenerate target (keep-probability ~0): one arrival is the
-            // smallest non-empty replay.
-            return ReplayTrace { at_s: vec![self.at_s[0]] };
-        }
-        ReplayTrace { at_s: kept }
+        self.rescaled(Rescale::Thin { qps, seed })
     }
 
     /// Materialize the trace as DES arrivals for `model` (audio lengths
@@ -262,6 +316,13 @@ impl ReplayTrace {
                 Arrival { at: secs(t), len_s }
             })
             .collect()
+    }
+
+    /// Cursor-based [`ArrivalStream`](super::ArrivalStream) view of the
+    /// trace: yields exactly what [`ReplayTrace::arrivals`] materializes
+    /// (same order, same length draws from `rng`), one arrival at a time.
+    pub fn cursor(&self, model: ModelId, rng: Rng) -> ReplayCursor {
+        ReplayCursor::new(self, model, rng)
     }
 
     /// Parse a CSV of arrival timestamps: one record per line, first
@@ -355,42 +416,13 @@ impl ReplayTrace {
     /// public Azure Functions / LAQS arrival datasets, generated
     /// deterministically from `seed` so experiments need no dataset
     /// download. Mean rate ≈ `base_qps`.
+    /// The state machine lives in [`SynthAzure`] (the streaming form, for
+    /// traces too large to materialize); this collects it.
     pub fn synth_azure(seed: u64, duration_s: f64, base_qps: f64) -> ReplayTrace {
-        assert!(duration_s > 0.0 && base_qps > 0.0);
-        let mut rng = Rng::new(seed ^ 0xA27E_57AC_E5);
-        let period_s = duration_s / 2.0;
-        const AMPLITUDE: f64 = 0.6;
-        const BURST_X: f64 = 3.0;
-        // Burst dwell ≪ quiet dwell: spikes, not regimes. The long-run
-        // burst fraction is dwell_burst/(dwell_burst+dwell_quiet) = 1/11,
-        // so the stationary rate multiplier is ~1.18; fold it out of
-        // `base` to keep the realized mean near `base_qps`.
-        let quiet_s = duration_s / 12.0;
-        let burst_s = duration_s / 120.0;
-        let burst_frac = burst_s / (burst_s + quiet_s);
-        let base = base_qps / (1.0 + (BURST_X - 1.0) * burst_frac);
-        let lambda_max = base * (1.0 + AMPLITUDE) * BURST_X;
+        let mut gen = SynthAzure::new(seed, duration_s, base_qps);
         let mut at_s = Vec::new();
-        let mut t = 0.0;
-        let mut in_burst = false;
-        let mut next_switch = rng.exp(1.0 / quiet_s);
-        loop {
-            t += rng.exp(lambda_max);
-            if t > duration_s {
-                break;
-            }
-            while t >= next_switch {
-                in_burst = !in_burst;
-                next_switch += rng.exp(1.0 / if in_burst { burst_s } else { quiet_s });
-            }
-            let angle = 2.0 * std::f64::consts::PI * t / period_s;
-            let mut lambda = base * (1.0 + AMPLITUDE * angle.sin());
-            if in_burst {
-                lambda *= BURST_X;
-            }
-            if rng.f64() <= lambda / lambda_max {
-                at_s.push(t);
-            }
+        while let Some(t) = gen.next_ts() {
+            at_s.push(t);
         }
         ReplayTrace::new(at_s).expect("synthetic trace is non-empty")
     }
@@ -568,28 +600,39 @@ mod tests {
     #[test]
     fn replay_scaling_preserves_shape() {
         let t = ReplayTrace::new(vec![1.0, 2.0, 4.0, 8.0]).unwrap();
-        let s = t.scaled(4.0);
+        let s = t.rescaled(Rescale::Factor(4.0));
         assert!((s.duration_s() - 2.0).abs() < 1e-12);
         assert!((s.mean_qps() - 4.0 * t.mean_qps()).abs() < 1e-9);
-        let to = t.scaled_to_qps(10.0);
+        let to = t.rescaled(Rescale::ToQps(10.0));
         assert!((to.mean_qps() - 10.0).abs() < 1e-9);
     }
 
     #[test]
     fn replay_duration_fit_and_thinning_preserve_the_timeline() {
         let t = ReplayTrace::new((1..=400).map(|i| i as f64 * 0.01).collect()).unwrap();
-        let fit = t.scaled_to_duration(2.0);
+        let fit = t.rescaled(Rescale::ToDuration(2.0));
         assert!((fit.duration_s() - 2.0).abs() < 1e-9);
         assert_eq!(fit.len(), t.len());
         // Thinning halves the rate without re-timing survivors: every
         // kept timestamp exists in the source.
-        let thin = t.thinned_to_qps(0.5 * t.mean_qps(), 7);
+        let half = Rescale::Thin { qps: 0.5 * t.mean_qps(), seed: 7 };
+        let thin = t.rescaled(half);
         assert!(thin.len() < t.len());
         assert!(thin.len() > t.len() / 4, "thinning kept {} of {}", thin.len(), t.len());
         assert!((thin.duration_s() - t.duration_s()).abs() < 0.2 * t.duration_s());
-        assert_eq!(thin, t.thinned_to_qps(0.5 * t.mean_qps(), 7), "thinning not seeded");
+        assert_eq!(thin, t.rescaled(half), "thinning not seeded");
         // At or above the source rate, replay cannot invent arrivals.
-        assert_eq!(t.thinned_to_qps(10.0 * t.mean_qps(), 7), t);
+        assert_eq!(t.rescaled(Rescale::Thin { qps: 10.0 * t.mean_qps(), seed: 7 }), t);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_rescale_shims_delegate_to_rescaled() {
+        let t = ReplayTrace::new((1..=50).map(|i| i as f64 * 0.1).collect()).unwrap();
+        assert_eq!(t.scaled(2.0), t.rescaled(Rescale::Factor(2.0)));
+        assert_eq!(t.scaled_to_qps(7.0), t.rescaled(Rescale::ToQps(7.0)));
+        assert_eq!(t.scaled_to_duration(3.0), t.rescaled(Rescale::ToDuration(3.0)));
+        assert_eq!(t.thinned_to_qps(2.0, 9), t.rescaled(Rescale::Thin { qps: 2.0, seed: 9 }));
     }
 
     #[test]

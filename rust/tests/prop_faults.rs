@@ -36,11 +36,15 @@ fn random_faulted_cfg(rng: &mut Rng, sys: &PrebaConfig) -> ClusterConfig {
             t
         })
         .collect();
-    let mut cfg = ClusterConfig::new(n_gpus, PackStrategy::BestFit, tenants);
-    cfg.seed = rng.next_u64();
-    cfg.warmup_frac = 0.0;
-    cfg.reconfig = Some(preba::experiments::cluster::policy(sys));
-    cfg.admission = rng.below(2) == 0;
+    let mut cfg = ClusterConfig::builder()
+        .gpus(n_gpus)
+        .strategy(PackStrategy::BestFit)
+        .tenants(tenants)
+        .seed(rng.next_u64())
+        .warmup_frac(0.0)
+        .reconfig(preba::experiments::cluster::policy(sys))
+        .admission(rng.below(2) == 0)
+        .build();
     let mtbf = rng.range_f64(0.6, 2.5);
     let mttr = rng.range_f64(0.2, 0.8);
     let mut srng = rng.split(0xFA17);

@@ -1,0 +1,244 @@
+//! Properties of the streaming-arrival seam (`workload::stream`) and the
+//! sharded cluster DES: a tenant driven by a lazily-pulled [`StreamSpec`]
+//! must produce the byte-identical `ClusterOutcome` to the same tenant
+//! driven by an eagerly materialized [`ReplayTrace`]; the chunked
+//! CSV/JSON file readers must match the eager loader
+//! arrival-for-arrival; and the `preba cluster` CLI must print
+//! byte-identical reports at every `--shards` and `--jobs` setting.
+
+use std::process::Command;
+
+use preba::config::PrebaConfig;
+use preba::mig::{PackStrategy, ServiceModel, Slice};
+use preba::models::ModelId;
+use preba::prop_assert;
+use preba::server::cluster::{self, ClusterConfig, ClusterOutcome, ClusterTenant};
+use preba::util::prop::check;
+use preba::util::Rng;
+use preba::workload::{Arrival, ArrivalStream, Rescale, ReplayTrace, StreamSpec};
+
+/// Byte-level outcome comparison: event counts, horizon, allocations,
+/// integrated energy, and every per-tenant latency statistic down to the
+/// f64 bit pattern.
+fn same_outcome(a: &ClusterOutcome, b: &ClusterOutcome) -> Result<(), String> {
+    prop_assert!(a.events == b.events, "events {} != {}", a.events, b.events);
+    prop_assert!(a.horizon == b.horizon, "horizon {} != {}", a.horizon, b.horizon);
+    prop_assert!(a.dropped == b.dropped, "dropped {:?} != {:?}", a.dropped, b.dropped);
+    prop_assert!(
+        a.final_alloc == b.final_alloc,
+        "alloc {:?} != {:?}",
+        a.final_alloc,
+        b.final_alloc
+    );
+    prop_assert!(
+        a.energy.total_j().to_bits() == b.energy.total_j().to_bits(),
+        "energy {} J != {} J",
+        a.energy.total_j(),
+        b.energy.total_j()
+    );
+    prop_assert!(a.per_tenant.len() == b.per_tenant.len(), "tenant count");
+    for (i, ((ma, sa), (mb, sb))) in a.per_tenant.iter().zip(&b.per_tenant).enumerate() {
+        prop_assert!(ma == mb, "tenant {i} allocation {ma:?} != {mb:?}");
+        prop_assert!(
+            sa.completed == sb.completed,
+            "tenant {i} completed {} != {}",
+            sa.completed,
+            sb.completed
+        );
+        prop_assert!(
+            sa.p95_ms().to_bits() == sb.p95_ms().to_bits(),
+            "tenant {i} p95 {} != {}",
+            sa.p95_ms(),
+            sb.p95_ms()
+        );
+        prop_assert!(
+            sa.mean_ms().to_bits() == sb.mean_ms().to_bits(),
+            "tenant {i} mean {} != {}",
+            sa.mean_ms(),
+            sb.mean_ms()
+        );
+    }
+    Ok(())
+}
+
+/// The paired cluster configs: identical tenants, one fleet pulling
+/// arrivals lazily through [`StreamSpec`]s, the other replaying the
+/// equivalent materialized [`ReplayTrace`]s.
+fn paired_cfgs(rng: &mut Rng) -> (ClusterConfig, ClusterConfig) {
+    let horizon_s = 1.5 + rng.f64() * 1.5;
+    let trace_seed = rng.next_u64();
+    let cluster_seed = rng.next_u64();
+    let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+    let specs: Vec<(usize, f64, u64)> = (0..2)
+        .map(|_| {
+            let slices = 2 + rng.below(3) as usize;
+            let qps = rng.range_f64(0.25, 0.55) * slices as f64 * u;
+            (slices, qps, rng.next_u64())
+        })
+        .collect();
+    let max_qps = specs.iter().map(|s| s.1).fold(0.0f64, f64::max);
+
+    let streamed: Vec<ClusterTenant> = specs
+        .iter()
+        .map(|&(slices, qps, thin_seed)| {
+            let spec = StreamSpec::azure(trace_seed, horizon_s, max_qps)
+                .fit_duration(horizon_s)
+                .thin_to_qps(qps, thin_seed);
+            ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), slices, max_qps)
+                .with_stream(spec)
+                .expect("synthetic source probes")
+        })
+        .collect();
+    let materialized: Vec<ClusterTenant> = specs
+        .iter()
+        .map(|&(slices, qps, thin_seed)| {
+            let trace = ReplayTrace::synth_azure(trace_seed, horizon_s, max_qps)
+                .rescaled(Rescale::ToDuration(horizon_s))
+                .rescaled(Rescale::Thin { qps, seed: thin_seed });
+            ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), slices, max_qps)
+                .with_trace(trace)
+        })
+        .collect();
+    let cfg = |tenants| {
+        ClusterConfig::builder()
+            .gpus(2)
+            .strategy(PackStrategy::BestFit)
+            .tenants(tenants)
+            .seed(cluster_seed)
+            .build()
+    };
+    (cfg(streamed), cfg(materialized))
+}
+
+#[test]
+fn stream_tenants_match_materialized_trace_tenants() {
+    let sys = PrebaConfig::new();
+    check("stream == materialized", 24, |rng| {
+        let (streamed, materialized) = paired_cfgs(rng);
+        for (i, (s, m)) in streamed.tenants.iter().zip(&materialized.tenants).enumerate() {
+            prop_assert!(
+                s.requests == m.requests,
+                "tenant {i}: probe saw {} arrivals, trace holds {}",
+                s.requests,
+                m.requests
+            );
+            prop_assert!(
+                s.rate_qps.to_bits() == m.rate_qps.to_bits(),
+                "tenant {i}: probed rate {} != trace rate {}",
+                s.rate_qps,
+                m.rate_qps
+            );
+        }
+        let a = cluster::run(&streamed, &sys).expect("streamed config runs");
+        let b = cluster::run(&materialized, &sys).expect("materialized config runs");
+        same_outcome(&a, &b)
+    });
+}
+
+/// The streamed run must also be shard-invariant: the lazily-injected
+/// arrivals land in per-shard heaps exactly as they would in the single
+/// global heap.
+#[test]
+fn streamed_run_is_shard_invariant() {
+    let sys = PrebaConfig::new();
+    check("streamed sharding", 8, |rng| {
+        let (base, _) = paired_cfgs(rng);
+        let mut single = base.clone();
+        single.shards = Some(1);
+        let reference = cluster::run(&single, &sys).expect("single heap runs");
+        for shards in [None, Some(2), Some(4)] {
+            let mut cfg = base.clone();
+            cfg.shards = shards;
+            let out = cluster::run(&cfg, &sys).expect("sharded config runs");
+            same_outcome(&out, &reference).map_err(|e| format!("shards={shards:?}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+fn collect(mut s: Box<dyn ArrivalStream>) -> Vec<Arrival> {
+    std::iter::from_fn(|| s.next_arrival()).collect()
+}
+
+fn assert_same_arrivals(lazy: &[Arrival], eager: &[Arrival], label: &str) {
+    assert_eq!(lazy.len(), eager.len(), "{label}: arrival count");
+    for (i, (a, b)) in lazy.iter().zip(eager).enumerate() {
+        assert_eq!(a.at, b.at, "{label}: arrival {i} timestamp");
+        assert_eq!(a.len_s.to_bits(), b.len_s.to_bits(), "{label}: arrival {i} length");
+    }
+}
+
+/// The chunked CSV/JSON readers and the eager loader parse the same
+/// bytes to the same arrivals — with and without the rescale knobs.
+#[test]
+fn chunked_file_readers_match_eager_load() {
+    let dir = std::env::temp_dir().join("preba_prop_stream");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = ReplayTrace::synth_azure(0x57AE, 30.0, 40.0);
+
+    let mut csv = String::from("timestamp_s,source\n# synthetic azure sample\n");
+    for t in trace.timestamps_s() {
+        csv.push_str(&format!("{t},synth\n"));
+    }
+    let csv_path = dir.join("sample.csv");
+    std::fs::write(&csv_path, &csv).unwrap();
+
+    let json = format!(
+        "{{\"arrivals_s\": [{}]}}",
+        trace.timestamps_s().iter().map(f64::to_string).collect::<Vec<_>>().join(", ")
+    );
+    let json_path = dir.join("sample.json");
+    std::fs::write(&json_path, &json).unwrap();
+
+    for path in [csv_path.to_str().unwrap(), json_path.to_str().unwrap()] {
+        let eager = ReplayTrace::load(path).expect("eager load");
+        assert_eq!(eager.len(), trace.len(), "{path}: round-trip length");
+
+        // Raw replay.
+        let spec = StreamSpec::file(path);
+        assert_eq!(spec.probe().expect("probe").requests, eager.len());
+        let lazy = collect(spec.open(ModelId::CitriNet, Rng::new(7)).expect("open"));
+        let reference = eager.arrivals(ModelId::CitriNet, &mut Rng::new(7));
+        assert_same_arrivals(&lazy, &reference, path);
+
+        // Fitted + thinned replay.
+        let spec = StreamSpec::file(path).fit_duration(10.0).thin_to_qps(12.0, 0xF00D);
+        let lazy = collect(spec.open(ModelId::CitriNet, Rng::new(8)).expect("open"));
+        let rescaled = eager
+            .rescaled(Rescale::ToDuration(10.0))
+            .rescaled(Rescale::Thin { qps: 12.0, seed: 0xF00D });
+        assert_eq!(spec.probe().expect("probe").requests, rescaled.len());
+        let reference = rescaled.arrivals(ModelId::CitriNet, &mut Rng::new(8));
+        assert_same_arrivals(&lazy, &reference, &format!("{path} (rescaled)"));
+    }
+}
+
+/// End-to-end CLI determinism: `preba cluster --trace azure` prints the
+/// byte-identical report at every `--shards` and `--jobs` setting.
+#[test]
+fn cluster_cli_identical_across_shards_and_jobs() {
+    let run = |shards: &str, jobs: &str| {
+        let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+            .args([
+                "cluster", "--gpus", "2", "--horizon", "2", "--strategy", "bfd", "--trace",
+                "azure", "--shards", shards, "--jobs", jobs,
+            ])
+            .output()
+            .expect("spawn preba");
+        assert!(
+            out.status.success(),
+            "preba cluster --shards {shards} --jobs {jobs} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        out.stdout
+    };
+    let reference = run("0", "1");
+    assert!(!reference.is_empty());
+    for (shards, jobs) in [("0", "4"), ("1", "1"), ("1", "4"), ("2", "4"), ("8", "2")] {
+        assert_eq!(
+            String::from_utf8_lossy(&run(shards, jobs)),
+            String::from_utf8_lossy(&reference),
+            "--shards {shards} --jobs {jobs} diverged from --shards 0 --jobs 1"
+        );
+    }
+}

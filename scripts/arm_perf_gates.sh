@@ -9,8 +9,9 @@
 #   scripts/arm_perf_gates.sh path/to/BENCH_pr12.json
 #
 # It copies hotpath.events_per_sec, cluster.events_per_sec,
-# cluster.joules_per_query and cluster.availability_frac into
-# rust/benches/perf_baseline.json
+# cluster.joules_per_query, cluster.availability_frac and the streamed
+# trace-day probe's cluster.trace_1m_events_per_sec /
+# cluster.trace_1m_peak_rss_mb into rust/benches/perf_baseline.json
 # (preserving the note), prints the before/after values, and leaves the
 # change for you to review and commit.
 set -euo pipefail
@@ -35,6 +36,8 @@ updates = {
     "cluster_events_per_sec": bench["cluster"]["events_per_sec"],
     "cluster_joules_per_query": bench["cluster"].get("joules_per_query"),
     "cluster_availability_frac": bench["cluster"].get("availability_frac"),
+    "cluster_1m_events_per_sec": bench["cluster"].get("trace_1m_events_per_sec"),
+    "cluster_1m_peak_rss_mb": bench["cluster"].get("trace_1m_peak_rss_mb"),
 }
 for key, value in updates.items():
     if value is None:
