@@ -118,6 +118,26 @@ fn main() {
         fault_out.timed_out_total()
     );
 
+    // Interference probe: the `interference` experiment's sizing A/B —
+    // a latency-SLA tenant beside saturating neighbor slices, flat vs
+    // curve-aware provisioning on identical contended ground truth. The
+    // headline is the SLA-violation gap the curves close; it lands in
+    // the bench JSON and is gated (a floor) once the committed baseline
+    // arms cluster_interference_violation_gap.
+    let csys = experiments::interference::curved(&sys);
+    let flat_out = cluster::run(&experiments::interference::scenario_cfg(false, 6.0, &csys), &csys)
+        .expect("valid flat interference config");
+    let aware_out = cluster::run(&experiments::interference::scenario_cfg(true, 6.0, &csys), &csys)
+        .expect("valid curve-aware interference config");
+    let flat_viol = experiments::interference::main_violation_frac(&flat_out);
+    let aware_viol = experiments::interference::main_violation_frac(&aware_out);
+    let interference_violation_gap = flat_viol - aware_viol;
+    println!(
+        "interference probe: main-tenant violations {:.4} flat vs {:.4} curve-aware \
+         -> gap {:.4}",
+        flat_viol, aware_viol, interference_violation_gap
+    );
+
     let stats = time_fn("cluster::run 4-GPU diurnal fleet", 32, || {
         std::hint::black_box(cluster::run(&mk_cfg(), &sys).expect("valid cluster config"));
     });
@@ -148,6 +168,11 @@ fn main() {
             // point of the arrival-stream seam is bounded memory).
             ("trace_1m_events_per_sec", Json::num(trace_1m_events_per_sec)),
             ("trace_1m_peak_rss_mb", trace_1m_peak_rss_mb.map_or(Json::Null, Json::num)),
+            // Main-tenant SLA-violation gap the [curves] layer closes in
+            // the interference sizing A/B — gated as a floor (higher is
+            // better) once the committed baseline's
+            // cluster_interference_violation_gap is non-null.
+            ("interference_violation_gap", Json::num(interference_violation_gap)),
         ]);
         std::fs::write(&path, doc.to_string_pretty()).expect("write PREBA_BENCH_JSON");
         println!("[bench json written {path}]");

@@ -364,6 +364,92 @@ impl FaultConfig {
     }
 }
 
+/// Per-(model, profile, batch) performance/energy curve configuration
+/// (`[curves]` in TOML). Disabled by default: the flat affine service
+/// model and flat per-GPC watts apply, bit-identical to earlier releases.
+/// When enabled, [`crate::models::calib::migperf_curve`]'s
+/// MIGPerf-calibrated multipliers scale execution time and active power
+/// per batch bucket, and the per-profile contention coefficients inflate
+/// both per busy neighbor slice at dispatch (uncore interference).
+#[derive(Debug, Clone)]
+pub struct CurvesConfig {
+    /// Master switch; `false` = flat model (byte-identical outputs).
+    pub enabled: bool,
+    /// Curve table: `"migperf"` (calibrated defaults) or `"flat"` (all
+    /// multipliers 1.0 — isolates the contention term).
+    pub source: String,
+    /// Scales the latency correction `(lat_mult - 1)`; 1.0 = table as-is,
+    /// 0.0 = no latency correction.
+    pub lat_scale: f64,
+    /// Scales the active-power correction `(pow_mult - 1)`.
+    pub pow_scale: f64,
+    /// Scales every per-profile contention coefficient; 0.0 disables
+    /// interference while keeping the batch curves.
+    pub contention_scale: f64,
+    /// Per-profile contention coefficients: fractional execution-time and
+    /// active-power inflation per busy neighbor slice. Defaults are the
+    /// MIGPerf-calibrated values from `models::calib`.
+    pub contention_1g: f64,
+    pub contention_2g: f64,
+    pub contention_3g: f64,
+    pub contention_4g: f64,
+    pub contention_7g: f64,
+}
+
+impl Default for CurvesConfig {
+    fn default() -> Self {
+        use crate::models::calib::migperf_contention;
+        CurvesConfig {
+            enabled: false,
+            source: "migperf".to_string(),
+            lat_scale: 1.0,
+            pow_scale: 1.0,
+            contention_scale: 1.0,
+            contention_1g: migperf_contention(1),
+            contention_2g: migperf_contention(2),
+            contention_3g: migperf_contention(3),
+            contention_4g: migperf_contention(4),
+            contention_7g: migperf_contention(7),
+        }
+    }
+}
+
+impl CurvesConfig {
+    /// Configured contention coefficient for a `gpcs`-GPC profile
+    /// (before `contention_scale`). Profiles without a dedicated knob
+    /// (5g/6g don't exist in the MIG lineup) fall back to the table.
+    fn contention_raw(&self, gpcs: usize) -> f64 {
+        match gpcs {
+            0 | 1 => self.contention_1g,
+            2 => self.contention_2g,
+            3 => self.contention_3g,
+            4 => self.contention_4g,
+            7.. => self.contention_7g,
+            _ => crate::models::calib::migperf_contention(gpcs),
+        }
+    }
+
+    /// Resolve the curve row for one (model, slice geometry). Returns
+    /// [`crate::models::CurveView::NEUTRAL`] when disabled, so dispatch
+    /// paths can hold the view unconditionally.
+    pub fn view(&self, model: crate::models::ModelId, gpcs: usize) -> crate::models::CurveView {
+        use crate::models::CurveView;
+        if !self.enabled {
+            return CurveView::NEUTRAL;
+        }
+        let mut v = CurveView::NEUTRAL;
+        if self.source != "flat" {
+            let row = crate::models::calib::migperf_curve(model, gpcs);
+            for (b, pt) in row.iter().enumerate() {
+                v.lat[b] = 1.0 + (pt.lat_mult - 1.0) * self.lat_scale;
+                v.pow[b] = 1.0 + (pt.pow_mult - 1.0) * self.pow_scale;
+            }
+        }
+        v.contention = self.contention_raw(gpcs) * self.contention_scale;
+        v
+    }
+}
+
 /// Workload-generation configuration (paper §5 "Input query modeling").
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
@@ -392,6 +478,7 @@ pub struct PrebaConfig {
     pub dpu: DpuConfig,
     pub cluster: ClusterDefaults,
     pub fault: FaultConfig,
+    pub curves: CurvesConfig,
     pub workload: WorkloadConfig,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
@@ -490,6 +577,20 @@ impl PrebaConfig {
         f.backoff_ms = doc.f64_or("fault.backoff_ms", f.backoff_ms);
         f.hedge_ms = doc.f64_or("fault.hedge_ms", f.hedge_ms);
 
+        let cv = &mut self.curves;
+        cv.enabled = doc.bool_or("curves.enabled", cv.enabled);
+        if let Some(v) = doc.get("curves.source").and_then(toml::Value::as_str) {
+            cv.source = v.to_string();
+        }
+        cv.lat_scale = doc.f64_or("curves.lat_scale", cv.lat_scale);
+        cv.pow_scale = doc.f64_or("curves.pow_scale", cv.pow_scale);
+        cv.contention_scale = doc.f64_or("curves.contention_scale", cv.contention_scale);
+        cv.contention_1g = doc.f64_or("curves.contention_1g", cv.contention_1g);
+        cv.contention_2g = doc.f64_or("curves.contention_2g", cv.contention_2g);
+        cv.contention_3g = doc.f64_or("curves.contention_3g", cv.contention_3g);
+        cv.contention_4g = doc.f64_or("curves.contention_4g", cv.contention_4g);
+        cv.contention_7g = doc.f64_or("curves.contention_7g", cv.contention_7g);
+
         let w = &mut self.workload;
         w.seed = doc.i64_or("workload.seed", w.seed as i64) as u64;
         w.requests = doc.i64_or("workload.requests", w.requests as i64) as usize;
@@ -549,6 +650,44 @@ impl PrebaConfig {
             "fault mtbf_s/mttr_s must be positive"
         );
         self.fault.recovery().validate().map_err(|e| anyhow::anyhow!("[fault]: {e}"))?;
+        let cv = &self.curves;
+        anyhow::ensure!(
+            cv.source == "migperf" || cv.source == "flat",
+            "curves.source must be 'migperf' or 'flat', got '{}'",
+            cv.source
+        );
+        for (name, v) in [
+            ("curves.lat_scale", cv.lat_scale),
+            ("curves.pow_scale", cv.pow_scale),
+            ("curves.contention_scale", cv.contention_scale),
+        ] {
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "{name} must be finite and >= 0");
+        }
+        for (name, c) in [
+            ("curves.contention_1g", cv.contention_1g),
+            ("curves.contention_2g", cv.contention_2g),
+            ("curves.contention_3g", cv.contention_3g),
+            ("curves.contention_4g", cv.contention_4g),
+            ("curves.contention_7g", cv.contention_7g),
+        ] {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&c),
+                "{name} must be in [0, 1] (fractional inflation per neighbor)"
+            );
+        }
+        // Every resolved multiplier must stay positive, whatever the scales.
+        for m in crate::models::ModelId::ALL {
+            for gpcs in [1usize, 2, 3, 4, 7] {
+                let v = cv.view(m, gpcs);
+                for b in 0..crate::models::N_BUCKETS {
+                    anyhow::ensure!(
+                        v.lat[b] > 0.0 && v.pow[b] > 0.0,
+                        "curves: resolved multiplier for {m} on {gpcs}g bucket {b} \
+                         is non-positive (check lat_scale/pow_scale)"
+                    );
+                }
+            }
+        }
         Ok(())
     }
 }

@@ -160,9 +160,28 @@ impl EnergyModel {
     /// Returns `(active_j, idle_j)`; `idle_j` covers idle GPCs plus the
     /// uncore floor for the powered-on interval only.
     pub fn gpu_energy(&self, class: &GpuClass, busy_gpc_s: f64, on_s: f64) -> (f64, f64) {
+        self.gpu_energy_weighted(class, busy_gpc_s, busy_gpc_s, on_s)
+    }
+
+    /// [`Self::gpu_energy`] with a curve-weighted active integral: the
+    /// per-(model, profile, batch) power multipliers and the interference
+    /// penalty scale each batch's GPC-time contribution, so the dispatch
+    /// paths accumulate `weighted_busy_gpc_s = Σ exec · pow_mult · penalty`
+    /// alongside the unweighted `busy_gpc_s`. Active energy integrates the
+    /// weighted time; the idle complement still uses *wall-clock* busy time
+    /// (a GPC drawing 1.1× active watts is not idle for -0.1× seconds).
+    /// With all multipliers at 1.0 the two integrals are equal and this is
+    /// bit-identical to `gpu_energy`.
+    pub fn gpu_energy_weighted(
+        &self,
+        class: &GpuClass,
+        busy_gpc_s: f64,
+        weighted_busy_gpc_s: f64,
+        on_s: f64,
+    ) -> (f64, f64) {
         let p = self.gpu_params(class);
         let idle_gpc_s = (class.gpcs as f64 * on_s - busy_gpc_s).max(0.0);
-        (p.gpc_active_w * busy_gpc_s, p.gpc_idle_w * idle_gpc_s + p.uncore_w * on_s)
+        (p.gpc_active_w * weighted_busy_gpc_s, p.gpc_idle_w * idle_gpc_s + p.uncore_w * on_s)
     }
 
     /// Host CPU energy: `active_core_s` core-seconds busy (preprocessing

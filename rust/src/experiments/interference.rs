@@ -1,0 +1,249 @@
+//! Interference-aware curves: flat-model vs curve-aware provisioning
+//! under neighbor-slice contention (the HeteroMIG/MIGPerf scenario).
+//!
+//! MIG partitions isolate SMs and memory slices, but the uncore — L2
+//! ways, HBM controllers — is shared, so a 1g slice surrounded by six
+//! busy neighbors runs measurably slower than the same slice on an
+//! otherwise-idle GPU (MIGPerf, arXiv 2301.00407). The `[curves]` layer
+//! models exactly that: per-(model, profile, batch-bucket) latency/power
+//! multipliers plus a per-profile contention coefficient that inflates
+//! execution time by `1 + c·k` for `k` busy sibling slices at dispatch.
+//!
+//! This experiment stages the failure mode the curves exist to prevent:
+//! one latency-SLA "main" tenant shares two A100s with saturating
+//! background tenants, so its slices always see ~6 busy neighbors. A
+//! planner that sizes the main tenant off the flat (isolated-slice)
+//! plateau under-provisions — the contention-deflated capacity sits at
+//! or below the offered rate and the tail diverges. The curve-aware
+//! sizing rule ([`slices_for_rate_scaled`] with the tenant's
+//! `service_scale`) buys one more slice and restores the SLA. Both cells
+//! replay the same ground truth (curves ON); only the sizing differs.
+//!
+//! §2 shows the planner surface itself: predicted p95 as the neighbor
+//! count climbs, flat vs curve-aware — the same scaled predictor the
+//! cluster reconfiguration controller plans with when curves are on.
+
+use crate::mig::reconfig::{predicted_p95_ms_gpcs_scaled, slices_for_rate_scaled, TenantSpec};
+use crate::mig::ServiceModel;
+use crate::prelude::*;
+use crate::server::cluster;
+use crate::util::bench::Reporter;
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+/// Main tenant's end-to-end p95 SLA, ms.
+pub const MAIN_SLA_MS: f64 = 40.0;
+
+/// Sizing rule's utilization target (the fraction of effective plateau
+/// the planner is willing to load a slice to).
+const TARGET_UTIL: f64 = 0.8;
+
+fn swin_plateau_1g() -> f64 {
+    ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0)
+}
+
+/// `sys` with the MIGPerf-calibrated `[curves]` layer switched on — the
+/// ground truth both A/B cells replay under. `pub` so the CLI's
+/// `--interference` flag and the perf bench stage the same world.
+pub fn curved(sys: &PrebaConfig) -> PrebaConfig {
+    let mut c = sys.clone();
+    c.curves.enabled = true;
+    c.curves.source = "migperf".to_string();
+    c
+}
+
+/// The main tenant's curve-derived service-time scale on a fully
+/// contended A100: batch-knee latency multiplier × the `1 + c·6`
+/// neighbor penalty (six busy sibling 1g slices).
+pub fn main_service_scale(csys: &PrebaConfig) -> f64 {
+    let view = csys.curves.view(ModelId::SwinTransformer, 1);
+    let knee = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).knee(0.0);
+    view.service_scale(knee, 6)
+}
+
+/// One A/B cell: two A100s (14×1g), a latency-SLA main tenant plus
+/// background tenants saturating every remaining slice. `curve_aware`
+/// picks the sizing rule for the main tenant — flat plateau vs
+/// contention-deflated plateau; everything else (load, seed, ground
+/// truth) is identical. `csys` must be the [`curved`] system config.
+pub fn scenario_cfg(curve_aware: bool, horizon_s: f64, csys: &PrebaConfig) -> ClusterConfig {
+    let u = swin_plateau_1g();
+    let rate = 2.3 * u;
+    let spec = TenantSpec::new(ModelId::SwinTransformer, MAIN_SLA_MS);
+    let scale = if curve_aware { main_service_scale(csys) } else { 1.0 };
+    let main_slices =
+        slices_for_rate_scaled(&spec, Slice::new(1, 5), rate, TARGET_UTIL, scale);
+    let mut main =
+        ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), main_slices, rate);
+    main.sla_ms = MAIN_SLA_MS;
+    main.requests = (rate * horizon_s).ceil() as usize;
+
+    // Background: every slice the main tenant did not take, offered 90%
+    // of the FLAT plateau per slice — above the contention-deflated
+    // capacity, so the neighbors never drain and the main tenant's
+    // dispatches always see a busy GPU. No latency SLA of their own.
+    let bg_slices = 14 - main_slices;
+    let bg_rate = 0.9 * bg_slices as f64 * u;
+    let mut bg =
+        ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), bg_slices, bg_rate);
+    bg.sla_ms = 10_000.0;
+    bg.requests = (bg_rate * horizon_s).ceil() as usize;
+
+    ClusterConfig::builder()
+        .gpus(2)
+        .strategy(PackStrategy::BestFit)
+        .tenants(vec![main, bg])
+        .seed(0x1F01)
+        .warmup_frac(0.05)
+        .build()
+}
+
+/// Main tenant's SLA-violation fraction (tenant 0 in [`scenario_cfg`]).
+pub fn main_violation_frac(out: &ClusterOutcome) -> f64 {
+    out.violation_frac(0, MAIN_SLA_MS)
+}
+
+pub fn run(sys: &PrebaConfig) -> Json {
+    let mut rep = Reporter::new("Interference: curve-aware vs flat provisioning under contention");
+    let horizon_s = if super::fast() { 8.0 } else { 16.0 };
+    let csys = curved(sys);
+    let scale = main_service_scale(&csys);
+
+    // ---- Section 1: sizing A/B on identical contended ground truth. ----
+    rep.section("latency-SLA tenant beside saturating neighbors: flat vs curve-aware sizing");
+    rep.row(&format!(
+        "main tenant service scale under full contention: {:.3} (knee batch x 1 + c*6)",
+        scale
+    ));
+    let modes = [false, true];
+    let cfgs: Vec<ClusterConfig> =
+        modes.iter().map(|&aware| scenario_cfg(aware, horizon_s, &csys)).collect();
+    let outs = super::sweep(&cfgs, |cfg| {
+        cluster::run(cfg, &csys).expect("valid interference config")
+    });
+    let mut t = Table::new(&[
+        "sizing", "main slices", "viol %", "main p95 ms", "served", "dropped",
+    ]);
+    let mut rows = Vec::new();
+    for ((&aware, cfg), out) in modes.iter().zip(cfgs.iter()).zip(outs.iter()) {
+        let mode = if aware { "curve-aware" } else { "flat" };
+        let viol = main_violation_frac(out);
+        t.row(&[
+            mode.to_string(),
+            cfg.tenants[0].slices.to_string(),
+            num(viol * 100.0),
+            num(out.tenant_stats(0).p95_ms()),
+            out.completed_total().to_string(),
+            out.dropped.iter().sum::<u64>().to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("sizing", Json::str(mode)),
+            ("main_slices", Json::num(cfg.tenants[0].slices as f64)),
+            ("main_violation_frac", Json::num(viol)),
+            ("main_p95_ms", Json::num(out.tenant_stats(0).p95_ms())),
+            ("completed", Json::num(out.completed_total() as f64)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("sizing", Json::Arr(rows));
+
+    // ---- Section 2: the planner surface the controller consumes. ----
+    rep.section("predicted main-tenant p95 vs busy neighbors (the controller's scaled predictor)");
+    let spec = TenantSpec::new(ModelId::SwinTransformer, MAIN_SLA_MS);
+    let view = csys.curves.view(ModelId::SwinTransformer, 1);
+    let knee = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).knee(0.0);
+    let rate = 2.3 * swin_plateau_1g();
+    let mut t = Table::new(&["busy neighbors", "scale", "p95 ms (3 slices)", "p95 ms (4 slices)"]);
+    let mut rows = Vec::new();
+    for k in 0..=6usize {
+        let s = view.service_scale(knee, k);
+        let p3 = predicted_p95_ms_gpcs_scaled(&spec, 1, 3, rate, s);
+        let p4 = predicted_p95_ms_gpcs_scaled(&spec, 1, 4, rate, s);
+        t.row(&[k.to_string(), num(s), num(p3), num(p4)]);
+        rows.push(Json::obj(vec![
+            ("busy_neighbors", Json::num(k as f64)),
+            ("service_scale", Json::num(s)),
+            ("p95_ms_3_slices", Json::num(p3)),
+            ("p95_ms_4_slices", Json::num(p4)),
+        ]));
+    }
+    for line in t.render() {
+        rep.row(&line);
+    }
+    rep.data("predictor", Json::Arr(rows));
+
+    rep.finish("interference")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(r: &Json, key: &str) -> f64 {
+        r.get(key).unwrap().as_f64().unwrap()
+    }
+
+    #[test]
+    fn curve_aware_sizing_beats_flat_on_main_tenant_sla() {
+        crate::experiments::set_fast(true);
+        let sys = PrebaConfig::new();
+        let doc = run(&sys);
+        let data = doc.get("data").unwrap();
+
+        let rows = data.get("sizing").unwrap().as_arr().unwrap();
+        let row = |mode: &str| {
+            rows.iter().find(|r| r.get("sizing").unwrap().as_str() == Some(mode)).unwrap()
+        };
+        let (flat, aware) = (row("flat"), row("curve-aware"));
+        // The curve-aware rule must actually buy capacity...
+        assert!(
+            f(aware, "main_slices") > f(flat, "main_slices"),
+            "aware {} vs flat {} slices",
+            f(aware, "main_slices"),
+            f(flat, "main_slices")
+        );
+        // ...and convert it into a strictly better main-tenant SLA.
+        assert!(
+            f(aware, "main_violation_frac") < f(flat, "main_violation_frac"),
+            "aware {} vs flat {} violation",
+            f(aware, "main_violation_frac"),
+            f(flat, "main_violation_frac")
+        );
+        assert!(
+            f(flat, "main_violation_frac") > 0.02,
+            "contention never hurt the flat sizing: {}",
+            f(flat, "main_violation_frac")
+        );
+
+        // §2: the scaled predictor is monotone in the neighbor count.
+        let rows = data.get("predictor").unwrap().as_arr().unwrap();
+        for w in rows.windows(2) {
+            assert!(f(&w[1], "service_scale") > f(&w[0], "service_scale"));
+            assert!(f(&w[1], "p95_ms_3_slices") >= f(&w[0], "p95_ms_3_slices"));
+            assert!(f(&w[1], "p95_ms_4_slices") >= f(&w[0], "p95_ms_4_slices"));
+        }
+        // More slices never predict worse at the same contention.
+        for r in rows {
+            assert!(f(r, "p95_ms_4_slices") <= f(r, "p95_ms_3_slices"));
+        }
+    }
+
+    #[test]
+    fn scenario_is_deterministic_and_curved() {
+        let sys = PrebaConfig::new();
+        let csys = curved(&sys);
+        assert!(csys.curves.enabled && csys.curves.source == "migperf");
+        assert!(main_service_scale(&csys) > 1.2, "contention scale too weak to matter");
+        let cfg = scenario_cfg(false, 4.0, &csys);
+        let a = cluster::run(&cfg, &csys).unwrap();
+        let b = cluster::run(&cfg, &csys).unwrap();
+        assert_eq!(a.horizon, b.horizon);
+        assert_eq!(a.events, b.events);
+        assert_eq!(
+            main_violation_frac(&a).to_bits(),
+            main_violation_frac(&b).to_bits()
+        );
+    }
+}

@@ -8,6 +8,7 @@ pub mod ablation;
 pub mod cluster;
 pub mod energy;
 pub mod faults;
+pub mod interference;
 pub mod packing;
 pub mod reconfig;
 pub mod support;
@@ -33,7 +34,7 @@ use crate::config::PrebaConfig;
 use crate::util::json::Json;
 
 /// Registry of all experiments for `preba experiment <id>` / `all`.
-pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 25] = [
+pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 26] = [
     ("fig5", fig05::run),
     ("fig6", fig06::run),
     ("fig7", fig07::run),
@@ -66,6 +67,9 @@ pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 25] = [
     // Fault injection & failure recovery: crashes, stragglers, outages
     // and the detect/retry/hedge/failover stack (fault::*).
     ("faults", faults::run),
+    // Interference-aware performance/energy curves: flat vs curve-aware
+    // provisioning beside saturating neighbor slices (MIGPerf scenario).
+    ("interference", interference::run),
 ];
 
 /// Look up an experiment by id.

@@ -23,7 +23,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: preba <serve|simulate|profile|plan|reconfig|cluster|energy|experiment|list> [options]\n\
+    "usage: preba <serve|simulate|profile|plan|reconfig|cluster|energy|interference|experiment|list> [options]\n\
      \n\
      serve      --model M [--preproc host|dpu] [--rate QPS] [--requests N] [--artifacts DIR]\n\
      simulate   --model M [--mig 1g|2g|7g] [--preproc ideal|cpu|dpu] [--policy static|dynamic]\n\
@@ -41,7 +41,7 @@ fn usage() -> &'static str {
      cluster    [--gpus N] [--fleet a100x4,a30x4] [--strategy ff|bfd|both] [--routing jsq|rr]\n\
                 [--horizon S] [--seed S] [--reconfig] [--migration S] [--repartition S]\n\
                 [--trace PATH|azure] [--rate-scale X] [--shards N] [--admission] [--energy]\n\
-                [--consolidate] [--faults SPEC]\n\
+                [--consolidate] [--faults SPEC] [--interference]\n\
                 (multi-GPU DES: a diurnal tenant fleet packed onto a — possibly\n\
                 heterogeneous — GPU inventory; FF vs BFD stranded capacity, fleet\n\
                 p95/p99/SLA violations, optional online cross-GPU rebalancing.\n\
@@ -64,11 +64,20 @@ fn usage() -> &'static str {
                 abort (DUR 'inf' = never repaired) plus mtbf:M[,mttr:R] for a\n\
                 seeded stochastic background — and runs each packing twice:\n\
                 a blind no-recovery baseline vs the [fault] recovery stack\n\
-                (detect/retry/hedge/failover), adding availability columns)\n\
+                (detect/retry/hedge/failover), adding availability columns).\n\
+                --interference replays under the MIGPerf-calibrated [curves]\n\
+                layer: per-(model, profile, batch) latency/power multipliers\n\
+                plus a busy-neighbor uncore-contention penalty — the planner\n\
+                and energy integrals see contention-deflated capacity.\n\
      energy     [--model M] [--requests N]\n\
                 (integrated energy & cost per design point: baseline CPU\n\
                 preprocessing vs PREBA's DPU — J/query, QPS/W, queries/$)\n\
-     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|cluster|energy|faults|all>\n\
+     interference\n\
+                (flat vs curve-aware provisioning for a latency-SLA tenant\n\
+                beside saturating neighbor slices — the failure mode the\n\
+                [curves] layer exists to prevent; alias for\n\
+                `experiment interference`)\n\
+     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|cluster|energy|faults|interference|all>\n\
                 [--jobs N] [--out DIR]\n\
      list\n\
      \n\
@@ -80,8 +89,15 @@ fn usage() -> &'static str {
 }
 
 fn run() -> anyhow::Result<()> {
-    let args =
-        Args::from_env(&["fast", "help", "reconfig", "admission", "energy", "consolidate"])?;
+    let args = Args::from_env(&[
+        "fast",
+        "help",
+        "reconfig",
+        "admission",
+        "energy",
+        "consolidate",
+        "interference",
+    ])?;
     if args.flag("help") || args.command.is_none() {
         println!("{}", usage());
         return Ok(());
@@ -111,6 +127,10 @@ fn run() -> anyhow::Result<()> {
         "reconfig" => reconfig_cmd(&args, &sys),
         "cluster" => cluster_cmd(&args, &sys),
         "energy" => energy_cmd(&args, &sys),
+        "interference" => {
+            preba::experiments::interference::run(&sys);
+            Ok(())
+        }
         "experiment" => experiment(&args, &sys),
         other => {
             anyhow::bail!("unknown command '{other}'\n{}", usage());
@@ -406,6 +426,17 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     use preba::mig::{GpuClass, PackStrategy};
     use preba::server::cluster::{self, ClusterConfig, Routing};
     use preba::workload::StreamSpec;
+
+    // --interference: replay under the MIGPerf-calibrated `[curves]`
+    // layer — per-(model, profile, batch) latency/power multipliers plus
+    // the busy-neighbor contention penalty (see `preba interference`).
+    let curved_sys;
+    let sys = if args.flag("interference") {
+        curved_sys = preba::experiments::interference::curved(sys);
+        &curved_sys
+    } else {
+        sys
+    };
 
     let fleet: Vec<GpuClass> = match args.opt("fleet") {
         Some(spec) => sys.cluster.parse_fleet(spec)?,

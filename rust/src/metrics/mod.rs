@@ -71,6 +71,9 @@ pub struct RunStats {
     /// Time of first/last completion (for measured throughput).
     first_done: Option<Nanos>,
     last_done: Option<Nanos>,
+    /// Run horizon the driver observed (fallback throughput window when
+    /// the completion window is degenerate — see [`RunStats::throughput_qps`]).
+    horizon: Nanos,
 }
 
 impl RunStats {
@@ -91,11 +94,26 @@ impl RunStats {
         self.last_done = Some(self.last_done.map_or(done_at, |t| t.max(done_at)));
     }
 
-    /// Measured goodput over the completion window, queries/s.
+    /// Record the driver's run horizon. Used only as a fallback
+    /// throughput window; calling it never changes the result for runs
+    /// with a non-degenerate completion window.
+    pub fn note_horizon(&mut self, horizon: Nanos) {
+        self.horizon = self.horizon.max(horizon);
+    }
+
+    /// Measured goodput, queries/s: completions over the completion
+    /// window. A degenerate window — a single completion, or every
+    /// completion landing on one timestamp (tiny runs, perfectly batched
+    /// bursts) — used to report 0.0, which poisoned any downstream ratio
+    /// (0 qps/W with joules on the meter); it now falls back to the run
+    /// horizon when the driver provided one.
     pub fn throughput_qps(&self) -> f64 {
         match (self.first_done, self.last_done) {
             (Some(a), Some(b)) if b > a && self.completed > 1 => {
                 (self.completed - 1) as f64 / to_secs(b - a)
+            }
+            _ if self.completed > 0 && self.horizon > 0 => {
+                self.completed as f64 / to_secs(self.horizon)
             }
             _ => 0.0,
         }
@@ -213,6 +231,36 @@ mod tests {
             s.record(parts(0.0, 0.0, 0.0, 1.0), millis(i as f64 * 100.0), 1);
         }
         assert!((s.throughput_qps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_window_falls_back_to_horizon() {
+        // One completion: no window at all.
+        let mut s = RunStats::new();
+        s.record(parts(0.0, 0.0, 0.0, 1.0), millis(500.0), 1);
+        assert_eq!(s.throughput_qps(), 0.0, "no horizon yet");
+        s.note_horizon(millis(2000.0));
+        assert!((s.throughput_qps() - 0.5).abs() < 1e-9);
+        // All completions at one timestamp: zero-width window.
+        let mut s = RunStats::new();
+        for _ in 0..4 {
+            s.record(parts(0.0, 0.0, 0.0, 1.0), millis(100.0), 4);
+        }
+        s.note_horizon(millis(1000.0));
+        assert!((s.throughput_qps() - 4.0).abs() < 1e-9);
+        // A healthy window ignores the horizon entirely.
+        let mut s = RunStats::new();
+        for i in 0..=10 {
+            s.record(parts(0.0, 0.0, 0.0, 1.0), millis(i as f64 * 100.0), 1);
+        }
+        s.note_horizon(millis(60_000.0));
+        assert!((s.throughput_qps() - 10.0).abs() < 1e-9);
+        // note_horizon keeps the max across calls.
+        let mut s = RunStats::new();
+        s.note_horizon(millis(1000.0));
+        s.note_horizon(millis(10.0));
+        s.record(parts(0.0, 0.0, 0.0, 1.0), millis(1.0), 1);
+        assert!((s.throughput_qps() - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -222,29 +222,47 @@ pub fn predicted_p95_ms_gpcs(
     n_vgpus: usize,
     rate_qps: f64,
 ) -> f64 {
+    predicted_p95_ms_gpcs_scaled(spec, gpcs, n_vgpus, rate_qps, 1.0)
+}
+
+/// [`predicted_p95_ms_gpcs`] with a curve-derived service-time scale
+/// (`>= 1.0` in practice): execution times are multiplied by it and the
+/// effective plateau divided, so a curve-aware controller sees both the
+/// longer batches and the earlier saturation the curves imply. Monotone
+/// non-decreasing in `service_scale`; `1.0` is bit-identical to the
+/// unscaled predictor.
+pub fn predicted_p95_ms_gpcs_scaled(
+    spec: &TenantSpec,
+    gpcs: usize,
+    n_vgpus: usize,
+    rate_qps: f64,
+    service_scale: f64,
+) -> f64 {
     if n_vgpus == 0 {
         // Strictly worse than ANY served operating point at this rate —
         // including a single slice overloaded arbitrarily deep — so the
         // planner always prices the first slice as a gain.
-        return 2.0 * predicted_p95_ms_gpcs(spec, gpcs, 1, rate_qps).max(INFEASIBLE_MS);
+        return 2.0
+            * predicted_p95_ms_gpcs_scaled(spec, gpcs, 1, rate_qps, service_scale)
+                .max(INFEASIBLE_MS);
     }
     let sm = ServiceModel::new(spec.model.spec(), gpcs);
     let len = spec.len_s;
     let per_vgpu = rate_qps / n_vgpus as f64;
-    let rho = per_vgpu / sm.plateau_qps(len);
+    let rho = per_vgpu / (sm.plateau_qps(len) / service_scale);
     if rho >= 0.999 {
         return INFEASIBLE_MS * rho;
     }
     let knee = sm.knee(len);
     // The drivers' dynamic policy: Batch_max = knee, Time_queue = T(knee)/n.
-    let tq_s = sm.exec_secs(knee, len) / n_vgpus as f64;
+    let tq_s = sm.exec_secs(knee, len) * service_scale / n_vgpus as f64;
     // Batch the offered rate fills before the deadline fires.
     let fill = (per_vgpu * tq_s).floor() as usize;
     let b = (fill + 1).clamp(1, knee);
     // Head-of-line wait: the deadline when the queue can't fill the knee
     // in time, else the knee fill time.
     let wait_s = if b >= knee { (knee as f64 / per_vgpu.max(1e-9)).min(tq_s) } else { tq_s };
-    let exec_s = sm.exec_secs(b, len);
+    let exec_s = sm.exec_secs(b, len) * service_scale;
     let inflation = 1.0 + rho * rho / (2.0 * (1.0 - rho));
     (wait_s + exec_s * inflation) * 1e3 * 1.10
 }
@@ -515,7 +533,24 @@ impl ClusterReconfigEvent {
 /// `server::cluster::ClusterTenant::sized_for` uses it offline, so a
 /// sized deployment starts exactly where the controller would put it.
 pub fn slices_for_rate(spec: &TenantSpec, slice: Slice, rate_qps: f64, target_util: f64) -> usize {
-    let per_slice = ServiceModel::new(spec.model.spec(), slice.gpcs).plateau_qps(spec.len_s);
+    slices_for_rate_scaled(spec, slice, rate_qps, target_util, 1.0)
+}
+
+/// [`slices_for_rate`] with a curve-derived service-time scale: the
+/// effective per-slice plateau shrinks by `service_scale`, so a
+/// curve-aware planner provisions for the throughput the tenant will
+/// actually see under its batch curve and expected neighbor contention,
+/// not the flat model's optimistic one. `1.0` is bit-identical to the
+/// unscaled rule.
+pub fn slices_for_rate_scaled(
+    spec: &TenantSpec,
+    slice: Slice,
+    rate_qps: f64,
+    target_util: f64,
+    service_scale: f64,
+) -> usize {
+    let per_slice =
+        ServiceModel::new(spec.model.spec(), slice.gpcs).plateau_qps(spec.len_s) / service_scale;
     let need = rate_qps / (per_slice * target_util).max(1e-9);
     (need.ceil() as usize).max(1)
 }
@@ -551,8 +586,26 @@ pub fn plan_cluster_moves_fleet(
     fleet: &[GpuClass],
     policy: &ReconfigPolicy,
 ) -> Vec<SliceMove> {
+    let ones = vec![1.0; tenants.len()];
+    plan_cluster_moves_fleet_scaled(tenants, slices, rates, alloc, fleet, policy, &ones)
+}
+
+/// [`plan_cluster_moves_fleet`] with per-tenant curve-derived service-time
+/// scales (`scales[i] >= 1.0` inflates tenant `i`'s sizing need and
+/// predicted p95). All-ones is bit-identical to the unscaled planner.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_cluster_moves_fleet_scaled(
+    tenants: &[TenantSpec],
+    slices: &[Slice],
+    rates: &[f64],
+    alloc: &[Vec<usize>],
+    fleet: &[GpuClass],
+    policy: &ReconfigPolicy,
+    scales: &[f64],
+) -> Vec<SliceMove> {
     let t = tenants.len();
     assert!(t > 0 && slices.len() == t && rates.len() == t, "tenant arity mismatch");
+    assert_eq!(scales.len(), t, "scales arity mismatch");
     let n_gpus = alloc.len();
     assert_eq!(fleet.len(), n_gpus, "fleet/alloc arity mismatch");
     let mut state: Vec<Vec<usize>> = alloc.to_vec();
@@ -561,7 +614,9 @@ pub fn plan_cluster_moves_fleet(
     }
 
     let need: Vec<usize> = (0..t)
-        .map(|i| slices_for_rate(&tenants[i], slices[i], rates[i], policy.target_util))
+        .map(|i| {
+            slices_for_rate_scaled(&tenants[i], slices[i], rates[i], policy.target_util, scales[i])
+        })
         .collect();
     let mut have: Vec<usize> = (0..t)
         .map(|i| state.iter().map(|g| g[i]).sum())
@@ -622,7 +677,13 @@ pub fn plan_cluster_moves_fleet(
         // the search: a lighter-loaded donor may still amortize the move.
         if chosen.is_none() {
             let p95_at = |n: usize| {
-                predicted_p95_ms_gpcs(&tenants[gi], slices[gi].gpcs, n, rates[gi])
+                predicted_p95_ms_gpcs_scaled(
+                    &tenants[gi],
+                    slices[gi].gpcs,
+                    n,
+                    rates[gi],
+                    scales[gi],
+                )
             };
             let gain_ms = p95_at(have[gi]) - p95_at(have[gi] + 1);
             let saved_qs = gain_ms * 1e-3 * rates[gi] * policy.cooldown_s;
@@ -735,6 +796,9 @@ pub struct ClusterReconfigController {
     /// pass of the same window.
     last_rates: Vec<f64>,
     consolidation_events: Vec<ConsolidationEvent>,
+    /// Per-tenant curve-derived service-time scales the planner applies
+    /// to sizing and p95 prediction (`>= 1.0`; all-ones = flat model).
+    service_scales: Vec<f64>,
 }
 
 impl ClusterReconfigController {
@@ -767,6 +831,7 @@ impl ClusterReconfigController {
         }
         let watchers = tenants.iter().map(|_| RateWatcher::new(policy.ewma_alpha)).collect();
         let n_gpus = initial_alloc.len();
+        let n_tenants = tenants.len();
         ClusterReconfigController {
             policy,
             tenants,
@@ -781,7 +846,25 @@ impl ClusterReconfigController {
             low_windows: 0,
             last_rates: Vec::new(),
             consolidation_events: Vec::new(),
+            service_scales: vec![1.0; n_tenants],
         }
+    }
+
+    /// Install per-tenant curve-derived service-time scales (see
+    /// [`crate::config::CurvesConfig`]): every sizing (`slices_for_rate`)
+    /// and prediction (`predicted_p95_ms_gpcs`) the controller makes is
+    /// then curve-aware. All-ones (the default) is bit-identical to the
+    /// flat controller.
+    pub fn with_service_scales(mut self, scales: Vec<f64>) -> Self {
+        assert_eq!(scales.len(), self.tenants.len(), "scales/tenant arity mismatch");
+        assert!(scales.iter().all(|s| s.is_finite() && *s > 0.0), "scales must be positive");
+        self.service_scales = scales;
+        self
+    }
+
+    /// The installed per-tenant service-time scales.
+    pub fn service_scales(&self) -> &[f64] {
+        &self.service_scales
     }
 
     /// Per-GPU classes the controller plans against.
@@ -872,13 +955,14 @@ impl ClusterReconfigController {
             .zip(&self.failed)
             .map(|(&c, &down)| if down { GpuClass { gpcs: 0, mem_gb: 0, ..c } } else { c })
             .collect();
-        let moves = plan_cluster_moves_fleet(
+        let moves = plan_cluster_moves_fleet_scaled(
             &self.tenants,
             &self.slices,
             &rates,
             &self.alloc,
             &fleet,
             &self.policy,
+            &self.service_scales,
         );
         if moves.is_empty() {
             return None;
@@ -897,7 +981,13 @@ impl ClusterReconfigController {
         // every legitimate rebalance among the others forever.
         let touched: Vec<usize> = (0..t).filter(|&i| have_after[i] != have[i]).collect();
         let p95_of = |i: usize, n: usize| {
-            predicted_p95_ms_gpcs(&self.tenants[i], self.slices[i].gpcs, n, rates[i])
+            predicted_p95_ms_gpcs_scaled(
+                &self.tenants[i],
+                self.slices[i].gpcs,
+                n,
+                rates[i],
+                self.service_scales[i],
+            )
         };
         let worst_over = |haves: &[usize]| -> (f64, f64) {
             let mut ratio = 0.0;
@@ -1057,11 +1147,12 @@ impl ClusterReconfigController {
         let rates = self.last_rates.clone();
         let need: Vec<usize> = (0..t)
             .map(|i| {
-                slices_for_rate(
+                slices_for_rate_scaled(
                     &self.tenants[i],
                     self.slices[i],
                     rates[i],
                     self.policy.target_util,
+                    self.service_scales[i],
                 )
             })
             .collect();
@@ -1177,11 +1268,12 @@ impl ClusterReconfigController {
         let keep: Vec<usize> = (0..t)
             .map(|i| {
                 let provisioned_rate = rates[i] / self.policy.consolidate_util.max(1e-3);
-                slices_for_rate(
+                slices_for_rate_scaled(
                     &self.tenants[i],
                     self.slices[i],
                     provisioned_rate,
                     self.policy.target_util,
+                    self.service_scales[i],
                 )
                 .min(have[i])
                 .max(1)

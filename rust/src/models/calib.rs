@@ -119,6 +119,143 @@ static CITRINET: ModelSpec = ModelSpec {
     tensor_bytes: 80 * 251 * 4,
 };
 
+// ---------------------------------------------------------------------------
+// Per-(model, MIG profile, batch-bucket) performance/energy curves.
+//
+// MIGPerf (arXiv 2301.00407) measures that throughput, tail latency and
+// J/query are NOT workload-independent across MIG geometries: memory-bound
+// models on small slices lose disproportionate latency at large batches
+// (L2/HBM capacity pressure), lightly-batched work draws well below the
+// per-GPC active-power plateau, and co-located slices contend through the
+// shared uncore (HBM controllers + L2) even though SMs are partitioned.
+//
+// We encode those findings as multiplicative corrections on top of the
+// affine `mig::ServiceModel`: a latency multiplier and an active-power
+// multiplier per (model, profile, batch-size bucket), plus a per-profile
+// contention coefficient applied per busy *neighbor* slice at dispatch.
+// The defaults below are calibrated to the MIGPerf trend lines (not to a
+// single figure): the correction grows with the model's memory intensity,
+// with batch size, and with slice smallness, and vanishes on the
+// unpartitioned 7g geometry where there are no neighbors and the affine
+// model was fit directly.
+// ---------------------------------------------------------------------------
+
+/// Number of batch-size buckets in a curve row.
+pub const N_BUCKETS: usize = 4;
+
+/// Bucket a batch size: 0 (<=2), 1 (<=8), 2 (<=32), 3 (larger). The
+/// boundaries straddle the paper's 1g/7g knees (2..128) so every model's
+/// operating range spans several buckets.
+pub fn batch_bucket(batch: usize) -> usize {
+    match batch {
+        0..=2 => 0,
+        3..=8 => 1,
+        9..=32 => 2,
+        _ => 3,
+    }
+}
+
+/// Latency/active-power multiplier for one (model, profile, bucket) cell.
+/// `1.0` means "the affine service model / flat per-GPC watts are exact".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurvePoint {
+    pub lat_mult: f64,
+    pub pow_mult: f64,
+}
+
+/// Relative memory-bandwidth intensity of a model in `[0, 1]`, the knob
+/// that determines how strongly it deviates from the flat model on small
+/// slices (MIGPerf: memory-bound models suffer most under partitioning).
+fn memory_intensity(id: ModelId) -> f64 {
+    match id {
+        ModelId::MobileNet => 0.25,
+        ModelId::SqueezeNet => 0.30,
+        ModelId::SwinTransformer => 0.55,
+        ModelId::ConformerSmall => 0.45,
+        ModelId::ConformerDefault => 0.60,
+        ModelId::CitriNet => 0.50,
+    }
+}
+
+/// MIGPerf-calibrated default curve row for `(model, gpcs)`.
+///
+/// Shape: `lat_mult` rises with batch bucket and slice smallness (capacity
+/// pressure), up to +35% for a fully memory-bound model at the largest
+/// bucket on 1g; `pow_mult` starts below 1.0 at tiny batches (the slice
+/// never reaches its active-power plateau) and crosses above 1.0 only for
+/// memory-bound large batches on small slices. On 7g both collapse toward
+/// the affine fit.
+pub fn migperf_curve(model: ModelId, gpcs: usize) -> [CurvePoint; N_BUCKETS] {
+    let mi = memory_intensity(model);
+    // Slice "smallness": 1g -> 1.0, 7g -> 0.0.
+    let s = 1.0 - (gpcs.clamp(1, 7) - 1) as f64 / 6.0;
+    let mut row = [CurvePoint { lat_mult: 1.0, pow_mult: 1.0 }; N_BUCKETS];
+    for (b, pt) in row.iter_mut().enumerate() {
+        let fb = b as f64 / (N_BUCKETS - 1) as f64;
+        pt.lat_mult = 1.0 + 0.35 * mi * s * fb;
+        pt.pow_mult = 0.88 + 0.12 * fb + 0.18 * mi * s * fb;
+    }
+    row
+}
+
+/// MIGPerf-calibrated uncore-contention coefficient for a profile:
+/// fractional execution-time/power inflation per busy *neighbor* slice on
+/// the same GPU. Small slices see the largest per-neighbor penalty (more
+/// neighbors AND less private L2); the unpartitioned 7g has none.
+pub fn migperf_contention(gpcs: usize) -> f64 {
+    match gpcs {
+        0 | 1 => 0.055,
+        2 => 0.040,
+        3 => 0.028,
+        4 => 0.018,
+        5 | 6 => 0.010,
+        _ => 0.0,
+    }
+}
+
+/// A curve row resolved for one tenant: per-bucket latency/power
+/// multipliers plus the contention coefficient of its profile. This is the
+/// value the dispatch paths hold — `CurvesConfig::view` resolves it once
+/// per (model, geometry) so the hot path does two array reads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurveView {
+    pub lat: [f64; N_BUCKETS],
+    pub pow: [f64; N_BUCKETS],
+    pub contention: f64,
+}
+
+impl CurveView {
+    /// The identity view: multipliers 1.0 everywhere, no contention.
+    /// Dispatching with it is bit-identical to the flat model.
+    pub const NEUTRAL: CurveView =
+        CurveView { lat: [1.0; N_BUCKETS], pow: [1.0; N_BUCKETS], contention: 0.0 };
+
+    pub fn lat_mult(&self, batch: usize) -> f64 {
+        self.lat[batch_bucket(batch)]
+    }
+
+    pub fn pow_mult(&self, batch: usize) -> f64 {
+        self.pow[batch_bucket(batch)]
+    }
+
+    /// Interference penalty with `busy_neighbors` of the GPU's other
+    /// slices still executing at dispatch: `1 + contention * k`.
+    pub fn penalty(&self, busy_neighbors: usize) -> f64 {
+        1.0 + self.contention * busy_neighbors as f64
+    }
+
+    pub fn is_neutral(&self) -> bool {
+        *self == CurveView::NEUTRAL
+    }
+
+    /// Aggregate service-time scale for the *planner*: the latency
+    /// multiplier at a representative batch plus the contention penalty at
+    /// an assumed neighbor count. Monotone in both arguments.
+    pub fn service_scale(&self, batch: usize, busy_neighbors: usize) -> f64 {
+        self.lat_mult(batch) * self.penalty(busy_neighbors)
+    }
+}
+
 /// Static spec for a model id.
 pub fn spec(id: ModelId) -> &'static ModelSpec {
     match id {
@@ -149,6 +286,62 @@ mod tests {
             let s = spec(m);
             assert_eq!(s.knee_7g.unwrap() / s.knee_1g.unwrap(), 8, "{m}");
         }
+    }
+
+    #[test]
+    fn curve_rows_are_sane_and_monotone_in_batch() {
+        for m in ModelId::ALL {
+            for gpcs in [1usize, 2, 3, 4, 7] {
+                let row = migperf_curve(m, gpcs);
+                for w in row.windows(2) {
+                    assert!(w[1].lat_mult >= w[0].lat_mult, "{m} {gpcs}g lat not monotone");
+                    assert!(w[1].pow_mult >= w[0].pow_mult, "{m} {gpcs}g pow not monotone");
+                }
+                for pt in row {
+                    assert!(pt.lat_mult >= 1.0 && pt.lat_mult <= 1.40, "{m} {gpcs}g");
+                    assert!(pt.pow_mult >= 0.80 && pt.pow_mult <= 1.25, "{m} {gpcs}g");
+                }
+            }
+            // The unpartitioned GPU is where the affine model was fit:
+            // latency corrections vanish there.
+            for pt in migperf_curve(m, 7) {
+                assert!((pt.lat_mult - 1.0).abs() < 1e-12, "{m} 7g");
+            }
+        }
+    }
+
+    #[test]
+    fn contention_shrinks_with_slice_size() {
+        let cs: Vec<f64> = [1, 2, 3, 4, 7].iter().map(|&g| migperf_contention(g)).collect();
+        for w in cs.windows(2) {
+            assert!(w[1] <= w[0], "contention must shrink with gpcs: {cs:?}");
+        }
+        assert_eq!(migperf_contention(7), 0.0);
+    }
+
+    #[test]
+    fn neutral_view_is_exactly_identity() {
+        let v = CurveView::NEUTRAL;
+        for b in [0usize, 1, 2, 8, 9, 32, 33, 4096] {
+            assert_eq!(v.lat_mult(b).to_bits(), 1.0f64.to_bits());
+            assert_eq!(v.pow_mult(b).to_bits(), 1.0f64.to_bits());
+        }
+        for k in 0..8 {
+            assert_eq!(v.penalty(k).to_bits(), 1.0f64.to_bits());
+        }
+        assert!(v.is_neutral());
+    }
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(batch_bucket(1), 0);
+        assert_eq!(batch_bucket(2), 0);
+        assert_eq!(batch_bucket(3), 1);
+        assert_eq!(batch_bucket(8), 1);
+        assert_eq!(batch_bucket(9), 2);
+        assert_eq!(batch_bucket(32), 2);
+        assert_eq!(batch_bucket(33), 3);
+        assert_eq!(batch_bucket(128), 3);
     }
 
     #[test]

@@ -21,6 +21,7 @@
 pub mod calib;
 pub mod manifest;
 
+pub use calib::{batch_bucket, CurvePoint, CurveView, N_BUCKETS};
 pub use manifest::{ArtifactEntry, Manifest};
 
 /// The six paper workloads (§5 "Benchmarks").

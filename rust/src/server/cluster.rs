@@ -616,6 +616,24 @@ enum Ev {
     Hedge { tenant: usize, idx: usize },
 }
 
+/// Dispatch-time accounting for one in-flight batch: what the energy
+/// integral was charged when the batch started, so a crash harvest can
+/// refund the unburned tail exactly (the GPU stops drawing active power
+/// at the crash, not at the batch's scheduled completion).
+#[derive(Debug, Clone, Copy)]
+struct BatchMeta {
+    /// Scheduled completion instant.
+    done: Nanos,
+    /// Charged execution span, ns (slowdown, curve and interference
+    /// inflation included).
+    exec: Nanos,
+    /// Power weight applied to this batch's busy time
+    /// (`pow_mult × interference penalty`; 1.0 under the flat model).
+    pw: f64,
+    /// Dispatched under a slowdown fault (served-degraded accounting).
+    degraded: bool,
+}
+
 /// One (tenant, GPU) serving group: the tenant's slices on that GPU share
 /// a batcher; dispatch goes to the group's least-loaded slice.
 struct Group {
@@ -624,9 +642,8 @@ struct Group {
     batcher: DynamicBatcher,
     slice_free: Vec<Nanos>,
     in_flight: Vec<Option<Batch>>,
-    /// Whether `in_flight[i]` was dispatched under a slowdown fault
-    /// (drives the served-degraded accounting).
-    in_flight_deg: Vec<bool>,
+    /// Per-slot dispatch accounting for `in_flight[i]`.
+    in_flight_meta: Vec<BatchMeta>,
     free_slots: Vec<usize>,
     /// Requests routed here and not yet completed (the JSQ signal).
     outstanding: usize,
@@ -634,6 +651,10 @@ struct Group {
     /// Accumulated per-slice execution time (the energy integral's
     /// active-GPC numerator; × the tenant's GPCs-per-slice at the end).
     busy_ns: u128,
+    /// Power-weighted twin of `busy_ns`: each batch's span times its
+    /// curve power multiplier and interference penalty. Equal to
+    /// `busy_ns` bit-for-bit under the flat model (weight 1.0).
+    busy_pw_ns: u128,
     /// Execution-jitter stream, derived from the group's GLOBAL
     /// (GPU, tenant) identity ([`group_exec_rng`]) so jitter draws are a
     /// pure function of the group — identical however the fleet is
@@ -755,6 +776,10 @@ enum ReqState {
 struct TenantState {
     spec: &'static ModelSpec,
     sm: ServiceModel,
+    /// Resolved performance/energy curve row for this tenant's
+    /// (model, slice geometry) — `CurveView::NEUTRAL` when `[curves]` is
+    /// disabled, so dispatch holds it unconditionally.
+    curve: crate::models::CurveView,
     buckets: Bucketizer,
     arrivals: Vec<(Nanos, f64)>,
     preproc_done: Vec<Nanos>,
@@ -900,42 +925,92 @@ fn dispatch_ready(
     q: &mut EventQueue<Ev>,
     slow: &[f64],
 ) {
-    let grp = &mut groups[gi];
-    if grp.failed || grp.slice_free.is_empty() {
+    if groups[gi].failed || groups[gi].slice_free.is_empty() {
         return;
     }
-    let slow = slow.get(grp.gpu).copied().unwrap_or(1.0);
-    let ts = &tenants[grp.tenant];
-    while let Some((batch, _)) = grp.batcher.try_form(now) {
+    let gpu = groups[gi].gpu;
+    let slow = slow.get(gpu).copied().unwrap_or(1.0);
+    let ts = &tenants[groups[gi].tenant];
+    let curve = ts.curve;
+    while let Some((batch, _)) = groups[gi].batcher.try_form(now) {
         // Invariant: checked non-empty above, and the loop never
         // removes slices.
-        let Some((slot, &free)) = grp.slice_free.iter().enumerate().min_by_key(|(_, &t)| t)
+        let Some((slot, &free)) =
+            groups[gi].slice_free.iter().enumerate().min_by_key(|(_, &t)| t)
         else {
             debug_assert!(false, "dispatch with no slices");
             return;
         };
         let start = now.max(free);
+        // Uncore interference (MIGPerf): count the GPU's OTHER slices —
+        // any tenant's, this group's siblings included — still executing
+        // at the batch's start. Zero contention skips the scan entirely;
+        // the penalty is then the exact constant 1.0 and the curve
+        // multipliers below are exact no-ops under the flat model.
+        let k = if curve.contention > 0.0 {
+            busy_neighbors(groups, gi, slot, gpu, start)
+        } else {
+            0
+        };
+        let lat_mult = curve.lat_mult(batch.size()) * curve.penalty(k);
+        let pw = curve.pow_mult(batch.size()) * curve.penalty(k);
+        let grp = &mut groups[gi];
         let padded = padded_len(&ts.buckets, &batch);
-        let exec =
-            secs(ts.sm.exec_secs_jittered(batch.size(), padded, &mut grp.exec) * slow);
+        let exec = secs(
+            ts.sm.exec_secs_jittered(batch.size(), padded, &mut grp.exec) * slow * lat_mult,
+        );
         let done = start + exec;
         grp.slice_free[slot] = done;
         grp.busy_ns += exec as u128;
-        let degraded = slow > 1.0;
+        grp.busy_pw_ns += weighted_ns(exec, pw);
+        let meta = BatchMeta { done, exec, pw, degraded: slow > 1.0 };
         let idx = match grp.free_slots.pop() {
             Some(slot) => {
                 debug_assert!(grp.in_flight[slot].is_none());
                 grp.in_flight[slot] = Some(batch);
-                grp.in_flight_deg[slot] = degraded;
+                grp.in_flight_meta[slot] = meta;
                 slot
             }
             None => {
                 grp.in_flight.push(Some(batch));
-                grp.in_flight_deg.push(degraded);
+                grp.in_flight_meta.push(meta);
                 grp.in_flight.len() - 1
             }
         };
         q.schedule(done, Ev::ExecDone { group: gi, batch_idx: idx });
+    }
+}
+
+/// Slices on `gpu` — excluding `(gi, slot)` itself — whose current
+/// execution extends past `start`: the dispatch-time interference
+/// neighbor count `k` in the `1 + contention · k` penalty. A pure read
+/// over the shard's groups; a GPU's groups always share a shard (the
+/// residency partition unions tenants through their GPUs), so the count
+/// is shard-invariant.
+fn busy_neighbors(groups: &[Group], gi: usize, slot: usize, gpu: usize, start: Nanos) -> usize {
+    let mut k = 0;
+    for (j, g) in groups.iter().enumerate() {
+        if g.gpu != gpu {
+            continue;
+        }
+        for (s, &free) in g.slice_free.iter().enumerate() {
+            if (j, s) != (gi, slot) && free > start {
+                k += 1;
+            }
+        }
+    }
+    k
+}
+
+/// Power-weighted busy nanoseconds for one batch. The neutral weight is
+/// special-cased so disabled curves accumulate the exact same u128 sum
+/// as the unweighted integral — that identity is what makes flat-model
+/// energy bit-identical to pre-curve builds.
+fn weighted_ns(exec: Nanos, pw: f64) -> u128 {
+    if pw == 1.0 {
+        exec as u128
+    } else {
+        (exec as f64 * pw).round().max(0.0) as u128
     }
 }
 
@@ -1065,11 +1140,12 @@ fn ensure_group(
         batcher,
         slice_free: Vec::new(),
         in_flight: Vec::new(),
-        in_flight_deg: Vec::new(),
+        in_flight_meta: Vec::new(),
         free_slots: Vec::new(),
         outstanding: 0,
         armed_tick: None,
         busy_ns: 0,
+        busy_pw_ns: 0,
         // Late-admission groups only arise under the coupled policies
         // (reconfig/admission/consolidation), which always run as a
         // single identity shard, so local ids here ARE global ids.
@@ -1349,6 +1425,7 @@ fn run_inner(
         tenants.push(TenantState {
             spec,
             sm,
+            curve: sys.curves.view(t.model, t.slice.gpcs),
             buckets,
             preproc_done: Vec::new(),
             routed: Vec::new(),
@@ -1411,11 +1488,12 @@ fn run_inner(
                 batcher,
                 slice_free: vec![0; n],
                 in_flight: Vec::new(),
-                in_flight_deg: Vec::new(),
+                in_flight_meta: Vec::new(),
                 free_slots: Vec::new(),
                 outstanding: 0,
                 armed_tick: None,
                 busy_ns: 0,
+                busy_pw_ns: 0,
                 exec: group_exec_rng(cfg.seed, ctx.gpu_ids[g], ctx.tenant_ids[ti]),
                 failed: false,
             });
@@ -1428,6 +1506,23 @@ fn run_inner(
         let specs: Vec<TenantSpec> =
             cfg.tenants.iter().map(|t| TenantSpec::new(t.model, t.sla_ms)).collect();
         let slices: Vec<Slice> = cfg.tenants.iter().map(|t| t.slice).collect();
+        // Curve-aware planning: each tenant's sizing/prediction scale is
+        // its latency multiplier at the knee batch times the contention
+        // penalty of a fully co-located host GPU — the conservative
+        // planning point for the HeteroMIG setting (neighbors busy).
+        // With `[curves]` disabled every view is NEUTRAL and the scales
+        // are exactly 1.0 (the controller is bit-identical to before).
+        let host_gpcs = cfg.fleet.iter().map(|c| c.gpcs).max().unwrap_or(7);
+        let scales: Vec<f64> = cfg
+            .tenants
+            .iter()
+            .map(|t| {
+                let len = crate::mig::planner::default_len(t.model);
+                let knee = ServiceModel::new(t.model.spec(), t.slice.gpcs).knee(len);
+                let neighbors = (host_gpcs / t.slice.gpcs.max(1)).saturating_sub(1);
+                sys.curves.view(t.model, t.slice.gpcs).service_scale(knee, neighbors)
+            })
+            .collect();
         ClusterReconfigController::with_fleet(
             specs,
             slices,
@@ -1435,6 +1530,7 @@ fn run_inner(
             alloc.clone(),
             policy,
         )
+        .with_service_scales(scales)
     });
     // Per-GPU power timeline (consolidation's idle-power elision).
     let mut power = GpuPower::new(cfg.n_gpus());
@@ -1607,7 +1703,7 @@ fn run_inner(
                     // completion can land while it is failed.
                     frt.served_by_failed += batch.size() as u64;
                 }
-                let degraded = groups[group].in_flight_deg[batch_idx];
+                let degraded = groups[group].in_flight_meta[batch_idx].degraded;
                 groups[group].free_slots.push(batch_idx);
                 let bsize = batch.size();
                 groups[group].outstanding = groups[group].outstanding.saturating_sub(bsize);
@@ -1763,12 +1859,29 @@ fn run_inner(
                                 continue;
                             }
                             groups[gi].failed = true;
-                            let lost: Vec<Request> = groups[gi]
-                                .in_flight
-                                .iter_mut()
-                                .filter_map(Option::take)
-                                .flat_map(|b| b.requests)
-                                .collect();
+                            // Harvest the in-flight batches AND refund
+                            // each one's unburned tail from the energy
+                            // integral: dispatch charged busy time up to
+                            // the scheduled completion, but the GPU
+                            // stops drawing active power at the crash —
+                            // without the refund, busy time can exceed
+                            // the powered-on span and conservation
+                            // breaks (worst under slowdown-stretched
+                            // execution, which inflates the overhang).
+                            let mut lost: Vec<Request> = Vec::new();
+                            for slot in 0..groups[gi].in_flight.len() {
+                                let Some(b) = groups[gi].in_flight[slot].take() else {
+                                    continue;
+                                };
+                                let meta = groups[gi].in_flight_meta[slot];
+                                let refund = meta.done.saturating_sub(now).min(meta.exec);
+                                groups[gi].busy_ns =
+                                    groups[gi].busy_ns.saturating_sub(refund as u128);
+                                groups[gi].busy_pw_ns = groups[gi]
+                                    .busy_pw_ns
+                                    .saturating_sub(weighted_ns(refund, meta.pw));
+                                lost.extend(b.requests);
+                            }
                             groups[gi].outstanding =
                                 groups[gi].outstanding.saturating_sub(lost.len());
                             let ti = groups[gi].tenant;
@@ -2076,6 +2189,19 @@ fn run_inner(
         }
     }
 
+    // A file-backed arrival source whose trace mutated on disk between the
+    // probe and the end of replay has silently diverged from the workload
+    // the run was sized for — fail loudly rather than report stats for a
+    // hybrid workload nobody asked for.
+    for (ti, s) in sources.iter().enumerate() {
+        s.verify_source().map_err(|e| {
+            e.context(format!(
+                "tenant {} (global {}): arrival trace changed during replay",
+                ti, ctx.tenant_ids[ti]
+            ))
+        })?;
+    }
+
     let (reconfigs, migrations, reconfig_events) = match &ctrl {
         Some(c) => (c.events().len() as u64, c.migrations(), c.events().to_vec()),
         None => (0, 0, Vec::new()),
@@ -2092,9 +2218,12 @@ fn run_inner(
     // Busy GPC-time per local GPU, accumulated in group-creation order
     // (the same order the single-heap run sums it).
     let mut busy_gpc_s = vec![0.0f64; cfg.n_gpus()];
+    let mut busy_pw_gpc_s = vec![0.0f64; cfg.n_gpus()];
     for grp in &groups {
         busy_gpc_s[grp.gpu] +=
             grp.busy_ns as f64 * 1e-9 * cfg.tenants[grp.tenant].slice.gpcs as f64;
+        busy_pw_gpc_s[grp.gpu] +=
+            grp.busy_pw_ns as f64 * 1e-9 * cfg.tenants[grp.tenant].slice.gpcs as f64;
     }
 
     // Requests still parked in an admission queue never got capacity:
@@ -2136,6 +2265,7 @@ fn run_inner(
         consolidations,
         consolidation_events,
         busy_gpc_s,
+        busy_pw_gpc_s,
         cpu_pools,
         dpus,
         power,
@@ -2160,6 +2290,7 @@ struct PartOut {
     consolidations: u64,
     consolidation_events: Vec<ConsolidationEvent>,
     busy_gpc_s: Vec<f64>,
+    busy_pw_gpc_s: Vec<f64>,
     cpu_pools: Vec<CpuPool>,
     dpus: Vec<Option<Dpu>>,
     power: GpuPower,
@@ -2193,12 +2324,14 @@ fn finalize(
     // host's CPU cores, DPU and base draw. Power-downs show up as
     // shortened `on_s` — the idle-power elision consolidation buys.
     let mut busy_gpc_s = vec![0.0f64; cfg.n_gpus()];
+    let mut busy_pw_gpc_s = vec![0.0f64; cfg.n_gpus()];
     let mut pool_util = vec![0.0f64; cfg.n_gpus()];
     let mut dpu_util = vec![0.0f64; cfg.n_gpus()];
     let mut off_s_gpu = vec![0.0f64; cfg.n_gpus()];
     for (ctx, o) in parts.iter().zip(&outs) {
         for (g, &gg) in ctx.gpu_ids.iter().enumerate() {
             busy_gpc_s[gg] = o.busy_gpc_s[g];
+            busy_pw_gpc_s[gg] = o.busy_pw_gpc_s[g];
             pool_util[gg] = o.cpu_pools[g].utilization(horizon);
             if let Some(d) = &o.dpus[g] {
                 dpu_util[gg] = d.utilization(horizon);
@@ -2213,7 +2346,8 @@ fn finalize(
     for g in 0..cfg.n_gpus() {
         gpu_off_s += off_s_gpu[g];
         let on_s = (horizon_s - off_s_gpu[g]).max(0.0);
-        let (active_j, idle_j) = em.gpu_energy(&cfg.fleet[g], busy_gpc_s[g], on_s);
+        let (active_j, idle_j) =
+            em.gpu_energy_weighted(&cfg.fleet[g], busy_gpc_s[g], busy_pw_gpc_s[g], on_s);
         energy.gpu_active_j += active_j;
         energy.gpu_idle_j += idle_j;
         let pool_busy_s = pool_util[g] * usable as f64 * horizon_s;
@@ -2266,8 +2400,12 @@ fn finalize(
                 final_alloc[gg][tg] = o.final_alloc[g][ti];
             }
         }
-        for (ti, ts) in o.tenants.into_iter().enumerate() {
+        for (ti, mut ts) in o.tenants.into_iter().enumerate() {
             let tg = ctx.tenant_ids[ti];
+            // Degenerate-window throughput guard: a tenant whose
+            // completions all land on one timestamp (or that completes a
+            // single request) still reports honest QPS over the run.
+            ts.stats.note_horizon(horizon);
             dropped[tg] = ts.dropped;
             deferred[tg] = ts.deferred;
             deferred_served[tg] = ts.deferred_served;

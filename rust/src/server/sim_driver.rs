@@ -236,6 +236,10 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
         None => cfg.active_servers.min(cfg.mig.vgpus()).max(1),
     };
     let mut sm = ServiceModel::new(spec, mig_now.gpcs_per_vgpu());
+    // Per-(model, profile, batch) performance/energy curve for the live
+    // geometry (the exact NEUTRAL constant when `[curves]` is disabled);
+    // re-resolved whenever a reconfiguration changes the slice size.
+    let mut curve = sys.curves.view(cfg.model, mig_now.gpcs_per_vgpu());
 
     let mut root_rng = Rng::new(cfg.seed ^ 0x5EED);
     let gen_rng = root_rng.split(1);
@@ -276,9 +280,11 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
         _ => None,
     };
 
-    // vGPU workers: busy-until + accumulated busy ns.
+    // vGPU workers: busy-until + accumulated busy ns (plus the
+    // power-weighted twin feeding the active-energy integral).
     let mut vgpu_free: Vec<Nanos> = vec![0; n_vgpus];
     let mut vgpu_busy: Vec<u128> = vec![0; n_vgpus];
+    let mut vgpu_busy_pw: Vec<u128> = vec![0; n_vgpus];
 
     // Workload: a bounded pull-based stream. Arrivals are injected into
     // the event heap lazily — at most one is pending outside the heap at
@@ -314,6 +320,7 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
     // `busy_folded`, because a vGPU-nanosecond costs more GPC-power on a
     // coarser partition.
     let mut busy_gpc_folded: u128 = 0;
+    let mut busy_pw_gpc_folded: u128 = 0;
     let mut cap_last_change: Nanos = 0;
     let mut cap_ns: u128 = 0;
     // In-flight batch slab: completed slots go on a free list and are
@@ -328,25 +335,47 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
     let mut horizon: Nanos = 0;
     let mut completed = 0usize;
 
-    // Dispatch a batch to the least-loaded vGPU.
+    // Dispatch a batch to the least-loaded vGPU. Curve-aware: execution
+    // stretches by the batch-bucket latency multiplier times the uncore
+    // interference penalty (k = sibling vGPUs still executing at start),
+    // and the power-weighted busy integral accumulates the matching
+    // power multiplier. With curves disabled both multipliers are the
+    // exact constant 1.0 and the arithmetic is bit-identical to the flat
+    // model.
     let dispatch = |batch: Batch,
                     now: Nanos,
                     vgpu_free: &mut [Nanos],
                     vgpu_busy: &mut [u128],
+                    vgpu_busy_pw: &mut [u128],
                     in_flight: &mut Vec<Option<Batch>>,
                     free_slots: &mut Vec<usize>,
                     q: &mut EventQueue<Ev>,
                     exec_rng: &mut Rng,
                     sm: &ServiceModel,
-                    buckets: &Bucketizer| {
+                    buckets: &Bucketizer,
+                    curve: &crate::models::CurveView| {
         let (vgpu, &free) =
             vgpu_free.iter().enumerate().min_by_key(|(_, &t)| t).expect("vgpus");
         let start = now.max(free);
+        let k = if curve.contention > 0.0 {
+            vgpu_free.iter().enumerate().filter(|&(j, &f)| j != vgpu && f > start).count()
+        } else {
+            0
+        };
+        let lat_mult = curve.lat_mult(batch.size()) * curve.penalty(k);
+        let pw = curve.pow_mult(batch.size()) * curve.penalty(k);
         let padded_len = padded_len_of(buckets, &batch);
-        let exec = crate::clock::secs(sm.exec_secs_jittered(batch.size(), padded_len, exec_rng));
+        let exec = crate::clock::secs(
+            sm.exec_secs_jittered(batch.size(), padded_len, exec_rng) * lat_mult,
+        );
         let done = start + exec;
         vgpu_free[vgpu] = done;
         vgpu_busy[vgpu] += exec as u128;
+        vgpu_busy_pw[vgpu] += if pw == 1.0 {
+            exec as u128
+        } else {
+            (exec as f64 * pw).round().max(0.0) as u128
+        };
         let idx = match free_slots.pop() {
             Some(slot) => {
                 debug_assert!(in_flight[slot].is_none());
@@ -421,8 +450,9 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 if !reconfiguring {
                     while let Some((batch, _)) = batcher.try_form(now) {
                         dispatch(
-                            batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches,
-                            &mut free_slots, q, &mut exec_rng, &sm, &buckets,
+                            batch, now, &mut vgpu_free, &mut vgpu_busy, &mut vgpu_busy_pw,
+                            &mut in_flight_batches, &mut free_slots, q, &mut exec_rng, &sm,
+                            &buckets, &curve,
                         );
                     }
                     // Arm a tick only when this enqueue moved the earliest
@@ -445,8 +475,9 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 if !reconfiguring {
                     while let Some((batch, _)) = batcher.try_form(now) {
                         dispatch(
-                            batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches,
-                            &mut free_slots, q, &mut exec_rng, &sm, &buckets,
+                            batch, now, &mut vgpu_free, &mut vgpu_busy, &mut vgpu_busy_pw,
+                            &mut in_flight_batches, &mut free_slots, q, &mut exec_rng, &sm,
+                            &buckets, &curve,
                         );
                     }
                     if let Some(deadline) = batcher.next_deadline() {
@@ -515,6 +546,8 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 let epoch_busy: u128 = vgpu_busy.iter().sum();
                 busy_folded += epoch_busy;
                 busy_gpc_folded += epoch_busy * mig_now.gpcs_per_vgpu() as u128;
+                busy_pw_gpc_folded +=
+                    vgpu_busy_pw.iter().sum::<u128>() * mig_now.gpcs_per_vgpu() as u128;
                 cap_ns +=
                     n_vgpus as u128 * (now.saturating_sub(cap_last_change)) as u128;
                 cap_last_change = now;
@@ -522,8 +555,10 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 mig_now = to;
                 n_vgpus = to.vgpus();
                 sm = ServiceModel::new(spec, to.gpcs_per_vgpu());
+                curve = sys.curves.view(cfg.model, to.gpcs_per_vgpu());
                 vgpu_free = vec![now; n_vgpus];
                 vgpu_busy = vec![0; n_vgpus];
+                vgpu_busy_pw = vec![0; n_vgpus];
                 // Rebuild the batching policy for the new slice count and
                 // carry queued requests over (original enqueue times keep
                 // their deadlines honest).
@@ -533,8 +568,9 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 // and re-arm the deadline tick.
                 while let Some((batch, _)) = batcher.try_form(now) {
                     dispatch(
-                        batch, now, &mut vgpu_free, &mut vgpu_busy, &mut in_flight_batches,
-                        &mut free_slots, q, &mut exec_rng, &sm, &buckets,
+                        batch, now, &mut vgpu_free, &mut vgpu_busy, &mut vgpu_busy_pw,
+                        &mut in_flight_batches, &mut free_slots, q, &mut exec_rng, &sm,
+                        &buckets, &curve,
                     );
                 }
                 if let Some(deadline) = batcher.next_deadline() {
@@ -573,14 +609,21 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
         GpuClass { name: "a100", gpcs: sys.hardware.gpcs, mem_gb: GpuClass::A100.mem_gb };
     let busy_gpc_total =
         busy_gpc_folded + vgpu_busy.iter().sum::<u128>() * mig_now.gpcs_per_vgpu() as u128;
-    let (gpu_active_j, gpu_idle_j) =
-        em.gpu_energy(&gpu_class, busy_gpc_total as f64 * 1e-9, horizon_s);
+    let busy_pw_gpc_total = busy_pw_gpc_folded
+        + vgpu_busy_pw.iter().sum::<u128>() * mig_now.gpcs_per_vgpu() as u128;
+    let (gpu_active_j, gpu_idle_j) = em.gpu_energy_weighted(
+        &gpu_class,
+        busy_gpc_total as f64 * 1e-9,
+        busy_pw_gpc_total as f64 * 1e-9,
+        horizon_s,
+    );
     let usable_s = usable_cores as f64 * horizon_s;
     let pool_busy_s = match cfg.preproc {
         PreprocMode::Cpu => cpu_pool.utilization(horizon) * usable_s,
         _ => 0.0,
     };
     let reserved_s = sys.hardware.cpu_reserved_cores as f64 * horizon_s;
+    stats.note_horizon(horizon);
     stats.energy = EnergyBreakdown {
         gpu_active_j,
         gpu_idle_j,

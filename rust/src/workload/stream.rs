@@ -59,6 +59,16 @@ pub trait ArrivalStream {
     fn duration_hint_s(&self) -> Option<f64> {
         None
     }
+
+    /// Check that the backing source still matches what the stream was
+    /// opened against. In-memory and synthetic sources are trivially
+    /// stable (the default); file-backed sources re-scan the file and
+    /// fail if it mutated between the sizing probe and the end of replay
+    /// (see [`SourceGuard`]). Drivers call this once, after the event
+    /// loop drains.
+    fn verify_source(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 impl ArrivalStream for QueryGen {
@@ -93,6 +103,10 @@ impl ArrivalStream for Box<dyn ArrivalStream> {
     fn duration_hint_s(&self) -> Option<f64> {
         (**self).duration_hint_s()
     }
+
+    fn verify_source(&self) -> anyhow::Result<()> {
+        (**self).verify_source()
+    }
 }
 
 /// Caps an (often infinite) stream at `n` arrivals. The DES drivers wrap
@@ -124,6 +138,10 @@ impl<S: ArrivalStream> ArrivalStream for Bounded<S> {
 
     fn duration_hint_s(&self) -> Option<f64> {
         self.inner.duration_hint_s()
+    }
+
+    fn verify_source(&self) -> anyhow::Result<()> {
+        self.inner.verify_source()
     }
 }
 
@@ -783,7 +801,9 @@ impl StreamSpec {
     /// optional thinning → per-arrival length draws from `gen_rng`.
     /// Arrival-for-arrival identical to materializing the source as a
     /// [`ReplayTrace`], applying the equivalent `rescaled` calls, and
-    /// calling `arrivals(model, gen_rng)`.
+    /// calling `arrivals(model, gen_rng)`. File-backed streams come back
+    /// wrapped in a [`SourceGuard`] so the driver can confirm at the end
+    /// of replay that the file never changed underneath the run.
     pub fn open(&self, model: ModelId, gen_rng: Rng) -> anyhow::Result<Box<dyn ArrivalStream>> {
         let raw = self.scan_source()?;
         let (factor, scaled_dur) = self.fit(&raw);
@@ -801,7 +821,59 @@ impl StreamSpec {
             Some(p) => (Some(p.mean_qps), Some(p.duration_s)),
             None => (Some(len as f64 / scaled_dur.max(1e-9)), Some(scaled_dur)),
         };
-        Ok(Box::new(WithLengths::new(ts, model, gen_rng).with_hints(rate, dur)))
+        let stream: Box<dyn ArrivalStream> =
+            Box::new(WithLengths::new(ts, model, gen_rng).with_hints(rate, dur));
+        Ok(match &self.source {
+            StreamSource::File { path } => {
+                Box::new(SourceGuard { inner: stream, path: path.clone(), raw })
+            }
+            _ => stream,
+        })
+    }
+}
+
+/// Pairs a file-backed stream with the shape its sizing scan saw, so the
+/// two-pass protocol's blind spot is closed: the replay pass treats a
+/// read error as end-of-stream (by design — pass 1 validated the file),
+/// which means a trace rewritten on disk mid-run would otherwise replay
+/// a silent hybrid of old and new bytes. [`ArrivalStream::verify_source`]
+/// re-scans the file after the run and demands the identical shape
+/// (row count and first/last timestamps).
+pub struct SourceGuard {
+    inner: Box<dyn ArrivalStream>,
+    path: String,
+    raw: TraceScan,
+}
+
+impl ArrivalStream for SourceGuard {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        self.inner.next_arrival()
+    }
+
+    fn rate_hint(&self) -> Option<f64> {
+        self.inner.rate_hint()
+    }
+
+    fn duration_hint_s(&self) -> Option<f64> {
+        self.inner.duration_hint_s()
+    }
+
+    fn verify_source(&self) -> anyhow::Result<()> {
+        let now = scan_trace_file(&self.path)
+            .map_err(|e| e.context("trace became unreadable during replay"))?;
+        anyhow::ensure!(
+            now == self.raw,
+            "trace '{}' changed on disk during replay: opened with {} rows \
+             spanning [{}, {}] s, file now has {} rows spanning [{}, {}] s",
+            self.path,
+            self.raw.len,
+            self.raw.first_s,
+            self.raw.last_s,
+            now.len,
+            now.first_s,
+            now.last_s
+        );
+        Ok(())
     }
 }
 
@@ -936,6 +1008,28 @@ mod tests {
         let lazy = collect_arrivals(spec.open(ModelId::MobileNet, Rng::new(1)).unwrap());
         assert_eq!(lazy.len(), 1);
         assert_eq!(lazy[0].at, secs(eager.timestamps_s()[0]));
+    }
+
+    #[test]
+    fn guard_detects_trace_mutated_during_replay() {
+        let path = tmp_path("mutate.csv");
+        std::fs::write(&path, "0.25\n0.5\n1.5\n").unwrap();
+        let spec = StreamSpec::file(&path);
+        let mut s = spec.open(ModelId::MobileNet, Rng::new(3)).unwrap();
+        assert!(s.verify_source().is_ok());
+        s.next_arrival().unwrap();
+        // The file grows mid-run (e.g. a collector still appending).
+        std::fs::write(&path, "0.25\n0.5\n1.5\n2.0\n").unwrap();
+        let err = s.verify_source().unwrap_err().to_string();
+        assert!(err.contains("changed on disk during replay"), "{err}");
+        assert!(err.contains("3 rows") && err.contains("4 rows"), "{err}");
+        // Restoring the original content clears the alarm.
+        std::fs::write(&path, "0.25\n0.5\n1.5\n").unwrap();
+        assert!(s.verify_source().is_ok());
+        // Synthetic sources are trivially stable.
+        let azure = StreamSpec::azure(1, 5.0, 20.0);
+        let s = azure.open(ModelId::MobileNet, Rng::new(3)).unwrap();
+        assert!(s.verify_source().is_ok());
     }
 
     #[test]

@@ -1,0 +1,364 @@
+//! Properties of the `[curves]` layer (per-(model, profile, batch)
+//! latency/power multipliers + busy-neighbor contention): neutral
+//! settings are BYTE-IDENTICAL to the flat model end to end (stats and
+//! energy bit-for-bit, at any shard count), interference only ever slows
+//! things down and never loses work, the scaled planner helpers degrade
+//! exactly to their unscaled twins at scale 1.0, `[curves]` TOML
+//! round-trips, and the `interference` experiment is bitwise identical
+//! across `--jobs` counts.
+
+use std::process::Command;
+
+use preba::config::{toml, PrebaConfig};
+use preba::mig::reconfig::{
+    predicted_p95_ms_gpcs, predicted_p95_ms_gpcs_scaled, slices_for_rate, slices_for_rate_scaled,
+    TenantSpec,
+};
+use preba::mig::{MigConfig, PackStrategy, ServiceModel, Slice};
+use preba::models::{batch_bucket, ModelId, N_BUCKETS};
+use preba::prop_assert;
+use preba::server::cluster::{self, ClusterConfig, ClusterOutcome, ClusterTenant};
+use preba::server::{sim_driver, PreprocMode, SimConfig};
+use preba::util::prop::check;
+use preba::util::Rng;
+
+/// A small random fleet: 2 GPUs, 2-3 tenants over mixed slice profiles
+/// at sub-saturation load. Shared by the byte-identity properties.
+fn random_cluster_cfg(rng: &mut Rng) -> ClusterConfig {
+    let horizon_s = 1.5 + rng.f64() * 1.5;
+    let models = [ModelId::SwinTransformer, ModelId::MobileNet, ModelId::CitriNet];
+    let tenants: Vec<ClusterTenant> = (0..2 + rng.below(2) as usize)
+        .map(|i| {
+            let model = models[i % models.len()];
+            let (slice, per) = if rng.below(2) == 0 {
+                (Slice::new(1, 5), ServiceModel::new(model.spec(), 1).plateau_qps(0.0))
+            } else {
+                (Slice::new(2, 10), ServiceModel::new(model.spec(), 2).plateau_qps(0.0))
+            };
+            let slices = 2 + rng.below(2) as usize;
+            let rate = rng.range_f64(0.35, 0.6) * slices as f64 * per;
+            let mut t = ClusterTenant::new(model, slice, slices, rate);
+            t.sla_ms = 80.0;
+            t.requests = ((rate * horizon_s).ceil() as usize).max(50);
+            t
+        })
+        .collect();
+    ClusterConfig::builder()
+        .gpus(2)
+        .strategy(PackStrategy::BestFit)
+        .tenants(tenants)
+        .seed(rng.next_u64())
+        .warmup_frac(0.0)
+        .build()
+}
+
+/// Bitwise outcome fingerprint: every latency/energy float via
+/// `to_bits`, plus the raw counters. Two runs that disagree anywhere
+/// observable disagree here.
+fn fingerprint(out: &ClusterOutcome) -> Vec<u64> {
+    let mut f = vec![out.horizon as u64, out.events, out.completed_total()];
+    f.extend(out.dropped.iter().copied());
+    for (_, stats) in &out.per_tenant {
+        f.push(stats.completed);
+        f.push(stats.p95_ms().to_bits());
+        f.push(stats.mean_ms().to_bits());
+        f.push(stats.throughput_qps().to_bits());
+    }
+    let e = &out.energy;
+    for v in [e.gpu_active_j, e.gpu_idle_j, e.cpu_j, e.dpu_j, e.base_j] {
+        f.push(v.to_bits());
+    }
+    f
+}
+
+/// Neutral curve settings — disabled, `flat` + zero contention, and
+/// `migperf` with every scale at 0 — are all BYTE-identical to the flat
+/// model: the curve plumbing must be invisible when the multipliers are
+/// 1.0, down to the energy integrals' last bit.
+#[test]
+fn neutral_curves_are_byte_identical_to_the_flat_model() {
+    let base = PrebaConfig::new();
+    assert!(!base.curves.enabled);
+    let mut flat0 = base.clone();
+    flat0.curves.enabled = true;
+    flat0.curves.source = "flat".to_string();
+    flat0.curves.contention_scale = 0.0;
+    let mut mig0 = base.clone();
+    mig0.curves.enabled = true;
+    mig0.curves.source = "migperf".to_string();
+    mig0.curves.lat_scale = 0.0;
+    mig0.curves.pow_scale = 0.0;
+    mig0.curves.contention_scale = 0.0;
+    let variants = [&base, &flat0, &mig0];
+    for sys in variants {
+        sys.validate().unwrap();
+        for m in ModelId::ALL {
+            assert!(sys.curves.view(m, 1).is_neutral(), "non-neutral view for {m:?}");
+        }
+    }
+    check("neutral curve byte-identity (cluster)", 8, |rng| {
+        let cfg = random_cluster_cfg(rng);
+        let outs: Vec<Vec<u64>> = variants
+            .iter()
+            .map(|sys| fingerprint(&cluster::run(&cfg, sys).expect("valid config")))
+            .collect();
+        prop_assert!(
+            outs[0] == outs[1] && outs[0] == outs[2],
+            "neutral curve settings diverged from the flat model"
+        );
+        Ok(())
+    });
+    // Same invisibility through the single-server DES path.
+    let mut cfg = SimConfig::new(ModelId::SwinTransformer, MigConfig::Small7, PreprocMode::Dpu);
+    cfg.requests = 2000;
+    cfg.rate_qps = cfg.saturating_rate();
+    let outs: Vec<_> = variants.iter().map(|sys| sim_driver::run(&cfg, sys)).collect();
+    for o in &outs[1..] {
+        assert_eq!(o.horizon, outs[0].horizon);
+        assert_eq!(o.stats.p95_ms().to_bits(), outs[0].stats.p95_ms().to_bits());
+        assert_eq!(
+            o.stats.energy.total_j().to_bits(),
+            outs[0].stats.energy.total_j().to_bits(),
+            "sim energy diverged under neutral curves"
+        );
+    }
+}
+
+/// Event-heap sharding stays a pure performance knob with interference
+/// on: the busy-neighbor count reads sibling groups of the same GPU, and
+/// the residency-component partition keeps those in one shard — forcing
+/// the single global heap must change nothing.
+#[test]
+fn sharding_is_invisible_under_interference() {
+    let mut sys = PrebaConfig::new();
+    sys.curves.enabled = true;
+    check("shard invariance with curves on", 6, |rng| {
+        let mut cfg = random_cluster_cfg(rng);
+        cfg.shards = None; // auto: per residency component
+        let auto = cluster::run(&cfg, &sys).expect("valid config");
+        cfg.shards = Some(1); // single global heap
+        let single = cluster::run(&cfg, &sys).expect("valid config");
+        prop_assert!(
+            fingerprint(&auto) == fingerprint(&single),
+            "sharding changed a curve-aware outcome"
+        );
+        Ok(())
+    });
+}
+
+/// Interference is a pure slowdown: with the batch curves flat and only
+/// the contention term armed, the same offered load completes the same
+/// requests no faster, and the active-energy integral strictly grows
+/// (busy neighbors inflate both execution time and draw).
+#[test]
+fn contention_only_slows_down_and_never_loses_work() {
+    let base = PrebaConfig::new();
+    let mut contended = base.clone();
+    contended.curves.enabled = true;
+    contended.curves.source = "flat".to_string(); // isolate the contention term
+    check("contention is a pure slowdown", 6, |rng| {
+        let cfg = random_cluster_cfg(rng);
+        let flat = cluster::run(&cfg, &base).expect("valid config");
+        let slow = cluster::run(&cfg, &contended).expect("valid config");
+        prop_assert!(
+            slow.completed_total() == flat.completed_total(),
+            "contention lost work: {} vs {}",
+            slow.completed_total(),
+            flat.completed_total()
+        );
+        prop_assert!(
+            slow.horizon >= flat.horizon,
+            "contention finished earlier: {} vs {}",
+            slow.horizon,
+            flat.horizon
+        );
+        // Batch composition may reshuffle slightly under the longer
+        // service times, so allow 1% slack — the assertion is about the
+        // SIGN of the effect, not its exact magnitude.
+        for (i, ((_, s), (_, f))) in slow.per_tenant.iter().zip(&flat.per_tenant).enumerate() {
+            prop_assert!(
+                s.p95_ms() >= f.p95_ms() * 0.99,
+                "tenant {i} p95 improved under contention: {} vs {}",
+                s.p95_ms(),
+                f.p95_ms()
+            );
+        }
+        prop_assert!(
+            slow.energy.gpu_active_j > flat.energy.gpu_active_j,
+            "contention did not inflate active energy: {} vs {}",
+            slow.energy.gpu_active_j,
+            flat.energy.gpu_active_j
+        );
+        Ok(())
+    });
+}
+
+/// The curve table itself is sane for every (model, profile): latency
+/// multipliers grow with the batch bucket from exactly 1.0, the neighbor
+/// penalty is affine and increasing, and `service_scale` is monotone in
+/// both arguments.
+#[test]
+fn curve_views_are_monotone()  {
+    let mut sys = PrebaConfig::new();
+    sys.curves.enabled = true;
+    for m in ModelId::ALL {
+        for gpcs in [1usize, 2, 3, 4, 7] {
+            let v = sys.curves.view(m, gpcs);
+            assert_eq!(v.lat[0], 1.0, "{m:?}/{gpcs}g: smallest bucket must be the 1.0 anchor");
+            for b in 1..N_BUCKETS {
+                assert!(v.lat[b] >= v.lat[b - 1], "{m:?}/{gpcs}g: lat bucket {b} shrank");
+                assert!(v.pow[b] > 0.0 && v.lat[b] > 0.0);
+            }
+            assert!(v.contention >= 0.0 && v.contention <= 1.0);
+            for k in 1..7usize {
+                assert!(v.penalty(k) >= v.penalty(k - 1));
+                assert!(v.service_scale(64, k) >= v.service_scale(64, k - 1));
+                assert!(v.service_scale(64, k) >= v.service_scale(1, k));
+            }
+        }
+        // Bigger slices never suffer MORE contention than smaller ones.
+        let cs: Vec<f64> =
+            [1usize, 2, 3, 4, 7].iter().map(|&g| sys.curves.view(m, g).contention).collect();
+        assert!(cs.windows(2).all(|w| w[1] <= w[0]), "{m:?}: contention not anti-monotone {cs:?}");
+    }
+    // Batch buckets partition the batch axis in order.
+    let mut last = 0;
+    for b in [1usize, 2, 3, 8, 9, 32, 33, 256] {
+        let bucket = batch_bucket(b);
+        assert!(bucket >= last && bucket < N_BUCKETS);
+        last = bucket;
+    }
+}
+
+/// The scaled planner helpers ARE the unscaled ones at scale 1.0 (same
+/// bits), and a real service-time scale only ever asks for more slices
+/// and predicts a worse p95.
+#[test]
+fn scaled_planner_degrades_exactly_to_unscaled_at_one() {
+    check("scaled planner vs unscaled", 32, |rng| {
+        let model = [ModelId::SwinTransformer, ModelId::CitriNet, ModelId::MobileNet]
+            [rng.below(3) as usize];
+        let spec = TenantSpec::new(model, 20.0 + rng.f64() * 60.0);
+        let gpcs = [1usize, 2, 7][rng.below(3) as usize];
+        let slices = 1 + rng.below(6) as usize;
+        let per = ServiceModel::new(model.spec(), gpcs).plateau_qps(spec.len_s);
+        let rate = rng.range_f64(0.2, 0.9) * slices as f64 * per;
+        let p1 = predicted_p95_ms_gpcs(&spec, gpcs, slices, rate);
+        let p1s = predicted_p95_ms_gpcs_scaled(&spec, gpcs, slices, rate, 1.0);
+        prop_assert!(
+            p1.to_bits() == p1s.to_bits(),
+            "scale 1.0 changed the prediction: {p1} vs {p1s}"
+        );
+        let scale = 1.0 + rng.f64() * 0.5;
+        let ps = predicted_p95_ms_gpcs_scaled(&spec, gpcs, slices, rate, scale);
+        prop_assert!(ps >= p1, "scale {scale} predicted better: {ps} vs {p1}");
+
+        let slice = Slice::new(gpcs, 5 * gpcs);
+        let util = rng.range_f64(0.5, 0.9);
+        let n1 = slices_for_rate(&spec, slice, rate, util);
+        let n1s = slices_for_rate_scaled(&spec, slice, rate, util, 1.0);
+        prop_assert!(n1 == n1s, "scale 1.0 changed the sizing: {n1} vs {n1s}");
+        let ns = slices_for_rate_scaled(&spec, slice, rate, util, scale);
+        prop_assert!(ns >= n1, "scale {scale} asked for fewer slices: {ns} vs {n1}");
+        Ok(())
+    });
+}
+
+/// `[curves]` TOML round-trip: every key applies, neutral semantics are
+/// reachable from a file, and the validator rejects nonsense with a
+/// pointed message instead of simulating garbage.
+#[test]
+fn curves_toml_round_trips_and_validates() {
+    let dir = std::env::temp_dir().join("preba_curves_toml");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("curves.toml");
+    std::fs::write(
+        &path,
+        "[curves]\n\
+         enabled = true\n\
+         source = \"flat\"\n\
+         lat_scale = 0.5\n\
+         pow_scale = 0.25\n\
+         contention_scale = 2.0\n\
+         contention_1g = 0.08\n\
+         contention_7g = 0.0\n",
+    )
+    .unwrap();
+    let cfg = PrebaConfig::from_file(path.to_str().unwrap()).unwrap();
+    assert!(cfg.curves.enabled);
+    assert_eq!(cfg.curves.source, "flat");
+    assert_eq!(cfg.curves.lat_scale, 0.5);
+    assert_eq!(cfg.curves.pow_scale, 0.25);
+    assert_eq!(cfg.curves.contention_scale, 2.0);
+    assert_eq!(cfg.curves.contention_1g, 0.08);
+    assert_eq!(cfg.curves.contention_7g, 0.0);
+    // Untouched keys keep the MIGPerf defaults.
+    let defaults = PrebaConfig::new();
+    assert_eq!(cfg.curves.contention_2g, defaults.curves.contention_2g);
+    // With source = "flat" the batch curves are gone but contention
+    // stays: 0.08 * 2.0 per neighbor on 1g.
+    let v = cfg.curves.view(ModelId::SwinTransformer, 1);
+    assert_eq!(v.lat, [1.0; N_BUCKETS]);
+    assert_eq!(v.contention, 0.16);
+
+    for (body, needle) in [
+        ("[curves]\nsource = \"vendor\"\n", "curves.source"),
+        ("[curves]\nlat_scale = -0.5\n", "curves.lat_scale"),
+        ("[curves]\ncontention_scale = -1.0\n", "curves.contention_scale"),
+        ("[curves]\ncontention_2g = 1.5\n", "curves.contention_2g"),
+    ] {
+        let doc = toml::parse(body).unwrap();
+        let mut cfg = PrebaConfig::new();
+        let err = cfg.apply(&doc).expect_err(body).to_string();
+        assert!(err.contains(needle), "error for {body:?} lacks {needle:?}: {err}");
+    }
+}
+
+fn run_interference(jobs: &str, out_dir: &std::path::Path) -> Vec<u8> {
+    let _ = std::fs::remove_dir_all(out_dir);
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .env("PREBA_FAST", "1")
+        .args(["experiment", "interference", "--jobs", jobs, "--out", out_dir.to_str().unwrap()])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba experiment interference --jobs {jobs} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out.stdout
+}
+
+#[test]
+fn experiment_interference_identical_at_jobs_1_and_4() {
+    let base = std::env::temp_dir().join("preba_interference_determinism");
+    let dir1 = base.join("j1");
+    let dir4 = base.join("j4");
+    let stdout1 = run_interference("1", &dir1);
+    let stdout4 = run_interference("4", &dir4);
+    assert_eq!(
+        String::from_utf8_lossy(&stdout1).replace(dir1.to_str().unwrap(), "<out>"),
+        String::from_utf8_lossy(&stdout4).replace(dir4.to_str().unwrap(), "<out>"),
+        "stdout differs between --jobs 1 and --jobs 4"
+    );
+    let json1 =
+        std::fs::read(dir1.join("interference.json")).expect("interference.json at jobs=1");
+    let json4 =
+        std::fs::read(dir4.join("interference.json")).expect("interference.json at jobs=4");
+    assert!(!json1.is_empty());
+    assert_eq!(json1, json4, "results JSON differs between --jobs 1 and --jobs 4");
+}
+
+#[test]
+fn cluster_cli_interference_smoke() {
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args(["cluster", "--gpus", "2", "--horizon", "2", "--strategy", "bfd", "--interference"])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba cluster --interference failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("best-fit"));
+}

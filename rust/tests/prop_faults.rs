@@ -8,6 +8,7 @@
 
 use std::process::Command;
 
+use preba::clock::to_secs;
 use preba::config::PrebaConfig;
 use preba::experiments::faults::failover_cfg;
 use preba::fault::{FaultSchedule, FaultSpec};
@@ -135,6 +136,79 @@ fn recovery_never_loses_the_failover_ab_at_any_arrival_seed() {
             "recovery served {} < baseline {} at seed {seed:#x}",
             rec.completed_total(),
             base.completed_total()
+        );
+        Ok(())
+    });
+}
+
+/// A straggler does the SAME work for longer, so a sustained slowdown
+/// must strictly inflate the fleet's active-energy integral relative to
+/// the fault-free twin at identical load and seed: the DES bills the
+/// inflated execution intervals, not the nominal service times.
+#[test]
+fn slowdown_strictly_inflates_the_active_energy_integral() {
+    let sys = PrebaConfig::new();
+    check("slowdown energy inflation", 6, |rng| {
+        let seed = rng.next_u64();
+        let horizon_s = 3.0;
+        let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+        let mk = |faults: Option<FaultSpec>| {
+            let rate = 0.5 * 4.0 * u;
+            let mut t =
+                ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), 4, rate);
+            t.sla_ms = 500.0;
+            t.requests = (rate * horizon_s).ceil() as usize;
+            let mut cfg = ClusterConfig::builder()
+                .gpus(2)
+                .strategy(PackStrategy::BestFit)
+                .tenants(vec![t])
+                .seed(seed)
+                .warmup_frac(0.0)
+                .build();
+            cfg.faults = faults;
+            cfg
+        };
+        let sched = FaultSchedule::parse("slow@0.2:g0:inf:3.0", 2, horizon_s, seed)
+            .expect("parse slowdown spec");
+        let clean = cluster::run(&mk(None), &sys).expect("valid clean config");
+        let slow = cluster::run(&mk(Some(FaultSpec::baseline(sched))), &sys)
+            .expect("valid slowdown config");
+        prop_assert!(
+            slow.energy.gpu_active_j > clean.energy.gpu_active_j,
+            "3x slowdown did not inflate active energy: {} vs {} J at seed {seed:#x}",
+            slow.energy.gpu_active_j,
+            clean.energy.gpu_active_j
+        );
+        Ok(())
+    });
+}
+
+/// Whatever crashes, harvests and retries do to the busy-time integrals,
+/// active energy can never exceed the physical ceiling of every GPC on
+/// every GPU drawing full active power for the entire horizon. The
+/// crash-harvest refund is what keeps the integral under this bound —
+/// an in-flight batch killed by a crash must not bill its unexecuted
+/// remainder — so this is the conservation property guarding that path.
+#[test]
+fn active_energy_never_exceeds_the_physical_ceiling() {
+    let sys = PrebaConfig::new();
+    check("energy physical ceiling", 24, |rng| {
+        let cfg = random_faulted_cfg(rng, &sys);
+        let out = cluster::run(&cfg, &sys).expect("valid faulted config");
+        let horizon_s = to_secs(out.horizon);
+        let gpc_s: f64 = cfg.fleet.iter().map(|c| c.gpcs as f64 * horizon_s).sum();
+        let ceiling = sys.energy.gpc_active_w * gpc_s;
+        prop_assert!(
+            out.energy.gpu_active_j <= ceiling * (1.0 + 1e-9),
+            "active energy {} J exceeds the {} J all-GPCs-always-on ceiling",
+            out.energy.gpu_active_j,
+            ceiling
+        );
+        let e = &out.energy;
+        let sum = e.gpu_active_j + e.gpu_idle_j + e.cpu_j + e.dpu_j + e.base_j;
+        prop_assert!(
+            sum == e.total_j() && sum.is_finite() && e.gpu_active_j >= 0.0 && e.gpu_idle_j >= 0.0,
+            "energy breakdown is not a finite non-negative component sum: {e:?}"
         );
         Ok(())
     });

@@ -9,11 +9,13 @@
 #   scripts/arm_perf_gates.sh path/to/BENCH_pr12.json
 #
 # It copies hotpath.events_per_sec, cluster.events_per_sec,
-# cluster.joules_per_query, cluster.availability_frac and the streamed
+# cluster.joules_per_query, cluster.availability_frac, the streamed
 # trace-day probe's cluster.trace_1m_events_per_sec /
-# cluster.trace_1m_peak_rss_mb into rust/benches/perf_baseline.json
-# (preserving the note), prints the before/after values, and leaves the
-# change for you to review and commit.
+# cluster.trace_1m_peak_rss_mb and the interference sizing A/B's
+# cluster.interference_violation_gap into
+# rust/benches/perf_baseline.json (preserving the note), prints the
+# before/after values, and leaves the change for you to review and
+# commit.
 set -euo pipefail
 
 if [ $# -ne 1 ] || [ ! -f "$1" ]; then
@@ -38,6 +40,7 @@ updates = {
     "cluster_availability_frac": bench["cluster"].get("availability_frac"),
     "cluster_1m_events_per_sec": bench["cluster"].get("trace_1m_events_per_sec"),
     "cluster_1m_peak_rss_mb": bench["cluster"].get("trace_1m_peak_rss_mb"),
+    "cluster_interference_violation_gap": bench["cluster"].get("interference_violation_gap"),
 }
 for key, value in updates.items():
     if value is None:
