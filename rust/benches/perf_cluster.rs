@@ -12,6 +12,7 @@
 
 use preba::config::PrebaConfig;
 use preba::experiments;
+use preba::mig::reconfig::planners::{plan_cost, AnnealPlanner, GreedyPlanner, Planner};
 use preba::mig::{PackStrategy, ServiceModel, Slice};
 use preba::models::ModelId;
 use preba::server::cluster::{self, ClusterConfig, ClusterTenant};
@@ -138,6 +139,34 @@ fn main() {
         flat_viol, aware_viol, interference_violation_gap
     );
 
+    // Planner-stack probe: the `optimality` experiment's 64-GPU diurnal
+    // rebalance instance, solved by the greedy fast path and the
+    // greedy-seeded anneal. Reported: the relative objective gap the
+    // anneal closes ((greedy - anneal) / greedy, >= 0 by construction;
+    // gated as a floor so the anneal keeps earning its budget) and the
+    // greedy planning p99 latency over 100 runs (gated as a CEILING —
+    // the fast path must stay controller-tick cheap at fleet scale).
+    let own = experiments::optimality::bench_instance(&sys, 64);
+    let inst = own.as_instance();
+    let greedy_cost = plan_cost(&inst, &GreedyPlanner.plan(&inst));
+    let anneal_cost =
+        plan_cost(&inst, &AnnealPlanner::budgeted(own.policy.anneal_iters).plan(&inst));
+    let planner_gap =
+        if greedy_cost > 0.0 { (greedy_cost - anneal_cost) / greedy_cost } else { 0.0 };
+    let mut lat_us: Vec<f64> = (0..100)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(GreedyPlanner.plan(&inst));
+            t0.elapsed().as_secs_f64() * 1e6
+        })
+        .collect();
+    lat_us.sort_by(|a, b| a.total_cmp(b));
+    let planner_greedy_p99_us = lat_us[98];
+    println!(
+        "planner probe: 64-GPU greedy cost {greedy_cost:.2} vs anneal {anneal_cost:.2} \
+         -> gap {planner_gap:.4}, greedy p99 {planner_greedy_p99_us:.0} us"
+    );
+
     let stats = time_fn("cluster::run 4-GPU diurnal fleet", 32, || {
         std::hint::black_box(cluster::run(&mk_cfg(), &sys).expect("valid cluster config"));
     });
@@ -173,6 +202,12 @@ fn main() {
             // better) once the committed baseline's
             // cluster_interference_violation_gap is non-null.
             ("interference_violation_gap", Json::num(interference_violation_gap)),
+            // Planner-stack probe (64-GPU diurnal rebalance instance):
+            // the objective gap the anneal closes over greedy (floor,
+            // via cluster_planner_gap) and the greedy fast path's
+            // planning p99 (CEILING, via cluster_planner_greedy_p99_us).
+            ("planner_gap", Json::num(planner_gap)),
+            ("planner_greedy_p99_us", Json::num(planner_greedy_p99_us)),
         ]);
         std::fs::write(&path, doc.to_string_pretty()).expect("write PREBA_BENCH_JSON");
         println!("[bench json written {path}]");

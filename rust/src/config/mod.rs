@@ -467,6 +467,38 @@ impl Default for WorkloadConfig {
     }
 }
 
+/// Reconfiguration-planner defaults (`[reconfig]` in TOML; the
+/// `preba cluster --planner` flag overrides `planner`). These feed the
+/// planner-selection fields of [`crate::mig::ReconfigPolicy`].
+#[derive(Debug, Clone)]
+pub struct ReconfigDefaults {
+    /// Planning algorithm: `greedy` (fast path), `anneal` (budgeted
+    /// simulated annealing seeded from greedy), or `exact`
+    /// (branch-and-bound, small fleets; larger fleets fall back to
+    /// anneal).
+    pub planner: String,
+    /// Proposal budget per planning call for the `anneal` planner.
+    pub anneal_iters: usize,
+}
+
+impl Default for ReconfigDefaults {
+    fn default() -> Self {
+        ReconfigDefaults { planner: "greedy".to_string(), anneal_iters: 2_000 }
+    }
+}
+
+impl ReconfigDefaults {
+    /// Resolve the configured planner name to a [`crate::mig::PlannerKind`].
+    pub fn planner_kind(&self) -> anyhow::Result<crate::mig::PlannerKind> {
+        crate::mig::PlannerKind::parse(&self.planner).ok_or_else(|| {
+            anyhow::anyhow!(
+                "reconfig.planner must be 'greedy', 'anneal' or 'exact', got '{}'",
+                self.planner
+            )
+        })
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default)]
 pub struct PrebaConfig {
@@ -477,6 +509,7 @@ pub struct PrebaConfig {
     pub batching: BatchingConfig,
     pub dpu: DpuConfig,
     pub cluster: ClusterDefaults,
+    pub reconfig: ReconfigDefaults,
     pub fault: FaultConfig,
     pub curves: CurvesConfig,
     pub workload: WorkloadConfig,
@@ -565,6 +598,12 @@ impl PrebaConfig {
         c.repartition_s = doc.f64_or("cluster.repartition_s", c.repartition_s);
         c.shards = doc.i64_or("cluster.shards", c.shards as i64) as usize;
 
+        let r = &mut self.reconfig;
+        if let Some(v) = doc.get("reconfig.planner").and_then(toml::Value::as_str) {
+            r.planner = v.to_string();
+        }
+        r.anneal_iters = doc.i64_or("reconfig.anneal_iters", r.anneal_iters as i64) as usize;
+
         let f = &mut self.fault;
         if let Some(v) = doc.get("fault.spec").and_then(toml::Value::as_str) {
             f.spec = v.to_string();
@@ -624,6 +663,7 @@ impl PrebaConfig {
             "GPU class presets need memory"
         );
         self.cluster.default_fleet().map_err(|e| anyhow::anyhow!("cluster.fleet: {e}"))?;
+        self.reconfig.planner_kind()?;
         let e = &self.energy;
         for (name, active, idle) in [
             ("energy.gpc", e.gpc_active_w, e.gpc_idle_w),
@@ -753,6 +793,32 @@ mod tests {
         let mut bad = PrebaConfig::new();
         bad.cluster.fleet = "h100x8".into();
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn reconfig_planner_overrides_apply_and_validate() {
+        let doc = toml::parse(
+            r#"
+            [reconfig]
+            planner = "anneal"
+            anneal_iters = 500
+            "#,
+        )
+        .unwrap();
+        let mut cfg = PrebaConfig::new();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.reconfig.planner, "anneal");
+        assert_eq!(cfg.reconfig.anneal_iters, 500);
+        assert_eq!(cfg.reconfig.planner_kind().unwrap(), crate::mig::PlannerKind::Anneal);
+        // Default stays the pre-planner-stack fast path.
+        assert_eq!(
+            PrebaConfig::new().reconfig.planner_kind().unwrap(),
+            crate::mig::PlannerKind::Greedy
+        );
+
+        let mut bad = PrebaConfig::new();
+        bad.reconfig.planner = "milp".into();
+        assert!(bad.validate().is_err(), "unknown planner must be rejected");
     }
 
     #[test]

@@ -60,6 +60,8 @@ pub fn policy(sys: &PrebaConfig) -> ReconfigPolicy {
         repartition_s: sys.cluster.repartition_s,
         migration_s: sys.cluster.migration_s,
         target_util: 0.85,
+        planner: sys.reconfig.planner_kind().unwrap_or_default(),
+        anneal_iters: sys.reconfig.anneal_iters,
         ..ReconfigPolicy::default()
     }
 }

@@ -9,6 +9,7 @@ pub mod cluster;
 pub mod energy;
 pub mod faults;
 pub mod interference;
+pub mod optimality;
 pub mod packing;
 pub mod reconfig;
 pub mod support;
@@ -34,7 +35,7 @@ use crate::config::PrebaConfig;
 use crate::util::json::Json;
 
 /// Registry of all experiments for `preba experiment <id>` / `all`.
-pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 26] = [
+pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 27] = [
     ("fig5", fig05::run),
     ("fig6", fig06::run),
     ("fig7", fig07::run),
@@ -70,6 +71,9 @@ pub const ALL: [(&str, fn(&PrebaConfig) -> Json); 26] = [
     // Interference-aware performance/energy curves: flat vs curve-aware
     // provisioning beside saturating neighbor slices (MIGPerf scenario).
     ("interference", interference::run),
+    // Reconfiguration-planner optimality gap: greedy vs anneal vs exact
+    // on identical instances (RMSP, MIG-Serving arXiv:2109.11067).
+    ("optimality", optimality::run),
 ];
 
 /// Look up an experiment by id.

@@ -38,8 +38,9 @@ fn usage() -> &'static str {
                 [--window S] [--cooldown S] [--repartition S]\n\
                 (two colocated tenants, static fair split vs online slice\n\
                 reallocation; diurnal tenants run in anti-phase)\n\
-     cluster    [--gpus N] [--fleet a100x4,a30x4] [--strategy ff|bfd|both] [--routing jsq|rr]\n\
-                [--horizon S] [--seed S] [--reconfig] [--migration S] [--repartition S]\n\
+     cluster    [--gpus N] [--fleet a100x4,a30x4] [--strategy ff|bfd|frag|both] [--routing jsq|rr]\n\
+                [--horizon S] [--seed S] [--reconfig] [--planner greedy|anneal|exact]\n\
+                [--migration S] [--repartition S]\n\
                 [--trace PATH|azure] [--rate-scale X] [--shards N] [--admission] [--energy]\n\
                 [--consolidate] [--faults SPEC] [--interference]\n\
                 (multi-GPU DES: a diurnal tenant fleet packed onto a — possibly\n\
@@ -69,6 +70,12 @@ fn usage() -> &'static str {
                 layer: per-(model, profile, batch) latency/power multipliers\n\
                 plus a busy-neighbor uncore-contention penalty — the planner\n\
                 and energy integrals see contention-deflated capacity.\n\
+                --planner picks the rebalancing algorithm (implies --reconfig):\n\
+                greedy = the fast amortized-cost heuristic, anneal = budgeted\n\
+                simulated annealing seeded from greedy (never worse), exact =\n\
+                branch-and-bound ground truth for small fleets (larger fleets\n\
+                fall back to anneal). --strategy frag packs by fragmentation-\n\
+                gradient descent (demand-aware best-fit variant).\n\
      energy     [--model M] [--requests N]\n\
                 (integrated energy & cost per design point: baseline CPU\n\
                 preprocessing vs PREBA's DPU — J/query, QPS/W, queries/$)\n\
@@ -77,7 +84,7 @@ fn usage() -> &'static str {
                 beside saturating neighbor slices — the failure mode the\n\
                 [curves] layer exists to prevent; alias for\n\
                 `experiment interference`)\n\
-     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|cluster|energy|faults|interference|all>\n\
+     experiment <fig5|fig6|fig7|fig8|fig9|fig12|fig13|fig14|fig15|fig17|fig18|fig19|fig20|fig21|fig22|table1|reconfig|packing|cluster|energy|faults|interference|optimality|all>\n\
                 [--jobs N] [--out DIR]\n\
      list\n\
      \n\
@@ -423,7 +430,7 @@ fn reconfig_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
 fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     use preba::experiments::cluster::diurnal_fleet;
     use preba::fault::{FaultSchedule, FaultSpec};
-    use preba::mig::{GpuClass, PackStrategy};
+    use preba::mig::{GpuClass, PackStrategy, PlannerKind};
     use preba::server::cluster::{self, ClusterConfig, Routing};
     use preba::workload::StreamSpec;
 
@@ -463,8 +470,9 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     let strategies: Vec<PackStrategy> = match args.opt_or("strategy", "both") {
         "ff" | "first-fit" => vec![PackStrategy::FirstFit],
         "bfd" | "best-fit" => vec![PackStrategy::BestFit],
+        "frag" | "frag-gradient" => vec![PackStrategy::FragGradient],
         "both" => vec![PackStrategy::FirstFit, PackStrategy::BestFit],
-        other => anyhow::bail!("unknown --strategy '{other}' (ff|bfd|both)"),
+        other => anyhow::bail!("unknown --strategy '{other}' (ff|bfd|frag|both)"),
     };
     let admission = args.flag("admission");
     let consolidate = args.flag("consolidate");
@@ -485,7 +493,10 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
             Some(sched)
         }
     };
-    let reconfig = if args.flag("reconfig") || admission || consolidate {
+    // --planner implies --reconfig: selecting an algorithm only makes
+    // sense when the rebalancing controller runs.
+    let planner_opt = args.opt("planner");
+    let reconfig = if args.flag("reconfig") || admission || consolidate || planner_opt.is_some() {
         let repartition_s = args.opt_f64("repartition", sys.cluster.repartition_s)?;
         let migration_s = args.opt_f64("migration", sys.cluster.migration_s)?;
         anyhow::ensure!(
@@ -493,9 +504,16 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
             "--migration ({migration_s}s) must cost at least --repartition ({repartition_s}s): \
              the planner assumes crossing a GPU is the expensive move"
         );
+        let planner = match planner_opt {
+            Some(name) => PlannerKind::parse(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown --planner '{name}' (greedy|anneal|exact)")
+            })?,
+            None => sys.reconfig.planner_kind()?,
+        };
         Some(preba::mig::ReconfigPolicy {
             repartition_s,
             migration_s,
+            planner,
             ..preba::experiments::cluster::policy(sys)
         })
     } else {
@@ -545,7 +563,10 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
         tenants.len(),
         routing.label(),
         if trace.is_some() { ", trace replay" } else { "" },
-        if reconfig.is_some() { ", online cross-GPU rebalancing" } else { "" },
+        match &reconfig {
+            Some(p) => format!(", online cross-GPU rebalancing [{}]", p.planner.label()),
+            None => String::new(),
+        },
         if admission { ", admission control" } else { "" },
         if consolidate { ", energy consolidation" } else { "" },
         match &fault_sched {

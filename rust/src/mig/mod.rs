@@ -39,7 +39,7 @@ pub mod service;
 pub use partition::{parse_fleet, GpuClass, MigConfig, Partition, Slice};
 pub use placement::PackStrategy;
 pub use reconfig::{
-    ClusterReconfigController, ConsolidationAction, Plan, ReconfigController, ReconfigPolicy,
-    Relocation, SliceMove, TenantSpec,
+    validate_plan, ClusterReconfigController, ConsolidationAction, Plan, Planner, PlannerKind,
+    ReconfigController, ReconfigPolicy, Relocation, SliceMove, TenantSpec,
 };
 pub use service::ServiceModel;

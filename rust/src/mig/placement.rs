@@ -38,6 +38,13 @@ pub enum PackStrategy {
     /// Fragmentation-aware: largest slices first, each into the feasible
     /// GPU with the fewest free GPCs left (best-fit-decreasing).
     BestFit,
+    /// Fragmentation-gradient descent (Ting et al., arXiv:2512.16099):
+    /// largest slices first, each onto the feasible GPU where placing it
+    /// grows the demand-weighted fragment measure ([`GpuBin::frag_gpcs`])
+    /// the least. Unlike best-fit it looks at what the *remaining demand
+    /// mix* can still use, so it avoids leaving free GPCs that no pending
+    /// profile fits.
+    FragGradient,
 }
 
 impl PackStrategy {
@@ -45,6 +52,7 @@ impl PackStrategy {
         match self {
             PackStrategy::FirstFit => "first-fit (arrival order)",
             PackStrategy::BestFit => "best-fit decreasing",
+            PackStrategy::FragGradient => "frag-gradient descent",
         }
     }
 }
@@ -82,6 +90,40 @@ impl GpuBin {
         self.gpcs_free -= ask.slice.gpcs;
         self.mem_free_gb -= ask.slice.mem_gb;
         self.placed.push(ask);
+    }
+
+    /// Fragment measure of this bin under a demand `mix` of
+    /// `(profile, weight)` pairs (Ting et al., arXiv:2512.16099, adapted
+    /// to discrete MIG profiles): from each profile's perspective, the
+    /// bin's free GPCs are *fragmented* when the bin cannot host even one
+    /// more instance of that profile — they exist but serve none of that
+    /// demand. The measure is the weight-averaged fragmented free GPCs;
+    /// 0 when every profile in the mix still fits (or the mix is empty).
+    pub fn frag_gpcs(&self, mix: &[(Slice, f64)]) -> f64 {
+        let total: f64 = mix.iter().map(|&(_, w)| w).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let stranded: f64 = mix
+            .iter()
+            .filter(|(s, _)| !self.fits(s))
+            .map(|&(_, w)| w * self.gpcs_free as f64)
+            .sum();
+        stranded / total
+    }
+
+    /// How much the fragment measure grows if `s` is placed here (can be
+    /// negative: filling a bin completely removes its free GPCs from
+    /// every profile's fragmented view). Callers must check
+    /// [`GpuBin::fits`] first.
+    pub fn frag_gradient(&self, s: &Slice, mix: &[(Slice, f64)]) -> f64 {
+        let after = GpuBin {
+            class: self.class,
+            gpcs_free: self.gpcs_free - s.gpcs,
+            mem_free_gb: self.mem_free_gb - s.mem_gb,
+            placed: Vec::new(),
+        };
+        after.frag_gpcs(mix) - self.frag_gpcs(mix)
     }
 }
 
@@ -174,9 +216,20 @@ pub fn pack(asks: &[SliceAsk], n_gpus: usize, strategy: PackStrategy) -> Packing
 pub fn pack_fleet(asks: &[SliceAsk], fleet: &[GpuClass], strategy: PackStrategy) -> Packing {
     let mut bins: Vec<GpuBin> = fleet.iter().map(|&c| GpuBin::new(c)).collect();
     let mut order: Vec<usize> = (0..asks.len()).collect();
-    if strategy == PackStrategy::BestFit {
+    if strategy != PackStrategy::FirstFit {
         // Largest first; stable sort keeps arrival order among equals.
         order.sort_by(|&a, &b| asks[b].slice.gpcs.cmp(&asks[a].slice.gpcs));
+    }
+    // Demand mix for the frag gradient: every legal profile in the ask
+    // list, weighted by the GPCs it asks for in total.
+    let mut mix: Vec<(Slice, f64)> = Vec::new();
+    if strategy == PackStrategy::FragGradient {
+        for a in asks.iter().filter(|a| a.slice.is_legal()) {
+            match mix.iter_mut().find(|(s, _)| *s == a.slice) {
+                Some((_, w)) => *w += a.slice.gpcs as f64,
+                None => mix.push((a.slice, a.slice.gpcs as f64)),
+            }
+        }
     }
     let mut placements = Vec::new();
     let mut rejected = Vec::new();
@@ -189,6 +242,13 @@ pub fn pack_fleet(asks: &[SliceAsk], fleet: &[GpuClass], strategy: PackStrategy)
                 .enumerate()
                 .filter(|(_, b)| b.fits(&ask.slice))
                 .min_by_key(|(j, b)| (b.gpcs_free, *j))
+                .map(|(j, _)| j),
+            PackStrategy::FragGradient => bins
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| b.fits(&ask.slice))
+                .map(|(j, b)| (j, b.frag_gradient(&ask.slice, &mix)))
+                .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
                 .map(|(j, _)| j),
         };
         match target {
@@ -253,12 +313,54 @@ mod tests {
     #[test]
     fn deterministic() {
         let asks = adversarial_demo();
-        for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
+        for strategy in
+            [PackStrategy::FirstFit, PackStrategy::BestFit, PackStrategy::FragGradient]
+        {
             let a = pack(&asks, 3, strategy);
             let b = pack(&asks, 3, strategy);
             assert_eq!(a.placements, b.placements);
             assert_eq!(a.rejected, b.rejected);
         }
+    }
+
+    #[test]
+    fn frag_measure_counts_only_unhostable_demand() {
+        let bin = GpuBin {
+            class: GpuClass::A100,
+            gpcs_free: 2,
+            mem_free_gb: 10,
+            placed: Vec::new(),
+        };
+        // 3g.20gb can no longer land here, so its share of the mix sees
+        // both free GPCs stranded; 1g.5gb still fits and sees none.
+        let mix = [(Slice::new(3, 20), 3.0), (Slice::new(1, 5), 1.0)];
+        assert!((bin.frag_gpcs(&mix) - (3.0 * 2.0) / 4.0).abs() < 1e-12);
+        // An empty (or fully satisfiable) mix has nothing to strand.
+        assert_eq!(bin.frag_gpcs(&[]), 0.0);
+        assert_eq!(bin.frag_gpcs(&[(Slice::new(1, 5), 1.0)]), 0.0);
+    }
+
+    #[test]
+    fn frag_gradient_keeps_bins_large_profile_capable() {
+        // Best-fit tightest-bin packing piles 3g+2g+1g onto one A100,
+        // leaving a 1-GPC stub no profile in the mix can use. The frag
+        // gradient sees that stranding coming and spreads the small
+        // slices, so BOTH GPUs stay able to host another 3g.20gb.
+        let asks = vec![ask(0, 3, 20), ask(1, 2, 10), ask(2, 1, 5)];
+        let big = Slice::new(3, 20);
+        let bf = pack(&asks, 2, PackStrategy::BestFit);
+        let fg = pack(&asks, 2, PackStrategy::FragGradient);
+        assert!(bf.rejected.is_empty() && fg.rejected.is_empty());
+        assert!(
+            bf.bins.iter().any(|b| !b.fits(&big)),
+            "best-fit should strand a bin below 3g here: {bf:?}"
+        );
+        assert!(
+            fg.bins.iter().all(|b| b.fits(&big)),
+            "frag gradient must keep every bin 3g-capable: {fg:?}"
+        );
+        assert_eq!(fg.bins[0].gpcs_free, 4);
+        assert_eq!(fg.bins[1].gpcs_free, 4);
     }
 
     #[test]

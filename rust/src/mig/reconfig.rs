@@ -27,6 +27,19 @@
 //! The DES drivers (`server::sim_driver` single-tenant geometry,
 //! `server::multi` multi-tenant slice reallocation) turn an emitted plan
 //! into first-class drain/restart events.
+//!
+//! Cluster-scale planning is **pluggable** ([`planners`]): the greedy
+//! fast path, a greedy-seeded simulated-annealing slow path, and a
+//! branch-and-bound exact solver all implement the [`Planner`] trait
+//! behind [`ReconfigPolicy::planner`], and every emitted plan replays
+//! through the shared [`validate_plan`] checker before it commits.
+
+pub mod planners;
+
+pub use planners::{
+    plan_cost, AnnealPlanner, ExactPlanner, GreedyPlanner, OwnedInstance, PlanInstance, Planner,
+    PlannerKind,
+};
 
 use crate::clock::{secs, to_secs, Nanos};
 use crate::mig::partition::GpuClass;
@@ -84,6 +97,17 @@ pub struct ReconfigPolicy {
     /// sustained-low-load hysteresis (plus the shared `cooldown_s`) that
     /// keeps consolidation from fighting the rate-driven planner.
     pub consolidate_windows: usize,
+    /// Planning algorithm [`ClusterReconfigController::tick`] runs each
+    /// window: the greedy fast path (default), the greedy-seeded
+    /// simulated-annealing slow path, or the branch-and-bound exact
+    /// solver for small fleets. The hysteresis/cooldown/amortized-cost
+    /// commit gates sit outside this choice, so swapping planners never
+    /// changes the no-thrash contract.
+    pub planner: PlannerKind,
+    /// Proposal budget of the [`AnnealPlanner`] slow path. A pure
+    /// iteration count — wall-clock plays no part — so annealed plans
+    /// stay deterministic at any `--jobs`; 0 degenerates to greedy.
+    pub anneal_iters: usize,
 }
 
 impl Default for ReconfigPolicy {
@@ -99,6 +123,8 @@ impl Default for ReconfigPolicy {
             consolidate: false,
             consolidate_util: 0.5,
             consolidate_windows: 3,
+            planner: PlannerKind::Greedy,
+            anneal_iters: 2_000,
         }
     }
 }
@@ -727,6 +753,124 @@ pub fn plan_cluster_moves_fleet_scaled(
     moves
 }
 
+/// The shared plan-validity checker: replay `moves` over `alloc` and
+/// prove the plan legal end to end. Every planner's output passes
+/// through here before [`ClusterReconfigController::tick`] commits it,
+/// and the property suites assert against the same rules instead of
+/// carrying their own copies. On success the post-plan allocation is
+/// returned; on failure the message names the first violated rule.
+///
+/// The rules:
+/// * arity — `fleet`, `failed` and `alloc` agree on the GPU count and
+///   every alloc row covers every tenant;
+/// * per-class capacity — each GPU's placed GPCs/memory stay within its
+///   class **before the plan, after every move, and after the plan**
+///   (moves destroy the donor instance before creating the gainer's);
+/// * class support — no profile a class cannot host (a `7g.40gb` never
+///   lands on a 4-GPC class) and no illegal profile anywhere;
+/// * atomic move legality — each move names a resident donor instance,
+///   is not a self-move, and its `migration` flag is truthful at the
+///   point it applies;
+/// * failed GPUs — no instance rests on a failed GPU and no move
+///   touches one;
+/// * no starvation — a tenant serving before the plan still serves
+///   after it.
+pub fn validate_plan(
+    slices: &[Slice],
+    fleet: &[GpuClass],
+    failed: &[bool],
+    alloc: &[Vec<usize>],
+    moves: &[SliceMove],
+) -> Result<Vec<Vec<usize>>, String> {
+    let t = slices.len();
+    let n = fleet.len();
+    if alloc.len() != n || failed.len() != n {
+        return Err(format!(
+            "arity mismatch: {n} GPUs in fleet, {} alloc rows, {} failed flags",
+            alloc.len(),
+            failed.len()
+        ));
+    }
+    for (g, row) in alloc.iter().enumerate() {
+        if row.len() != t {
+            return Err(format!("gpu{g} alloc row covers {} of {t} tenants", row.len()));
+        }
+    }
+    let check_state = |state: &[Vec<usize>], when: &str| -> Result<(), String> {
+        for g in 0..n {
+            let mut gpcs = 0;
+            let mut mem = 0;
+            for i in 0..t {
+                let c = state[g][i];
+                if c == 0 {
+                    continue;
+                }
+                if failed[g] {
+                    return Err(format!(
+                        "tenant {i} holds {c} instance(s) on failed gpu{g} {when}"
+                    ));
+                }
+                if !slices[i].is_legal() {
+                    return Err(format!(
+                        "tenant {i} uses illegal profile {}g.{}gb",
+                        slices[i].gpcs, slices[i].mem_gb
+                    ));
+                }
+                if !fleet[g].supports(&slices[i]) {
+                    return Err(format!(
+                        "tenant {i}'s {}g.{}gb cannot land on gpu{g} ({}: {} GPCs)",
+                        slices[i].gpcs, slices[i].mem_gb, fleet[g].name, fleet[g].gpcs
+                    ));
+                }
+                gpcs += c * slices[i].gpcs;
+                mem += c * slices[i].mem_gb;
+            }
+            if gpcs > fleet[g].gpcs || mem > fleet[g].mem_gb {
+                return Err(format!(
+                    "gpu{g} ({}) over capacity {when}: {gpcs}/{} GPCs, {mem}/{} GB",
+                    fleet[g].name, fleet[g].gpcs, fleet[g].mem_gb
+                ));
+            }
+        }
+        Ok(())
+    };
+    check_state(alloc, "before the plan")?;
+    let mut state = alloc.to_vec();
+    for (k, m) in moves.iter().enumerate() {
+        if m.gpu >= n || m.from >= t || m.to >= t {
+            return Err(format!("move {k} is out of range: {m:?}"));
+        }
+        if m.from == m.to {
+            return Err(format!("move {k} is a self-move: {m:?}"));
+        }
+        if failed[m.gpu] {
+            return Err(format!("move {k} touches failed gpu{}: {m:?}", m.gpu));
+        }
+        if state[m.gpu][m.from] == 0 {
+            return Err(format!("move {k} donates a non-resident instance: {m:?}"));
+        }
+        if (state[m.gpu][m.to] == 0) != m.migration {
+            return Err(format!(
+                "move {k} mislabels residency (migration flag untruthful): {m:?}"
+            ));
+        }
+        state[m.gpu][m.from] -= 1;
+        state[m.gpu][m.to] += 1;
+        // Destroy-then-create: the intermediate state after THIS move
+        // must already fit — a plan may not borrow capacity from moves
+        // that have not happened yet.
+        check_state(&state, &format!("after move {k}"))?;
+    }
+    for i in 0..t {
+        let before: usize = alloc.iter().map(|g| g[i]).sum();
+        let after: usize = state.iter().map(|g| g[i]).sum();
+        if before > 0 && after == 0 {
+            return Err(format!("tenant {i} starved: {before} instance(s) before, 0 after"));
+        }
+    }
+    Ok(state)
+}
+
 /// One cross-GPU slice relocation planned by consolidation: tenant
 /// `tenant` gives up an instance on `from_gpu` and receives one on
 /// `to_gpu` (a migration-cost move — weights ship, the server restarts).
@@ -912,6 +1056,13 @@ impl ClusterReconfigController {
         &self.policy
     }
 
+    /// Swap the planning algorithm mid-run. Only the planner changes:
+    /// telemetry, cooldown state and the commit gates carry over, so the
+    /// no-thrash contract (events ≥ `cooldown_s` apart) is unaffected.
+    pub fn set_planner(&mut self, kind: PlannerKind) {
+        self.policy.planner = kind;
+    }
+
     /// Current `alloc[gpu][tenant]` mirror.
     pub fn alloc(&self) -> &[Vec<usize>] {
         &self.alloc
@@ -955,16 +1106,26 @@ impl ClusterReconfigController {
             .zip(&self.failed)
             .map(|(&c, &down)| if down { GpuClass { gpcs: 0, mem_gb: 0, ..c } } else { c })
             .collect();
-        let moves = plan_cluster_moves_fleet_scaled(
-            &self.tenants,
-            &self.slices,
-            &rates,
-            &self.alloc,
-            &fleet,
-            &self.policy,
-            &self.service_scales,
-        );
+        let inst = PlanInstance {
+            tenants: &self.tenants,
+            slices: &self.slices,
+            rates: &rates,
+            alloc: &self.alloc,
+            fleet: &fleet,
+            policy: &self.policy,
+            scales: &self.service_scales,
+        };
+        let moves = self.policy.planner.planner(&self.policy).plan(&inst);
         if moves.is_empty() {
+            return None;
+        }
+        // Defense in depth: any planner's plan must replay cleanly. An
+        // invalid plan is a planner bug — fatal under test, refused (not
+        // committed) in release builds.
+        if let Err(e) = validate_plan(&self.slices, &self.fleet, &self.failed, &self.alloc, &moves)
+        {
+            let who = self.policy.planner.label();
+            debug_assert!(false, "planner '{who}' emitted an invalid plan: {e}");
             return None;
         }
         let t = self.tenants.len();

@@ -18,6 +18,11 @@
 //! an in-place reassignment (both tenants already serve from that GPU)
 //! pays `repartition_s` and a migration (new residency: model weights
 //! shipped to a GPU the tenant was not on) pays `migration_s` ≫ that.
+//! The plan itself comes from the pluggable solver stack selected by
+//! [`ReconfigPolicy::planner`] (greedy fast path, greedy-seeded
+//! annealing, or exact branch-and-bound — see `mig::reconfig::planners`);
+//! every committed allocation additionally replays through
+//! `mig::reconfig::validate_plan` under `debug_assertions`.
 //!
 //! The inventory may be **heterogeneous** (`ClusterConfig::fleet` mixes
 //! [`GpuClass`] entries, e.g. A100 7-GPC + A30-style 4-GPC): packing and
@@ -1757,6 +1762,25 @@ fn run_inner(
                     c.roll_only(now);
                 } else {
                     if let Some(moves) = c.tick(now) {
+                        // Whatever planner produced the plan, the
+                        // committed mirror must still replay cleanly
+                        // through the shared validity checker (fatal
+                        // under test, compiled out in release).
+                        debug_assert!(
+                            {
+                                let sl: Vec<Slice> =
+                                    cfg.tenants.iter().map(|t| t.slice).collect();
+                                crate::mig::validate_plan(
+                                    &sl,
+                                    c.fleet(),
+                                    c.gpu_failed(),
+                                    c.alloc(),
+                                    &[],
+                                )
+                                .is_ok()
+                            },
+                            "controller committed an invalid allocation"
+                        );
                         // A committed rebalance can die mid-drain: an
                         // armed ReconfigAbort fault, or a donor GPU that
                         // crashed inside the detection window (the

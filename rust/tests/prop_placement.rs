@@ -3,12 +3,23 @@
 //! best-fit-decreasing dominates first-fit on the divisible-profile
 //! family — plus heterogeneous-inventory invariants (every bin caps at
 //! its own class, 7g never lands on a 4-GPC class, per-class BFD ≥ FF).
+//!
+//! Capacity/class-support/legality checks go through the shared
+//! [`validate_plan`] checker — the same rules every reconfiguration
+//! planner's output must satisfy — by treating each placed instance as
+//! a one-instance tenant. Only packing-specific invariants (free-space
+//! accounting, ask conservation, strategy dominance) are asserted
+//! ad hoc here.
 
-use preba::mig::placement::{pack, pack_fleet, PackStrategy, SliceAsk};
-use preba::mig::{GpuClass, Slice};
+use preba::mig::placement::{pack, pack_fleet, PackStrategy, Packing, SliceAsk};
+use preba::mig::{validate_plan, GpuClass, Slice};
 use preba::prop_assert;
 use preba::util::prop::check_default;
 use preba::util::Rng;
+
+/// Every strategy, including the fragmentation-gradient variant.
+const STRATEGIES: [PackStrategy; 3] =
+    [PackStrategy::FirstFit, PackStrategy::BestFit, PackStrategy::FragGradient];
 
 /// Random ask list over the full legal profile set.
 fn random_asks(rng: &mut Rng, profiles: &[Slice]) -> Vec<SliceAsk> {
@@ -21,23 +32,41 @@ fn random_asks(rng: &mut Rng, profiles: &[Slice]) -> Vec<SliceAsk> {
         .collect()
 }
 
+/// Replay a packing through the planners' shared validity checker: each
+/// placed instance becomes its own one-instance tenant, so per-class
+/// GPC/memory capacity, class support (no 7g on a 4-GPC class) and
+/// profile legality are enforced by the exact rules reconfiguration
+/// plans must satisfy.
+fn validate_packing(p: &Packing, fleet: &[GpuClass]) -> Result<(), String> {
+    let slices: Vec<Slice> = p.placements.iter().map(|(a, _)| a.slice).collect();
+    let mut alloc = vec![vec![0usize; slices.len()]; fleet.len()];
+    for (k, (_, g)) in p.placements.iter().enumerate() {
+        alloc[*g][k] += 1;
+    }
+    let failed = vec![false; fleet.len()];
+    validate_plan(&slices, fleet, &failed, &alloc, &[]).map(|_| ())
+}
+
 #[test]
 fn packing_never_exceeds_gpu_capacity_and_conserves_asks() {
     check_default("placement capacity+conservation", |rng| {
         let asks = random_asks(rng, &Slice::PROFILES);
         let n_gpus = 1 + rng.below(4) as usize;
-        for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
+        let fleet = vec![GpuClass::A100; n_gpus];
+        for strategy in STRATEGIES {
             let p = pack(&asks, n_gpus, strategy);
-            // Per-GPU compute and memory budgets hold — no slice overlaps
-            // a GPC or a DRAM slice another instance owns.
+            // Per-GPU compute/memory budgets and profile legality hold —
+            // the shared plan-validity rules.
+            if let Err(e) = validate_packing(&p, &fleet) {
+                prop_assert!(false, "{strategy:?}: {e}");
+            }
+            // Free-capacity accounting stays consistent with placements.
             for (g, bin) in p.bins.iter().enumerate() {
                 let gpcs: usize = bin.placed.iter().map(|a| a.slice.gpcs).sum();
                 let mem: usize = bin.placed.iter().map(|a| a.slice.mem_gb).sum();
-                prop_assert!(gpcs <= 7, "GPU {g} over GPCs: {gpcs} ({strategy:?})");
-                prop_assert!(mem <= 40, "GPU {g} over memory: {mem} ({strategy:?})");
                 prop_assert!(
                     bin.gpcs_free == 7 - gpcs && bin.mem_free_gb == 40 - mem,
-                    "GPU {g} free-capacity accounting drifted"
+                    "GPU {g} free-capacity accounting drifted ({strategy:?})"
                 );
             }
             // Placed + rejected = asked (multiset, by total GPCs and count).
@@ -60,7 +89,7 @@ fn packing_is_deterministic_for_a_fixed_seed() {
     check_default("placement determinism", |rng| {
         let asks = random_asks(rng, &Slice::PROFILES);
         let n_gpus = 1 + rng.below(4) as usize;
-        for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
+        for strategy in STRATEGIES {
             let a = pack(&asks, n_gpus, strategy);
             let b = pack(&asks, n_gpus, strategy);
             prop_assert!(a.placements == b.placements, "{strategy:?} placements diverged");
@@ -109,53 +138,33 @@ fn random_fleet(rng: &mut Rng) -> Vec<GpuClass> {
 }
 
 /// Heterogeneous invariants: every bin caps at ITS class (an A30 bin
-/// never exceeds 4 GPCs / 24 GB), free-capacity accounting is per-class,
-/// the ask list is conserved, and no slice lands on a class that cannot
-/// host its profile (7g on a 4-GPC class in particular).
+/// never exceeds 4 GPCs / 24 GB) and no slice lands on a class that
+/// cannot host its profile — both via the shared checker — plus
+/// per-class free-capacity accounting and ask conservation.
 #[test]
 fn hetero_packing_respects_every_class() {
     check_default("hetero capacity+conservation", |rng| {
         let asks = random_asks(rng, &Slice::PROFILES);
         let fleet = random_fleet(rng);
-        for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
+        for strategy in STRATEGIES {
             let p = pack_fleet(&asks, &fleet, strategy);
+            if let Err(e) = validate_packing(&p, &fleet) {
+                prop_assert!(false, "{strategy:?}: {e}");
+            }
             for (g, bin) in p.bins.iter().enumerate() {
                 let class = fleet[g];
                 prop_assert!(bin.class == class, "bin {g} lost its class");
                 let gpcs: usize = bin.placed.iter().map(|a| a.slice.gpcs).sum();
                 let mem: usize = bin.placed.iter().map(|a| a.slice.mem_gb).sum();
                 prop_assert!(
-                    gpcs <= class.gpcs,
-                    "GPU {g} ({}) over GPCs: {gpcs} ({strategy:?})",
-                    class.name
-                );
-                prop_assert!(
-                    mem <= class.mem_gb,
-                    "GPU {g} ({}) over memory: {mem} ({strategy:?})",
-                    class.name
-                );
-                prop_assert!(
                     bin.gpcs_free == class.gpcs - gpcs && bin.mem_free_gb == class.mem_gb - mem,
-                    "GPU {g} free-capacity accounting drifted"
+                    "GPU {g} free-capacity accounting drifted ({strategy:?})"
                 );
-                for a in &bin.placed {
-                    prop_assert!(
-                        class.supports(&a.slice),
-                        "{} landed on {} ({strategy:?})",
-                        a.slice.name(),
-                        class.name
-                    );
-                }
             }
             prop_assert!(
                 p.placements.len() + p.rejected.len() == asks.len(),
                 "asks not conserved ({strategy:?})"
             );
-            // A profile no class supports must be rejected; one some class
-            // supports must never sit on a class that doesn't.
-            for (ask, g) in &p.placements {
-                prop_assert!(fleet[*g].supports(&ask.slice));
-            }
         }
         Ok(())
     });
@@ -170,8 +179,11 @@ fn seven_g_never_lands_on_a_4gpc_class() {
         let mut asks = random_asks(rng, &Slice::PROFILES);
         asks.push(SliceAsk { tenant: 9, slice: Slice::new(7, 40) });
         let fleet = random_fleet(rng);
-        for strategy in [PackStrategy::FirstFit, PackStrategy::BestFit] {
+        for strategy in STRATEGIES {
             let p = pack_fleet(&asks, &fleet, strategy);
+            if let Err(e) = validate_packing(&p, &fleet) {
+                prop_assert!(false, "{strategy:?}: {e}");
+            }
             for (ask, g) in &p.placements {
                 if ask.slice.gpcs == 7 {
                     prop_assert!(

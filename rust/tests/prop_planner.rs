@@ -1,0 +1,278 @@
+//! Conformance suite for the pluggable rebalance-planner stack
+//! (`mig::reconfig::planners`): on every random instance the solver
+//! chain is monotone (anneal ≤ greedy, exact ≤ anneal on [`plan_cost`]),
+//! the exact solver matches an independent brute-force search over its
+//! move universe on tiny instances, every planner is deterministic
+//! run-to-run and byte-identical at `--jobs 1` vs `4`, the greedy trait
+//! object is the direct heuristic call, the anneal halts within its
+//! proposal budget, and every emitted plan replays cleanly through the
+//! shared [`validate_plan`] checker.
+
+use preba::mig::reconfig::planners::{
+    plan_cost, plan_needs, AnnealPlanner, ExactPlanner, GreedyPlanner, OwnedInstance,
+    PlanInstance, Planner, PlannerKind,
+};
+use preba::mig::reconfig::{plan_cluster_moves_fleet_scaled, ReconfigPolicy};
+use preba::mig::{validate_plan, GpuClass, ServiceModel, Slice, SliceMove, TenantSpec};
+use preba::models::ModelId;
+use preba::prop_assert;
+use preba::util::par::run_jobs_on;
+use preba::util::prop::check_default;
+use preba::util::Rng;
+use std::collections::HashMap;
+
+/// Random planning instance: mixed A100/A30 fleet, 1g/2g tenants packed
+/// greedily, rates anywhere from idle to 3× current capacity so some
+/// draws demand rebalancing and some don't. `max_gpus`/`max_fill` bound
+/// the instance size (the brute-force test needs genuinely tiny ones).
+fn random_instance(rng: &mut Rng, max_gpus: usize, max_fill: usize) -> OwnedInstance {
+    let n_tenants = 2 + rng.below(3) as usize;
+    let n_gpus = 1 + rng.below(max_gpus as u64) as usize;
+    let profiles = [Slice::new(1, 5), Slice::new(2, 10)];
+    let slices: Vec<Slice> =
+        (0..n_tenants).map(|_| profiles[rng.below(2) as usize]).collect();
+    let fleet: Vec<GpuClass> = (0..n_gpus)
+        .map(|_| if rng.below(2) == 0 { GpuClass::A100 } else { GpuClass::A30 })
+        .collect();
+    let mut alloc = vec![vec![0usize; n_tenants]; n_gpus];
+    for (g, row) in alloc.iter_mut().enumerate() {
+        let mut gpcs = 0usize;
+        let mut mem = 0usize;
+        for _ in 0..max_fill {
+            let t = rng.below(n_tenants as u64) as usize;
+            if fleet[g].supports(&slices[t])
+                && gpcs + slices[t].gpcs <= fleet[g].gpcs
+                && mem + slices[t].mem_gb <= fleet[g].mem_gb
+            {
+                row[t] += 1;
+                gpcs += slices[t].gpcs;
+                mem += slices[t].mem_gb;
+            }
+        }
+    }
+    let tenants: Vec<TenantSpec> =
+        (0..n_tenants).map(|_| TenantSpec::new(ModelId::SwinTransformer, 25.0)).collect();
+    let rates: Vec<f64> = (0..n_tenants)
+        .map(|i| {
+            let have: usize = alloc.iter().map(|g| g[i]).sum();
+            let cap = have.max(1) as f64
+                * ServiceModel::new(tenants[i].model.spec(), slices[i].gpcs).plateau_qps(0.0);
+            rng.f64() * 3.0 * cap
+        })
+        .collect();
+    let policy = ReconfigPolicy { anneal_iters: 300, ..Default::default() };
+    OwnedInstance {
+        tenants,
+        slices,
+        rates,
+        alloc,
+        fleet,
+        policy,
+        scales: vec![1.0; n_tenants],
+    }
+}
+
+/// Every planner's plan for `own`, in [`PlannerKind::ALL`] order.
+fn all_plans(own: &OwnedInstance) -> Vec<Vec<SliceMove>> {
+    let inst = own.as_instance();
+    PlannerKind::ALL.iter().map(|k| k.planner(&own.policy).plan(&inst)).collect()
+}
+
+/// The solver chain is monotone on every random instance — anneal never
+/// above greedy, exact never above anneal on the plan objective — and
+/// every plan replays cleanly through the shared validity checker.
+#[test]
+fn solver_chain_is_monotone_and_every_plan_is_valid() {
+    check_default("anneal <= greedy, exact <= anneal", |rng| {
+        let own = random_instance(rng, 4, 5);
+        let inst = own.as_instance();
+        // A deliberately small node budget: exhaustion returns the
+        // incumbent, so the monotone chain must hold even mid-search.
+        let exact = ExactPlanner { max_gpus: 16, node_budget: 20_000 };
+        let plans = vec![
+            GreedyPlanner.plan(&inst),
+            AnnealPlanner::budgeted(own.policy.anneal_iters).plan(&inst),
+            exact.plan(&inst),
+        ];
+        let failed = vec![false; own.fleet.len()];
+        for (kind, plan) in PlannerKind::ALL.iter().zip(&plans) {
+            if let Err(e) = validate_plan(&own.slices, &own.fleet, &failed, &own.alloc, plan) {
+                prop_assert!(false, "{} plan failed validation: {e}", kind.label());
+            }
+        }
+        let costs: Vec<f64> = plans.iter().map(|p| plan_cost(&inst, p)).collect();
+        let (greedy, anneal, exact) = (costs[0], costs[1], costs[2]);
+        prop_assert!(anneal <= greedy + 1e-9, "anneal {anneal} worse than greedy {greedy}");
+        prop_assert!(exact <= anneal + 1e-9, "exact {exact} worse than anneal {anneal}");
+        Ok(())
+    });
+}
+
+/// Independent brute force over the exact solver's move universe
+/// (donors above their sized need, gainers below): exhaustive
+/// depth-first search with per-state move-cost dominance and no bounds,
+/// budgets or incumbents. Returns the best reachable [`plan_cost`]
+/// (including the empty plan).
+fn brute_force_best(inst: &PlanInstance<'_>) -> f64 {
+    let t = inst.tenants.len();
+    let need = plan_needs(inst);
+    let mut best = plan_cost(inst, &[]);
+    let mut visited: HashMap<Vec<Vec<usize>>, f64> = HashMap::new();
+    visited.insert(inst.alloc.to_vec(), 0.0);
+    let mut stack: Vec<(Vec<Vec<usize>>, Vec<SliceMove>, f64)> =
+        vec![(inst.alloc.to_vec(), Vec::new(), 0.0)];
+    while let Some((state, moves, move_cost)) = stack.pop() {
+        let have: Vec<usize> = (0..t).map(|i| state.iter().map(|g| g[i]).sum()).collect();
+        for (g, row) in state.iter().enumerate() {
+            let gpc_free = inst.fleet[g]
+                .gpcs
+                .saturating_sub((0..t).map(|i| row[i] * inst.slices[i].gpcs).sum());
+            let mem_free = inst.fleet[g]
+                .mem_gb
+                .saturating_sub((0..t).map(|i| row[i] * inst.slices[i].mem_gb).sum());
+            for d in 0..t {
+                if have[d] <= need[d] || row[d] == 0 {
+                    continue;
+                }
+                for i in 0..t {
+                    if i == d || have[i] >= need[i] {
+                        continue;
+                    }
+                    let (sd, si) = (inst.slices[d], inst.slices[i]);
+                    if !(inst.fleet[g].supports(&si)
+                        && gpc_free + sd.gpcs >= si.gpcs
+                        && mem_free + sd.mem_gb >= si.mem_gb)
+                    {
+                        continue;
+                    }
+                    let migration = row[i] == 0;
+                    let outage = if migration {
+                        inst.policy.migration_s
+                    } else {
+                        inst.policy.repartition_s
+                    };
+                    let displaced = inst.rates[d] / have[d].max(1) as f64
+                        + inst.rates[i] / (have[i] + 1) as f64;
+                    let mc = move_cost + displaced * outage * outage;
+                    let mut next = state.clone();
+                    next[g][d] -= 1;
+                    next[g][i] += 1;
+                    if visited.get(&next).is_some_and(|&c| c <= mc) {
+                        continue;
+                    }
+                    visited.insert(next.clone(), mc);
+                    let mut ms = moves.clone();
+                    ms.push(SliceMove { gpu: g, from: d, to: i, migration });
+                    let total = plan_cost(inst, &ms);
+                    if total < best {
+                        best = total;
+                    }
+                    stack.push((next, ms, mc));
+                }
+            }
+        }
+    }
+    best
+}
+
+/// On tiny instances (≤ 3 GPUs, lightly filled) the exact solver's cost
+/// equals the better of the brute-force optimum over its move universe
+/// and the anneal incumbent (the anneal searches a wider swap space, so
+/// it may legitimately beat the universe's optimum — the exact plan is
+/// then that incumbent).
+#[test]
+fn exact_matches_brute_force_on_tiny_instances() {
+    check_default("exact == min(brute force, anneal)", |rng| {
+        let own = random_instance(rng, 3, 3);
+        let inst = own.as_instance();
+        let exact = ExactPlanner { max_gpus: 16, node_budget: 1_000_000 };
+        let exact_cost = plan_cost(&inst, &exact.plan(&inst));
+        let anneal_cost =
+            plan_cost(&inst, &AnnealPlanner::budgeted(own.policy.anneal_iters).plan(&inst));
+        let brute = brute_force_best(&inst);
+        let want = brute.min(anneal_cost);
+        let tol = 1e-9 * want.abs().max(1.0);
+        prop_assert!(
+            (exact_cost - want).abs() <= tol,
+            "exact {exact_cost} != min(brute {brute}, anneal {anneal_cost})"
+        );
+        Ok(())
+    });
+}
+
+/// Every planner is a pure function of its instance: two runs agree
+/// move-for-move, on every random instance.
+#[test]
+fn planners_are_deterministic_run_to_run() {
+    check_default("planner determinism", |rng| {
+        let own = random_instance(rng, 3, 4);
+        let (a, b) = (all_plans(&own), all_plans(&own));
+        for (k, kind) in PlannerKind::ALL.iter().enumerate() {
+            prop_assert!(
+                a[k] == b[k],
+                "{} diverged across runs: {:?} vs {:?}",
+                kind.label(),
+                a[k],
+                b[k]
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Plans are byte-identical whatever the worker count: a serial sweep
+/// (`--jobs 1`) and a 4-worker sweep over the same instances produce
+/// identical move lists for every planner. The anneal's budget is a
+/// proposal count, not wall-clock, so parallelism cannot leak in.
+#[test]
+fn planners_are_byte_identical_across_jobs() {
+    let mut rng = Rng::new(0x01A5_7ACC);
+    let instances: Vec<OwnedInstance> =
+        (0..6).map(|_| random_instance(&mut rng, 4, 5)).collect();
+    let sweep = |jobs: usize| -> Vec<Vec<Vec<SliceMove>>> {
+        run_jobs_on(jobs, instances.len(), |i| all_plans(&instances[i]))
+    };
+    assert_eq!(sweep(1), sweep(4), "plans changed with the worker count");
+}
+
+/// The trait seam adds nothing: `GreedyPlanner` through `Box<dyn
+/// Planner>` emits exactly what calling the heuristic directly does.
+#[test]
+fn greedy_through_the_trait_is_the_direct_call() {
+    check_default("greedy trait == direct call", |rng| {
+        let own = random_instance(rng, 5, 6);
+        let via_trait = PlannerKind::Greedy.planner(&own.policy).plan(&own.as_instance());
+        let direct = plan_cluster_moves_fleet_scaled(
+            &own.tenants,
+            &own.slices,
+            &own.rates,
+            &own.alloc,
+            &own.fleet,
+            &own.policy,
+            &own.scales,
+        );
+        prop_assert!(via_trait == direct, "trait {via_trait:?} vs direct {direct:?}");
+        Ok(())
+    });
+}
+
+/// The anneal halts within its proposal budget on every instance, and a
+/// zero budget degenerates to the greedy plan exactly.
+#[test]
+fn anneal_respects_its_iteration_budget() {
+    check_default("anneal budget", |rng| {
+        let own = random_instance(rng, 5, 6);
+        let inst = own.as_instance();
+        let budget = 1 + rng.below(400) as usize;
+        let (moves, used) = AnnealPlanner::budgeted(budget).plan_with_stats(&inst);
+        prop_assert!(used <= budget, "spent {used} of {budget} proposals");
+        prop_assert!(
+            plan_cost(&inst, &moves) <= plan_cost(&inst, &GreedyPlanner.plan(&inst)) + 1e-9,
+            "budgeted anneal fell below its greedy seed"
+        );
+        let (zero, used0) = AnnealPlanner::budgeted(0).plan_with_stats(&inst);
+        prop_assert!(used0 == 0, "zero budget spent {used0} proposals");
+        prop_assert!(zero == GreedyPlanner.plan(&inst), "zero budget != greedy");
+        Ok(())
+    });
+}

@@ -1,10 +1,17 @@
 //! Property tests for the online reconfiguration controller: whatever the
 //! traffic does, the controller must never thrash (no two committed
 //! reconfigurations within the cooldown window), must stay put under
-//! steady symmetric load, and must always emit well-formed plans.
+//! steady symmetric load, and must always emit well-formed plans. The
+//! cluster controller's no-thrash contract is planner-independent — the
+//! hysteresis/cooldown/cost gates sit outside the [`Planner`] seam — so
+//! it is asserted for every [`PlannerKind`], including across mid-run
+//! planner swaps.
 
 use preba::clock::{secs, to_secs, Nanos};
-use preba::mig::{MigConfig, Plan, ReconfigController, ReconfigPolicy, TenantSpec};
+use preba::mig::{
+    validate_plan, ClusterReconfigController, MigConfig, Plan, PlannerKind,
+    ReconfigController, ReconfigPolicy, Slice, TenantSpec,
+};
 use preba::models::ModelId;
 use preba::util::Rng;
 
@@ -96,6 +103,132 @@ fn plans_are_always_well_formed() {
                 "seed {seed}: plan must hand out every slice"
             );
             assert!(ev.predicted_gain_ms > 0.0, "seed {seed}");
+        }
+    }
+}
+
+/// Random cluster start state: 2-3 tenants on 1g/2g profiles over 2-3
+/// A100s, filled greedily.
+fn cluster_state(rng: &mut Rng) -> (Vec<TenantSpec>, Vec<Slice>, Vec<Vec<usize>>) {
+    let n_tenants = 2 + rng.below(2) as usize;
+    let n_gpus = 2 + rng.below(2) as usize;
+    let profiles = [Slice::new(1, 5), Slice::new(2, 10)];
+    let slices: Vec<Slice> =
+        (0..n_tenants).map(|_| profiles[rng.below(2) as usize]).collect();
+    let mut alloc = vec![vec![0usize; n_tenants]; n_gpus];
+    for row in alloc.iter_mut() {
+        let mut gpcs = 0usize;
+        let mut mem = 0usize;
+        for _ in 0..6 {
+            let t = rng.below(n_tenants as u64) as usize;
+            if gpcs + slices[t].gpcs <= 7 && mem + slices[t].mem_gb <= 40 {
+                row[t] += 1;
+                gpcs += slices[t].gpcs;
+                mem += slices[t].mem_gb;
+            }
+        }
+    }
+    (tenants(n_tenants), slices, alloc)
+}
+
+/// Drive a cluster controller with per-window arrival counts and return
+/// the committed events' timestamps.
+fn drive_cluster(ctrl: &mut ClusterReconfigController, tape: &[Vec<f64>]) -> Vec<Nanos> {
+    let window = ctrl.window();
+    let mut out = Vec::new();
+    let mut now: Nanos = 0;
+    for per_tenant in tape {
+        now += window;
+        for (t, &r) in per_tenant.iter().enumerate() {
+            let arrivals = (r * to_secs(window)) as usize;
+            for _ in 0..arrivals {
+                ctrl.observe_arrival(t);
+            }
+        }
+        if ctrl.tick(now).is_some() {
+            out.push(now);
+        }
+    }
+    out
+}
+
+/// The no-thrash contract survives any choice of planning algorithm:
+/// whatever the traffic does, committed rebalances stay at least one
+/// cooldown apart under greedy, anneal AND exact planning, and the
+/// final allocation mirror replays through the shared validity checker.
+#[test]
+fn cluster_no_thrash_holds_for_every_planner() {
+    for kind in PlannerKind::ALL {
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(0xC1D0 ^ seed);
+            let (t, slices, alloc) = cluster_state(&mut rng);
+            let policy =
+                ReconfigPolicy { planner: kind, anneal_iters: 300, ..Default::default() };
+            let cooldown = secs(policy.cooldown_s);
+            let n = t.len();
+            let mut ctrl = ClusterReconfigController::new(t, slices.clone(), alloc, policy);
+            let tape: Vec<Vec<f64>> = (0..60)
+                .map(|_| (0..n).map(|_| rng.f64() * 2200.0).collect())
+                .collect();
+            let events = drive_cluster(&mut ctrl, &tape);
+            for pair in events.windows(2) {
+                assert!(
+                    pair[1] - pair[0] >= cooldown,
+                    "{}: seed {seed}: reconfigs {} ns apart (cooldown {cooldown})",
+                    kind.label(),
+                    pair[1] - pair[0]
+                );
+            }
+            assert_eq!(ctrl.events().len(), events.len());
+            let failed = vec![false; ctrl.fleet().len()];
+            if let Err(e) = validate_plan(&slices, ctrl.fleet(), &failed, ctrl.alloc(), &[]) {
+                panic!("{}: seed {seed}: end state invalid: {e}", kind.label());
+            }
+        }
+    }
+}
+
+/// Swapping the planning algorithm mid-run never violates the cooldown:
+/// `set_planner` changes only the solver, so telemetry and cooldown
+/// state carry straight across the swap, and the allocation mirror
+/// stays valid throughout.
+#[test]
+fn mid_run_planner_swaps_never_violate_cooldown() {
+    let rotation = [PlannerKind::Greedy, PlannerKind::Anneal, PlannerKind::Exact];
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0x5A4B ^ seed);
+        let (t, slices, alloc) = cluster_state(&mut rng);
+        let policy = ReconfigPolicy { anneal_iters: 300, ..Default::default() };
+        let cooldown = secs(policy.cooldown_s);
+        let n = t.len();
+        let mut ctrl = ClusterReconfigController::new(t, slices.clone(), alloc, policy);
+        let window = ctrl.window();
+        let failed = vec![false; ctrl.fleet().len()];
+        let mut now: Nanos = 0;
+        let mut events = Vec::new();
+        for w in 0..90 {
+            // Rotate through all three solvers, swapping mid-flight.
+            ctrl.set_planner(rotation[w / 30]);
+            now += window;
+            for ti in 0..n {
+                let arrivals = (rng.f64() * 2200.0 * to_secs(window)) as usize;
+                for _ in 0..arrivals {
+                    ctrl.observe_arrival(ti);
+                }
+            }
+            if ctrl.tick(now).is_some() {
+                events.push(now);
+                // Every committed state is valid, not just the last one.
+                validate_plan(&slices, ctrl.fleet(), &failed, ctrl.alloc(), &[])
+                    .unwrap_or_else(|e| panic!("seed {seed}: invalid after swap: {e}"));
+            }
+        }
+        for pair in events.windows(2) {
+            assert!(
+                pair[1] - pair[0] >= cooldown,
+                "seed {seed}: planner swap broke the cooldown ({} ns apart)",
+                pair[1] - pair[0]
+            );
         }
     }
 }

@@ -11,8 +11,9 @@
 # It copies hotpath.events_per_sec, cluster.events_per_sec,
 # cluster.joules_per_query, cluster.availability_frac, the streamed
 # trace-day probe's cluster.trace_1m_events_per_sec /
-# cluster.trace_1m_peak_rss_mb and the interference sizing A/B's
-# cluster.interference_violation_gap into
+# cluster.trace_1m_peak_rss_mb, the interference sizing A/B's
+# cluster.interference_violation_gap and the planner-stack probe's
+# cluster.planner_gap / cluster.planner_greedy_p99_us into
 # rust/benches/perf_baseline.json (preserving the note), prints the
 # before/after values, and leaves the change for you to review and
 # commit.
@@ -41,6 +42,8 @@ updates = {
     "cluster_1m_events_per_sec": bench["cluster"].get("trace_1m_events_per_sec"),
     "cluster_1m_peak_rss_mb": bench["cluster"].get("trace_1m_peak_rss_mb"),
     "cluster_interference_violation_gap": bench["cluster"].get("interference_violation_gap"),
+    "cluster_planner_gap": bench["cluster"].get("planner_gap"),
+    "cluster_planner_greedy_p99_us": bench["cluster"].get("planner_greedy_p99_us"),
 }
 for key, value in updates.items():
     if value is None:
