@@ -174,6 +174,32 @@ fn main() {
     let events_per_sec = events_per_run as f64 / stats.mean_ns * 1e9;
     println!("  -> {:.2} M cluster-DES events/s (mean)", events_per_sec / 1e6);
 
+    // Obs-overhead probe: the SAME diurnal configuration re-run with the
+    // observability layer capturing (1 s windows, 1-in-8 spans; outcomes
+    // are byte-identical by the neutrality contract, so events_per_run
+    // still applies). The fractional slowdown relative to the disabled
+    // runs above lands in the bench JSON and is gated as a CEILING once
+    // the committed baseline's cluster_obs_overhead_frac is non-null —
+    // "always compiled, off by default" must stay cheap even when ON.
+    // Runs after the RSS probe, so VmHWM is untouched.
+    let mk_obs_cfg = || {
+        let mut cfg = mk_cfg();
+        cfg.obs = preba::obs::ObsSpec::on(1.0, 8);
+        cfg
+    };
+    let obs_stats = time_fn("cluster::run 4-GPU diurnal fleet + obs", 32, || {
+        std::hint::black_box(
+            cluster::run(&mk_obs_cfg(), &sys).expect("valid obs cluster config"),
+        );
+    });
+    obs_stats.print();
+    let obs_overhead_frac = (obs_stats.mean_ns - stats.mean_ns) / stats.mean_ns;
+    println!(
+        "  -> {:.2} M events/s with obs capture ({:+.1}% vs disabled)",
+        events_per_run as f64 / obs_stats.mean_ns * 1e9 / 1e6,
+        obs_overhead_frac * 100.0
+    );
+
     // Machine-readable output for the CI perf artifact
     // (PREBA_BENCH_JSON=<path>); gated once
     // benches/perf_baseline.json's cluster_events_per_sec is non-null.
@@ -208,6 +234,10 @@ fn main() {
             // planning p99 (CEILING, via cluster_planner_greedy_p99_us).
             ("planner_gap", Json::num(planner_gap)),
             ("planner_greedy_p99_us", Json::num(planner_greedy_p99_us)),
+            // Fractional cluster-DES slowdown with obs capture enabled —
+            // gated as a CEILING (lower is better) once the committed
+            // baseline's cluster_obs_overhead_frac is non-null.
+            ("obs_overhead_frac", Json::num(obs_overhead_frac)),
         ]);
         std::fs::write(&path, doc.to_string_pretty()).expect("write PREBA_BENCH_JSON");
         println!("[bench json written {path}]");

@@ -450,6 +450,40 @@ impl CurvesConfig {
     }
 }
 
+/// Observability configuration (`[obs]` in TOML; `--obs DIR`,
+/// `--obs-window`, `--span-sample` override per run). Off by default —
+/// disabled runs are byte-identical to an unobserved build (the
+/// [`crate::obs`] neutrality contract).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Master switch (also flipped on by `--obs DIR`).
+    pub enabled: bool,
+    /// Artifact directory exported runs write into.
+    pub out_dir: String,
+    /// Time-series window width, seconds.
+    pub window_s: f64,
+    /// Span sampling period: request `idx` is sampled iff
+    /// `idx % span_sample == 0`.
+    pub span_sample: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { enabled: false, out_dir: "obs".to_string(), window_s: 1.0, span_sample: 8 }
+    }
+}
+
+impl ObsConfig {
+    /// Resolve to the driver-side recording spec.
+    pub fn spec(&self) -> crate::obs::ObsSpec {
+        if self.enabled {
+            crate::obs::ObsSpec::on(self.window_s, self.span_sample as u64)
+        } else {
+            crate::obs::ObsSpec::default()
+        }
+    }
+}
+
 /// Workload-generation configuration (paper §5 "Input query modeling").
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
@@ -512,6 +546,7 @@ pub struct PrebaConfig {
     pub reconfig: ReconfigDefaults,
     pub fault: FaultConfig,
     pub curves: CurvesConfig,
+    pub obs: ObsConfig,
     pub workload: WorkloadConfig,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
@@ -630,6 +665,14 @@ impl PrebaConfig {
         cv.contention_4g = doc.f64_or("curves.contention_4g", cv.contention_4g);
         cv.contention_7g = doc.f64_or("curves.contention_7g", cv.contention_7g);
 
+        let o = &mut self.obs;
+        o.enabled = doc.bool_or("obs.enabled", o.enabled);
+        if let Some(v) = doc.get("obs.out_dir").and_then(toml::Value::as_str) {
+            o.out_dir = v.to_string();
+        }
+        o.window_s = doc.f64_or("obs.window_s", o.window_s);
+        o.span_sample = doc.i64_or("obs.span_sample", o.span_sample as i64) as usize;
+
         let w = &mut self.workload;
         w.seed = doc.i64_or("workload.seed", w.seed as i64) as u64;
         w.requests = doc.i64_or("workload.requests", w.requests as i64) as usize;
@@ -715,6 +758,13 @@ impl PrebaConfig {
                 "{name} must be in [0, 1] (fractional inflation per neighbor)"
             );
         }
+        let o = &self.obs;
+        anyhow::ensure!(
+            o.window_s.is_finite() && o.window_s > 0.0,
+            "obs.window_s must be finite and positive"
+        );
+        anyhow::ensure!(o.span_sample >= 1, "obs.span_sample must be >= 1");
+        anyhow::ensure!(!o.out_dir.is_empty(), "obs.out_dir must be non-empty");
         // Every resolved multiplier must stay positive, whatever the scales.
         for m in crate::models::ModelId::ALL {
             for gpcs in [1usize, 2, 3, 4, 7] {
@@ -764,6 +814,39 @@ mod tests {
         assert_eq!(cfg.workload.requests, 500);
         // untouched default survives
         assert_eq!(cfg.power.gpu_tdp_w, 400.0);
+    }
+
+    #[test]
+    fn obs_section_applies_and_validates() {
+        let cfg = PrebaConfig::new();
+        assert!(!cfg.obs.enabled, "obs is off by default");
+        assert!(!cfg.obs.spec().enabled, "default spec is the neutral one");
+
+        let doc = toml::parse(
+            r#"
+            [obs]
+            enabled = true
+            out_dir = "obs_out"
+            window_s = 0.25
+            span_sample = 4
+            "#,
+        )
+        .unwrap();
+        let mut cfg = PrebaConfig::new();
+        cfg.apply(&doc).unwrap();
+        assert!(cfg.obs.enabled);
+        assert_eq!(cfg.obs.out_dir, "obs_out");
+        let spec = cfg.obs.spec();
+        assert!(spec.enabled);
+        assert_eq!(spec.window_ns, crate::clock::secs(0.25));
+        assert_eq!(spec.span_sample, 4);
+
+        let mut bad = PrebaConfig::new();
+        bad.obs.window_s = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = PrebaConfig::new();
+        bad.obs.span_sample = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

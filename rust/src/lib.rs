@@ -31,7 +31,7 @@
 //! | models | [`models`], [`mig`], [`profiler`] | workload specs, MIG geometry + service model + packing/reconfig planners |
 //! | serving | [`batching`], [`preprocess`], [`dpu`], [`workload`] | dynamic batching, CPU-pool/DPU preprocessing, arrival synthesis + trace replay |
 //! | drivers | [`server`], [`fault`] | DES drivers (single GPU, multi-tenant, multi-GPU cluster) + the real-PJRT driver, fault injection/recovery for the fleet |
-//! | surface | [`experiments`], [`metrics`], [`energy`], [`config`], [`cli`], [`rt`], [`runtime`], [`prelude`] | figure regeneration, power/energy/TCO accounting, TOML config, CLI plumbing, PJRT runtime, one-line imports |
+//! | surface | [`experiments`], [`metrics`], [`obs`], [`energy`], [`config`], [`cli`], [`rt`], [`runtime`], [`prelude`] | figure regeneration, power/energy/TCO accounting, run observability (windowed series, sampled spans, Perfetto export), TOML config, CLI plumbing, PJRT runtime, one-line imports |
 //!
 //! `ARCHITECTURE.md` walks the same map in prose — including the
 //! drain → outage → restart reconfiguration lifecycle and the
@@ -64,6 +64,7 @@ pub mod fault;
 pub mod metrics;
 pub mod mig;
 pub mod models;
+pub mod obs;
 pub mod prelude;
 pub mod preprocess;
 pub mod profiler;

@@ -23,7 +23,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: preba <serve|simulate|profile|plan|reconfig|cluster|energy|interference|experiment|list> [options]\n\
+    "usage: preba <serve|simulate|profile|plan|reconfig|cluster|energy|interference|report|experiment|list> [options]\n\
      \n\
      serve      --model M [--preproc host|dpu] [--rate QPS] [--requests N] [--artifacts DIR]\n\
      simulate   --model M [--mig 1g|2g|7g] [--preproc ideal|cpu|dpu] [--policy static|dynamic]\n\
@@ -76,6 +76,10 @@ fn usage() -> &'static str {
                 branch-and-bound ground truth for small fleets (larger fleets\n\
                 fall back to anneal). --strategy frag packs by fragmentation-\n\
                 gradient descent (demand-aware best-fit variant).\n\
+     report     DIR\n\
+                (digest of an exported --obs directory: the run fingerprint,\n\
+                reconciled totals, sampled-span phase breakdown, the worst\n\
+                windows by p95, and the fleet event log)\n\
      energy     [--model M] [--requests N]\n\
                 (integrated energy & cost per design point: baseline CPU\n\
                 preprocessing vs PREBA's DPU — J/query, QPS/W, queries/$)\n\
@@ -92,7 +96,14 @@ fn usage() -> &'static str {
              --jobs N (worker threads for experiment sweeps; default: all\n\
              cores; also via PREBA_JOBS). Results are bitwise identical at\n\
              any job count — every simulation is seed-deterministic and the\n\
-             sweep engine merges results in job order."
+             sweep engine merges results in job order.\n\
+             simulate/cluster: --obs DIR exports observability artifacts\n\
+             (windowed JSONL series, sampled request spans, a Chrome\n\
+             trace-event timeline for ui.perfetto.dev) without perturbing\n\
+             the run — disabled runs are byte-identical. --obs-window S\n\
+             sets the series bucket width, --span-sample N samples every\n\
+             Nth request's span (deterministic, by index). `[obs]` in the\n\
+             TOML sets the same knobs."
 }
 
 fn run() -> anyhow::Result<()> {
@@ -134,6 +145,7 @@ fn run() -> anyhow::Result<()> {
         "reconfig" => reconfig_cmd(&args, &sys),
         "cluster" => cluster_cmd(&args, &sys),
         "energy" => energy_cmd(&args, &sys),
+        "report" => report_cmd(&args),
         "interference" => {
             preba::experiments::interference::run(&sys);
             Ok(())
@@ -143,6 +155,49 @@ fn run() -> anyhow::Result<()> {
             anyhow::bail!("unknown command '{other}'\n{}", usage());
         }
     }
+}
+
+/// Resolve the `[obs]` TOML section plus the `--obs DIR`, `--obs-window`
+/// and `--span-sample` overrides into a driver recording spec and (when
+/// enabled) the artifact directory to export into.
+fn obs_setup(
+    args: &Args,
+    sys: &PrebaConfig,
+) -> anyhow::Result<(preba::obs::ObsSpec, Option<std::path::PathBuf>)> {
+    let mut cfg = sys.obs.clone();
+    if let Some(dir) = args.opt("obs") {
+        cfg.enabled = true;
+        cfg.out_dir = dir.to_string();
+    }
+    cfg.window_s = args.opt_f64("obs-window", cfg.window_s)?;
+    anyhow::ensure!(cfg.window_s > 0.0, "--obs-window must be positive");
+    let sample = args.opt_u64("span-sample", cfg.span_sample as u64)?;
+    anyhow::ensure!(sample >= 1, "--span-sample must be >= 1");
+    cfg.span_sample = sample as usize;
+    let dir = cfg.enabled.then(|| std::path::PathBuf::from(&cfg.out_dir));
+    Ok((cfg.spec(), dir))
+}
+
+/// Per-GPU exporter description from the energy model's class parameters.
+fn gpu_desc(em: &preba::energy::EnergyModel, class: &preba::mig::GpuClass) -> preba::obs::GpuDesc {
+    let p = em.gpu_params(class);
+    preba::obs::GpuDesc {
+        name: class.name.to_string(),
+        gpcs: class.gpcs,
+        gpc_active_w: p.gpc_active_w,
+        gpc_idle_w: p.gpc_idle_w,
+    }
+}
+
+/// `preba report DIR`: digest of an exported obs directory.
+fn report_cmd(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.opt("dir"))
+        .ok_or_else(|| anyhow::anyhow!("usage: preba report DIR (an exported --obs directory)"))?;
+    preba::obs::report::report(std::path::Path::new(dir))
 }
 
 /// `preba plan --model M --sla MS [--len S]`: partition recommendation.
@@ -270,6 +325,26 @@ fn simulate(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     if args.flag("reconfig") {
         cfg.reconfig = Some(preba::mig::ReconfigPolicy::default());
     }
+    let (obs_spec, obs_dir) = obs_setup(args, sys)?;
+    cfg.obs = obs_spec;
+    let mut fp = preba::obs::Fingerprint::new("simulate");
+    fp.push("model", model.name());
+    fp.push("mig", mig.name());
+    fp.push("preproc", format!("{preproc:?}"));
+    fp.push("policy", format!("{:?}", cfg.policy));
+    fp.push("servers", cfg.active_servers);
+    fp.push("requests", cfg.requests);
+    fp.push("seed", cfg.seed);
+    fp.push("rate_qps", format!("{:.3}", cfg.rate_qps));
+    if let Some(kind) = args.opt("profile") {
+        fp.push("profile", kind);
+    }
+    fp.push("reconfig", cfg.reconfig.is_some());
+    if cfg.obs.enabled {
+        fp.push("obs_window_s", format!("{:.3}", preba::clock::to_secs(cfg.obs.window_ns)));
+        fp.push("span_sample", cfg.obs.span_sample);
+    }
+    println!("{}", fp.line());
     println!(
         "simulating {} on {} ({:?}, {:?}, {} servers, {:.1} QPS offered{})...",
         model.display(),
@@ -306,6 +381,35 @@ fn simulate(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
                 ev.predicted_gain_ms
             );
         }
+    }
+    if let Some(dir) = &obs_dir {
+        let log = out.obs.as_ref().expect("obs enabled implies a captured log");
+        let em = preba::energy::EnergyModel::new(&sys.energy);
+        let marks = out
+            .reconfig_events
+            .iter()
+            .map(|ev| preba::obs::EventMark {
+                at: ev.at,
+                gpu: Some(0),
+                kind: "reconfig".into(),
+                detail: format!("{} (predicted gain {:.1} ms)", ev.plan, ev.predicted_gain_ms),
+            })
+            .collect();
+        let input = preba::obs::ExportInput {
+            log,
+            fp: &fp,
+            horizon: out.horizon,
+            gpus: vec![gpu_desc(&em, &preba::mig::GpuClass::A100)],
+            tenants: vec![model.display().to_string()],
+            marks,
+        };
+        let files = preba::obs::export::export(dir, &input)?;
+        println!(
+            "obs: {} artifacts -> {} (digest: preba report {})",
+            files.len(),
+            dir.display(),
+            dir.display()
+        );
     }
     Ok(())
 }
@@ -557,6 +661,29 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
     }
     let total_reqs: usize = tenants.iter().map(|t| t.requests).sum();
     let fleet_desc = fleet.iter().map(|c| c.name).collect::<Vec<_>>().join(",");
+    let (obs_spec, obs_dir) = obs_setup(args, sys)?;
+    let mut fp = preba::obs::Fingerprint::new("cluster");
+    fp.push("seed", seed);
+    fp.push("fleet", &fleet_desc);
+    fp.push("horizon_s", format!("{horizon_s:.3}"));
+    fp.push("routing", routing.label());
+    fp.push("shards", if shards == 0 { "auto".to_string() } else { shards.to_string() });
+    fp.push("planner", reconfig.as_ref().map_or("off", |p| p.planner.label()));
+    fp.push("admission", admission);
+    fp.push("consolidate", consolidate);
+    fp.push("interference", args.flag("interference"));
+    fp.push("rate_scale", format!("{rate_scale:.3}"));
+    if let Some(spec) = &faults_spec {
+        fp.push("faults", spec);
+    }
+    if let Some(tr) = args.opt("trace") {
+        fp.push("trace", tr);
+    }
+    if obs_spec.enabled {
+        fp.push("obs_window_s", format!("{:.3}", preba::clock::to_secs(obs_spec.window_ns)));
+        fp.push("span_sample", obs_spec.span_sample);
+    }
+    println!("{}", fp.line());
     println!(
         "cluster of {n_gpus} GPUs [{fleet_desc}], {} tenants ({total_reqs} requests over \
          ~{horizon_s} s, routing {}{}{}{}{}{})\n",
@@ -601,6 +728,7 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
             ],
         })
         .collect();
+    let runs_n = runs.len();
     for (strategy, faults) in runs {
         let label = match &faults {
             None => strategy.label().to_string(),
@@ -622,6 +750,7 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
         cfg.reconfig = reconfig.clone();
         cfg.faults = faults;
         cfg.shards = (shards != 0).then_some(shards);
+        cfg.obs = obs_spec;
         let out = cluster::run(&cfg, sys)?;
         let mut row = vec![
             label.clone(),
@@ -685,6 +814,74 @@ fn cluster_cmd(args: &Args, sys: &PrebaConfig) -> anyhow::Result<()> {
                 if r.skipped { " (skipped: unit already down)" } else { "" },
                 r.detected_s.map_or("never".into(), |d| format!("{d:.2}s")),
                 r.repaired_s.map_or("never".into(), |d| format!("{d:.2}s")),
+            ));
+        }
+        if let Some(dir) = &obs_dir {
+            // One artifact set per run; A/B pairs land in sibling subdirs
+            // (`bfd-recovery/`, `bfd-baseline/`, ...).
+            let sub = if runs_n > 1 { dir.join(label.replace('/', "-")) } else { dir.clone() };
+            let mut run_fp = fp.clone();
+            run_fp.push("strategy", strategy.label());
+            if let Some(f) = &cfg.faults {
+                run_fp.push("recovery", f.recovery.is_some());
+            }
+            let log = out.obs.as_ref().expect("obs enabled implies a captured log");
+            let em = preba::energy::EnergyModel::new(&sys.energy);
+            let mut marks = Vec::new();
+            for ev in &out.reconfig_events {
+                marks.push(preba::obs::EventMark {
+                    at: ev.at,
+                    gpu: None,
+                    kind: "reconfig".into(),
+                    detail: format!(
+                        "{} moves ({} migration, predicted gain {:.1} ms)",
+                        ev.moves.len(),
+                        ev.migrations(),
+                        ev.predicted_gain_ms
+                    ),
+                });
+            }
+            for ev in &out.consolidation_events {
+                marks.push(preba::obs::EventMark {
+                    at: ev.at,
+                    gpu: Some(ev.gpu),
+                    kind: if ev.powered_down { "power-down" } else { "wake" }.into(),
+                    detail: format!("retired {}, moved {}", ev.retired, ev.moved),
+                });
+            }
+            for r in &out.fault_records {
+                let mark = |at_s: f64, kind: &str, detail: &str| preba::obs::EventMark {
+                    at: preba::clock::secs(at_s),
+                    gpu: Some(r.gpu),
+                    kind: kind.into(),
+                    detail: detail.into(),
+                };
+                marks.push(mark(
+                    r.at_s,
+                    r.kind.label(),
+                    if r.skipped { "skipped: unit already down" } else { "injected" },
+                ));
+                if let Some(d) = r.detected_s {
+                    marks.push(mark(d, "detect", r.kind.label()));
+                }
+                if let Some(d) = r.repaired_s {
+                    marks.push(mark(d, "repair", r.kind.label()));
+                }
+            }
+            let input = preba::obs::ExportInput {
+                log,
+                fp: &run_fp,
+                horizon: out.horizon,
+                gpus: fleet.iter().map(|c| gpu_desc(&em, c)).collect(),
+                tenants: cfg.tenants.iter().map(|t| t.model.display().to_string()).collect(),
+                marks,
+            };
+            let files = preba::obs::export::export(&sub, &input)?;
+            timeline.push(format!(
+                "  [{label}] obs: {} artifacts -> {} (digest: preba report {})",
+                files.len(),
+                sub.display(),
+                sub.display()
             ));
         }
     }

@@ -10,7 +10,7 @@ use crate::clock::{to_millis, to_secs, Nanos};
 use crate::util::Summary;
 
 /// Per-request latency breakdown (paper Fig 7 / Fig 19 stages).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct LatencyParts {
     /// Wait + service in the preprocessing stage (CPU pool or DPU).
     pub preprocess: Nanos,
@@ -64,6 +64,16 @@ pub struct RunStats {
     /// service-time multiplier was > 1 at dispatch). Counted inside
     /// `completed` too.
     pub served_degraded: u64,
+    /// Total arrivals the driver injected for this measurement, warmup
+    /// included. 0 for drivers that predate the accounting audit (the
+    /// real-PJRT driver) — [`RunStats::audit`] is vacuous then.
+    pub arrivals: u64,
+    /// Arrivals whose terminal state fell inside the warmup and was
+    /// therefore excluded from the counters above: completions skipped by
+    /// the completion-order rule (`completed <= warmup`) plus drops /
+    /// timeouts of warmup-indexed arrivals. Closes the conservation law
+    /// checked by [`RunStats::audit`].
+    pub warmup_skipped: u64,
     /// Integrated component energy over the run's horizon
     /// ([`crate::energy::EnergyModel`]); zero for drivers that do not
     /// integrate power (the real-PJRT driver).
@@ -186,6 +196,57 @@ impl RunStats {
         } else {
             self.completed as f64 / e
         }
+    }
+
+    /// Accounting conservation audit: every injected arrival must end in
+    /// exactly one terminal bucket. With `arrivals` recorded (both DES
+    /// drivers), checks
+    /// `completed + dropped + timed_out + warmup_skipped == arrivals`
+    /// plus the admission inequalities `deferred_served ≤ deferred ≤
+    /// arrivals` and `deferred_served ≤ completed + warmup_skipped` (a
+    /// deferred-then-served request completed, possibly inside warmup).
+    /// Vacuously Ok when `arrivals == 0` (drivers that predate the audit).
+    ///
+    /// `warmup_skipped` is what makes the law exact: completions use a
+    /// completion-ORDER warmup rule while drops/timeouts use an
+    /// arrival-INDEX rule, so without it the terminal buckets would not
+    /// sum to the post-warmup arrival count under mixed outcomes.
+    pub fn audit(&self) -> anyhow::Result<()> {
+        if self.arrivals == 0 {
+            return Ok(());
+        }
+        let terminal = self.completed + self.dropped + self.timed_out + self.warmup_skipped;
+        anyhow::ensure!(
+            terminal == self.arrivals,
+            "accounting leak: completed {} + dropped {} + timed_out {} + warmup_skipped {} \
+             = {} != arrivals {}",
+            self.completed,
+            self.dropped,
+            self.timed_out,
+            self.warmup_skipped,
+            terminal,
+            self.arrivals
+        );
+        anyhow::ensure!(
+            self.deferred_served <= self.deferred,
+            "deferred_served {} > deferred {}",
+            self.deferred_served,
+            self.deferred
+        );
+        anyhow::ensure!(
+            self.deferred <= self.arrivals,
+            "deferred {} > arrivals {}",
+            self.deferred,
+            self.arrivals
+        );
+        anyhow::ensure!(
+            self.deferred_served <= self.completed + self.warmup_skipped,
+            "deferred_served {} > completed {} + warmup_skipped {}",
+            self.deferred_served,
+            self.completed,
+            self.warmup_skipped
+        );
+        Ok(())
     }
 
     pub fn mean_ms(&self) -> f64 {
@@ -316,6 +377,40 @@ mod tests {
         s.dropped = 1;
         assert_eq!(s.availability_frac(), 0.25);
         assert_eq!(s.served_frac(), 0.5, "served_frac ignores timeouts");
+    }
+
+    #[test]
+    fn audit_checks_terminal_conservation() {
+        // No arrivals recorded: vacuously Ok (legacy drivers).
+        let mut s = RunStats::new();
+        s.completed = 5;
+        assert!(s.audit().is_ok());
+        // Balanced books pass.
+        s.arrivals = 10;
+        s.dropped = 2;
+        s.timed_out = 1;
+        s.warmup_skipped = 2;
+        assert!(s.audit().is_ok());
+        // A leaked request fails.
+        s.dropped = 1;
+        assert!(s.audit().is_err());
+        s.dropped = 2;
+        // Admission inequalities.
+        s.deferred = 3;
+        s.deferred_served = 4;
+        assert!(s.audit().is_err(), "deferred_served > deferred");
+        s.deferred_served = 3;
+        assert!(s.audit().is_ok());
+        s.deferred = 11;
+        assert!(s.audit().is_err(), "deferred > arrivals");
+        // The mixed-warmup counterexample that motivated warmup_skipped:
+        // warmup=2, 4 arrivals; idx0 dropped inside warmup (uncounted),
+        // idx1..3 complete but the first two completions are order-skipped.
+        let mut s = RunStats::new();
+        s.arrivals = 4;
+        s.completed = 1;
+        s.warmup_skipped = 3;
+        assert!(s.audit().is_ok());
     }
 
     #[test]

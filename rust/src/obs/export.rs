@@ -1,0 +1,596 @@
+//! Artifact writers: JSONL metric dumps + a Chrome trace-event timeline.
+//!
+//! `export` writes five files into the output directory:
+//!
+//! * `meta.json`    — the run [`Fingerprint`] + artifact manifest.
+//! * `windows.jsonl`— per-window rows: tenant counters (arrivals / served /
+//!   drops / timeouts / defers, mean / p95 / max latency), per-GPU busy-GPC
+//!   utilization and estimated power draw (rastered from the batch
+//!   segments, the same integrand the energy model uses), and per-(GPU,
+//!   tenant) queue-depth gauges.
+//! * `spans.jsonl`  — the sampled request spans.
+//! * `events.jsonl` — reconfig / consolidation / fault / repair marks.
+//! * `trace.json`   — Chrome trace-event JSON, loadable in
+//!   `ui.perfetto.dev`: GPUs are processes, slices are threads, batches are
+//!   complete (`X`) events, sampled requests are async (`b`/`e`) pairs,
+//!   fleet events are instants (`i`), and per-window busy-GPC / power /
+//!   queue curves are counters (`C`).
+//!
+//! Every writer iterates sorted containers and emits through
+//! [`crate::util::json::Json`] (BTreeMap-ordered keys), so the bytes are a
+//! pure function of the recorded data — deterministic across runs, shard
+//! layouts and worker counts.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::series::ObsLog;
+use super::span::{flag, Span, SpanOutcome};
+use super::Fingerprint;
+use crate::clock::{to_secs, Nanos};
+use crate::util::json::Json;
+
+/// Per-GPU description the exporter needs: display name, GPC count (the
+/// utilization denominator) and the energy model's per-GPC watts (the
+/// power raster).
+#[derive(Debug, Clone)]
+pub struct GpuDesc {
+    pub name: String,
+    pub gpcs: usize,
+    pub gpc_active_w: f64,
+    pub gpc_idle_w: f64,
+}
+
+/// One fleet-lifecycle event: reconfig plan/commit, consolidation,
+/// crash / detect / repair. `gpu: None` marks fleet-scope events.
+#[derive(Debug, Clone)]
+pub struct EventMark {
+    pub at: Nanos,
+    pub gpu: Option<usize>,
+    pub kind: String,
+    pub detail: String,
+}
+
+/// Everything `export` consumes. The drivers never do IO — the CLI builds
+/// this from a run outcome and hands it over.
+#[derive(Debug, Clone)]
+pub struct ExportInput<'a> {
+    pub log: &'a ObsLog,
+    pub fp: &'a Fingerprint,
+    pub horizon: Nanos,
+    pub gpus: Vec<GpuDesc>,
+    /// Tenant display names, indexed by global tenant id.
+    pub tenants: Vec<String>,
+    pub marks: Vec<EventMark>,
+}
+
+const TRACE_FILE: &str = "trace.json";
+const FILES: [&str; 5] = ["meta.json", "windows.jsonl", "spans.jsonl", "events.jsonl", TRACE_FILE];
+
+/// Write all artifacts into `dir` (created if missing); returns the paths.
+pub fn export(dir: &Path, input: &ExportInput) -> anyhow::Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let texts = [
+        meta_text(input),
+        windows_text(input),
+        spans_text(input),
+        events_text(input),
+        trace_text(input),
+    ];
+    let mut out = Vec::new();
+    for (name, text) in FILES.iter().zip(texts) {
+        let path = dir.join(name);
+        std::fs::write(&path, text)?;
+        out.push(path);
+    }
+    Ok(out)
+}
+
+fn meta_text(input: &ExportInput) -> String {
+    let doc = Json::obj(vec![
+        ("format", Json::num(1.0)),
+        ("fingerprint", input.fp.json()),
+        ("window_s", Json::num(to_secs(input.log.spec.window_ns))),
+        ("span_sample", Json::num(input.log.spec.span_sample as f64)),
+        ("horizon_s", Json::num(to_secs(input.horizon))),
+        ("gpus", Json::arr(input.gpus.iter().map(|g| Json::str(&g.name)))),
+        ("tenants", Json::arr(input.tenants.iter().map(|t| Json::str(t)))),
+        ("files", Json::arr(FILES.iter().map(|f| Json::str(f)))),
+    ]);
+    let mut s = doc.to_string_pretty();
+    s.push('\n');
+    s
+}
+
+fn header_line(input: &ExportInput) -> String {
+    Json::obj(vec![
+        ("kind", Json::str("meta")),
+        ("fingerprint", input.fp.json()),
+        ("window_s", Json::num(to_secs(input.log.spec.window_ns))),
+    ])
+    .to_string()
+}
+
+/// Per-(window, gpu) → (busy GPC·s, pw-weighted busy GPC·s), rastered from
+/// the batch segments by splitting each segment across the windows it
+/// overlaps — the discrete form of the energy model's busy-GPC integral.
+fn gpu_raster(input: &ExportInput) -> BTreeMap<(u64, usize), (f64, f64)> {
+    let win = input.log.spec.window_ns.max(1);
+    let mut raster: BTreeMap<(u64, usize), (f64, f64)> = BTreeMap::new();
+    for seg in &input.log.segs {
+        let (mut t, end) = (seg.start, seg.end.max(seg.start));
+        while t < end {
+            let w = t / win;
+            let stop = ((w + 1) * win).min(end);
+            let dur_s = to_secs(stop - t) * seg.gpcs as f64;
+            let cell = raster.entry((w, seg.gpu)).or_insert((0.0, 0.0));
+            cell.0 += dur_s;
+            cell.1 += dur_s * seg.pw;
+            t = stop;
+        }
+    }
+    raster
+}
+
+/// Mean power over a window for one GPU: idle floor on every GPC plus the
+/// active increment on the (pw-weighted) busy fraction.
+fn window_power_w(g: &GpuDesc, weighted_gpc_s: f64, win_s: f64) -> f64 {
+    g.gpcs as f64 * g.gpc_idle_w + (g.gpc_active_w - g.gpc_idle_w) * weighted_gpc_s / win_s
+}
+
+fn windows_text(input: &ExportInput) -> String {
+    let log = input.log;
+    let win_s = to_secs(log.spec.window_ns.max(1));
+    let mut out = header_line(input);
+    out.push('\n');
+    for ((w, tenant), c) in &log.tenant_cells {
+        let line = Json::obj(vec![
+            ("kind", Json::str("tenant")),
+            ("window", Json::num(*w as f64)),
+            ("t0_s", Json::num(*w as f64 * win_s)),
+            ("tenant", Json::num(*tenant as f64)),
+            ("model", Json::str(tenant_name(input, *tenant))),
+            ("arrivals", Json::num(c.arrivals as f64)),
+            ("served", Json::num(c.served as f64)),
+            ("dropped", Json::num(c.dropped as f64)),
+            ("timed_out", Json::num(c.timed_out as f64)),
+            ("deferred", Json::num(c.deferred as f64)),
+            ("mean_ms", Json::num(c.mean_ms())),
+            ("p95_ms", Json::num(c.p95_ms())),
+            ("max_ms", Json::num(to_secs(c.max_ns) * 1e3)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    for ((w, gpu), (busy, weighted)) in &gpu_raster(input) {
+        let Some(g) = input.gpus.get(*gpu) else { continue };
+        // The last window may be partial: clamp the utilization
+        // denominator to the simulated horizon.
+        let span_s =
+            (to_secs(input.horizon) - *w as f64 * win_s).clamp(f64::MIN_POSITIVE, win_s);
+        let util = busy / (g.gpcs as f64 * span_s);
+        let line = Json::obj(vec![
+            ("kind", Json::str("gpu")),
+            ("window", Json::num(*w as f64)),
+            ("t0_s", Json::num(*w as f64 * win_s)),
+            ("gpu", Json::num(*gpu as f64)),
+            ("class", Json::str(&g.name)),
+            ("busy_gpc_s", Json::num(*busy)),
+            ("util", Json::num(util.min(1.0))),
+            ("power_w", Json::num(window_power_w(g, *weighted, win_s))),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    for ((w, gpu, tenant), c) in &log.group_cells {
+        let line = Json::obj(vec![
+            ("kind", Json::str("group")),
+            ("window", Json::num(*w as f64)),
+            ("t0_s", Json::num(*w as f64 * win_s)),
+            ("gpu", Json::num(*gpu as f64)),
+            ("tenant", Json::num(*tenant as f64)),
+            ("queue_avg", Json::num(c.queue_avg())),
+            ("queue_max", Json::num(c.queue_max as f64)),
+            ("in_flight_avg", Json::num(c.in_flight_avg())),
+            ("in_flight_max", Json::num(c.in_flight_max as f64)),
+            ("batches", Json::num(c.batches as f64)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn tenant_name<'a>(input: &'a ExportInput, tenant: usize) -> &'a str {
+    input.tenants.get(tenant).map(String::as_str).unwrap_or("?")
+}
+
+fn span_flags(s: &Span) -> Json {
+    let names: [(&str, u8); 5] = [
+        ("deferred", flag::DEFERRED),
+        ("retried", flag::RETRIED),
+        ("hedged", flag::HEDGED),
+        ("degraded", flag::DEGRADED),
+        ("warmup", flag::WARMUP),
+    ];
+    Json::arr(names.iter().filter(|(_, b)| s.flags & b != 0).map(|(n, _)| Json::str(n)))
+}
+
+fn spans_text(input: &ExportInput) -> String {
+    let mut out = header_line(input);
+    out.push('\n');
+    for s in &input.log.spans {
+        let mut pairs = vec![
+            ("tenant", Json::num(s.tenant as f64)),
+            ("model", Json::str(tenant_name(input, s.tenant))),
+            ("idx", Json::num(s.idx as f64)),
+            ("arrival_s", Json::num(to_secs(s.arrival))),
+            ("end_s", Json::num(to_secs(s.end))),
+            ("outcome", Json::str(s.outcome.label())),
+            ("flags", span_flags(s)),
+        ];
+        if s.outcome == SpanOutcome::Served {
+            pairs.push(("preprocess_ms", Json::num(to_secs(s.parts.preprocess) * 1e3)));
+            pairs.push(("batching_ms", Json::num(to_secs(s.parts.batching) * 1e3)));
+            pairs.push(("dispatch_ms", Json::num(to_secs(s.parts.dispatch_wait) * 1e3)));
+            pairs.push(("execution_ms", Json::num(to_secs(s.parts.execution) * 1e3)));
+            pairs.push(("e2e_ms", Json::num(to_secs(s.parts.total()) * 1e3)));
+        }
+        if let Some(r) = &s.route {
+            pairs.push(("gpu", Json::num(r.gpu as f64)));
+            pairs.push(("slice", Json::num(r.slice as f64)));
+            pairs.push(("batch", Json::num(r.batch as f64)));
+            pairs.push(("batch_size", Json::num(r.batch_size as f64)));
+        }
+        out.push_str(&Json::obj(pairs).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn sorted_marks(input: &ExportInput) -> Vec<&EventMark> {
+    let mut marks: Vec<&EventMark> = input.marks.iter().collect();
+    marks.sort_by(|a, b| {
+        (a.at, &a.kind, a.gpu, &a.detail).cmp(&(b.at, &b.kind, b.gpu, &b.detail))
+    });
+    marks
+}
+
+fn events_text(input: &ExportInput) -> String {
+    let mut out = header_line(input);
+    out.push('\n');
+    for m in sorted_marks(input) {
+        let line = Json::obj(vec![
+            ("at_s", Json::num(to_secs(m.at))),
+            ("gpu", m.gpu.map_or(Json::Null, |g| Json::num(g as f64))),
+            ("kind", Json::str(&m.kind)),
+            ("detail", Json::str(&m.detail)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn us(t: Nanos) -> f64 {
+    t as f64 / 1e3
+}
+
+/// Chrome trace-event JSON (the "JSON Array Format" with an object
+/// envelope). Process ids are GPU indices; one extra process holds
+/// fleet-scope instants and counters.
+fn trace_text(input: &ExportInput) -> String {
+    let log = input.log;
+    let fleet_pid = input.gpus.len();
+    let win_s = to_secs(log.spec.window_ns.max(1));
+    let mut events: Vec<(f64, Json)> = Vec::new();
+    let mut meta =
+        |name: &str, pid: usize, tid: Option<usize>, value: &str, events: &mut Vec<(f64, Json)>| {
+            let mut pairs = vec![
+                ("name", Json::str(name)),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(pid as f64)),
+                ("ts", Json::num(0.0)),
+                ("args", Json::obj(vec![("name", Json::str(value))])),
+            ];
+            if let Some(tid) = tid {
+                pairs.push(("tid", Json::num(tid as f64)));
+            }
+            events.push((0.0, Json::obj(pairs)));
+        };
+    for (g, desc) in input.gpus.iter().enumerate() {
+        meta("process_name", g, None, &format!("GPU{g} ({})", desc.name), &mut events);
+    }
+    meta("process_name", fleet_pid, None, "fleet", &mut events);
+    // Thread (slice) names: every slice that ever executed a batch.
+    let mut slices: Vec<(usize, usize)> = log.segs.iter().map(|s| (s.gpu, s.slice)).collect();
+    slices.sort_unstable();
+    slices.dedup();
+    for (gpu, slice) in slices {
+        meta("thread_name", gpu, Some(slice + 1), &format!("slice {slice}"), &mut events);
+    }
+
+    // Batch execution rectangles: complete (X) events on (GPU, slice).
+    for seg in &log.segs {
+        let name = format!(
+            "{} x{}{}",
+            tenant_name(input, seg.tenant),
+            seg.size,
+            if seg.harvested { " (harvested)" } else { "" }
+        );
+        events.push((
+            us(seg.start),
+            Json::obj(vec![
+                ("name", Json::str(&name)),
+                ("cat", Json::str("batch")),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(seg.gpu as f64)),
+                ("tid", Json::num(seg.slice as f64 + 1.0)),
+                ("ts", Json::num(us(seg.start))),
+                ("dur", Json::num(us(seg.end.max(seg.start)) - us(seg.start))),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("tenant", Json::num(seg.tenant as f64)),
+                        ("seq", Json::num(seg.seq as f64)),
+                        ("gpcs", Json::num(seg.gpcs as f64)),
+                        ("pw", Json::num(seg.pw)),
+                        ("harvested", Json::Bool(seg.harvested)),
+                    ]),
+                ),
+            ]),
+        ));
+    }
+
+    // Sampled served requests: async begin/end pairs on their GPU's
+    // process, keyed by a per-request id so overlaps render correctly.
+    for s in &log.spans {
+        let Some(r) = &s.route else { continue };
+        let id = format!("t{}:r{}", s.tenant, s.idx);
+        let name = format!("{} req {}", tenant_name(input, s.tenant), s.idx);
+        let begin = Json::obj(vec![
+            ("name", Json::str(&name)),
+            ("cat", Json::str("request")),
+            ("ph", Json::str("b")),
+            ("id", Json::str(&id)),
+            ("pid", Json::num(r.gpu as f64)),
+            ("tid", Json::num(0.0)),
+            ("ts", Json::num(us(s.arrival))),
+            (
+                "args",
+                Json::obj(vec![
+                    ("outcome", Json::str(s.outcome.label())),
+                    ("flags", span_flags(s)),
+                    ("preprocess_ms", Json::num(to_secs(s.parts.preprocess) * 1e3)),
+                    ("batching_ms", Json::num(to_secs(s.parts.batching) * 1e3)),
+                    ("dispatch_ms", Json::num(to_secs(s.parts.dispatch_wait) * 1e3)),
+                    ("execution_ms", Json::num(to_secs(s.parts.execution) * 1e3)),
+                    ("batch", Json::num(r.batch as f64)),
+                    ("slice", Json::num(r.slice as f64)),
+                ]),
+            ),
+        ]);
+        let end = Json::obj(vec![
+            ("name", Json::str(&name)),
+            ("cat", Json::str("request")),
+            ("ph", Json::str("e")),
+            ("id", Json::str(&id)),
+            ("pid", Json::num(r.gpu as f64)),
+            ("tid", Json::num(0.0)),
+            ("ts", Json::num(us(s.end))),
+        ]);
+        events.push((us(s.arrival), begin));
+        events.push((us(s.end), end));
+    }
+
+    // Fleet lifecycle instants: process-scoped on their GPU's track,
+    // global otherwise (crash → detect → repair land on the failed GPU).
+    for m in sorted_marks(input) {
+        let (pid, scope) = match m.gpu {
+            Some(g) => (g, "p"),
+            None => (fleet_pid, "g"),
+        };
+        events.push((
+            us(m.at),
+            Json::obj(vec![
+                ("name", Json::str(&m.kind)),
+                ("cat", Json::str("event")),
+                ("ph", Json::str("i")),
+                ("s", Json::str(scope)),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(us(m.at))),
+                ("args", Json::obj(vec![("detail", Json::str(&m.detail))])),
+            ]),
+        ));
+    }
+
+    // Per-window counter tracks: busy GPCs + power per GPU, fleet power.
+    let mut fleet_power: BTreeMap<u64, f64> = BTreeMap::new();
+    for ((w, gpu), (busy, weighted)) in &gpu_raster(input) {
+        let Some(g) = input.gpus.get(*gpu) else { continue };
+        let ts = *w as f64 * win_s * 1e6;
+        let power = window_power_w(g, *weighted, win_s);
+        *fleet_power.entry(*w).or_default() += power;
+        for (name, value) in [("busy_gpc", busy / win_s), ("power_w", power)] {
+            events.push((
+                ts,
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("ph", Json::str("C")),
+                    ("pid", Json::num(*gpu as f64)),
+                    ("tid", Json::num(0.0)),
+                    ("ts", Json::num(ts)),
+                    ("args", Json::obj(vec![(name, Json::num(value))])),
+                ]),
+            ));
+        }
+    }
+    for (w, power) in fleet_power {
+        let ts = w as f64 * win_s * 1e6;
+        events.push((
+            ts,
+            Json::obj(vec![
+                ("name", Json::str("fleet_power_w")),
+                ("ph", Json::str("C")),
+                ("pid", Json::num(fleet_pid as f64)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(ts)),
+                ("args", Json::obj(vec![("fleet_power_w", Json::num(power))])),
+            ]),
+        ));
+    }
+
+    // Monotone timestamps (stable: construction order breaks ties).
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let doc = Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("otherData", input.fp.json()),
+        ("traceEvents", Json::arr(events.into_iter().map(|(_, e)| e))),
+    ]);
+    let mut s = doc.to_string_pretty();
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::{millis, secs};
+    use crate::metrics::LatencyParts;
+    use crate::obs::span::{BatchSeg, Served};
+    use crate::obs::ObsSpec;
+
+    fn sample_input(log: &ObsLog, fp: &Fingerprint) -> Vec<String> {
+        let input = ExportInput {
+            log,
+            fp,
+            horizon: secs(2.0),
+            gpus: vec![GpuDesc {
+                name: "a100".into(),
+                gpcs: 7,
+                gpc_active_w: 50.0,
+                gpc_idle_w: 5.0,
+            }],
+            tenants: vec!["swin".into()],
+            marks: vec![
+                EventMark { at: secs(1.0), gpu: Some(0), kind: "crash".into(), detail: "g0".into() },
+                EventMark { at: secs(1.2), gpu: None, kind: "reconfig".into(), detail: "".into() },
+            ],
+        };
+        vec![
+            meta_text(&input),
+            windows_text(&input),
+            spans_text(&input),
+            events_text(&input),
+            trace_text(&input),
+        ]
+    }
+
+    fn sample_log() -> ObsLog {
+        let spec = ObsSpec::on(1.0, 1);
+        let mut log = ObsLog::new(spec);
+        log.on_arrival(millis(100.0), 0);
+        log.on_served(Served {
+            tenant: 0,
+            idx: 0,
+            arrival: millis(100.0),
+            done: millis(140.0),
+            parts: LatencyParts { execution: millis(40.0), ..Default::default() },
+            gpu: 0,
+            slice: 2,
+            batch: 0,
+            batch_size: 4,
+            degraded: false,
+            deferred: false,
+            counted: true,
+        });
+        log.on_batch(BatchSeg {
+            gpu: 0,
+            slice: 2,
+            tenant: 0,
+            seq: 0,
+            start: millis(100.0),
+            end: millis(140.0),
+            size: 4,
+            gpcs: 1,
+            pw: 1.0,
+            harvested: false,
+        });
+        log.on_queue(millis(100.0), 0, 0, 3, 1);
+        log.seal();
+        log
+    }
+
+    #[test]
+    fn export_texts_are_valid_and_deterministic() {
+        let log = sample_log();
+        let mut fp = Fingerprint::new("test");
+        fp.push("seed", 7);
+        let a = sample_input(&log, &fp);
+        let b = sample_input(&log, &fp);
+        assert_eq!(a, b, "same log ⇒ identical bytes");
+        // Every JSONL line parses; trace + meta parse whole.
+        for text in [&a[1], &a[2], &a[3]] {
+            for line in text.lines() {
+                crate::util::json::parse(line).unwrap();
+            }
+        }
+        let meta = crate::util::json::parse(&a[0]).unwrap();
+        assert!(Fingerprint::from_json(meta.req("fingerprint").unwrap()).unwrap().same_mapping(&fp));
+        let trace = crate::util::json::parse(&a[4]).unwrap();
+        let evs = trace.req("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        assert!(!evs.is_empty());
+        let mut last = f64::MIN;
+        for e in &evs {
+            let ts = e.req("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last, "trace timestamps are monotone");
+            last = ts;
+        }
+        // One X batch, one matched b/e request pair, two instants.
+        let count =
+            |ph: &str| evs.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some(ph)).count();
+        assert_eq!(count("X"), 1);
+        assert_eq!(count("b"), count("e"));
+        assert_eq!(count("b"), 1);
+        assert_eq!(count("i"), 2);
+        assert!(count("C") >= 2);
+    }
+
+    #[test]
+    fn raster_splits_segments_across_windows() {
+        let spec = ObsSpec::on(1.0, 1);
+        let mut log = ObsLog::new(spec);
+        log.on_batch(BatchSeg {
+            gpu: 0,
+            slice: 0,
+            tenant: 0,
+            seq: 0,
+            start: millis(500.0),
+            end: millis(1500.0),
+            size: 1,
+            gpcs: 2,
+            pw: 1.0,
+            harvested: false,
+        });
+        let fp = Fingerprint::new("test");
+        let input = ExportInput {
+            log: &log,
+            fp: &fp,
+            horizon: secs(2.0),
+            gpus: vec![GpuDesc {
+                name: "a100".into(),
+                gpcs: 7,
+                gpc_active_w: 50.0,
+                gpc_idle_w: 5.0,
+            }],
+            tenants: vec!["t".into()],
+            marks: vec![],
+        };
+        let raster = gpu_raster(&input);
+        let w0 = raster.get(&(0, 0)).unwrap();
+        let w1 = raster.get(&(1, 0)).unwrap();
+        assert!((w0.0 - 1.0).abs() < 1e-9, "0.5 s × 2 GPCs in window 0");
+        assert!((w1.0 - 1.0).abs() < 1e-9, "0.5 s × 2 GPCs in window 1");
+    }
+}

@@ -1,0 +1,178 @@
+//! Run observability: windowed time-series, sampled request spans, and
+//! Perfetto-loadable fleet timelines.
+//!
+//! The DES drivers report end-of-run aggregates ([`crate::metrics::RunStats`]),
+//! which is the right interface for experiments but hides *dynamics*: a
+//! reconfig oscillation, a fault-recovery stall, or a batching pathology is
+//! invisible unless some aggregate happens to shadow it. This module is the
+//! seam that makes those visible without perturbing the simulation:
+//!
+//! * [`series`] — an [`ObsLog`] recorder aggregating counters/gauges into
+//!   fixed `window_ns` buckets (per-tenant arrivals/served/drops + latency
+//!   histogram, per-(GPU, tenant) queue-depth gauges), with shard-local
+//!   buffers merged deterministically in shard order at `finalize`.
+//! * [`span`] — deterministic 1-in-N sampled per-request [`Span`]s carrying
+//!   the full `LatencyParts` pipeline plus route and outcome, and per-batch
+//!   execution segments ([`BatchSeg`]) for the timeline.
+//! * [`export`] — JSONL metric dumps plus a Chrome trace-event JSON timeline
+//!   (GPUs are processes, slices are threads, batches are complete events,
+//!   reconfig/consolidation/fault events are instants) that loads directly
+//!   in `ui.perfetto.dev`.
+//! * [`report`] — the `preba report` subcommand: a run digest (phase
+//!   breakdown, top-k worst windows, event log) rendered from the exported
+//!   artifacts.
+//!
+//! **Neutrality contract** (the PR 8 discipline): the layer is always
+//! compiled but off by default, and with `ObsSpec::enabled == false` every
+//! recording call returns before touching any state — runs are BYTE-identical
+//! to an unobserved build. When enabled, recording never consumes driver RNG
+//! state, never schedules events, and keys every record by global ids, so
+//! outcomes stay byte-identical and the exported artifacts are deterministic
+//! across `--shards` and `--jobs`.
+
+pub mod export;
+pub mod report;
+pub mod series;
+pub mod span;
+
+pub use export::{EventMark, ExportInput, GpuDesc};
+pub use series::{GroupCell, ObsLog, TenantCell};
+pub use span::{BatchSeg, Route, Served, Span, SpanOutcome};
+
+use crate::clock::{secs, Nanos};
+use crate::util::json::Json;
+
+/// Recording knobs carried by both DES driver configs. `Default` is
+/// disabled: a driver with a default spec behaves byte-identically to one
+/// built before this module existed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObsSpec {
+    /// Master switch. Off ⇒ every recorder call is a no-op.
+    pub enabled: bool,
+    /// Time-series bucket width.
+    pub window_ns: Nanos,
+    /// Span sampling: request `idx` is sampled iff `idx % span_sample == 0`
+    /// (deterministic — no RNG draw, so sampling cannot perturb the run).
+    pub span_sample: u64,
+}
+
+impl Default for ObsSpec {
+    fn default() -> Self {
+        ObsSpec { enabled: false, window_ns: secs(1.0), span_sample: 8 }
+    }
+}
+
+impl ObsSpec {
+    /// An enabled spec with the given bucket width and sampling period.
+    pub fn on(window_s: f64, span_sample: u64) -> Self {
+        ObsSpec {
+            enabled: true,
+            window_ns: secs(window_s.max(1e-3)),
+            span_sample: span_sample.max(1),
+        }
+    }
+
+    /// Window index for a timestamp.
+    #[inline]
+    pub fn window(&self, t: Nanos) -> u64 {
+        t / self.window_ns.max(1)
+    }
+}
+
+/// The resolved-config fingerprint embedded in every CLI run banner and
+/// every exported obs artifact, so a timeline is self-describing: seed,
+/// planner, strategy, shards, curves on/off, fault spec, obs knobs.
+///
+/// Pairs keep insertion order for the human-readable [`Fingerprint::line`];
+/// the JSON form sorts keys (BTreeMap) — both are deterministic. The
+/// fingerprint deliberately excludes `--jobs`: worker count never changes
+/// results, and run banners are byte-compared across job counts in tests.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Fingerprint {
+    pairs: Vec<(String, String)>,
+}
+
+impl Fingerprint {
+    pub fn new(driver: &str) -> Self {
+        let mut fp = Fingerprint::default();
+        fp.push("driver", driver);
+        fp.push("crate", env!("CARGO_PKG_VERSION"));
+        fp
+    }
+
+    pub fn push(&mut self, key: &str, value: impl std::fmt::Display) {
+        self.pairs.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// One-line `k=v` form for run banners and JSONL headers.
+    pub fn line(&self) -> String {
+        let body: Vec<String> = self.pairs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        format!("fingerprint: {}", body.join(" "))
+    }
+
+    /// JSON object form (string values; keys sorted by the writer).
+    pub fn json(&self) -> Json {
+        Json::Obj(self.pairs.iter().map(|(k, v)| (k.clone(), Json::str(v))).collect())
+    }
+
+    /// Rebuild from the JSON object form (key order is the writer's sorted
+    /// order — equality with the original is on the key→value *mapping*).
+    pub fn from_json(doc: &Json) -> anyhow::Result<Self> {
+        let obj = doc.as_obj().ok_or_else(|| anyhow::anyhow!("fingerprint is not an object"))?;
+        let mut fp = Fingerprint::default();
+        for (k, v) in obj {
+            let s = v.as_str().ok_or_else(|| anyhow::anyhow!("fingerprint['{k}'] not a string"))?;
+            fp.push(k, s);
+        }
+        Ok(fp)
+    }
+
+    /// Key→value equality regardless of pair order (JSON round-trips sort).
+    pub fn same_mapping(&self, other: &Fingerprint) -> bool {
+        let norm = |fp: &Fingerprint| {
+            let mut v = fp.pairs.clone();
+            v.sort();
+            v
+        };
+        norm(self) == norm(other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_disabled() {
+        let spec = ObsSpec::default();
+        assert!(!spec.enabled);
+        assert_eq!(spec.window_ns, secs(1.0));
+        assert!(spec.span_sample >= 1);
+    }
+
+    #[test]
+    fn windows_partition_time() {
+        let spec = ObsSpec::on(0.5, 4);
+        assert_eq!(spec.window(0), 0);
+        assert_eq!(spec.window(secs(0.49)), 0);
+        assert_eq!(spec.window(secs(0.5)), 1);
+        assert_eq!(spec.window(secs(2.6)), 5);
+    }
+
+    #[test]
+    fn fingerprint_round_trips_through_json() {
+        let mut fp = Fingerprint::new("cluster");
+        fp.push("seed", 0xC1A0u64);
+        fp.push("strategy", "bfd");
+        fp.push("shards", "auto");
+        let back = Fingerprint::from_json(&fp.json()).unwrap();
+        assert!(fp.same_mapping(&back));
+        assert_eq!(back.get("seed").unwrap(), format!("{}", 0xC1A0u64));
+        assert!(fp.line().contains("driver=cluster"));
+        assert!(fp.line().contains("strategy=bfd"));
+    }
+}

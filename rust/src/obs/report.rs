@@ -1,0 +1,205 @@
+//! `preba report DIR` — a run digest rendered from exported obs artifacts.
+//!
+//! Reads the files [`crate::obs::export`] wrote (`meta.json`,
+//! `windows.jsonl`, `spans.jsonl`, `events.jsonl`) and prints: the run's
+//! [`Fingerprint`] (the round-trip the reproducibility smoke test pins),
+//! totals reconciled from the window cells, the sampled-span phase
+//! breakdown, the top-k worst windows by p95, and the fleet event log.
+
+use std::path::Path;
+
+use super::Fingerprint;
+use crate::util::json::{parse, Json};
+use crate::util::table::{num, Table};
+
+/// How many worst windows the digest lists.
+const TOP_K: usize = 5;
+
+/// Render the digest to stdout.
+pub fn report(dir: &Path) -> anyhow::Result<()> {
+    print!("{}", render(dir)?);
+    Ok(())
+}
+
+fn read_jsonl(path: &Path) -> anyhow::Result<Vec<Json>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| parse(l).map_err(|e| anyhow::anyhow!("{}: {e}", path.display())))
+        .collect()
+}
+
+fn f(doc: &Json, key: &str) -> f64 {
+    doc.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn s<'a>(doc: &'a Json, key: &str) -> &'a str {
+    doc.get(key).and_then(Json::as_str).unwrap_or("")
+}
+
+/// Render the digest as a string (separated from [`report`] for tests).
+pub fn render(dir: &Path) -> anyhow::Result<String> {
+    let meta = parse(
+        &std::fs::read_to_string(dir.join("meta.json"))
+            .map_err(|e| anyhow::anyhow!("cannot read {}/meta.json: {e}", dir.display()))?,
+    )?;
+    let fp = Fingerprint::from_json(meta.req("fingerprint")?)?;
+    let windows = read_jsonl(&dir.join("windows.jsonl"))?;
+    let spans = read_jsonl(&dir.join("spans.jsonl"))?;
+    let events = read_jsonl(&dir.join("events.jsonl"))?;
+
+    let mut out = String::new();
+    out.push_str(&format!("run digest from {}\n", dir.display()));
+    out.push_str(&fp.line());
+    out.push('\n');
+
+    // ---- totals reconciled from the window cells -----------------------
+    let tenant_rows: Vec<&Json> =
+        windows.iter().filter(|r| s(r, "kind") == "tenant").collect();
+    let total = |key: &str| tenant_rows.iter().map(|r| f(r, key)).sum::<f64>();
+    out.push_str(&format!(
+        "\nwindows: {} cells over {:.1} s (window {} s)\n",
+        tenant_rows.len(),
+        f(&meta, "horizon_s"),
+        f(&meta, "window_s"),
+    ));
+    out.push_str(&format!(
+        "totals: arrivals {} | served {} | dropped {} | timed out {} | deferred {}\n",
+        total("arrivals"),
+        total("served"),
+        total("dropped"),
+        total("timed_out"),
+        total("deferred"),
+    ));
+
+    // ---- phase breakdown from the sampled served spans -----------------
+    let served: Vec<&Json> =
+        spans.iter().filter(|r| s(r, "outcome") == "served").collect();
+    if !served.is_empty() {
+        let mean = |key: &str| {
+            served.iter().map(|r| f(r, key)).sum::<f64>() / served.len() as f64
+        };
+        out.push_str(&format!(
+            "\nphase breakdown ({} sampled served spans):\n  preprocess {:.2} ms | batching {:.2} ms | queue {:.2} ms | execute {:.2} ms | e2e {:.2} ms\n",
+            served.len(),
+            mean("preprocess_ms"),
+            mean("batching_ms"),
+            mean("dispatch_ms"),
+            mean("execution_ms"),
+            mean("e2e_ms"),
+        ));
+    }
+
+    // ---- top-k worst windows by p95 ------------------------------------
+    let mut worst: Vec<&&Json> = tenant_rows.iter().filter(|r| f(r, "served") > 0.0).collect();
+    worst.sort_by(|a, b| {
+        f(b, "p95_ms")
+            .total_cmp(&f(a, "p95_ms"))
+            .then(f(a, "window").total_cmp(&f(b, "window")))
+            .then(f(a, "tenant").total_cmp(&f(b, "tenant")))
+    });
+    if !worst.is_empty() {
+        out.push_str(&format!("\nworst {} windows by p95:\n", TOP_K.min(worst.len())));
+        let mut t = Table::new(&["t0 s", "model", "served", "p95 ms", "mean ms", "drops"]);
+        for r in worst.iter().take(TOP_K) {
+            t.row(&[
+                num(f(r, "t0_s")),
+                s(r, "model").to_string(),
+                num(f(r, "served")),
+                num(f(r, "p95_ms")),
+                num(f(r, "mean_ms")),
+                num(f(r, "dropped") + f(r, "timed_out")),
+            ]);
+        }
+        for line in t.render() {
+            out.push_str(&line);
+            out.push('\n');
+        }
+    }
+
+    // ---- fleet event log -----------------------------------------------
+    let marks: Vec<&Json> = events.iter().filter(|r| !s(r, "kind").is_empty()).collect();
+    if marks.is_empty() {
+        out.push_str("\nno fleet events recorded\n");
+    } else {
+        out.push_str(&format!("\nfleet events ({}):\n", marks.len()));
+        for m in marks {
+            let gpu = m
+                .get("gpu")
+                .and_then(Json::as_f64)
+                .map_or("fleet".to_string(), |g| format!("gpu{g}"));
+            let detail = s(m, "detail");
+            out.push_str(&format!(
+                "  t={:.2}s {} [{}]{}{}\n",
+                f(m, "at_s"),
+                s(m, "kind"),
+                gpu,
+                if detail.is_empty() { "" } else { " " },
+                detail,
+            ));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::{millis, secs};
+    use crate::metrics::LatencyParts;
+    use crate::obs::export::{export, EventMark, ExportInput, GpuDesc};
+    use crate::obs::span::Served;
+    use crate::obs::{ObsLog, ObsSpec};
+
+    #[test]
+    fn report_round_trips_the_fingerprint() {
+        let spec = ObsSpec::on(1.0, 1);
+        let mut log = ObsLog::new(spec);
+        log.on_arrival(millis(10.0), 0);
+        log.on_served(Served {
+            tenant: 0,
+            idx: 0,
+            arrival: millis(10.0),
+            done: millis(30.0),
+            parts: LatencyParts { execution: millis(20.0), ..Default::default() },
+            gpu: 0,
+            slice: 0,
+            batch: 0,
+            batch_size: 1,
+            degraded: false,
+            deferred: false,
+            counted: true,
+        });
+        log.seal();
+        let mut fp = Fingerprint::new("cluster");
+        fp.push("seed", 0xAB5EEDu64);
+        fp.push("strategy", "bfd");
+        let dir = std::env::temp_dir().join(format!("preba_obs_report_{}", std::process::id()));
+        let input = ExportInput {
+            log: &log,
+            fp: &fp,
+            horizon: secs(1.0),
+            gpus: vec![GpuDesc {
+                name: "a100".into(),
+                gpcs: 7,
+                gpc_active_w: 50.0,
+                gpc_idle_w: 5.0,
+            }],
+            tenants: vec!["swin".into()],
+            marks: vec![EventMark {
+                at: millis(500.0),
+                gpu: Some(0),
+                kind: "crash".into(),
+                detail: "injected".into(),
+            }],
+        };
+        export(&dir, &input).unwrap();
+        let text = render(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(text.contains(&fp.line()), "digest embeds the fingerprint line");
+        assert!(text.contains(&format!("seed={}", 0xAB5EEDu64)));
+        assert!(text.contains("crash"), "event log lists the fault");
+        assert!(text.contains("served 1"), "totals reconcile");
+    }
+}

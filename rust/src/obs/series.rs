@@ -1,0 +1,550 @@
+//! Windowed time-series recorder with deterministic shard merge.
+//!
+//! [`ObsLog`] is the buffer a DES driver (or one shard of the cluster DES)
+//! fills while it runs. Every recording method is a no-op when the spec is
+//! disabled, never draws driver RNG, and never schedules events — the
+//! neutrality contract in [`crate::obs`]. Keys are **global** ids (the
+//! cluster's `run_inner` maps local shard indices through its `ShardCtx`
+//! before recording), so merging shard buffers is pure concatenation plus a
+//! deterministic sort — byte-identical output at any `--shards`/`--jobs`.
+
+use std::collections::BTreeMap;
+
+use super::span::{flag, BatchSeg, Route, Served, Span, SpanOutcome};
+use super::ObsSpec;
+use crate::clock::{to_millis, Nanos};
+use crate::metrics::LatencyParts;
+
+/// 64-bucket log2(ns) latency histogram: bounded, mergeable, and exact
+/// enough for per-window tails (bucket b covers `[2^b, 2^(b+1))` ns; the
+/// quantile reports the bucket's upper edge).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatHist {
+    buckets: [u64; 64],
+}
+
+impl Default for LatHist {
+    fn default() -> Self {
+        LatHist { buckets: [0; 64] }
+    }
+}
+
+impl LatHist {
+    #[inline]
+    fn bucket(ns: Nanos) -> usize {
+        (63 - ns.max(1).leading_zeros() as usize).min(62)
+    }
+
+    pub fn add(&mut self, ns: Nanos) {
+        self.buckets[Self::bucket(ns)] += 1;
+    }
+
+    pub fn merge(&mut self, other: &LatHist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Upper edge of the bucket holding the q-quantile, in ms (0 if empty).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return to_millis(1u64 << (b + 1));
+            }
+        }
+        0.0
+    }
+}
+
+/// One (window, tenant) cell. `arrivals` counts every arrival in the
+/// window (warmup included — the offered-load curve); the outcome columns
+/// count only what `RunStats` counts, so `Σ served == stats.completed`
+/// and likewise for drops/timeouts/defers.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantCell {
+    pub arrivals: u64,
+    pub served: u64,
+    pub dropped: u64,
+    pub timed_out: u64,
+    pub deferred: u64,
+    /// Σ end-to-end latency of served requests (for the window mean).
+    pub sum_ns: u128,
+    pub max_ns: Nanos,
+    pub hist: LatHist,
+}
+
+impl TenantCell {
+    pub fn mean_ms(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            to_millis((self.sum_ns / self.served as u128) as Nanos)
+        }
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.hist.quantile_ms(0.95)
+    }
+
+    fn merge(&mut self, other: &TenantCell) {
+        self.arrivals += other.arrivals;
+        self.served += other.served;
+        self.dropped += other.dropped;
+        self.timed_out += other.timed_out;
+        self.deferred += other.deferred;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+        self.hist.merge(&other.hist);
+    }
+}
+
+/// One (window, GPU, tenant) serving-group gauge cell: queue depth and
+/// in-flight batches sampled at dispatch/completion edges, plus the number
+/// of batches dispatched in the window.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GroupCell {
+    /// Gauge samples taken (divisor for the averages).
+    pub samples: u64,
+    pub queue_sum: u64,
+    pub queue_max: u64,
+    pub in_flight_sum: u64,
+    pub in_flight_max: u64,
+    pub batches: u64,
+}
+
+impl GroupCell {
+    pub fn queue_avg(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.queue_sum as f64 / self.samples as f64
+        }
+    }
+
+    pub fn in_flight_avg(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.in_flight_sum as f64 / self.samples as f64
+        }
+    }
+
+    fn merge(&mut self, other: &GroupCell) {
+        self.samples += other.samples;
+        self.queue_sum += other.queue_sum;
+        self.queue_max = self.queue_max.max(other.queue_max);
+        self.in_flight_sum += other.in_flight_sum;
+        self.in_flight_max = self.in_flight_max.max(other.in_flight_max);
+        self.batches += other.batches;
+    }
+}
+
+/// The recorder. One per driver run (or per shard, merged at `finalize`).
+#[derive(Debug, Clone, Default)]
+pub struct ObsLog {
+    pub spec: ObsSpec,
+    /// (window, tenant) → counters. BTreeMap: deterministic iteration.
+    pub tenant_cells: BTreeMap<(u64, usize), TenantCell>,
+    /// (window, gpu, tenant) → gauges.
+    pub group_cells: BTreeMap<(u64, usize, usize), GroupCell>,
+    /// Sampled request spans (sorted at merge/seal).
+    pub spans: Vec<Span>,
+    /// Batch execution segments (sorted at merge/seal).
+    pub segs: Vec<BatchSeg>,
+    /// Pre-terminal modifier bits for *sampled* requests only, keyed
+    /// (tenant, idx); folded into the span at its terminal and dropped.
+    flags: BTreeMap<(usize, usize), u8>,
+}
+
+impl ObsLog {
+    pub fn new(spec: ObsSpec) -> Self {
+        ObsLog { spec, ..Default::default() }
+    }
+
+    /// A disabled recorder: every call below is a no-op.
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.spec.enabled
+    }
+
+    #[inline]
+    fn sampled(&self, idx: usize) -> bool {
+        idx as u64 % self.spec.span_sample.max(1) == 0
+    }
+
+    fn tcell(&mut self, at: Nanos, tenant: usize) -> &mut TenantCell {
+        let w = self.spec.window(at);
+        self.tenant_cells.entry((w, tenant)).or_default()
+    }
+
+    /// One request arrived (warmup or not — this is the offered load).
+    pub fn on_arrival(&mut self, at: Nanos, tenant: usize) {
+        if !self.enabled() {
+            return;
+        }
+        self.tcell(at, tenant).arrivals += 1;
+    }
+
+    /// One request served. `counted` mirrors the driver's warmup rule.
+    pub fn on_served(&mut self, s: Served) {
+        if !self.enabled() {
+            return;
+        }
+        if s.counted {
+            let cell = self.tcell(s.done, s.tenant);
+            cell.served += 1;
+            let e2e = s.parts.total();
+            cell.sum_ns += e2e as u128;
+            cell.max_ns = cell.max_ns.max(e2e);
+            cell.hist.add(e2e);
+        }
+        if self.sampled(s.idx) {
+            let mut flags = self.flags.remove(&(s.tenant, s.idx)).unwrap_or(0);
+            if s.degraded {
+                flags |= flag::DEGRADED;
+            }
+            if s.deferred {
+                flags |= flag::DEFERRED;
+            }
+            if !s.counted {
+                flags |= flag::WARMUP;
+            }
+            self.spans.push(Span {
+                tenant: s.tenant,
+                idx: s.idx,
+                arrival: s.arrival,
+                end: s.done,
+                parts: s.parts,
+                route: Some(Route {
+                    gpu: s.gpu,
+                    slice: s.slice,
+                    batch: s.batch,
+                    batch_size: s.batch_size,
+                }),
+                outcome: SpanOutcome::Served,
+                flags,
+            });
+        }
+    }
+
+    fn on_terminal(
+        &mut self,
+        at: Nanos,
+        tenant: usize,
+        idx: usize,
+        arrival: Nanos,
+        deferred: bool,
+        counted: bool,
+        outcome: SpanOutcome,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        if counted {
+            let cell = self.tcell(at, tenant);
+            match outcome {
+                SpanOutcome::Dropped => cell.dropped += 1,
+                SpanOutcome::TimedOut => cell.timed_out += 1,
+                SpanOutcome::Served => unreachable!("served has its own path"),
+            }
+        }
+        if self.sampled(idx) {
+            let mut flags = self.flags.remove(&(tenant, idx)).unwrap_or(0);
+            if deferred {
+                flags |= flag::DEFERRED;
+            }
+            if !counted {
+                flags |= flag::WARMUP;
+            }
+            self.spans.push(Span {
+                tenant,
+                idx,
+                arrival,
+                end: at,
+                parts: LatencyParts::default(),
+                route: None,
+                outcome,
+                flags,
+            });
+        }
+    }
+
+    /// One request dropped by admission (terminal).
+    pub fn on_dropped(
+        &mut self,
+        at: Nanos,
+        tenant: usize,
+        idx: usize,
+        arrival: Nanos,
+        deferred: bool,
+        counted: bool,
+    ) {
+        self.on_terminal(at, tenant, idx, arrival, deferred, counted, SpanOutcome::Dropped);
+    }
+
+    /// One request lost to a fault (terminal).
+    pub fn on_timed_out(
+        &mut self,
+        at: Nanos,
+        tenant: usize,
+        idx: usize,
+        arrival: Nanos,
+        deferred: bool,
+        counted: bool,
+    ) {
+        self.on_terminal(at, tenant, idx, arrival, deferred, counted, SpanOutcome::TimedOut);
+    }
+
+    /// One request newly parked in an admission queue.
+    pub fn on_deferred(&mut self, at: Nanos, tenant: usize, idx: usize, counted: bool) {
+        if !self.enabled() {
+            return;
+        }
+        if counted {
+            self.tcell(at, tenant).deferred += 1;
+        }
+        if self.sampled(idx) {
+            *self.flags.entry((tenant, idx)).or_default() |= flag::DEFERRED;
+        }
+    }
+
+    /// A crash-recovery retry attempt was issued for (tenant, idx).
+    pub fn mark_retry(&mut self, tenant: usize, idx: usize) {
+        if self.enabled() && self.sampled(idx) {
+            *self.flags.entry((tenant, idx)).or_default() |= flag::RETRIED;
+        }
+    }
+
+    /// A hedged duplicate was issued for (tenant, idx).
+    pub fn mark_hedge(&mut self, tenant: usize, idx: usize) {
+        if self.enabled() && self.sampled(idx) {
+            *self.flags.entry((tenant, idx)).or_default() |= flag::HEDGED;
+        }
+    }
+
+    /// One batch finished (or was crash-harvested) on a slice.
+    pub fn on_batch(&mut self, seg: BatchSeg) {
+        if !self.enabled() {
+            return;
+        }
+        let w = self.spec.window(seg.start);
+        self.group_cells.entry((w, seg.gpu, seg.tenant)).or_default().batches += 1;
+        self.segs.push(seg);
+    }
+
+    /// Sample a serving group's queue depth / in-flight gauge.
+    pub fn on_queue(&mut self, at: Nanos, gpu: usize, tenant: usize, queue: usize, in_flight: usize) {
+        if !self.enabled() {
+            return;
+        }
+        let w = self.spec.window(at);
+        let cell = self.group_cells.entry((w, gpu, tenant)).or_default();
+        cell.samples += 1;
+        cell.queue_sum += queue as u64;
+        cell.queue_max = cell.queue_max.max(queue as u64);
+        cell.in_flight_sum += in_flight as u64;
+        cell.in_flight_max = cell.in_flight_max.max(in_flight as u64);
+    }
+
+    /// Merge shard-local buffers into one log, deterministically: cells
+    /// add (shard keys are disjoint anyway, but adding is robust), span
+    /// and segment vectors concatenate in the order given, then sort on
+    /// total keys — the result is independent of shard layout.
+    pub fn merge(spec: ObsSpec, parts: impl IntoIterator<Item = ObsLog>) -> ObsLog {
+        let mut out = ObsLog::new(spec);
+        for part in parts {
+            for (k, v) in &part.tenant_cells {
+                out.tenant_cells.entry(*k).or_default().merge(v);
+            }
+            for (k, v) in &part.group_cells {
+                out.group_cells.entry(*k).or_default().merge(v);
+            }
+            out.spans.extend(part.spans);
+            out.segs.extend(part.segs);
+        }
+        out.seal();
+        out
+    }
+
+    /// Sort the event vectors on total keys: every request reaches exactly
+    /// one terminal, so (tenant, idx) orders spans totally; (gpu, tenant)
+    /// names one serving group and `seq` orders its dispatches.
+    pub fn seal(&mut self) {
+        self.spans.sort_by_key(|s| (s.tenant, s.idx));
+        self.segs.sort_by_key(|b| (b.gpu, b.tenant, b.seq, b.slice));
+        self.flags.clear();
+    }
+
+    /// Σ served over every window cell (must equal the run's
+    /// `stats.completed` — pinned by the reconciliation property test).
+    pub fn windowed_served_total(&self) -> u64 {
+        self.tenant_cells.values().map(|c| c.served).sum()
+    }
+
+    /// Σ (arrivals, served, dropped, timed_out, deferred) over all cells.
+    pub fn windowed_totals(&self) -> (u64, u64, u64, u64, u64) {
+        let mut t = (0, 0, 0, 0, 0);
+        for c in self.tenant_cells.values() {
+            t.0 += c.arrivals;
+            t.1 += c.served;
+            t.2 += c.dropped;
+            t.3 += c.timed_out;
+            t.4 += c.deferred;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::{millis, secs};
+
+    fn served(tenant: usize, idx: usize, at: Nanos, e2e: Nanos) -> Served {
+        Served {
+            tenant,
+            idx,
+            arrival: at.saturating_sub(e2e),
+            done: at,
+            parts: LatencyParts { execution: e2e, ..Default::default() },
+            gpu: 0,
+            slice: 0,
+            batch: 0,
+            batch_size: 1,
+            degraded: false,
+            deferred: false,
+            counted: true,
+        }
+    }
+
+    #[test]
+    fn disabled_log_records_nothing() {
+        let mut log = ObsLog::off();
+        log.on_arrival(0, 0);
+        log.on_served(served(0, 0, millis(5.0), millis(5.0)));
+        log.on_dropped(0, 0, 1, 0, false, true);
+        log.on_queue(0, 0, 0, 3, 1);
+        log.mark_retry(0, 0);
+        assert!(log.tenant_cells.is_empty());
+        assert!(log.group_cells.is_empty());
+        assert!(log.spans.is_empty());
+        assert!(log.segs.is_empty());
+    }
+
+    #[test]
+    fn cells_bucket_by_window_and_reconcile() {
+        let spec = ObsSpec::on(1.0, 1);
+        let mut log = ObsLog::new(spec);
+        for i in 0..10 {
+            let at = secs(0.3 * i as f64);
+            log.on_arrival(at, 0);
+            log.on_served(served(0, i, at + millis(4.0), millis(4.0)));
+        }
+        let (arr, srv, _, _, _) = log.windowed_totals();
+        assert_eq!((arr, srv), (10, 10));
+        assert_eq!(log.windowed_served_total(), 10);
+        assert!(log.tenant_cells.len() > 1, "multiple windows populated");
+        let c = log.tenant_cells.get(&(0, 0)).unwrap();
+        assert!(c.mean_ms() > 3.9 && c.mean_ms() < 4.1);
+        assert!(c.p95_ms() >= 4.0, "upper-edge quantile bounds the true p95");
+    }
+
+    #[test]
+    fn warmup_served_is_flagged_not_counted() {
+        let spec = ObsSpec::on(1.0, 1);
+        let mut log = ObsLog::new(spec);
+        let mut s = served(0, 0, millis(5.0), millis(5.0));
+        s.counted = false;
+        log.on_served(s);
+        assert_eq!(log.windowed_served_total(), 0);
+        assert_eq!(log.spans.len(), 1);
+        assert_ne!(log.spans[0].flags & flag::WARMUP, 0);
+    }
+
+    #[test]
+    fn sampling_is_by_index() {
+        let spec = ObsSpec::on(1.0, 4);
+        let mut log = ObsLog::new(spec);
+        for i in 0..16 {
+            log.on_served(served(0, i, millis(5.0), millis(1.0)));
+        }
+        assert_eq!(log.spans.len(), 4);
+        assert!(log.spans.iter().all(|s| s.idx % 4 == 0));
+        assert_eq!(log.windowed_served_total(), 16, "cells see every request");
+    }
+
+    #[test]
+    fn flags_fold_into_terminal_span() {
+        let spec = ObsSpec::on(1.0, 1);
+        let mut log = ObsLog::new(spec);
+        log.mark_retry(0, 3);
+        log.mark_hedge(0, 3);
+        log.on_timed_out(millis(9.0), 0, 3, millis(1.0), true, true);
+        assert_eq!(log.spans.len(), 1);
+        let s = &log.spans[0];
+        assert_eq!(s.outcome, SpanOutcome::TimedOut);
+        assert_ne!(s.flags & flag::RETRIED, 0);
+        assert_ne!(s.flags & flag::HEDGED, 0);
+        assert_ne!(s.flags & flag::DEFERRED, 0);
+        assert!(s.route.is_none());
+        let (_, _, _, to, _) = log.windowed_totals();
+        assert_eq!(to, 1);
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let spec = ObsSpec::on(1.0, 1);
+        let mk = |tenants: &[usize]| {
+            let mut log = ObsLog::new(spec);
+            for &t in tenants {
+                log.on_arrival(millis(t as f64), t);
+                log.on_served(served(t, t, millis(10.0 + t as f64), millis(2.0)));
+                log.on_batch(BatchSeg {
+                    gpu: t,
+                    slice: 0,
+                    tenant: t,
+                    seq: 0,
+                    start: millis(1.0),
+                    end: millis(2.0),
+                    size: 1,
+                    gpcs: 1,
+                    pw: 1.0,
+                    harvested: false,
+                });
+            }
+            log
+        };
+        let a = ObsLog::merge(spec, vec![mk(&[0, 2]), mk(&[1, 3])]);
+        let b = ObsLog::merge(spec, vec![mk(&[1, 3]), mk(&[0, 2])]);
+        assert_eq!(a.spans, b.spans);
+        assert_eq!(a.segs, b.segs);
+        assert_eq!(a.windowed_totals(), b.windowed_totals());
+    }
+
+    #[test]
+    fn lathist_quantiles_bound_from_above() {
+        let mut h = LatHist::default();
+        for _ in 0..99 {
+            h.add(millis(1.0));
+        }
+        h.add(millis(100.0));
+        assert!(h.quantile_ms(0.5) >= 1.0 && h.quantile_ms(0.5) < 3.0);
+        assert!(h.quantile_ms(1.0) >= 100.0);
+        assert_eq!(LatHist::default().quantile_ms(0.95), 0.0);
+    }
+}

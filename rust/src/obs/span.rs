@@ -1,0 +1,153 @@
+//! Sampled per-request spans and per-batch execution segments.
+//!
+//! A [`Span`] is the time-resolved twin of one `RunStats::record` call: the
+//! full `LatencyParts` pipeline (preprocess → batching → dispatch_wait →
+//! execution) plus route (GPU / slice / batch) and outcome. Spans are
+//! sampled deterministically 1-in-N by request index — never by RNG — so
+//! recording cannot perturb the simulation.
+//!
+//! A [`BatchSeg`] is one batch's occupancy of one slice: the timeline
+//! rectangles the Perfetto export draws, and the raster the per-window
+//! busy-GPC utilization and power curves integrate.
+
+use crate::clock::Nanos;
+use crate::metrics::LatencyParts;
+
+/// How a request's life ended. Deferral, retries, hedging and degraded
+/// service are *modifiers* on the way to one of these terminals and are
+/// carried in [`Span::flags`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Served to completion (possibly late, degraded, or via a retry).
+    Served,
+    /// Turned away by admission control and never served.
+    Dropped,
+    /// Lost to an injected fault (retry budget exhausted / no recovery).
+    TimedOut,
+}
+
+impl SpanOutcome {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpanOutcome::Served => "served",
+            SpanOutcome::Dropped => "dropped",
+            SpanOutcome::TimedOut => "timed_out",
+        }
+    }
+}
+
+/// Bit flags qualifying a span's journey (see [`Span::flags`]).
+pub mod flag {
+    /// Waited in an admission queue before (maybe) being served.
+    pub const DEFERRED: u8 = 1 << 0;
+    /// At least one crash-recovery retry attempt was issued for it.
+    pub const RETRIED: u8 = 1 << 1;
+    /// A hedged duplicate was issued to a second replica.
+    pub const HEDGED: u8 = 1 << 2;
+    /// Served on a slowdown-degraded GPU.
+    pub const DEGRADED: u8 = 1 << 3;
+    /// Finished inside the driver's warmup and is excluded from
+    /// `RunStats` aggregates (still shown on timelines).
+    pub const WARMUP: u8 = 1 << 4;
+}
+
+/// Where a served request actually ran.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    /// Global GPU index.
+    pub gpu: usize,
+    /// Slice (vGPU slot) index on that GPU.
+    pub slice: usize,
+    /// Per-(GPU, tenant) batch sequence number ([`BatchSeg::seq`]).
+    pub batch: u64,
+    /// Size of the batch it rode in.
+    pub batch_size: usize,
+}
+
+/// One sampled request, arrival to terminal state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Global tenant index.
+    pub tenant: usize,
+    /// Request index within the tenant's arrival sequence.
+    pub idx: usize,
+    pub arrival: Nanos,
+    /// Completion / drop / timeout instant.
+    pub end: Nanos,
+    /// Pipeline breakdown; zeroed for requests that never executed.
+    pub parts: LatencyParts,
+    /// `None` for requests that never reached a slice.
+    pub route: Option<Route>,
+    pub outcome: SpanOutcome,
+    /// OR of [`flag`] bits.
+    pub flags: u8,
+}
+
+/// Everything the recorder needs about one served request (bundled so the
+/// call sites stay readable and clippy stays quiet about arity).
+#[derive(Debug, Clone, Copy)]
+pub struct Served {
+    pub tenant: usize,
+    pub idx: usize,
+    pub arrival: Nanos,
+    pub done: Nanos,
+    pub parts: LatencyParts,
+    pub gpu: usize,
+    pub slice: usize,
+    pub batch: u64,
+    pub batch_size: usize,
+    pub degraded: bool,
+    pub deferred: bool,
+    /// Whether this completion is counted in `RunStats` (post-warmup by
+    /// the driver's completion-order rule). Warmup completions still get
+    /// spans (flagged [`flag::WARMUP`]) but stay out of the window cells.
+    pub counted: bool,
+}
+
+/// One batch's occupancy of one slice: `[start, end)` on `(gpu, slice)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchSeg {
+    /// Global GPU index.
+    pub gpu: usize,
+    /// Slice (vGPU slot) index on that GPU.
+    pub slice: usize,
+    /// Global tenant index.
+    pub tenant: usize,
+    /// Dispatch sequence number within this (GPU, tenant) serving group —
+    /// with `(gpu, tenant)` it is a total key, which the shard merge's
+    /// deterministic sort relies on.
+    pub seq: u64,
+    pub start: Nanos,
+    pub end: Nanos,
+    /// Requests in the batch.
+    pub size: usize,
+    /// GPCs the executing slice holds (raster weight for busy-GPC curves).
+    pub gpcs: usize,
+    /// Interference power weight in effect at dispatch (1.0 = neutral).
+    pub pw: f64,
+    /// True when a crash harvested the batch before completion: `end` is
+    /// the crash instant, not the modeled completion.
+    pub harvested: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_labels() {
+        assert_eq!(SpanOutcome::Served.label(), "served");
+        assert_eq!(SpanOutcome::Dropped.label(), "dropped");
+        assert_eq!(SpanOutcome::TimedOut.label(), "timed_out");
+    }
+
+    #[test]
+    fn flags_are_distinct_bits() {
+        let all = [flag::DEFERRED, flag::RETRIED, flag::HEDGED, flag::DEGRADED, flag::WARMUP];
+        for (i, a) in all.iter().enumerate() {
+            for b in &all[i + 1..] {
+                assert_eq!(a & b, 0);
+            }
+        }
+    }
+}

@@ -50,6 +50,7 @@ use crate::mig::{
     ServiceModel, Slice, TenantSpec,
 };
 use crate::models::{ModelId, ModelKind, ModelSpec};
+use crate::obs::{BatchSeg, ObsLog, ObsSpec, Served};
 use crate::preprocess::CpuPool;
 use crate::sim::EventQueue;
 use crate::util::Rng;
@@ -223,6 +224,12 @@ pub struct ClusterConfig {
     /// runs (reconfig/admission/consolidation/faults) always collapse to
     /// one heap — see [`run`].
     pub shards: Option<usize>,
+    /// Observability capture (off by default). Disabled: every hook
+    /// early-returns and outcomes are byte-identical to a build without
+    /// the field. Enabled: [`ClusterOutcome::obs`] carries the merged
+    /// [`ObsLog`], deterministic across `shards` and worker counts
+    /// (recording keys are global ids, merged in shard order).
+    pub obs: ObsSpec,
 }
 
 impl ClusterConfig {
@@ -261,6 +268,7 @@ impl ClusterConfig {
                 consolidate: false,
                 faults: None,
                 shards: None,
+                obs: ObsSpec::default(),
             },
         }
     }
@@ -437,6 +445,12 @@ impl ClusterConfigBuilder {
         self
     }
 
+    /// Enable observability capture ([`ClusterConfig::obs`]).
+    pub fn obs(mut self, obs: ObsSpec) -> Self {
+        self.cfg.obs = obs;
+        self
+    }
+
     pub fn build(self) -> ClusterConfig {
         self.cfg
     }
@@ -507,11 +521,27 @@ pub struct ClusterOutcome {
     /// Invariant probe: completions recorded on a failed group. The DES
     /// harvests a crashed group's in-flight work, so this must stay 0.
     pub served_by_failed: u64,
+    /// Observability capture; `Some` iff [`ClusterConfig::obs`] was
+    /// enabled. Shard buffers merged in shard order ([`ObsLog::merge`]),
+    /// so the bytes any exporter derives are shard/jobs-invariant.
+    pub obs: Option<Box<ObsLog>>,
 }
 
 impl ClusterOutcome {
     pub fn tenant_stats(&self, i: usize) -> &RunStats {
         &self.per_tenant[i].1
+    }
+
+    /// Run the accounting-conservation audit on every tenant
+    /// ([`RunStats::audit`]): served + dropped + timed-out + warmup
+    /// exclusions must equal injected arrivals, and the deferred ledger
+    /// must nest (`deferred_served ≤ deferred ≤ arrivals`). Errors name
+    /// the first offending tenant.
+    pub fn audit(&self) -> crate::Result<()> {
+        for (ti, (_, s)) in self.per_tenant.iter().enumerate() {
+            s.audit().map_err(|e| anyhow::anyhow!("tenant {ti}: {e}"))?;
+        }
+        Ok(())
     }
 
     /// Post-warmup completions across all tenants.
@@ -637,6 +667,11 @@ struct BatchMeta {
     pw: f64,
     /// Dispatched under a slowdown fault (served-degraded accounting).
     degraded: bool,
+    /// Slice (local to the group) the batch ran on — the obs segment's
+    /// track id.
+    slot: usize,
+    /// Dispatch sequence number within the group (obs segment ordering).
+    seq: u64,
 }
 
 /// One (tenant, GPU) serving group: the tenant's slices on that GPU share
@@ -660,6 +695,9 @@ struct Group {
     /// curve power multiplier and interference penalty. Equal to
     /// `busy_ns` bit-for-bit under the flat model (weight 1.0).
     busy_pw_ns: u128,
+    /// Batches dispatched by this group so far (obs segment sequencing;
+    /// maintained unconditionally — a plain counter, behavior-neutral).
+    dispatched: u64,
     /// Execution-jitter stream, derived from the group's GLOBAL
     /// (GPU, tenant) identity ([`group_exec_rng`]) so jitter draws are a
     /// pure function of the group — identical however the fleet is
@@ -810,48 +848,87 @@ struct TenantState {
     retries: u64,
     hedges: u64,
     served_degraded: u64,
+    /// Terminals the warmup rules excluded from the counters above:
+    /// completions inside the completion-order window plus drops/timeouts
+    /// with a warmup arrival index. Closes the conservation law
+    /// `completed + dropped + timed_out + warmup_skipped == arrivals`
+    /// that [`RunStats::audit`] checks.
+    warmup_skipped: u64,
 }
 
 impl TenantState {
     /// Count a dropped request, unless it falls in the warmup window
     /// (arrival index as the proxy) — the latency stats skip warmup
     /// completions, so the violation metric must skip warmup drops too.
-    /// Idempotent: a request already terminal stays terminal.
-    fn drop_request(&mut self, idx: usize) {
+    /// Idempotent: a request already terminal stays terminal. Returns
+    /// `true` iff this call performed the terminal transition.
+    fn drop_request(&mut self, idx: usize) -> bool {
         if self.state[idx] != ReqState::Pending {
-            return;
+            return false;
         }
         self.state[idx] = ReqState::Dropped;
         if idx >= self.warmup {
             self.dropped += 1;
+        } else {
+            self.warmup_skipped += 1;
         }
+        true
     }
 
     /// A request lost to a fault whose retry budget (or horizon) ran
-    /// out. Same warmup and idempotence rules as
+    /// out. Same warmup, idempotence and return-value rules as
     /// [`TenantState::drop_request`].
-    fn timeout_request(&mut self, idx: usize) {
+    fn timeout_request(&mut self, idx: usize) -> bool {
         if self.state[idx] != ReqState::Pending {
-            return;
+            return false;
         }
         self.state[idx] = ReqState::TimedOut;
         if idx >= self.warmup {
             self.timed_out += 1;
+        } else {
+            self.warmup_skipped += 1;
         }
+        true
     }
 
     /// Park a request in the admission queue instead of dropping it
     /// (same warmup rule as [`TenantState::drop_request`]; a request
-    /// deferred more than once is counted once).
-    fn defer_request(&mut self, idx: usize) {
+    /// deferred more than once is counted once). Returns `true` iff the
+    /// request was newly deferred.
+    fn defer_request(&mut self, idx: usize) -> bool {
         self.deferred_q.push(idx);
         if !self.was_deferred[idx] {
             self.was_deferred[idx] = true;
             if idx >= self.warmup {
                 self.deferred += 1;
             }
+            return true;
         }
+        false
     }
+}
+
+/// Terminal-transition helpers pairing the [`TenantState`] bookkeeping
+/// with the obs terminal record (fired only on the transition that wins,
+/// so sampled spans reach exactly one terminal). `tg` is the GLOBAL
+/// tenant id.
+fn obs_drop(ts: &mut TenantState, obs: &mut ObsLog, tg: usize, idx: usize, at: Nanos) {
+    let deferred = ts.was_deferred[idx];
+    if ts.drop_request(idx) {
+        obs.on_dropped(at, tg, idx, ts.arrivals[idx].0, deferred, idx >= ts.warmup);
+    }
+}
+
+fn obs_timeout(ts: &mut TenantState, obs: &mut ObsLog, tg: usize, idx: usize, at: Nanos) {
+    let deferred = ts.was_deferred[idx];
+    if ts.timeout_request(idx) {
+        obs.on_timed_out(at, tg, idx, ts.arrivals[idx].0, deferred, idx >= ts.warmup);
+    }
+}
+
+fn obs_defer(ts: &mut TenantState, obs: &mut ObsLog, tg: usize, idx: usize, at: Nanos) {
+    let newly = ts.defer_request(idx);
+    obs.on_deferred(at, tg, idx, newly && idx >= ts.warmup);
 }
 
 fn build_policy(
@@ -968,7 +1045,9 @@ fn dispatch_ready(
         grp.slice_free[slot] = done;
         grp.busy_ns += exec as u128;
         grp.busy_pw_ns += weighted_ns(exec, pw);
-        let meta = BatchMeta { done, exec, pw, degraded: slow > 1.0 };
+        let meta =
+            BatchMeta { done, exec, pw, degraded: slow > 1.0, slot, seq: grp.dispatched };
+        grp.dispatched += 1;
         let idx = match grp.free_slots.pop() {
             Some(slot) => {
                 debug_assert!(grp.in_flight[slot].is_none());
@@ -1151,6 +1230,7 @@ fn ensure_group(
         armed_tick: None,
         busy_ns: 0,
         busy_pw_ns: 0,
+        dispatched: 0,
         // Late-admission groups only arise under the coupled policies
         // (reconfig/admission/consolidation), which always run as a
         // single identity shard, so local ids here ARE global ids.
@@ -1399,6 +1479,12 @@ fn run_inner(
 
     let mut late_admissions = 0u64;
 
+    // Observability recorder. Disabled (the default): every hook
+    // early-returns, draws no RNG, schedules no events — byte-identity
+    // with capture-free builds. All keys recorded through `ctx` are
+    // GLOBAL ids, so `finalize` merges shard logs by concatenation.
+    let mut obs = ObsLog::new(cfg.obs);
+
     // Tenant state + lazily-pulled workloads: each tenant exposes one
     // bounded [`ArrivalStream`]; the driver loop below injects from it
     // and nothing is materialized up front.
@@ -1450,6 +1536,7 @@ fn run_inner(
             retries: 0,
             hedges: 0,
             served_degraded: 0,
+            warmup_skipped: 0,
         });
     }
 
@@ -1499,6 +1586,7 @@ fn run_inner(
                 armed_tick: None,
                 busy_ns: 0,
                 busy_pw_ns: 0,
+                dispatched: 0,
                 exec: group_exec_rng(cfg.seed, ctx.gpu_ids[g], ctx.tenant_ids[ti]),
                 failed: false,
             });
@@ -1583,6 +1671,7 @@ fn run_inner(
             ts.routed.push(usize::MAX);
             ts.was_deferred.push(false);
             ts.state.push(ReqState::Pending);
+            obs.on_arrival(now, ctx.tenant_ids[ti]);
             if let Some(c) = ctrl.as_mut() {
                 c.observe_arrival(ti);
             }
@@ -1596,9 +1685,9 @@ fn run_inner(
                     }
                 }
             } else if cfg.admission {
-                tenants[ti].defer_request(idx);
+                obs_defer(&mut tenants[ti], &mut obs, ctx.tenant_ids[ti], idx, now);
             } else {
-                tenants[ti].drop_request(idx);
+                obs_drop(&mut tenants[ti], &mut obs, ctx.tenant_ids[ti], idx, now);
             }
         }
         let Some((now, ev)) = q.pop() else {
@@ -1666,11 +1755,17 @@ fn run_inner(
                             // Park it; it re-enters (and re-preprocesses,
                             // as a resubmission would) once capacity
                             // returns.
-                            tenants[tenant].defer_request(idx);
+                            obs_defer(
+                                &mut tenants[tenant], &mut obs, ctx.tenant_ids[tenant],
+                                idx, now,
+                            );
                             continue;
                         }
                         None => {
-                            tenants[tenant].drop_request(idx);
+                            obs_drop(
+                                &mut tenants[tenant], &mut obs, ctx.tenant_ids[tenant],
+                                idx, now,
+                            );
                             continue;
                         }
                     }
@@ -1685,6 +1780,16 @@ fn run_inner(
                 });
                 dispatch_ready(gi, now, &mut groups, &tenants, q, &frt.slow);
                 arm_tick(gi, now, &mut groups, q);
+                if obs.enabled() {
+                    let grp = &groups[gi];
+                    obs.on_queue(
+                        now,
+                        ctx.gpu_ids[grp.gpu],
+                        ctx.tenant_ids[tenant],
+                        grp.outstanding,
+                        grp.in_flight.len() - grp.free_slots.len(),
+                    );
+                }
             }
             Ev::BatchTick { group } => {
                 groups[group].armed_tick = None;
@@ -1708,10 +1813,35 @@ fn run_inner(
                     // completion can land while it is failed.
                     frt.served_by_failed += batch.size() as u64;
                 }
-                let degraded = groups[group].in_flight_meta[batch_idx].degraded;
+                let meta = groups[group].in_flight_meta[batch_idx];
+                let degraded = meta.degraded;
                 groups[group].free_slots.push(batch_idx);
                 let bsize = batch.size();
                 groups[group].outstanding = groups[group].outstanding.saturating_sub(bsize);
+                let gg = ctx.gpu_ids[groups[group].gpu];
+                let tg = ctx.tenant_ids[ti];
+                if obs.enabled() {
+                    obs.on_batch(BatchSeg {
+                        gpu: gg,
+                        slice: meta.slot,
+                        tenant: tg,
+                        seq: meta.seq,
+                        start: now.saturating_sub(meta.exec),
+                        end: now,
+                        size: bsize,
+                        gpcs: cfg.tenants[ti].slice.gpcs,
+                        pw: meta.pw,
+                        harvested: false,
+                    });
+                    let grp = &groups[group];
+                    obs.on_queue(
+                        now,
+                        gg,
+                        tg,
+                        grp.outstanding,
+                        grp.in_flight.len() - grp.free_slots.len(),
+                    );
+                }
                 let ts = &mut tenants[ti];
                 let padded = padded_len(&ts.buckets, &batch);
                 let exec_model = secs(ts.sm.exec_secs(bsize, padded));
@@ -1731,7 +1861,32 @@ fn run_inner(
                     if ts.was_deferred[i] && i >= ts.warmup {
                         ts.deferred_served += 1;
                     }
-                    if ts.completed <= ts.warmup {
+                    // Completion-ORDER warmup rule (distinct from the
+                    // drop/defer arrival-index rule above).
+                    let counted = ts.completed > ts.warmup;
+                    if obs.enabled() {
+                        obs.on_served(Served {
+                            tenant: tg,
+                            idx: i,
+                            arrival: ts.arrivals[i].0,
+                            done: now,
+                            parts: LatencyParts {
+                                preprocess: ts.preproc_done[i] - ts.arrivals[i].0,
+                                batching: batch.formed.saturating_sub(ts.preproc_done[i]),
+                                dispatch_wait: since_formed - exec_ns,
+                                execution: exec_ns,
+                            },
+                            gpu: gg,
+                            slice: meta.slot,
+                            batch: meta.seq,
+                            batch_size: bsize,
+                            degraded,
+                            deferred: ts.was_deferred[i],
+                            counted,
+                        });
+                    }
+                    if !counted {
+                        ts.warmup_skipped += 1;
                         continue;
                     }
                     if degraded {
@@ -1904,6 +2059,23 @@ fn run_inner(
                                 groups[gi].busy_pw_ns = groups[gi]
                                     .busy_pw_ns
                                     .saturating_sub(weighted_ns(refund, meta.pw));
+                                if obs.enabled() {
+                                    // Truncated segment: the slice stopped
+                                    // burning at the crash, not at the
+                                    // batch's scheduled completion.
+                                    obs.on_batch(BatchSeg {
+                                        gpu: ctx.gpu_ids[g],
+                                        slice: meta.slot,
+                                        tenant: ctx.tenant_ids[groups[gi].tenant],
+                                        seq: meta.seq,
+                                        start: meta.done.saturating_sub(meta.exec),
+                                        end: now,
+                                        size: b.size(),
+                                        gpcs: cfg.tenants[groups[gi].tenant].slice.gpcs,
+                                        pw: meta.pw,
+                                        harvested: true,
+                                    });
+                                }
                                 lost.extend(b.requests);
                             }
                             groups[gi].outstanding =
@@ -1916,12 +2088,16 @@ fn run_inner(
                                     // and re-submits with backoff.
                                     Some(p) if p.max_retries > 0 => {
                                         tenants[ti].retries += 1;
+                                        obs.mark_retry(ctx.tenant_ids[ti], idx);
                                         q.schedule_in(
                                             secs(p.timeout_s + p.backoff_delay_s(0)),
                                             Ev::Retry { tenant: ti, idx, attempt: 0 },
                                         );
                                     }
-                                    _ => tenants[ti].timeout_request(idx),
+                                    _ => obs_timeout(
+                                        &mut tenants[ti], &mut obs, ctx.tenant_ids[ti],
+                                        idx, now,
+                                    ),
                                 }
                             }
                         }
@@ -2141,19 +2317,22 @@ fn run_inner(
                     // Re-issued: a fresh preprocess + enqueue, exactly
                     // like a client re-submission.
                 } else if cfg.admission {
-                    tenants[tenant].defer_request(idx);
+                    obs_defer(&mut tenants[tenant], &mut obs, ctx.tenant_ids[tenant], idx, now);
                 } else if let Some(p) = recovery {
                     if attempt + 1 < p.max_retries {
                         tenants[tenant].retries += 1;
+                        obs.mark_retry(ctx.tenant_ids[tenant], idx);
                         q.schedule_in(
                             secs(p.timeout_s + p.backoff_delay_s(attempt + 1)),
                             Ev::Retry { tenant, idx, attempt: attempt + 1 },
                         );
                     } else {
-                        tenants[tenant].timeout_request(idx);
+                        obs_timeout(
+                            &mut tenants[tenant], &mut obs, ctx.tenant_ids[tenant], idx, now,
+                        );
                     }
                 } else {
-                    tenants[tenant].timeout_request(idx);
+                    obs_timeout(&mut tenants[tenant], &mut obs, ctx.tenant_ids[tenant], idx, now);
                 }
             }
             Ev::Hedge { tenant, idx } => {
@@ -2184,6 +2363,7 @@ fn run_inner(
                     continue;
                 };
                 tenants[tenant].hedges += 1;
+                obs.mark_hedge(ctx.tenant_ids[tenant], idx);
                 // The duplicate re-routes and re-preprocesses; whichever
                 // copy completes first wins (the loser is discarded by
                 // the terminal-state guard at ExecDone).
@@ -2257,14 +2437,15 @@ fn run_inner(
     // repair never comes): anything still pending after that is a
     // timed-out request, so conservation stays exact — every arrival is
     // served, dropped, or timed out, exactly once.
-    for ts in &mut tenants {
+    for (ti, ts) in tenants.iter_mut().enumerate() {
+        let tg = ctx.tenant_ids[ti];
         let waiting = std::mem::take(&mut ts.deferred_q);
         for idx in waiting {
-            ts.drop_request(idx);
+            obs_drop(ts, &mut obs, tg, idx, horizon);
         }
         for idx in 0..ts.state.len() {
             if ts.state[idx] == ReqState::Pending {
-                ts.timeout_request(idx);
+                obs_timeout(ts, &mut obs, tg, idx, horizon);
             }
         }
         ts.stats.dropped = ts.dropped;
@@ -2274,6 +2455,16 @@ fn run_inner(
         ts.stats.retries = ts.retries;
         ts.stats.hedges = ts.hedges;
         ts.stats.served_degraded = ts.served_degraded;
+        // Terminal conservation: every injected arrival is served, dropped
+        // or timed out exactly once; the warmup rules' exclusions land in
+        // `warmup_skipped`, making the audit identity exact.
+        ts.stats.arrivals = ts.state.len() as u64;
+        ts.stats.warmup_skipped = ts.warmup_skipped;
+        debug_assert!(
+            ts.stats.audit().is_ok(),
+            "tenant {tg} accounting audit failed: {:?}",
+            ts.stats.audit()
+        );
     }
 
     Ok(PartOut {
@@ -2296,6 +2487,7 @@ fn run_inner(
         fault_records: frt.records,
         reconfig_aborts: frt.aborts,
         served_by_failed: frt.served_by_failed,
+        obs,
     })
 }
 
@@ -2321,6 +2513,7 @@ struct PartOut {
     fault_records: Vec<FaultRecord>,
     reconfig_aborts: u64,
     served_by_failed: u64,
+    obs: ObsLog,
 }
 
 /// Merge shard outputs into one global [`ClusterOutcome`].
@@ -2407,7 +2600,9 @@ fn finalize(
     let mut hedges = vec![0u64; nt];
     let mut served_degraded = vec![0u64; nt];
     let mut per_tenant: Vec<Option<(ModelId, RunStats)>> = (0..nt).map(|_| None).collect();
+    let mut obs_parts = Vec::new();
     for (ctx, o) in parts.iter().zip(outs.into_iter()) {
+        obs_parts.push(o.obs);
         events += o.events;
         downtime += o.downtime;
         late_admissions += o.late_admissions;
@@ -2470,6 +2665,11 @@ fn finalize(
         fault_records,
         reconfig_aborts,
         served_by_failed,
+        obs: if cfg.obs.enabled {
+            Some(Box::new(ObsLog::merge(cfg.obs, obs_parts)))
+        } else {
+            None
+        },
     }
 }
 
@@ -2765,6 +2965,51 @@ mod tests {
         for ((_, s1), (_, s2)) in a.per_tenant.iter().zip(b.per_tenant.iter()) {
             assert_eq!(s1.p95_ms(), s2.p95_ms());
         }
+    }
+
+    /// Obs capture must be a pure observer: enabling it cannot move a
+    /// single event or completion, and the windowed series it records
+    /// must reconcile exactly with the headline counters.
+    #[test]
+    fn obs_capture_reconciles_and_does_not_perturb() {
+        let sys = PrebaConfig::new();
+        let base_cfg = two_tenant_cfg();
+        let base = run(&base_cfg, &sys).unwrap();
+        assert!(base.obs.is_none(), "obs off by default");
+        let mut on_cfg = two_tenant_cfg();
+        on_cfg.obs = ObsSpec::on(0.5, 4);
+        let on = run(&on_cfg, &sys).unwrap();
+        assert_outcomes_identical(&base, &on, "obs on vs off");
+        let log = on.obs.as_ref().expect("obs enabled");
+        assert_eq!(log.windowed_served_total(), on.completed_total(), "windowed vs headline");
+        let (arrivals, ..) = log.windowed_totals();
+        let injected: u64 = on_cfg.tenants.iter().map(|t| t.requests as u64).sum();
+        assert_eq!(arrivals, injected, "every arrival windowed");
+        assert!(!log.spans.is_empty() && !log.segs.is_empty(), "sampled spans + segments");
+        on.audit().unwrap();
+    }
+
+    /// Obs content is shard- and jobs-invariant: the merged log from a
+    /// sharded parallel run matches the single-heap run byte-for-byte
+    /// (compared structurally here; the export layer is pure over this).
+    #[test]
+    fn obs_capture_is_shard_invariant() {
+        let sys = PrebaConfig::new();
+        let mk = |shards| {
+            let mut cfg = disjoint_pair_cfg();
+            cfg.obs = ObsSpec::on(0.5, 4);
+            cfg.shards = shards;
+            cfg
+        };
+        let serial = run(&mk(1), &sys).unwrap();
+        let sharded =
+            crate::util::par::with_jobs(4, || run(&mk(0), &sys)).unwrap();
+        assert_outcomes_identical(&serial, &sharded, "obs shards 1 vs auto");
+        let (a, b) = (serial.obs.as_ref().unwrap(), sharded.obs.as_ref().unwrap());
+        assert_eq!(a.tenant_cells, b.tenant_cells, "tenant cells");
+        assert_eq!(a.group_cells, b.group_cells, "group cells");
+        assert_eq!(a.spans, b.spans, "spans");
+        assert_eq!(a.segs, b.segs, "segs");
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::metrics::{LatencyParts, RunStats};
 use crate::mig::{GpuClass, MigConfig, ServiceModel};
 use crate::models::{ModelId, ModelKind};
+use crate::obs::{BatchSeg, ObsLog, ObsSpec, Served};
 use crate::preprocess::CpuPool;
 use crate::dpu::Dpu;
 use crate::sim::EventQueue;
@@ -75,6 +76,10 @@ pub struct SimConfig {
     /// End-to-end SLA the reconfig controller plans against (and the
     /// violation-rate metric uses), ms.
     pub sla_ms: f64,
+    /// Observability capture (off by default). When disabled every hook
+    /// early-returns and the run is byte-identical to a build without
+    /// this field; when enabled the outcome carries an [`ObsLog`].
+    pub obs: ObsSpec,
 }
 
 impl SimConfig {
@@ -93,6 +98,7 @@ impl SimConfig {
             profile: None,
             reconfig: None,
             sla_ms: 50.0,
+            obs: ObsSpec::default(),
         }
     }
 
@@ -138,6 +144,9 @@ pub struct SimOutcome {
     /// Partition the run ended on (== the configured one without a
     /// controller).
     pub final_mig: MigConfig,
+    /// Observability capture; `Some` iff [`SimConfig::obs`] was enabled.
+    /// Boxed so the disabled path stays one pointer wide.
+    pub obs: Option<Box<ObsLog>>,
 }
 
 impl SimOutcome {
@@ -172,8 +181,7 @@ enum Ev {
     /// Re-check batching deadlines.
     BatchTick,
     ExecDone {
-        /// Worker that ran the batch (kept for event-log debugging).
-        #[allow(dead_code)]
+        /// Worker that ran the batch (the span's slice id).
         vgpu: usize,
         batch_idx: usize,
     },
@@ -334,6 +342,13 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
     let mut armed_tick: Option<Nanos> = None;
     let mut horizon: Nanos = 0;
     let mut completed = 0usize;
+    // Observability capture: every hook early-returns when disabled, so
+    // the disabled path touches no RNG and schedules no events. `slot_seq`
+    // remembers each in-flight slab slot's batch sequence number so the
+    // ExecDone span can name the batch that served it.
+    let mut obs = ObsLog::new(cfg.obs);
+    let mut batch_seq: u64 = 0;
+    let mut slot_seq: Vec<u64> = Vec::new();
 
     // Dispatch a batch to the least-loaded vGPU. Curve-aware: execution
     // stretches by the batch-bucket latency multiplier times the uncore
@@ -353,7 +368,11 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                     exec_rng: &mut Rng,
                     sm: &ServiceModel,
                     buckets: &Bucketizer,
-                    curve: &crate::models::CurveView| {
+                    curve: &crate::models::CurveView,
+                    obs: &mut ObsLog,
+                    batch_seq: &mut u64,
+                    slot_seq: &mut Vec<u64>,
+                    gpcs: usize| {
         let (vgpu, &free) =
             vgpu_free.iter().enumerate().min_by_key(|(_, &t)| t).expect("vgpus");
         let start = now.max(free);
@@ -376,6 +395,20 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
         } else {
             (exec as f64 * pw).round().max(0.0) as u128
         };
+        let seq = *batch_seq;
+        *batch_seq += 1;
+        obs.on_batch(BatchSeg {
+            gpu: 0,
+            slice: vgpu,
+            tenant: 0,
+            seq,
+            start,
+            end: done,
+            size: batch.size(),
+            gpcs,
+            pw,
+            harvested: false,
+        });
         let idx = match free_slots.pop() {
             Some(slot) => {
                 debug_assert!(in_flight[slot].is_none());
@@ -387,6 +420,10 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 in_flight.len() - 1
             }
         };
+        if slot_seq.len() <= idx {
+            slot_seq.resize(idx + 1, 0);
+        }
+        slot_seq[idx] = seq;
         q.schedule(done, Ev::ExecDone { vgpu, batch_idx: idx });
     };
 
@@ -414,6 +451,7 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 preproc_done: 0,
             });
             arrivals_seen += 1;
+            obs.on_arrival(now, 0);
             if let Some(c) = ctrl.as_mut() {
                 c.observe_arrival(0);
             }
@@ -452,7 +490,8 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                         dispatch(
                             batch, now, &mut vgpu_free, &mut vgpu_busy, &mut vgpu_busy_pw,
                             &mut in_flight_batches, &mut free_slots, q, &mut exec_rng, &sm,
-                            &buckets, &curve,
+                            &buckets, &curve, &mut obs, &mut batch_seq, &mut slot_seq,
+                            mig_now.gpcs_per_vgpu(),
                         );
                     }
                     // Arm a tick only when this enqueue moved the earliest
@@ -477,7 +516,8 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                         dispatch(
                             batch, now, &mut vgpu_free, &mut vgpu_busy, &mut vgpu_busy_pw,
                             &mut in_flight_batches, &mut free_slots, q, &mut exec_rng, &sm,
-                            &buckets, &curve,
+                            &buckets, &curve, &mut obs, &mut batch_seq, &mut slot_seq,
+                            mig_now.gpcs_per_vgpu(),
                         );
                     }
                     if let Some(deadline) = batcher.next_deadline() {
@@ -486,7 +526,7 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                     }
                 }
             }
-            Ev::ExecDone { vgpu: _, batch_idx } => {
+            Ev::ExecDone { vgpu, batch_idx } => {
                 let batch = in_flight_batches[batch_idx].take().expect("batch completed twice");
                 free_slots.push(batch_idx);
                 horizon = horizon.max(now);
@@ -501,9 +541,10 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                 let exec_ns = exec_model.min(since_formed);
                 for r in &batch.requests {
                     completed += 1;
-                    if completed <= warmup {
-                        continue;
-                    }
+                    // Completion-ORDER warmup rule: the first `warmup`
+                    // completions are excluded from stats (but still
+                    // observable as WARMUP-flagged spans).
+                    let counted = completed > warmup;
                     let rs = &reqs[r.id as usize];
                     let parts = LatencyParts {
                         preprocess: rs.preproc_done - rs.arrival,
@@ -511,7 +552,23 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                         dispatch_wait: since_formed - exec_ns,
                         execution: exec_ns,
                     };
-                    stats.record(parts, now, bsize);
+                    obs.on_served(Served {
+                        tenant: 0,
+                        idx: r.id as usize,
+                        arrival: rs.arrival,
+                        done: now,
+                        parts,
+                        gpu: 0,
+                        slice: vgpu,
+                        batch: slot_seq[batch_idx],
+                        batch_size: bsize,
+                        degraded: false,
+                        deferred: false,
+                        counted,
+                    });
+                    if counted {
+                        stats.record(parts, now, bsize);
+                    }
                 }
                 // Return the request vector to the batcher's pool so the
                 // next formation reuses the allocation.
@@ -570,7 +627,8 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
                     dispatch(
                         batch, now, &mut vgpu_free, &mut vgpu_busy, &mut vgpu_busy_pw,
                         &mut in_flight_batches, &mut free_slots, q, &mut exec_rng, &sm,
-                        &buckets, &curve,
+                        &buckets, &curve, &mut obs, &mut batch_seq, &mut slot_seq,
+                        mig_now.gpcs_per_vgpu(),
                     );
                 }
                 if let Some(deadline) = batcher.next_deadline() {
@@ -635,6 +693,20 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
         base_j: em.base_energy(horizon_s),
     };
 
+    // Terminal conservation (satellite invariant): the single-GPU driver
+    // has no drops or timeouts, so post-warmup completions plus the
+    // warmup-skipped ones must equal the injected arrivals exactly.
+    stats.arrivals = reqs.len() as u64;
+    stats.warmup_skipped = completed.min(warmup) as u64;
+    debug_assert!(stats.audit().is_ok(), "{:?}", stats.audit());
+
+    let obs = if cfg.obs.enabled {
+        obs.seal();
+        Some(Box::new(obs))
+    } else {
+        None
+    };
+
     SimOutcome {
         events,
         cpu_util: match cfg.preproc {
@@ -651,6 +723,7 @@ pub fn run(cfg: &SimConfig, sys: &PrebaConfig) -> SimOutcome {
         reconfig_events,
         final_mig: mig_now,
         stats,
+        obs,
     }
 }
 
@@ -739,6 +812,29 @@ mod tests {
         assert_eq!(a.p95_ms(), b.p95_ms());
         assert_eq!(a.horizon, b.horizon);
         assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn obs_capture_reconciles_and_does_not_perturb() {
+        let (cfg, sys) = base_cfg(ModelId::MobileNet, PreprocMode::Dpu);
+        let base = run(&cfg, &sys);
+        assert!(base.obs.is_none(), "obs is off by default");
+        let mut on = cfg.clone();
+        on.obs = ObsSpec::on(0.5, 4);
+        let traced = run(&on, &sys);
+        // Enabling capture must not perturb the simulation.
+        assert_eq!(traced.stats.completed, base.stats.completed);
+        assert_eq!(traced.p95_ms(), base.p95_ms());
+        assert_eq!(traced.horizon, base.horizon);
+        assert_eq!(traced.events, base.events);
+        let log = traced.obs.expect("enabled run carries a log");
+        // Windowed cells reconcile with the run's own counters.
+        assert_eq!(log.windowed_served_total(), traced.stats.completed);
+        let (arrivals, _, dropped, timed_out, _) = log.windowed_totals();
+        assert_eq!(arrivals, cfg.requests as u64);
+        assert_eq!(dropped + timed_out, 0);
+        assert!(!log.spans.is_empty(), "1-in-4 sampling captured spans");
+        assert!(!log.segs.is_empty(), "dispatch recorded batch segments");
     }
 
     #[test]

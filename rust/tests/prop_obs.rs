@@ -1,0 +1,431 @@
+//! Properties of the observability layer (`obs::*` plus the driver
+//! wiring): the accounting-conservation audit under random fault and
+//! admission schedules, obs-capture neutrality (enabling recording never
+//! perturbs outcomes), obs-disabled determinism across shard layouts and
+//! worker counts, byte-determinism of the exported artifacts, trace-event
+//! schema sanity, and the `--obs` / `preba report` CLI round trip
+//! (including the faults timeline the Perfetto recipe relies on).
+
+use std::process::Command;
+
+use preba::clock::secs;
+use preba::config::PrebaConfig;
+use preba::fault::{FaultSchedule, FaultSpec};
+use preba::mig::{MigConfig, PackStrategy, ServiceModel, Slice};
+use preba::models::ModelId;
+use preba::obs::{EventMark, ExportInput, Fingerprint, GpuDesc, ObsSpec};
+use preba::prop_assert;
+use preba::server::cluster::{self, ClusterConfig, ClusterOutcome, ClusterTenant};
+use preba::server::{sim_driver, PreprocMode, SimConfig};
+use preba::util::json::{parse, Json};
+use preba::util::prop::check;
+use preba::util::Rng;
+
+/// A small random fleet exercising every accounting path: variable
+/// warmup (both exclusion rules), optional admission control, and an
+/// optional seeded stochastic fault schedule.
+fn random_cfg(rng: &mut Rng, sys: &PrebaConfig) -> ClusterConfig {
+    let horizon_s = 2.0 + rng.f64() * 2.0;
+    let n_gpus = 2 + rng.below(2) as usize;
+    let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+    let tenants: Vec<ClusterTenant> = (0..2)
+        .map(|_| {
+            let slices = 2 + rng.below(3) as usize;
+            let rate = rng.range_f64(0.25, 0.55) * slices as f64 * u;
+            let mut t =
+                ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), slices, rate);
+            t.sla_ms = 50.0;
+            t.requests = ((rate * horizon_s).ceil() as usize).max(40);
+            t
+        })
+        .collect();
+    let warmup = [0.0, 0.05, 0.1][rng.below(3) as usize];
+    let mut cfg = ClusterConfig::builder()
+        .gpus(n_gpus)
+        .strategy(PackStrategy::BestFit)
+        .tenants(tenants)
+        .seed(rng.next_u64())
+        .warmup_frac(warmup)
+        .reconfig(preba::experiments::cluster::policy(sys))
+        .admission(rng.below(2) == 0)
+        .build();
+    if rng.below(2) == 0 {
+        let mtbf = rng.range_f64(0.8, 2.5);
+        let mttr = rng.range_f64(0.2, 0.8);
+        let mut srng = rng.split(0x0B5E);
+        let sched = FaultSchedule::stochastic(mtbf, mttr, horizon_s, n_gpus, &mut srng);
+        if !sched.is_empty() {
+            cfg.faults = Some(if rng.below(2) == 0 {
+                FaultSpec::recovering(sched, sys.fault.recovery())
+            } else {
+                FaultSpec::baseline(sched)
+            });
+        }
+    }
+    cfg
+}
+
+/// Two full-GPU tenants on two GPUs: disjoint residency components, so
+/// `shards` actually shards the event heap (controller-coupled features
+/// stay off — they collapse the run to one heap).
+fn disjoint_cfg(seed: u64) -> ClusterConfig {
+    let u = ServiceModel::new(ModelId::SwinTransformer.spec(), 1).plateau_qps(0.0);
+    let tenants: Vec<ClusterTenant> = (0..2)
+        .map(|_| {
+            let rate = 0.45 * 7.0 * u;
+            let mut t =
+                ClusterTenant::new(ModelId::SwinTransformer, Slice::new(1, 5), 7, rate);
+            t.sla_ms = 50.0;
+            t.requests = 160;
+            t
+        })
+        .collect();
+    ClusterConfig::builder()
+        .gpus(2)
+        .strategy(PackStrategy::BestFit)
+        .tenants(tenants)
+        .seed(seed)
+        .build()
+}
+
+/// Every outcome field the obs layer could conceivably perturb, as exact
+/// bits (floats via `to_bits`): byte-identity is the contract, not
+/// approximate equality.
+fn outcome_fingerprint(out: &ClusterOutcome) -> Vec<u64> {
+    let mut v = vec![
+        out.horizon,
+        out.events,
+        out.completed_total(),
+        out.reconfigs,
+        out.migrations,
+        out.late_admissions,
+        out.consolidations,
+        out.served_by_failed,
+        out.reconfig_aborts,
+    ];
+    for tally in
+        [&out.dropped, &out.deferred, &out.deferred_served, &out.timed_out, &out.retries,
+         &out.hedges, &out.served_degraded]
+    {
+        v.extend(tally.iter().copied());
+    }
+    for (_, s) in &out.per_tenant {
+        v.push(s.completed);
+        v.push(s.arrivals);
+        v.push(s.warmup_skipped);
+        v.push(s.mean_ms().to_bits());
+        v.push(s.p95_ms().to_bits());
+        v.push(s.throughput_qps().to_bits());
+    }
+    v.push(out.energy.total_j().to_bits());
+    v
+}
+
+fn a100_desc() -> GpuDesc {
+    GpuDesc { name: "A100".into(), gpcs: 7, gpc_active_w: 43.6, gpc_idle_w: 7.9 }
+}
+
+#[test]
+fn audit_holds_under_random_fault_and_admission_schedules() {
+    let sys = PrebaConfig::new();
+    check("obs accounting audit", 32, |rng| {
+        let cfg = random_cfg(rng, &sys);
+        let out = cluster::run(&cfg, &sys).expect("valid config");
+        prop_assert!(out.audit().is_ok(), "audit failed: {:?}", out.audit());
+        for (i, t) in cfg.tenants.iter().enumerate() {
+            let (_, s) = &out.per_tenant[i];
+            let terminal = s.completed + s.dropped + s.timed_out + s.warmup_skipped;
+            prop_assert!(
+                terminal == s.arrivals && s.arrivals == t.requests as u64,
+                "tenant {i}: {} served + {} dropped + {} timed out + {} warmup != \
+                 {} arrivals ({} offered)",
+                s.completed,
+                s.dropped,
+                s.timed_out,
+                s.warmup_skipped,
+                s.arrivals,
+                t.requests
+            );
+            prop_assert!(
+                s.deferred_served <= s.deferred && s.deferred <= s.arrivals,
+                "tenant {i}: deferred ledger does not nest: served {} <= deferred {} <= \
+                 arrivals {}",
+                s.deferred_served,
+                s.deferred,
+                s.arrivals
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn obs_capture_never_perturbs_outcomes() {
+    let sys = PrebaConfig::new();
+    check("obs neutrality", 10, |rng| {
+        let cfg = random_cfg(rng, &sys);
+        let mut on_cfg = cfg.clone();
+        on_cfg.obs = ObsSpec::on(0.25 + rng.f64(), 1 + rng.below(8));
+        let off = cluster::run(&cfg, &sys).expect("valid config");
+        let on = cluster::run(&on_cfg, &sys).expect("valid config");
+        prop_assert!(off.obs.is_none(), "disabled run captured a log");
+        prop_assert!(
+            outcome_fingerprint(&off) == outcome_fingerprint(&on),
+            "enabling obs perturbed the run (seed {:#x})",
+            cfg.seed
+        );
+        // The windowed cells reconcile against the run's own ledger.
+        let log = on.obs.as_ref().expect("enabled run must capture a log");
+        let (arrivals, served, dropped, timed_out, _) = log.windowed_totals();
+        let offered: u64 = cfg.tenants.iter().map(|t| t.requests as u64).sum();
+        prop_assert!(arrivals == offered, "windowed arrivals {arrivals} != {offered} offered");
+        prop_assert!(
+            served == on.completed_total(),
+            "windowed served {served} != {} completed",
+            on.completed_total()
+        );
+        let s_drop: u64 = on.per_tenant.iter().map(|(_, s)| s.dropped).sum();
+        let s_to: u64 = on.per_tenant.iter().map(|(_, s)| s.timed_out).sum();
+        prop_assert!(
+            dropped == s_drop && timed_out == s_to,
+            "windowed drops/timeouts ({dropped}, {timed_out}) != stats ({s_drop}, {s_to})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn obs_disabled_runs_are_identical_across_shards_and_jobs() {
+    let sys = PrebaConfig::new();
+    let mk = |shards: usize| {
+        let mut cfg = disjoint_cfg(0xD15C);
+        cfg.shards = (shards != 0).then_some(shards);
+        cfg
+    };
+    let serial = cluster::run(&mk(1), &sys).unwrap();
+    let auto = cluster::run(&mk(0), &sys).unwrap();
+    let wide = preba::util::par::with_jobs(4, || cluster::run(&mk(2), &sys)).unwrap();
+    assert!(serial.obs.is_none(), "obs off must not capture a log");
+    assert_eq!(outcome_fingerprint(&serial), outcome_fingerprint(&auto));
+    assert_eq!(outcome_fingerprint(&serial), outcome_fingerprint(&wide));
+    // Same contract on the single-GPU driver: default spec is off, runs
+    // are repeatable, and no log is captured.
+    let mut scfg = SimConfig::new(ModelId::SwinTransformer, MigConfig::Small7, PreprocMode::Ideal);
+    scfg.requests = 400;
+    scfg.rate_qps = scfg.saturating_rate() * 0.6;
+    scfg.seed = 0x51D0;
+    let a = sim_driver::run(&scfg, &sys);
+    let b = sim_driver::run(&scfg, &sys);
+    assert!(a.obs.is_none() && b.obs.is_none());
+    assert_eq!(a.stats.completed, b.stats.completed);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.stats.p95_ms().to_bits(), b.stats.p95_ms().to_bits());
+}
+
+#[test]
+fn obs_enabled_artifacts_are_byte_deterministic_across_shards_and_jobs() {
+    let sys = PrebaConfig::new();
+    let mk = |shards: usize| {
+        let mut cfg = disjoint_cfg(0x0B5E);
+        cfg.obs = ObsSpec::on(0.5, 4);
+        cfg.shards = (shards != 0).then_some(shards);
+        cfg
+    };
+    let runs = [
+        cluster::run(&mk(1), &sys).unwrap(),
+        cluster::run(&mk(1), &sys).unwrap(), // identical config, re-run
+        preba::util::par::with_jobs(4, || cluster::run(&mk(0), &sys)).unwrap(),
+        preba::util::par::with_jobs(4, || cluster::run(&mk(2), &sys)).unwrap(),
+    ];
+    let mut fp = Fingerprint::new("test");
+    fp.push("seed", 0x0B5Eu64);
+    let base =
+        std::env::temp_dir().join(format!("preba_prop_obs_bytes_{}", std::process::id()));
+    let mut all: Vec<Vec<(String, Vec<u8>)>> = Vec::new();
+    for (i, out) in runs.iter().enumerate() {
+        let dir = base.join(format!("r{i}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let log = out.obs.as_ref().expect("obs enabled implies a captured log");
+        let input = ExportInput {
+            log,
+            fp: &fp,
+            horizon: out.horizon,
+            gpus: vec![a100_desc(), a100_desc()],
+            tenants: vec!["swin".into(), "swin".into()],
+            marks: vec![],
+        };
+        let files = preba::obs::export::export(&dir, &input).unwrap();
+        all.push(
+            files
+                .iter()
+                .map(|p| {
+                    let name = p.file_name().unwrap().to_string_lossy().into_owned();
+                    (name, std::fs::read(p).unwrap())
+                })
+                .collect(),
+        );
+    }
+    std::fs::remove_dir_all(&base).ok();
+    for (i, other) in all.iter().enumerate().skip(1) {
+        assert_eq!(all[0].len(), other.len());
+        for (a, b) in all[0].iter().zip(other) {
+            assert_eq!(a.0, b.0);
+            assert!(
+                a.1 == b.1,
+                "artifact {} differs between shard/job layout 0 and {i}",
+                a.0
+            );
+        }
+    }
+}
+
+#[test]
+fn exported_trace_is_schema_sane() {
+    let sys = PrebaConfig::new();
+    let mut cfg = disjoint_cfg(0x7ACE);
+    cfg.obs = ObsSpec::on(0.5, 4);
+    let out = cluster::run(&cfg, &sys).unwrap();
+    let log = out.obs.as_ref().unwrap();
+    let mut fp = Fingerprint::new("cluster");
+    fp.push("seed", 0x7ACEu64);
+    fp.push("strategy", "best-fit");
+    let dir =
+        std::env::temp_dir().join(format!("preba_prop_obs_schema_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let input = ExportInput {
+        log,
+        fp: &fp,
+        horizon: out.horizon,
+        gpus: vec![a100_desc(), a100_desc()],
+        tenants: vec!["swin".into(), "swin".into()],
+        marks: vec![EventMark {
+            at: secs(1.0),
+            gpu: Some(1),
+            kind: "crash".into(),
+            detail: "injected".into(),
+        }],
+    };
+    preba::obs::export::export(&dir, &input).unwrap();
+    // meta.json round-trips the fingerprint mapping.
+    let meta = parse(&std::fs::read_to_string(dir.join("meta.json")).unwrap()).unwrap();
+    let back = Fingerprint::from_json(meta.req("fingerprint").unwrap()).unwrap();
+    assert!(back.same_mapping(&fp), "fingerprint does not round-trip through meta.json");
+    // Every JSONL line parses.
+    for name in ["windows.jsonl", "spans.jsonl", "events.jsonl"] {
+        let text = std::fs::read_to_string(dir.join(name)).unwrap();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            parse(line).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+    // The trace parses whole, timestamps are monotone, async begin/end
+    // pairs match, and batches/instants are present.
+    let trace = parse(&std::fs::read_to_string(dir.join("trace.json")).unwrap()).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let evs = trace.req("traceEvents").unwrap().as_arr().unwrap().to_vec();
+    assert!(!evs.is_empty());
+    let mut last = f64::MIN;
+    for e in &evs {
+        let ts = e.req("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= last, "trace timestamps are not monotone");
+        last = ts;
+    }
+    let count =
+        |ph: &str| evs.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some(ph)).count();
+    assert!(count("X") > 0, "no batch rectangles");
+    assert!(count("b") > 0, "no sampled request spans");
+    assert_eq!(count("b"), count("e"), "unmatched async begin/end pairs");
+    assert_eq!(count("i"), 1, "expected exactly the injected crash instant");
+    assert!(count("C") > 0, "no counter tracks");
+}
+
+#[test]
+fn cli_obs_export_and_report_round_trip() {
+    let dir = std::env::temp_dir().join(format!("preba_obs_cli_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args([
+            "cluster", "--gpus", "2", "--horizon", "2", "--strategy", "bfd", "--seed", "7",
+            "--obs", dir.to_str().unwrap(), "--obs-window", "0.5", "--span-sample", "4",
+        ])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba cluster --obs failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fingerprint: driver=cluster"), "{text}");
+    assert!(text.contains("seed=7"), "{text}");
+    assert!(text.contains("obs_window_s=0.500"), "{text}");
+    assert!(text.contains("obs:"), "{text}");
+    // A single run exports straight into the --obs directory.
+    for f in ["meta.json", "windows.jsonl", "spans.jsonl", "events.jsonl", "trace.json"] {
+        assert!(dir.join(f).is_file(), "missing artifact {f}");
+    }
+    let rep = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args(["report", dir.to_str().unwrap()])
+        .output()
+        .expect("spawn preba report");
+    assert!(
+        rep.status.success(),
+        "preba report failed:\n{}",
+        String::from_utf8_lossy(&rep.stderr)
+    );
+    let digest = String::from_utf8_lossy(&rep.stdout);
+    assert!(digest.contains("driver=cluster"), "{digest}");
+    assert!(digest.contains("seed=7"), "{digest}");
+    assert!(digest.contains("totals: arrivals"), "{digest}");
+    std::fs::remove_dir_all(&dir).ok();
+    // An unreadable directory is a clean CLI error, not a panic.
+    let bad = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args(["report", dir.join("nope").to_str().unwrap()])
+        .output()
+        .expect("spawn preba report");
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("meta.json"));
+}
+
+#[test]
+fn cli_faults_timeline_shows_crash_detect_repair_instants() {
+    let dir = std::env::temp_dir().join(format!("preba_obs_faults_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = Command::new(env!("CARGO_BIN_EXE_preba"))
+        .args([
+            "cluster", "--gpus", "2", "--horizon", "2", "--strategy", "bfd", "--reconfig",
+            "--faults", "crash@0.5:g0:0.5", "--obs", dir.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn preba");
+    assert!(
+        out.status.success(),
+        "preba cluster --faults --obs failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // The A/B pair lands in per-run sibling subdirectories.
+    assert!(dir.join("best-fit-baseline").join("trace.json").is_file());
+    let rec = dir.join("best-fit-recovery");
+    let meta = parse(&std::fs::read_to_string(rec.join("meta.json")).unwrap()).unwrap();
+    let fp = Fingerprint::from_json(meta.req("fingerprint").unwrap()).unwrap();
+    assert_eq!(fp.get("recovery"), Some("true"));
+    let trace = parse(&std::fs::read_to_string(rec.join("trace.json")).unwrap()).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let evs = trace.req("traceEvents").unwrap().as_arr().unwrap().to_vec();
+    // The fault lifecycle renders as instants on the crashed GPU's track
+    // (pid 0): injection named by fault kind, then detect, then repair.
+    let instant_ts = |name: &str| {
+        evs.iter()
+            .find(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("i")
+                    && e.get("name").and_then(Json::as_str) == Some(name)
+                    && e.get("pid").and_then(Json::as_f64) == Some(0.0)
+            })
+            .unwrap_or_else(|| panic!("no '{name}' instant on the gpu0 track"))
+            .req("ts")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    let (crash, detect, repair) = (instant_ts("crash"), instant_ts("detect"), instant_ts("repair"));
+    assert!(crash <= detect && detect <= repair, "lifecycle out of order: {crash} {detect} {repair}");
+}

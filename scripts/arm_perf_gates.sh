@@ -12,8 +12,9 @@
 # cluster.joules_per_query, cluster.availability_frac, the streamed
 # trace-day probe's cluster.trace_1m_events_per_sec /
 # cluster.trace_1m_peak_rss_mb, the interference sizing A/B's
-# cluster.interference_violation_gap and the planner-stack probe's
-# cluster.planner_gap / cluster.planner_greedy_p99_us into
+# cluster.interference_violation_gap, the planner-stack probe's
+# cluster.planner_gap / cluster.planner_greedy_p99_us and the
+# obs-capture probe's cluster.obs_overhead_frac into
 # rust/benches/perf_baseline.json (preserving the note), prints the
 # before/after values, and leaves the change for you to review and
 # commit.
@@ -44,6 +45,7 @@ updates = {
     "cluster_interference_violation_gap": bench["cluster"].get("interference_violation_gap"),
     "cluster_planner_gap": bench["cluster"].get("planner_gap"),
     "cluster_planner_greedy_p99_us": bench["cluster"].get("planner_greedy_p99_us"),
+    "cluster_obs_overhead_frac": bench["cluster"].get("obs_overhead_frac"),
 }
 for key, value in updates.items():
     if value is None:
